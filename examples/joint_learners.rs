@@ -1,0 +1,33 @@
+//! Experiment E2 / paper Table 1: PRW + k-NN separately vs jointly.
+//!
+//! Generates the synthetic-Chembl datasets on disk (`.lmld`), then runs
+//! both scenarios through the AOT artifacts:
+//!
+//! * **separately** — each learner loads its own copy of the data and
+//!   pays for its own distance pass (`knn_only`, then `prw_only`);
+//! * **jointly**    — one load, one device upload, one `knn_prw_joint`
+//!   execution per test tile, "running these two learners jointly on the
+//!   same input data whilst producing different models" (§5.2).
+//!
+//! Prints the Table 1 rows (load time / test time) and verifies the joint
+//! pass predicts exactly what the separate passes predict.
+//!
+//! ```bash
+//! cargo run --release --example joint_learners
+//! cargo run --release --example joint_learners -- --data-dir /tmp/lm
+//! ```
+
+use anyhow::Result;
+use locality_ml::cli::{commands, Args};
+use locality_ml::config::{Config, JointExperiment};
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let mut exp = JointExperiment::from_config(&Config::default())?;
+    exp.data_dir = std::path::PathBuf::from(
+        args.str_or("data-dir", "data"));
+    exp.seed = args.u64_or("seed", 42)?;
+    exp.regenerate = args.flag("regenerate");
+    commands::cmd_joint(&exp)?;
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! Experiments E3–E6: the paper's *analytical* claims made measurable.
+//!
+//! Runs, on the Westmere-like memory-hierarchy simulator (DESIGN.md §6
+//! substitution for the paper's testbed):
+//!
+//! * **Fig 4**  — data touched by SGD vs MB-GD vs SW-SGD (§5.1)
+//! * **Alg 1/2** — loop interchange on the column-major stencil (§1)
+//! * **§5.1**   — the 400,000 vs 40,000 cycle worked example
+//! * **§3–§4**  — the reuse-distance audit: measured stack distances vs
+//!   the paper's per-algorithm formulas (k-NN |RT|, SGD |T|, NB one-epoch,
+//!   NN weight reuse, CV fold re-reads)
+//!
+//! ```bash
+//! cargo run --release --example locality_audit
+//! ```
+
+use anyhow::Result;
+use locality_ml::cli::commands;
+
+fn main() -> Result<()> {
+    commands::cmd_fig4()?;
+    commands::cmd_interchange(256, 256)?;
+    commands::cmd_cache_model()?;
+    commands::cmd_audit()?;
+    Ok(())
+}

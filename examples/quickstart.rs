@@ -1,0 +1,50 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//! ```bash
+//! make artifacts            # once: AOT-lower the JAX/Pallas graphs
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. open the PJRT engine on the AOT artifacts,
+//! 2. train the paper's MLP for a few SW-SGD epochs,
+//! 3. classify with the fused k-NN + PRW scan.
+
+use anyhow::Result;
+use locality_ml::coordinator::{train_swsgd, TrainSpec};
+use locality_ml::data::{chembl_like, mnist_like, Folds};
+use locality_ml::learners::{accuracy, joint_scan};
+use locality_ml::opt::OptimizerKind;
+use locality_ml::runtime::Engine;
+
+fn main() -> Result<()> {
+    // --- 1. the runtime --------------------------------------------------
+    let mut engine = Engine::open(std::path::Path::new("artifacts"))?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // --- 2. SW-SGD training (paper §5.1) ---------------------------------
+    let ds = mnist_like(2560, 42);
+    let folds = Folds::split(ds.n, 5, 7);
+    let train = ds.gather(&folds.train_indices(0));
+    let val = ds.gather(folds.test_indices(0));
+    let spec = TrainSpec {
+        optimizer: OptimizerKind::Adam,
+        lr: None,
+        window: 2, // B new + 2B cached points per gradient (Fig 5)
+        batch: 128,
+        epochs: 3,
+        seed: 1,
+    };
+    let curve = train_swsgd(&mut engine, &train, &val, &spec)?;
+    println!("\nSW-SGD ({}):", curve.label);
+    for (epoch, train_loss, val_loss) in &curve.points {
+        println!("  epoch {epoch}: train {train_loss:.4}  val {val_loss:.4}");
+    }
+
+    // --- 3. joint k-NN + PRW (paper §5.2) --------------------------------
+    let (train, test) = chembl_like(1200, 3).split(1000);
+    let (knn, prw) = joint_scan(&train, &test.features, test.d, 5, 8.0);
+    println!("\njoint k-NN+PRW over one data pass:");
+    println!("  k-NN accuracy: {:.3}", accuracy(&knn, &test.labels));
+    println!("  PRW  accuracy: {:.3}", accuracy(&prw, &test.labels));
+    Ok(())
+}

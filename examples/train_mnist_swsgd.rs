@@ -1,0 +1,71 @@
+//! End-to-end driver (experiment E1 / paper Figure 5).
+//!
+//! Trains the paper's MLP (784-100-100-100-10, ~100k parameters) on the
+//! synthetic-MNIST workload across the full sweep — four optimizers
+//! (SGD, Momentum, Adam, Adagrad) × three SW-SGD window scenarios
+//! (B new / B+B cached / B+2B cached) — logging the per-epoch loss curves,
+//! optionally with the paper's 5-fold cross-validation protocol.
+//!
+//! All three layers compose on every step: rust coordinator → AOT'd JAX
+//! graph → Pallas tiled-matmul kernels, via PJRT. Python is not involved.
+//!
+//! ```bash
+//! cargo run --release --example train_mnist_swsgd            # quick sweep
+//! cargo run --release --example train_mnist_swsgd -- \
+//!     --epochs 30 --cv --dataset-n 6400                      # full Fig 5
+//! ```
+//!
+//! Results from the recorded run live in EXPERIMENTS.md §E1.
+
+use anyhow::Result;
+use locality_ml::cli::{commands, Args};
+use locality_ml::config::{Config, TrainExperiment};
+use locality_ml::opt::OptimizerKind;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))
+        .unwrap_or_default();
+    let mut exp = TrainExperiment::from_config(&Config::default())?;
+    // Defaults tuned for a single-core CPU run (~2-3 min); the full paper
+    // protocol is available via flags.
+    exp.epochs = args.usize_or("epochs", 10)?;
+    exp.dataset_n = args.usize_or("dataset-n", 2560)?;
+    exp.cross_validate = args.flag("cv");
+    exp.seed = args.u64_or("seed", 42)?;
+    if args.get("optimizers").is_some() {
+        exp.optimizers = args
+            .list_or("optimizers", &[])
+            .iter()
+            .map(|s| OptimizerKind::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown optimizer `{s}`")))
+            .collect::<Result<_>>()?;
+    }
+    exp.out_csv = Some(std::path::PathBuf::from(
+        args.str_or("out-csv", "fig5_curves.csv")));
+
+    let curves = commands::cmd_train(&exp)?;
+
+    // The paper's Fig 5 reading: cached-window scenarios reach a given
+    // cost in fewer epochs. Report epochs-to-threshold per optimizer.
+    println!("epochs to reach validation loss <= threshold:");
+    for &opt in &exp.optimizers {
+        let w0 = curves.iter()
+            .find(|c| c.label == format!("{}-w0", opt.name()));
+        let Some(w0) = w0 else { continue };
+        let Some(final_w0) = w0.final_val() else { continue };
+        // threshold = what the no-window scenario achieves at the end
+        let threshold = final_w0;
+        print!("  {:<9} threshold {:.4}:", opt.name(), threshold);
+        for w in [0usize, 1, 2] {
+            if let Some(c) = curves.iter()
+                .find(|c| c.label == format!("{}-w{}", opt.name(), w)) {
+                match c.epochs_to_reach(threshold) {
+                    Some(e) => print!("  w{w}={e}ep"),
+                    None => print!("  w{w}=>{}ep", exp.epochs),
+                }
+            }
+        }
+        println!();
+    }
+    Ok(())
+}

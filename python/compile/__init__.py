@@ -1,0 +1,5 @@
+"""Build-time-only python package: L1 Pallas kernels + L2 JAX graphs + AOT.
+
+Nothing in here is imported at runtime; ``compile.aot`` lowers every graph to
+HLO text once and the rust binary is self-contained afterwards.
+"""

@@ -1,0 +1,185 @@
+"""AOT lowering: every L2 graph -> artifacts/<name>.hlo.txt + manifest.
+
+Python runs exactly once (``make artifacts``); the rust binary then loads the
+HLO text through ``xla::HloModuleProto::from_text_file`` and never touches
+python again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest (artifacts/manifest.txt) is a line-oriented format the rust
+runtime parses without a serde dependency::
+
+    <name>|<in-spec>,...|<out-spec>,...
+    spec := dtype '[' dims ']'        e.g. f32[128,784], i32[256], f32[]
+
+Run:  cd python && python -m compile.aot --out-dir ../artifacts
+      add ``--only name`` to rebuild a single artifact, ``--check`` to lower
+      to text without writing (CI smoke).
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import joint, linear, model, naive_bayes
+from .kernels import swsgd
+from .shapes import (
+    CHEMBL_CLASSES,
+    CHEMBL_DIM,
+    CHEMBL_TRAIN,
+    GRAD_BATCHES,
+    EVAL_TILE,
+    LINEAR_BATCH,
+    MLP_PARAMS,
+    MNIST_CLASSES,
+    MNIST_DIM,
+    MNIST_TRAIN,
+    SWSGD_ROWS,
+    TEST_TILE,
+)
+
+F32 = jnp.float32
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _tuplify(fn):
+    """Ensure the lowered function returns a tuple (uniform rust unwrap)."""
+
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else tuple(out) \
+            if isinstance(out, list) else (out,)
+
+    return wrapped
+
+
+def _swsgd_entry(w, x, y):
+    loss, grad = swsgd.swsgd_linear_grad(w, x, y)
+    return loss, grad
+
+
+def entries():
+    """(name, fn, input ShapeDtypeStructs) for every AOT artifact."""
+    out = []
+    # E1 / Fig 5 -- MLP gradient per SW-SGD window scenario.
+    for b in GRAD_BATCHES:
+        out.append((
+            f"mlp_grad_b{b}",
+            model.grad_step,
+            [_spec((MLP_PARAMS,)), _spec((b, MNIST_DIM)),
+             _spec((b, MNIST_CLASSES))],
+        ))
+    out.append((
+        "mlp_eval",
+        model.eval_tile,
+        [_spec((MLP_PARAMS,)), _spec((EVAL_TILE, MNIST_DIM)),
+         _spec((EVAL_TILE, MNIST_CLASSES))],
+    ))
+    # E2 / Table 1 -- fused and separate k-NN / PRW passes.
+    chembl = [_spec((CHEMBL_TRAIN, CHEMBL_DIM)),
+              _spec((CHEMBL_TRAIN, CHEMBL_CLASSES)),
+              _spec((TEST_TILE, CHEMBL_DIM))]
+    out.append(("knn_prw_joint", joint.knn_prw_joint, chembl))
+    out.append(("knn_only", joint.knn_predict, chembl))
+    out.append(("prw_only", joint.prw_predict, chembl))
+    # E8 / §4.3 -- coupled vs separate linear models.
+    lin_x = _spec((LINEAR_BATCH, CHEMBL_DIM))
+    lin_y = _spec((LINEAR_BATCH,))
+    w = _spec((CHEMBL_DIM,))
+    out.append(("linear_coupled", linear.coupled_step, [w, w, lin_x, lin_y]))
+    out.append(("linear_lr", linear.lr_step, [w, lin_x, lin_y]))
+    out.append(("linear_svm", linear.svm_step, [w, lin_x, lin_y]))
+    # §5.1 -- fused sliding-window gradient kernel (L1 demo artifact).
+    out.append((
+        "swsgd_linear_grad",
+        _swsgd_entry,
+        [w, _spec((SWSGD_ROWS, CHEMBL_DIM)), _spec((SWSGD_ROWS,))],
+    ))
+    # §4.2 -- naive Bayes one-epoch fit + tile predict.
+    out.append((
+        "nb_fit",
+        naive_bayes.nb_fit,
+        [_spec((MNIST_TRAIN, MNIST_DIM)), _spec((MNIST_TRAIN, MNIST_CLASSES))],
+    ))
+    out.append((
+        "nb_predict",
+        naive_bayes.nb_predict,
+        [_spec((MNIST_CLASSES,)), _spec((MNIST_CLASSES, MNIST_DIM)),
+         _spec((MNIST_CLASSES, MNIST_DIM)), _spec((EVAL_TILE, MNIST_DIM))],
+    ))
+    return out
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _fmt_dtype(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "float64": "f64",
+            "int64": "i64"}.get(jnp.dtype(dt).name, jnp.dtype(dt).name)
+
+
+def _fmt_spec(s) -> str:
+    dims = ",".join(str(d) for d in s.shape)
+    return f"{_fmt_dtype(s.dtype)}[{dims}]"
+
+
+def lower_entry(name, fn, in_specs):
+    lowered = jax.jit(_tuplify(fn)).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    out_shapes = jax.eval_shape(_tuplify(fn), *in_specs)
+    manifest = "{}|{}|{}".format(
+        name,
+        ",".join(_fmt_spec(s) for s in in_specs),
+        ",".join(_fmt_spec(s) for s in out_shapes),
+    )
+    return text, manifest
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="rebuild just this artifact name")
+    ap.add_argument("--check", action="store_true",
+                    help="lower everything but write nothing")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, fn, in_specs in entries():
+        if args.only and name != args.only:
+            continue
+        text, manifest = lower_entry(name, fn, in_specs)
+        manifest_lines.append(manifest)
+        if not args.check:
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+        print(f"  {name:24s} {len(text):>9d} chars  {manifest.split('|')[1]}",
+              file=sys.stderr)
+    if not args.check and not args.only:
+        with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest_lines) + "\n")
+    print(f"lowered {len(manifest_lines)} artifacts -> {args.out_dir}",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,88 @@
+"""L2: fused k-NN + Parzen-Rosenblatt window graphs (paper §5.2, Table 1).
+
+"From a computation perspective, these algorithms similarly loop over all
+the points and sometimes calculate the same underlying distances (typically
+Euclidean). Therefore, the idea here is to run these two learners jointly on
+the same input data whilst producing different models."
+
+Three AOT entries:
+
+* :func:`knn_prw_joint` -- ONE distance computation (the L1 tiled kernel),
+  both predictions.  This is the "jointly" row of Table 1.
+* :func:`knn_predict` / :func:`prw_predict` -- each recomputes the distances
+  independently.  Two of these per tile = the "separately" row.
+
+Test points arrive in tiles (shapes.TEST_TILE); the rust coordinator streams
+tiles and keeps the training set device-resident across calls.
+"""
+
+import jax.numpy as jnp
+
+
+from .kernels import pairwise_sq_dists
+from .shapes import KNN_K, PRW_BANDWIDTH, pick_block
+
+
+def _dists(test_x, train_x):
+    """Tiled distance pass with perf-tuned tile targets.
+
+    256x4096 blocks on the artifact geometry (EXPERIMENTS.md §Perf, L1
+    iteration 2); pick_block degrades gracefully for the small shapes the
+    pytest suite sweeps.
+    """
+    return pairwise_sq_dists(
+        test_x, train_x,
+        block_t=pick_block(test_x.shape[0], 256),
+        block_n=pick_block(train_x.shape[0], 4096),
+    )
+
+
+def _knn_from_dists(dists, train_y_onehot, k=KNN_K):
+    """Majority vote over the k nearest neighbours (Alg 10).
+
+    Implemented as k iterative argmin sweeps rather than ``lax.top_k``:
+    jax lowers top_k to a ``topk(..., largest=true)`` HLO instruction that
+    the xla_extension 0.5.1 text parser rejects; argmin + scatter lower to
+    core HLO ops that round-trip. Ties break toward the lower training
+    index, matching the rust reference scan.
+    """
+    t = dists.shape[0]
+    d = dists
+    votes = jnp.zeros((t, train_y_onehot.shape[1]), jnp.float32)
+    rows = jnp.arange(t)
+    for _ in range(k):
+        idx = jnp.argmin(d, axis=1)                    # [T]
+        votes = votes + jnp.take(train_y_onehot, idx, axis=0)
+        d = d.at[rows, idx].set(jnp.inf)               # exclude the taken
+    return jnp.argmax(votes, axis=1).astype(jnp.int32)
+
+
+def _prw_from_dists(dists, train_y_onehot, bandwidth=PRW_BANDWIDTH):
+    """Gaussian-kernel weighted class vote over ALL points (Alg 11)."""
+    # Subtract the row max inside the exponent for numerical robustness:
+    # argmax over classes is invariant to the common positive factor.
+    dmin = jnp.min(dists, axis=1, keepdims=True)
+    w = jnp.exp(-(dists - dmin) / (2.0 * bandwidth * bandwidth))  # [T, N]
+    scores = w @ train_y_onehot                                   # [T, C]
+    return jnp.argmax(scores, axis=1).astype(jnp.int32)
+
+
+def knn_prw_joint(train_x, train_y_onehot, test_x):
+    """AOT entry: one pass, one distance matrix, two learners' predictions."""
+    dists = _dists(test_x, train_x)
+    return (
+        _knn_from_dists(dists, train_y_onehot),
+        _prw_from_dists(dists, train_y_onehot),
+    )
+
+
+def knn_predict(train_x, train_y_onehot, test_x):
+    """AOT entry: k-NN alone -- pays for its own distance pass."""
+    dists = _dists(test_x, train_x)
+    return (_knn_from_dists(dists, train_y_onehot),)
+
+
+def prw_predict(train_x, train_y_onehot, test_x):
+    """AOT entry: PRW alone -- pays for its own distance pass."""
+    dists = _dists(test_x, train_x)
+    return (_prw_from_dists(dists, train_y_onehot),)

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels: the paper's compute hot spots, tiled for locality.
+
+* :mod:`.matmul`   -- row-tiled matmul (NN layers, Fig 3)
+* :mod:`.distance` -- tiled pairwise squared-Euclidean distances (k-NN / PRW)
+* :mod:`.swsgd`    -- fused sliding-window logistic gradient (§5.1)
+* :mod:`.ref`      -- pure-jnp oracles for all of the above
+"""
+
+from .distance import pairwise_sq_dists
+from .matmul import matmul, matmul_pallas
+from .swsgd import swsgd_linear_grad
+
+__all__ = ["pairwise_sq_dists", "matmul", "matmul_pallas", "swsgd_linear_grad"]

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: row-tiled matmul (the paper's Fig 3 locality pattern).
+
+The paper observes that the NN forward pass *is* a matrix-matrix product and
+that "matrix-matrix multiplication code optimisation techniques can be used"
+(§4.4.1).  On a CPU that means cache blocking; on the TPU the same insight
+becomes a BlockSpec schedule: one (bm x K) row tile of the activations is
+resident in VMEM per grid step while the full (K x N) weight panel stays
+resident across *all* grid steps -- the weight reuse the paper attributes to
+"loop level 2" (reuse carried by the mini-batch dimension) is realised by the
+grid axis.
+
+The kernel is exposed through a ``jax.custom_vjp`` wrapper so the backward
+pass (paper §4.4.1: "the complement of forward propagation") is expressed
+with the *same* tiled kernel:  dA = g @ B^T and dB = A^T @ g.
+
+Lowered with ``interpret=True`` -- CPU PJRT cannot execute Mosaic
+custom-calls; see DESIGN.md §4 for the real-TPU VMEM/MXU estimates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..shapes import pick_block
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """One grid step: o[bm, N] = a[bm, K] @ b[K, N] (f32 accumulation)."""
+    o_ref[...] = jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def matmul_pallas(a, b, block_m: int | None = None):
+    """Tiled ``a @ b`` via Pallas. ``a``: [M, K], ``b``: [K, N] -> [M, N].
+
+    The grid runs over row tiles of ``a``; ``b`` is the VMEM-resident
+    operand (same block for every grid step).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    # Default row tile: the largest divisor <= 512. For the MLP shapes the
+    # resulting VMEM residency (bm*K + K*N + bm*N floats) stays well under
+    # 2 MiB; the larger tile costs nothing on TPU and cuts grid-loop
+    # overhead substantially in the CPU interpret lowering (EXPERIMENTS.md
+    # §Perf, L1 iteration 1: -17% on the grad artifact).
+    bm = block_m or pick_block(m, target=512)
+    assert m % bm == 0, f"block_m={bm} must divide M={m}"
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """Differentiable tiled matmul; fwd and bwd all run the Pallas kernel."""
+    return matmul_pallas(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_pallas(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    # Backward is "the complement" (paper §4.4.1): two more tiled matmuls.
+    da = matmul_pallas(g, b.T)   # [M, N] @ [N, K]
+    db = matmul_pallas(a.T, g)   # [K, M] @ [M, N]
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel (the build-time correctness bar).
+
+Each function here is the textbook formulation with no tiling, no grid, no
+accumulator tricks.  ``python/tests`` asserts kernel == oracle across
+hypothesis-generated shapes before anything is AOT-lowered for rust.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """[M, K] @ [K, N] -> [M, N], f32."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def pairwise_sq_dists_ref(queries, points):
+    """[T, D] x [N, D] -> [T, N] squared Euclidean distances."""
+    diff = queries[:, None, :] - points[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def logistic_loss_grad_ref(w, x, y):
+    """Summed logistic loss + gradient for labels y in {-1, +1}.
+
+    Matches ``swsgd_linear_grad``: returns (sum-loss, grad of sum-loss).
+    """
+    p = x @ w
+    m = -y * p
+    loss = jnp.sum(jnp.maximum(m, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(m))))
+    r = -y * (1.0 / (1.0 + jnp.exp(-m)))
+    return loss, x.T @ r

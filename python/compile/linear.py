@@ -1,0 +1,78 @@
+"""L2: coupled Logistic-Regression + SVM minibatch updates (paper §4.3).
+
+"If these two algorithms are to be run on the same training set note that
+they can be quite tightly coupled. [...] the inner-product of the training
+point with the different hyperplane models can be done at the same time so
+that there is direct reuse in a feature-by-feature way of the training
+point."
+
+The coupling is realised by *stacking* the two hyperplanes into a [D, 2]
+panel and running the L1 tiled matmul once per traversal of the batch:
+
+    P = X @ [w_lr | w_svm]      (one pass over X   -> both inner products)
+    G = X^T @ [r_lr | r_svm]    (one pass over X^T -> both gradients)
+
+Labels are ±1.  LR uses the logistic loss; SVM uses the L2-regularised hinge
+loss trained in the primal with (sub)gradient steps, exactly the paper's
+framing ("for SVMs, this is known as training the primal form").
+
+The *separate* variants traverse X once per model and exist as the baseline
+for experiment E8.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import matmul_pallas
+from .shapes import LINEAR_LAMBDA, LINEAR_LR
+
+
+def _logistic_residual(p, y):
+    m = -y * p
+    loss = jnp.mean(jnp.maximum(m, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(m))))
+    r = -y * (1.0 / (1.0 + jnp.exp(-m)))
+    return loss, r
+
+
+def _hinge_residual(p, y):
+    margin = 1.0 - y * p
+    loss = jnp.mean(jnp.maximum(margin, 0.0))
+    r = jnp.where(margin > 0.0, -y, 0.0)
+    return loss, r
+
+
+def coupled_step(w_lr, w_svm, x, y, lr=LINEAR_LR, lam=LINEAR_LAMBDA):
+    """AOT entry: one coupled minibatch update for both linear models.
+
+    Returns (w_lr', w_svm', lr_loss, svm_loss).  ``x``: [B, D], ``y``: [B]
+    in {-1, +1}.  X is traversed twice total (P and G) instead of four times.
+    """
+    b = x.shape[0]
+    panel = jnp.stack([w_lr, w_svm], axis=1)            # [D, 2]
+    p = matmul_pallas(x, panel)                         # [B, 2]: ONE pass
+    lr_loss, r_lr = _logistic_residual(p[:, 0], y)
+    svm_loss, r_svm = _hinge_residual(p[:, 1], y)
+    svm_loss = svm_loss + 0.5 * lam * jnp.sum(w_svm * w_svm)
+    resid = jnp.stack([r_lr, r_svm], axis=1) / b        # [B, 2]
+    g = matmul_pallas(x.T, resid)                       # [D, 2]: ONE pass
+    w_lr2 = w_lr - lr * g[:, 0]
+    w_svm2 = w_svm - lr * (g[:, 1] + lam * w_svm)       # weight decay (§4.3)
+    return w_lr2, w_svm2, lr_loss, svm_loss
+
+
+def lr_step(w, x, y, lr=LINEAR_LR):
+    """AOT entry: logistic regression alone (baseline traversal)."""
+    b = x.shape[0]
+    p = matmul_pallas(x, w[:, None])[:, 0]
+    loss, r = _logistic_residual(p, y)
+    g = matmul_pallas(x.T, (r / b)[:, None])[:, 0]
+    return w - lr * g, loss
+
+
+def svm_step(w, x, y, lr=LINEAR_LR, lam=LINEAR_LAMBDA):
+    """AOT entry: primal SVM alone (baseline traversal)."""
+    b = x.shape[0]
+    p = matmul_pallas(x, w[:, None])[:, 0]
+    loss, r = _hinge_residual(p, y)
+    loss = loss + 0.5 * lam * jnp.sum(w * w)
+    g = matmul_pallas(x.T, (r / b)[:, None])[:, 0] + lam * w
+    return w - lr * g, loss

@@ -1,0 +1,89 @@
+"""L2: the paper's neural network (§5.1) as a JAX compute graph.
+
+"The model to train is a neural network with 3 layers and 100 hidden units
+each" on MNIST-shaped data.  The forward pass calls the L1 tiled-matmul
+kernel per layer (paper Fig 3); the backward pass is derived by ``jax.grad``
+through the kernel's custom VJP, so every backward matmul (§4.4.1: "the
+complement of forward propagation") also runs the tiled kernel.
+
+Parameters travel as ONE flat f32 vector.  The optimizer update (SGD /
+Momentum / Adam / Adagrad, Fig 5) happens on the rust side against that flat
+vector -- this keeps one AOT artifact per SW-SGD window scenario (batch size)
+instead of optimizer x scenario, and makes the paper's §4.3 "complete
+traversal of the model" cost a rust-side measurable.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul
+from .shapes import MLP_LAYERS, MLP_PARAMS
+
+
+def init_params(key):
+    """He-initialised flat parameter vector for the paper's MLP."""
+    chunks = []
+    for m, n in MLP_LAYERS:
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (m, n), jnp.float32) * jnp.sqrt(2.0 / m)
+        chunks.append(w.reshape(-1))
+        chunks.append(jnp.zeros((n,), jnp.float32))
+    theta = jnp.concatenate(chunks)
+    assert theta.shape == (MLP_PARAMS,)
+    return theta
+
+
+def unflatten(theta):
+    """Split the flat vector into [(W, b)] per layer (static slicing)."""
+    params, off = [], 0
+    for m, n in MLP_LAYERS:
+        w = theta[off:off + m * n].reshape(m, n)
+        off += m * n
+        b = theta[off:off + n]
+        off += n
+        params.append((w, b))
+    assert off == MLP_PARAMS
+    return params
+
+
+def forward(theta, x):
+    """Logits for a batch ``x`` [B, 784] -> [B, 10]. ReLU hidden layers."""
+    a = x
+    layers = unflatten(theta)
+    for i, (w, b) in enumerate(layers):
+        z = matmul(a, w) + b            # L1 tiled matmul per layer (Fig 3)
+        a = jax.nn.relu(z) if i + 1 < len(layers) else z
+    return a
+
+
+def loss_fn(theta, x, y_onehot):
+    """Mean softmax cross-entropy over the batch."""
+    logits = forward(theta, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=1))
+
+
+def grad_step(theta, x, y_onehot):
+    """AOT entry: (loss, flat-gradient) for one combined SW-SGD batch.
+
+    The rust coordinator concatenates [new batch ‖ cached window rows] into
+    ``x`` before the call; the gradient is the mean over the combined batch,
+    exactly the paper's Fig 4 semantics.
+    """
+    loss, grad = jax.value_and_grad(loss_fn)(theta, x, y_onehot)
+    return loss, grad
+
+
+def eval_tile(theta, x, y_onehot):
+    """AOT entry: (summed loss, correct count) over one evaluation tile.
+
+    Sums (not means) so the rust side can stream tiles and aggregate exactly.
+    """
+    logits = forward(theta, x)
+    logp = jax.nn.log_softmax(logits)
+    loss_sum = -jnp.sum(y_onehot * logp)
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=1) == jnp.argmax(y_onehot, axis=1))
+        .astype(jnp.float32)
+    )
+    return loss_sum, correct

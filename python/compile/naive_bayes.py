@@ -1,0 +1,48 @@
+"""L2: Gaussian naive Bayes fit + predict graphs (paper §4.2, Alg 12).
+
+The paper's locality analysis for naive Bayes: "for each feature, the
+information for that feature is read only once, so there is no reuse of any
+individual feature [...] The model is trained with only one epoch."  There
+is therefore no locality lever to pull at L1 -- the fit below is the
+one-pass sufficient-statistics form and is left to XLA's own fusion
+(documented in DESIGN.md §2, S8).  Reuse for NB arises only when it is
+nested inside the sampling/ensembling coordinators (§3.1/§3.2), which is
+L3's job.
+
+Fit computes class counts, per-class feature means and variances in a single
+traversal of T.  Predict scores log N(x; mu_c, var_c) + log prior.
+"""
+
+import jax.numpy as jnp
+
+#: Variance floor so degenerate (constant) features stay finite.
+VAR_FLOOR = 1e-3
+
+
+def nb_fit(x, y_onehot):
+    """AOT entry: (counts [C], mean [C, D], var [C, D]) in one data epoch."""
+    counts = jnp.sum(y_onehot, axis=0)                      # [C]
+    denom = jnp.maximum(counts, 1.0)[:, None]
+    sums = y_onehot.T @ x                                   # [C, D]
+    sqsums = y_onehot.T @ (x * x)                           # [C, D]
+    mean = sums / denom
+    var = jnp.maximum(sqsums / denom - mean * mean, VAR_FLOOR)
+    return counts, mean, var
+
+
+def nb_predict(counts, mean, var, x):
+    """AOT entry: class predictions [T] i32 for a tile of points ``x``.
+
+    log P(c|x) ∝ log P(c) - 0.5 * sum_d [ log(2π var) + (x-μ)²/var ].
+    """
+    total = jnp.sum(counts)
+    log_prior = jnp.log(jnp.maximum(counts, 1.0) / jnp.maximum(total, 1.0))
+    # [T, C, D] broadcast is avoided: expand the quadratic form.
+    #   sum_d (x_d - mu_cd)^2 / var_cd
+    # = sum_d x_d^2/var_cd - 2 x_d mu_cd/var_cd + mu_cd^2/var_cd
+    inv = 1.0 / var                                         # [C, D]
+    q = (x * x) @ inv.T - 2.0 * (x @ (mean * inv).T)        # [T, C]
+    q = q + jnp.sum(mean * mean * inv, axis=1)[None, :]
+    logdet = jnp.sum(jnp.log(2.0 * jnp.pi * var), axis=1)   # [C]
+    scores = log_prior[None, :] - 0.5 * (logdet[None, :] + q)
+    return (jnp.argmax(scores, axis=1).astype(jnp.int32),)

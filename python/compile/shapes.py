@@ -1,0 +1,72 @@
+"""Central shape/hyperparameter constants shared by model code, AOT lowering,
+the pytest suite, and (via the artifact manifest) the rust runtime.
+
+Experiment geometry (see DESIGN.md §3, §6 for how these map onto the paper's
+MNIST / Chembl workloads):
+
+* synthetic-MNIST: 6 400 train / 1 280 test, 784 features, 10 classes.
+  5-fold CV -> folds of 1 280, per-CV training set 5 120 = 40 batches of 128.
+* synthetic-Chembl: 20 480 train / 2 048 test, 128-d fingerprints, 2 classes,
+  streamed to the learners in test tiles of 256 (MXU-aligned).
+"""
+
+# ---------------------------------------------------------------- MNIST-like
+MNIST_TRAIN = 6400
+MNIST_TEST = 1280
+MNIST_DIM = 784
+MNIST_CLASSES = 10
+N_FOLDS = 5
+
+#: Paper §5.1: B = best batch size from the preliminary sweep (128 for Adam).
+BATCH = 128
+#: SW-SGD window scenarios from Fig 5: B new, B new + B cached, B new + 2B cached.
+WINDOW_SCENARIOS = (0, 1, 2)
+#: Combined gradient batch sizes: B * (1 + w) for each scenario.
+GRAD_BATCHES = tuple(BATCH * (1 + w) for w in WINDOW_SCENARIOS)  # (128, 256, 384)
+#: Evaluation is streamed in tiles of this many points.
+EVAL_TILE = 256
+
+#: MLP from the paper: "a neural network with 3 layers and 100 hidden units
+#: each" on top of the 784-d input, 10-class softmax output.
+MLP_LAYERS = (
+    (MNIST_DIM, 100),
+    (100, 100),
+    (100, 100),
+    (100, MNIST_CLASSES),
+)
+#: Total flat parameter count (weights + biases).
+MLP_PARAMS = sum(m * n + n for m, n in MLP_LAYERS)  # 99 710
+
+# --------------------------------------------------------------- Chembl-like
+CHEMBL_TRAIN = 20480
+CHEMBL_TEST = 2048
+CHEMBL_DIM = 128
+CHEMBL_CLASSES = 2
+#: Test points are streamed to k-NN / PRW in tiles of this many points
+#: (the paper's §4.1 "batch prediction points, sized from the cache size").
+TEST_TILE = 256
+#: k for k-NN, and the Gaussian bandwidth for the Parzen-Rosenblatt window.
+KNN_K = 5
+PRW_BANDWIDTH = 8.0
+
+# -------------------------------------------------------------- linear model
+LINEAR_BATCH = 256
+LINEAR_LR = 0.1
+LINEAR_LAMBDA = 1e-3
+#: Combined SW-SGD row count for the fused linear window-gradient kernel
+#: (B new + 2B cached, the largest Fig 5 scenario).
+SWSGD_ROWS = 384
+
+
+def pick_block(dim: int, target: int = 128) -> int:
+    """Largest divisor of ``dim`` that is <= ``target``.
+
+    Pallas BlockSpecs here always divide the dimension exactly, so padding
+    semantics never come into play (interpret mode and Mosaic agree on the
+    in-bounds case).
+    """
+    best = 1
+    for cand in range(1, min(dim, target) + 1):
+        if dim % cand == 0:
+            best = cand
+    return best

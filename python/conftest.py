@@ -1,0 +1,7 @@
+"""Pytest root conftest: make the build-time ``compile`` package importable
+regardless of the invocation directory."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,78 @@
+"""L2 correctness: fused k-NN + PRW graphs (§5.2 / Table 1 artifacts).
+
+The load-bearing invariant for Table 1 is that the *joint* pass predicts
+EXACTLY what the two separate passes predict -- the fusion saves time, never
+changes results.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import joint
+from compile.kernels.ref import pairwise_sq_dists_ref
+from compile.shapes import KNN_K
+
+HYPO = dict(max_examples=15, deadline=None)
+
+
+def _data(seed, n, t, d, c=2):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    tx = jax.random.normal(k1, (n, d), jnp.float32)
+    ty = jax.nn.one_hot(jax.random.randint(k2, (n,), 0, c), c)
+    qx = jax.random.normal(k3, (t, d), jnp.float32)
+    return tx, ty, qx
+
+
+@given(n=st.integers(KNN_K, 64), t=st.integers(1, 16), d=st.integers(1, 16),
+       seed=st.integers(0, 2**31))
+@settings(**HYPO)
+def test_joint_equals_separate(n, t, d, seed):
+    tx, ty, qx = _data(seed, n, t, d)
+    kj, pj = joint.knn_prw_joint(tx, ty, qx)
+    (ks,) = joint.knn_predict(tx, ty, qx)
+    (ps,) = joint.prw_predict(tx, ty, qx)
+    np.testing.assert_array_equal(kj, ks)
+    np.testing.assert_array_equal(pj, ps)
+
+
+def test_knn_oracle_small():
+    """Hand-checkable 1-D case: nearest 5 of 6 points decide the vote."""
+    tx = jnp.array([[0.0], [0.1], [0.2], [10.0], [10.1], [10.2]])
+    ty = jax.nn.one_hot(jnp.array([0, 0, 0, 1, 1, 1]), 2)
+    qx = jnp.array([[0.05], [10.05]])
+    (pred,) = joint.knn_predict(tx, ty, qx)
+    np.testing.assert_array_equal(pred, [0, 1])
+
+
+def test_prw_oracle_small():
+    """PRW weights all points; clusters dominate by proximity."""
+    tx = jnp.array([[0.0], [0.2], [50.0], [50.2]])
+    ty = jax.nn.one_hot(jnp.array([0, 0, 1, 1]), 2)
+    qx = jnp.array([[0.1], [50.1]])
+    (pred,) = joint.prw_predict(tx, ty, qx)
+    np.testing.assert_array_equal(pred, [0, 1])
+
+
+def test_knn_brute_force_vote():
+    """k-NN vote must match a numpy brute-force implementation."""
+    tx, ty, qx = _data(11, 40, 8, 6)
+    (pred,) = joint.knn_predict(tx, ty, qx)
+    d = np.asarray(pairwise_sq_dists_ref(qx, tx))
+    labels = np.argmax(np.asarray(ty), axis=1)
+    for i in range(qx.shape[0]):
+        nn = np.argsort(d[i], kind="stable")[:KNN_K]
+        votes = np.bincount(labels[nn], minlength=2)
+        assert votes[int(pred[i])] == votes.max()
+
+
+def test_prw_shift_invariance():
+    """PRW argmax is invariant to the row-max shift used for stability."""
+    tx, ty, qx = _data(13, 32, 8, 4)
+    d = np.asarray(pairwise_sq_dists_ref(qx, tx))
+    from compile.shapes import PRW_BANDWIDTH
+    w = np.exp(-d / (2 * PRW_BANDWIDTH ** 2))
+    ref = np.argmax(w @ np.asarray(ty), axis=1)
+    (pred,) = joint.prw_predict(tx, ty, qx)
+    np.testing.assert_array_equal(pred, ref)

@@ -1,0 +1,175 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps the shape space (all block-divisibility cases, degenerate
+dims, both "resident tile bigger/smaller than streaming tile" regimes); the
+oracle comparisons are the core correctness signal before AOT lowering.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    matmul,
+    matmul_pallas,
+    pairwise_sq_dists,
+    swsgd_linear_grad,
+)
+from compile.kernels.ref import (
+    logistic_loss_grad_ref,
+    matmul_ref,
+    pairwise_sq_dists_ref,
+)
+from compile.shapes import pick_block
+
+HYPO = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape,
+                                     jnp.float32)
+
+
+# --------------------------------------------------------------- pick_block
+@given(dim=st.integers(1, 4096), target=st.integers(1, 512))
+@settings(**HYPO)
+def test_pick_block_divides_and_bounds(dim, target):
+    b = pick_block(dim, target)
+    assert 1 <= b <= min(dim, target)
+    assert dim % b == 0
+
+
+def test_pick_block_prefers_large():
+    assert pick_block(256) == 128
+    assert pick_block(384) == 128
+    assert pick_block(100) == 100
+    assert pick_block(20480, target=512) == 512
+
+
+# ------------------------------------------------------------------- matmul
+@given(
+    m=st.integers(1, 64), k=st.integers(1, 48), n=st.integers(1, 32),
+    seed=st.integers(0, 2**31),
+)
+@settings(**HYPO)
+def test_matmul_matches_ref(m, k, n, seed):
+    a = _rand(seed, (m, k))
+    b = _rand(seed + 1, (k, n))
+    np.testing.assert_allclose(matmul_pallas(a, b), matmul_ref(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 784, 100), (384, 100, 10),
+                                   (784, 384, 100), (100, 100, 100)])
+def test_matmul_mlp_shapes(m, k, n):
+    """The exact shapes the MLP grad graphs lower with."""
+    a = _rand(7, (m, k), 0.1)
+    b = _rand(8, (k, n), 0.1)
+    np.testing.assert_allclose(matmul_pallas(a, b), matmul_ref(a, b),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_explicit_block():
+    a = _rand(1, (96, 13))
+    b = _rand(2, (13, 5))
+    np.testing.assert_allclose(matmul_pallas(a, b, block_m=32),
+                               matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_block():
+    with pytest.raises(AssertionError):
+        matmul_pallas(_rand(1, (10, 4)), _rand(2, (4, 3)), block_m=3)
+
+
+def test_matmul_rejects_dim_mismatch():
+    with pytest.raises(AssertionError):
+        matmul_pallas(_rand(1, (4, 5)), _rand(2, (6, 3)))
+
+
+@given(m=st.integers(1, 24), k=st.integers(1, 16), n=st.integers(1, 12),
+       seed=st.integers(0, 2**31))
+@settings(**HYPO)
+def test_matmul_custom_vjp_matches_autodiff(m, k, n, seed):
+    a = _rand(seed, (m, k))
+    b = _rand(seed + 1, (k, n))
+    g = _rand(seed + 2, (m, n))
+    loss_kernel = lambda a, b: jnp.sum(matmul(a, b) * g)
+    loss_ref = lambda a, b: jnp.sum((a @ b) * g)
+    da, db = jax.grad(loss_kernel, argnums=(0, 1))(a, b)
+    da2, db2 = jax.grad(loss_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(da, da2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(db, db2, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------- distance
+@given(t=st.integers(1, 32), n=st.integers(1, 64), d=st.integers(1, 24),
+       seed=st.integers(0, 2**31))
+@settings(**HYPO)
+def test_distance_matches_ref(t, n, d, seed):
+    q = _rand(seed, (t, d))
+    x = _rand(seed + 1, (n, d))
+    np.testing.assert_allclose(pairwise_sq_dists(q, x),
+                               pairwise_sq_dists_ref(q, x),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_distance_nonnegative_and_zero_diag():
+    x = _rand(3, (16, 8), 5.0)
+    d = pairwise_sq_dists(x, x)
+    assert (np.asarray(d) >= 0.0).all()
+    np.testing.assert_allclose(np.diag(np.asarray(d)), 0.0, atol=1e-3)
+
+
+def test_distance_symmetry():
+    a = _rand(4, (8, 8))
+    b = _rand(5, (16, 8))
+    np.testing.assert_allclose(pairwise_sq_dists(a, b),
+                               np.asarray(pairwise_sq_dists(b, a)).T,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_distance_chembl_tile_shape():
+    """The exact shape the Table 1 artifacts lower with (tiled grid 2x4)."""
+    q = _rand(6, (256, 128))
+    x = _rand(7, (2048, 128))
+    np.testing.assert_allclose(pairwise_sq_dists(q, x),
+                               pairwise_sq_dists_ref(q, x),
+                               rtol=1e-2, atol=1e-2)
+
+
+# -------------------------------------------------------------------- swsgd
+@given(r=st.integers(1, 48), d=st.integers(1, 24), seed=st.integers(0, 2**31))
+@settings(**HYPO)
+def test_swsgd_matches_ref(r, d, seed):
+    w = _rand(seed, (d,))
+    x = _rand(seed + 1, (r, d))
+    y = jnp.where(
+        jax.random.bernoulli(jax.random.PRNGKey(seed + 2), 0.5, (r,)),
+        1.0, -1.0)
+    loss, grad = swsgd_linear_grad(w, x, y)
+    loss_ref, grad_ref = logistic_loss_grad_ref(w, x, y)
+    np.testing.assert_allclose(loss, loss_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(grad, grad_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_swsgd_accumulates_across_grid_steps():
+    """Multi-block grid must equal single-block (accumulator init/add)."""
+    w = _rand(1, (8,))
+    x = _rand(2, (32, 8))
+    y = jnp.where(jax.random.bernoulli(jax.random.PRNGKey(3), 0.5, (32,)),
+                  1.0, -1.0)
+    l1, g1 = swsgd_linear_grad(w, x, y, block_r=8)    # 4 grid steps
+    l2, g2 = swsgd_linear_grad(w, x, y, block_r=32)   # 1 grid step
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-6)
+
+
+def test_swsgd_zero_weights_gradient_direction():
+    """At w=0, sigmoid=0.5 so grad = -0.5 * X^T y exactly."""
+    x = _rand(4, (16, 6))
+    y = jnp.where(jax.random.bernoulli(jax.random.PRNGKey(5), 0.5, (16,)),
+                  1.0, -1.0)
+    _, grad = swsgd_linear_grad(jnp.zeros(6), x, y)
+    np.testing.assert_allclose(grad, -0.5 * (x.T @ y), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,96 @@
+"""L2 correctness: the MLP grad/eval graphs vs a pure-jnp reference model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.shapes import MLP_LAYERS, MLP_PARAMS, MNIST_CLASSES, MNIST_DIM
+
+
+def _ref_forward(theta, x):
+    a, off = x, 0
+    for i, (m, n) in enumerate(MLP_LAYERS):
+        w = theta[off:off + m * n].reshape(m, n)
+        off += m * n
+        b = theta[off:off + n]
+        off += n
+        z = a @ w + b
+        a = jax.nn.relu(z) if i + 1 < len(MLP_LAYERS) else z
+    return a
+
+
+def _ref_loss(theta, x, y):
+    logp = jax.nn.log_softmax(_ref_forward(theta, x))
+    return -jnp.mean(jnp.sum(y * logp, axis=1))
+
+
+def _batch(seed, b):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (b, MNIST_DIM), jnp.float32)
+    y = jax.nn.one_hot(jax.random.randint(ky, (b,), 0, MNIST_CLASSES),
+                       MNIST_CLASSES)
+    return x, y
+
+
+def test_param_count():
+    assert MLP_PARAMS == 99710
+    theta = model.init_params(jax.random.PRNGKey(0))
+    assert theta.shape == (MLP_PARAMS,)
+
+
+def test_unflatten_roundtrip():
+    theta = model.init_params(jax.random.PRNGKey(1))
+    params = model.unflatten(theta)
+    assert [(w.shape, b.shape) for w, b in params] == \
+        [((m, n), (n,)) for m, n in MLP_LAYERS]
+    flat = jnp.concatenate([jnp.concatenate([w.reshape(-1), b])
+                            for w, b in params])
+    np.testing.assert_array_equal(flat, theta)
+
+
+@pytest.mark.parametrize("b", [8, 16])
+def test_grad_matches_ref_autodiff(b):
+    theta = model.init_params(jax.random.PRNGKey(2))
+    x, y = _batch(3, b)
+    loss, grad = model.grad_step(theta, x, y)
+    loss_ref, grad_ref = jax.value_and_grad(_ref_loss)(theta, x, y)
+    np.testing.assert_allclose(loss, loss_ref, rtol=1e-4)
+    np.testing.assert_allclose(grad, grad_ref, rtol=1e-3, atol=1e-5)
+
+
+def test_loss_decreases_under_sgd():
+    """A few plain-SGD steps on a fixed batch must reduce the loss."""
+    theta = model.init_params(jax.random.PRNGKey(4))
+    x, y = _batch(5, 32)
+    losses = []
+    for _ in range(5):
+        loss, grad = model.grad_step(theta, x, y)
+        losses.append(float(loss))
+        theta = theta - 0.1 * grad
+    assert losses[-1] < losses[0]
+
+
+def test_eval_tile_counts():
+    theta = model.init_params(jax.random.PRNGKey(6))
+    x, y = _batch(7, 16)
+    loss_sum, correct = model.eval_tile(theta, x, y)
+    logits = _ref_forward(theta, x)
+    acc_ref = jnp.sum((jnp.argmax(logits, 1) == jnp.argmax(y, 1))
+                      .astype(jnp.float32))
+    np.testing.assert_allclose(correct, acc_ref)
+    assert 0.0 <= float(correct) <= 16.0
+    # summed loss == batch * mean loss
+    np.testing.assert_allclose(loss_sum, 16.0 * _ref_loss(theta, x, y),
+                               rtol=1e-4)
+
+
+def test_eval_perfect_prediction_counts_all():
+    """Logits forced onto the true class -> correct == batch size."""
+    theta = model.init_params(jax.random.PRNGKey(8))
+    x, _ = _batch(9, 8)
+    logits = model.forward(theta, x)
+    y = jax.nn.one_hot(jnp.argmax(logits, axis=1), MNIST_CLASSES)
+    _, correct = model.eval_tile(theta, x, y)
+    assert float(correct) == 8.0

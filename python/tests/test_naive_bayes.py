@@ -1,0 +1,74 @@
+"""L2 correctness: Gaussian naive Bayes one-epoch fit + predict (§4.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import naive_bayes
+
+HYPO = dict(max_examples=15, deadline=None)
+
+
+def _data(seed, n, d, c):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (n, d), jnp.float32)
+    y = jax.random.randint(k2, (n,), 0, c)
+    return x, jax.nn.one_hot(y, c), np.asarray(y)
+
+
+@given(n=st.integers(2, 64), d=st.integers(1, 12), c=st.integers(2, 5),
+       seed=st.integers(0, 2**31))
+@settings(**HYPO)
+def test_fit_matches_numpy_stats(n, d, c, seed):
+    x, y1h, y = _data(seed, n, d, c)
+    counts, mean, var = naive_bayes.nb_fit(x, y1h)
+    xn = np.asarray(x)
+    for cls in range(c):
+        members = xn[y == cls]
+        assert float(counts[cls]) == len(members)
+        if len(members):
+            np.testing.assert_allclose(mean[cls], members.mean(0),
+                                       rtol=1e-3, atol=1e-3)
+            np.testing.assert_allclose(
+                var[cls],
+                np.maximum(members.var(0), naive_bayes.VAR_FLOOR),
+                rtol=1e-2, atol=1e-2)
+
+
+def test_fit_single_epoch_shapes():
+    x, y1h, _ = _data(1, 32, 6, 3)
+    counts, mean, var = naive_bayes.nb_fit(x, y1h)
+    assert counts.shape == (3,)
+    assert mean.shape == (3, 6)
+    assert var.shape == (3, 6)
+    assert float(jnp.sum(counts)) == 32.0
+    assert (np.asarray(var) >= naive_bayes.VAR_FLOOR - 1e-9).all()
+
+
+def test_predict_matches_dense_loglikelihood():
+    x, y1h, _ = _data(2, 48, 5, 3)
+    counts, mean, var = naive_bayes.nb_fit(x, y1h)
+    q = jax.random.normal(jax.random.PRNGKey(9), (12, 5), jnp.float32)
+    (pred,) = naive_bayes.nb_predict(counts, mean, var, q)
+    # dense reference: full [T, C, D] broadcast
+    qn, mn, vn = np.asarray(q), np.asarray(mean), np.asarray(var)
+    ll = (np.log(np.asarray(counts) / counts.sum())[None, :]
+          - 0.5 * np.sum(np.log(2 * np.pi * vn)[None, :, :]
+                         + (qn[:, None, :] - mn[None, :, :]) ** 2
+                         / vn[None, :, :], axis=2))
+    np.testing.assert_array_equal(pred, np.argmax(ll, axis=1))
+
+
+def test_predict_recovers_well_separated_classes():
+    """Two far-apart Gaussian blobs must be classified perfectly."""
+    k = jax.random.PRNGKey(3)
+    a = jax.random.normal(k, (32, 4)) + 10.0
+    b = jax.random.normal(jax.random.PRNGKey(4), (32, 4)) - 10.0
+    x = jnp.concatenate([a, b])
+    y1h = jax.nn.one_hot(jnp.concatenate([jnp.zeros(32, jnp.int32),
+                                          jnp.ones(32, jnp.int32)]), 2)
+    counts, mean, var = naive_bayes.nb_fit(x, y1h)
+    (pred,) = naive_bayes.nb_predict(counts, mean, var, x)
+    np.testing.assert_array_equal(
+        pred, np.concatenate([np.zeros(32), np.ones(32)]))

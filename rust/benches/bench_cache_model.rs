@@ -1,0 +1,45 @@
+//! Bench E5 — paper §5.1 worked example: "If the model uses 100 data
+//! elements 100 times each, the program spends 400,000 cycles on memory
+//! operations if there is no cache and only 40,000 cycles if all data can
+//! be cached."
+//!
+//! Reproduces the arithmetic exactly through the cycle model, then sweeps
+//! the working-set size across the cache capacity to chart where the 10×
+//! benefit collapses (the capacity cliff the paper's guideline — keep the
+//! window cache-resident — depends on).
+
+use locality_ml::bench::section;
+use locality_ml::cli::commands::cmd_cache_model;
+use locality_ml::memsim::Hierarchy;
+use locality_ml::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    section("E5 / §5.1 — cache cycle arithmetic");
+    cmd_cache_model()?;
+
+    section("capacity cliff sweep (cache = 128 lines)");
+    let mut table = Table::new(
+        "cycles/access vs working-set size",
+        &["working set (lines)", "cycles/access", "hit rate"]);
+    for ws in [32u64, 64, 96, 128, 160, 256, 512] {
+        let mut h = Hierarchy::paper_example(128, 64);
+        // warm
+        for e in 0..ws {
+            h.access(e * 64);
+        }
+        h.cycles = 0;
+        h.accesses = 0;
+        for _ in 0..100 {
+            for e in 0..ws {
+                h.access(e * 64);
+            }
+        }
+        let s = &h.stats()[0];
+        let hits = s.hits as f64 / (s.hits + s.misses) as f64;
+        table.row(&[ws.to_string(),
+                    format!("{:.2}", h.cpa()),
+                    format!("{hits:.3}")]);
+    }
+    println!("{}", table.to_markdown());
+    Ok(())
+}

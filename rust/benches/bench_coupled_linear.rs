@@ -1,0 +1,61 @@
+//! Bench E8 — paper §4.3: coupled LR+SVM training on one data stream.
+//!
+//! Compares one coupled minibatch update (`linear_coupled` artifact — one
+//! traversal computing both inner products and both gradients) against
+//! sequential separate updates (`linear_lr` + `linear_svm` — two full
+//! traversals), at both the artifact level and the pure-rust level.
+
+use std::path::Path;
+
+use locality_ml::bench::{black_box, section, Bench};
+use locality_ml::learners::linear;
+use locality_ml::runtime::{Engine, HostTensor};
+use locality_ml::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    section("E8 / §4.3 — coupled vs separate linear models");
+    let d = 128;
+    let b = 256;
+    let mut rng = Rng::new(3);
+    let w: Vec<f32> = (0..d).map(|_| 0.1 * rng.normal()).collect();
+    let x: Vec<f32> = (0..b * d).map(|_| rng.normal()).collect();
+    let y: Vec<f32> =
+        (0..b).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+
+    // --- artifact level -------------------------------------------------
+    let mut engine = Engine::open(Path::new("artifacts"))?;
+    let wt = HostTensor::f32(vec![d], w.clone());
+    let xt = HostTensor::f32(vec![b, d], x.clone());
+    let yt = HostTensor::f32(vec![b], y.clone());
+    engine.preload("linear_coupled")?;
+    engine.preload("linear_lr")?;
+    engine.preload("linear_svm")?;
+    let coupled = Bench::new("artifact coupled step").warmup(3).runs(10)
+        .run(|| {
+            engine.execute("linear_coupled", &[&wt, &wt, &xt, &yt])
+                .unwrap()
+        });
+    let separate = Bench::new("artifact lr + svm steps").warmup(3).runs(10)
+        .run(|| {
+            let a = engine.execute("linear_lr", &[&wt, &xt, &yt]).unwrap();
+            let b = engine.execute("linear_svm", &[&wt, &xt, &yt])
+                .unwrap();
+            (a, b)
+        });
+    println!("artifact speedup: {:.2}x", separate.mean / coupled.mean);
+
+    // --- pure-rust level (the paper's C++-style sequential regime) ------
+    let coupled = Bench::new("rust coupled step").warmup(2).runs(20)
+        .run(|| black_box(linear::coupled_step(
+            &w, &w, &x, &y, linear::LR, linear::LAMBDA)));
+    let separate = Bench::new("rust lr + svm steps").warmup(2).runs(20)
+        .run(|| {
+            let a = black_box(linear::lr_step(&w, &x, &y, linear::LR));
+            let b = black_box(linear::svm_step(&w, &x, &y, linear::LR,
+                                               linear::LAMBDA));
+            (a, b)
+        });
+    println!("rust speedup: {:.2}x", separate.mean / coupled.mean);
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Bench E3 — paper Figure 4: data touched by SGD vs MB-GD vs SW-SGD.
+//!
+//! Replays the three optimiser access patterns through the Westmere-like
+//! cache hierarchy and reports fresh-vs-cached traffic and hit rates.
+//! Expected shape: SW-SGD performs 2–3× the gradient work of MB-GD at the
+//! SAME fresh-point traffic, with the extra touches served from cache.
+
+use locality_ml::bench::{section, Bench};
+use locality_ml::cli::commands::cmd_fig4;
+use locality_ml::memsim::patterns::{gd_iterations, GdVariant};
+use locality_ml::memsim::Hierarchy;
+
+fn main() -> anyhow::Result<()> {
+    section("E3 / Figure 4 — optimizer data-touch traces");
+    cmd_fig4()?;
+
+    // Throughput of the trace+simulate pipeline itself (the substrate's
+    // own hot path, exercised by every memsim experiment).
+    section("memsim pipeline throughput");
+    let (t, d, b) = (4096u64, 16u64, 128u64);
+    for (name, variant) in [
+        ("trace+cache sgd", GdVariant::Sgd),
+        ("trace+cache mbgd", GdVariant::MbGd { b }),
+        ("trace+cache swsgd-w2", GdVariant::SwSgd { b, w: 2 }),
+    ] {
+        Bench::new(name).warmup(1).runs(5).run(|| {
+            let mut h = Hierarchy::westmere();
+            gd_iterations(t, d, 32, variant, 7, &mut h);
+            h.cycles
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Bench E1 — paper Figure 5: SW-SGD convergence, optimizers × windows.
+//!
+//! Regenerates the figure's series (validation loss per epoch, per
+//! scenario) and reports (a) the final losses, (b) epochs-to-threshold,
+//! and (c) wall-clock per scenario. The paper's expected *shape*: at equal
+//! fresh-point budget, the cached-window scenarios (w=1, w=2) reach a
+//! given cost in fewer epochs than w=0.
+//!
+//! Scale via env: LM_EPOCHS (default 8), LM_DATASET (default 2560),
+//! LM_OPTIMIZERS (default "sgd,adam").
+
+use std::path::Path;
+
+use locality_ml::bench::section;
+use locality_ml::coordinator::{train_swsgd, TrainSpec};
+use locality_ml::data::{mnist_like, Folds};
+use locality_ml::metrics::Table;
+use locality_ml::opt::OptimizerKind;
+use locality_ml::runtime::Engine;
+use locality_ml::util::Stopwatch;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    section("E1 / Figure 5 — SW-SGD sweep");
+    let epochs = env_usize("LM_EPOCHS", 8);
+    let dataset_n = env_usize("LM_DATASET", 2560);
+    let optimizers: Vec<OptimizerKind> = std::env::var("LM_OPTIMIZERS")
+        .unwrap_or_else(|_| "sgd,adam".into())
+        .split(',')
+        .filter_map(OptimizerKind::parse)
+        .collect();
+
+    let mut engine = Engine::open(Path::new("artifacts"))?;
+    let ds = mnist_like(dataset_n, 42);
+    let folds = Folds::split(ds.n, 5, 7);
+    let train = ds.gather(&folds.train_indices(0));
+    let val = ds.gather(folds.test_indices(0));
+
+    let mut table = Table::new(
+        format!("Fig 5 (epochs={epochs}, n={dataset_n})"),
+        &["scenario", "final val loss", "epochs to w0-final", "wall (s)"]);
+    for &opt in &optimizers {
+        // threshold = what plain minibatch reaches at the end
+        let mut w0_final = f64::NAN;
+        for w in [0usize, 1, 2] {
+            let spec = TrainSpec {
+                optimizer: opt,
+                lr: None,
+                window: w,
+                batch: 128,
+                epochs,
+                seed: 11,
+            };
+            let sw = Stopwatch::start();
+            let curve = train_swsgd(&mut engine, &train, &val, &spec)?;
+            let wall = sw.elapsed_secs();
+            let final_val = curve.final_val().unwrap();
+            if w == 0 {
+                w0_final = final_val;
+            }
+            let reach = curve
+                .epochs_to_reach(w0_final)
+                .map_or(format!(">{epochs}"), |e| e.to_string());
+            table.row(&[spec.label(),
+                        format!("{final_val:.4}"),
+                        reach,
+                        format!("{wall:.2}")]);
+        }
+    }
+    println!("{}", table.to_markdown());
+    Ok(())
+}

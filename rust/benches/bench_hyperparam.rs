@@ -1,0 +1,56 @@
+//! Bench E10 — §4.1.1 hyperparameter search with distance reuse:
+//! "the same mutual distances will be repeatedly calculated" in a naive
+//! k/bandwidth sweep under cross-validation; the shared sweep computes
+//! them once per CV split and evaluates every candidate from the shared
+//! structure.
+//!
+//! Expected shape: distance evaluations (and wall-clock, for
+//! distance-dominated dims) shrink by ~the candidate count; accuracies
+//! are bit-identical.
+
+use locality_ml::bench::{black_box, section, Bench};
+use locality_ml::coordinator::{
+    silverman_bandwidth, sweep_naive, sweep_shared,
+};
+use locality_ml::data::{chembl_like, Folds};
+use locality_ml::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    section("E10 / §4.1.1 — hyperparameter search, naive vs shared");
+    let ds = chembl_like(1000, 7);
+    let folds = Folds::split(ds.n, 5, 9);
+    let ks = [1usize, 3, 5, 9, 15];
+    let h0 = silverman_bandwidth(&ds);
+    let hs = [0.5 * h0, h0, 2.0 * h0, 4.0 * h0];
+    println!("silverman h0 = {h0:.3}; candidates: {} k's + {} h's",
+             ks.len(), hs.len());
+
+    let (sk, sb) = sweep_shared(&ds, &folds, &ks, &hs);
+    let (nk, _nb) = sweep_naive(&ds, &folds, &ks, &hs);
+    assert_eq!(sk.accuracy, nk.accuracy, "sweeps must agree");
+
+    let mut table = Table::new(
+        "distance evaluations per full sweep",
+        &["schedule", "distance evals", "factor"]);
+    table.row(&["naive (per candidate)".into(),
+                nk.distance_evals.to_string(),
+                format!("{:.1}x",
+                        nk.distance_evals as f64
+                            / sk.distance_evals as f64)]);
+    table.row(&["shared (one pass per split)".into(),
+                sk.distance_evals.to_string(), "1.0x".into()]);
+    println!("{}", table.to_markdown());
+    let (best_k, acc_k) = sk.best();
+    let (best_h, acc_h) = sb.best();
+    println!("best k = {best_k} (acc {acc_k:.3}); \
+              best h = {best_h:.3} (acc {acc_h:.3})");
+
+    section("wall-clock");
+    Bench::new("naive sweep").warmup(1).runs(3).run(|| {
+        black_box(sweep_naive(&ds, &folds, &ks, &hs))
+    });
+    Bench::new("shared sweep").warmup(1).runs(3).run(|| {
+        black_box(sweep_shared(&ds, &folds, &ks, &hs))
+    });
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Bench E6 — the reuse-distance audit (paper §3–§4): the per-algorithm
+//! stack distances the text derives, measured on literal renditions of
+//! its algorithm templates.
+//!
+//! Also benchmarks the profiler itself (O(log n)/access Fenwick) against
+//! the O(n²) brute-force oracle to justify the substrate.
+
+use locality_ml::bench::{black_box, section, Bench};
+use locality_ml::cli::commands::cmd_audit;
+use locality_ml::memsim::patterns::{instance_scan, ScanMode};
+use locality_ml::memsim::reuse::{brute_force_distances, ReuseProfiler};
+use locality_ml::metrics::Table;
+use locality_ml::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    section("E6 — reuse-distance audit");
+    cmd_audit()?;
+
+    // The §4.1.1 batching guideline quantified: mean reuse distance of
+    // the training set vs prediction batch size.
+    section("k-NN batch-size sweep (|RT|=256, d=4)");
+    let mut table = Table::new(
+        "mean train-point reuse distance vs prediction batch",
+        &["batch", "mean distance", "LRU lines for 95% hits"]);
+    for tile in [1u64, 4, 16, 64] {
+        let mut prof = ReuseProfiler::new();
+        instance_scan(256, 64, 4, ScanMode::Batched { tile }, 1, true,
+                      &mut prof);
+        let r = prof.finish();
+        // smallest d with hit_rate >= 0.95
+        let mut need = 0u64;
+        for d in 0..=(256 * 4 + 64) {
+            if r.hit_rate_at(d) >= 0.95 {
+                need = d + 1;
+                break;
+            }
+        }
+        table.row(&[tile.to_string(),
+                    format!("{:.1}", r.mean_distance()),
+                    need.to_string()]);
+    }
+    println!("{}", table.to_markdown());
+
+    section("profiler throughput");
+    let mut rng = Rng::new(3);
+    let trace: Vec<u64> = (0..20_000).map(|_| rng.next_u64() % 4096)
+        .collect();
+    Bench::new("fenwick profiler (20k accesses)").runs(5).run(|| {
+        let mut p = ReuseProfiler::new();
+        for &a in &trace {
+            black_box(p.observe(a));
+        }
+    });
+    let small: Vec<u64> = trace[..2000].to_vec();
+    Bench::new("brute force oracle (2k accesses)").runs(3).run(|| {
+        black_box(brute_force_distances(&small));
+    });
+    Ok(())
+}

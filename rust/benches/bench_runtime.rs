@@ -1,0 +1,93 @@
+//! Bench E9 — L3 hot-path microbenchmarks: the coordinator/runtime
+//! overheads that sit around every artifact execution.
+//!
+//! The DESIGN.md §8 target: L3 must not be the bottleneck — window
+//! composition and batch gathering should be orders of magnitude below a
+//! single grad-artifact execution, and per-call upload overhead should be
+//! small against the device-resident path.
+
+use std::path::Path;
+
+use locality_ml::bench::{black_box, section, Bench};
+use locality_ml::coordinator::{BatchBuffers, EpochBatcher, SlidingWindow};
+use locality_ml::data::mnist_like;
+use locality_ml::learners::mlp;
+use locality_ml::runtime::{Engine, HostTensor, Input};
+use locality_ml::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    section("E9 — L3 hot-path microbenchmarks");
+    let ds = mnist_like(2560, 1);
+
+    // --- pure-coordinator costs ------------------------------------
+    let mut batcher = EpochBatcher::new(ds.n, 128, 3);
+    let mut window = SlidingWindow::new(2, 128);
+    let mut buffers = BatchBuffers::new(384, ds.d, ds.n_classes);
+    Bench::new("batch: next+compose+gather (384 pts)").warmup(10)
+        .runs(10).run(|| {
+            let fresh = batcher.next_batch().to_vec();
+            let combined = window.compose(&fresh);
+            black_box(buffers.gather(&ds, combined))
+        });
+
+    // --- runtime dispatch ------------------------------------------
+    let mut engine = Engine::open(Path::new("artifacts"))?;
+    engine.preload("mlp_grad_b384")?;
+    engine.preload("nb_predict")?;
+    let theta = HostTensor::f32(vec![mlp::N_PARAMS], mlp::init_params(2));
+    let fresh = batcher.next_batch().to_vec();
+    let combined = window.compose(&fresh).to_vec();
+    let n = buffers.gather(&ds, &combined);
+    let (x, y) = buffers.slices(n);
+    let xt = HostTensor::f32(vec![384, 784], x.to_vec());
+    let yt = HostTensor::f32(vec![384, 10], y.to_vec());
+    Bench::new("mlp_grad_b384 execute (host inputs)").warmup(2).runs(10)
+        .run(|| engine.execute("mlp_grad_b384", &[&theta, &xt, &yt])
+            .unwrap());
+
+    // raw-slice hot path (train_step's actual code path since the L3
+    // perf iteration: one host->device copy, no Literal intermediate)
+    Bench::new("mlp_grad_b384 execute (slice inputs)").warmup(2).runs(10)
+        .run(|| engine.execute_mixed("mlp_grad_b384", &[
+            Input::Slice(theta.as_f32().unwrap(), &[mlp::N_PARAMS]),
+            Input::Slice(x, &[384, 784]),
+            Input::Slice(y, &[384, 10]),
+        ]).unwrap());
+
+    // device-resident params vs per-call upload
+    let dev_theta = engine.upload(&theta)?;
+    Bench::new("mlp_grad_b384 execute (device params)").warmup(2).runs(10)
+        .run(|| engine.execute_mixed("mlp_grad_b384", &[
+            Input::Device(&dev_theta),
+            Input::Host(&xt),
+            Input::Host(&yt),
+        ]).unwrap());
+
+    // small-graph dispatch floor
+    let nb_inputs = {
+        let mut rng = Rng::new(5);
+        let c = 10;
+        let d = 784;
+        (
+            HostTensor::f32(vec![c], vec![640.0; c]),
+            HostTensor::f32(vec![c, d],
+                            (0..c * d).map(|_| rng.normal()).collect()),
+            HostTensor::f32(vec![c, d], vec![1.0; c * d]),
+            HostTensor::f32(vec![256, d],
+                            (0..256 * d).map(|_| rng.normal()).collect()),
+        )
+    };
+    Bench::new("nb_predict execute (dispatch floor)").warmup(3).runs(20)
+        .run(|| engine.execute("nb_predict", &[
+            &nb_inputs.0, &nb_inputs.1, &nb_inputs.2, &nb_inputs.3,
+        ]).unwrap());
+
+    // upload bandwidth
+    let train_block = HostTensor::f32(vec![20480, 128],
+                                      vec![0.5; 20480 * 128]);
+    Bench::new("upload 10 MiB train block").warmup(1).runs(10)
+        .run(|| engine.upload(&train_block).unwrap());
+
+    println!("\nengine stats: {:?}", engine.stats);
+    Ok(())
+}

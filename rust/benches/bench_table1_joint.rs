@@ -1,0 +1,63 @@
+//! Bench E2 — paper Table 1: PRW + k-NN separately vs jointly.
+//!
+//! Repeats both scenarios and reports mean load/test times plus the
+//! speedup factors. Expected shape (paper §5.2): joint load ≈ 2× faster
+//! (one dataset read instead of two), joint test meaningfully faster
+//! ("computing time is indeed almost divided by two" on the authors' box;
+//! here the distance pass dominates but is not 100% of the work, so the
+//! factor lands lower).
+
+use std::path::Path;
+
+use locality_ml::bench::section;
+use locality_ml::cli::commands::ensure_joint_data;
+use locality_ml::config::{Config, JointExperiment};
+use locality_ml::coordinator::{run_joint, run_separate};
+use locality_ml::metrics::Table;
+use locality_ml::runtime::Engine;
+use locality_ml::util::Stats;
+
+fn main() -> anyhow::Result<()> {
+    section("E2 / Table 1 — joint vs separate k-NN + PRW");
+    let runs = std::env::var("LM_RUNS").ok()
+        .and_then(|v| v.parse().ok()).unwrap_or(3usize);
+    let mut exp = JointExperiment::from_config(&Config::default())?;
+    exp.data_dir = std::env::temp_dir().join("lm_bench_data");
+    ensure_joint_data(&exp)?;
+    let mut engine = Engine::open(Path::new("artifacts"))?;
+
+    let mut sep_load = Vec::new();
+    let mut sep_test = Vec::new();
+    let mut joint_load = Vec::new();
+    let mut joint_test = Vec::new();
+    for _ in 0..runs {
+        let s = run_separate(&mut engine, &exp.train_path(),
+                             &exp.test_path())?;
+        let j = run_joint(&mut engine, &exp.train_path(),
+                          &exp.test_path())?;
+        assert_eq!(s.knn, j.knn);
+        assert_eq!(s.prw, j.prw);
+        sep_load.push(s.load_secs);
+        sep_test.push(s.test_secs);
+        joint_load.push(j.load_secs);
+        joint_test.push(j.test_secs);
+    }
+    let st = |v: &[f64]| Stats::from_samples(v);
+    let (sl, stt) = (st(&sep_load), st(&sep_test));
+    let (jl, jt) = (st(&joint_load), st(&joint_test));
+    let mut table = Table::new(
+        format!("Table 1 (mean of {runs} runs)"),
+        &["", "Load time (s)", "Test time (s)"]);
+    table.row(&["PRW+k-NN separately".into(),
+                format!("{:.3} ± {:.3}", sl.mean, sl.stddev),
+                format!("{:.3} ± {:.3}", stt.mean, stt.stddev)]);
+    table.row(&["PRW+k-NN jointly".into(),
+                format!("{:.3} ± {:.3}", jl.mean, jl.stddev),
+                format!("{:.3} ± {:.3}", jt.mean, jt.stddev)]);
+    table.row(&["speedup".into(),
+                format!("{:.2}x (paper 2.03x)", sl.mean / jl.mean),
+                format!("{:.2}x (paper 1.68x)", stt.mean / jt.mean)]);
+    println!("{}", table.to_markdown());
+    assert!(jt.mean < stt.mean, "joint must win the test phase");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Minimal benchmark harness (criterion substitute, DESIGN.md §1).
+//!
+//! Used by `benches/*.rs` with `harness = false`. Protocol per benchmark:
+//! warmup runs (discarded), then timed runs; reports mean ± σ / min / max.
+//! Output format is stable and grep-friendly:
+//!
+//! ```text
+//! bench <name> ... mean 12.345 ms  σ 0.4 ms  min 11.9 ms  max 13.0 ms  (n=10)
+//! ```
+
+use crate::util::timing::{fmt_duration, Stats, Stopwatch};
+
+/// One benchmark definition.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    runs: usize,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), warmup: 1, runs: 5 }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn runs(mut self, n: usize) -> Self {
+        assert!(n > 0);
+        self.runs = n;
+        self
+    }
+
+    /// Execute and report. The closure's return value is black-boxed to
+    /// keep the optimiser honest; per-run seconds are returned for
+    /// downstream assertions (speedup checks in the benches).
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.runs);
+        for _ in 0..self.runs {
+            let sw = Stopwatch::start();
+            black_box(f());
+            samples.push(sw.elapsed_secs());
+        }
+        let stats = Stats::from_samples(&samples);
+        println!(
+            "bench {:<40} mean {:>12}  σ {:>10}  min {:>12}  max {:>12}  (n={})",
+            self.name,
+            fmt_duration(stats.mean),
+            fmt_duration(stats.stddev),
+            fmt_duration(stats.min),
+            fmt_duration(stats.max),
+            stats.n
+        );
+        stats
+    }
+}
+
+/// Opaque value sink (std::hint::black_box re-export for benches).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a section header so multi-table bench output stays readable.
+pub fn section(title: &str) {
+    println!("\n==== {title} ====");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_reports_sane_stats() {
+        let stats = Bench::new("noop").warmup(1).runs(3).run(|| 1 + 1);
+        assert_eq!(stats.n, 3);
+        assert!(stats.min <= stats.mean && stats.mean <= stats.max);
+    }
+
+    #[test]
+    fn measures_sleeps_roughly() {
+        let stats = Bench::new("sleep").warmup(0).runs(2).run(|| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        });
+        assert!(stats.mean >= 0.004, "mean {:.6}", stats.mean);
+    }
+}

@@ -1,0 +1,139 @@
+//! Declarative CLI argument parser (clap substitute, DESIGN.md §1).
+//!
+//! Grammar: `locality-ml <subcommand> [--key value]... [--flag]...`
+//! Flags may also be written `--key=value`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: a subcommand plus string options.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Args {
+    pub command: String,
+    options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I, S>(raw: I) -> Result<Self>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut it = raw.into_iter().map(Into::into).peekable();
+        // Subcommand is optional: examples parse flag-only command lines.
+        let command = match it.peek() {
+            Some(c) if !c.starts_with('-') => it.next().unwrap(),
+            _ => String::new(),
+        };
+        let mut options = BTreeMap::new();
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument `{arg}`");
+            };
+            if let Some((k, v)) = name.split_once('=') {
+                options.insert(k.to_string(), v.to_string());
+            } else if it.peek().map_or(true, |n| n.starts_with("--")) {
+                // bare flag -> boolean true
+                options.insert(name.to_string(), "true".to_string());
+            } else {
+                options.insert(name.to_string(), it.next().unwrap());
+            }
+        }
+        Ok(Self { command, options })
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: bad integer `{v}`")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: bad integer `{v}`")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = Args::parse(["train", "--epochs", "30", "--cv",
+                             "--optimizers=adam,sgd"]).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.usize_or("epochs", 0).unwrap(), 30);
+        assert!(a.flag("cv"));
+        assert_eq!(a.list_or("optimizers", &[]), vec!["adam", "sgd"]);
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let a = Args::parse(["joint"]).unwrap();
+        assert_eq!(a.usize_or("epochs", 7).unwrap(), 7);
+        assert!(!a.flag("cv"));
+        assert_eq!(a.str_or("out", "x.csv"), "x.csv");
+    }
+
+    #[test]
+    fn empty_command_allowed() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "");
+    }
+
+    #[test]
+    fn bad_integer_is_error_not_panic() {
+        let a = Args::parse(["train", "--epochs", "many"]).unwrap();
+        assert!(a.usize_or("epochs", 1).is_err());
+    }
+
+    #[test]
+    fn flag_only_command_line_has_empty_command() {
+        let a = Args::parse(["--epochs", "20"]).unwrap();
+        assert_eq!(a.command, "");
+        assert_eq!(a.usize_or("epochs", 0).unwrap(), 20);
+    }
+
+    #[test]
+    fn rejects_positionals_after_subcommand() {
+        assert!(Args::parse(["train", "positional"]).is_err());
+    }
+
+    #[test]
+    fn trailing_bare_flag() {
+        let a = Args::parse(["audit", "--verbose"]).unwrap();
+        assert!(a.flag("verbose"));
+    }
+}

@@ -1,0 +1,6 @@
+//! CLI layer: argument parsing + subcommand implementations.
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;

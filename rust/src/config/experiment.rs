@@ -1,0 +1,172 @@
+//! Typed experiment configurations, assembled from a TOML-subset
+//! [`Config`] plus CLI overrides. Defaults reproduce the paper's setups
+//! at this testbed's scale (DESIGN.md §3, §6).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use super::toml::Config;
+use crate::opt::OptimizerKind;
+
+/// Fig 5 / E1: the SW-SGD convergence sweep.
+#[derive(Debug, Clone)]
+pub struct TrainExperiment {
+    pub artifacts: PathBuf,
+    /// Total dataset size (train folds + held-out fold come from this).
+    pub dataset_n: usize,
+    pub folds: usize,
+    /// Run full k-fold CV (paper protocol) or a single split (quick).
+    pub cross_validate: bool,
+    pub optimizers: Vec<OptimizerKind>,
+    pub windows: Vec<usize>,
+    pub batch: usize,
+    pub epochs: usize,
+    pub seed: u64,
+    /// Optional CSV output path for the curves.
+    pub out_csv: Option<PathBuf>,
+}
+
+impl TrainExperiment {
+    pub fn from_config(c: &Config) -> Result<Self> {
+        let optimizers = c
+            .str_list_or("train.optimizers",
+                         &["sgd", "momentum", "adam", "adagrad"])
+            .iter()
+            .map(|s| OptimizerKind::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown optimizer `{s}`")))
+            .collect::<Result<Vec<_>>>()?;
+        let windows: Vec<usize> = c
+            .int_list_or("train.windows", &[0, 1, 2])
+            .iter()
+            .map(|&w| w as usize)
+            .collect();
+        if windows.iter().any(|&w| w > 2) {
+            bail!("windows > 2 have no matching grad artifact \
+                   (mlp_grad_b{{128,256,384}})");
+        }
+        let exp = Self {
+            artifacts: PathBuf::from(c.str_or("artifacts", "artifacts")),
+            dataset_n: c.int_or("train.dataset_n", 6400) as usize,
+            folds: c.int_or("train.folds", 5) as usize,
+            cross_validate: c.bool_or("train.cross_validate", false),
+            optimizers,
+            windows,
+            batch: c.int_or("train.batch", 128) as usize,
+            epochs: c.int_or("train.epochs", 10) as usize,
+            seed: c.int_or("seed", 42) as u64,
+            out_csv: c.get("train.out_csv")
+                .and_then(|v| v.as_str())
+                .map(PathBuf::from),
+        };
+        exp.validate()?;
+        Ok(exp)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.batch != 128 {
+            bail!("batch must be 128: the AOT grad artifacts are lowered \
+                   for combined sizes 128/256/384");
+        }
+        if self.dataset_n % self.folds != 0 {
+            bail!("dataset_n {} not divisible by folds {}", self.dataset_n,
+                  self.folds);
+        }
+        let fold = self.dataset_n / self.folds;
+        if fold % 256 != 0 {
+            bail!("fold size {fold} must be a multiple of the eval tile \
+                   (256)");
+        }
+        Ok(())
+    }
+}
+
+/// Table 1 / E2: the joint k-NN + PRW run.
+#[derive(Debug, Clone)]
+pub struct JointExperiment {
+    pub artifacts: PathBuf,
+    /// Where the .lmld files live / are generated.
+    pub data_dir: PathBuf,
+    pub train_n: usize,
+    pub test_n: usize,
+    pub seed: u64,
+    /// Regenerate the datasets even if the files exist.
+    pub regenerate: bool,
+}
+
+impl JointExperiment {
+    pub fn from_config(c: &Config) -> Result<Self> {
+        let exp = Self {
+            artifacts: PathBuf::from(c.str_or("artifacts", "artifacts")),
+            data_dir: PathBuf::from(c.str_or("joint.data_dir", "data")),
+            train_n: c.int_or("joint.train_n", 20480) as usize,
+            test_n: c.int_or("joint.test_n", 2048) as usize,
+            seed: c.int_or("seed", 42) as u64,
+            regenerate: c.bool_or("joint.regenerate", false),
+        };
+        if exp.train_n != 20480 {
+            bail!("train_n must be 20480 (the AOT artifact geometry)");
+        }
+        if exp.test_n % 256 != 0 {
+            bail!("test_n must be a multiple of the test tile (256)");
+        }
+        Ok(exp)
+    }
+
+    pub fn train_path(&self) -> PathBuf {
+        self.data_dir.join("chembl_train.lmld")
+    }
+
+    pub fn test_path(&self) -> PathBuf {
+        self.data_dir.join("chembl_test.lmld")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_defaults_are_paper_shaped() {
+        let exp =
+            TrainExperiment::from_config(&Config::parse("").unwrap())
+                .unwrap();
+        assert_eq!(exp.dataset_n, 6400);
+        assert_eq!(exp.folds, 5);
+        assert_eq!(exp.batch, 128);
+        assert_eq!(exp.windows, vec![0, 1, 2]);
+        assert_eq!(exp.optimizers.len(), 4);
+    }
+
+    #[test]
+    fn train_rejects_bad_geometry() {
+        let c = Config::parse("[train]\nbatch = 64").unwrap();
+        assert!(TrainExperiment::from_config(&c).is_err());
+        let c = Config::parse("[train]\ndataset_n = 1000").unwrap();
+        assert!(TrainExperiment::from_config(&c).is_err());
+        let c = Config::parse("[train]\nwindows = [0, 3]").unwrap();
+        assert!(TrainExperiment::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn train_parses_optimizer_list() {
+        let c = Config::parse("[train]\noptimizers = [\"adam\"]").unwrap();
+        let exp = TrainExperiment::from_config(&c).unwrap();
+        assert_eq!(exp.optimizers, vec![OptimizerKind::Adam]);
+        let c = Config::parse("[train]\noptimizers = [\"nope\"]").unwrap();
+        assert!(TrainExperiment::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn joint_geometry_checks() {
+        let exp =
+            JointExperiment::from_config(&Config::parse("").unwrap())
+                .unwrap();
+        assert_eq!(exp.train_n, 20480);
+        assert!(exp.train_path().ends_with("chembl_train.lmld"));
+        let c = Config::parse("[joint]\ntrain_n = 100").unwrap();
+        assert!(JointExperiment::from_config(&c).is_err());
+        let c = Config::parse("[joint]\ntest_n = 100").unwrap();
+        assert!(JointExperiment::from_config(&c).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Configuration system (DESIGN.md system S10): a TOML-subset parser plus
+//! typed experiment configs with paper-shaped defaults.
+
+pub mod experiment;
+pub mod toml;
+
+pub use experiment::{JointExperiment, TrainExperiment};
+pub use toml::{Config, Value};

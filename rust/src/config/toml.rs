@@ -1,0 +1,259 @@
+//! Minimal TOML-subset parser (serde/toml substitute, DESIGN.md §1).
+//!
+//! Supported grammar — everything the experiment configs need:
+//!
+//! ```toml
+//! # comment
+//! top_level = 1
+//! [section]
+//! string  = "text"
+//! int     = 42
+//! float   = 0.5
+//! flag    = true
+//! list    = [1, 2, 3]
+//! ```
+//!
+//! Keys are addressed as `"section.key"` (or bare `"key"` for the root).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed scalar or flat array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+fn parse_scalar(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value `{s}`")
+}
+
+/// A flat key/value store with dotted-section addressing.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: unterminated section", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let eq = line.find('=')
+                .with_context(|| format!("line {}: missing `=`",
+                                         lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let vs = line[eq + 1..].trim();
+            let value = if vs.starts_with('[') {
+                if !vs.ends_with(']') {
+                    bail!("line {}: unterminated array", lineno + 1);
+                }
+                let body = &vs[1..vs.len() - 1];
+                let items = if body.trim().is_empty() {
+                    Vec::new()
+                } else {
+                    body.split(',')
+                        .map(parse_scalar)
+                        .collect::<Result<Vec<_>>>()
+                        .with_context(|| format!("line {}", lineno + 1))?
+                };
+                Value::Array(items)
+            } else {
+                parse_scalar(vs)
+                    .with_context(|| format!("line {}", lineno + 1))?
+            };
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, value);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Array of strings under `key` (missing -> default).
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(Value::Array(items)) => items
+                .iter()
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .collect(),
+            _ => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Array of ints under `key` (missing -> default).
+    pub fn int_list_or(&self, key: &str, default: &[i64]) -> Vec<i64> {
+        match self.get(key) {
+            Some(Value::Array(items)) => {
+                items.iter().filter_map(Value::as_int).collect()
+            }
+            _ => default.to_vec(),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string literal
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+seed = 42
+[train]
+optimizers = ["sgd", "adam"]
+windows = [0, 1, 2]
+epochs = 30
+lr = 0.001
+deterministic = true
+label = "fig5 # not a comment"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.int_or("seed", 0), 42);
+        assert_eq!(c.int_or("train.epochs", 0), 30);
+        assert_eq!(c.float_or("train.lr", 0.0), 0.001);
+        assert!(c.bool_or("train.deterministic", false));
+        assert_eq!(c.str_list_or("train.optimizers", &[]),
+                   vec!["sgd", "adam"]);
+        assert_eq!(c.int_list_or("train.windows", &[]), vec![0, 1, 2]);
+        assert_eq!(c.str_or("train.label", ""), "fig5 # not a comment");
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int_or("nope", 7), 7);
+        assert_eq!(c.str_or("nope", "x"), "x");
+        assert_eq!(c.int_list_or("nope", &[1]), vec![1]);
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let c = Config::parse("x = 3").unwrap();
+        assert_eq!(c.float_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("x = [1, 2").is_err());
+        assert!(Config::parse("x = what").is_err());
+    }
+
+    #[test]
+    fn empty_array_is_ok() {
+        let c = Config::parse("x = []").unwrap();
+        assert_eq!(c.int_list_or("x", &[9]), Vec::<i64>::new());
+    }
+}

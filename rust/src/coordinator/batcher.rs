@@ -1,0 +1,187 @@
+//! Epoch-shuffled minibatch assembly (Algorithm 9's prologue: "Randomly
+//! shuffle the order of all the training data in T / Divide T into
+//! mini-batches of size n").
+//!
+//! The batcher owns preallocated staging buffers so the training hot loop
+//! performs **zero heap allocation** per step (L3 perf target, DESIGN.md
+//! §8): gather-into-buffer, hand out slices.
+
+use crate::data::Dataset;
+use crate::util::Rng;
+
+/// Streams shuffled index batches over `[0, n)`, reshuffling every epoch.
+#[derive(Debug)]
+pub struct EpochBatcher {
+    order: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    rng: Rng,
+    pub epoch: usize,
+}
+
+impl EpochBatcher {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Self {
+        assert!(batch > 0 && batch <= n, "batch {batch} vs n {n}");
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        Self { order, cursor: 0, batch, rng, epoch: 0 }
+    }
+
+    /// Batches per epoch (trailing partial batch is dropped, matching the
+    /// fixed-shape AOT artifacts).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.order.len() / self.batch
+    }
+
+    /// Next batch of indices. Reshuffles and bumps `epoch` at wrap.
+    pub fn next_batch(&mut self) -> &[usize] {
+        if self.cursor + self.batch > self.batches_per_epoch() * self.batch {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+            self.epoch += 1;
+        }
+        let s = &self.order[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+        s
+    }
+}
+
+/// Preallocated gather buffers for feature/one-hot batches.
+#[derive(Debug)]
+pub struct BatchBuffers {
+    pub x: Vec<f32>,
+    pub y_onehot: Vec<f32>,
+    capacity_points: usize,
+    d: usize,
+    classes: usize,
+}
+
+impl BatchBuffers {
+    /// Allocate once for up to `capacity_points` points.
+    pub fn new(capacity_points: usize, d: usize, classes: usize) -> Self {
+        Self {
+            x: vec![0.0; capacity_points * d],
+            y_onehot: vec![0.0; capacity_points * classes],
+            capacity_points,
+            d,
+            classes,
+        }
+    }
+
+    /// Gather `indices` (possibly from several sources, e.g. new batch +
+    /// cached window) into the staging buffers. Returns the point count.
+    /// No allocation.
+    pub fn gather(&mut self, ds: &Dataset, indices: &[usize]) -> usize {
+        assert!(indices.len() <= self.capacity_points,
+            "{} > capacity {}", indices.len(), self.capacity_points);
+        assert_eq!(ds.d, self.d);
+        assert_eq!(ds.n_classes, self.classes);
+        let n = indices.len();
+        self.y_onehot[..n * self.classes].fill(0.0);
+        for (slot, &i) in indices.iter().enumerate() {
+            self.x[slot * self.d..(slot + 1) * self.d]
+                .copy_from_slice(ds.row(i));
+            self.y_onehot[slot * self.classes
+                + ds.labels[i] as usize] = 1.0;
+        }
+        n
+    }
+
+    /// The gathered slices for a batch of `n` points.
+    pub fn slices(&self, n: usize) -> (&[f32], &[f32]) {
+        (&self.x[..n * self.d], &self.y_onehot[..n * self.classes])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+    use crate::data::MixtureSpec;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn epoch_covers_every_point_once() {
+        check("batcher-epoch-coverage", 25, |g| {
+            let b = g.usize_in(1, 16);
+            let n = b * g.usize_in(1, 12); // divisible for exact coverage
+            let mut batcher = EpochBatcher::new(n, b, g.u64());
+            let mut seen = vec![0usize; n];
+            for _ in 0..batcher.batches_per_epoch() {
+                for &i in batcher.next_batch() {
+                    seen[i] += 1;
+                }
+            }
+            prop_assert!(seen.iter().all(|&c| c == 1),
+                "epoch must touch every point exactly once: {seen:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reshuffles_between_epochs() {
+        let mut batcher = EpochBatcher::new(64, 8, 3);
+        let first: Vec<usize> = (0..8)
+            .flat_map(|_| batcher.next_batch().to_vec())
+            .collect();
+        let second: Vec<usize> = (0..8)
+            .flat_map(|_| batcher.next_batch().to_vec())
+            .collect();
+        assert_eq!(batcher.epoch, 1);
+        assert_ne!(first, second, "epoch order should differ");
+        let mut s = second.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn partial_tail_is_dropped() {
+        let mut batcher = EpochBatcher::new(10, 4, 1);
+        assert_eq!(batcher.batches_per_epoch(), 2);
+        batcher.next_batch();
+        batcher.next_batch();
+        // third call wraps to epoch 1 rather than emitting a ragged batch
+        batcher.next_batch();
+        assert_eq!(batcher.epoch, 1);
+    }
+
+    #[test]
+    fn gather_assembles_rows_and_onehots() {
+        let ds = Dataset::new(
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            vec![0, 2, 1],
+            2,
+            3,
+        );
+        let mut buf = BatchBuffers::new(4, 2, 3);
+        let n = buf.gather(&ds, &[2, 0]);
+        let (x, y) = buf.slices(n);
+        assert_eq!(x, &[5.0, 6.0, 1.0, 2.0]);
+        assert_eq!(y, &[0.0, 1.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn gather_clears_stale_onehot_bits() {
+        let ds = gaussian_mixture(MixtureSpec {
+            n: 8, d: 2, classes: 2, separation: 1.0, noise: 1.0, seed: 1,
+        });
+        let mut buf = BatchBuffers::new(4, 2, 2);
+        buf.gather(&ds, &[0, 1, 2, 3]);
+        let n = buf.gather(&ds, &[4, 5]);
+        let (_, y) = buf.slices(n);
+        let ones = y.iter().filter(|&&v| v == 1.0).count();
+        assert_eq!(ones, 2, "exactly one hot bit per gathered point");
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn gather_over_capacity_panics() {
+        let ds = gaussian_mixture(MixtureSpec {
+            n: 8, d: 2, classes: 2, separation: 1.0, noise: 1.0, seed: 1,
+        });
+        let mut buf = BatchBuffers::new(2, 2, 2);
+        buf.gather(&ds, &[0, 1, 2]);
+    }
+}

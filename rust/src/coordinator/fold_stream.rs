@@ -1,0 +1,178 @@
+//! Fold streams (paper Figure 1 / §3.1.1): "the simplest form of reuse for
+//! cross-validation is treating the different learner instances as black
+//! boxes and exploiting locality by passing the same fold to all the
+//! learners that need it simultaneously."
+//!
+//! Learner instance `l` is the CV split whose *test* fold is `l`; it
+//! therefore consumes every fold `f != l`.  The shared pass streams each
+//! fold once and fans batches out to all consumers; the separate pass
+//! replays the naive loop nest (each learner re-reads its k−1 folds).
+
+use crate::data::{Dataset, Folds};
+use crate::util::Rng;
+
+/// Traffic accounting for one cross-validation epoch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PassStats {
+    /// Training points read from the backing store (the paper's "data
+    /// epochs over T" cost).
+    pub points_streamed: u64,
+    /// (learner, point) deliveries — identical for both schedules; the
+    /// transformation changes *reads*, never the work delivered.
+    pub deliveries: u64,
+}
+
+/// Streams CV folds to learner instances in either schedule.
+pub struct FoldStream<'a> {
+    pub ds: &'a Dataset,
+    pub folds: &'a Folds,
+}
+
+impl<'a> FoldStream<'a> {
+    pub fn new(ds: &'a Dataset, folds: &'a Folds) -> Self {
+        Self { ds, folds }
+    }
+
+    /// Figure 1: one pass over T; each fold's batches are delivered to
+    /// every learner that trains on that fold. `consume(learner, batch)`.
+    pub fn shared_pass(
+        &self,
+        batch: usize,
+        seed: u64,
+        mut consume: impl FnMut(usize, &[usize]),
+    ) -> PassStats {
+        let k = self.folds.k();
+        let mut stats = PassStats::default();
+        for fold_id in 0..k {
+            for chunk in self.shuffled_batches(fold_id, batch, seed) {
+                stats.points_streamed += chunk.len() as u64;
+                for learner in 0..k {
+                    if learner != fold_id {
+                        consume(learner, &chunk);
+                        stats.deliveries += chunk.len() as u64;
+                    }
+                }
+            }
+        }
+        stats
+    }
+
+    /// The naive nest (Algorithm 4 run per learner): every learner
+    /// re-reads its k−1 training folds.
+    pub fn separate_pass(
+        &self,
+        batch: usize,
+        seed: u64,
+        mut consume: impl FnMut(usize, &[usize]),
+    ) -> PassStats {
+        let k = self.folds.k();
+        let mut stats = PassStats::default();
+        for learner in 0..k {
+            for fold_id in 0..k {
+                if fold_id == learner {
+                    continue;
+                }
+                for chunk in self.shuffled_batches(fold_id, batch, seed) {
+                    stats.points_streamed += chunk.len() as u64;
+                    consume(learner, &chunk);
+                    stats.deliveries += chunk.len() as u64;
+                }
+            }
+        }
+        stats
+    }
+
+    /// Batches of a fold in a per-fold deterministic shuffled order.
+    /// Both schedules use the same order — the validity condition from §1
+    /// ("first and foremost the validity of the transformation is
+    /// important"): each learner sees each fold's points in the same
+    /// sequence under either schedule.
+    fn shuffled_batches(&self, fold_id: usize, batch: usize, seed: u64)
+        -> Vec<Vec<usize>> {
+        let mut points = self.folds.test_indices(fold_id).to_vec();
+        Rng::new(seed ^ (fold_id as u64).wrapping_mul(0x9E37_79B9))
+            .shuffle(&mut points);
+        points.chunks(batch).map(|c| c.to_vec()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+    use crate::data::MixtureSpec;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+    use std::collections::HashMap;
+
+    fn toy_ds(n: usize) -> Dataset {
+        gaussian_mixture(MixtureSpec {
+            n, d: 4, classes: 2, separation: 1.0, noise: 1.0, seed: 3,
+        })
+    }
+
+    #[test]
+    fn shared_pass_reads_t_once() {
+        let ds = toy_ds(100);
+        let folds = Folds::split(ds.n, 5, 1);
+        let fs = FoldStream::new(&ds, &folds);
+        let stats = fs.shared_pass(8, 2, |_, _| {});
+        assert_eq!(stats.points_streamed, 100);
+        assert_eq!(stats.deliveries, 4 * 100);
+    }
+
+    #[test]
+    fn separate_pass_reads_k_minus_1_times() {
+        let ds = toy_ds(100);
+        let folds = Folds::split(ds.n, 5, 1);
+        let fs = FoldStream::new(&ds, &folds);
+        let stats = fs.separate_pass(8, 2, |_, _| {});
+        assert_eq!(stats.points_streamed, 4 * 100);
+        assert_eq!(stats.deliveries, 4 * 100);
+    }
+
+    #[test]
+    fn both_schedules_deliver_identical_streams() {
+        // The §1 validity criterion: per learner, the sequence of points
+        // delivered must be identical under both schedules (fold-major
+        // order, same per-fold shuffle).
+        check("fold-stream-validity", 10, |g| {
+            let k = g.usize_in(2, 5);
+            let n = k * g.usize_in(2, 10) * 4;
+            let ds = toy_ds(n);
+            let folds = Folds::split(n, k, g.u64());
+            let fs = FoldStream::new(&ds, &folds);
+            let batch = g.usize_in(1, 8);
+            let seed = g.u64();
+            let mut shared: HashMap<usize, Vec<usize>> = HashMap::new();
+            fs.shared_pass(batch, seed, |l, b| {
+                shared.entry(l).or_default().extend_from_slice(b);
+            });
+            let mut separate: HashMap<usize, Vec<usize>> = HashMap::new();
+            fs.separate_pass(batch, seed, |l, b| {
+                separate.entry(l).or_default().extend_from_slice(b);
+            });
+            prop_assert!(shared == separate,
+                "schedules delivered different streams (k={k}, n={n})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn every_learner_sees_exactly_its_training_folds() {
+        let ds = toy_ds(60);
+        let folds = Folds::split(ds.n, 3, 7);
+        let fs = FoldStream::new(&ds, &folds);
+        let mut per_learner: HashMap<usize, Vec<usize>> = HashMap::new();
+        fs.shared_pass(4, 9, |l, b| {
+            per_learner.entry(l).or_default().extend_from_slice(b);
+        });
+        for l in 0..3 {
+            let mut got = per_learner[&l].clone();
+            got.sort_unstable();
+            let mut want = folds.train_indices(l);
+            want.sort_unstable();
+            assert_eq!(got, want, "learner {l} stream mismatch");
+        }
+    }
+}

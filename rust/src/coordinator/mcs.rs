@@ -1,0 +1,111 @@
+//! Multiple-classifier system over ONE test stream (paper Figure 2 +
+//! §3.2): "a point from a stream of training points being used for
+//! comparison with 3 different models from different learning
+//! algorithms" — and, operationally, "classification inputs have to be
+//! passed through all the learners to get the final combined decision".
+//!
+//! Members are heterogeneous (naive Bayes + k-NN + PRW). The locality
+//! content: each test point is loaded once and immediately evaluated by
+//! *every* member (reuse distance ≈ 0 for the point across members), and
+//! the two instance-based members share one distance pass (§5.2).
+
+use crate::data::sampling::majority_vote;
+use crate::data::Dataset;
+use crate::learners::instance::{BANDWIDTH, K};
+use crate::learners::{joint_scan, NaiveBayes};
+
+/// A trained three-member system: NB model + the remembered training set
+/// for the instance-based members.
+pub struct MultiClassifier {
+    pub nb: NaiveBayes,
+    train: Dataset,
+    pub k: usize,
+    pub bandwidth: f32,
+}
+
+/// Per-member and combined predictions for one stream pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct McsPredictions {
+    pub nb: Vec<i32>,
+    pub knn: Vec<i32>,
+    pub prw: Vec<i32>,
+    pub vote: Vec<i32>,
+}
+
+impl MultiClassifier {
+    /// "Each of the learners must still be individually trained" — NB
+    /// fits its one-epoch statistics; the instance-based members just
+    /// remember T.
+    pub fn fit(train: &Dataset) -> Self {
+        Self {
+            nb: NaiveBayes::fit(train),
+            train: train.clone(),
+            k: K,
+            bandwidth: BANDWIDTH,
+        }
+    }
+
+    /// One pass over the test stream: every point is consumed by all
+    /// three members while resident (Fig 2), with k-NN and PRW sharing
+    /// the distance computation; the ensemble decision is a majority
+    /// vote with NB's posterior as the deterministic tiebreak order
+    /// (lowest class id wins ties, matching `majority_vote`).
+    pub fn predict(&self, rows: &[f32]) -> McsPredictions {
+        let nb = self.nb.predict(rows);
+        let (knn, prw) =
+            joint_scan(&self.train, rows, self.train.d, self.k,
+                       self.bandwidth);
+        let vote = majority_vote(
+            &[nb.clone(), knn.clone(), prw.clone()],
+            self.train.n_classes,
+        );
+        McsPredictions { nb, knn, prw, vote }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::chembl_like;
+    use crate::learners::{accuracy, knn_scan, prw_scan};
+
+    #[test]
+    fn members_match_standalone_learners() {
+        let (train, test) = chembl_like(320, 3).split(256);
+        let mcs = MultiClassifier::fit(&train);
+        let p = mcs.predict(&test.features);
+        assert_eq!(p.nb, mcs.nb.predict(&test.features));
+        assert_eq!(p.knn, knn_scan(&train, &test.features, test.d, K));
+        assert_eq!(p.prw,
+                   prw_scan(&train, &test.features, test.d, BANDWIDTH));
+    }
+
+    #[test]
+    fn vote_is_majority_of_members() {
+        let (train, test) = chembl_like(320, 5).split(256);
+        let p = MultiClassifier::fit(&train).predict(&test.features);
+        for i in 0..p.vote.len() {
+            let agree = [&p.nb, &p.knn, &p.prw]
+                .iter()
+                .filter(|m| m[i] == p.vote[i])
+                .count();
+            assert!(agree >= 2, "vote {i} is not a majority");
+        }
+    }
+
+    #[test]
+    fn ensemble_at_least_tracks_best_member() {
+        let (train, test) = chembl_like(640, 7).split(512);
+        let p = MultiClassifier::fit(&train).predict(&test.features);
+        let accs = [
+            accuracy(&p.nb, &test.labels),
+            accuracy(&p.knn, &test.labels),
+            accuracy(&p.prw, &test.labels),
+        ];
+        let vote_acc = accuracy(&p.vote, &test.labels);
+        let best = accs.iter().cloned().fold(0.0, f64::max);
+        assert!(vote_acc > best - 0.05,
+            "vote {vote_acc} collapsed below best member {best}");
+        assert!(vote_acc > 0.7, "vote accuracy {vote_acc}");
+    }
+}

@@ -1,0 +1,29 @@
+//! The locality-aware coordinator (DESIGN.md system S9) — the paper's
+//! contribution as a first-class system layer:
+//!
+//! * [`batcher`]        — shuffled epochs, zero-alloc batch assembly
+//! * [`sliding_window`] — SW-SGD's cached-window composition (§5.1)
+//! * [`train_loop`]     — the Fig 5 driver (optimizer × window sweep)
+//! * [`fold_stream`]    — Figure 1 fold streams for cross-validation
+//! * [`joint_exec`]     — Table 1 joint k-NN+PRW executor (§5.2)
+//! * [`scheduler`]      — learner-major ↔ data-major interchange (§3.2)
+
+pub mod batcher;
+pub mod ensemble;
+pub mod hyperparam;
+pub mod fold_stream;
+pub mod joint_exec;
+pub mod mcs;
+pub mod scheduler;
+pub mod sliding_window;
+pub mod train_loop;
+
+pub use batcher::{BatchBuffers, EpochBatcher};
+pub use ensemble::{BaggedNb, BoostedNb};
+pub use hyperparam::{silverman_bandwidth, sweep_naive, sweep_shared, SweepResult};
+pub use fold_stream::{FoldStream, PassStats};
+pub use joint_exec::{run_joint, run_separate, TimedRun};
+pub use mcs::{McsPredictions, MultiClassifier};
+pub use scheduler::{schedule, Order, Task};
+pub use sliding_window::SlidingWindow;
+pub use train_loop::{train_swsgd, train_swsgd_cv, TrainSpec};

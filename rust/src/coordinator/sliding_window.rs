@@ -1,0 +1,140 @@
+//! The SW-SGD sliding window (paper §5.1): "the basic idea of the SW-SGD
+//! is to also consider recently visited points in the computation of the
+//! gradient. The list of recently visited points is kept in a vector
+//! potentially saved in the cache memory."
+//!
+//! The window manager keeps the index lists of the last `w` minibatches
+//! and composes each training step's combined index list
+//! `[B fresh ‖ w·B cached]`.  During the first iterations the window is
+//! only partially filled, so the combined size ramps
+//! `B → 2B → … → (1+w)·B`; the AOT grad artifacts exist for each ramp size
+//! (`mlp_grad_b{128,256,384}`), so no padding or shape hacks are needed.
+
+use std::collections::VecDeque;
+
+/// Ring of the `w` most recent minibatches (index lists).
+#[derive(Debug)]
+pub struct SlidingWindow {
+    window: VecDeque<Vec<usize>>,
+    w: usize,
+    staging: Vec<usize>,
+}
+
+impl SlidingWindow {
+    /// `w` = number of *previous minibatches* reconsidered per step
+    /// (Fig 5 scenarios: w = 0, 1, 2).
+    pub fn new(w: usize, batch_hint: usize) -> Self {
+        Self {
+            window: VecDeque::with_capacity(w.max(1)),
+            w,
+            staging: Vec::with_capacity((w + 1) * batch_hint),
+        }
+    }
+
+    pub fn w(&self) -> usize {
+        self.w
+    }
+
+    /// Number of cached batches currently available (< w during ramp-up).
+    pub fn filled(&self) -> usize {
+        self.window.len()
+    }
+
+    /// Compose the combined index list for this step: the fresh batch
+    /// first, then the cached batches most-recent-first (the most recently
+    /// touched points are the ones the paper argues are cache-resident).
+    /// Then rotates `fresh` into the window. Returns the combined slice.
+    pub fn compose<'a>(&'a mut self, fresh: &[usize]) -> &'a [usize] {
+        self.staging.clear();
+        self.staging.extend_from_slice(fresh);
+        for cached in self.window.iter().rev() {
+            self.staging.extend_from_slice(cached);
+        }
+        if self.w > 0 {
+            if self.window.len() == self.w {
+                // reuse the oldest batch's allocation
+                let mut oldest = self.window.pop_front().unwrap();
+                oldest.clear();
+                oldest.extend_from_slice(fresh);
+                self.window.push_back(oldest);
+            } else {
+                self.window.push_back(fresh.to_vec());
+            }
+        }
+        &self.staging
+    }
+
+    /// Combined batch size after the ramp-up phase.
+    pub fn steady_size(&self, b: usize) -> usize {
+        (self.w + 1) * b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn w0_is_plain_minibatch() {
+        let mut sw = SlidingWindow::new(0, 4);
+        assert_eq!(sw.compose(&[1, 2, 3, 4]), &[1, 2, 3, 4]);
+        assert_eq!(sw.compose(&[5, 6, 7, 8]), &[5, 6, 7, 8]);
+        assert_eq!(sw.filled(), 0);
+    }
+
+    #[test]
+    fn ramp_up_then_steady_state() {
+        let mut sw = SlidingWindow::new(2, 2);
+        assert_eq!(sw.compose(&[1, 2]), &[1, 2]);
+        assert_eq!(sw.compose(&[3, 4]), &[3, 4, 1, 2]);
+        assert_eq!(sw.compose(&[5, 6]), &[5, 6, 3, 4, 1, 2]);
+        // steady: oldest batch [1,2] falls out
+        assert_eq!(sw.compose(&[7, 8]), &[7, 8, 5, 6, 3, 4]);
+        assert_eq!(sw.steady_size(2), 6);
+    }
+
+    #[test]
+    fn window_never_fabricates_points() {
+        check("window-conservation", 30, |g| {
+            let b = g.usize_in(1, 8);
+            let w = g.usize_in(0, 3);
+            let mut sw = SlidingWindow::new(w, b);
+            let mut issued: Vec<Vec<usize>> = Vec::new();
+            for step in 0..10 {
+                let fresh: Vec<usize> =
+                    (0..b).map(|i| step * b + i).collect();
+                issued.push(fresh.clone());
+                let combined = sw.compose(&fresh).to_vec();
+                // fresh points lead
+                prop_assert!(&combined[..b] == fresh.as_slice(),
+                    "fresh batch must lead the combined batch");
+                // every cached point came from one of the last w batches
+                let cached = &combined[b..];
+                prop_assert!(
+                    cached.len() == b * w.min(step),
+                    "cached size wrong at step {step}: {}", cached.len());
+                for &p in cached {
+                    let from_recent = issued
+                        .iter()
+                        .rev()
+                        .skip(1)
+                        .take(w)
+                        .any(|batch| batch.contains(&p));
+                    prop_assert!(from_recent,
+                        "point {p} not from the last {w} batches");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn most_recent_cached_batch_comes_first() {
+        let mut sw = SlidingWindow::new(2, 1);
+        sw.compose(&[1]);
+        sw.compose(&[2]);
+        assert_eq!(sw.compose(&[3]), &[3, 2, 1]);
+    }
+}

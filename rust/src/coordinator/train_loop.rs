@@ -1,0 +1,152 @@
+//! The Fig 5 training driver: SW-SGD over the paper's MLP, one curve per
+//! (optimizer × window scenario).
+//!
+//! Composition per step (all L3, zero python):
+//!   [`EpochBatcher`] fresh batch → [`SlidingWindow`] combined indices →
+//!   [`BatchBuffers`] gather → `mlp_grad_b{len}` artifact → rust optimizer.
+
+use anyhow::Result;
+
+use super::batcher::{BatchBuffers, EpochBatcher};
+use super::sliding_window::SlidingWindow;
+use crate::data::Dataset;
+use crate::learners::mlp::{self, MlpTrainer};
+use crate::metrics::LossCurve;
+use crate::opt::OptimizerKind;
+use crate::runtime::Engine;
+
+/// One Fig 5 training configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainSpec {
+    pub optimizer: OptimizerKind,
+    /// Learning rate; `None` = the optimizer's tuned default.
+    pub lr: Option<f32>,
+    /// SW-SGD window scenario: 0 (B new), 1 (B+B cached), 2 (B+2B cached).
+    pub window: usize,
+    /// Fresh-batch size B (paper: 128).
+    pub batch: usize,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl TrainSpec {
+    pub fn label(&self) -> String {
+        format!("{}-w{}", self.optimizer.name(), self.window)
+    }
+}
+
+/// Train the paper's MLP with SW-SGD and record the per-epoch curve.
+/// `val` is the held-out fold (its size must be a multiple of the eval
+/// tile, 256).
+pub fn train_swsgd(
+    engine: &mut Engine,
+    train: &Dataset,
+    val: &Dataset,
+    spec: &TrainSpec,
+) -> Result<LossCurve> {
+    assert_eq!(train.d, mlp::INPUT_DIM);
+    assert_eq!(train.n_classes, mlp::N_CLASSES);
+    let lr = spec.lr.unwrap_or_else(|| spec.optimizer.default_lr());
+    let mut trainer = MlpTrainer::new(spec.optimizer, lr, spec.seed);
+    let mut batcher = EpochBatcher::new(train.n, spec.batch, spec.seed ^ 1);
+    let mut window = SlidingWindow::new(spec.window, spec.batch);
+    let mut buffers = BatchBuffers::new(
+        (spec.window + 1) * spec.batch, train.d, train.n_classes);
+    let val_onehot = val.one_hot();
+
+    let mut curve = LossCurve::new(spec.label());
+    let steps_per_epoch = batcher.batches_per_epoch();
+    for epoch in 1..=spec.epochs {
+        let mut loss_sum = 0.0f64;
+        for _ in 0..steps_per_epoch {
+            let fresh = batcher.next_batch().to_vec();
+            let combined = window.compose(&fresh);
+            let n = buffers.gather(train, combined);
+            let (x, y) = buffers.slices(n);
+            // The combined loss is reported over fresh+cached points —
+            // exactly what the paper's Fig 5 y-axis ("cost") shows.
+            loss_sum += trainer.train_step(engine, n, x, y)? as f64;
+        }
+        let eval = trainer.evaluate(engine, &val.features, &val_onehot)?;
+        curve.push(epoch, loss_sum / steps_per_epoch as f64,
+                   eval.mean_loss);
+    }
+    Ok(curve)
+}
+
+/// Run one spec across all CV splits and average the curves (the paper:
+/// "All the results are averaged from 5-fold cross-validation runs").
+pub fn train_swsgd_cv(
+    engine: &mut Engine,
+    ds: &Dataset,
+    folds: &crate::data::Folds,
+    spec: &TrainSpec,
+) -> Result<LossCurve> {
+    let k = folds.k();
+    let mut avg: Vec<(usize, f64, f64)> = Vec::new();
+    for test_fold in 0..k {
+        let train = ds.gather(&folds.train_indices(test_fold));
+        let val = ds.gather(folds.test_indices(test_fold));
+        let mut fold_spec = *spec;
+        fold_spec.seed = spec.seed.wrapping_add(test_fold as u64);
+        let curve = train_swsgd(engine, &train, &val, &fold_spec)?;
+        if avg.is_empty() {
+            avg = curve.points.clone();
+        } else {
+            for (acc, p) in avg.iter_mut().zip(&curve.points) {
+                acc.1 += p.1;
+                acc.2 += p.2;
+            }
+        }
+    }
+    let mut curve = LossCurve::new(spec.label());
+    for (e, t, v) in avg {
+        curve.push(e, t / k as f64, v / k as f64);
+    }
+    Ok(curve)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::mnist_like;
+    use std::path::Path;
+
+    fn engine() -> Option<Engine> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.txt").exists()
+            .then(|| Engine::open(&dir).unwrap())
+    }
+
+    #[test]
+    fn spec_label() {
+        let s = TrainSpec {
+            optimizer: OptimizerKind::Adam,
+            lr: None,
+            window: 2,
+            batch: 128,
+            epochs: 1,
+            seed: 0,
+        };
+        assert_eq!(s.label(), "adam-w2");
+    }
+
+    #[test]
+    fn short_training_run_descends() {
+        let Some(mut e) = engine() else { return };
+        let (train, val) = mnist_like(1024 + 256, 42).split(1024);
+        let spec = TrainSpec {
+            optimizer: OptimizerKind::Adam,
+            lr: None,
+            window: 1,
+            batch: 128,
+            epochs: 3,
+            seed: 7,
+        };
+        let curve = train_swsgd(&mut e, &train, &val, &spec).unwrap();
+        assert_eq!(curve.points.len(), 3);
+        let first = curve.points.first().unwrap().1;
+        let last = curve.points.last().unwrap().1;
+        assert!(last < first, "train loss must fall: {first} -> {last}");
+    }
+}

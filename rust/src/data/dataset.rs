@@ -1,0 +1,137 @@
+//! In-memory dataset container: row-major f32 features + integer labels.
+//!
+//! Row-major layout is a deliberate locality decision: every learner in
+//! this crate streams whole training points (paper §3.3.1, Alg 8/13), so
+//! consecutive feature reads are consecutive addresses.
+
+/// A labelled dataset. Features are row-major `[n x d]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    pub features: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub d: usize,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(features: Vec<f32>, labels: Vec<i32>, d: usize,
+               n_classes: usize) -> Self {
+        assert_eq!(features.len() % d, 0, "features not a multiple of d");
+        let n = features.len() / d;
+        assert_eq!(labels.len(), n, "labels/features length mismatch");
+        debug_assert!(labels.iter().all(|&l| (l as usize) < n_classes));
+        Self { features, labels, n, d, n_classes }
+    }
+
+    /// Feature row of point `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.d..(i + 1) * self.d]
+    }
+
+    /// One-hot encode all labels into a row-major `[n x n_classes]` buffer.
+    pub fn one_hot(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.n * self.n_classes];
+        for (i, &l) in self.labels.iter().enumerate() {
+            out[i * self.n_classes + l as usize] = 1.0;
+        }
+        out
+    }
+
+    /// Labels mapped to {-1.0, +1.0} (binary learners; class 1 = +1).
+    pub fn signed_labels(&self) -> Vec<f32> {
+        assert_eq!(self.n_classes, 2, "signed labels need a binary problem");
+        self.labels.iter().map(|&l| if l == 1 { 1.0 } else { -1.0 }).collect()
+    }
+
+    /// Gather a sub-dataset by point indices (used by folds and samplers).
+    pub fn gather(&self, idx: &[usize]) -> Dataset {
+        let mut features = Vec::with_capacity(idx.len() * self.d);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            features.extend_from_slice(self.row(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset::new(features, labels, self.d, self.n_classes)
+    }
+
+    /// Per-class population counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+
+    /// Split into (first `n_train` points, rest) — used to carve test sets
+    /// out of one generated distribution.
+    pub fn split(&self, n_train: usize) -> (Dataset, Dataset) {
+        assert!(n_train <= self.n);
+        let train: Vec<usize> = (0..n_train).collect();
+        let test: Vec<usize> = (n_train..self.n).collect();
+        (self.gather(&train), self.gather(&test))
+    }
+
+    /// Memory footprint of the feature matrix in bytes.
+    pub fn feature_bytes(&self) -> usize {
+        self.features.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            vec![0, 1, 0],
+            2,
+            2,
+        )
+    }
+
+    #[test]
+    fn rows_and_shape() {
+        let ds = toy();
+        assert_eq!((ds.n, ds.d), (3, 2));
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn one_hot_rows_sum_to_one() {
+        let ds = toy();
+        let oh = ds.one_hot();
+        assert_eq!(oh.len(), 6);
+        assert_eq!(&oh[0..2], &[1.0, 0.0]);
+        assert_eq!(&oh[2..4], &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn signed_labels_map() {
+        assert_eq!(toy().signed_labels(), vec![-1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn gather_selects_rows() {
+        let ds = toy();
+        let sub = ds.gather(&[2, 0]);
+        assert_eq!(sub.n, 2);
+        assert_eq!(sub.row(0), &[5.0, 6.0]);
+        assert_eq!(sub.labels, vec![0, 0]);
+    }
+
+    #[test]
+    fn class_counts_sum_to_n() {
+        let ds = toy();
+        assert_eq!(ds.class_counts(), vec![2, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "labels/features")]
+    fn rejects_mismatched_lengths() {
+        Dataset::new(vec![0.0; 4], vec![0], 2, 2);
+    }
+}

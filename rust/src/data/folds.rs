@@ -1,0 +1,108 @@
+//! k-fold cross-validation partitioning (paper §3.1.1, Algorithm 4).
+
+use crate::util::Rng;
+
+/// A k-fold partition of `n` point indices.
+#[derive(Debug, Clone)]
+pub struct Folds {
+    pub folds: Vec<Vec<usize>>,
+}
+
+impl Folds {
+    /// Shuffled k-fold split. Sizes differ by at most one point.
+    pub fn split(n: usize, k: usize, seed: u64) -> Self {
+        assert!(k >= 2 && k <= n, "need 2 <= k <= n (k={k}, n={n})");
+        let mut order: Vec<usize> = (0..n).collect();
+        Rng::new(seed).shuffle(&mut order);
+        let base = n / k;
+        let extra = n % k;
+        let mut folds = Vec::with_capacity(k);
+        let mut cursor = 0;
+        for f in 0..k {
+            let size = base + usize::from(f < extra);
+            folds.push(order[cursor..cursor + size].to_vec());
+            cursor += size;
+        }
+        Self { folds }
+    }
+
+    pub fn k(&self) -> usize {
+        self.folds.len()
+    }
+
+    /// Training indices for CV split `test_fold` (all folds but that one),
+    /// in fold order — the deterministic order the fold-stream coordinator
+    /// relies on (paper Fig 1).
+    pub fn train_indices(&self, test_fold: usize) -> Vec<usize> {
+        self.folds
+            .iter()
+            .enumerate()
+            .filter(|(f, _)| *f != test_fold)
+            .flat_map(|(_, fold)| fold.iter().copied())
+            .collect()
+    }
+
+    pub fn test_indices(&self, test_fold: usize) -> &[usize] {
+        &self.folds[test_fold]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn partition_is_disjoint_and_complete() {
+        check("folds-partition", 50, |g| {
+            let k = g.usize_in(2, 8);
+            let n = g.usize_in(k, 200);
+            let folds = Folds::split(n, k, g.u64());
+            let mut all: Vec<usize> =
+                folds.folds.iter().flatten().copied().collect();
+            all.sort_unstable();
+            prop_assert!(all == (0..n).collect::<Vec<_>>(),
+                "not a partition: n={n} k={k}");
+            let sizes: Vec<usize> =
+                folds.folds.iter().map(|f| f.len()).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(),
+                            sizes.iter().max().unwrap());
+            prop_assert!(mx - mn <= 1, "unbalanced: {sizes:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn train_test_cover_everything() {
+        check("folds-train-test", 30, |g| {
+            let k = g.usize_in(2, 6);
+            let n = g.usize_in(k, 100);
+            let folds = Folds::split(n, k, g.u64());
+            for t in 0..k {
+                let mut both = folds.train_indices(t);
+                both.extend_from_slice(folds.test_indices(t));
+                both.sort_unstable();
+                prop_assert!(both == (0..n).collect::<Vec<_>>(),
+                    "split {t} loses points");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Folds::split(100, 5, 7);
+        let b = Folds::split(100, 5, 7);
+        assert_eq!(a.folds, b.folds);
+        assert_ne!(a.folds, Folds::split(100, 5, 8).folds);
+    }
+
+    #[test]
+    fn exact_division_mnist_geometry() {
+        // The E1 geometry: 6400 points, 5 folds of 1280 each.
+        let folds = Folds::split(6400, 5, 42);
+        assert!(folds.folds.iter().all(|f| f.len() == 1280));
+        assert_eq!(folds.train_indices(0).len(), 5120);
+    }
+}

@@ -1,0 +1,146 @@
+//! Binary on-disk dataset format (`.lmld`).
+//!
+//! Table 1 measures *load time* as a first-class quantity ("the time for
+//! loading the training and testing sets"), so datasets are materialised to
+//! disk and the joint-vs-separate experiment measures real I/O.
+//!
+//! Layout (little endian):
+//!
+//! ```text
+//! magic  b"LMLD"        4 bytes
+//! version u32           currently 1
+//! n      u64            number of points
+//! d      u64            features per point
+//! classes u32
+//! features n*d x f32
+//! labels  n x i32
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::dataset::Dataset;
+
+const MAGIC: &[u8; 4] = b"LMLD";
+const VERSION: u32 = 1;
+
+/// Write `ds` to `path` in `.lmld` format.
+pub fn write_dataset(ds: &Dataset, path: &Path) -> Result<()> {
+    let file = File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(ds.n as u64).to_le_bytes())?;
+    w.write_all(&(ds.d as u64).to_le_bytes())?;
+    w.write_all(&(ds.n_classes as u32).to_le_bytes())?;
+    // bulk-copy the feature matrix
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(
+            ds.features.as_ptr() as *const u8,
+            ds.features.len() * 4,
+        )
+    };
+    w.write_all(bytes)?;
+    let lbytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(
+            ds.labels.as_ptr() as *const u8,
+            ds.labels.len() * 4,
+        )
+    };
+    w.write_all(lbytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a `.lmld` dataset back.
+pub fn read_dataset(path: &Path) -> Result<Dataset> {
+    let file = File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not an LMLD file", path.display());
+    }
+    let mut u32buf = [0u8; 4];
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u32buf)?;
+    let version = u32::from_le_bytes(u32buf);
+    if version != VERSION {
+        bail!("{}: unsupported version {version}", path.display());
+    }
+    r.read_exact(&mut u64buf)?;
+    let n = u64::from_le_bytes(u64buf) as usize;
+    r.read_exact(&mut u64buf)?;
+    let d = u64::from_le_bytes(u64buf) as usize;
+    r.read_exact(&mut u32buf)?;
+    let classes = u32::from_le_bytes(u32buf) as usize;
+
+    let mut features = vec![0f32; n * d];
+    let fbytes: &mut [u8] = unsafe {
+        std::slice::from_raw_parts_mut(
+            features.as_mut_ptr() as *mut u8,
+            features.len() * 4,
+        )
+    };
+    r.read_exact(fbytes)?;
+    let mut labels = vec![0i32; n];
+    let lbytes: &mut [u8] = unsafe {
+        std::slice::from_raw_parts_mut(
+            labels.as_mut_ptr() as *mut u8,
+            labels.len() * 4,
+        )
+    };
+    r.read_exact(lbytes)?;
+    Ok(Dataset::new(features, labels, d, classes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::chembl_like;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("locality_ml_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_preserves_dataset() {
+        let ds = chembl_like(128, 5);
+        let path = tmp("roundtrip.lmld");
+        write_dataset(&ds, &path).unwrap();
+        let back = read_dataset(&path).unwrap();
+        assert_eq!(ds, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("garbage.lmld");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_dataset(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_error_not_panic() {
+        assert!(read_dataset(Path::new("/nonexistent/x.lmld")).is_err());
+    }
+
+    #[test]
+    fn file_size_matches_header_arithmetic() {
+        let ds = chembl_like(64, 6);
+        let path = tmp("size.lmld");
+        write_dataset(&ds, &path).unwrap();
+        let meta = std::fs::metadata(&path).unwrap();
+        let expect = 4 + 4 + 8 + 8 + 4 + (ds.n * ds.d * 4) + (ds.n * 4);
+        assert_eq!(meta.len() as usize, expect);
+        std::fs::remove_file(&path).ok();
+    }
+}

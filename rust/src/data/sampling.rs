@@ -1,0 +1,183 @@
+//! Sub-sampling and ensembling machinery: bootstrap (Alg 5), bagging
+//! (Alg 6) and boosting-style informative resampling (Alg 7).
+//!
+//! These drive the "General Reuse" experiments (§3): the samplers decide
+//! *which* training points each learner instance touches; the coordinator
+//! decides *in what order* so the reuse the paper identifies is realised.
+
+use crate::util::Rng;
+
+/// One bootstrap sample: `n` indices drawn with replacement from `[0, n)`.
+pub fn bootstrap_sample(n: usize, rng: &mut Rng) -> Vec<usize> {
+    (0..n).map(|_| rng.below(n)).collect()
+}
+
+/// Bagging (Alg 6): `m` bootstrap samples, one per learner instance.
+pub fn bagging_samples(n: usize, m: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(seed);
+    (0..m).map(|_| bootstrap_sample(n, &mut rng)).collect()
+}
+
+/// The three boosting training sets of Algorithm 7.
+#[derive(Debug, Clone)]
+pub struct BoostingSets {
+    /// S1: a random subset of T.
+    pub s1: Vec<usize>,
+    /// S2: half correctly / half incorrectly classified by M1.
+    pub s2: Vec<usize>,
+    /// S3: points where M1 and M2 disagree.
+    pub s3: Vec<usize>,
+}
+
+/// Build Algorithm 7's samples from the predictions of M1/M2.
+///
+/// * `labels`    — ground truth per point
+/// * `m1`, `m2`  — predictions of the first two models on all of T
+/// * `s1_size`, `s2_size` — sample sizes for the random and the
+///   half-informative sample respectively
+///
+/// S2 interleaves correct/incorrect points so that "for half of the samples
+/// M1 provides correct predictions, and for another half incorrect ones";
+/// if one side runs dry, S2 is truncated to balance (the paper's construct
+/// presumes both exist).
+pub fn boosting_sets(
+    labels: &[i32],
+    m1: &[i32],
+    m2: &[i32],
+    s1_size: usize,
+    s2_size: usize,
+    seed: u64,
+) -> BoostingSets {
+    assert_eq!(labels.len(), m1.len());
+    assert_eq!(labels.len(), m2.len());
+    let n = labels.len();
+    let mut rng = Rng::new(seed);
+
+    // S1: random subset without replacement.
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let s1 = order[..s1_size.min(n)].to_vec();
+
+    // S2: balanced correct/incorrect w.r.t. M1.
+    let mut correct: Vec<usize> =
+        (0..n).filter(|&i| m1[i] == labels[i]).collect();
+    let mut wrong: Vec<usize> =
+        (0..n).filter(|&i| m1[i] != labels[i]).collect();
+    rng.shuffle(&mut correct);
+    rng.shuffle(&mut wrong);
+    let half = (s2_size / 2).min(correct.len()).min(wrong.len());
+    let mut s2 = Vec::with_capacity(2 * half);
+    for i in 0..half {
+        s2.push(correct[i]);
+        s2.push(wrong[i]);
+    }
+
+    // S3: disagreement set.
+    let s3 = (0..n).filter(|&i| m1[i] != m2[i]).collect();
+
+    BoostingSets { s1, s2, s3 }
+}
+
+/// Majority vote across an ensemble's predictions (bagging / boosting /
+/// multiple-classifier systems, §3.2). Ties break toward the lower class id
+/// (deterministic).
+pub fn majority_vote(predictions: &[Vec<i32>], n_classes: usize) -> Vec<i32> {
+    assert!(!predictions.is_empty());
+    let n = predictions[0].len();
+    assert!(predictions.iter().all(|p| p.len() == n));
+    (0..n)
+        .map(|i| {
+            let mut counts = vec![0usize; n_classes];
+            for p in predictions {
+                counts[p[i] as usize] += 1;
+            }
+            counts
+                .iter()
+                .enumerate()
+                .max_by_key(|(c, &count)| (count, std::cmp::Reverse(*c)))
+                .unwrap()
+                .0 as i32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn bootstrap_size_and_range() {
+        check("bootstrap-range", 30, |g| {
+            let n = g.usize_in(1, 500);
+            let mut rng = Rng::new(g.u64());
+            let s = bootstrap_sample(n, &mut rng);
+            prop_assert!(s.len() == n, "wrong size");
+            prop_assert!(s.iter().all(|&i| i < n), "index out of range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bootstrap_distinct_fraction() {
+        // E[distinct]/n -> 1 - 1/e ≈ 0.632 (the paper's §3.1.2 premise that
+        // "a single sample can be encountered in different bootstrap
+        // samples and at different stages within the same bootstrap").
+        let mut rng = Rng::new(3);
+        let n = 2000;
+        let mut fracs = Vec::new();
+        for _ in 0..10 {
+            let s = bootstrap_sample(n, &mut rng);
+            let mut u = s.clone();
+            u.sort_unstable();
+            u.dedup();
+            fracs.push(u.len() as f64 / n as f64);
+        }
+        let mean = fracs.iter().sum::<f64>() / fracs.len() as f64;
+        assert!((mean - 0.632).abs() < 0.02, "mean distinct frac {mean}");
+    }
+
+    #[test]
+    fn bagging_is_deterministic_and_independent() {
+        let a = bagging_samples(100, 5, 7);
+        let b = bagging_samples(100, 5, 7);
+        assert_eq!(a, b);
+        assert_ne!(a[0], a[1], "samples must differ between learners");
+    }
+
+    #[test]
+    fn boosting_s2_is_half_correct() {
+        let labels = vec![0, 0, 0, 0, 1, 1, 1, 1];
+        let m1 = vec![0, 0, 1, 1, 1, 1, 0, 0]; // correct on 0,1,4,5
+        let m2 = vec![0, 1, 1, 0, 1, 0, 0, 1];
+        let sets = boosting_sets(&labels, &m1, &m2, 4, 4, 1);
+        assert_eq!(sets.s1.len(), 4);
+        assert_eq!(sets.s2.len(), 4);
+        let correct = sets.s2.iter()
+            .filter(|&&i| m1[i] == labels[i]).count();
+        assert_eq!(correct, 2, "exactly half correct");
+        // S3 = disagreement set of m1/m2
+        for &i in &sets.s3 {
+            assert_ne!(m1[i], m2[i]);
+        }
+        assert_eq!(sets.s3.len(),
+                   (0..8).filter(|&i| m1[i] != m2[i]).count());
+    }
+
+    #[test]
+    fn majority_vote_takes_mode() {
+        let preds = vec![
+            vec![0, 1, 2],
+            vec![0, 1, 1],
+            vec![1, 1, 2],
+        ];
+        assert_eq!(majority_vote(&preds, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn majority_vote_three_way_split_breaks_low() {
+        let preds = vec![vec![2], vec![1], vec![0]];
+        assert_eq!(majority_vote(&preds, 3), vec![0]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Synthetic dataset generators — the substitutes for the paper's MNIST
+//! (§5.1) and Chembl (§5.2) workloads (DESIGN.md §6).
+//!
+//! Both are deterministic class-conditional Gaussian mixtures: the Fig 5 /
+//! Table 1 experiments measure *relative* convergence and timing effects,
+//! which only require a learnable problem of the right shape, not the
+//! original corpora.
+
+use super::dataset::Dataset;
+use crate::util::Rng;
+
+/// Parameters for a Gaussian-mixture classification dataset.
+#[derive(Debug, Clone, Copy)]
+pub struct MixtureSpec {
+    pub n: usize,
+    pub d: usize,
+    pub classes: usize,
+    /// Distance scale of the class means (higher = easier problem).
+    pub separation: f32,
+    /// Per-sample isotropic noise.
+    pub noise: f32,
+    pub seed: u64,
+}
+
+/// Draw a dataset from class-conditional Gaussians with random means.
+/// Labels cycle deterministically so class sizes are balanced to ±1.
+pub fn gaussian_mixture(spec: MixtureSpec) -> Dataset {
+    let MixtureSpec { n, d, classes, separation, noise, seed } = spec;
+    let mut rng = Rng::new(seed);
+    // class means
+    let means: Vec<Vec<f32>> = (0..classes)
+        .map(|_| (0..d).map(|_| separation * rng.normal()).collect())
+        .collect();
+    let mut features = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    // Shuffled but balanced class assignment.
+    let mut order: Vec<i32> = (0..n).map(|i| (i % classes) as i32).collect();
+    rng.shuffle(&mut order);
+    for &class in &order {
+        let mean = &means[class as usize];
+        for &mu in mean.iter() {
+            features.push(mu + noise * rng.normal());
+        }
+        labels.push(class);
+    }
+    Dataset::new(features, labels, d, classes)
+}
+
+/// Synthetic MNIST-like problem (Fig 5 / E1): 784-d, 10 classes.
+/// `separation`/`noise` are tuned so the paper's MLP neither solves it in
+/// two epochs nor stalls — the Fig 5 comparison needs a visible
+/// convergence slope over ~30 epochs.
+pub fn mnist_like(n: usize, seed: u64) -> Dataset {
+    gaussian_mixture(MixtureSpec {
+        n,
+        d: 784,
+        classes: 10,
+        separation: 0.18,
+        noise: 1.0,
+        seed,
+    })
+}
+
+/// Synthetic Chembl-like problem (Table 1 / E2): 128-d fingerprints,
+/// binary activity label. The instance-based learners need cluster
+/// structure, which the two Gaussian blobs provide.
+pub fn chembl_like(n: usize, seed: u64) -> Dataset {
+    gaussian_mixture(MixtureSpec {
+        n,
+        d: 128,
+        classes: 2,
+        separation: 0.35,
+        noise: 1.0,
+        seed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = mnist_like(64, 9);
+        let b = mnist_like(64, 9);
+        assert_eq!(a, b);
+        let c = mnist_like(64, 10);
+        assert_ne!(a.features, c.features);
+    }
+
+    #[test]
+    fn shapes_and_balance() {
+        let ds = mnist_like(100, 1);
+        assert_eq!((ds.n, ds.d, ds.n_classes), (100, 784, 10));
+        let counts = ds.class_counts();
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+    }
+
+    #[test]
+    fn chembl_is_binary_and_shaped() {
+        let ds = chembl_like(50, 2);
+        assert_eq!((ds.d, ds.n_classes), (128, 2));
+        assert!(ds.labels.iter().all(|&l| l == 0 || l == 1));
+    }
+
+    #[test]
+    fn classes_are_separated_in_feature_space() {
+        // Mean intra-class distance must undercut inter-class distance,
+        // otherwise k-NN/PRW accuracy on this data is meaningless.
+        let ds = chembl_like(200, 3);
+        let centroid = |class: i32| -> Vec<f32> {
+            let mut c = vec![0.0f64; ds.d];
+            let mut count = 0.0;
+            for i in 0..ds.n {
+                if ds.labels[i] == class {
+                    for (j, &v) in ds.row(i).iter().enumerate() {
+                        c[j] += v as f64;
+                    }
+                    count += 1.0;
+                }
+            }
+            c.iter().map(|&v| (v / count) as f32).collect()
+        };
+        let c0 = centroid(0);
+        let c1 = centroid(1);
+        let dist: f32 = c0.iter().zip(&c1).map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>().sqrt();
+        assert!(dist > 2.0, "centroid distance too small: {dist}");
+    }
+
+    #[test]
+    fn noise_scales_spread() {
+        let tight = gaussian_mixture(MixtureSpec {
+            n: 100, d: 8, classes: 2, separation: 0.5, noise: 0.01, seed: 4,
+        });
+        let loose = gaussian_mixture(MixtureSpec {
+            n: 100, d: 8, classes: 2, separation: 0.5, noise: 2.0, seed: 4,
+        });
+        let spread = |ds: &Dataset| -> f64 {
+            let mean: f64 = ds.features.iter().map(|&v| v as f64).sum::<f64>()
+                / ds.features.len() as f64;
+            ds.features.iter()
+                .map(|&v| (v as f64 - mean).powi(2))
+                .sum::<f64>() / ds.features.len() as f64
+        };
+        assert!(spread(&loose) > spread(&tight));
+    }
+}

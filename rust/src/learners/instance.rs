@@ -1,0 +1,268 @@
+//! Instance-based learners: k-NN (Alg 10) and the Parzen–Rosenblatt window
+//! (Alg 11), in two executable forms:
+//!
+//! * **artifact-backed** — the `knn_only` / `prw_only` / `knn_prw_joint`
+//!   graphs, streamed over device-resident training data (the Table 1
+//!   measurement path; see `coordinator::joint_exec`).
+//! * **pure-rust scans** — literal Algorithm 10/11 loops, used as the
+//!   cross-check oracle for the artifacts and as the trace source for the
+//!   locality analyses.
+//!
+//! Hyperparameters (k = 5, Gaussian bandwidth h = 8) mirror
+//! `python/compile/shapes.py`.
+
+use crate::data::Dataset;
+
+/// k for the k-NN vote (shapes.KNN_K).
+pub const K: usize = 5;
+/// Gaussian bandwidth for PRW (shapes.PRW_BANDWIDTH).
+pub const BANDWIDTH: f32 = 8.0;
+
+/// Squared Euclidean distance between two feature rows.
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// Pure-rust k-NN classification scan (Algorithm 10, verbatim structure).
+/// Tie-breaking matches the artifact: neighbours ranked by (distance,
+/// index), class vote ties go to the lower class id.
+pub fn knn_scan(train: &Dataset, test_rows: &[f32], d: usize, k: usize)
+    -> Vec<i32> {
+    assert_eq!(d, train.d);
+    let n_test = test_rows.len() / d;
+    let mut preds = Vec::with_capacity(n_test);
+    for q in 0..n_test {
+        let qrow = &test_rows[q * d..(q + 1) * d];
+        // list of k nearest: (dist, index), kept sorted ascending
+        let mut nearest: Vec<(f32, usize)> = Vec::with_capacity(k + 1);
+        for j in 0..train.n {
+            let dist = sq_dist(qrow, train.row(j));
+            if nearest.len() < k
+                || dist < nearest.last().unwrap().0 {
+                let pos = nearest
+                    .iter()
+                    .position(|&(nd, _)| dist < nd)
+                    .unwrap_or(nearest.len());
+                nearest.insert(pos, (dist, j));
+                if nearest.len() > k {
+                    nearest.pop();
+                }
+            }
+        }
+        let mut votes = vec![0usize; train.n_classes];
+        for &(_, j) in &nearest {
+            votes[train.labels[j] as usize] += 1;
+        }
+        let best = votes
+            .iter()
+            .enumerate()
+            .max_by_key(|(c, &v)| (v, std::cmp::Reverse(*c)))
+            .unwrap()
+            .0;
+        preds.push(best as i32);
+    }
+    preds
+}
+
+/// Pure-rust PRW classification scan (Algorithm 11): every training point
+/// contributes a Gaussian-kernel weight to its class total.
+pub fn prw_scan(train: &Dataset, test_rows: &[f32], d: usize,
+                bandwidth: f32) -> Vec<i32> {
+    assert_eq!(d, train.d);
+    let n_test = test_rows.len() / d;
+    let inv = 1.0f64 / (2.0 * bandwidth as f64 * bandwidth as f64);
+    let mut preds = Vec::with_capacity(n_test);
+    for q in 0..n_test {
+        let qrow = &test_rows[q * d..(q + 1) * d];
+        // Row-min shift: identical to the artifact's stabilisation, and
+        // required so exp() does not underflow to an all-zero vote.
+        let mut dists = Vec::with_capacity(train.n);
+        let mut dmin = f64::INFINITY;
+        for j in 0..train.n {
+            let dist = sq_dist(qrow, train.row(j)) as f64;
+            dmin = dmin.min(dist);
+            dists.push(dist);
+        }
+        let mut scores = vec![0.0f64; train.n_classes];
+        for j in 0..train.n {
+            scores[train.labels[j] as usize] +=
+                (-(dists[j] - dmin) * inv).exp();
+        }
+        let best = scores
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .map(|(c, _)| c)
+            .unwrap();
+        preds.push(best as i32);
+    }
+    preds
+}
+
+/// Joint scan (§5.2): ONE pass computing each distance once, feeding both
+/// learners — the pure-rust mirror of the `knn_prw_joint` artifact.
+pub fn joint_scan(train: &Dataset, test_rows: &[f32], d: usize, k: usize,
+                  bandwidth: f32) -> (Vec<i32>, Vec<i32>) {
+    assert_eq!(d, train.d);
+    let n_test = test_rows.len() / d;
+    let inv = 1.0f64 / (2.0 * bandwidth as f64 * bandwidth as f64);
+    let mut knn = Vec::with_capacity(n_test);
+    let mut prw = Vec::with_capacity(n_test);
+    let mut dists = vec![0.0f32; train.n];
+    for q in 0..n_test {
+        let qrow = &test_rows[q * d..(q + 1) * d];
+        // one distance pass, shared by both learners
+        let mut dmin = f64::INFINITY;
+        for j in 0..train.n {
+            let dist = sq_dist(qrow, train.row(j));
+            dists[j] = dist;
+            dmin = dmin.min(dist as f64);
+        }
+        // k-NN consumer
+        let mut nearest: Vec<(f32, usize)> = Vec::with_capacity(k + 1);
+        for j in 0..train.n {
+            let dist = dists[j];
+            if nearest.len() < k || dist < nearest.last().unwrap().0 {
+                let pos = nearest
+                    .iter()
+                    .position(|&(nd, _)| dist < nd)
+                    .unwrap_or(nearest.len());
+                nearest.insert(pos, (dist, j));
+                if nearest.len() > k {
+                    nearest.pop();
+                }
+            }
+        }
+        let mut votes = vec![0usize; train.n_classes];
+        for &(_, j) in &nearest {
+            votes[train.labels[j] as usize] += 1;
+        }
+        knn.push(votes.iter().enumerate()
+            .max_by_key(|(c, &v)| (v, std::cmp::Reverse(*c)))
+            .unwrap().0 as i32);
+        // PRW consumer
+        let mut scores = vec![0.0f64; train.n_classes];
+        for j in 0..train.n {
+            scores[train.labels[j] as usize] +=
+                (-(dists[j] as f64 - dmin) * inv).exp();
+        }
+        prw.push(scores.iter().enumerate()
+            .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .map(|(c, _)| c).unwrap() as i32);
+    }
+    (knn, prw)
+}
+
+/// Classification accuracy helper.
+pub fn accuracy(pred: &[i32], truth: &[i32]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(truth).filter(|(p, t)| p == t).count() as f64
+        / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::chembl_like;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn knn_hand_case() {
+        let train = Dataset::new(
+            vec![0.0, 0.1, 0.2, 10.0, 10.1, 10.2],
+            vec![0, 0, 0, 1, 1, 1],
+            1,
+            2,
+        );
+        let preds = knn_scan(&train, &[0.05, 10.05], 1, 5);
+        assert_eq!(preds, vec![0, 1]);
+    }
+
+    #[test]
+    fn prw_hand_case() {
+        let train = Dataset::new(
+            vec![0.0, 0.2, 50.0, 50.2],
+            vec![0, 0, 1, 1],
+            1,
+            2,
+        );
+        let preds = prw_scan(&train, &[0.1, 50.1], 1, 8.0);
+        assert_eq!(preds, vec![0, 1]);
+    }
+
+    #[test]
+    fn joint_equals_separate_scans() {
+        check("joint-vs-separate", 15, |g| {
+            let n = g.usize_in(K, 60);
+            let t = g.usize_in(1, 10);
+            let d = g.usize_in(1, 8);
+            let mut features = g.f32_vec(n * d, 3.0);
+            let labels: Vec<i32> =
+                (0..n).map(|_| g.usize_in(0, 1) as i32).collect();
+            let train = Dataset::new(std::mem::take(&mut features), labels,
+                                     d, 2);
+            let test = g.f32_vec(t * d, 3.0);
+            let (kj, pj) = joint_scan(&train, &test, d, K, BANDWIDTH);
+            prop_assert!(kj == knn_scan(&train, &test, d, K),
+                "knn mismatch");
+            prop_assert!(pj == prw_scan(&train, &test, d, BANDWIDTH),
+                "prw mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn knn_k1_returns_nearest_label() {
+        check("knn-k1", 20, |g| {
+            let n = g.usize_in(1, 40);
+            let d = g.usize_in(1, 6);
+            let features = g.f32_vec(n * d, 2.0);
+            let labels: Vec<i32> =
+                (0..n).map(|_| g.usize_in(0, 2) as i32).collect();
+            let train = Dataset::new(features, labels.clone(), d, 3);
+            let q = g.f32_vec(d, 2.0);
+            let pred = knn_scan(&train, &q, d, 1)[0];
+            // brute-force nearest (ties by lowest index, like the scan)
+            let mut best = (f32::INFINITY, 0usize);
+            for j in 0..n {
+                let dist = sq_dist(&q, train.row(j));
+                if dist < best.0 {
+                    best = (dist, j);
+                }
+            }
+            prop_assert!(pred == labels[best.1],
+                "k=1 must return the nearest point's label");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn learners_beat_chance_on_clustered_data() {
+        // Train and test must come from the SAME mixture (same seed draws
+        // the class means); carve the test set off one generated dataset.
+        let (train, test) = chembl_like(500, 1).split(400);
+        let knn = knn_scan(&train, &test.features, test.d, K);
+        let prw = prw_scan(&train, &test.features, test.d, BANDWIDTH);
+        assert!(accuracy(&knn, &test.labels) > 0.7,
+            "knn acc {}", accuracy(&knn, &test.labels));
+        assert!(accuracy(&prw, &test.labels) > 0.6,
+            "prw acc {}", accuracy(&prw, &test.labels));
+    }
+
+    #[test]
+    fn accuracy_helper() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+}

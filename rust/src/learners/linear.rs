@@ -1,0 +1,209 @@
+//! Coupled linear models: logistic regression + primal SVM (paper §4.3).
+//!
+//! Pure-rust reference steps mirroring the `linear_coupled` / `linear_lr`
+//! / `linear_svm` artifacts — used for cross-checking the AOT graphs and
+//! for trace-based locality analysis of the coupling transform (E8).
+//! Labels are ±1; hyperparameters mirror python shapes.py.
+
+/// Default step size (shapes.LINEAR_LR).
+pub const LR: f32 = 0.1;
+/// SVM L2 regularisation weight (shapes.LINEAR_LAMBDA).
+pub const LAMBDA: f32 = 1e-3;
+
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// One logistic-regression minibatch step. Returns (new w, mean loss).
+pub fn lr_step(w: &[f32], x: &[f32], y: &[f32], lr: f32)
+    -> (Vec<f32>, f32) {
+    let d = w.len();
+    let b = y.len();
+    assert_eq!(x.len(), b * d);
+    let mut grad = vec![0.0f32; d];
+    let mut loss = 0.0f32;
+    for i in 0..b {
+        let row = &x[i * d..(i + 1) * d];
+        let p: f32 = row.iter().zip(w).map(|(a, b)| a * b).sum();
+        let m = -y[i] * p;
+        loss += m.max(0.0) + (-m.abs()).exp().ln_1p();
+        let r = -y[i] * sigmoid(m);
+        for (g, &v) in grad.iter_mut().zip(row) {
+            *g += r * v;
+        }
+    }
+    let scale = lr / b as f32;
+    let w2: Vec<f32> = w.iter().zip(&grad).map(|(w, g)| w - scale * g)
+        .collect();
+    (w2, loss / b as f32)
+}
+
+/// One primal-SVM (hinge + L2) subgradient step. Returns (new w, loss).
+pub fn svm_step(w: &[f32], x: &[f32], y: &[f32], lr: f32, lam: f32)
+    -> (Vec<f32>, f32) {
+    let d = w.len();
+    let b = y.len();
+    assert_eq!(x.len(), b * d);
+    let mut grad = vec![0.0f32; d];
+    let mut loss = 0.0f32;
+    for i in 0..b {
+        let row = &x[i * d..(i + 1) * d];
+        let p: f32 = row.iter().zip(w).map(|(a, b)| a * b).sum();
+        let margin = 1.0 - y[i] * p;
+        if margin > 0.0 {
+            loss += margin;
+            for (g, &v) in grad.iter_mut().zip(row) {
+                *g += -y[i] * v;
+            }
+        }
+    }
+    let wsq: f32 = w.iter().map(|v| v * v).sum();
+    loss = loss / b as f32 + 0.5 * lam * wsq;
+    let scale = lr / b as f32;
+    let w2: Vec<f32> = w
+        .iter()
+        .zip(&grad)
+        .map(|(w, g)| w - scale * g - lr * lam * w)
+        .collect();
+    (w2, loss)
+}
+
+/// The §4.3 coupling: both models updated from ONE traversal of the batch.
+/// Each training row is read once; both inner products and both gradient
+/// contributions happen "in a feature-by-feature way" on that single read.
+/// Returns ((w_lr, lr loss), (w_svm, svm loss)).
+pub fn coupled_step(
+    w_lr: &[f32],
+    w_svm: &[f32],
+    x: &[f32],
+    y: &[f32],
+    lr: f32,
+    lam: f32,
+) -> ((Vec<f32>, f32), (Vec<f32>, f32)) {
+    let d = w_lr.len();
+    assert_eq!(w_svm.len(), d);
+    let b = y.len();
+    assert_eq!(x.len(), b * d);
+    let mut g_lr = vec![0.0f32; d];
+    let mut g_svm = vec![0.0f32; d];
+    let mut loss_lr = 0.0f32;
+    let mut loss_svm = 0.0f32;
+    for i in 0..b {
+        let row = &x[i * d..(i + 1) * d];
+        // one pass over the row computes BOTH inner products
+        let mut p_lr = 0.0f32;
+        let mut p_svm = 0.0f32;
+        for f in 0..d {
+            p_lr += row[f] * w_lr[f];
+            p_svm += row[f] * w_svm[f];
+        }
+        let m = -y[i] * p_lr;
+        loss_lr += m.max(0.0) + (-m.abs()).exp().ln_1p();
+        let r_lr = -y[i] * sigmoid(m);
+        let margin = 1.0 - y[i] * p_svm;
+        let r_svm = if margin > 0.0 {
+            loss_svm += margin;
+            -y[i]
+        } else {
+            0.0
+        };
+        // one more pass accumulates BOTH gradients
+        for f in 0..d {
+            g_lr[f] += r_lr * row[f];
+            g_svm[f] += r_svm * row[f];
+        }
+    }
+    let wsq: f32 = w_svm.iter().map(|v| v * v).sum();
+    loss_lr /= b as f32;
+    loss_svm = loss_svm / b as f32 + 0.5 * lam * wsq;
+    let scale = lr / b as f32;
+    let w_lr2: Vec<f32> = w_lr.iter().zip(&g_lr)
+        .map(|(w, g)| w - scale * g).collect();
+    let w_svm2: Vec<f32> = w_svm.iter().zip(&g_svm)
+        .map(|(w, g)| w - scale * g - lr * lam * w).collect();
+    ((w_lr2, loss_lr), (w_svm2, loss_svm))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn coupled_equals_separate() {
+        check("linear-coupled-vs-separate", 25, |g| {
+            let d = g.usize_in(1, 16);
+            let b = g.usize_in(1, 24);
+            let w0 = g.f32_vec(d, 1.0);
+            let w1 = g.f32_vec(d, 1.0);
+            let x = g.f32_vec(b * d, 2.0);
+            let y: Vec<f32> = (0..b)
+                .map(|_| if g.bool() { 1.0 } else { -1.0 })
+                .collect();
+            let ((wl, ll), (ws, ls)) =
+                coupled_step(&w0, &w1, &x, &y, LR, LAMBDA);
+            let (wl2, ll2) = lr_step(&w0, &x, &y, LR);
+            let (ws2, ls2) = svm_step(&w1, &x, &y, LR, LAMBDA);
+            for f in 0..d {
+                prop_assert!((wl[f] - wl2[f]).abs() < 1e-5,
+                    "lr weight {f} differs");
+                prop_assert!((ws[f] - ws2[f]).abs() < 1e-5,
+                    "svm weight {f} differs");
+            }
+            prop_assert!((ll - ll2).abs() < 1e-5, "lr loss differs");
+            prop_assert!((ls - ls2).abs() < 1e-5, "svm loss differs");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lr_loss_at_zero_weights_is_ln2() {
+        let (_, loss) = lr_step(&[0.0; 4], &[1.0; 8], &[1.0, -1.0], 0.1);
+        assert!((loss - std::f32::consts::LN_2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn svm_correct_side_no_hinge_gradient() {
+        // Point well inside the margin: only weight decay moves w.
+        let w = vec![10.0, 0.0];
+        let (w2, loss) = svm_step(&w, &[1.0, 0.0], &[1.0], 0.1, 0.0);
+        assert_eq!(w2, w, "no decay, no hinge: w unchanged");
+        assert!((loss - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn training_separates_separable_data() {
+        let mut g = crate::util::prop::Gen::new(12);
+        let d = 8;
+        let w_true = g.f32_vec(d, 1.0);
+        let n = 128;
+        let x = g.f32_vec(n * d, 1.0);
+        let y: Vec<f32> = (0..n)
+            .map(|i| {
+                let p: f32 = (0..d).map(|f| x[i * d + f] * w_true[f]).sum();
+                if p >= 0.0 { 1.0 } else { -1.0 }
+            })
+            .collect();
+        let mut w_lr = vec![0.0f32; d];
+        let mut w_svm = vec![0.0f32; d];
+        let mut first = None;
+        let mut last = (0.0, 0.0);
+        for _ in 0..60 {
+            let ((wl, ll), (ws, ls)) =
+                coupled_step(&w_lr, &w_svm, &x, &y, 0.5, 1e-4);
+            w_lr = wl;
+            w_svm = ws;
+            first.get_or_insert((ll, ls));
+            last = (ll, ls);
+        }
+        let first = first.unwrap();
+        assert!(last.0 < first.0 && last.1 < first.1,
+            "losses must fall: {first:?} -> {last:?}");
+        let acc = y.iter().enumerate().filter(|(i, &yy)| {
+            let p: f32 = (0..d).map(|f| x[i * d + f] * w_lr[f]).sum();
+            (p >= 0.0) == (yy > 0.0)
+        }).count() as f64 / n as f64;
+        assert!(acc > 0.9, "accuracy {acc}");
+    }
+}

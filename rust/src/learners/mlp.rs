@@ -1,0 +1,193 @@
+//! The paper's §5.1 neural network, trained from rust through the AOT'd
+//! gradient artifacts (`mlp_grad_b{128,256,384}`) with rust-side
+//! optimizers.
+//!
+//! The network is "a neural network with 3 layers and 100 hidden units
+//! each": 784 → 100 → 100 → 100 → 10, ReLU hidden activations, softmax
+//! cross-entropy loss. Parameters live as one flat f32 vector whose layout
+//! matches `python/compile/model.py::unflatten` exactly.
+
+use anyhow::{bail, Result};
+
+use crate::opt::{Optimizer, OptimizerKind};
+use crate::runtime::{Engine, Input};
+use crate::util::Rng;
+
+/// (fan_in, fan_out) per layer — keep in sync with python shapes.MLP_LAYERS.
+pub const LAYERS: [(usize, usize); 4] =
+    [(784, 100), (100, 100), (100, 100), (100, 10)];
+
+/// Total flat parameter count (weights + biases): 99 710.
+pub const N_PARAMS: usize = 78_500 + 10_100 + 10_100 + 1_010;
+
+/// Input feature dimension / class count.
+pub const INPUT_DIM: usize = 784;
+pub const N_CLASSES: usize = 10;
+/// Evaluation artifact tile size (shapes.EVAL_TILE).
+pub const EVAL_TILE: usize = 256;
+
+/// He-initialised flat parameter vector (layout: per layer W then b).
+pub fn init_params(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut theta = Vec::with_capacity(N_PARAMS);
+    for (m, n) in LAYERS {
+        let scale = (2.0f32 / m as f32).sqrt();
+        for _ in 0..m * n {
+            theta.push(scale * rng.normal());
+        }
+        theta.extend(std::iter::repeat(0.0).take(n));
+    }
+    debug_assert_eq!(theta.len(), N_PARAMS);
+    theta
+}
+
+/// An MLP under training: flat parameters + optimizer state.
+pub struct MlpTrainer {
+    pub theta: Vec<f32>,
+    pub optimizer: Optimizer,
+}
+
+impl MlpTrainer {
+    pub fn new(kind: OptimizerKind, lr: f32, seed: u64) -> Self {
+        Self {
+            theta: init_params(seed),
+            optimizer: kind.build(lr, N_PARAMS),
+        }
+    }
+
+    /// One combined-batch gradient step. `x` is row-major `[b x 784]`,
+    /// `y_onehot` `[b x 10]`; `b` selects the artifact (`mlp_grad_b{b}`).
+    /// Returns the batch loss.
+    pub fn train_step(
+        &mut self,
+        engine: &mut Engine,
+        b: usize,
+        x: &[f32],
+        y_onehot: &[f32],
+    ) -> Result<f32> {
+        if x.len() != b * INPUT_DIM || y_onehot.len() != b * N_CLASSES {
+            bail!("batch buffers do not match b={b}");
+        }
+        let name = format!("mlp_grad_b{b}");
+        // Hot path: borrowed slices go straight to device buffers — one
+        // host→device copy per tensor, no clone, no Literal intermediate
+        // (EXPERIMENTS.md §Perf, L3 iteration 1).
+        let out = engine.execute_mixed(&name, &[
+            Input::Slice(&self.theta, &[N_PARAMS]),
+            Input::Slice(x, &[b, INPUT_DIM]),
+            Input::Slice(y_onehot, &[b, N_CLASSES]),
+        ])?;
+        let loss = out[0].scalar()?;
+        let grad = out[1].as_f32()?;
+        self.optimizer.step(&mut self.theta, grad);
+        Ok(loss)
+    }
+
+    /// Mean loss + accuracy over a full evaluation set, streamed in
+    /// `EVAL_TILE`-point tiles through the `mlp_eval` artifact. The point
+    /// count must be a multiple of the tile size (the data generators
+    /// guarantee this; see shapes.py).
+    pub fn evaluate(
+        &self,
+        engine: &mut Engine,
+        x: &[f32],
+        y_onehot: &[f32],
+    ) -> Result<EvalResult> {
+        let n = x.len() / INPUT_DIM;
+        if n % EVAL_TILE != 0 {
+            bail!("eval set size {n} not a multiple of tile {EVAL_TILE}");
+        }
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        for tile in 0..n / EVAL_TILE {
+            let xs = &x[tile * EVAL_TILE * INPUT_DIM
+                ..(tile + 1) * EVAL_TILE * INPUT_DIM];
+            let ys = &y_onehot[tile * EVAL_TILE * N_CLASSES
+                ..(tile + 1) * EVAL_TILE * N_CLASSES];
+            let out = engine.execute_mixed("mlp_eval", &[
+                Input::Slice(&self.theta, &[N_PARAMS]),
+                Input::Slice(xs, &[EVAL_TILE, INPUT_DIM]),
+                Input::Slice(ys, &[EVAL_TILE, N_CLASSES]),
+            ])?;
+            loss_sum += out[0].scalar()? as f64;
+            correct += out[1].scalar()? as f64;
+        }
+        Ok(EvalResult {
+            mean_loss: loss_sum / n as f64,
+            accuracy: correct / n as f64,
+            n,
+        })
+    }
+}
+
+/// Evaluation summary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalResult {
+    pub mean_loss: f64,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn param_count_matches_python() {
+        assert_eq!(N_PARAMS, 99_710);
+        assert_eq!(init_params(0).len(), N_PARAMS);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_scaled() {
+        let a = init_params(3);
+        assert_eq!(a, init_params(3));
+        assert_ne!(a, init_params(4));
+        // biases of the first layer (after the 784x100 weights) are zero
+        assert!(a[78_400..78_500].iter().all(|&b| b == 0.0));
+        let w_std = {
+            let w = &a[..78_400];
+            let mean: f32 = w.iter().sum::<f32>() / w.len() as f32;
+            (w.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+                / w.len() as f32).sqrt()
+        };
+        let expect = (2.0f32 / 784.0).sqrt();
+        assert!((w_std - expect).abs() < 0.01 * expect.max(0.05),
+            "std {w_std} vs He {expect}");
+    }
+
+    fn engine() -> Option<Engine> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.txt").exists()
+            .then(|| Engine::open(&dir).unwrap())
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_fixed_batch() {
+        let Some(mut e) = engine() else { return };
+        let mut trainer = MlpTrainer::new(OptimizerKind::Sgd, 0.1, 1);
+        let mut rng = Rng::new(2);
+        let b = 128;
+        let x: Vec<f32> = (0..b * INPUT_DIM).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0f32; b * N_CLASSES];
+        for i in 0..b {
+            y[i * N_CLASSES + (i % N_CLASSES)] = 1.0;
+        }
+        let first = trainer.train_step(&mut e, b, &x, &y).unwrap();
+        let mut last = first;
+        for _ in 0..5 {
+            last = trainer.train_step(&mut e, b, &x, &y).unwrap();
+        }
+        assert!(last < first, "loss did not fall: {first} -> {last}");
+    }
+
+    #[test]
+    fn wrong_batch_size_is_rejected() {
+        let Some(mut e) = engine() else { return };
+        let mut trainer = MlpTrainer::new(OptimizerKind::Sgd, 0.1, 1);
+        let x = vec![0.0f32; 64 * INPUT_DIM];
+        let y = vec![0.0f32; 64 * N_CLASSES];
+        assert!(trainer.train_step(&mut e, 128, &x, &y).is_err());
+    }
+}

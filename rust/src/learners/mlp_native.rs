@@ -1,0 +1,281 @@
+//! Pure-rust MLP with hand-written backprop — the stand-in for the
+//! paper's baseline implementations ("The implementations are all
+//! sequential (executed on one core) and C++ is used", §5).
+//!
+//! Two roles:
+//! * **comparator** for the AOT path: the E9 native-vs-XLA bench pits
+//!   this loop nest against the `mlp_grad_b*` artifacts;
+//! * **oracle**: the gradient is cross-checked against the artifact in
+//!   the integration suite, closing the rust↔jax↔pallas loop from the
+//!   rust side too.
+//!
+//! The loop structure deliberately follows Algorithms 14/15: forward per
+//! layer (weights reused across the mini-batch — the Fig 3 matmul
+//! pattern), backward in reverse order ("the complement of forward
+//! propagation").
+
+use super::mlp::{INPUT_DIM, LAYERS, N_CLASSES, N_PARAMS};
+
+/// Scratch buffers for one forward+backward pass (allocated once,
+/// reused across steps — no allocation in the training loop).
+pub struct NativeMlp {
+    /// flat parameters, same layout as the artifacts
+    pub theta: Vec<f32>,
+    grad: Vec<f32>,
+    /// per-layer activations a_0..a_L (a_0 = input batch)
+    acts: Vec<Vec<f32>>,
+    /// per-layer pre-activations z_1..z_L (Alg 14: "record the total
+    /// weighted input z for later use")
+    zs: Vec<Vec<f32>>,
+    /// per-layer error signals (Alg 15)
+    deltas: Vec<Vec<f32>>,
+    batch: usize,
+}
+
+impl NativeMlp {
+    pub fn new(theta: Vec<f32>, batch: usize) -> Self {
+        assert_eq!(theta.len(), N_PARAMS);
+        let mut acts = vec![vec![0.0; batch * INPUT_DIM]];
+        let mut zs = Vec::new();
+        let mut deltas = Vec::new();
+        for (_, n) in LAYERS {
+            acts.push(vec![0.0; batch * n]);
+            zs.push(vec![0.0; batch * n]);
+            deltas.push(vec![0.0; batch * n]);
+        }
+        Self {
+            theta,
+            grad: vec![0.0; N_PARAMS],
+            acts,
+            zs,
+            deltas,
+            batch,
+        }
+    }
+
+    /// Offset of layer `l`'s weights (and, at `+ m*n`, its biases) in the
+    /// flat vector.
+    fn offset(l: usize) -> usize {
+        LAYERS[..l].iter().map(|(m, n)| m * n + n).sum()
+    }
+
+    /// Forward pass (Algorithm 14). Fills `acts`/`zs`; returns logits.
+    pub fn forward(&mut self, x: &[f32]) -> &[f32] {
+        assert_eq!(x.len(), self.batch * INPUT_DIM);
+        self.acts[0].copy_from_slice(x);
+        let n_layers = LAYERS.len();
+        for l in 0..n_layers {
+            let (m, n) = LAYERS[l];
+            let off = Self::offset(l);
+            let (w, b) = {
+                let w = &self.theta[off..off + m * n];
+                let b = &self.theta[off + m * n..off + m * n + n];
+                (w, b)
+            };
+            // z = a_prev @ W + b   (row-major [batch x m] @ [m x n])
+            let (prev_acts, rest) = self.acts.split_at_mut(l + 1);
+            let a_prev = &prev_acts[l];
+            let z = &mut self.zs[l];
+            for s in 0..self.batch {
+                let zrow = &mut z[s * n..(s + 1) * n];
+                zrow.copy_from_slice(b);
+                let arow = &a_prev[s * m..(s + 1) * m];
+                for (i, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue; // ReLU sparsity: skip dead activations
+                    }
+                    let wrow = &w[i * n..(i + 1) * n];
+                    for (zv, &wv) in zrow.iter_mut().zip(wrow) {
+                        *zv += av * wv;
+                    }
+                }
+            }
+            // activation (ReLU on hidden, identity on the output layer)
+            let a = &mut rest[0];
+            if l + 1 < n_layers {
+                for (av, &zv) in a.iter_mut().zip(z.iter()) {
+                    *av = zv.max(0.0);
+                }
+            } else {
+                a.copy_from_slice(z);
+            }
+        }
+        &self.acts[LAYERS.len()]
+    }
+
+    /// Forward + softmax cross-entropy + backward (Algorithm 15).
+    /// Returns the mean batch loss; the gradient is in `self.grad`
+    /// (flat, same layout as θ).
+    pub fn loss_and_grad(&mut self, x: &[f32], y_onehot: &[f32]) -> f32 {
+        let n_layers = LAYERS.len();
+        let classes = N_CLASSES;
+        self.forward(x);
+        let logits = &self.acts[n_layers];
+        // softmax CE + output delta = (softmax - y)/batch
+        let mut loss = 0.0f64;
+        {
+            let delta = &mut self.deltas[n_layers - 1];
+            for s in 0..self.batch {
+                let row = &logits[s * classes..(s + 1) * classes];
+                let max = row.iter().cloned().fold(f32::MIN, f32::max);
+                let mut denom = 0.0f32;
+                for &v in row {
+                    denom += (v - max).exp();
+                }
+                let log_denom = denom.ln();
+                for c in 0..classes {
+                    let p = (row[c] - max - log_denom).exp();
+                    let yv = y_onehot[s * classes + c];
+                    if yv > 0.0 {
+                        loss -= f64::from(yv)
+                            * f64::from(row[c] - max - log_denom);
+                    }
+                    delta[s * classes + c] = (p - yv) / self.batch as f32;
+                }
+            }
+        }
+        // backward, layers in reverse (Alg 15 loop 1)
+        self.grad.fill(0.0);
+        for l in (0..n_layers).rev() {
+            let (m, n) = LAYERS[l];
+            let off = Self::offset(l);
+            // dW = a_prev^T @ delta ; db = sum(delta)
+            for s in 0..self.batch {
+                let arow = &self.acts[l][s * m..(s + 1) * m];
+                let drow = &self.deltas[l][s * n..(s + 1) * n];
+                for (i, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let grow = &mut self.grad[off + i * n..off + (i + 1) * n];
+                    for (gv, &dv) in grow.iter_mut().zip(drow) {
+                        *gv += av * dv;
+                    }
+                }
+                let gb = &mut self.grad[off + m * n..off + m * n + n];
+                for (gv, &dv) in gb.iter_mut().zip(drow) {
+                    *gv += dv;
+                }
+            }
+            if l == 0 {
+                break; // no error to propagate into the input
+            }
+            // delta_prev = (delta @ W^T) ⊙ relu'(z_prev)  (Alg 15: "the
+            // error e of the neuron x w, then the activation derivative")
+            let w = &self.theta[off..off + m * n];
+            let (lower, upper) = self.deltas.split_at_mut(l);
+            let dprev = &mut lower[l - 1];
+            let d = &upper[0];
+            let z_prev = &self.zs[l - 1];
+            for s in 0..self.batch {
+                let drow = &d[s * n..(s + 1) * n];
+                let prow = &mut dprev[s * m..(s + 1) * m];
+                for i in 0..m {
+                    if z_prev[s * m + i] <= 0.0 {
+                        prow[i] = 0.0; // dead ReLU: no gradient flows
+                        continue;
+                    }
+                    let wrow = &w[i * n..(i + 1) * n];
+                    let mut acc = 0.0f32;
+                    for (wv, dv) in wrow.iter().zip(drow) {
+                        acc += wv * dv;
+                    }
+                    prow[i] = acc;
+                }
+            }
+        }
+        (loss / self.batch as f64) as f32
+    }
+
+    pub fn grad(&self) -> &[f32] {
+        &self.grad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mlp::init_params;
+    use super::*;
+    use crate::util::Rng;
+
+    fn batch(seed: u64, b: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> =
+            (0..b * INPUT_DIM).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0f32; b * N_CLASSES];
+        for s in 0..b {
+            y[s * N_CLASSES + rng.below(N_CLASSES)] = 1.0;
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn offsets_partition_theta() {
+        let mut total = 0;
+        for l in 0..LAYERS.len() {
+            assert_eq!(NativeMlp::offset(l), total);
+            let (m, n) = LAYERS[l];
+            total += m * n + n;
+        }
+        assert_eq!(total, N_PARAMS);
+    }
+
+    #[test]
+    fn loss_at_init_is_in_the_untrained_regime() {
+        // He-init logits on random labels: loss near-to-above ln(10),
+        // well below a blown-up network and above a lucky one.
+        let mut mlp = NativeMlp::new(init_params(1), 16);
+        let (x, y) = batch(2, 16);
+        let loss = mlp.loss_and_grad(&x, &y);
+        assert!(loss > 1.5 && loss < 6.0, "loss {loss}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        // Spot-check ~20 coordinates across all four layers.
+        let b = 4;
+        let theta = init_params(3);
+        let (x, y) = batch(4, b);
+        let mut mlp = NativeMlp::new(theta.clone(), b);
+        let base_loss = mlp.loss_and_grad(&x, &y);
+        let grad = mlp.grad().to_vec();
+        let eps = 1e-2f32;
+        let probes = [0usize, 100, 78_450, 78_499, 80_000, 88_599, 88_700,
+                      98_000, 98_699, 98_800, 99_700, 99_709];
+        for &i in &probes {
+            let mut theta2 = theta.clone();
+            theta2[i] += eps;
+            let mut mlp2 = NativeMlp::new(theta2, b);
+            let loss2 = mlp2.loss_and_grad(&x, &y);
+            let fd = (loss2 - base_loss) / eps;
+            assert!((fd - grad[i]).abs() < 2e-2_f32.max(0.2 * fd.abs()),
+                "grad[{i}]: analytic {} vs fd {fd} (loss {base_loss})",
+                grad[i]);
+        }
+    }
+
+    #[test]
+    fn sgd_descends() {
+        let b = 32;
+        let (x, y) = batch(6, b);
+        let mut mlp = NativeMlp::new(init_params(5), b);
+        let first = mlp.loss_and_grad(&x, &y);
+        for _ in 0..10 {
+            let g = mlp.grad().to_vec();
+            for (t, gv) in mlp.theta.iter_mut().zip(&g) {
+                *t -= 0.1 * gv;
+            }
+            mlp.loss_and_grad(&x, &y);
+        }
+        let last = mlp.loss_and_grad(&x, &y);
+        assert!(last < first * 0.5, "{first} -> {last}");
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let (x, _) = batch(8, 8);
+        let mut a = NativeMlp::new(init_params(7), 8);
+        let mut b = NativeMlp::new(init_params(7), 8);
+        assert_eq!(a.forward(&x), b.forward(&x));
+    }
+}

@@ -1,0 +1,19 @@
+//! Learners (DESIGN.md system S8): the paper's §4 algorithm classes.
+//!
+//! * [`mlp`]         — the §5.1 neural network, trained via AOT artifacts
+//! * [`instance`]    — k-NN + Parzen–Rosenblatt window (Alg 10/11),
+//!   pure-rust scans mirroring the `knn_only`/`prw_only`/`knn_prw_joint`
+//!   artifacts
+//! * [`naive_bayes`] — Gaussian NB (Alg 12)
+//! * [`linear`]      — coupled LR + SVM (Alg 13, §4.3)
+
+pub mod instance;
+pub mod linear;
+pub mod mlp;
+pub mod mlp_native;
+pub mod naive_bayes;
+
+pub use instance::{accuracy, joint_scan, knn_scan, prw_scan};
+pub use mlp::{EvalResult, MlpTrainer};
+pub use mlp_native::NativeMlp;
+pub use naive_bayes::NaiveBayes;

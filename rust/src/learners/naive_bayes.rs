@@ -1,0 +1,154 @@
+//! Gaussian naive Bayes (paper §4.2, Algorithm 12) — pure-rust reference
+//! implementation mirroring the `nb_fit` / `nb_predict` artifacts.
+//!
+//! Training is a single epoch over T (the paper: "The model is trained
+//! with only one epoch"), computing per-class counts, feature means and
+//! variances in one pass.
+
+use crate::data::Dataset;
+
+/// Variance floor (mirrors python naive_bayes.VAR_FLOOR).
+pub const VAR_FLOOR: f32 = 1e-3;
+
+/// Fitted Gaussian NB model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NaiveBayes {
+    pub counts: Vec<f32>,
+    /// `[classes x d]` row-major.
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+    pub d: usize,
+    pub classes: usize,
+}
+
+impl NaiveBayes {
+    /// One-epoch fit (sufficient statistics, single pass over T).
+    pub fn fit(train: &Dataset) -> Self {
+        let (d, c) = (train.d, train.n_classes);
+        let mut counts = vec![0.0f32; c];
+        let mut sums = vec![0.0f64; c * d];
+        let mut sqsums = vec![0.0f64; c * d];
+        for i in 0..train.n {
+            let class = train.labels[i] as usize;
+            counts[class] += 1.0;
+            let row = train.row(i);
+            for (f, &v) in row.iter().enumerate() {
+                sums[class * d + f] += v as f64;
+                sqsums[class * d + f] += (v as f64) * (v as f64);
+            }
+        }
+        let mut mean = vec![0.0f32; c * d];
+        let mut var = vec![VAR_FLOOR; c * d];
+        for class in 0..c {
+            let denom = f64::from(counts[class]).max(1.0);
+            for f in 0..d {
+                let m = sums[class * d + f] / denom;
+                mean[class * d + f] = m as f32;
+                var[class * d + f] =
+                    ((sqsums[class * d + f] / denom - m * m) as f32)
+                        .max(VAR_FLOOR);
+            }
+        }
+        Self { counts, mean, var, d, classes: c }
+    }
+
+    /// Log posterior (up to the shared P(x) constant) for one point.
+    pub fn log_posterior(&self, row: &[f32]) -> Vec<f64> {
+        let total: f32 = self.counts.iter().sum();
+        (0..self.classes)
+            .map(|c| {
+                let prior =
+                    (f64::from(self.counts[c].max(1.0))
+                        / f64::from(total.max(1.0))).ln();
+                let mut ll = 0.0f64;
+                for f in 0..self.d {
+                    let mu = f64::from(self.mean[c * self.d + f]);
+                    let v = f64::from(self.var[c * self.d + f]);
+                    let x = f64::from(row[f]);
+                    ll -= 0.5
+                        * ((2.0 * std::f64::consts::PI * v).ln()
+                            + (x - mu) * (x - mu) / v);
+                }
+                prior + ll
+            })
+            .collect()
+    }
+
+    /// Classify a block of rows.
+    pub fn predict(&self, rows: &[f32]) -> Vec<i32> {
+        let n = rows.len() / self.d;
+        (0..n)
+            .map(|i| {
+                let lp =
+                    self.log_posterior(&rows[i * self.d..(i + 1) * self.d]);
+                lp.iter()
+                    .enumerate()
+                    .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+                    .map(|(c, _)| c as i32)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture;
+    use crate::data::MixtureSpec;
+
+    #[test]
+    fn fit_stats_hand_case() {
+        let train = Dataset::new(
+            vec![1.0, 3.0, 10.0, 14.0],
+            vec![0, 0, 1, 1],
+            1,
+            2,
+        );
+        let nb = NaiveBayes::fit(&train);
+        assert_eq!(nb.counts, vec![2.0, 2.0]);
+        assert_eq!(nb.mean, vec![2.0, 12.0]);
+        assert_eq!(nb.var, vec![1.0, 4.0]);
+    }
+
+    #[test]
+    fn variance_floor_applies() {
+        let train = Dataset::new(vec![5.0, 5.0], vec![0, 0], 1, 1);
+        let nb = NaiveBayes::fit(&train);
+        assert_eq!(nb.var, vec![VAR_FLOOR]);
+    }
+
+    #[test]
+    fn separated_blobs_classified_perfectly() {
+        let ds = gaussian_mixture(MixtureSpec {
+            n: 200, d: 8, classes: 2, separation: 4.0, noise: 0.5, seed: 5,
+        });
+        let nb = NaiveBayes::fit(&ds);
+        let preds = nb.predict(&ds.features);
+        let acc = preds.iter().zip(&ds.labels)
+            .filter(|(p, t)| p == t).count() as f64 / ds.n as f64;
+        assert!(acc > 0.99, "acc {acc}");
+    }
+
+    #[test]
+    fn prior_matters_for_ambiguous_points() {
+        // Same likelihood for both classes; prior 3:1 must win.
+        let train = Dataset::new(
+            vec![0.0, 0.0, 0.0, 0.0],
+            vec![0, 0, 0, 1],
+            1,
+            2,
+        );
+        let nb = NaiveBayes::fit(&train);
+        assert_eq!(nb.predict(&[0.0]), vec![0]);
+    }
+
+    #[test]
+    fn predict_shapes() {
+        let ds = gaussian_mixture(MixtureSpec {
+            n: 30, d: 4, classes: 3, separation: 1.0, noise: 1.0, seed: 6,
+        });
+        let nb = NaiveBayes::fit(&ds);
+        assert_eq!(nb.predict(&ds.features).len(), 30);
+    }
+}

@@ -1,0 +1,30 @@
+//! # locality-ml
+//!
+//! A locality-aware machine-learning runtime reproducing *"Guidelines for
+//! enhancing data locality in selected machine learning algorithms"*
+//! (Chakroun, Vander Aa, Ashby — IDA 2020, DOI 10.3233/IDA-184287).
+//!
+//! Three layers (see DESIGN.md):
+//!
+//! * **L3 (this crate)** — coordinator: fold streams, the SW-SGD sliding
+//!   window, the joint k-NN+PRW executor, samplers, optimizers, metrics and
+//!   the memory-hierarchy simulator that stands in for the paper's testbed.
+//! * **L2 (python/compile)** — JAX compute graphs (MLP fwd/bwd, fused
+//!   k-NN+PRW, coupled LR+SVM, naive Bayes), AOT-lowered to HLO text once.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the hot spots
+//!   (tiled matmul, tiled pairwise distances, fused window gradient).
+//!
+//! The compiled artifacts in `artifacts/` are executed from rust through
+//! the PJRT C API ([`runtime`]); python never runs on the request path.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod learners;
+pub mod opt;
+pub mod memsim;
+pub mod metrics;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,129 @@
+//! `locality-ml` — launcher for the locality-aware ML runtime.
+//!
+//! Every subcommand regenerates one of the paper's experimental artifacts
+//! (see DESIGN.md §3 for the experiment index):
+//!
+//! ```text
+//! locality-ml train   [--config f.toml] [--epochs N] [--cv]
+//!                     [--optimizers a,b] [--windows 0,1,2]
+//!                     [--dataset-n N] [--out-csv path]    Fig 5  (E1)
+//! locality-ml joint   [--config f.toml] [--data-dir d]    Table 1 (E2)
+//! locality-ml fig4                                        Fig 4  (E3)
+//! locality-ml interchange [--n N] [--m M]                 Alg 1/2 (E4)
+//! locality-ml cache-model                                 §5.1   (E5)
+//! locality-ml audit                                       §3-§4  (E6)
+//! locality-ml info    [--artifacts dir]
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use locality_ml::cli::{commands, Args};
+use locality_ml::config::{Config, JointExperiment, TrainExperiment};
+use locality_ml::opt::OptimizerKind;
+
+fn load_config(args: &Args) -> Result<Config> {
+    match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path)),
+        None => Ok(Config::default()),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_str() {
+        "train" => {
+            let cfg = load_config(&args)?;
+            let mut exp = TrainExperiment::from_config(&cfg)?;
+            // CLI overrides
+            exp.epochs = args.usize_or("epochs", exp.epochs)?;
+            exp.dataset_n = args.usize_or("dataset-n", exp.dataset_n)?;
+            exp.seed = args.u64_or("seed", exp.seed)?;
+            exp.cross_validate = args.flag("cv") || exp.cross_validate;
+            if args.get("optimizers").is_some() {
+                exp.optimizers = args
+                    .list_or("optimizers", &[])
+                    .iter()
+                    .map(|s| OptimizerKind::parse(s).ok_or_else(
+                        || anyhow::anyhow!("unknown optimizer `{s}`")))
+                    .collect::<Result<_>>()?;
+            }
+            if args.get("windows").is_some() {
+                exp.windows = args
+                    .list_or("windows", &[])
+                    .iter()
+                    .map(|s| s.parse::<usize>().map_err(
+                        |_| anyhow::anyhow!("bad window `{s}`")))
+                    .collect::<Result<_>>()?;
+            }
+            if let Some(p) = args.get("out-csv") {
+                exp.out_csv = Some(PathBuf::from(p));
+            }
+            if let Some(p) = args.get("artifacts") {
+                exp.artifacts = PathBuf::from(p);
+            }
+            commands::cmd_train(&exp)?;
+        }
+        "joint" => {
+            let cfg = load_config(&args)?;
+            let mut exp = JointExperiment::from_config(&cfg)?;
+            if let Some(p) = args.get("data-dir") {
+                exp.data_dir = PathBuf::from(p);
+            }
+            if let Some(p) = args.get("artifacts") {
+                exp.artifacts = PathBuf::from(p);
+            }
+            exp.seed = args.u64_or("seed", exp.seed)?;
+            exp.regenerate = args.flag("regenerate") || exp.regenerate;
+            commands::cmd_joint(&exp)?;
+        }
+        "fig4" => {
+            commands::cmd_fig4()?;
+        }
+        "interchange" => {
+            let n = args.u64_or("n", 256)?;
+            let m = args.u64_or("m", 256)?;
+            commands::cmd_interchange(n, m)?;
+        }
+        "cache-model" => {
+            commands::cmd_cache_model()?;
+        }
+        "audit" => {
+            commands::cmd_audit()?;
+        }
+        "info" => {
+            let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+            commands::cmd_info(&dir)?;
+        }
+        "" | "help" | "--help" => {
+            print!("{USAGE}");
+        }
+        other => {
+            eprintln!("unknown subcommand `{other}`\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+const USAGE: &str = "\
+locality-ml — locality-aware ML runtime (Chakroun et al., IDA 2020)
+
+USAGE: locality-ml <subcommand> [--key value]...
+
+SUBCOMMANDS
+  train        Fig 5: SW-SGD sweep (optimizers x window scenarios)
+                 --epochs N --cv --optimizers sgd,momentum,adam,adagrad
+                 --windows 0,1,2 --dataset-n 6400 --out-csv curves.csv
+  joint        Table 1: k-NN + PRW separately vs jointly
+                 --data-dir data --regenerate
+  fig4         Fig 4: data touched by SGD / MB-GD / SW-SGD
+  interchange  Algorithms 1/2 loop interchange on the cache simulator
+                 --n 256 --m 256
+  cache-model  §5.1 cycle-arithmetic example (400k vs 40k cycles)
+  audit        Reuse-distance audit of the paper's §3-§4 claims
+  info         List compiled artifacts  [--artifacts artifacts]
+
+Common options: --config experiment.toml --artifacts artifacts --seed N
+";

@@ -1,0 +1,368 @@
+//! Multi-level set-associative LRU cache simulator with a cycle cost model.
+//!
+//! This is the substitute for the paper's testbed ("dual 6-core Intel(R)
+//! Westmere CPUs"; §5.1 cites 4-cycle cache vs 40-cycle memory from
+//! 7-cpu.com/cpu/Westmere.html).  The experiments in the paper are about
+//! *relative* locality effects — miss-rate and cycle ratios — which a
+//! faithful LRU hierarchy reproduces (DESIGN.md §6).
+
+use std::collections::HashMap;
+
+use super::trace::{Access, Sink};
+
+/// Configuration of one cache level.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LevelConfig {
+    pub name: &'static str,
+    pub size_bytes: u64,
+    pub ways: u64,
+    pub line_bytes: u64,
+    /// Latency charged when the access *hits* at this level.
+    pub latency_cycles: u64,
+}
+
+impl LevelConfig {
+    pub fn sets(&self) -> u64 {
+        self.size_bytes / (self.ways * self.line_bytes)
+    }
+}
+
+/// One set-associative level; LRU order kept as a small per-set vector
+/// (ways <= 16, so a Vec scan beats fancier structures).
+#[derive(Debug)]
+struct Level {
+    cfg: LevelConfig,
+    /// set index -> lines ordered MRU-first.
+    sets: HashMap<u64, Vec<u64>>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Level {
+    fn new(cfg: LevelConfig) -> Self {
+        assert!(cfg.line_bytes.is_power_of_two());
+        // Set count need not be a power of two (Westmere's 12 MiB L3 is
+        // 12288 sets); indexing uses modulo, not bit masking.
+        assert!(cfg.sets() > 0, "{}: zero sets", cfg.name);
+        Self { cfg, sets: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    fn set_and_tag(&self, addr: u64) -> (u64, u64) {
+        let line = addr / self.cfg.line_bytes;
+        (line % self.cfg.sets(), line)
+    }
+
+    /// Probe for `addr`. Returns true on hit. Updates recency; on miss the
+    /// line is installed (evicting LRU if needed).
+    fn access(&mut self, addr: u64) -> bool {
+        let (set, tag) = self.set_and_tag(addr);
+        let lines = self.sets.entry(set).or_default();
+        if let Some(pos) = lines.iter().position(|&t| t == tag) {
+            let t = lines.remove(pos);
+            lines.insert(0, t);
+            self.hits += 1;
+            true
+        } else {
+            lines.insert(0, tag);
+            if lines.len() as u64 > self.cfg.ways {
+                lines.pop();
+            }
+            self.misses += 1;
+            false
+        }
+    }
+
+    fn miss_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 { 0.0 } else { self.misses as f64 / total as f64 }
+    }
+}
+
+/// Per-level statistics snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LevelStats {
+    pub name: &'static str,
+    pub hits: u64,
+    pub misses: u64,
+    pub miss_rate: f64,
+}
+
+/// A full hierarchy: ordered levels + DRAM latency behind them.
+pub struct Hierarchy {
+    levels: Vec<Level>,
+    pub mem_latency: u64,
+    pub accesses: u64,
+    pub cycles: u64,
+}
+
+impl Hierarchy {
+    pub fn new(levels: Vec<LevelConfig>, mem_latency: u64) -> Self {
+        Self {
+            levels: levels.into_iter().map(Level::new).collect(),
+            mem_latency,
+            accesses: 0,
+            cycles: 0,
+        }
+    }
+
+    /// Westmere-like hierarchy: the paper's testbed (§5).
+    /// L1d 32 KiB/8-way 4cy · L2 256 KiB/8-way 10cy · L3 12 MiB/16-way 40cy
+    /// · DRAM ≈ 100cy.
+    pub fn westmere() -> Self {
+        Self::new(
+            vec![
+                LevelConfig { name: "L1d", size_bytes: 32 << 10, ways: 8,
+                              line_bytes: 64, latency_cycles: 4 },
+                LevelConfig { name: "L2", size_bytes: 256 << 10, ways: 8,
+                              line_bytes: 64, latency_cycles: 10 },
+                LevelConfig { name: "L3", size_bytes: 12 << 20, ways: 16,
+                              line_bytes: 64, latency_cycles: 40 },
+            ],
+            100,
+        )
+    }
+
+    /// The paper's §5.1 worked example: single cache level at 4 cycles,
+    /// memory at 40 cycles ("such as on Intel(R) Westmere CPUs").
+    /// `lines` is the capacity in cache lines of `line_bytes` bytes.
+    pub fn paper_example(lines: u64, line_bytes: u64) -> Self {
+        Self::new(
+            vec![LevelConfig {
+                name: "cache",
+                size_bytes: lines * line_bytes,
+                ways: lines, // fully associative
+                line_bytes,
+                latency_cycles: 4,
+            }],
+            40,
+        )
+    }
+
+    /// Degenerate no-cache machine: every access pays DRAM latency.
+    pub fn no_cache(mem_latency: u64) -> Self {
+        Self::new(vec![], mem_latency)
+    }
+
+    /// Simulate one access; returns the cycles it cost.
+    pub fn access(&mut self, addr: u64) -> u64 {
+        self.accesses += 1;
+        let mut cost = self.mem_latency;
+        let mut hit_level = None;
+        for (i, level) in self.levels.iter_mut().enumerate() {
+            if level.access(addr) {
+                hit_level = Some(i);
+                cost = level.cfg.latency_cycles;
+                break;
+            }
+        }
+        // Fill the levels *above* the hit level (inclusive hierarchy):
+        // already done — `access` installs on miss while probing. For the
+        // levels *below* the hit we leave state untouched (hit short-circuits
+        // the probe, matching an inclusive read-through hierarchy).
+        let _ = hit_level;
+        self.cycles += cost;
+        cost
+    }
+
+    pub fn stats(&self) -> Vec<LevelStats> {
+        self.levels
+            .iter()
+            .map(|l| LevelStats {
+                name: l.cfg.name,
+                hits: l.hits,
+                misses: l.misses,
+                miss_rate: l.miss_rate(),
+            })
+            .collect()
+    }
+
+    /// Cycles per access so far.
+    pub fn cpa(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.cycles as f64 / self.accesses as f64
+        }
+    }
+}
+
+impl Sink for Hierarchy {
+    fn touch(&mut self, access: Access) {
+        self.access(access.addr);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    fn tiny(lines: u64) -> Hierarchy {
+        Hierarchy::paper_example(lines, 64)
+    }
+
+    #[test]
+    fn first_touch_misses_second_hits() {
+        let mut h = tiny(16);
+        assert_eq!(h.access(0), 40);
+        assert_eq!(h.access(0), 4);
+        assert_eq!(h.access(8), 4, "same line");
+        assert_eq!(h.access(64), 40, "next line");
+    }
+
+    #[test]
+    fn paper_example_cycle_arithmetic() {
+        // §5.1: "If the model uses 100 data elements 100 times each, the
+        // program spends 400,000 cycles on memory operations if there is no
+        // cache and only 40,000 cycles if all data can be cached."
+        let elems = 100u64;
+        let uses = 100u64;
+        // one element per line so "100 data elements" = 100 lines
+        let mut no_cache = Hierarchy::no_cache(40);
+        let mut cached = Hierarchy::new(
+            vec![LevelConfig { name: "cache", size_bytes: 128 * 64,
+                               ways: 128, line_bytes: 64,
+                               latency_cycles: 4 }],
+            40,
+        );
+        // Pre-warm the cached machine (the paper's "all data can be cached"
+        // idealisation charges 4 cycles even for the first touch).
+        for e in 0..elems {
+            cached.access(e * 64);
+        }
+        cached.cycles = 0;
+        cached.accesses = 0;
+        for _ in 0..uses {
+            for e in 0..elems {
+                no_cache.access(e * 64);
+                cached.access(e * 64);
+            }
+        }
+        assert_eq!(no_cache.cycles, 400_000);
+        assert_eq!(cached.cycles, 40_000);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // Fully associative, 2 lines: a b c -> a evicted.
+        let mut h = tiny(2);
+        h.access(0 * 64);
+        h.access(1 * 64);
+        h.access(2 * 64); // evicts line 0
+        assert_eq!(h.access(1 * 64), 4, "line 1 still resident");
+        assert_eq!(h.access(0 * 64), 40, "line 0 was evicted");
+    }
+
+    #[test]
+    fn set_mapping_conflicts() {
+        // 2 sets, 1 way, 64B lines: lines 0 and 2 map to set 0 and conflict.
+        let mut h = Hierarchy::new(
+            vec![LevelConfig { name: "c", size_bytes: 2 * 64, ways: 1,
+                               line_bytes: 64, latency_cycles: 1 }],
+            10,
+        );
+        h.access(0 * 64);
+        h.access(2 * 64); // same set, evicts 0
+        assert_eq!(h.access(0 * 64), 10);
+        // line 1 (set 1) is unaffected by the conflict in set 0
+        h.access(1 * 64);
+        assert_eq!(h.access(1 * 64), 1);
+    }
+
+    #[test]
+    fn westmere_levels_are_sane() {
+        let h = Hierarchy::westmere();
+        let stats = h.stats();
+        assert_eq!(stats.len(), 3);
+        assert_eq!(stats[0].name, "L1d");
+    }
+
+    #[test]
+    fn working_set_within_capacity_always_hits_after_warmup() {
+        check("cache-warm-hits", 20, |g| {
+            let lines = 1 << g.usize_in(3, 6); // 8..64 lines
+            let mut h = tiny(lines as u64);
+            let ws = g.usize_in(1, lines); // working set fits
+            for round in 0..4 {
+                for i in 0..ws {
+                    let cost = h.access(i as u64 * 64);
+                    if round > 0 {
+                        prop_assert!(cost == 4,
+                            "warm access missed: ws={ws} lines={lines}");
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fully_associative_lru_matches_stack_distance_profile() {
+        // Mattson's inclusion property ties the two substrates together:
+        // a fully-associative LRU cache of C lines hits exactly the
+        // accesses whose stack distance (at line granularity) is < C.
+        use crate::memsim::reuse::ReuseProfiler;
+        check("mattson-inclusion", 15, |g| {
+            let lines = 1usize << g.usize_in(1, 5); // 2..32 lines
+            let universe = g.usize_in(1, 64) as u64;
+            let len = g.usize_in(1, 400);
+            let addrs: Vec<u64> =
+                (0..len).map(|_| (g.u64() % universe) * 64).collect();
+            let mut cache = Hierarchy::new(
+                vec![LevelConfig { name: "fa", size_bytes: lines as u64
+                    * 64, ways: lines as u64, line_bytes: 64,
+                    latency_cycles: 1 }], 10);
+            let mut prof = ReuseProfiler::new();
+            let mut expected_hits = 0u64;
+            for &a in &addrs {
+                let dist = prof.observe(a / 64);
+                if matches!(dist, Some(d) if (d as usize) < lines) {
+                    expected_hits += 1;
+                }
+                cache.access(a);
+            }
+            let got_hits = cache.stats()[0].hits;
+            prop_assert!(got_hits == expected_hits,
+                "LRU({lines}) hits {got_hits} != stack-distance \
+                 prediction {expected_hits}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn larger_fully_associative_cache_never_hits_less() {
+        // LRU inclusion monotonicity.
+        check("lru-monotone", 15, |g| {
+            let universe = g.usize_in(1, 64) as u64;
+            let addrs: Vec<u64> = (0..g.usize_in(1, 300))
+                .map(|_| (g.u64() % universe) * 64)
+                .collect();
+            let mut prev_hits = 0u64;
+            for lines in [2u64, 4, 8, 16, 32] {
+                let mut cache = Hierarchy::paper_example(lines, 64);
+                for &a in &addrs {
+                    cache.access(a);
+                }
+                let hits = cache.stats()[0].hits;
+                prop_assert!(hits >= prev_hits,
+                    "hits({lines}) = {hits} < smaller cache {prev_hits}");
+                prev_hits = hits;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cpa_between_hit_and_miss_latency() {
+        check("cpa-bounds", 20, |g| {
+            let mut h = tiny(16);
+            for _ in 0..g.usize_in(10, 500) {
+                h.access((g.u64() % 64) * 8);
+            }
+            let cpa = h.cpa();
+            prop_assert!((4.0..=40.0).contains(&cpa), "cpa={cpa}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,21 @@
+//! Memory-hierarchy simulation substrate (DESIGN.md systems S1–S3).
+//!
+//! The paper's evaluation ran on a Westmere node and reasons throughout in
+//! cache-hierarchy terms.  This module replaces that hardware with an exact
+//! software model so every locality claim in the text is measurable:
+//!
+//! * [`trace`]    — byte-addressed access streams + named data regions
+//! * [`reuse`]    — exact LRU stack-distance profiler (the paper's
+//!                  "reuse distance", §1)
+//! * [`cache`]    — multi-level set-associative LRU simulator with a
+//!                  Westmere-like cycle model (§5.1)
+//! * [`patterns`] — literal trace generators for Algorithms 1–15
+
+pub mod cache;
+pub mod patterns;
+pub mod reuse;
+pub mod trace;
+
+pub use cache::{Hierarchy, LevelConfig, LevelStats};
+pub use reuse::{ReuseProfiler, ReuseReport};
+pub use trace::{Access, AddressSpace, Kind, Region, Sink, Tee, VecTrace};

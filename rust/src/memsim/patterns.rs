@@ -1,0 +1,626 @@
+//! Access-pattern generators for the paper's algorithm templates.
+//!
+//! Every pseudo-code listing in the paper (Algorithms 1–15) is rendered
+//! here as a function that *emits the template's memory accesses* into a
+//! [`Sink`] — the reuse-distance profiler (E6), the cache hierarchy (E3,
+//! E4, E5) or a plain recording.  The generators are deliberately literal
+//! translations of the paper's loop nests: the point is to measure the
+//! locality the text *claims*, not an optimised rewrite.
+
+use super::trace::{AddressSpace, Region, Sink};
+use crate::util::Rng;
+
+const F32: u64 = 4;
+
+// ---------------------------------------------------------------------------
+// Algorithms 1 & 2 — loop interchange on a column-major stencil
+// ---------------------------------------------------------------------------
+
+/// Loop order for the stencil `A[i,j] = B[i-1,j] + B[i,j] + B[i+1,j]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopOrder {
+    /// Algorithm 1: `for i { for j }` — strides across columns.
+    IBeforeJ,
+    /// Algorithm 2: `for j { for i }` — walks down each column.
+    JBeforeI,
+}
+
+/// Emit the stencil's accesses. Matrices are **column-major** (the paper's
+/// premise: "If the matrices A and B are stored in column-major order, both
+/// the spatial and temporal reuse will be improved by the interchange").
+/// `B` has `n + 2` rows so `i-1`/`i+1` stay in bounds; returns the regions
+/// for attribution.
+pub fn interchange_stencil(
+    n: u64,
+    m: u64,
+    order: LoopOrder,
+    sink: &mut impl Sink,
+) -> (Region, Region) {
+    let mut space = AddressSpace::new();
+    let a = space.alloc("A", n * m, F32);
+    let b = space.alloc("B", (n + 2) * m, F32);
+    // column-major: elem (row, col) lives at col * rows + row
+    let a_at = |i: u64, j: u64| a.at(j * n + i);
+    let b_at = |i: u64, j: u64| b.at(j * (n + 2) + i);
+    let body = |i: u64, j: u64, sink: &mut dyn FnMut(u64, bool)| {
+        sink(b_at(i, j), false);       // B[i-1, j]  (shifted row index)
+        sink(b_at(i + 1, j), false);   // B[i,   j]
+        sink(b_at(i + 2, j), false);   // B[i+1, j]
+        sink(a_at(i, j), true);        // A[i,   j] =
+    };
+    let emit = |addr: u64, is_write: bool, s: &mut dyn Sink| {
+        if is_write { s.write(addr) } else { s.read(addr) }
+    };
+    match order {
+        LoopOrder::IBeforeJ => {
+            for i in 0..n {
+                for j in 0..m {
+                    body(i, j, &mut |addr, w| emit(addr, w, sink));
+                }
+            }
+        }
+        LoopOrder::JBeforeI => {
+            for j in 0..m {
+                for i in 0..n {
+                    body(i, j, &mut |addr, w| emit(addr, w, sink));
+                }
+            }
+        }
+    }
+    (a, b)
+}
+
+// ---------------------------------------------------------------------------
+// Algorithms 8 & 9 + Figure 4 — GD / SGD / MB-GD / SW-SGD data touches
+// ---------------------------------------------------------------------------
+
+/// Gradient-descent flavour for [`gd_iterations`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GdVariant {
+    /// Full-batch GD: every iteration sweeps the complete training set.
+    Gd,
+    /// SGD: one random point per update (paper: n = 1).
+    Sgd,
+    /// Mini-batch GD with batch size `b`.
+    MbGd { b: u64 },
+    /// Sliding-window SGD: `b` fresh points + `w * b` cached points
+    /// re-touched from the previous iterations (§5.1, Fig 4).
+    SwSgd { b: u64, w: u64 },
+}
+
+/// Statistics Fig 4 visualises: what was touched where.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TouchStats {
+    /// Fresh training points loaded from "main memory" (first touch this
+    /// window of iterations).
+    pub new_points: u64,
+    /// Point touches that re-read a recently visited (cache-aged) point.
+    pub cached_points: u64,
+    /// Total gradient contributions computed (= points folded into G).
+    pub grad_contribs: u64,
+    /// Model updates performed.
+    pub updates: u64,
+}
+
+/// Emit `iters` optimisation iterations over a training set of `t` points
+/// with `d` features and a `d`-weight model, following Algorithm 8/9.
+/// Points are visited in a shuffled-epoch order (the paper's Alg 9 first
+/// step: "Randomly shuffle the order of all the training data in T").
+pub fn gd_iterations(
+    t: u64,
+    d: u64,
+    iters: u64,
+    variant: GdVariant,
+    seed: u64,
+    sink: &mut impl Sink,
+) -> TouchStats {
+    let mut space = AddressSpace::new();
+    let train = space.alloc("T", t * d, F32);
+    let model = space.alloc("M", d, F32);
+    let grad = space.alloc("G", d, F32);
+    let mut order: Vec<u64> = (0..t).collect();
+    Rng::new(seed).shuffle(&mut order);
+
+    let mut stats = TouchStats::default();
+    let mut cursor = 0usize; // position in the shuffled epoch order
+    let mut window: Vec<u64> = Vec::new(); // recently visited points (SW)
+
+    let touch_point = |p: u64, sink: &mut dyn Sink| {
+        for f in 0..d {
+            sink.read(train.at(p * d + f));
+        }
+    };
+
+    for _ in 0..iters {
+        // --- gather the points for this update ------------------------
+        let (fresh, cached): (Vec<u64>, Vec<u64>) = match variant {
+            GdVariant::Gd => ((0..t).collect(), Vec::new()),
+            GdVariant::Sgd => {
+                let p = order[cursor % t as usize];
+                cursor += 1;
+                (vec![p], Vec::new())
+            }
+            GdVariant::MbGd { b } => {
+                let mut fresh = Vec::with_capacity(b as usize);
+                for _ in 0..b {
+                    fresh.push(order[cursor % t as usize]);
+                    cursor += 1;
+                }
+                (fresh, Vec::new())
+            }
+            GdVariant::SwSgd { b, w } => {
+                let mut fresh = Vec::with_capacity(b as usize);
+                for _ in 0..b {
+                    fresh.push(order[cursor % t as usize]);
+                    cursor += 1;
+                }
+                let keep = (w * b) as usize;
+                let cached = window.iter().rev().take(keep).cloned()
+                    .collect::<Vec<_>>();
+                (fresh, cached)
+            }
+        };
+        // --- gradient computation (Alg 8 inner loop) -------------------
+        for &p in fresh.iter().chain(cached.iter()) {
+            touch_point(p, sink);
+            for f in 0..d {
+                sink.read(model.at(f)); // w·x inner product
+            }
+            for f in 0..d {
+                sink.write(grad.at(f)); // accumulate into G
+            }
+            stats.grad_contribs += 1;
+        }
+        stats.new_points += fresh.len() as u64;
+        stats.cached_points += cached.len() as u64;
+        // --- model update (Alg 8: "update the weights ...") ------------
+        for f in 0..d {
+            sink.read(grad.at(f));
+            sink.write(model.at(f));
+        }
+        stats.updates += 1;
+        if let GdVariant::SwSgd { b, w } = variant {
+            window.extend(fresh);
+            let cap = (w * b) as usize;
+            if window.len() > cap {
+                let excess = window.len() - cap;
+                window.drain(..excess);
+            }
+        }
+    }
+    stats
+}
+
+// ---------------------------------------------------------------------------
+// Algorithms 10 & 11 — k-NN / PRW scans, separate vs joint (§5.2)
+// ---------------------------------------------------------------------------
+
+/// How the instance-based scan visits test points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScanMode {
+    /// Algorithm 10/11 verbatim: one test point at a time, full RT scan per
+    /// point (train-point reuse distance = |RT|·d).
+    PointAtATime,
+    /// The paper's §4.1.1 optimisation: process test points in batches of
+    /// `tile` so each loaded training point serves the whole tile.
+    Batched { tile: u64 },
+}
+
+/// Emit the distance-computation accesses of an instance-based learner scan
+/// (k-NN and PRW share this shape). `learners` = 1 models a single learner;
+/// `learners` = 2 with `joint = false` replays the scan twice ("separately"
+/// in Table 1), with `joint = true` both learners consume the same pass.
+pub fn instance_scan(
+    rt: u64,
+    p: u64,
+    d: u64,
+    mode: ScanMode,
+    learners: u64,
+    joint: bool,
+    sink: &mut impl Sink,
+) {
+    let mut space = AddressSpace::new();
+    let train = space.alloc("RT", rt * d, F32);
+    let test = space.alloc("P", p * d, F32);
+    let passes = if joint { 1 } else { learners };
+    let per_pass_work = if joint { learners } else { 1 };
+
+    let tile_scan = |lo: u64, hi: u64, s: &mut dyn Sink| {
+        // for all remembered training points (loop 2) ...
+        for j in 0..rt {
+            for q in lo..hi {
+                // compute_distance(i, j): read both feature vectors
+                for f in 0..d {
+                    s.read(test.at(q * d + f));
+                    s.read(train.at(j * d + f));
+                }
+                // the joint pass feeds *both* kernels from one distance:
+                // no extra data-touch work, handled by per_pass_work only
+                // for the (trivial) per-learner accumulators, omitted here.
+                let _ = per_pass_work;
+            }
+        }
+    };
+
+    for _ in 0..passes {
+        match mode {
+            ScanMode::PointAtATime => {
+                for q in 0..p {
+                    tile_scan(q, q + 1, sink);
+                }
+            }
+            ScanMode::Batched { tile } => {
+                let mut lo = 0;
+                while lo < p {
+                    let hi = (lo + tile).min(p);
+                    tile_scan(lo, hi, sink);
+                    lo = hi;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 12 — naive Bayes single-epoch fit
+// ---------------------------------------------------------------------------
+
+/// Emit the naive-Bayes training accesses: one pass over T, one running
+/// stats write per (feature, class-slot). The paper: "for each feature, the
+/// information for that feature is read only once, so there is no reuse of
+/// any individual feature in any given training point."
+pub fn naive_bayes_fit(t: u64, d: u64, classes: u64, sink: &mut impl Sink) {
+    let mut space = AddressSpace::new();
+    let train = space.alloc("T", t * d, F32);
+    let stats = space.alloc("S", classes * d * 2, F32); // mean+var accum
+    let counts = space.alloc("C", classes, F32);
+    let mut rng = Rng::new(0xB8E5);
+    for i in 0..t {
+        let class = rng.below(classes as usize) as u64;
+        for f in 0..d {
+            sink.read(train.at(i * d + f));
+            sink.write(stats.at((class * d + f) * 2));
+            sink.write(stats.at((class * d + f) * 2 + 1));
+        }
+        sink.write(counts.at(class));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 14 — NN forward sweep (matrix-multiply locality, Fig 3)
+// ---------------------------------------------------------------------------
+
+/// Emit the forward-propagation accesses for one layer: `batch` inputs of
+/// width `fan_in` through `neurons` units (Alg 14 loops 2/3/4, verbatim
+/// order: per sample, per neuron, per weight).
+pub fn nn_forward_layer(
+    batch: u64,
+    fan_in: u64,
+    neurons: u64,
+    sink: &mut impl Sink,
+) {
+    let mut space = AddressSpace::new();
+    let acts = space.alloc("a_prev", batch * fan_in, F32);
+    let weights = space.alloc("W", neurons * fan_in, F32);
+    let z = space.alloc("z", batch * neurons, F32);
+    let out = space.alloc("a", batch * neurons, F32);
+    for s in 0..batch {
+        for nrn in 0..neurons {
+            for w in 0..fan_in {
+                sink.read(acts.at(s * fan_in + w));     // input from prev
+                sink.read(weights.at(nrn * fan_in + w)); // weight w_i
+            }
+            sink.write(z.at(s * neurons + nrn));   // record weighted input
+            sink.write(out.at(s * neurons + nrn)); // record activation
+        }
+    }
+}
+
+
+/// Emit the backward-error-propagation accesses for one layer
+/// (Algorithm 15, verbatim order): per mini-batch sample, per neuron of
+/// layer L_i, per weight to layer L_{i-1}: read the error e and the
+/// weight, accumulate dcda; then per L_{i-1} neuron read the stored z
+/// and write the propagated error. "The dependency structures and reuse
+/// distances within the backwards propagation pass are the complement of
+/// those in forward propagation."
+pub fn nn_backward_layer(
+    batch: u64,
+    neurons: u64,   // layer L_i
+    prev: u64,      // layer L_{i-1}
+    sink: &mut impl Sink,
+) {
+    let mut space = AddressSpace::new();
+    let err = space.alloc("e", batch * neurons, F32);
+    let weights = space.alloc("W", neurons * prev, F32);
+    let dcda = space.alloc("dcda", batch * prev, F32);
+    let z = space.alloc("z", batch * prev, F32);
+    let err_prev = space.alloc("e_prev", batch * prev, F32);
+    for s in 0..batch {
+        for nrn in 0..neurons {
+            for p in 0..prev {
+                sink.read(err.at(s * neurons + nrn));
+                sink.read(weights.at(nrn * prev + p));
+                sink.write(dcda.at(s * prev + p));
+            }
+        }
+        for p in 0..prev {
+            sink.read(z.at(s * prev + p));       // stored from fwd (Alg 14)
+            sink.read(dcda.at(s * prev + p));
+            sink.write(err_prev.at(s * prev + p));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 4 + Figure 1 — cross-validation fold streams
+// ---------------------------------------------------------------------------
+
+/// Emit the training-set accesses of k-fold cross-validation over
+/// `learners` learner instances (hyperparameter tuples).
+///
+/// * `shared = false`: the naive nest — each learner instance reads its
+///   k−1 training folds independently (reuse carried at loop level 1, as
+///   the paper says, with distance ≈ |T|).
+/// * `shared = true`: Figure 1 — folds are streamed once and every learner
+///   that needs the fold consumes it from the same pass.
+pub fn cross_validation(
+    t: u64,
+    d: u64,
+    k: u64,
+    learners: u64,
+    shared: bool,
+    sink: &mut impl Sink,
+) {
+    let mut space = AddressSpace::new();
+    let train = space.alloc("T", t * d, F32);
+    let fold = t / k;
+    let read_point = |p: u64, s: &mut dyn Sink| {
+        for f in 0..d {
+            s.read(train.at(p * d + f));
+        }
+    };
+    if shared {
+        // one stream per fold, consumed by all learner instances at once
+        for fid in 0..k {
+            for p in fid * fold..(fid + 1) * fold {
+                // the fold feeds `learners` x (k-1) (learner, cv-split)
+                // consumers, but the *data* is touched once
+                read_point(p, sink);
+                let _ = learners;
+            }
+        }
+    } else {
+        for _l in 0..learners {
+            for test_fold in 0..k {
+                for fid in 0..k {
+                    if fid == test_fold {
+                        continue;
+                    }
+                    for p in fid * fold..(fid + 1) * fold {
+                        read_point(p, sink);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 5 — bootstrap resampling
+// ---------------------------------------------------------------------------
+
+/// Emit the accesses of `n_bootstraps` bootstrap samples (sampling with
+/// replacement) over a training set of `t` points. Returns how many
+/// *distinct* points each bootstrap touched (≈ 0.632 · t in expectation).
+pub fn bootstrap(
+    t: u64,
+    d: u64,
+    n_bootstraps: u64,
+    seed: u64,
+    sink: &mut impl Sink,
+) -> Vec<u64> {
+    let mut space = AddressSpace::new();
+    let train = space.alloc("T", t * d, F32);
+    let mut rng = Rng::new(seed);
+    let mut distinct_counts = Vec::new();
+    for _ in 0..n_bootstraps {
+        let mut seen = vec![false; t as usize];
+        for _ in 0..t {
+            let p = rng.below(t as usize);
+            seen[p] = true;
+            for f in 0..d {
+                sink.read(train.at(p as u64 * d + f));
+            }
+        }
+        distinct_counts.push(seen.iter().filter(|&&s| s).count() as u64);
+    }
+    distinct_counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::cache::Hierarchy;
+    use crate::memsim::reuse::ReuseProfiler;
+    use crate::memsim::trace::VecTrace;
+
+    #[test]
+    fn interchange_emits_same_multiset_of_accesses() {
+        let mut before = VecTrace::new();
+        let mut after = VecTrace::new();
+        interchange_stencil(8, 8, LoopOrder::IBeforeJ, &mut before);
+        interchange_stencil(8, 8, LoopOrder::JBeforeI, &mut after);
+        assert_eq!(before.len(), after.len());
+        assert_eq!(before.unique_addrs(), after.unique_addrs());
+        let mut b: Vec<u64> = before.accesses.iter().map(|a| a.addr).collect();
+        let mut a: Vec<u64> = after.accesses.iter().map(|a| a.addr).collect();
+        b.sort_unstable();
+        a.sort_unstable();
+        assert_eq!(a, b, "interchange must only reorder, never change work");
+    }
+
+    #[test]
+    fn interchange_improves_miss_rate_column_major() {
+        // Small cache so the row-scan order thrashes (the paper's claim).
+        let (n, m) = (64, 64);
+        let mut h_before = Hierarchy::paper_example(16, 64);
+        let mut h_after = Hierarchy::paper_example(16, 64);
+        interchange_stencil(n, m, LoopOrder::IBeforeJ, &mut h_before);
+        interchange_stencil(n, m, LoopOrder::JBeforeI, &mut h_after);
+        assert!(
+            h_after.cycles < h_before.cycles,
+            "interchange should cut cycles: {} !< {}",
+            h_after.cycles,
+            h_before.cycles
+        );
+    }
+
+    #[test]
+    fn sgd_point_reuse_distance_is_training_set_size() {
+        // Paper: "The reuse distance for any training point in both
+        // algorithms is |T|" (in units of points; ours is in addresses,
+        // so |T|·d + model + grad terms bound it). Check the *model*
+        // reuse: distance small & constant, and every point is touched
+        // once per epoch.
+        let (t, d) = (32u64, 4u64);
+        let mut trace = VecTrace::new();
+        let stats = gd_iterations(t, d, t, GdVariant::Sgd, 7, &mut trace);
+        assert_eq!(stats.new_points, t);
+        assert_eq!(stats.updates, t);
+        assert_eq!(stats.grad_contribs, t);
+    }
+
+    #[test]
+    fn gd_touches_everything_every_iteration() {
+        let (t, d) = (16u64, 3u64);
+        let mut trace = VecTrace::new();
+        let stats = gd_iterations(t, d, 4, GdVariant::Gd, 1, &mut trace);
+        assert_eq!(stats.new_points, 4 * t);
+        assert_eq!(stats.updates, 4);
+        // 1 epoch = t·d reads of T; 4 iterations = 4 epochs (paper: GD has
+        // "at least one data epoch per loop iteration")
+        assert_eq!(trace.unique_addrs() as u64, t * d + 2 * d);
+    }
+
+    #[test]
+    fn swsgd_recycles_previous_batches() {
+        let (t, d, b) = (64u64, 2u64, 8u64);
+        let mut trace = VecTrace::new();
+        let stats = gd_iterations(
+            t, d, 6, GdVariant::SwSgd { b, w: 2 }, 3, &mut trace);
+        assert_eq!(stats.new_points, 6 * b);
+        // iter0: 0 cached; iter1: b; iter2..5: 2b
+        assert_eq!(stats.cached_points, b + 2 * b * 4);
+        // Fig 4's point: same fresh-data traffic as MB-GD(b), more
+        // gradient contributions per update.
+        let mut mb = VecTrace::new();
+        let mb_stats = gd_iterations(
+            t, d, 6, GdVariant::MbGd { b }, 3, &mut mb);
+        assert_eq!(stats.new_points, mb_stats.new_points);
+        assert!(stats.grad_contribs > mb_stats.grad_contribs);
+    }
+
+    #[test]
+    fn swsgd_cached_points_hit_in_cache() {
+        // The cached window must actually be cache-resident: its re-touches
+        // should hit while fresh loads miss.
+        let (t, d, b) = (4096u64, 8u64, 16u64);
+        let mut h = Hierarchy::paper_example(4096, 64);
+        gd_iterations(t, d, 32, GdVariant::SwSgd { b, w: 2 }, 5, &mut h);
+        let s = &h.stats()[0];
+        assert!(s.hits > s.misses,
+            "window re-reads should dominate: {s:?}");
+    }
+
+    #[test]
+    fn batched_scan_shortens_train_reuse_distance() {
+        let (rt, p, d) = (64u64, 16u64, 2u64);
+        let mut seq = ReuseProfiler::new();
+        let mut bat = ReuseProfiler::new();
+        instance_scan(rt, p, d, ScanMode::PointAtATime, 1, true, &mut seq);
+        instance_scan(rt, p, d, ScanMode::Batched { tile: 16 }, 1, true,
+                      &mut bat);
+        let r_seq = seq.finish();
+        let r_bat = bat.finish();
+        assert!(r_bat.mean_distance() < r_seq.mean_distance(),
+            "batching must shorten mean reuse distance: {} !< {}",
+            r_bat.mean_distance(), r_seq.mean_distance());
+    }
+
+    #[test]
+    fn joint_scan_halves_data_touches() {
+        let (rt, p, d) = (32u64, 8u64, 3u64);
+        let mut sep = VecTrace::new();
+        let mut joint = VecTrace::new();
+        instance_scan(rt, p, d, ScanMode::PointAtATime, 2, false, &mut sep);
+        instance_scan(rt, p, d, ScanMode::PointAtATime, 2, true, &mut joint);
+        assert_eq!(sep.len(), 2 * joint.len());
+        assert_eq!(sep.unique_addrs(), joint.unique_addrs());
+    }
+
+    #[test]
+    fn naive_bayes_single_epoch_no_train_reuse() {
+        let mut prof = ReuseProfiler::new();
+        naive_bayes_fit(64, 4, 3, &mut prof);
+        let r = prof.finish();
+        // Training reads are all cold; the only warm accesses are the
+        // stats/counters structures.
+        assert_eq!(r.cold, 64 * 4 + 3 * 4 * 2 + 3);
+    }
+
+    #[test]
+    fn nn_forward_weight_reuse_carried_by_batch_loop() {
+        // Paper: "The re-use for the weights ... is carried by loop level 2,
+        // and the distance is the number of neurons multiplied by the number
+        // of weights per neuron" (+ the per-sample activations).
+        let (batch, fan_in, neurons) = (4u64, 8u64, 4u64);
+        let mut prof = ReuseProfiler::new();
+        nn_forward_layer(batch, fan_in, neurons, &mut prof);
+        let r = prof.finish();
+        assert_eq!(r.cold,
+            batch * fan_in + neurons * fan_in + 2 * batch * neurons);
+        assert!(r.total > r.cold, "weights must be reused across samples");
+    }
+
+    #[test]
+    fn nn_backward_is_the_complement_of_forward() {
+        // Alg 15's weight reuse mirrors Alg 14's: carried by the batch
+        // loop; z values saved by the forward pass are read exactly once
+        // per sample in the backward sweep.
+        let (batch, neurons, prev) = (4u64, 4u64, 8u64);
+        let mut fwd = VecTrace::new();
+        nn_forward_layer(batch, prev, neurons, &mut fwd);
+        let mut bwd = VecTrace::new();
+        nn_backward_layer(batch, neurons, prev, &mut bwd);
+        let w_touches = batch * neurons * prev;
+        assert_eq!(fwd.len() as u64, 2 * w_touches + 2 * batch * neurons);
+        assert_eq!(bwd.len() as u64, 3 * w_touches + 3 * batch * prev);
+        let mut prof = ReuseProfiler::new();
+        nn_backward_layer(batch, neurons, prev, &mut prof);
+        let r = prof.finish();
+        assert!(r.total > r.cold, "weights must be reused across samples");
+    }
+
+    #[test]
+    fn fold_stream_reads_t_once_vs_learners_times() {
+        let (t, d, k, learners) = (40u64, 2u64, 5u64, 8u64);
+        let mut naive = VecTrace::new();
+        let mut stream = VecTrace::new();
+        cross_validation(t, d, k, learners, false, &mut naive);
+        cross_validation(t, d, k, learners, true, &mut stream);
+        assert_eq!(stream.len() as u64, t * d);
+        // naive: every learner reads k-1 folds for each of k splits
+        assert_eq!(naive.len() as u64, learners * k * (k - 1) * (t / k) * d);
+        assert_eq!(naive.unique_addrs(), stream.unique_addrs());
+    }
+
+    #[test]
+    fn bootstrap_distinct_fraction_near_632() {
+        let mut trace = VecTrace::new();
+        let counts = bootstrap(1000, 1, 20, 11, &mut trace);
+        let mean = counts.iter().sum::<u64>() as f64 / counts.len() as f64;
+        let frac = mean / 1000.0;
+        assert!((frac - 0.632).abs() < 0.03, "fraction={frac}");
+    }
+}

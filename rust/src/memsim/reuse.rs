@@ -1,0 +1,312 @@
+//! Exact reuse-distance (LRU stack distance) profiler.
+//!
+//! The paper defines: "The **reuse distance** of a data location is the
+//! number of surrounding loop iterations that occur in between accesses to
+//! it" and analyses every algorithm template in those terms (k-NN: |RT|,
+//! SGD: |T|, the model: 1, the gradient: 0, ...).  This profiler measures
+//! the classical formalisation — the number of *distinct* addresses touched
+//! between consecutive accesses to the same address — exactly, in
+//! O(log n) per access (Mattson's stack algorithm with a Fenwick tree).
+//!
+//! Experiment E6 replays the paper's algorithm templates through this
+//! profiler and checks the measured distances against the paper's formulas.
+
+use std::collections::HashMap;
+
+use super::trace::{Access, Sink};
+
+/// Fenwick (binary indexed) tree over access timestamps; a `1` at position
+/// `t` means "the address last touched at time `t` has not been touched
+/// since".  Prefix sums then count distinct addresses in a time window.
+struct Fenwick {
+    tree: Vec<i64>,
+    /// Point values, kept so the tree can be rebuilt when it grows —
+    /// naively resizing a Fenwick tree is WRONG: parent nodes beyond the
+    /// old capacity would be missing all earlier additions.
+    raw: Vec<i64>,
+}
+
+impl Fenwick {
+    fn new(n: usize) -> Self {
+        let cap = (n + 1).next_power_of_two();
+        Self { tree: vec![0; cap], raw: vec![0; cap] }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.raw.len() < n + 1 {
+            let cap = (n + 1).next_power_of_two();
+            self.raw.resize(cap, 0);
+            // rebuild: O(cap), amortised O(1) per access by doubling
+            self.tree = vec![0; cap];
+            for i in 1..cap {
+                self.tree[i] += self.raw[i];
+                let parent = i + (i & i.wrapping_neg());
+                if parent < cap {
+                    let v = self.tree[i];
+                    self.tree[parent] += v;
+                }
+            }
+        }
+    }
+
+    fn add(&mut self, mut i: usize, delta: i64) {
+        i += 1;
+        self.ensure(i);
+        self.raw[i] += delta;
+        while i < self.tree.len() {
+            self.tree[i] += delta;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Sum of positions `[0, i]`.
+    fn prefix(&self, mut i: usize) -> i64 {
+        i += 1;
+        let mut s = 0;
+        let mut idx = i.min(self.tree.len() - 1);
+        while idx > 0 {
+            s += self.tree[idx];
+            idx -= idx & idx.wrapping_neg();
+        }
+        s
+    }
+}
+
+/// Distance histogram + per-access results.
+#[derive(Debug, Default, Clone)]
+pub struct ReuseReport {
+    /// histogram[d] = number of accesses with stack distance exactly d.
+    pub histogram: HashMap<u64, u64>,
+    /// Accesses to never-before-seen addresses (distance = infinity).
+    pub cold: u64,
+    /// Total accesses profiled.
+    pub total: u64,
+}
+
+impl ReuseReport {
+    /// Mean finite reuse distance.
+    pub fn mean_distance(&self) -> f64 {
+        let (mut num, mut den) = (0.0, 0u64);
+        for (&d, &count) in &self.histogram {
+            num += d as f64 * count as f64;
+            den += count;
+        }
+        if den == 0 { f64::NAN } else { num / den as f64 }
+    }
+
+    /// Fraction of (warm) accesses with distance <= `d` — i.e. the hit rate
+    /// of a fully-associative LRU cache holding `d + 1` lines.
+    pub fn hit_rate_at(&self, d: u64) -> f64 {
+        let warm: u64 = self.histogram.values().sum();
+        if warm == 0 {
+            return 0.0;
+        }
+        let hits: u64 = self
+            .histogram
+            .iter()
+            .filter(|(&dist, _)| dist <= d)
+            .map(|(_, &c)| c)
+            .sum();
+        hits as f64 / warm as f64
+    }
+
+    /// The most common finite distance (None if no reuse at all).
+    pub fn modal_distance(&self) -> Option<u64> {
+        self.histogram
+            .iter()
+            .max_by_key(|(&d, &c)| (c, std::cmp::Reverse(d)))
+            .map(|(&d, _)| d)
+    }
+}
+
+/// Streaming exact stack-distance profiler.
+pub struct ReuseProfiler {
+    fenwick: Fenwick,
+    last_time: HashMap<u64, usize>,
+    time: usize,
+    pub report: ReuseReport,
+}
+
+impl Default for ReuseProfiler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReuseProfiler {
+    pub fn new() -> Self {
+        Self {
+            // Small initial capacity: growth (rebuild) is exercised by any
+            // non-trivial trace and is amortised by doubling.
+            fenwick: Fenwick::new(64),
+            last_time: HashMap::new(),
+            time: 0,
+            report: ReuseReport::default(),
+        }
+    }
+
+    /// Profile one address; returns its stack distance (None = cold miss).
+    pub fn observe(&mut self, addr: u64) -> Option<u64> {
+        let t = self.time;
+        self.fenwick.ensure(t + 2);
+        self.report.total += 1;
+        let dist = match self.last_time.insert(addr, t) {
+            None => {
+                self.report.cold += 1;
+                None
+            }
+            Some(prev) => {
+                // distinct addresses touched strictly after `prev`:
+                let d = (self.fenwick.prefix(t) - self.fenwick.prefix(prev))
+                    as u64;
+                *self.report.histogram.entry(d).or_insert(0) += 1;
+                self.fenwick.add(prev, -1);
+                Some(d)
+            }
+        };
+        self.fenwick.add(t, 1);
+        self.time += 1;
+        dist
+    }
+
+    pub fn finish(self) -> ReuseReport {
+        self.report
+    }
+}
+
+impl Sink for ReuseProfiler {
+    fn touch(&mut self, access: Access) {
+        self.observe(access.addr);
+    }
+}
+
+/// Brute-force O(n²) stack distance — the oracle for property tests.
+pub fn brute_force_distances(addrs: &[u64]) -> Vec<Option<u64>> {
+    let mut out = Vec::with_capacity(addrs.len());
+    for (i, &a) in addrs.iter().enumerate() {
+        let prev = addrs[..i].iter().rposition(|&x| x == a);
+        out.push(prev.map(|p| {
+            let mut distinct: Vec<u64> = addrs[p + 1..i].to_vec();
+            distinct.sort_unstable();
+            distinct.dedup();
+            distinct.len() as u64
+        }));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn textbook_sequence() {
+        // a b c a : distance of second `a` is 2 (b, c in between).
+        let mut p = ReuseProfiler::new();
+        assert_eq!(p.observe(1), None);
+        assert_eq!(p.observe(2), None);
+        assert_eq!(p.observe(3), None);
+        assert_eq!(p.observe(1), Some(2));
+        // immediate re-touch: distance 0
+        assert_eq!(p.observe(1), Some(0));
+    }
+
+    #[test]
+    fn repeated_scan_has_distance_n_minus_1() {
+        // Scanning N addresses twice: every warm access distance N-1.
+        let n = 64u64;
+        let mut p = ReuseProfiler::new();
+        for _ in 0..2 {
+            for a in 0..n {
+                p.observe(a);
+            }
+        }
+        let r = p.finish();
+        assert_eq!(r.cold, n);
+        assert_eq!(r.histogram.get(&(n - 1)), Some(&n));
+        assert_eq!(r.modal_distance(), Some(n - 1));
+    }
+
+    #[test]
+    fn hit_rate_matches_lru_semantics() {
+        let mut p = ReuseProfiler::new();
+        for _ in 0..4 {
+            for a in 0..8u64 {
+                p.observe(a);
+            }
+        }
+        let r = p.finish();
+        // Working set is 8: any LRU cache with >= 8 lines hits everything.
+        assert_eq!(r.hit_rate_at(7), 1.0);
+        assert_eq!(r.hit_rate_at(6), 0.0);
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_traces() {
+        check("reuse-vs-brute-force", 40, |g| {
+            let len = g.usize_in(1, 200);
+            let universe = g.usize_in(1, 30) as u64;
+            let addrs: Vec<u64> =
+                (0..len).map(|_| g.u64() % universe).collect();
+            let oracle = brute_force_distances(&addrs);
+            let mut p = ReuseProfiler::new();
+            for (i, &a) in addrs.iter().enumerate() {
+                let got = p.observe(a);
+                prop_assert!(got == oracle[i],
+                    "idx {i}: got {got:?}, oracle {:?} (trace {addrs:?})",
+                    oracle[i]);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn growth_preserves_prefix_sums() {
+        // Regression: traces longer than the initial Fenwick capacity must
+        // keep exact distances (a naive resize loses parent-node sums and
+        // produced wrapped distances near u64::MAX).
+        let n = 2000u64;
+        let mut p = ReuseProfiler::new();
+        for _ in 0..2 {
+            for a in 0..n {
+                p.observe(a);
+            }
+        }
+        let r = p.finish();
+        assert_eq!(r.cold, n);
+        assert_eq!(r.histogram.get(&(n - 1)), Some(&n));
+        assert_eq!(r.histogram.len(), 1, "{:?}",
+                   r.histogram.keys().take(5).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn matches_brute_force_across_growth_boundary() {
+        check("reuse-growth-vs-brute-force", 10, |g| {
+            let len = g.usize_in(100, 400);
+            let universe = g.usize_in(1, 120) as u64;
+            let addrs: Vec<u64> =
+                (0..len).map(|_| g.u64() % universe).collect();
+            let oracle = brute_force_distances(&addrs);
+            let mut p = ReuseProfiler::new();
+            for (i, &a) in addrs.iter().enumerate() {
+                let got = p.observe(a);
+                prop_assert!(got == oracle[i],
+                    "idx {i}: got {got:?}, oracle {:?}", oracle[i]);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mean_distance_simple() {
+        let mut p = ReuseProfiler::new();
+        for a in [1u64, 2, 1, 2] {
+            p.observe(a);
+        }
+        // both warm accesses have distance 1
+        let r = p.finish();
+        assert_eq!(r.mean_distance(), 1.0);
+    }
+}

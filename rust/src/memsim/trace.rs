@@ -1,0 +1,234 @@
+//! Memory access traces: the common currency between the algorithm
+//! templates of the paper (Algorithms 1–15) and the analysis machinery
+//! (reuse-distance profiler, cache hierarchy simulator).
+//!
+//! Addresses are *byte* addresses; data structures are registered as
+//! [`Region`]s so generated traces stay readable ("training point 17,
+//! feature 3" rather than a bare integer).
+
+/// Read/write tag. The paper's first analysis criterion ("are they only
+/// read or also written to?") needs the distinction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Read,
+    Write,
+}
+
+/// One memory touch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Access {
+    pub addr: u64,
+    pub kind: Kind,
+}
+
+/// A named, contiguous array of `elems` elements of `elem_size` bytes.
+#[derive(Debug, Clone)]
+pub struct Region {
+    pub name: String,
+    pub base: u64,
+    pub elems: u64,
+    pub elem_size: u64,
+}
+
+impl Region {
+    /// Byte address of element `i`.
+    #[inline]
+    pub fn at(&self, i: u64) -> u64 {
+        debug_assert!(i < self.elems, "{}[{i}] out of bounds", self.name);
+        self.base + i * self.elem_size
+    }
+
+    /// Byte address of element `(row, col)` of a row-major [rows x cols]
+    /// matrix (pass `cols` as stride).
+    #[inline]
+    pub fn at2(&self, row: u64, col: u64, cols: u64) -> u64 {
+        self.at(row * cols + col)
+    }
+
+    pub fn contains(&self, addr: u64) -> bool {
+        addr >= self.base && addr < self.base + self.elems * self.elem_size
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        self.elems * self.elem_size
+    }
+}
+
+/// Allocates non-overlapping regions in a fake address space.
+#[derive(Debug, Default)]
+pub struct AddressSpace {
+    next: u64,
+    pub regions: Vec<Region>,
+}
+
+/// Alignment between consecutive regions: a full page so regions never
+/// share a cache line (keeps per-structure statistics exact).
+const REGION_ALIGN: u64 = 4096;
+
+impl AddressSpace {
+    pub fn new() -> Self {
+        // Start away from address 0 so "null-ish" bugs are loud.
+        Self { next: REGION_ALIGN, regions: Vec::new() }
+    }
+
+    pub fn alloc(&mut self, name: &str, elems: u64, elem_size: u64) -> Region {
+        let region = Region {
+            name: name.to_string(),
+            base: self.next,
+            elems,
+            elem_size,
+        };
+        let sz = (region.size_bytes() + REGION_ALIGN - 1)
+            / REGION_ALIGN * REGION_ALIGN;
+        self.next += sz.max(REGION_ALIGN);
+        self.regions.push(region.clone());
+        region
+    }
+
+    /// Which region does `addr` fall in (for trace attribution)?
+    pub fn region_of(&self, addr: u64) -> Option<&Region> {
+        self.regions.iter().find(|r| r.contains(addr))
+    }
+}
+
+/// Anything that consumes a stream of accesses: the profiler, the cache
+/// hierarchy, or a plain recording.
+pub trait Sink {
+    fn touch(&mut self, access: Access);
+
+    fn read(&mut self, addr: u64) {
+        self.touch(Access { addr, kind: Kind::Read });
+    }
+
+    fn write(&mut self, addr: u64) {
+        self.touch(Access { addr, kind: Kind::Write });
+    }
+}
+
+/// In-memory recording of a full trace.
+#[derive(Debug, Default)]
+pub struct VecTrace {
+    pub accesses: Vec<Access>,
+}
+
+impl VecTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.accesses.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.accesses.is_empty()
+    }
+
+    /// Number of distinct addresses touched (the "data epoch" footprint).
+    pub fn unique_addrs(&self) -> usize {
+        let mut addrs: Vec<u64> =
+            self.accesses.iter().map(|a| a.addr).collect();
+        addrs.sort_unstable();
+        addrs.dedup();
+        addrs.len()
+    }
+
+    /// Replay into another sink (e.g. record once, feed several cache
+    /// configurations).
+    pub fn replay(&self, sink: &mut impl Sink) {
+        for a in &self.accesses {
+            sink.touch(*a);
+        }
+    }
+}
+
+impl Sink for VecTrace {
+    fn touch(&mut self, access: Access) {
+        self.accesses.push(access);
+    }
+}
+
+/// Fan an access stream out to two sinks at once (e.g. profiler + cache).
+pub struct Tee<'a, A: Sink, B: Sink> {
+    pub a: &'a mut A,
+    pub b: &'a mut B,
+}
+
+impl<A: Sink, B: Sink> Sink for Tee<'_, A, B> {
+    fn touch(&mut self, access: Access) {
+        self.a.touch(access);
+        self.b.touch(access);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions_do_not_overlap() {
+        let mut space = AddressSpace::new();
+        let a = space.alloc("A", 100, 4);
+        let b = space.alloc("B", 7, 8);
+        let c = space.alloc("C", 1, 1);
+        for r in [&a, &b, &c] {
+            for s in [&a, &b, &c] {
+                if r.name != s.name {
+                    assert!(!r.contains(s.base), "{} overlaps {}", r.name,
+                            s.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn region_indexing() {
+        let mut space = AddressSpace::new();
+        let m = space.alloc("M", 12, 4); // 3x4 matrix
+        assert_eq!(m.at(0), m.base);
+        assert_eq!(m.at(5), m.base + 20);
+        assert_eq!(m.at2(1, 2, 4), m.at(6));
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn region_bounds_checked_in_debug() {
+        let mut space = AddressSpace::new();
+        let m = space.alloc("M", 4, 4);
+        let _ = m.at(4);
+    }
+
+    #[test]
+    fn region_of_attributes_addresses() {
+        let mut space = AddressSpace::new();
+        let a = space.alloc("A", 16, 4);
+        let b = space.alloc("B", 16, 4);
+        assert_eq!(space.region_of(a.at(3)).unwrap().name, "A");
+        assert_eq!(space.region_of(b.at(15)).unwrap().name, "B");
+        assert!(space.region_of(0).is_none());
+    }
+
+    #[test]
+    fn vectrace_unique_counts() {
+        let mut t = VecTrace::new();
+        t.read(16);
+        t.read(16);
+        t.write(32);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.unique_addrs(), 2);
+    }
+
+    #[test]
+    fn tee_duplicates_stream() {
+        let mut x = VecTrace::new();
+        let mut y = VecTrace::new();
+        {
+            let mut tee = Tee { a: &mut x, b: &mut y };
+            tee.read(8);
+            tee.write(24);
+        }
+        assert_eq!(x.accesses, y.accesses);
+        assert_eq!(x.len(), 2);
+    }
+}

@@ -1,0 +1,183 @@
+//! Experiment metrics (DESIGN.md system S11): loss curves, counters and
+//! paper-shaped table emitters (markdown + CSV) used by the examples and
+//! the bench harness to print exactly the rows/series the paper reports.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A per-epoch training/validation curve (Fig 5's series).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LossCurve {
+    pub label: String,
+    /// (epoch, train loss, validation loss)
+    pub points: Vec<(usize, f64, f64)>,
+}
+
+impl LossCurve {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, epoch: usize, train: f64, val: f64) {
+        self.points.push((epoch, train, val));
+    }
+
+    pub fn final_val(&self) -> Option<f64> {
+        self.points.last().map(|&(_, _, v)| v)
+    }
+
+    /// First epoch at which the validation loss drops below `threshold`
+    /// (the Fig 5 comparison: "a cost of 0.077 is reached after 30
+    /// epochs ...").
+    pub fn epochs_to_reach(&self, threshold: f64) -> Option<usize> {
+        self.points
+            .iter()
+            .find(|&&(_, _, v)| v <= threshold)
+            .map(|&(e, _, _)| e)
+    }
+
+    /// Render as CSV rows: `label,epoch,train,val`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        for &(e, t, v) in &self.points {
+            let _ = writeln!(out, "{},{},{:.6},{:.6}", self.label, e, t, v);
+        }
+        out
+    }
+}
+
+/// A markdown table builder that prints paper-style result tables.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>,
+               headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(),
+            "row width != header width");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display])
+        -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string())
+            .collect();
+        self.row(&cells)
+    }
+
+    /// Render as github-flavoured markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "### {}", self.title);
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let padded: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.headers, &widths));
+        let sep: Vec<String> =
+            widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "{}", fmt_row(&sep, &widths));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Named monotone counters (data passes, points touched, executions...).
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    map: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, delta: u64) {
+        *self.map.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.map.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.map.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_threshold_search() {
+        let mut c = LossCurve::new("adam-w2");
+        c.push(1, 1.0, 0.9);
+        c.push(2, 0.5, 0.4);
+        c.push(3, 0.3, 0.2);
+        assert_eq!(c.epochs_to_reach(0.4), Some(2));
+        assert_eq!(c.epochs_to_reach(0.1), None);
+        assert_eq!(c.final_val(), Some(0.2));
+    }
+
+    #[test]
+    fn curve_csv_format() {
+        let mut c = LossCurve::new("sgd");
+        c.push(1, 0.5, 0.6);
+        assert_eq!(c.to_csv(), "sgd,1,0.500000,0.600000\n");
+    }
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = Table::new("Table 1", &["scenario", "load (s)"]);
+        t.row(&["joint".into(), "3.7".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Table 1"));
+        assert!(md.lines().count() == 4);
+        assert!(md.contains("| joint"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_rejects_ragged_rows() {
+        Table::new("t", &["a", "b"]).row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut c = Counters::new();
+        c.add("points", 5);
+        c.add("points", 3);
+        assert_eq!(c.get("points"), 8);
+        assert_eq!(c.get("missing"), 0);
+    }
+}

@@ -1,0 +1,228 @@
+//! Optimizers over flat parameter vectors (DESIGN.md system S7).
+//!
+//! Fig 5 sweeps SGD, Momentum, Adam and Adagrad; all four are implemented
+//! here on the rust side against the flat gradient the `mlp_grad_b*`
+//! artifacts return.  Keeping the update in rust (a) needs one artifact
+//! per batch size instead of per (optimizer × batch size) and (b) makes
+//! the paper's §4.3 observation — "applying weight decay at each step may
+//! be more expensive due to the complete traversal of the model" — a
+//! directly measurable L3 cost.
+
+/// The Fig 5 optimizer family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Momentum,
+    Adam,
+    Adagrad,
+}
+
+impl OptimizerKind {
+    pub const ALL: [OptimizerKind; 4] = [
+        OptimizerKind::Sgd,
+        OptimizerKind::Momentum,
+        OptimizerKind::Adam,
+        OptimizerKind::Adagrad,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerKind::Sgd => "sgd",
+            OptimizerKind::Momentum => "momentum",
+            OptimizerKind::Adam => "adam",
+            OptimizerKind::Adagrad => "adagrad",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    /// Default learning rate per optimizer (the paper's "preliminary set
+    /// of experiments ... to determine the best hyper-parameters" stands
+    /// in for these choices; see EXPERIMENTS.md E1 for the sweep).
+    pub fn default_lr(&self) -> f32 {
+        match self {
+            OptimizerKind::Sgd => 0.1,
+            OptimizerKind::Momentum => 0.05,
+            OptimizerKind::Adam => 1e-3,
+            OptimizerKind::Adagrad => 1e-2,
+        }
+    }
+
+    /// Build a fresh optimizer state for `params` parameters.
+    pub fn build(&self, lr: f32, params: usize) -> Optimizer {
+        let state = match self {
+            OptimizerKind::Sgd => State::Sgd,
+            OptimizerKind::Momentum => State::Momentum {
+                mu: 0.9,
+                v: vec![0.0; params],
+            },
+            OptimizerKind::Adam => State::Adam {
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+                m: vec![0.0; params],
+                v: vec![0.0; params],
+                t: 0,
+            },
+            OptimizerKind::Adagrad => State::Adagrad {
+                eps: 1e-8,
+                acc: vec![0.0; params],
+            },
+        };
+        Optimizer { kind: *self, lr, state }
+    }
+}
+
+enum State {
+    Sgd,
+    Momentum { mu: f32, v: Vec<f32> },
+    Adam {
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        m: Vec<f32>,
+        v: Vec<f32>,
+        t: u64,
+    },
+    Adagrad { eps: f32, acc: Vec<f32> },
+}
+
+/// A stateful optimizer over a flat parameter vector.
+pub struct Optimizer {
+    pub kind: OptimizerKind,
+    pub lr: f32,
+    state: State,
+}
+
+impl Optimizer {
+    /// Apply one update in place: `params -= lr * f(grad)`.
+    /// This is the paper's "complete traversal of the model" (§4.3) — a
+    /// single fused pass over the flat vector, no allocation.
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        let lr = self.lr;
+        match &mut self.state {
+            State::Sgd => {
+                for (p, &g) in params.iter_mut().zip(grad) {
+                    *p -= lr * g;
+                }
+            }
+            State::Momentum { mu, v } => {
+                for ((p, &g), v) in params.iter_mut().zip(grad)
+                    .zip(v.iter_mut()) {
+                    *v = *mu * *v + g;
+                    *p -= lr * *v;
+                }
+            }
+            State::Adam { beta1, beta2, eps, m, v, t } => {
+                *t += 1;
+                let t = *t as i32;
+                let bc1 = 1.0 - beta1.powi(t);
+                let bc2 = 1.0 - beta2.powi(t);
+                for (((p, &g), m), v) in params.iter_mut().zip(grad)
+                    .zip(m.iter_mut()).zip(v.iter_mut()) {
+                    *m = *beta1 * *m + (1.0 - *beta1) * g;
+                    *v = *beta2 * *v + (1.0 - *beta2) * g * g;
+                    let mh = *m / bc1;
+                    let vh = *v / bc2;
+                    *p -= lr * mh / (vh.sqrt() + *eps);
+                }
+            }
+            State::Adagrad { eps, acc } => {
+                for ((p, &g), a) in params.iter_mut().zip(grad)
+                    .zip(acc.iter_mut()) {
+                    *a += g * g;
+                    *p -= lr * g / (a.sqrt() + *eps);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn sgd_closed_form() {
+        let mut o = OptimizerKind::Sgd.build(0.5, 2);
+        let mut p = vec![1.0, -2.0];
+        o.step(&mut p, &[2.0, 2.0]);
+        assert_eq!(p, vec![0.0, -3.0]);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut o = OptimizerKind::Momentum.build(1.0, 1);
+        let mut p = vec![0.0];
+        o.step(&mut p, &[1.0]); // v = 1,      p = -1
+        o.step(&mut p, &[1.0]); // v = 1.9,    p = -2.9
+        assert!((p[0] + 2.9).abs() < 1e-6, "p={}", p[0]);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // With bias correction, |Δp| of step 1 ≈ lr regardless of gradient
+        // scale (the classic Adam sanity check).
+        for &scale in &[1e-3f32, 1.0, 1e3] {
+            let mut o = OptimizerKind::Adam.build(0.01, 1);
+            let mut p = vec![0.0];
+            o.step(&mut p, &[scale]);
+            assert!((p[0].abs() - 0.01).abs() < 1e-4,
+                "step size {} for grad scale {scale}", p[0].abs());
+        }
+    }
+
+    #[test]
+    fn adagrad_decays_effective_rate() {
+        let mut o = OptimizerKind::Adagrad.build(1.0, 1);
+        let mut p = vec![0.0];
+        o.step(&mut p, &[1.0]);
+        let first = p[0].abs();
+        let before = p[0];
+        o.step(&mut p, &[1.0]);
+        let second = (p[0] - before).abs();
+        assert!(second < first, "rate must decay: {second} !< {first}");
+    }
+
+    #[test]
+    fn all_optimizers_descend_a_quadratic() {
+        // f(p) = 0.5 * |p|^2, grad = p: every optimizer must reduce |p|.
+        check("optimizers-descend", 20, |g| {
+            for kind in OptimizerKind::ALL {
+                let n = g.usize_in(1, 32);
+                let mut p = g.f32_vec(n, 5.0);
+                let p0: f32 = p.iter().map(|x| x * x).sum();
+                let mut o = kind.build(kind.default_lr(), n);
+                for _ in 0..50 {
+                    let grad = p.clone();
+                    o.step(&mut p, &grad);
+                }
+                let p1: f32 = p.iter().map(|x| x * x).sum();
+                prop_assert!(p1 < p0 || p0 == 0.0,
+                    "{:?} did not descend: {p0} -> {p1}", kind);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kind_name_roundtrip() {
+        for kind in OptimizerKind::ALL {
+            assert_eq!(OptimizerKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(OptimizerKind::parse("rmsprop"), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_grad_length_panics() {
+        let mut o = OptimizerKind::Sgd.build(0.1, 2);
+        let mut p = vec![0.0, 0.0];
+        o.step(&mut p, &[1.0]);
+    }
+}

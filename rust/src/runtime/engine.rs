@@ -1,0 +1,314 @@
+//! PJRT execution engine: loads AOT'd HLO-text artifacts and runs them.
+//!
+//! One [`Engine`] owns the PJRT CPU client and a registry of compiled
+//! executables keyed by artifact name. Training data that is reused across
+//! calls (e.g. the Table 1 training matrix, streamed against many test
+//! tiles) is uploaded once via [`Engine::upload`] and passed as a
+//! [`DeviceTensor`] — the locality guideline applied to the host↔device
+//! boundary.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::HostTensor;
+
+/// A device-resident input (uploaded once, reused across executions).
+pub struct DeviceTensor {
+    pub buffer: xla::PjRtBuffer,
+    pub spec_dims: Vec<usize>,
+}
+
+/// Inputs to an execution: host tensors are uploaded per call, device
+/// tensors are already resident.
+pub enum Input<'a> {
+    Host(&'a HostTensor),
+    Device(&'a DeviceTensor),
+    /// Borrowed f32 slice + dims: the zero-copy-on-the-rust-side hot path
+    /// (one host→device copy total; no clone, no Literal intermediate).
+    Slice(&'a [f32], &'a [usize]),
+}
+
+/// Execution statistics (the L3 hot-path observables for E9).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub uploads: u64,
+    pub exec_seconds: f64,
+}
+
+/// The PJRT runtime: client + compiled executable registry.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    /// Open the artifact directory (must contain `manifest.txt`) on the
+    /// PJRT CPU client. Artifacts compile lazily on first use; call
+    /// [`Engine::preload`] to front-load compilation.
+    pub fn open(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&artifact_dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            dir: artifact_dir.to_path_buf(),
+            executables: HashMap::new(),
+            stats: EngineStats::default(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (and cache) the named artifact.
+    pub fn preload(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        // Validate the name against the manifest before touching disk.
+        self.manifest.get(name)?;
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?)
+            .map_err(|e| anyhow::anyhow!(
+                "parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Upload a host tensor to the device for reuse across calls.
+    pub fn upload(&mut self, t: &HostTensor) -> Result<DeviceTensor> {
+        self.stats.uploads += 1;
+        let buffer = match t {
+            HostTensor::F32 { dims, data } => self
+                .client
+                .buffer_from_host_buffer::<f32>(data, dims, None),
+            HostTensor::I32 { dims, data } => self
+                .client
+                .buffer_from_host_buffer::<i32>(data, dims, None),
+        }
+        .map_err(|e| anyhow::anyhow!("upload: {e:?}"))?;
+        Ok(DeviceTensor { buffer, spec_dims: t.dims().to_vec() })
+    }
+
+    /// Execute artifact `name` on host-tensor inputs with full interface
+    /// validation against the manifest.
+    pub fn execute(&mut self, name: &str, inputs: &[&HostTensor])
+        -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.get(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: got {} inputs, manifest says {}",
+                  inputs.len(), spec.inputs.len());
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if !t.matches(s) {
+                bail!("{name}: input {i} is {:?} {:?}, manifest says \
+                       {:?} {:?}", t.dtype(), t.dims(), s.dtype, s.dims);
+            }
+        }
+        self.preload(name)?;
+        let started = std::time::Instant::now();
+        let exe = &self.executables[name];
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let out = self.collect_outputs(name, &spec, result)?;
+        self.stats.executions += 1;
+        self.stats.exec_seconds += started.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// Execute with a mix of device-resident and host inputs (the hot
+    /// path: per-call tensors are uploaded, resident tensors are not).
+    pub fn execute_mixed(&mut self, name: &str, inputs: &[Input])
+        -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.get(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: got {} inputs, manifest says {}",
+                  inputs.len(), spec.inputs.len());
+        }
+        self.preload(name)?;
+        // Upload host inputs; reuse device inputs.
+        let mut owned: Vec<Option<xla::PjRtBuffer>> = Vec::new();
+        for (i, inp) in inputs.iter().enumerate() {
+            match inp {
+                Input::Host(t) => {
+                    if !t.matches(&spec.inputs[i]) {
+                        bail!("{name}: input {i} shape/type mismatch");
+                    }
+                    let b = match t {
+                        HostTensor::F32 { dims, data } => self.client
+                            .buffer_from_host_buffer::<f32>(data, dims,
+                                                            None),
+                        HostTensor::I32 { dims, data } => self.client
+                            .buffer_from_host_buffer::<i32>(data, dims,
+                                                            None),
+                    }
+                    .map_err(|e| anyhow::anyhow!("upload: {e:?}"))?;
+                    owned.push(Some(b));
+                }
+                Input::Slice(data, dims) => {
+                    let s = &spec.inputs[i];
+                    if s.dtype != super::manifest::DType::F32
+                        || *dims != s.dims.as_slice()
+                        || data.len() != s.elems() {
+                        bail!("{name}: slice input {i} {:?} x{} != \
+                               manifest {:?}", dims, data.len(), s.dims);
+                    }
+                    let b = self.client
+                        .buffer_from_host_buffer::<f32>(data, dims, None)
+                        .map_err(|e| anyhow::anyhow!("upload: {e:?}"))?;
+                    owned.push(Some(b));
+                }
+                Input::Device(d) => {
+                    if d.spec_dims != spec.inputs[i].dims {
+                        bail!("{name}: device input {i} dims {:?} != \
+                               manifest {:?}", d.spec_dims,
+                              spec.inputs[i].dims);
+                    }
+                    owned.push(None);
+                }
+            }
+        }
+        let started = std::time::Instant::now();
+        let exe = &self.executables[name];
+        let bufs: Vec<&xla::PjRtBuffer> = inputs
+            .iter()
+            .zip(&owned)
+            .map(|(inp, own)| match inp {
+                Input::Host(_) | Input::Slice(..) => own.as_ref().unwrap(),
+                Input::Device(d) => &d.buffer,
+            })
+            .collect();
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&bufs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let out = self.collect_outputs(name, &spec, result)?;
+        self.stats.executions += 1;
+        self.stats.exec_seconds += started.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    fn collect_outputs(
+        &self,
+        name: &str,
+        spec: &ArtifactSpec,
+        result: Vec<Vec<xla::PjRtBuffer>>,
+    ) -> Result<Vec<HostTensor>> {
+        let buf = result
+            .first()
+            .and_then(|r| r.first())
+            .with_context(|| format!("{name}: empty execution result"))?;
+        let mut lit = buf.to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("readback: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple root.
+        let elements = lit.decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("{name}: tuple decompose: {e:?}"))?;
+        if elements.len() != spec.outputs.len() {
+            bail!("{name}: artifact returned {} outputs, manifest says {}",
+                  elements.len(), spec.outputs.len());
+        }
+        elements
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(l, s)| HostTensor::from_literal(l, s))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine() -> Option<Engine> {
+        let dir = artifact_dir();
+        if dir.join("manifest.txt").exists() {
+            Some(Engine::open(&dir).expect("engine open"))
+        } else {
+            None // artifacts not built; integration tests cover this path
+        }
+    }
+
+    #[test]
+    fn open_requires_manifest() {
+        assert!(Engine::open(Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn input_arity_is_validated() {
+        let Some(mut e) = engine() else { return };
+        let bad = HostTensor::f32(vec![1], vec![0.0]);
+        let err = e.execute("mlp_eval", &[&bad]).unwrap_err();
+        assert!(err.to_string().contains("inputs"), "{err}");
+    }
+
+    #[test]
+    fn input_shape_is_validated() {
+        let Some(mut e) = engine() else { return };
+        let a = HostTensor::f32(vec![3], vec![0.0; 3]);
+        let b = HostTensor::f32(vec![3], vec![0.0; 3]);
+        let c = HostTensor::f32(vec![3], vec![0.0; 3]);
+        let err = e.execute("mlp_eval", &[&a, &b, &c]).unwrap_err();
+        assert!(err.to_string().contains("manifest"), "{err}");
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let Some(mut e) = engine() else { return };
+        assert!(e.execute("no_such_graph", &[]).is_err());
+    }
+
+    #[test]
+    fn corrupt_hlo_text_is_an_error_not_a_crash() {
+        // A manifest entry whose .hlo.txt is garbage must fail cleanly.
+        let dir = std::env::temp_dir()
+            .join(format!("lm_corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"),
+                       "bad|f32[1]|f32[1]\n").unwrap();
+        std::fs::write(dir.join("bad.hlo.txt"),
+                       "HloModule bad\nthis is not hlo\n").unwrap();
+        let mut e = Engine::open(&dir).unwrap();
+        let err = e.preload("bad").unwrap_err();
+        assert!(err.to_string().contains("bad"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_entry_without_file_is_an_error() {
+        let dir = std::env::temp_dir()
+            .join(format!("lm_missing_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"),
+                       "ghost|f32[1]|f32[1]\n").unwrap();
+        let mut e = Engine::open(&dir).unwrap();
+        assert!(e.preload("ghost").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

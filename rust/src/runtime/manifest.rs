@@ -1,0 +1,209 @@
+//! Artifact manifest parser.
+//!
+//! `make artifacts` writes `artifacts/manifest.txt`, one line per compiled
+//! graph:
+//!
+//! ```text
+//! <name>|<in-spec>,...|<out-spec>,...
+//! spec := dtype '[' dims ']'     e.g. f32[128,784] · i32[256] · f32[]
+//! ```
+//!
+//! The grammar is deliberately trivial — no serde available offline, and
+//! the manifest is machine-generated (python/compile/aot.py).
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element types the artifacts use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype `{other}`"),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.dims.is_empty()
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        let open = s.find('[')
+            .with_context(|| format!("spec `{s}`: missing ["))?;
+        if !s.ends_with(']') {
+            bail!("spec `{s}`: missing ]");
+        }
+        let dtype = DType::parse(&s[..open])?;
+        let body = &s[open + 1..s.len() - 1];
+        let dims = if body.is_empty() {
+            Vec::new()
+        } else {
+            body.split(',')
+                .map(|d| d.trim().parse::<usize>()
+                    .with_context(|| format!("spec `{s}`: bad dim `{d}`")))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Self { dtype, dims })
+    }
+}
+
+/// One artifact's interface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest: artifact name -> interface.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut artifacts = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 3 {
+                bail!("manifest line {}: expected 3 fields, got {}",
+                      lineno + 1, parts.len());
+            }
+            let spec = ArtifactSpec {
+                name: parts[0].to_string(),
+                inputs: parse_specs(parts[1])?,
+                outputs: parse_specs(parts[2])?,
+            };
+            if artifacts.insert(spec.name.clone(), spec).is_some() {
+                bail!("manifest line {}: duplicate artifact `{}`",
+                      lineno + 1, parts[0]);
+            }
+        }
+        Ok(Self { artifacts })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name)
+            .with_context(|| format!("artifact `{name}` not in manifest"))
+    }
+}
+
+/// Split "f32[1,2],i32[]" into specs. Commas inside brackets belong to the
+/// dims list, so split on commas at bracket depth zero.
+fn parse_specs(s: &str) -> Result<Vec<TensorSpec>> {
+    let mut specs = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '[' => depth += 1,
+            ']' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                specs.push(TensorSpec::parse(s[start..i].trim())?);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        specs.push(TensorSpec::parse(s[start..].trim())?);
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+mlp_grad_b128|f32[99710],f32[128,784],f32[128,10]|f32[],f32[99710]
+knn_prw_joint|f32[20480,128],f32[20480,2],f32[256,128]|i32[256],i32[256]
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let g = m.get("mlp_grad_b128").unwrap();
+        assert_eq!(g.inputs.len(), 3);
+        assert_eq!(g.inputs[1].dims, vec![128, 784]);
+        assert_eq!(g.outputs[0].dims, Vec::<usize>::new());
+        assert!(g.outputs[0].is_scalar());
+        let j = m.get("knn_prw_joint").unwrap();
+        assert_eq!(j.outputs[0].dtype, DType::I32);
+    }
+
+    #[test]
+    fn spec_elems() {
+        let s = TensorSpec::parse("f32[128,784]").unwrap();
+        assert_eq!(s.elems(), 128 * 784);
+        assert_eq!(TensorSpec::parse("f32[]").unwrap().elems(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("name|f32[2]").is_err());
+        assert!(Manifest::parse("n|f32(2)|f32[]").is_err());
+        assert!(Manifest::parse("n|f64x[2]|f32[]").is_err());
+        assert!(Manifest::parse("a|f32[1]|f32[]\na|f32[1]|f32[]").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Manifest::parse("# header\n\nx|f32[1]|f32[]\n").unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Integration sanity: if `make artifacts` has run, its manifest
+        // must parse and include the Fig 5 grad graphs.
+        let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.txt");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            for b in [128, 256, 384] {
+                assert!(m.get(&format!("mlp_grad_b{b}")).is_ok());
+            }
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime (DESIGN.md system S6): loads the AOT'd HLO-text artifacts
+//! produced by `make artifacts` and executes them from the L3 hot path.
+//!
+//! Interchange is HLO *text* — jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects in proto form; the text parser reassigns
+//! ids (see /opt/xla-example/README.md and python/compile/aot.py).
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{DeviceTensor, Engine, EngineStats, Input};
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+pub use tensor::HostTensor;

@@ -1,0 +1,174 @@
+//! Typed host tensors: the boundary type between rust data structures and
+//! XLA literals/buffers.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// A host-side tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(),
+            "dims {dims:?} vs {} elements", data.len());
+        HostTensor::F32 { dims, data }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(),
+            "dims {dims:?} vs {} elements", data.len());
+        HostTensor::I32 { dims, data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { dims: vec![], data: vec![v] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { dims, .. } | HostTensor::I32 { dims, .. } =>
+                dims,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    /// Borrow as f32 slice (error on i32 tensors).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            HostTensor::F32 { .. } => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Scalar extraction (f32).
+    pub fn scalar(&self) -> Result<f32> {
+        let data = self.as_f32()?;
+        if data.len() != 1 {
+            bail!("expected scalar, got {:?}", self.dims());
+        }
+        Ok(data[0])
+    }
+
+    /// Does this tensor match an artifact interface spec?
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.dtype() == spec.dtype && self.dims() == spec.dims.as_slice()
+    }
+
+    /// Convert to an XLA literal for execution.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32 { dims, data } => {
+                let l = xla::Literal::vec1(data);
+                if dims.is_empty() {
+                    // rank-0: reshape [1] -> []
+                    l.reshape(&[])?
+                } else {
+                    let d: Vec<i64> = dims.iter().map(|&x| x as i64)
+                        .collect();
+                    l.reshape(&d)?
+                }
+            }
+            HostTensor::I32 { dims, data } => {
+                let l = xla::Literal::vec1(data);
+                if dims.is_empty() {
+                    l.reshape(&[])?
+                } else {
+                    let d: Vec<i64> = dims.iter().map(|&x| x as i64)
+                        .collect();
+                    l.reshape(&d)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read back from an XLA literal, shaped/typed by `spec` (PJRT output
+    /// literals report their own shape; the manifest spec is the contract
+    /// we validate against).
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec)
+        -> Result<Self> {
+        let t = match spec.dtype {
+            DType::F32 => {
+                let data = lit.to_vec::<f32>()?;
+                if data.len() != spec.elems() {
+                    bail!("artifact returned {} f32 elems, manifest says {}",
+                          data.len(), spec.elems());
+                }
+                HostTensor::F32 { dims: spec.dims.clone(), data }
+            }
+            DType::I32 => {
+                let data = lit.to_vec::<i32>()?;
+                if data.len() != spec.elems() {
+                    bail!("artifact returned {} i32 elems, manifest says {}",
+                          data.len(), spec.elems());
+                }
+                HostTensor::I32 { dims: spec.dims.clone(), data }
+            }
+        };
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_validate_shape() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.elems(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn dtype_accessors_enforce_type() {
+        let f = HostTensor::f32(vec![1], vec![1.0]);
+        let i = HostTensor::i32(vec![1], vec![1]);
+        assert!(f.as_f32().is_ok() && f.as_i32().is_err());
+        assert!(i.as_i32().is_ok() && i.as_f32().is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let s = HostTensor::scalar_f32(3.5);
+        assert!(s.dims().is_empty());
+        assert_eq!(s.scalar().unwrap(), 3.5);
+        assert!(HostTensor::f32(vec![2], vec![1.0, 2.0]).scalar().is_err());
+    }
+
+    #[test]
+    fn matches_spec() {
+        let spec = TensorSpec { dtype: DType::F32, dims: vec![2, 2] };
+        assert!(HostTensor::f32(vec![2, 2], vec![0.0; 4]).matches(&spec));
+        assert!(!HostTensor::f32(vec![4], vec![0.0; 4]).matches(&spec));
+        assert!(!HostTensor::i32(vec![2, 2], vec![0; 4]).matches(&spec));
+    }
+}

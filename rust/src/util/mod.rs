@@ -1,0 +1,12 @@
+//! Shared substrates: PRNG, property testing, timing, thread pool.
+//!
+//! All of these replace crates that are unavailable in the offline build
+//! environment (see DESIGN.md §1).
+
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod timing;
+
+pub use rng::Rng;
+pub use timing::{fmt_duration, Stats, Stopwatch};

@@ -1,0 +1,116 @@
+//! Small fixed-size thread pool (tokio substitute for this workload).
+//!
+//! The coordinator's event loop is synchronous by design — the paper's
+//! experiments are explicitly "all sequential (executed on one core)"
+//! (§5) — but dataset synthesis, artifact pre-compilation and the benchmark
+//! matrix fan out nicely, so a scoped `Pool::run_all` is provided.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool executing boxed jobs from a shared queue.
+pub struct Pool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // channel closed -> shut down
+                    }
+                })
+            })
+            .collect();
+        Self { tx: Some(tx), workers }
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx.as_ref().expect("pool closed").send(Box::new(job)).unwrap();
+    }
+
+    /// Run all closures to completion and return their results in order.
+    pub fn run_all<T: Send + 'static>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
+    ) -> Vec<T> {
+        let n = jobs.len();
+        let (rtx, rrx) = mpsc::channel();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let rtx = rtx.clone();
+            self.submit(move || {
+                let out = job();
+                let _ = rtx.send((i, out));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, out) = rrx.recv().expect("worker died");
+            slots[i] = Some(out);
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_all_preserves_order() {
+        let pool = Pool::new(4);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..32)
+            .map(|i: usize| Box::new(move || i * i) as Box<_>)
+            .collect();
+        let out = pool.run_all(jobs);
+        assert_eq!(out, (0..32).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn submit_executes_everything() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = Pool::new(2);
+            for _ in 0..64 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Drop waits for queue drain via channel close + join.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn single_thread_pool_is_sequential_safe() {
+        let pool = Pool::new(1);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..8usize).map(|i| Box::new(move || i) as Box<_>).collect();
+        assert_eq!(pool.run_all(jobs), (0..8).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,402 @@
+//! Cross-layer integration tests: rust coordinator ↔ AOT artifacts.
+//!
+//! These tests require `make artifacts` to have run (the repo ships the
+//! manifest + HLO text); every test cross-checks an artifact against the
+//! pure-rust reference implementation of the same algorithm.
+
+use std::path::{Path, PathBuf};
+
+use locality_ml::coordinator::{
+    run_joint, run_separate, train_swsgd, TrainSpec,
+};
+use locality_ml::data::{chembl_like, mnist_like, write_dataset, Dataset};
+use locality_ml::learners::{
+    instance, joint_scan, linear, mlp, NaiveBayes,
+};
+use locality_ml::opt::OptimizerKind;
+use locality_ml::runtime::{Engine, HostTensor};
+use locality_ml::util::Rng;
+
+fn artifact_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Fresh engine per test: the xla handles hold raw PJRT pointers (not
+/// `Sync`), and artifact compilation is lazy, so each test only pays for
+/// the graphs it actually touches.
+fn with_engine<T>(f: impl FnOnce(&mut Engine) -> T) -> T {
+    let mut engine = Engine::open(&artifact_dir())
+        .expect("artifacts missing — run `make artifacts` first");
+    f(&mut engine)
+}
+
+fn rand_tensor(dims: &[usize], seed: u64, scale: f32) -> HostTensor {
+    let mut rng = Rng::new(seed);
+    let n: usize = dims.iter().product();
+    HostTensor::f32(dims.to_vec(),
+                    (0..n).map(|_| scale * rng.normal()).collect())
+}
+
+// ---------------------------------------------------------------------------
+// every artifact loads, compiles, and honours its manifest interface
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_artifacts_execute_with_manifest_shapes() {
+    with_engine(|e| {
+        let names: Vec<String> =
+            e.manifest().artifacts.keys().cloned().collect();
+        assert_eq!(names.len(), 13, "expected 13 artifacts: {names:?}");
+        for name in names {
+            let spec = e.spec(&name).unwrap().clone();
+            let inputs: Vec<HostTensor> = spec
+                .inputs
+                .iter()
+                .enumerate()
+                .map(|(i, s)| rand_tensor(&s.dims, 100 + i as u64, 0.1))
+                .collect();
+            let refs: Vec<&HostTensor> = inputs.iter().collect();
+            let out = e.execute(&name, &refs)
+                .unwrap_or_else(|err| panic!("{name}: {err}"));
+            assert_eq!(out.len(), spec.outputs.len(), "{name} arity");
+            for (o, s) in out.iter().zip(&spec.outputs) {
+                assert!(o.matches(s), "{name}: output shape mismatch");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// linear models: artifact == pure-rust reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn linear_coupled_artifact_matches_rust_reference() {
+    with_engine(|e| {
+        let d = 128;
+        let b = 256;
+        let mut rng = Rng::new(5);
+        let w_lr: Vec<f32> = (0..d).map(|_| 0.1 * rng.normal()).collect();
+        let w_svm: Vec<f32> = (0..d).map(|_| 0.1 * rng.normal()).collect();
+        let x: Vec<f32> = (0..b * d).map(|_| rng.normal()).collect();
+        let y: Vec<f32> =
+            (0..b).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                .collect();
+        let out = e.execute("linear_coupled", &[
+            &HostTensor::f32(vec![d], w_lr.clone()),
+            &HostTensor::f32(vec![d], w_svm.clone()),
+            &HostTensor::f32(vec![b, d], x.clone()),
+            &HostTensor::f32(vec![b], y.clone()),
+        ]).unwrap();
+        let ((w_lr2, loss_lr), (w_svm2, loss_svm)) = linear::coupled_step(
+            &w_lr, &w_svm, &x, &y, linear::LR, linear::LAMBDA);
+        let got_lr = out[0].as_f32().unwrap();
+        let got_svm = out[1].as_f32().unwrap();
+        for f in 0..d {
+            assert!((got_lr[f] - w_lr2[f]).abs() < 1e-4,
+                "lr weight {f}: {} vs {}", got_lr[f], w_lr2[f]);
+            assert!((got_svm[f] - w_svm2[f]).abs() < 1e-4,
+                "svm weight {f}: {} vs {}", got_svm[f], w_svm2[f]);
+        }
+        assert!((out[2].scalar().unwrap() - loss_lr).abs() < 1e-3);
+        assert!((out[3].scalar().unwrap() - loss_svm).abs() < 1e-3);
+    });
+}
+
+#[test]
+fn linear_separate_artifacts_match_coupled_artifact() {
+    with_engine(|e| {
+        let d = 128;
+        let b = 256;
+        let mut rng = Rng::new(9);
+        let w: Vec<f32> = (0..d).map(|_| 0.1 * rng.normal()).collect();
+        let x: Vec<f32> = (0..b * d).map(|_| rng.normal()).collect();
+        let y: Vec<f32> =
+            (0..b).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                .collect();
+        let wt = HostTensor::f32(vec![d], w.clone());
+        let xt = HostTensor::f32(vec![b, d], x.clone());
+        let yt = HostTensor::f32(vec![b], y.clone());
+        let coupled =
+            e.execute("linear_coupled", &[&wt, &wt, &xt, &yt]).unwrap();
+        let lr = e.execute("linear_lr", &[&wt, &xt, &yt]).unwrap();
+        let svm = e.execute("linear_svm", &[&wt, &xt, &yt]).unwrap();
+        // XLA may vectorise the [B,2]-panel and [B,1] matmuls differently,
+        // so agreement is to f32 accumulation order, not bitwise.
+        for (a, b) in coupled[0].as_f32().unwrap().iter()
+            .zip(lr[0].as_f32().unwrap()) {
+            assert!((a - b).abs() < 1e-5, "lr weights diverged: {a} vs {b}");
+        }
+        for (a, b) in coupled[1].as_f32().unwrap().iter()
+            .zip(svm[0].as_f32().unwrap()) {
+            assert!((a - b).abs() < 1e-5,
+                "svm weights diverged: {a} vs {b}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// naive Bayes: artifact == pure-rust reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn nb_fit_artifact_matches_rust_reference() {
+    with_engine(|e| {
+        let ds = mnist_like(6400, 11);
+        let out = e.execute("nb_fit", &[
+            &HostTensor::f32(vec![ds.n, ds.d], ds.features.clone()),
+            &HostTensor::f32(vec![ds.n, ds.n_classes], ds.one_hot()),
+        ]).unwrap();
+        let nb = NaiveBayes::fit(&ds);
+        let counts = out[0].as_f32().unwrap();
+        let mean = out[1].as_f32().unwrap();
+        let var = out[2].as_f32().unwrap();
+        assert_eq!(counts, &nb.counts[..]);
+        for i in 0..nb.mean.len() {
+            assert!((mean[i] - nb.mean[i]).abs() < 1e-3,
+                "mean[{i}]: {} vs {}", mean[i], nb.mean[i]);
+            assert!((var[i] - nb.var[i]).abs()
+                < 1e-2 * nb.var[i].max(1.0),
+                "var[{i}]: {} vs {}", var[i], nb.var[i]);
+        }
+    });
+}
+
+#[test]
+fn nb_predict_artifact_matches_rust_reference() {
+    with_engine(|e| {
+        let ds = mnist_like(6400, 13);
+        let nb = NaiveBayes::fit(&ds);
+        let tile = 256;
+        let q = &ds.features[..tile * ds.d];
+        let out = e.execute("nb_predict", &[
+            &HostTensor::f32(vec![ds.n_classes], nb.counts.clone()),
+            &HostTensor::f32(vec![ds.n_classes, ds.d], nb.mean.clone()),
+            &HostTensor::f32(vec![ds.n_classes, ds.d], nb.var.clone()),
+            &HostTensor::f32(vec![tile, ds.d], q.to_vec()),
+        ]).unwrap();
+        let got = out[0].as_i32().unwrap();
+        let want = nb.predict(q);
+        let agree = got.iter().zip(&want).filter(|(a, b)| a == b).count();
+        // f32 vs f64 likelihood accumulation may flip a borderline point
+        assert!(agree >= tile - 2, "nb predictions agree {agree}/{tile}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// joint k-NN + PRW: artifact == pure-rust scan, joint == separate
+// ---------------------------------------------------------------------------
+
+#[test]
+fn joint_artifact_matches_rust_scan_on_one_tile() {
+    with_engine(|e| {
+        let (train, test) = chembl_like(20480 + 256, 17).split(20480);
+        let out = e.execute("knn_prw_joint", &[
+            &HostTensor::f32(vec![train.n, train.d],
+                             train.features.clone()),
+            &HostTensor::f32(vec![train.n, train.n_classes],
+                             train.one_hot()),
+            &HostTensor::f32(vec![256, test.d], test.features.clone()),
+        ]).unwrap();
+        let (knn_ref, prw_ref) = joint_scan(
+            &train, &test.features, test.d, instance::K,
+            instance::BANDWIDTH);
+        let knn = out[0].as_i32().unwrap();
+        let prw = out[1].as_i32().unwrap();
+        // identical up to f32 distance ties; require near-total agreement
+        let knn_agree =
+            knn.iter().zip(&knn_ref).filter(|(a, b)| a == b).count();
+        let prw_agree =
+            prw.iter().zip(&prw_ref).filter(|(a, b)| a == b).count();
+        assert!(knn_agree >= 254, "knn agreement {knn_agree}/256");
+        assert!(prw_agree >= 254, "prw agreement {prw_agree}/256");
+    });
+}
+
+#[test]
+fn table1_joint_equals_separate_and_is_faster() {
+    with_engine(|e| {
+        let (train, test) = chembl_like(20480 + 512, 19).split(20480);
+        let tmp = std::env::temp_dir();
+        let train_path = tmp.join(format!("lm_it_train_{}.lmld",
+                                          std::process::id()));
+        let test_path = tmp.join(format!("lm_it_test_{}.lmld",
+                                         std::process::id()));
+        write_dataset(&train, &train_path).unwrap();
+        write_dataset(&test, &test_path).unwrap();
+        let sep = run_separate(e, &train_path, &test_path).unwrap();
+        let joint = run_joint(e, &train_path, &test_path).unwrap();
+        std::fs::remove_file(&train_path).ok();
+        std::fs::remove_file(&test_path).ok();
+        assert_eq!(sep.knn, joint.knn, "fusion changed k-NN predictions");
+        assert_eq!(sep.prw, joint.prw, "fusion changed PRW predictions");
+        // Timing under `cargo test` runs concurrently with other tests on
+        // this single-core box, so only the dominant (test-phase) timing
+        // is asserted, with slack; the precise ratios are the bench's job.
+        assert!(joint.test_secs < sep.test_secs * 1.1,
+            "joint must not be slower: {} vs {}", joint.test_secs,
+            sep.test_secs);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// MLP training: gradient path descends; SW-SGD window helps (Fig 5 shape)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mlp_grad_artifacts_agree_across_batch_sizes() {
+    // The 3 grad graphs embody the same model: the b256 gradient on a
+    // duplicated b128 batch equals the b128 gradient (mean over points).
+    with_engine(|e| {
+        let theta = mlp::init_params(3);
+        let mut rng = Rng::new(23);
+        let x128: Vec<f32> =
+            (0..128 * 784).map(|_| rng.normal()).collect();
+        let mut y128 = vec![0.0f32; 128 * 10];
+        for i in 0..128 {
+            y128[i * 10 + (i % 10)] = 1.0;
+        }
+        let mut x256 = x128.clone();
+        x256.extend_from_slice(&x128);
+        let mut y256 = y128.clone();
+        y256.extend_from_slice(&y128);
+        let theta_t = HostTensor::f32(vec![mlp::N_PARAMS], theta);
+        let o128 = e.execute("mlp_grad_b128", &[
+            &theta_t,
+            &HostTensor::f32(vec![128, 784], x128),
+            &HostTensor::f32(vec![128, 10], y128),
+        ]).unwrap();
+        let o256 = e.execute("mlp_grad_b256", &[
+            &theta_t,
+            &HostTensor::f32(vec![256, 784], x256),
+            &HostTensor::f32(vec![256, 10], y256),
+        ]).unwrap();
+        let l128 = o128[0].scalar().unwrap();
+        let l256 = o256[0].scalar().unwrap();
+        assert!((l128 - l256).abs() < 1e-4, "{l128} vs {l256}");
+        let g128 = o128[1].as_f32().unwrap();
+        let g256 = o256[1].as_f32().unwrap();
+        let max_diff = g128.iter().zip(g256)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-4, "gradient diff {max_diff}");
+    });
+}
+
+#[test]
+fn swsgd_window_converges_no_slower_than_plain() {
+    // The Fig 5 claim at miniature scale: with the same number of fresh
+    // points, the cached-window scenario reaches a lower or equal loss.
+    with_engine(|e| {
+        let (train, val) = mnist_like(1280 + 256, 29).split(1280);
+        let run = |e: &mut Engine, window: usize| {
+            let spec = TrainSpec {
+                optimizer: OptimizerKind::Sgd,
+                lr: None,
+                window,
+                batch: 128,
+                epochs: 4,
+                seed: 31,
+            };
+            train_swsgd(e, &train, &val, &spec).unwrap()
+                .final_val().unwrap()
+        };
+        let plain = run(e, 0);
+        let windowed = run(e, 2);
+        assert!(windowed <= plain * 1.05,
+            "window hurt convergence: w2={windowed:.4} w0={plain:.4}");
+    });
+}
+
+#[test]
+fn native_rust_mlp_gradient_matches_artifact() {
+    // The full three-layer loop closed from the rust side: the
+    // hand-written Alg 14/15 backprop must produce the same loss and
+    // gradient as the jax/pallas AOT artifact.
+    with_engine(|e| {
+        let b = 128;
+        let theta = mlp::init_params(47);
+        let mut rng = Rng::new(48);
+        let x: Vec<f32> =
+            (0..b * mlp::INPUT_DIM).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0f32; b * mlp::N_CLASSES];
+        for s in 0..b {
+            y[s * mlp::N_CLASSES + rng.below(mlp::N_CLASSES)] = 1.0;
+        }
+        let out = e.execute("mlp_grad_b128", &[
+            &HostTensor::f32(vec![mlp::N_PARAMS], theta.clone()),
+            &HostTensor::f32(vec![b, mlp::INPUT_DIM], x.clone()),
+            &HostTensor::f32(vec![b, mlp::N_CLASSES], y.clone()),
+        ]).unwrap();
+        let mut native = locality_ml::learners::NativeMlp::new(theta, b);
+        let native_loss = native.loss_and_grad(&x, &y);
+        let artifact_loss = out[0].scalar().unwrap();
+        assert!((native_loss - artifact_loss).abs() < 1e-3,
+            "loss: native {native_loss} vs artifact {artifact_loss}");
+        let g_art = out[1].as_f32().unwrap();
+        let g_nat = native.grad();
+        let mut max_diff = 0.0f32;
+        for (a, n) in g_art.iter().zip(g_nat) {
+            max_diff = max_diff.max((a - n).abs());
+        }
+        assert!(max_diff < 1e-3, "gradient max diff {max_diff}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// swsgd fused kernel artifact == rust logistic reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn swsgd_linear_grad_artifact_matches_logistic_math() {
+    with_engine(|e| {
+        let d = 128;
+        let r = 384;
+        let mut rng = Rng::new(37);
+        let w: Vec<f32> = (0..d).map(|_| 0.05 * rng.normal()).collect();
+        let x: Vec<f32> = (0..r * d).map(|_| rng.normal()).collect();
+        let y: Vec<f32> =
+            (0..r).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                .collect();
+        let out = e.execute("swsgd_linear_grad", &[
+            &HostTensor::f32(vec![d], w.clone()),
+            &HostTensor::f32(vec![r, d], x.clone()),
+            &HostTensor::f32(vec![r], y.clone()),
+        ]).unwrap();
+        // reference: summed logistic loss & gradient (learners::linear
+        // computes means, so scale by r)
+        let (_, mean_loss) = linear::lr_step(&w, &x, &y, 0.0);
+        let want_loss = mean_loss * r as f32;
+        let got_loss = out[0].scalar().unwrap();
+        assert!((got_loss - want_loss).abs() < want_loss * 1e-3,
+            "{got_loss} vs {want_loss}");
+        // gradient: recompute via lr_step with lr=1, b-normalised
+        let (w2, _) = linear::lr_step(&w, &x, &y, 1.0);
+        let got_grad = out[1].as_f32().unwrap();
+        for f in 0..d {
+            let want = (w[f] - w2[f]) * r as f32; // un-normalise the mean
+            assert!((got_grad[f] - want).abs() < 1e-2,
+                "grad[{f}]: {} vs {want}", got_grad[f]);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// dataset round-trip feeds the runtime without copies going stale
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dataset_io_roundtrip_preserves_learner_results() {
+    let ds = chembl_like(600, 41);
+    let tmp = std::env::temp_dir()
+        .join(format!("lm_it_rt_{}.lmld", std::process::id()));
+    write_dataset(&ds, &tmp).unwrap();
+    let back: Dataset = locality_ml::data::read_dataset(&tmp).unwrap();
+    std::fs::remove_file(&tmp).ok();
+    let (train_a, test_a) = ds.split(500);
+    let (train_b, test_b) = back.split(500);
+    assert_eq!(
+        joint_scan(&train_a, &test_a.features, test_a.d, 5, 8.0),
+        joint_scan(&train_b, &test_b.features, test_b.d, 5, 8.0),
+    );
+}
