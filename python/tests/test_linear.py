@@ -7,6 +7,11 @@ bit-for-bit the same models as training them separately.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment"
+)
 from hypothesis import given, settings, strategies as st
 
 from compile import linear

@@ -1,0 +1,23 @@
+//! Bench E12 — the L1-native kernel layer: naive row-at-a-time loops vs
+//! the cache-blocked kernels, at n = 256 / 512 / 1024.
+//!
+//! Writes the timings to `BENCH_kernels.json` at the repo root — the
+//! perf-trajectory baseline future PRs compare against. Regenerate with:
+//!
+//! ```bash
+//! cargo bench --bench bench_kernels
+//! # or, with size control:
+//! cargo run --release -- kernels --sizes 256,512,1024 \
+//!     --out-json ../BENCH_kernels.json
+//! ```
+
+use std::path::PathBuf;
+
+use locality_ml::cli::commands::cmd_kernels;
+
+fn main() -> anyhow::Result<()> {
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../BENCH_kernels.json");
+    cmd_kernels(&[256, 512, 1024], Some(out.as_path()))?;
+    Ok(())
+}

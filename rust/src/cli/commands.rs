@@ -328,6 +328,119 @@ pub fn cmd_fig4() -> Result<Table> {
     Ok(table)
 }
 
+/// E12 — the L1-native kernel layer: naive row-at-a-time loops vs the
+/// cache-blocked kernels (tiles autotuned from the memsim hierarchy).
+/// Optionally writes the timings as JSON (the `BENCH_kernels.json`
+/// baseline future PRs compare against).
+pub fn cmd_kernels(sizes: &[usize], out_json: Option<&Path>)
+    -> Result<Table> {
+    use crate::kernels::{
+        coupled_step_tiled, matmul_naive, matmul_tiled,
+        pairwise_sq_dists_naive, pairwise_sq_dists_tiled, TileConfig,
+    };
+    use crate::learners::linear;
+    use crate::util::{Rng, Stopwatch};
+
+    /// Best-of-`reps` wall time of `f`, in seconds.
+    fn time_best(reps: usize, mut f: impl FnMut()) -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let sw = Stopwatch::start();
+            f();
+            best = best.min(sw.elapsed_secs());
+        }
+        best
+    }
+
+    let tiles = TileConfig::westmere();
+    let mut table = Table::new(
+        "L1-native kernels — naive vs cache-blocked \
+         (tiles from the memsim cache model)",
+        &["kernel", "shape", "naive (s)", "tiled (s)", "speedup"]);
+    let mut records: Vec<(String, String, f64, f64)> = Vec::new();
+    let mut rng = Rng::new(42);
+    let reps = 2;
+
+    for &n in sizes {
+        // matmul n×n×n
+        let a: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut c = vec![0.0f32; n * n];
+        let naive =
+            time_best(reps, || matmul_naive(&a, &b, &mut c, n, n, n));
+        let tiled = time_best(reps, || {
+            matmul_tiled(&a, &b, &mut c, n, n, n, &tiles)
+        });
+        records.push(("matmul".into(), format!("{n}x{n}x{n}"), naive,
+                      tiled));
+
+        // pairwise distances: n train rows × 256 queries, d = 64
+        let d = 64;
+        let queries = n.min(256);
+        let train: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let q: Vec<f32> =
+            (0..queries * d).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0f32; queries * n];
+        let naive = time_best(reps, || {
+            pairwise_sq_dists_naive(&train, &q, d, &mut out)
+        });
+        let tiled = time_best(reps, || {
+            pairwise_sq_dists_tiled(&train, &q, d, &mut out, &tiles)
+        });
+        records.push(("pairwise-sq-dists".into(),
+                      format!("{queries}q x {n}t x {d}d"), naive, tiled));
+
+        // fused coupled LR+SVM: batch n, d = 256
+        let d = 256;
+        let w0: Vec<f32> = (0..d).map(|_| 0.1 * rng.normal()).collect();
+        let w1: Vec<f32> = (0..d).map(|_| 0.1 * rng.normal()).collect();
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let y: Vec<f32> = (0..n)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        let naive = time_best(reps, || {
+            crate::bench::black_box(linear::coupled_step_naive(
+                &w0, &w1, &x, &y, linear::LR, linear::LAMBDA));
+        });
+        let tiled = time_best(reps, || {
+            crate::bench::black_box(coupled_step_tiled(
+                &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &tiles));
+        });
+        records.push(("coupled-lr-svm".into(), format!("b={n} d={d}"),
+                      naive, tiled));
+    }
+
+    for (kernel, shape, naive, tiled) in &records {
+        table.row(&[kernel.clone(), shape.clone(),
+                    format!("{naive:.6}"), format!("{tiled:.6}"),
+                    format!("{:.2}x", naive / tiled)]);
+    }
+    println!("{}", table.to_markdown());
+
+    if let Some(path) = out_json {
+        let mut json = String::from("{\n");
+        json.push_str("  \"schema\": \"locality-ml/bench-kernels/v1\",\n");
+        json.push_str(&format!(
+            "  \"tiles\": {{\"mc\": {}, \"kc\": {}, \"nc\": {}}},\n",
+            tiles.mc, tiles.kc, tiles.nc));
+        json.push_str("  \"results\": [\n");
+        for (i, (kernel, shape, naive, tiled)) in
+            records.iter().enumerate() {
+            let comma = if i + 1 < records.len() { "," } else { "" };
+            json.push_str(&format!(
+                "    {{\"kernel\": \"{kernel}\", \"shape\": \"{shape}\", \
+                 \"naive_s\": {naive:.6}, \"tiled_s\": {tiled:.6}, \
+                 \"speedup\": {:.3}}}{comma}\n",
+                naive / tiled));
+        }
+        json.push_str("  ]\n}\n");
+        std::fs::write(path, json)
+            .with_context(|| format!("writing {}", path.display()))?;
+        eprintln!("# kernel timings -> {}", path.display());
+    }
+    Ok(table)
+}
+
 /// `info` — artifact inventory + platform.
 pub fn cmd_info(artifacts: &Path) -> Result<()> {
     let engine = Engine::open(artifacts)?;

@@ -1,0 +1,189 @@
+//! Tile-level fused coupled LR+SVM batch step (paper §4.3, extended).
+//!
+//! The paper couples logistic regression and the primal SVM at **row**
+//! level: one traversal of each training row computes both inner
+//! products, then both gradient contributions. This kernel extends the
+//! coupling to **tile** level: the batch is processed in `rb × kc` tiles
+//! of the design matrix (sized by [`TileConfig::coupled_rows`] /
+//! `TileConfig::kc` so a tile plus the four `kc`-wide weight/gradient
+//! panels fit the L1 budget), and each resident tile feeds *both* models
+//! in both phases:
+//!
+//! 1. inner-product phase — the tile is swept feature-block by
+//!    feature-block, accumulating the LR and SVM dot products for every
+//!    row in the tile against the L1-resident weight panels;
+//! 2. residual phase — per-row losses and gradient scalars for both
+//!    models (pure row-local arithmetic, no matrix traffic);
+//! 3. gradient phase — the *still cache-hot* tile is swept again,
+//!    accumulating both gradients into the resident panels.
+//!
+//! The naive step reads each row once per phase from wherever it lives;
+//! here the second sweep hits L1. All accumulation orders (dot products
+//! over ascending features, gradients and losses over ascending rows)
+//! match `learners::linear::coupled_step_naive` exactly, so the fused
+//! step is bit-identical to the reference — asserted by the tests.
+
+use super::tile::TileConfig;
+
+/// Logistic sigmoid — the single shared implementation; the learner
+/// reference (`learners::linear`) uses this same fn, so the kernel's
+/// bit-identical contract cannot be voided by the two drifting apart.
+pub(crate) fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// One fused coupled minibatch step over row-major `x: [b×d]` with ±1
+/// labels `y`. Returns `((w_lr', lr loss), (w_svm', svm loss))`, exactly
+/// as `learners::linear::coupled_step` does.
+pub fn coupled_step_tiled(
+    w_lr: &[f32],
+    w_svm: &[f32],
+    x: &[f32],
+    y: &[f32],
+    lr: f32,
+    lam: f32,
+    t: &TileConfig,
+) -> ((Vec<f32>, f32), (Vec<f32>, f32)) {
+    let d = w_lr.len();
+    assert_eq!(w_svm.len(), d);
+    let b = y.len();
+    assert_eq!(x.len(), b * d);
+    let mut g_lr = vec![0.0f32; d];
+    let mut g_svm = vec![0.0f32; d];
+    let mut loss_lr = 0.0f32;
+    let mut loss_svm = 0.0f32;
+    let rb = t.coupled_rows();
+    let kc = t.kc.max(1);
+    let mut p_lr = vec![0.0f32; rb];
+    let mut p_svm = vec![0.0f32; rb];
+    let mut r_lr = vec![0.0f32; rb];
+    let mut r_svm = vec![0.0f32; rb];
+    for i0 in (0..b).step_by(rb) {
+        let ihi = (i0 + rb).min(b);
+        let rows = ihi - i0;
+        // phase 1: both inner products, feature-block by feature-block
+        p_lr[..rows].fill(0.0);
+        p_svm[..rows].fill(0.0);
+        for f0 in (0..d).step_by(kc) {
+            let fhi = (f0 + kc).min(d);
+            let wl = &w_lr[f0..fhi];
+            let ws = &w_svm[f0..fhi];
+            for i in i0..ihi {
+                let row = &x[i * d + f0..i * d + fhi];
+                let mut pl = p_lr[i - i0];
+                let mut ps = p_svm[i - i0];
+                for (f, &xv) in row.iter().enumerate() {
+                    pl += xv * wl[f];
+                    ps += xv * ws[f];
+                }
+                p_lr[i - i0] = pl;
+                p_svm[i - i0] = ps;
+            }
+        }
+        // phase 2: per-row residuals + losses (row order, both models)
+        for i in i0..ihi {
+            let m = -y[i] * p_lr[i - i0];
+            loss_lr += m.max(0.0) + (-m.abs()).exp().ln_1p();
+            r_lr[i - i0] = -y[i] * sigmoid(m);
+            let margin = 1.0 - y[i] * p_svm[i - i0];
+            r_svm[i - i0] = if margin > 0.0 {
+                loss_svm += margin;
+                -y[i]
+            } else {
+                0.0
+            };
+        }
+        // phase 3: both gradients from the cache-hot tile
+        for f0 in (0..d).step_by(kc) {
+            let fhi = (f0 + kc).min(d);
+            for i in i0..ihi {
+                let rl = r_lr[i - i0];
+                let rs = r_svm[i - i0];
+                let row = &x[i * d + f0..i * d + fhi];
+                let gl = &mut g_lr[f0..fhi];
+                let gs = &mut g_svm[f0..fhi];
+                for (f, &xv) in row.iter().enumerate() {
+                    gl[f] += rl * xv;
+                    gs[f] += rs * xv;
+                }
+            }
+        }
+    }
+    let wsq: f32 = w_svm.iter().map(|v| v * v).sum();
+    loss_lr /= b as f32;
+    loss_svm = loss_svm / b as f32 + 0.5 * lam * wsq;
+    let scale = lr / b as f32;
+    let w_lr2: Vec<f32> =
+        w_lr.iter().zip(&g_lr).map(|(w, g)| w - scale * g).collect();
+    let w_svm2: Vec<f32> = w_svm
+        .iter()
+        .zip(&g_svm)
+        .map(|(w, g)| w - scale * g - lr * lam * w)
+        .collect();
+    ((w_lr2, loss_lr), (w_svm2, loss_svm))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learners::linear;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn fused_step_is_bit_identical_to_the_naive_reference() {
+        check("coupled-tiled-vs-naive", 40, |g| {
+            let d = g.usize_in(1, 70);
+            let b = g.usize_in(1, 70);
+            let w0 = g.f32_vec(d, 1.0);
+            let w1 = g.f32_vec(d, 1.0);
+            let x = g.f32_vec(b * d, 2.0);
+            let y: Vec<f32> = (0..b)
+                .map(|_| if g.bool() { 1.0 } else { -1.0 })
+                .collect();
+            // tiny ragged tiles AND the autotuned config
+            let configs = [
+                TileConfig { mc: 3, kc: g.usize_in(1, 9), nc: 3,
+                             l1_f32: g.usize_in(8, 128) },
+                TileConfig::westmere(),
+            ];
+            let want = linear::coupled_step_naive(
+                &w0, &w1, &x, &y, linear::LR, linear::LAMBDA);
+            for t in configs {
+                let got = coupled_step_tiled(
+                    &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t);
+                prop_assert!(got == want,
+                    "fused step diverged from reference with {t:?}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parity_within_tolerance_on_larger_batches() {
+        // The ISSUE-level contract: ≤ 1e-4 everywhere, ragged shapes
+        // included (exact equality above is the stronger invariant).
+        check("coupled-tolerance", 8, |g| {
+            let d = g.usize_in(100, 200);
+            let b = g.usize_in(100, 200);
+            let w0 = g.f32_vec(d, 0.5);
+            let w1 = g.f32_vec(d, 0.5);
+            let x = g.f32_vec(b * d, 1.0);
+            let y: Vec<f32> = (0..b)
+                .map(|_| if g.bool() { 1.0 } else { -1.0 })
+                .collect();
+            let ((wl, ll), (ws, ls)) = linear::coupled_step_naive(
+                &w0, &w1, &x, &y, linear::LR, linear::LAMBDA);
+            let ((wl2, ll2), (ws2, ls2)) = coupled_step_tiled(
+                &w0, &w1, &x, &y, linear::LR, linear::LAMBDA,
+                &TileConfig::westmere());
+            for f in 0..d {
+                prop_assert!((wl[f] - wl2[f]).abs() < 1e-4, "lr w[{f}]");
+                prop_assert!((ws[f] - ws2[f]).abs() < 1e-4, "svm w[{f}]");
+            }
+            prop_assert!((ll - ll2).abs() < 1e-4, "lr loss");
+            prop_assert!((ls - ls2).abs() < 1e-4, "svm loss");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,57 @@
+//! **L1-native kernels** (DESIGN.md layer L1, rust side): cache-blocked
+//! f32 compute paths that apply the paper's locality guidelines to the
+//! crate's own hot loops, mirroring the Pallas kernel layer
+//! (`python/compile/kernels/`) point for point.
+//!
+//! | kernel | mirrors | paper hook |
+//! |---|---|---|
+//! | [`matmul_tiled`] (+ bias / transpose-acc variants) | `kernels/matmul.py` | Fig 3 / Alg 14–15 loop nests |
+//! | [`pairwise_sq_dists_tiled`] | `kernels/distance.py` | Alg 10/11 distance pass |
+//! | [`coupled_step_tiled`] | `linear_coupled` graph | §4.3 coupled LR+SVM |
+//!
+//! # Tiling scheme
+//!
+//! Every kernel blocks its loops so the operand that is *reused* stays
+//! resident in a cache level while the operand that is *streamed* passes
+//! through once:
+//!
+//! * **matmul** — `i-k-j` order inside `MC × KC × NC` blocks. The inner
+//!   loop walks a row of `B` and a row of `C` with unit stride; a
+//!   `KC × NC` panel of `B` is L1-resident across an `MC`-row block of
+//!   `A` (L2-resident). Ragged edges are handled by clamping every tile
+//!   to the matrix bounds, so no shape restrictions apply.
+//! * **pairwise distances** — train-row × query-row tiles sized so both
+//!   fit the L1 budget together; each train row fetched from memory is
+//!   reused against the whole query tile instead of once per query.
+//! * **coupled LR+SVM** — the §4.3 row-level coupling lifted to tiles:
+//!   an `rb × kc` tile of the design matrix feeds the inner-product and
+//!   gradient phases of *both* models while cache-hot.
+//!
+//! Tile sizes are not hardcoded: [`TileConfig::for_levels`] derives them
+//! from the same [`crate::memsim::cache::LevelConfig`] parameters the
+//! memory-hierarchy simulator runs on ([`TileConfig::westmere`] is the
+//! paper's §5 testbed). The simulator predicts the miss-rate effects;
+//! these kernels realise them on the host running the experiments.
+//!
+//! # Correctness contract
+//!
+//! Every tiled kernel sums exactly the same multiset of terms as its
+//! naive reference, and the naive paths stay in-tree as oracles. The
+//! distance and coupled kernels also preserve accumulation *order*, so
+//! they are bit-identical to their references; the matmul micro-kernel
+//! reassociates within 4-deep groups for speed, so its parity contract
+//! is ≤ 1e-4. Property tests sweep random shapes — including sizes not
+//! divisible by the tiles — and assert these bounds.
+
+pub mod coupled;
+pub mod distance;
+pub mod matmul;
+pub mod tile;
+
+pub use coupled::coupled_step_tiled;
+pub use distance::{pairwise_sq_dists_naive, pairwise_sq_dists_tiled};
+pub use matmul::{
+    matmul_acc_tiled, matmul_bias_tiled, matmul_naive, matmul_tiled,
+    matmul_tn_acc_naive, matmul_tn_acc_tiled,
+};
+pub use tile::TileConfig;

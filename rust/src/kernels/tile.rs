@@ -1,0 +1,152 @@
+//! Tile-size selection driven by the cache model.
+//!
+//! Instead of hardcoding block sizes, [`TileConfig`] derives them from
+//! [`LevelConfig`] parameters — the same data the `memsim` hierarchy
+//! simulates — so the native kernels block for the machine the paper
+//! reasons about (§5.1), and re-deriving for a different hierarchy is one
+//! constructor call.
+//!
+//! Sizing rule (classic register/L1/L2 blocking, applied at f32
+//! granularity with half-capacity budgets to leave room for the streams
+//! the model does not account for):
+//!
+//! * `kc × nc` — the L1-resident panel of the stationary operand; `kc`
+//!   and `nc` are balanced at `⌊√(L1/2 elems)⌋` rounded down to a power
+//!   of two.
+//! * `mc × kc` — the L2-resident block of the streamed operand:
+//!   `mc = (L2/2 elems) / kc`, clamped to `[8, 1024]`.
+//! * `l1_f32`  — the raw half-L1 element budget, used by the non-matmul
+//!   kernels (pairwise distances, fused coupled step) whose working sets
+//!   depend on runtime dimensions.
+
+use crate::memsim::cache::{westmere_levels, LevelConfig};
+
+const F32_BYTES: usize = 4;
+
+/// Cache-blocking parameters for the native f32 kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileConfig {
+    /// Rows of the streamed operand per L2-resident block.
+    pub mc: usize,
+    /// Shared (reduction) dimension per L1-resident panel.
+    pub kc: usize,
+    /// Columns per L1-resident panel.
+    pub nc: usize,
+    /// Half of L1 capacity, in f32 elements (working-set budget).
+    pub l1_f32: usize,
+}
+
+fn floor_pow2(x: usize) -> usize {
+    if x <= 1 {
+        1
+    } else {
+        1 << (usize::BITS - 1 - x.leading_zeros())
+    }
+}
+
+impl TileConfig {
+    /// Derive tile sizes from an ordered cache hierarchy (innermost
+    /// first). Missing levels fall back to Westmere-like ratios.
+    pub fn for_levels(levels: &[LevelConfig]) -> Self {
+        let l1_bytes = levels
+            .first()
+            .map(|l| l.size_bytes as usize)
+            .unwrap_or(32 << 10);
+        let l2_bytes = levels
+            .get(1)
+            .map(|l| l.size_bytes as usize)
+            .unwrap_or(8 * l1_bytes);
+        let l1_f32 = (l1_bytes / 2 / F32_BYTES).max(64);
+        let l2_f32 = (l2_bytes / 2 / F32_BYTES).max(l1_f32);
+        let kc = floor_pow2((l1_f32 as f64).sqrt() as usize).max(8);
+        let nc = floor_pow2(l1_f32 / kc).max(8);
+        let mc = floor_pow2(l2_f32 / kc).clamp(8, 1024);
+        Self { mc, kc, nc, l1_f32 }
+    }
+
+    /// Tiles for the paper's Westmere testbed — the default for every
+    /// rewired learner path.
+    pub fn westmere() -> Self {
+        Self::for_levels(&westmere_levels())
+    }
+
+    /// Row-tile sizes `(queries, train rows)` for the pairwise-distance
+    /// kernel: both tiles of `d`-wide rows must fit the L1 budget
+    /// together so the train tile is reused across the whole query tile.
+    pub fn pair_tiles(&self, d: usize) -> (usize, usize) {
+        let rows = (self.l1_f32 / (2 * d.max(1))).clamp(1, 512);
+        (rows, rows)
+    }
+
+    /// Batch-row tile for the fused coupled LR+SVM step: an `rb × kc`
+    /// tile of the design matrix plus the four `kc`-wide weight/gradient
+    /// panels must fit the L1 budget.
+    pub fn coupled_rows(&self) -> usize {
+        (self.l1_f32.saturating_sub(4 * self.kc) / self.kc.max(1))
+            .clamp(1, 512)
+    }
+}
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        Self::westmere()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn westmere_tiles_fit_their_levels() {
+        // L1d 32 KiB → 4096 f32 budget → balanced 64×64 panel;
+        // L2 256 KiB → 32768 f32 budget → mc = 512.
+        let t = TileConfig::westmere();
+        assert_eq!((t.mc, t.kc, t.nc), (512, 64, 64));
+        assert_eq!(t.l1_f32, 4096);
+        assert!(t.kc * t.nc * F32_BYTES <= 32 << 10);
+        assert!(t.mc * t.kc * F32_BYTES <= 256 << 10);
+    }
+
+    #[test]
+    fn degenerate_hierarchies_still_yield_usable_tiles() {
+        let t = TileConfig::for_levels(&[]);
+        assert_eq!(t, TileConfig::westmere()); // fallback = Westmere L1/L2
+        let tiny = LevelConfig {
+            name: "t",
+            size_bytes: 128,
+            ways: 1,
+            line_bytes: 64,
+            latency_cycles: 1,
+        };
+        let t = TileConfig::for_levels(&[tiny]);
+        assert!(t.mc >= 1 && t.kc >= 1 && t.nc >= 1 && t.l1_f32 >= 64);
+    }
+
+    #[test]
+    fn tiles_respect_budgets_across_random_hierarchies() {
+        check("tile-budgets", 50, |g| {
+            let l1 = 1usize << g.usize_in(7, 20);
+            let l2 = l1 << g.usize_in(0, 6);
+            let mk = |name, size: usize| LevelConfig {
+                name,
+                size_bytes: size as u64,
+                ways: 8,
+                line_bytes: 64,
+                latency_cycles: 4,
+            };
+            let t = TileConfig::for_levels(&[mk("L1", l1), mk("L2", l2)]);
+            prop_assert!(t.kc >= 1 && t.nc >= 1 && t.mc >= 1,
+                "zero tile: {t:?}");
+            prop_assert!(t.kc * t.nc <= t.l1_f32.max(64 * 64),
+                "panel {}x{} exceeds L1 budget {}", t.kc, t.nc, t.l1_f32);
+            let d = g.usize_in(1, 4096);
+            let (qt, jt) = t.pair_tiles(d);
+            prop_assert!(qt >= 1 && jt >= 1, "empty pair tile");
+            prop_assert!(t.coupled_rows() >= 1, "empty coupled tile");
+            Ok(())
+        });
+    }
+}

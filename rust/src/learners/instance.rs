@@ -12,27 +12,25 @@
 //! `python/compile/shapes.py`.
 
 use crate::data::Dataset;
+use crate::kernels::{pairwise_sq_dists_tiled, TileConfig};
 
 /// k for the k-NN vote (shapes.KNN_K).
 pub const K: usize = 5;
 /// Gaussian bandwidth for PRW (shapes.PRW_BANDWIDTH).
 pub const BANDWIDTH: f32 = 8.0;
 
-/// Squared Euclidean distance between two feature rows.
-#[inline]
-pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f32;
-    for i in 0..a.len() {
-        let d = a[i] - b[i];
-        acc += d * d;
-    }
-    acc
-}
+/// Squared Euclidean distance between two feature rows — one shared
+/// implementation with the kernel layer, so scan and tiled paths can
+/// never drift apart.
+pub use crate::kernels::distance::sq_dist;
 
-/// Pure-rust k-NN classification scan (Algorithm 10, verbatim structure).
-/// Tie-breaking matches the artifact: neighbours ranked by (distance,
-/// index), class vote ties go to the lower class id.
+/// Pure-rust k-NN classification scan (Algorithm 10, verbatim
+/// structure — deliberately incremental top-k with no distance buffer,
+/// unlike the tiled path; the selection logic is mirrored in
+/// `knn_vote`, and the `tiled_scans_equal_naive_scans` property test
+/// guards the two against desynchronising). Tie-breaking matches the
+/// artifact: neighbours ranked by (distance, index), class vote ties
+/// go to the lower class id.
 pub fn knn_scan(train: &Dataset, test_rows: &[f32], d: usize, k: usize)
     -> Vec<i32> {
     assert_eq!(d, train.d);
@@ -72,36 +70,22 @@ pub fn knn_scan(train: &Dataset, test_rows: &[f32], d: usize, k: usize)
 }
 
 /// Pure-rust PRW classification scan (Algorithm 11): every training point
-/// contributes a Gaussian-kernel weight to its class total.
+/// contributes a Gaussian-kernel weight to its class total. The vote —
+/// including the row-min shift that keeps exp() from underflowing to an
+/// all-zero tally — lives in `prw_vote`, shared with the tiled path.
 pub fn prw_scan(train: &Dataset, test_rows: &[f32], d: usize,
                 bandwidth: f32) -> Vec<i32> {
     assert_eq!(d, train.d);
     let n_test = test_rows.len() / d;
     let inv = 1.0f64 / (2.0 * bandwidth as f64 * bandwidth as f64);
+    let mut dists = vec![0.0f32; train.n];
     let mut preds = Vec::with_capacity(n_test);
     for q in 0..n_test {
         let qrow = &test_rows[q * d..(q + 1) * d];
-        // Row-min shift: identical to the artifact's stabilisation, and
-        // required so exp() does not underflow to an all-zero vote.
-        let mut dists = Vec::with_capacity(train.n);
-        let mut dmin = f64::INFINITY;
         for j in 0..train.n {
-            let dist = sq_dist(qrow, train.row(j)) as f64;
-            dmin = dmin.min(dist);
-            dists.push(dist);
+            dists[j] = sq_dist(qrow, train.row(j));
         }
-        let mut scores = vec![0.0f64; train.n_classes];
-        for j in 0..train.n {
-            scores[train.labels[j] as usize] +=
-                (-(dists[j] - dmin) * inv).exp();
-        }
-        let best = scores
-            .iter()
-            .enumerate()
-            .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
-            .map(|(c, _)| c)
-            .unwrap();
-        preds.push(best as i32);
+        preds.push(prw_vote(&dists, &train.labels, train.n_classes, inv));
     }
     preds
 }
@@ -119,44 +103,129 @@ pub fn joint_scan(train: &Dataset, test_rows: &[f32], d: usize, k: usize,
     for q in 0..n_test {
         let qrow = &test_rows[q * d..(q + 1) * d];
         // one distance pass, shared by both learners
-        let mut dmin = f64::INFINITY;
         for j in 0..train.n {
-            let dist = sq_dist(qrow, train.row(j));
-            dists[j] = dist;
-            dmin = dmin.min(dist as f64);
+            dists[j] = sq_dist(qrow, train.row(j));
         }
-        // k-NN consumer
-        let mut nearest: Vec<(f32, usize)> = Vec::with_capacity(k + 1);
-        for j in 0..train.n {
-            let dist = dists[j];
-            if nearest.len() < k || dist < nearest.last().unwrap().0 {
-                let pos = nearest
-                    .iter()
-                    .position(|&(nd, _)| dist < nd)
-                    .unwrap_or(nearest.len());
-                nearest.insert(pos, (dist, j));
-                if nearest.len() > k {
-                    nearest.pop();
-                }
+        knn.push(knn_vote(&dists, &train.labels, train.n_classes, k));
+        prw.push(prw_vote(&dists, &train.labels, train.n_classes, inv));
+    }
+    (knn, prw)
+}
+
+/// k-NN vote over one query's precomputed distance row. Identical
+/// selection and tie-breaking to the inline code in [`knn_scan`]:
+/// neighbours ranked by (distance, index), class ties to the lower id.
+fn knn_vote(dists: &[f32], labels: &[i32], n_classes: usize, k: usize)
+    -> i32 {
+    let mut nearest: Vec<(f32, usize)> = Vec::with_capacity(k + 1);
+    for (j, &dist) in dists.iter().enumerate() {
+        if nearest.len() < k || dist < nearest.last().unwrap().0 {
+            let pos = nearest
+                .iter()
+                .position(|&(nd, _)| dist < nd)
+                .unwrap_or(nearest.len());
+            nearest.insert(pos, (dist, j));
+            if nearest.len() > k {
+                nearest.pop();
             }
         }
-        let mut votes = vec![0usize; train.n_classes];
-        for &(_, j) in &nearest {
-            votes[train.labels[j] as usize] += 1;
-        }
-        knn.push(votes.iter().enumerate()
-            .max_by_key(|(c, &v)| (v, std::cmp::Reverse(*c)))
-            .unwrap().0 as i32);
-        // PRW consumer
-        let mut scores = vec![0.0f64; train.n_classes];
-        for j in 0..train.n {
-            scores[train.labels[j] as usize] +=
-                (-(dists[j] as f64 - dmin) * inv).exp();
-        }
-        prw.push(scores.iter().enumerate()
-            .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
-            .map(|(c, _)| c).unwrap() as i32);
     }
+    let mut votes = vec![0usize; n_classes];
+    for &(_, j) in &nearest {
+        votes[labels[j] as usize] += 1;
+    }
+    votes
+        .iter()
+        .enumerate()
+        .max_by_key(|(c, &v)| (v, std::cmp::Reverse(*c)))
+        .unwrap()
+        .0 as i32
+}
+
+/// PRW vote over one query's precomputed distance row, with the same
+/// f64 row-min stabilisation as [`prw_scan`].
+fn prw_vote(dists: &[f32], labels: &[i32], n_classes: usize, inv: f64)
+    -> i32 {
+    let mut dmin = f64::INFINITY;
+    for &dist in dists {
+        dmin = dmin.min(dist as f64);
+    }
+    let mut scores = vec![0.0f64; n_classes];
+    for (j, &dist) in dists.iter().enumerate() {
+        scores[labels[j] as usize] += (-(dist as f64 - dmin) * inv).exp();
+    }
+    scores
+        .iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+        .map(|(c, _)| c)
+        .unwrap() as i32
+}
+
+/// The shared tiling skeleton of the cache-blocked scans: queries are
+/// processed in blocks of `qt` rows (per `TileConfig::pair_tiles`, so a
+/// train tile stays L1-resident across the whole query block), the
+/// distance block comes from the tiled pairwise kernel, and `consume`
+/// receives each query's finished distance row in order.
+fn scan_tiled_blocks(
+    train: &Dataset,
+    test_rows: &[f32],
+    d: usize,
+    tiles: &TileConfig,
+    mut consume: impl FnMut(&[f32]),
+) {
+    assert_eq!(d, train.d);
+    let n_test = test_rows.len() / d;
+    let (qt, _) = tiles.pair_tiles(d);
+    let mut dists = vec![0.0f32; qt * train.n];
+    for q0 in (0..n_test).step_by(qt) {
+        let qhi = (q0 + qt).min(n_test);
+        let block = &test_rows[q0 * d..qhi * d];
+        let out = &mut dists[..(qhi - q0) * train.n];
+        pairwise_sq_dists_tiled(&train.features, block, d, out, tiles);
+        for q in 0..qhi - q0 {
+            consume(&out[q * train.n..(q + 1) * train.n]);
+        }
+    }
+}
+
+/// Cache-blocked k-NN scan: the tiled distance kernel plus the same
+/// vote as [`knn_scan`]. Distances are bit-identical to the naive scan,
+/// so the predictions are too.
+pub fn knn_scan_tiled(train: &Dataset, test_rows: &[f32], d: usize,
+                      k: usize, tiles: &TileConfig) -> Vec<i32> {
+    let mut preds = Vec::new();
+    scan_tiled_blocks(train, test_rows, d, tiles, |row| {
+        preds.push(knn_vote(row, &train.labels, train.n_classes, k));
+    });
+    preds
+}
+
+/// Cache-blocked PRW scan (Alg 11 over the tiled distance kernel).
+pub fn prw_scan_tiled(train: &Dataset, test_rows: &[f32], d: usize,
+                      bandwidth: f32, tiles: &TileConfig) -> Vec<i32> {
+    let inv = 1.0f64 / (2.0 * bandwidth as f64 * bandwidth as f64);
+    let mut preds = Vec::new();
+    scan_tiled_blocks(train, test_rows, d, tiles, |row| {
+        preds.push(prw_vote(row, &train.labels, train.n_classes, inv));
+    });
+    preds
+}
+
+/// Tile-level joint scan (§5.2 fusion + blocking): ONE tiled distance
+/// pass per query block feeds BOTH learners, so each train tile is
+/// fetched once for `2 × qt` consumers instead of once per query per
+/// learner.
+pub fn joint_scan_tiled(train: &Dataset, test_rows: &[f32], d: usize,
+                        k: usize, bandwidth: f32, tiles: &TileConfig)
+    -> (Vec<i32>, Vec<i32>) {
+    let inv = 1.0f64 / (2.0 * bandwidth as f64 * bandwidth as f64);
+    let mut knn = Vec::new();
+    let mut prw = Vec::new();
+    scan_tiled_blocks(train, test_rows, d, tiles, |row| {
+        knn.push(knn_vote(row, &train.labels, train.n_classes, k));
+        prw.push(prw_vote(row, &train.labels, train.n_classes, inv));
+    });
     (knn, prw)
 }
 
@@ -218,6 +287,42 @@ mod tests {
                 "knn mismatch");
             prop_assert!(pj == prw_scan(&train, &test, d, BANDWIDTH),
                 "prw mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tiled_scans_equal_naive_scans() {
+        // The tiled paths must reproduce the Alg 10/11 scans exactly —
+        // ragged query/train blocks included. Tiny l1 budgets force
+        // multi-tile execution even at these sizes.
+        check("tiled-vs-naive-scans", 15, |g| {
+            let n = g.usize_in(1, 60);
+            let t = g.usize_in(1, 12);
+            let d = g.usize_in(1, 8);
+            let features = g.f32_vec(n * d, 3.0);
+            let labels: Vec<i32> =
+                (0..n).map(|_| g.usize_in(0, 2) as i32).collect();
+            let train = Dataset::new(features, labels, d, 3);
+            let test = g.f32_vec(t * d, 3.0);
+            let tiles = TileConfig {
+                mc: 1,
+                kc: 1,
+                nc: 1,
+                l1_f32: g.usize_in(2, 32) * d,
+            };
+            prop_assert!(
+                knn_scan_tiled(&train, &test, d, K, &tiles)
+                    == knn_scan(&train, &test, d, K),
+                "tiled knn diverged");
+            prop_assert!(
+                prw_scan_tiled(&train, &test, d, BANDWIDTH, &tiles)
+                    == prw_scan(&train, &test, d, BANDWIDTH),
+                "tiled prw diverged");
+            let (kj, pj) =
+                joint_scan_tiled(&train, &test, d, K, BANDWIDTH, &tiles);
+            let (kn, pn) = joint_scan(&train, &test, d, K, BANDWIDTH);
+            prop_assert!(kj == kn && pj == pn, "tiled joint diverged");
             Ok(())
         });
     }

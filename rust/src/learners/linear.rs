@@ -10,9 +10,7 @@ pub const LR: f32 = 0.1;
 /// SVM L2 regularisation weight (shapes.LINEAR_LAMBDA).
 pub const LAMBDA: f32 = 1e-3;
 
-fn sigmoid(z: f32) -> f32 {
-    1.0 / (1.0 + (-z).exp())
-}
+use crate::kernels::coupled::sigmoid;
 
 /// One logistic-regression minibatch step. Returns (new w, mean loss).
 pub fn lr_step(w: &[f32], x: &[f32], y: &[f32], lr: f32)
@@ -68,11 +66,28 @@ pub fn svm_step(w: &[f32], x: &[f32], y: &[f32], lr: f32, lam: f32)
     (w2, loss)
 }
 
-/// The §4.3 coupling: both models updated from ONE traversal of the batch.
-/// Each training row is read once; both inner products and both gradient
-/// contributions happen "in a feature-by-feature way" on that single read.
-/// Returns ((w_lr, lr loss), (w_svm, svm loss)).
+/// The §4.3 coupling on the hot path: tile-level fused LR+SVM through
+/// the cache-blocked kernel layer (`kernels::coupled_step_tiled`, tiles
+/// autotuned from the memsim cache model). Bit-identical to
+/// [`coupled_step_naive`], which stays in-tree as the reference oracle.
 pub fn coupled_step(
+    w_lr: &[f32],
+    w_svm: &[f32],
+    x: &[f32],
+    y: &[f32],
+    lr: f32,
+    lam: f32,
+) -> ((Vec<f32>, f32), (Vec<f32>, f32)) {
+    crate::kernels::coupled_step_tiled(
+        w_lr, w_svm, x, y, lr, lam, &crate::kernels::TileConfig::westmere())
+}
+
+/// The §4.3 coupling, row-level reference: both models updated from ONE
+/// traversal of the batch. Each training row is read once; both inner
+/// products and both gradient contributions happen "in a
+/// feature-by-feature way" on that single read. Kept as the oracle for
+/// the tiled kernel. Returns ((w_lr, lr loss), (w_svm, svm loss)).
+pub fn coupled_step_naive(
     w_lr: &[f32],
     w_svm: &[f32],
     x: &[f32],
@@ -155,6 +170,23 @@ mod tests {
             prop_assert!((ls - ls2).abs() < 1e-5, "svm loss differs");
             Ok(())
         });
+    }
+
+    #[test]
+    fn hot_path_equals_naive_reference() {
+        // coupled_step is the tiled kernel; it must not drift from the
+        // row-level oracle (ragged 33×21 exercises edge tiles too).
+        let mut g = crate::util::prop::Gen::new(77);
+        let (d, b) = (33usize, 21usize);
+        let w0 = g.f32_vec(d, 1.0);
+        let w1 = g.f32_vec(d, 1.0);
+        let x = g.f32_vec(b * d, 2.0);
+        let y: Vec<f32> =
+            (0..b).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+        assert_eq!(
+            coupled_step(&w0, &w1, &x, &y, LR, LAMBDA),
+            coupled_step_naive(&w0, &w1, &x, &y, LR, LAMBDA),
+        );
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! propagation").
 
 use super::mlp::{INPUT_DIM, LAYERS, N_CLASSES, N_PARAMS};
+use crate::kernels::{matmul_bias_tiled, matmul_tn_acc_tiled, TileConfig};
 
 /// Scratch buffers for one forward+backward pass (allocated once,
 /// reused across steps — no allocation in the training loop).
@@ -30,6 +31,9 @@ pub struct NativeMlp {
     /// per-layer error signals (Alg 15)
     deltas: Vec<Vec<f32>>,
     batch: usize,
+    /// cache-blocking parameters for the matmul kernels (autotuned from
+    /// the memsim hierarchy; the ReLU zero-skip lives in the kernels)
+    tiles: TileConfig,
 }
 
 impl NativeMlp {
@@ -50,6 +54,7 @@ impl NativeMlp {
             zs,
             deltas,
             batch,
+            tiles: TileConfig::westmere(),
         }
     }
 
@@ -72,24 +77,16 @@ impl NativeMlp {
                 let b = &self.theta[off + m * n..off + m * n + n];
                 (w, b)
             };
-            // z = a_prev @ W + b   (row-major [batch x m] @ [m x n])
+            // z = a_prev @ W + b   (row-major [batch x m] @ [m x n]),
+            // through the cache-blocked kernel: same term multiset and
+            // ReLU zero-skip as the original loop nest (reassociated
+            // only within the kernel's 4-deep groups), with the W panel
+            // cache-resident across the mini-batch (Fig 3).
             let (prev_acts, rest) = self.acts.split_at_mut(l + 1);
             let a_prev = &prev_acts[l];
             let z = &mut self.zs[l];
-            for s in 0..self.batch {
-                let zrow = &mut z[s * n..(s + 1) * n];
-                zrow.copy_from_slice(b);
-                let arow = &a_prev[s * m..(s + 1) * m];
-                for (i, &av) in arow.iter().enumerate() {
-                    if av == 0.0 {
-                        continue; // ReLU sparsity: skip dead activations
-                    }
-                    let wrow = &w[i * n..(i + 1) * n];
-                    for (zv, &wv) in zrow.iter_mut().zip(wrow) {
-                        *zv += av * wv;
-                    }
-                }
-            }
+            matmul_bias_tiled(a_prev, w, b, z, self.batch, m, n,
+                              &self.tiles);
             // activation (ReLU on hidden, identity on the output layer)
             let a = &mut rest[0];
             if l + 1 < n_layers {
@@ -139,19 +136,21 @@ impl NativeMlp {
         for l in (0..n_layers).rev() {
             let (m, n) = LAYERS[l];
             let off = Self::offset(l);
-            // dW = a_prev^T @ delta ; db = sum(delta)
+            // dW = a_prev^T @ delta through the cache-blocked
+            // transpose kernel (accumulation order per element matches
+            // the original per-sample loop — ascending s); db = sum of
+            // delta rows, a cheap n-wide stream kept as a plain loop.
+            matmul_tn_acc_tiled(
+                &self.acts[l],
+                &self.deltas[l],
+                &mut self.grad[off..off + m * n],
+                self.batch,
+                m,
+                n,
+                &self.tiles,
+            );
             for s in 0..self.batch {
-                let arow = &self.acts[l][s * m..(s + 1) * m];
                 let drow = &self.deltas[l][s * n..(s + 1) * n];
-                for (i, &av) in arow.iter().enumerate() {
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let grow = &mut self.grad[off + i * n..off + (i + 1) * n];
-                    for (gv, &dv) in grow.iter_mut().zip(drow) {
-                        *gv += av * dv;
-                    }
-                }
                 let gb = &mut self.grad[off + m * n..off + m * n + n];
                 for (gv, &dv) in gb.iter_mut().zip(drow) {
                     *gv += dv;

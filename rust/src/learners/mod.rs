@@ -13,7 +13,10 @@ pub mod mlp;
 pub mod mlp_native;
 pub mod naive_bayes;
 
-pub use instance::{accuracy, joint_scan, knn_scan, prw_scan};
+pub use instance::{
+    accuracy, joint_scan, joint_scan_tiled, knn_scan, knn_scan_tiled,
+    prw_scan, prw_scan_tiled,
+};
 pub use mlp::{EvalResult, MlpTrainer};
 pub use mlp_native::NativeMlp;
 pub use naive_bayes::NaiveBayes;

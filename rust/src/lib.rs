@@ -16,12 +16,33 @@
 //!
 //! The compiled artifacts in `artifacts/` are executed from rust through
 //! the PJRT C API ([`runtime`]); python never runs on the request path.
+//!
+//! The L1 layer also has a **native rust side**: [`kernels`] provides
+//! cache-blocked matmul / pairwise-distance / fused-coupled-step paths
+//! whose tile sizes are derived from the [`memsim`] cache model, so the
+//! learners' hot loops apply the same locality guidelines the simulator
+//! measures. Naive row-at-a-time references stay in-tree as oracles.
+
+// Clippy policy: the loop nests deliberately mirror the paper's
+// pseudo-code (explicit indices keep the access patterns auditable
+// against Algorithms 1-15), and the kernel/learner APIs use flat
+// argument lists rather than parameter structs.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::identity_op,
+    clippy::erasing_op,
+    clippy::manual_memcpy,
+    clippy::new_without_default
+)]
 
 pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod kernels;
 pub mod learners;
 pub mod opt;
 pub mod memsim;

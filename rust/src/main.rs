@@ -92,6 +92,16 @@ fn main() -> Result<()> {
         "audit" => {
             commands::cmd_audit()?;
         }
+        "kernels" => {
+            let sizes = args
+                .list_or("sizes", &["256", "512"])
+                .iter()
+                .map(|s| s.parse::<usize>().map_err(
+                    |_| anyhow::anyhow!("bad size `{s}`")))
+                .collect::<Result<Vec<_>>>()?;
+            let out = args.get("out-json").map(PathBuf::from);
+            commands::cmd_kernels(&sizes, out.as_deref())?;
+        }
         "info" => {
             let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
             commands::cmd_info(&dir)?;
@@ -123,6 +133,8 @@ SUBCOMMANDS
                  --n 256 --m 256
   cache-model  §5.1 cycle-arithmetic example (400k vs 40k cycles)
   audit        Reuse-distance audit of the paper's §3-§4 claims
+  kernels      L1-native kernels: naive vs cache-blocked timings
+                 --sizes 256,512,1024 --out-json BENCH_kernels.json
   info         List compiled artifacts  [--artifacts artifacts]
 
 Common options: --config experiment.toml --artifacts artifacts --seed N

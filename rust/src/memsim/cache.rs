@@ -87,6 +87,21 @@ pub struct LevelStats {
     pub miss_rate: f64,
 }
 
+/// The Westmere-like level parameters (§5) as plain data — shared by
+/// [`Hierarchy::westmere`] and the native-kernel tile autotuner
+/// (`kernels::TileConfig::for_levels`), so the simulator and the real
+/// compute paths block for the *same* modeled hierarchy.
+pub fn westmere_levels() -> [LevelConfig; 3] {
+    [
+        LevelConfig { name: "L1d", size_bytes: 32 << 10, ways: 8,
+                      line_bytes: 64, latency_cycles: 4 },
+        LevelConfig { name: "L2", size_bytes: 256 << 10, ways: 8,
+                      line_bytes: 64, latency_cycles: 10 },
+        LevelConfig { name: "L3", size_bytes: 12 << 20, ways: 16,
+                      line_bytes: 64, latency_cycles: 40 },
+    ]
+}
+
 /// A full hierarchy: ordered levels + DRAM latency behind them.
 pub struct Hierarchy {
     levels: Vec<Level>,
@@ -109,17 +124,7 @@ impl Hierarchy {
     /// L1d 32 KiB/8-way 4cy · L2 256 KiB/8-way 10cy · L3 12 MiB/16-way 40cy
     /// · DRAM ≈ 100cy.
     pub fn westmere() -> Self {
-        Self::new(
-            vec![
-                LevelConfig { name: "L1d", size_bytes: 32 << 10, ways: 8,
-                              line_bytes: 64, latency_cycles: 4 },
-                LevelConfig { name: "L2", size_bytes: 256 << 10, ways: 8,
-                              line_bytes: 64, latency_cycles: 10 },
-                LevelConfig { name: "L3", size_bytes: 12 << 20, ways: 16,
-                              line_bytes: 64, latency_cycles: 40 },
-            ],
-            100,
-        )
+        Self::new(westmere_levels().to_vec(), 100)
     }
 
     /// The paper's §5.1 worked example: single cache level at 4 cycles,

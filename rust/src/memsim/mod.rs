@@ -16,6 +16,6 @@ pub mod patterns;
 pub mod reuse;
 pub mod trace;
 
-pub use cache::{Hierarchy, LevelConfig, LevelStats};
+pub use cache::{westmere_levels, Hierarchy, LevelConfig, LevelStats};
 pub use reuse::{ReuseProfiler, ReuseReport};
 pub use trace::{Access, AddressSpace, Kind, Region, Sink, Tee, VecTrace};

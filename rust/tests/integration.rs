@@ -3,6 +3,13 @@
 //! These tests require `make artifacts` to have run (the repo ships the
 //! manifest + HLO text); every test cross-checks an artifact against the
 //! pure-rust reference implementation of the same algorithm.
+//!
+//! All artifact-backed tests are `#[ignore]`d: they are genuinely
+//! environment-dependent — they need both the compiled HLO artifacts and
+//! a real PJRT runtime, while offline builds (and CI) link the vendored
+//! `xla` stub, whose execution entry points intentionally fail. Run them
+//! with `cargo test -- --ignored` after `make artifacts` on a machine
+//! with the real xla-rs bindings in `rust/Cargo.toml`.
 
 use std::path::{Path, PathBuf};
 
@@ -42,6 +49,7 @@ fn rand_tensor(dims: &[usize], seed: u64, scale: f32) -> HostTensor {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[ignore = "needs AOT artifacts + a real PJRT runtime (make artifacts)"]
 fn all_artifacts_execute_with_manifest_shapes() {
     with_engine(|e| {
         let names: Vec<String> =
@@ -71,6 +79,7 @@ fn all_artifacts_execute_with_manifest_shapes() {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[ignore = "needs AOT artifacts + a real PJRT runtime (make artifacts)"]
 fn linear_coupled_artifact_matches_rust_reference() {
     with_engine(|e| {
         let d = 128;
@@ -104,6 +113,7 @@ fn linear_coupled_artifact_matches_rust_reference() {
 }
 
 #[test]
+#[ignore = "needs AOT artifacts + a real PJRT runtime (make artifacts)"]
 fn linear_separate_artifacts_match_coupled_artifact() {
     with_engine(|e| {
         let d = 128;
@@ -140,6 +150,7 @@ fn linear_separate_artifacts_match_coupled_artifact() {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[ignore = "needs AOT artifacts + a real PJRT runtime (make artifacts)"]
 fn nb_fit_artifact_matches_rust_reference() {
     with_engine(|e| {
         let ds = mnist_like(6400, 11);
@@ -163,6 +174,7 @@ fn nb_fit_artifact_matches_rust_reference() {
 }
 
 #[test]
+#[ignore = "needs AOT artifacts + a real PJRT runtime (make artifacts)"]
 fn nb_predict_artifact_matches_rust_reference() {
     with_engine(|e| {
         let ds = mnist_like(6400, 13);
@@ -188,6 +200,7 @@ fn nb_predict_artifact_matches_rust_reference() {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[ignore = "needs AOT artifacts + a real PJRT runtime (make artifacts)"]
 fn joint_artifact_matches_rust_scan_on_one_tile() {
     with_engine(|e| {
         let (train, test) = chembl_like(20480 + 256, 17).split(20480);
@@ -214,6 +227,7 @@ fn joint_artifact_matches_rust_scan_on_one_tile() {
 }
 
 #[test]
+#[ignore = "needs AOT artifacts + a real PJRT runtime (make artifacts)"]
 fn table1_joint_equals_separate_and_is_faster() {
     with_engine(|e| {
         let (train, test) = chembl_like(20480 + 512, 19).split(20480);
@@ -244,6 +258,7 @@ fn table1_joint_equals_separate_and_is_faster() {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[ignore = "needs AOT artifacts + a real PJRT runtime (make artifacts)"]
 fn mlp_grad_artifacts_agree_across_batch_sizes() {
     // The 3 grad graphs embody the same model: the b256 gradient on a
     // duplicated b128 batch equals the b128 gradient (mean over points).
@@ -284,6 +299,7 @@ fn mlp_grad_artifacts_agree_across_batch_sizes() {
 }
 
 #[test]
+#[ignore = "needs AOT artifacts + a real PJRT runtime (make artifacts)"]
 fn swsgd_window_converges_no_slower_than_plain() {
     // The Fig 5 claim at miniature scale: with the same number of fresh
     // points, the cached-window scenario reaches a lower or equal loss.
@@ -309,6 +325,7 @@ fn swsgd_window_converges_no_slower_than_plain() {
 }
 
 #[test]
+#[ignore = "needs AOT artifacts + a real PJRT runtime (make artifacts)"]
 fn native_rust_mlp_gradient_matches_artifact() {
     // The full three-layer loop closed from the rust side: the
     // hand-written Alg 14/15 backprop must produce the same loss and
@@ -348,6 +365,7 @@ fn native_rust_mlp_gradient_matches_artifact() {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[ignore = "needs AOT artifacts + a real PJRT runtime (make artifacts)"]
 fn swsgd_linear_grad_artifact_matches_logistic_math() {
     with_engine(|e| {
         let d = 128;

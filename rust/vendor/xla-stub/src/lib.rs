@@ -1,0 +1,164 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The runtime layer (`locality_ml::runtime`) is written against the real
+//! bindings, but this environment cannot build XLA. This crate mirrors the
+//! subset of the xla-rs API the runtime uses so the whole workspace
+//! compiles and tests offline: client construction succeeds (so manifest
+//! and interface validation stay exercisable), while every call that would
+//! need the actual PJRT runtime — parsing HLO, compiling, uploading,
+//! executing — fails with a descriptive [`Error`].
+//!
+//! To execute AOT artifacts for real, point the `xla` entry in
+//! `rust/Cargo.toml` back at the xla-rs bindings; no runtime-layer code
+//! changes are required.
+
+use std::fmt;
+
+/// Error raised by every stubbed entry point.
+#[derive(Debug, Clone)]
+pub struct Error {
+    message: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error {
+        message: format!(
+            "{what}: built against the offline `xla` stub (no PJRT \
+             runtime); swap rust/Cargo.toml to the real xla-rs bindings \
+             to execute artifacts"
+        ),
+    }
+}
+
+/// Stub PJRT client. Construction succeeds so `Engine::open` can still
+/// validate manifests; device operations fail.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        Ok(Self { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (PJRT unavailable)".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Stub device buffer; readback fails.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Stub compiled executable; execution fails.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// Stub HLO module proto; text parsing fails (the real parser needs XLA).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, Error> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Stub XLA computation wrapper.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _priv: () }
+    }
+}
+
+/// Stub literal; construction is allowed (it is pure host data in the real
+/// bindings too), all conversions fail.
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Self {
+        Self { _priv: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("Literal::decompose_tuple"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_opens_but_device_ops_fail() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let err = client
+            .buffer_from_host_buffer::<f32>(&[1.0], &[1], None)
+            .unwrap_err();
+        assert!(err.to_string().contains("offline `xla` stub"), "{err}");
+    }
+
+    #[test]
+    fn hlo_parsing_reports_unavailable() {
+        let err = HloModuleProto::from_text_file("x.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("PJRT"), "{err}");
+    }
+}
