@@ -1,0 +1,44 @@
+//! Bench E13 — the parallel macro-tile layer: single-thread tiled
+//! kernels vs the same kernels sharded across the scoped worker pool,
+//! as a 1-vs-N-thread scaling curve at n = 256 / 512.
+//!
+//! Writes the curve to `BENCH_parallel.json` at the repo root (uploaded
+//! by CI alongside `BENCH_kernels.json`). Regenerate with:
+//!
+//! ```bash
+//! cargo bench --bench bench_parallel
+//! # or, with size/curve control:
+//! cargo run --release -- parallel --sizes 256,512 --curve 1,2,4 \
+//!     --out-json ../BENCH_parallel.json
+//! ```
+//!
+//! This bench *measures and reports*; the ≥2× acceptance gate on the
+//! 4-thread 512³ matmul is enforced in exactly one place —
+//! `scripts/check_bench_parallel.py`, run by the CI bench job against
+//! the JSON this writes — so a low-core local machine can still run the
+//! bench without tripping an assert that CI alone is meant to own.
+
+use std::path::PathBuf;
+
+use locality_ml::cli::commands::cmd_parallel;
+
+fn main() -> anyhow::Result<()> {
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../BENCH_parallel.json");
+    let table = cmd_parallel(&[256, 512], &[1, 2, 4], Some(out.as_path()))?;
+
+    // rows: [kernel, shape, threads, time, "X.XXx"]
+    let speedup_4t = table
+        .rows
+        .iter()
+        .find(|r| r[0] == "matmul" && r[1] == "512x512x512" && r[2] == "4")
+        .map(|r| r[4].clone())
+        .expect("no 4-thread 512^3 matmul row");
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!("\n4-thread 512^3 matmul scaling: {speedup_4t} \
+              ({cores} cores available; CI gates >=2x via \
+              scripts/check_bench_parallel.py)");
+    Ok(())
+}

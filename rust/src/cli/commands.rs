@@ -328,6 +328,18 @@ pub fn cmd_fig4() -> Result<Table> {
     Ok(table)
 }
 
+/// Best-of-`reps` wall time of `f`, in seconds (shared by the kernel
+/// and parallel-scaling benchmark commands).
+fn time_best(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let sw = crate::util::Stopwatch::start();
+        f();
+        best = best.min(sw.elapsed_secs());
+    }
+    best
+}
+
 /// E12 — the L1-native kernel layer: naive row-at-a-time loops vs the
 /// cache-blocked kernels (tiles autotuned from the memsim hierarchy).
 /// Optionally writes the timings as JSON (the `BENCH_kernels.json`
@@ -339,18 +351,7 @@ pub fn cmd_kernels(sizes: &[usize], out_json: Option<&Path>)
         pairwise_sq_dists_naive, pairwise_sq_dists_tiled, TileConfig,
     };
     use crate::learners::linear;
-    use crate::util::{Rng, Stopwatch};
-
-    /// Best-of-`reps` wall time of `f`, in seconds.
-    fn time_best(reps: usize, mut f: impl FnMut()) -> f64 {
-        let mut best = f64::INFINITY;
-        for _ in 0..reps {
-            let sw = Stopwatch::start();
-            f();
-            best = best.min(sw.elapsed_secs());
-        }
-        best
-    }
+    use crate::util::Rng;
 
     let tiles = TileConfig::westmere();
     let mut table = Table::new(
@@ -437,6 +438,122 @@ pub fn cmd_kernels(sizes: &[usize], out_json: Option<&Path>)
         std::fs::write(path, json)
             .with_context(|| format!("writing {}", path.display()))?;
         eprintln!("# kernel timings -> {}", path.display());
+    }
+    Ok(table)
+}
+
+/// E13 — the parallel macro-tile layer: the cache-blocked kernels
+/// sharded across the scoped worker pool, measured as a 1-vs-N-thread
+/// scaling curve (per-worker tiles from the shared-L3 budget).
+/// Optionally writes `BENCH_parallel.json`; CI gates on the 4-thread
+/// 512³ matmul entry (≥ 2× over 1 thread).
+pub fn cmd_parallel(sizes: &[usize], curve: &[usize],
+                    out_json: Option<&Path>) -> Result<Table> {
+    use crate::kernels::{
+        coupled_step_par, matmul_tiled_par, pairwise_sq_dists_tiled_par,
+        TileConfig,
+    };
+    use crate::learners::linear;
+    use crate::util::Rng;
+
+    anyhow::ensure!(curve.first() == Some(&1),
+        "the thread curve must start at 1 (the scaling baseline)");
+    let mut table = Table::new(
+        "Parallel macro-tile layer — 1-vs-N thread scaling \
+         (per-worker tiles from the shared-L3 budget)",
+        &["kernel", "shape", "threads", "time (s)", "speedup vs 1t"]);
+    // (kernel, shape, threads, secs, speedup)
+    let mut records: Vec<(String, String, usize, f64, f64)> = Vec::new();
+    let mut rng = Rng::new(42);
+    let reps = 2;
+
+    for &n in sizes {
+        // matmul n×n×n — MC macro-tile row blocks across workers
+        let a: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut c = vec![0.0f32; n * n];
+        let mut base = f64::NAN;
+        for &th in curve {
+            let tiles = TileConfig::westmere_workers(th);
+            let secs = time_best(reps, || {
+                matmul_tiled_par(&a, &b, &mut c, n, n, n, &tiles, th)
+            });
+            if th == 1 {
+                base = secs;
+            }
+            records.push(("matmul".into(), format!("{n}x{n}x{n}"), th,
+                          secs, base / secs));
+        }
+
+        // pairwise distances — query tiles across workers
+        let d = 64;
+        let queries = n.min(512);
+        let train: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let q: Vec<f32> = (0..queries * d).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0f32; queries * n];
+        for &th in curve {
+            let tiles = TileConfig::westmere_workers(th);
+            let secs = time_best(reps, || {
+                pairwise_sq_dists_tiled_par(&train, &q, d, &mut out,
+                                            &tiles, th)
+            });
+            if th == 1 {
+                base = secs;
+            }
+            records.push(("pairwise-sq-dists".into(),
+                          format!("{queries}q x {n}t x {d}d"), th, secs,
+                          base / secs));
+        }
+
+        // fused coupled LR+SVM — design-matrix row blocks across workers
+        let d = 256;
+        let w0: Vec<f32> = (0..d).map(|_| 0.1 * rng.normal()).collect();
+        let w1: Vec<f32> = (0..d).map(|_| 0.1 * rng.normal()).collect();
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let y: Vec<f32> = (0..n)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        for &th in curve {
+            let tiles = TileConfig::westmere_workers(th);
+            let secs = time_best(reps, || {
+                crate::bench::black_box(coupled_step_par(
+                    &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &tiles,
+                    th));
+            });
+            if th == 1 {
+                base = secs;
+            }
+            records.push(("coupled-lr-svm".into(), format!("b={n} d={d}"),
+                          th, secs, base / secs));
+        }
+    }
+
+    for (kernel, shape, th, secs, speedup) in &records {
+        table.row(&[kernel.clone(), shape.clone(), format!("{th}"),
+                    format!("{secs:.6}"), format!("{speedup:.2}x")]);
+    }
+    println!("{}", table.to_markdown());
+
+    if let Some(path) = out_json {
+        let mut json = String::from("{\n");
+        json.push_str("  \"schema\": \"locality-ml/bench-parallel/v1\",\n");
+        let curve_str: Vec<String> =
+            curve.iter().map(|t| t.to_string()).collect();
+        json.push_str(&format!("  \"curve\": [{}],\n",
+                               curve_str.join(", ")));
+        json.push_str("  \"results\": [\n");
+        for (i, (kernel, shape, th, secs, speedup)) in
+            records.iter().enumerate() {
+            let comma = if i + 1 < records.len() { "," } else { "" };
+            json.push_str(&format!(
+                "    {{\"kernel\": \"{kernel}\", \"shape\": \"{shape}\", \
+                 \"threads\": {th}, \"secs\": {secs:.6}, \
+                 \"speedup_vs_1t\": {speedup:.3}}}{comma}\n"));
+        }
+        json.push_str("  ]\n}\n");
+        std::fs::write(path, json)
+            .with_context(|| format!("writing {}", path.display()))?;
+        eprintln!("# parallel scaling curve -> {}", path.display());
     }
     Ok(table)
 }

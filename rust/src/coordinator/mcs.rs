@@ -11,8 +11,9 @@
 
 use crate::data::sampling::majority_vote;
 use crate::data::Dataset;
+use crate::kernels::{parallel, TileConfig};
 use crate::learners::instance::{BANDWIDTH, K};
-use crate::learners::{joint_scan, NaiveBayes};
+use crate::learners::{joint_scan_par, NaiveBayes};
 
 /// A trained three-member system: NB model + the remembered training set
 /// for the instance-based members.
@@ -50,11 +51,24 @@ impl MultiClassifier {
     /// the distance computation; the ensemble decision is a majority
     /// vote with NB's posterior as the deterministic tiebreak order
     /// (lowest class id wins ties, matching `majority_vote`).
+    ///
+    /// The shared distance pass runs through the parallel macro-tile
+    /// layer: query blocks fan out across the session's thread count
+    /// with per-worker tiles from the shared-L3 budget. Per-query
+    /// predictions are bit-identical to the single-thread scans at any
+    /// thread count (and `--threads 1` is the PR-1 path exactly).
     pub fn predict(&self, rows: &[f32]) -> McsPredictions {
         let nb = self.nb.predict(rows);
+        // distance work = queries × train rows × features; tiny streams
+        // stay on the sequential scan (no spawn overhead)
+        let threads = parallel::effective_threads(
+            parallel::default_threads(),
+            (rows.len() / self.train.d.max(1)) * self.train.n
+                * self.train.d);
+        let tiles = TileConfig::westmere_workers(threads);
         let (knn, prw) =
-            joint_scan(&self.train, rows, self.train.d, self.k,
-                       self.bandwidth);
+            joint_scan_par(&self.train, rows, self.train.d, self.k,
+                           self.bandwidth, &tiles, threads);
         let vote = majority_vote(
             &[nb.clone(), knn.clone(), prw.clone()],
             self.train.n_classes,

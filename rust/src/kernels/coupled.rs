@@ -32,6 +32,18 @@ pub(crate) fn sigmoid(z: f32) -> f32 {
     1.0 / (1.0 + (-z).exp())
 }
 
+/// Raw accumulation state of one coupled pass over a row block:
+/// gradient sums and loss sums for BOTH models, before the batch
+/// normalisation and weight update. The parallel layer computes one of
+/// these per row block and reduces them in worker-index order.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct CoupledPartial {
+    pub g_lr: Vec<f32>,
+    pub g_svm: Vec<f32>,
+    pub loss_lr: f32,
+    pub loss_svm: f32,
+}
+
 /// One fused coupled minibatch step over row-major `x: [b×d]` with ±1
 /// labels `y`. Returns `((w_lr', lr loss), (w_svm', svm loss))`, exactly
 /// as `learners::linear::coupled_step` does.
@@ -44,6 +56,27 @@ pub fn coupled_step_tiled(
     lam: f32,
     t: &TileConfig,
 ) -> ((Vec<f32>, f32), (Vec<f32>, f32)) {
+    let d = w_lr.len();
+    assert_eq!(w_svm.len(), d);
+    let b = y.len();
+    assert_eq!(x.len(), b * d);
+    let partial = coupled_accumulate(w_lr, w_svm, x, y, t);
+    coupled_finalize(w_lr, w_svm, partial, b, lr, lam)
+}
+
+/// The tile-sweep phases 1–3 over one row block (`x`/`y` hold the
+/// block's rows only), producing raw gradient and loss sums. Extracted
+/// from the original fused step so `kernels::parallel` can fan row
+/// blocks out to workers; the sequential step is `coupled_accumulate`
+/// over the full batch followed by [`coupled_finalize`], arithmetic
+/// unchanged.
+pub(crate) fn coupled_accumulate(
+    w_lr: &[f32],
+    w_svm: &[f32],
+    x: &[f32],
+    y: &[f32],
+    t: &TileConfig,
+) -> CoupledPartial {
     let d = w_lr.len();
     assert_eq!(w_svm.len(), d);
     let b = y.len();
@@ -109,15 +142,30 @@ pub fn coupled_step_tiled(
             }
         }
     }
+    CoupledPartial { g_lr, g_svm, loss_lr, loss_svm }
+}
+
+/// Batch normalisation + the coupled weight update, applied to reduced
+/// accumulation state. `b` is the FULL batch size (the parallel layer
+/// reduces partials over row blocks before calling this, so the
+/// normalisation must not depend on block sizes).
+pub(crate) fn coupled_finalize(
+    w_lr: &[f32],
+    w_svm: &[f32],
+    p: CoupledPartial,
+    b: usize,
+    lr: f32,
+    lam: f32,
+) -> ((Vec<f32>, f32), (Vec<f32>, f32)) {
     let wsq: f32 = w_svm.iter().map(|v| v * v).sum();
-    loss_lr /= b as f32;
-    loss_svm = loss_svm / b as f32 + 0.5 * lam * wsq;
+    let loss_lr = p.loss_lr / b as f32;
+    let loss_svm = p.loss_svm / b as f32 + 0.5 * lam * wsq;
     let scale = lr / b as f32;
     let w_lr2: Vec<f32> =
-        w_lr.iter().zip(&g_lr).map(|(w, g)| w - scale * g).collect();
+        w_lr.iter().zip(&p.g_lr).map(|(w, g)| w - scale * g).collect();
     let w_svm2: Vec<f32> = w_svm
         .iter()
-        .zip(&g_svm)
+        .zip(&p.g_svm)
         .map(|(w, g)| w - scale * g - lr * lam * w)
         .collect();
     ((w_lr2, loss_lr), (w_svm2, loss_svm))

@@ -202,16 +202,37 @@ pub fn matmul_tn_acc_tiled(
     n: usize,
     t: &TileConfig,
 ) {
+    matmul_tn_acc_rows(a, b, c, k, m, n, t, 0, m);
+}
+
+/// Row-range core of [`matmul_tn_acc_tiled`]: accumulates rows
+/// `i0..i1` of `C` (passed as the `(i1-i0) × n` slice `c_rows`) while
+/// reading the full `[k×m]` transposed operand. Per-element accumulation
+/// stays `p`-ascending for any row split, so the parallel wrapper that
+/// hands disjoint row ranges to workers is bit-identical to the
+/// sequential kernel.
+pub(crate) fn matmul_tn_acc_rows(
+    a: &[f32],
+    b: &[f32],
+    c_rows: &mut [f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    t: &TileConfig,
+    i0: usize,
+    i1: usize,
+) {
+    assert!(i0 <= i1 && i1 <= m);
     assert_eq!(a.len(), k * m);
     assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
+    assert_eq!(c_rows.len(), (i1 - i0) * n);
     let (mc, kc, nc) = (t.mc.max(1), t.kc.max(1), t.nc.max(1));
     for jc in (0..n).step_by(nc) {
         let jhi = (jc + nc).min(n);
         for pc in (0..k).step_by(kc) {
             let phi = (pc + kc).min(k);
-            for ic in (0..m).step_by(mc) {
-                let ihi = (ic + mc).min(m);
+            for ic in (i0..i1).step_by(mc) {
+                let ihi = (ic + mc).min(i1);
                 for p in pc..phi {
                     let arow = &a[p * m..(p + 1) * m];
                     let brow = &b[p * n + jc..p * n + jhi];
@@ -220,7 +241,8 @@ pub fn matmul_tn_acc_tiled(
                         if av == 0.0 {
                             continue;
                         }
-                        let crow = &mut c[i * n + jc..i * n + jhi];
+                        let crow = &mut c_rows
+                            [(i - i0) * n + jc..(i - i0) * n + jhi];
                         for (cv, &bv) in crow.iter_mut().zip(brow) {
                             *cv += av * bv;
                         }

@@ -33,6 +33,13 @@
 //! paper's §5 testbed). The simulator predicts the miss-rate effects;
 //! these kernels realise them on the host running the experiments.
 //!
+//! The [`parallel`] layer shards these macro-tiles across a scoped
+//! worker pool — `MC`-row blocks for matmul, query tiles for distances,
+//! row blocks for the coupled step — with per-worker tile sizes from
+//! [`TileConfig::for_workers`] (private L1/L2, a 1/workers share of the
+//! shared L3). `threads = 1` short-circuits to the sequential kernels
+//! above, bit for bit.
+//!
 //! # Correctness contract
 //!
 //! Every tiled kernel sums exactly the same multiset of terms as its
@@ -46,6 +53,7 @@
 pub mod coupled;
 pub mod distance;
 pub mod matmul;
+pub mod parallel;
 pub mod tile;
 
 pub use coupled::coupled_step_tiled;
@@ -53,5 +61,9 @@ pub use distance::{pairwise_sq_dists_naive, pairwise_sq_dists_tiled};
 pub use matmul::{
     matmul_acc_tiled, matmul_bias_tiled, matmul_naive, matmul_tiled,
     matmul_tn_acc_naive, matmul_tn_acc_tiled,
+};
+pub use parallel::{
+    coupled_step_par, matmul_acc_tiled_par, matmul_bias_tiled_par,
+    matmul_tiled_par, matmul_tn_acc_tiled_par, pairwise_sq_dists_tiled_par,
 };
 pub use tile::TileConfig;

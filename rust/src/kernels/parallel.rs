@@ -1,0 +1,695 @@
+//! **Parallel macro-tile execution layer**: the locality-tiled kernels
+//! sharded across a scoped worker pool (`util::pool::Pool::run_parallel`).
+//!
+//! PR 1 applied the paper's blocking guidelines per core; this layer
+//! distributes the resulting macro-tiles across cores with
+//! private-cache-aware partitioning — the step both the PIM training
+//! study (Gómez-Luna et al., 2022) and the traditional-ML
+//! characterization work (Kumar & Govindarajan, 2024) identify as
+//! necessary before locality-tiled kernels reach hardware limits.
+//!
+//! # Partitioning scheme (deterministic)
+//!
+//! Work is split on **macro-tile boundaries** so each worker's inner
+//! loops see exactly the tile shapes the cache model sized:
+//!
+//! * **matmul** (plain / bias / transpose-acc) — `MC`-row macro-tile
+//!   blocks of the output (refined toward `m / threads` rows when the
+//!   matrix has fewer macro-tiles than workers, so e.g. a single-tile
+//!   512-row matmul still shards); each worker owns a disjoint `&mut`
+//!   row range of `C`, so no synchronisation is needed and per-element
+//!   accumulation order is unchanged → bit-identical to the sequential
+//!   kernels at ANY thread count.
+//! * **pairwise distances** — query tiles (`TileConfig::pair_tiles`);
+//!   each worker fills a disjoint block of whole output rows →
+//!   bit-identical at any thread count.
+//! * **coupled LR+SVM** — `coupled_rows()` row blocks of the design
+//!   matrix; workers produce raw `CoupledPartial` sums which are reduced
+//!   in worker-index order and finalised once. The reduction reassociates
+//!   the f32 gradient sums, so multi-thread results can differ from the
+//!   sequential kernel in the last bits (≤ 1e-4 vs the naive oracle,
+//!   property-tested) but are **bit-identical for a given partition**:
+//!   the partition is a pure function of `(batch, tile config, threads)`
+//!   and the reduce order is fixed, so every run at the same thread
+//!   count reproduces the same bits.
+//!
+//! `partition_units` is the single source of truth for the scheme; a
+//! property test asserts it covers every macro-tile exactly once across
+//! ragged shapes (no gaps, no overlaps).
+//!
+//! # Thread-count resolution
+//!
+//! `threads = 1` short-circuits to the PR-1 sequential kernels —
+//! nothing is spawned and outputs are bit-identical by construction.
+//! [`default_threads`] resolves the session's thread count:
+//! `--threads N` override (via [`set_threads`]) → `LOCALITY_ML_THREADS`
+//! env var (the CI matrix axis) → `std::thread::available_parallelism`.
+//! Per-worker tile sizes come from [`TileConfig::for_workers`], which
+//! caps each worker's streamed block to its share of the shared L3 so
+//! concurrent working sets don't thrash each other.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::coupled::{
+    coupled_accumulate, coupled_finalize, coupled_step_tiled,
+    CoupledPartial,
+};
+use super::distance::pairwise_sq_dists_tiled;
+use super::matmul::{matmul_acc_tiled, matmul_tn_acc_rows, matmul_tn_acc_tiled};
+use super::tile::TileConfig;
+use crate::util::pool::Pool;
+
+/// Session-wide `--threads` override; 0 = unset.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the `--threads N` CLI override for the rest of the process
+/// (`0` clears it).
+pub fn set_threads(threads: usize) {
+    THREAD_OVERRIDE.store(threads, Ordering::Relaxed);
+}
+
+/// Minimum kernel work (f32 multiply-adds) before fanning out pays for
+/// the scoped spawn/join (~tens of µs for a handful of workers): below
+/// this, the sequential kernel wins and the rewired hot paths stay on
+/// it. The parallel kernels themselves take `threads` verbatim — this
+/// policy lives at the call sites via [`effective_threads`], so tests
+/// and benches can still shard tiny shapes on purpose.
+pub const MIN_PAR_WORK: usize = 1 << 21;
+
+/// The thread count a rewired hot path should actually use for a kernel
+/// invocation of `work` multiply-adds: `threads` when the work clears
+/// [`MIN_PAR_WORK`], else 1 (the exact sequential kernel, no spawns).
+pub fn effective_threads(threads: usize, work: usize) -> usize {
+    if work >= MIN_PAR_WORK {
+        threads
+    } else {
+        1
+    }
+}
+
+/// Resolve the session thread count: CLI override (`set_threads`) →
+/// `LOCALITY_ML_THREADS` → available parallelism → 1.
+pub fn default_threads() -> usize {
+    let over = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if over > 0 {
+        return over;
+    }
+    if let Ok(v) = std::env::var("LOCALITY_ML_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Deterministic contiguous partition of `units` macro-tile indices
+/// into at most `workers` non-empty ranges (earlier ranges get the
+/// remainder). This is the one partitioning function every parallel
+/// kernel uses; its exactly-once coverage is property-tested.
+pub fn partition_units(units: usize, workers: usize) -> Vec<Range<usize>> {
+    if units == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(units);
+    let base = units / workers;
+    let extra = units % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, units);
+    out
+}
+
+/// Effective shard unit: macro-tile rows (`MC` for matmul, the query
+/// tile for distances), refined toward `total / threads` rows when the
+/// output has fewer macro-tiles than workers — a 512-row matmul
+/// (exactly one Westmere `MC` block, and the CI gate shape) or a
+/// low-dimensional scan whose query tile clamps at 512 rows must still
+/// shard across every worker. Sharding below the macro-tile only
+/// *shrinks* each worker's block (the worker re-tiles internally), so
+/// the cache budgets still hold, and the bit-identity of the
+/// output-disjoint kernels is row-wise — it never depended on tile
+/// alignment. Still a pure function of `(macro_rows, total, threads)`.
+pub(crate) fn shard_unit(macro_rows: usize, total: usize,
+                         threads: usize) -> usize {
+    macro_rows.max(1).min((total / threads.max(1)).max(1))
+}
+
+/// Shared row-block fan-out used by every output-disjoint parallel
+/// kernel: `out` holds `total` rows of `row_width` f32s, partitioned on
+/// `unit`-row macro-tile boundaries across up to `threads` workers;
+/// each worker gets `work(lo, hi, block)` with its global row range and
+/// the matching disjoint `&mut` block. Returns `false` (touching
+/// nothing) when the partition degenerates to a single range — the
+/// caller then runs its sequential kernel, keeping `threads = 1`
+/// bit-identical to PR 1.
+fn fan_out_rows(
+    out: &mut [f32],
+    total: usize,
+    row_width: usize,
+    unit: usize,
+    threads: usize,
+    work: impl Fn(usize, usize, &mut [f32]) + Sync,
+) -> bool {
+    let unit = unit.max(1);
+    let parts = partition_units(total.div_ceil(unit), threads);
+    if threads <= 1 || parts.len() <= 1 {
+        return false;
+    }
+    let work = &work;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+        Vec::with_capacity(parts.len());
+    let mut rest: &mut [f32] = out;
+    let mut row0 = 0usize;
+    for part in &parts {
+        let hi = (part.end * unit).min(total);
+        let rows = hi - row0;
+        let (head, tail) =
+            std::mem::take(&mut rest).split_at_mut(rows * row_width);
+        rest = tail;
+        let lo = row0;
+        jobs.push(Box::new(move || work(lo, hi, head)));
+        row0 = hi;
+    }
+    Pool::run_parallel(jobs.len(), jobs);
+    true
+}
+
+/// Parallel `C = A·B`: zero then accumulate (mirrors `matmul_tiled`).
+pub fn matmul_tiled_par(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    t: &TileConfig,
+    threads: usize,
+) {
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    matmul_acc_tiled_par(a, b, c, m, k, n, t, threads);
+}
+
+/// Parallel `C += A·B`: `MC`-row macro-tile blocks of the output fan
+/// out across workers, each owning a disjoint `&mut` slice of `C`.
+/// Bit-identical to [`matmul_acc_tiled`] at any thread count (row
+/// results are independent; per-element accumulation order unchanged).
+pub fn matmul_acc_tiled_par(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    t: &TileConfig,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let tiles = *t;
+    let unit = shard_unit(t.mc, m, threads);
+    let ran = fan_out_rows(c, m, n, unit, threads, |lo, hi, block| {
+        matmul_acc_tiled(&a[lo * k..hi * k], b, block, hi - lo, k, n,
+                         &tiles);
+    });
+    if !ran {
+        matmul_acc_tiled(a, b, c, m, k, n, t);
+    }
+}
+
+/// Parallel `C = bias ⊕ A·B` (mirrors `matmul_bias_tiled`).
+pub fn matmul_bias_tiled_par(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    t: &TileConfig,
+    threads: usize,
+) {
+    assert_eq!(bias.len(), n);
+    assert_eq!(c.len(), m * n);
+    for row in c.chunks_exact_mut(n.max(1)) {
+        row.copy_from_slice(bias);
+    }
+    matmul_acc_tiled_par(a, b, c, m, k, n, t, threads);
+}
+
+/// Parallel `C += Aᵀ·B` (`a` stored `[k×m]`): row ranges of the output
+/// fan out across workers via the row-range core. Per-element
+/// accumulation is `p`-ascending regardless of where the row split
+/// falls, so results match the sequential kernel bit for bit at any
+/// thread count.
+pub fn matmul_tn_acc_tiled_par(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    t: &TileConfig,
+    threads: usize,
+) {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let tiles = *t;
+    let unit = shard_unit(t.mc, m, threads);
+    let ran = fan_out_rows(c, m, n, unit, threads, |lo, hi, block| {
+        matmul_tn_acc_rows(a, b, block, k, m, n, &tiles, lo, hi);
+    });
+    if !ran {
+        matmul_tn_acc_tiled(a, b, c, k, m, n, t);
+    }
+}
+
+/// Parallel pairwise squared distances: query-tile blocks fan out, each
+/// worker filling a disjoint block of whole output rows. Bit-identical
+/// to [`pairwise_sq_dists_tiled`] at any thread count.
+pub fn pairwise_sq_dists_tiled_par(
+    train: &[f32],
+    queries: &[f32],
+    d: usize,
+    out: &mut [f32],
+    t: &TileConfig,
+    threads: usize,
+) {
+    assert!(d > 0, "feature dimension must be positive");
+    assert_eq!(train.len() % d, 0);
+    assert_eq!(queries.len() % d, 0);
+    let n = train.len() / d;
+    let nq = queries.len() / d;
+    assert_eq!(out.len(), nq * n);
+    let (qt, _) = t.pair_tiles(d);
+    let unit = shard_unit(qt, nq, threads);
+    let tiles = *t;
+    let ran = fan_out_rows(out, nq, n, unit, threads, |lo, hi, block| {
+        pairwise_sq_dists_tiled(train, &queries[lo * d..hi * d], d,
+                                block, &tiles);
+    });
+    if !ran {
+        pairwise_sq_dists_tiled(train, queries, d, out, t);
+    }
+}
+
+/// Parallel fused coupled LR+SVM step: `coupled_rows()`-aligned row
+/// blocks of the design matrix fan out, each worker accumulating a raw
+/// [`CoupledPartial`]; partials are reduced in worker-index order and
+/// finalised once over the full batch size. `threads = 1` is the PR-1
+/// sequential kernel bit-for-bit.
+pub fn coupled_step_par(
+    w_lr: &[f32],
+    w_svm: &[f32],
+    x: &[f32],
+    y: &[f32],
+    lr: f32,
+    lam: f32,
+    t: &TileConfig,
+    threads: usize,
+) -> ((Vec<f32>, f32), (Vec<f32>, f32)) {
+    let d = w_lr.len();
+    assert_eq!(w_svm.len(), d);
+    let b = y.len();
+    assert_eq!(x.len(), b * d);
+    let unit = t.coupled_rows().max(1);
+    let parts = partition_units(b.div_ceil(unit), threads);
+    if threads <= 1 || parts.len() <= 1 {
+        return coupled_step_tiled(w_lr, w_svm, x, y, lr, lam, t);
+    }
+    let tiles = *t;
+    let jobs: Vec<Box<dyn FnOnce() -> CoupledPartial + Send + '_>> = parts
+        .iter()
+        .map(|part| {
+            let lo = part.start * unit;
+            let hi = (part.end * unit).min(b);
+            let xb = &x[lo * d..hi * d];
+            let yb = &y[lo..hi];
+            Box::new(move || coupled_accumulate(w_lr, w_svm, xb, yb, &tiles))
+                as Box<dyn FnOnce() -> CoupledPartial + Send + '_>
+        })
+        .collect();
+    let partials = Pool::run_parallel(jobs.len(), jobs);
+    let total = reduce_partials(partials, d);
+    coupled_finalize(w_lr, w_svm, total, b, lr, lam)
+}
+
+/// Reduce per-block partials in worker-index order (the deterministic
+/// half of the coupled kernel's parallel contract).
+pub(crate) fn reduce_partials(
+    partials: Vec<CoupledPartial>,
+    d: usize,
+) -> CoupledPartial {
+    let mut acc = CoupledPartial {
+        g_lr: vec![0.0f32; d],
+        g_svm: vec![0.0f32; d],
+        loss_lr: 0.0,
+        loss_svm: 0.0,
+    };
+    for p in partials {
+        for f in 0..d {
+            acc.g_lr[f] += p.g_lr[f];
+            acc.g_svm[f] += p.g_svm[f];
+        }
+        acc.loss_lr += p.loss_lr;
+        acc.loss_svm += p.loss_svm;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::distance::pairwise_sq_dists_naive;
+    use crate::kernels::matmul::{
+        matmul_bias_tiled, matmul_naive, matmul_tiled,
+    };
+    use crate::learners::linear;
+    use crate::prop_assert;
+    use crate::util::prop::{check, Gen};
+
+    fn rand_tiles(g: &mut Gen) -> TileConfig {
+        TileConfig {
+            mc: g.usize_in(1, 17),
+            kc: g.usize_in(1, 17),
+            nc: g.usize_in(1, 17),
+            l1_f32: 1 << g.usize_in(6, 10),
+        }
+    }
+
+    #[test]
+    fn partitions_cover_every_unit_exactly_once() {
+        // The satellite invariant: no macro-tile is dropped or computed
+        // twice, for ANY (units, workers) combination.
+        check("partition-coverage", 120, |g| {
+            let units = g.usize_in(0, 500);
+            let workers = g.usize_in(1, 33);
+            let parts = partition_units(units, workers);
+            let mut prev_end = 0;
+            for p in &parts {
+                prop_assert!(p.start == prev_end,
+                    "gap or overlap before {p:?} (prev end {prev_end})");
+                prop_assert!(p.end > p.start, "empty range {p:?}");
+                prev_end = p.end;
+            }
+            prop_assert!(prev_end == units,
+                "tail units uncovered: {prev_end}/{units}");
+            prop_assert!(parts.len() <= workers,
+                "{} ranges for {workers} workers", parts.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn macro_tile_row_ranges_tile_ragged_shapes_exactly() {
+        // Unit ranges converted to row ranges (the way every par kernel
+        // does it) must tile 0..m exactly, ragged last tile included.
+        check("partition-rows", 80, |g| {
+            let m = g.usize_in(0, 400);
+            let unit = g.usize_in(1, 37);
+            let workers = g.usize_in(1, 9);
+            let parts = partition_units(m.div_ceil(unit), workers);
+            let mut row = 0;
+            for p in &parts {
+                let lo = p.start * unit;
+                let hi = (p.end * unit).min(m);
+                prop_assert!(lo == row && hi > lo,
+                    "row block [{lo},{hi}) does not continue from {row}");
+                row = hi;
+            }
+            prop_assert!(row == m, "rows covered {row}/{m}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_matmul_is_bit_identical_to_the_sequential_kernel() {
+        check("par-matmul", 25, |g| {
+            let (m, k, n) =
+                (g.usize_in(1, 60), g.usize_in(1, 24), g.usize_in(1, 24));
+            let a = g.f32_vec(m * k, 2.0);
+            let b = g.f32_vec(k * n, 2.0);
+            let t = rand_tiles(g);
+            let mut want = vec![0.0f32; m * n];
+            matmul_tiled(&a, &b, &mut want, m, k, n, &t);
+            for threads in [1usize, 2, 3, 8] {
+                let mut got = vec![7.0f32; m * n];
+                matmul_tiled_par(&a, &b, &mut got, m, k, n, &t, threads);
+                prop_assert!(got == want,
+                    "parallel matmul diverged at {threads} threads");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_bias_and_transpose_variants_match_sequential() {
+        check("par-matmul-variants", 20, |g| {
+            let (m, k, n) =
+                (g.usize_in(1, 40), g.usize_in(1, 20), g.usize_in(1, 20));
+            let t = rand_tiles(g);
+            // bias variant
+            let a = g.f32_vec(m * k, 2.0);
+            let b = g.f32_vec(k * n, 2.0);
+            let bias = g.f32_vec(n, 2.0);
+            let mut want = vec![0.0f32; m * n];
+            matmul_bias_tiled(&a, &b, &bias, &mut want, m, k, n, &t);
+            let mut got = vec![3.0f32; m * n];
+            matmul_bias_tiled_par(&a, &b, &bias, &mut got, m, k, n, &t, 3);
+            prop_assert!(got == want, "parallel bias matmul diverged");
+            // transpose-acc variant (a stored [k×m], accumulating)
+            let a_t = g.f32_vec(k * m, 2.0);
+            let init = g.f32_vec(m * n, 1.0);
+            let mut want = init.clone();
+            matmul_tn_acc_tiled(&a_t, &b, &mut want, k, m, n, &t);
+            let mut got = init;
+            matmul_tn_acc_tiled_par(&a_t, &b, &mut got, k, m, n, &t, 5);
+            prop_assert!(got == want, "parallel tn matmul diverged");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gate_shape_single_macro_tile_still_shards() {
+        // 512^3 — the CI scaling gate — is exactly ONE Westmere MC
+        // block; the refined shard unit must still split it across all
+        // four workers instead of degenerating to the sequential path.
+        let t = TileConfig::westmere_workers(4);
+        let unit = shard_unit(t.mc, 512, 4);
+        assert_eq!(partition_units(512usize.div_ceil(unit), 4).len(), 4,
+            "512-row matmul must shard 4 ways (unit {unit})");
+        // same story for a low-dimensional scan: pair_tiles clamps the
+        // query tile at 512 rows, which must not serialise the workers
+        assert_eq!(
+            partition_units(1024usize.div_ceil(shard_unit(512, 1024, 4)),
+                            4).len(),
+            4, "1024 queries at qt=512 must shard 4 ways");
+        // sub-macro-tile sharding stays bit-identical (m <= mc)
+        let mut g = Gen::new(99);
+        let (m, k, n) = (64usize, 20, 20);
+        let a = g.f32_vec(m * k, 2.0);
+        let b = g.f32_vec(k * n, 2.0);
+        let big = TileConfig { mc: 512, kc: 7, nc: 5, l1_f32: 4096 };
+        let mut want = vec![0.0f32; m * n];
+        matmul_tiled(&a, &b, &mut want, m, k, n, &big);
+        let mut got = vec![0.0f32; m * n];
+        matmul_tiled_par(&a, &b, &mut got, m, k, n, &big, 4);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_matmul_stays_within_matmul_tolerance_of_naive() {
+        // The ISSUE parity contract, end to end: ≤ 1e-4 vs the naive
+        // oracle (inherited from the sequential kernel's 4-deep groups).
+        check("par-matmul-naive", 10, |g| {
+            let (m, k, n) =
+                (g.usize_in(1, 30), g.usize_in(1, 30), g.usize_in(1, 30));
+            let a = g.f32_vec(m * k, 1.0);
+            let b = g.f32_vec(k * n, 1.0);
+            let mut want = vec![0.0f32; m * n];
+            matmul_naive(&a, &b, &mut want, m, k, n);
+            let mut got = vec![0.0f32; m * n];
+            matmul_tiled_par(&a, &b, &mut got, m, k, n,
+                             &TileConfig::westmere_workers(4), 4);
+            for i in 0..want.len() {
+                prop_assert!((want[i] - got[i]).abs() <= 1e-4,
+                    "c[{i}]: {} vs {}", want[i], got[i]);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_distances_are_bit_identical_to_sequential() {
+        check("par-distance", 20, |g| {
+            let d = g.usize_in(1, 16);
+            let n = g.usize_in(0, 50);
+            let nq = g.usize_in(0, 40);
+            let train = g.f32_vec(n * d, 3.0);
+            let queries = g.f32_vec(nq * d, 3.0);
+            let t = TileConfig {
+                mc: 1,
+                kc: 1,
+                nc: 1,
+                l1_f32: g.usize_in(2, 32) * d,
+            };
+            let mut want = vec![0.0f32; nq * n];
+            pairwise_sq_dists_tiled(&train, &queries, d, &mut want, &t);
+            for threads in [1usize, 2, 4, 7] {
+                let mut got = vec![-1.0f32; nq * n];
+                pairwise_sq_dists_tiled_par(&train, &queries, d, &mut got,
+                                            &t, threads);
+                prop_assert!(got == want,
+                    "parallel distances diverged at {threads} threads");
+            }
+            // and the naive oracle agrees bit-for-bit too
+            let mut naive = vec![0.0f32; nq * n];
+            pairwise_sq_dists_naive(&train, &queries, d, &mut naive);
+            prop_assert!(naive == want, "tiled distances diverged");
+            Ok(())
+        });
+    }
+
+    /// The deterministic reference for a given partition: the SAME
+    /// blocks, accumulated sequentially, reduced in the same order.
+    fn coupled_reference_for_partition(
+        w0: &[f32],
+        w1: &[f32],
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+        lam: f32,
+        t: &TileConfig,
+        threads: usize,
+    ) -> ((Vec<f32>, f32), (Vec<f32>, f32)) {
+        let d = w0.len();
+        let b = y.len();
+        let unit = t.coupled_rows().max(1);
+        let parts = partition_units(b.div_ceil(unit), threads);
+        if threads <= 1 || parts.len() <= 1 {
+            return coupled_step_tiled(w0, w1, x, y, lr, lam, t);
+        }
+        let partials: Vec<CoupledPartial> = parts
+            .iter()
+            .map(|p| {
+                let lo = p.start * unit;
+                let hi = (p.end * unit).min(b);
+                coupled_accumulate(w0, w1, &x[lo * d..hi * d],
+                                   &y[lo..hi], t)
+            })
+            .collect();
+        coupled_finalize(w0, w1, reduce_partials(partials, d), b, lr, lam)
+    }
+
+    #[test]
+    fn parallel_coupled_reduction_is_deterministic_per_partition() {
+        // Threaded execution must introduce no nondeterminism: at every
+        // thread count the result equals the sequential simulation of
+        // the same partition, bit for bit — and threads = 1 is the PR-1
+        // kernel itself.
+        check("par-coupled", 12, |g| {
+            let d = g.usize_in(1, 40);
+            let b = g.usize_in(1, 200);
+            let w0 = g.f32_vec(d, 1.0);
+            let w1 = g.f32_vec(d, 1.0);
+            let x = g.f32_vec(b * d, 2.0);
+            let y: Vec<f32> = (0..b)
+                .map(|_| if g.bool() { 1.0 } else { -1.0 })
+                .collect();
+            // tiny coupled tiles force real multi-block partitions
+            let t = TileConfig {
+                mc: 3,
+                kc: g.usize_in(1, 9),
+                nc: 3,
+                l1_f32: g.usize_in(8, 96),
+            };
+            for threads in [1usize, 2, 4] {
+                let got = coupled_step_par(
+                    &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t,
+                    threads);
+                let want = coupled_reference_for_partition(
+                    &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t,
+                    threads);
+                prop_assert!(got == want,
+                    "coupled reduction not deterministic at {threads} \
+                     threads");
+            }
+            let seq = coupled_step_tiled(
+                &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t);
+            let par1 = coupled_step_par(
+                &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t, 1);
+            prop_assert!(par1 == seq,
+                "threads=1 must be the sequential kernel bit-for-bit");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_coupled_stays_within_tolerance_of_the_naive_oracle() {
+        // ISSUE contract at N threads: the row-block reduction may
+        // reassociate the gradient sums, but never past 1e-4.
+        check("par-coupled-tolerance", 6, |g| {
+            let d = g.usize_in(80, 160);
+            let b = g.usize_in(150, 300);
+            let w0 = g.f32_vec(d, 0.5);
+            let w1 = g.f32_vec(d, 0.5);
+            let x = g.f32_vec(b * d, 1.0);
+            let y: Vec<f32> = (0..b)
+                .map(|_| if g.bool() { 1.0 } else { -1.0 })
+                .collect();
+            let t = TileConfig::westmere_workers(4);
+            let ((wl, ll), (ws, ls)) = linear::coupled_step_naive(
+                &w0, &w1, &x, &y, linear::LR, linear::LAMBDA);
+            let ((wl2, ll2), (ws2, ls2)) = coupled_step_par(
+                &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t, 4);
+            for f in 0..d {
+                prop_assert!((wl[f] - wl2[f]).abs() < 1e-4, "lr w[{f}]");
+                prop_assert!((ws[f] - ws2[f]).abs() < 1e-4, "svm w[{f}]");
+            }
+            prop_assert!((ll - ll2).abs() < 1e-4, "lr loss");
+            prop_assert!((ls - ls2).abs() < 1e-4, "svm loss");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_and_degenerate_shapes_are_harmless() {
+        let t = TileConfig::westmere();
+        let mut c: Vec<f32> = Vec::new();
+        matmul_tiled_par(&[], &[], &mut c, 0, 0, 0, &t, 4);
+        let mut c = vec![5.0f32; 3];
+        matmul_tiled_par(&[], &[], &mut c, 1, 0, 3, &t, 4);
+        assert_eq!(c, vec![0.0; 3], "k = 0 must still zero C");
+        let mut out: Vec<f32> = Vec::new();
+        pairwise_sq_dists_tiled_par(&[], &[], 2, &mut out, &t, 4);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn effective_threads_keeps_small_work_sequential() {
+        assert_eq!(effective_threads(8, MIN_PAR_WORK - 1), 1);
+        assert_eq!(effective_threads(8, MIN_PAR_WORK), 8);
+        assert_eq!(effective_threads(1, MIN_PAR_WORK), 1);
+    }
+
+    #[test]
+    fn default_threads_honours_the_cli_override() {
+        // No parallel test depends on the ambient default, so briefly
+        // setting the override is safe even with concurrent tests (the
+        // override is restored before returning).
+        set_threads(3);
+        assert_eq!(default_threads(), 3);
+        set_threads(0);
+        assert!(default_threads() >= 1);
+    }
+}

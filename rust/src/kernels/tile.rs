@@ -70,6 +70,39 @@ impl TileConfig {
         Self::for_levels(&westmere_levels())
     }
 
+    /// Per-worker tiles for the parallel macro-tile layer. The L1/L2
+    /// below the sharing point are private per core (Westmere §5.1), so
+    /// the `kc × nc` panel and the L2-derived `mc` start from
+    /// [`TileConfig::for_levels`] unchanged; the third level is shared
+    /// by every worker, so each worker's streamed `mc × kc` block is
+    /// additionally capped to its `1/workers` share of the half-L3
+    /// budget — `workers` concurrent blocks must fit the shared level
+    /// together instead of thrashing each other's working sets.
+    ///
+    /// `for_workers(levels, 1)` equals `for_levels(levels)` exactly:
+    /// the single-thread path keeps PR-1 tile sizes bit-for-bit.
+    pub fn for_workers(levels: &[LevelConfig], workers: usize) -> Self {
+        let mut t = Self::for_levels(levels);
+        let workers = workers.max(1);
+        if workers > 1 {
+            if let Some(l3) = levels.get(2) {
+                let l3_f32 =
+                    (l3.size_bytes as usize / 2 / F32_BYTES).max(64);
+                let share = (l3_f32 / workers).max(64);
+                let cap =
+                    floor_pow2(share / t.kc.max(1)).clamp(8, 1024);
+                t.mc = t.mc.min(cap);
+            }
+        }
+        t
+    }
+
+    /// Per-worker tiles on the paper's testbed hierarchy — what the
+    /// rewired learner paths use once a thread count is known.
+    pub fn westmere_workers(workers: usize) -> Self {
+        Self::for_workers(&westmere_levels(), workers)
+    }
+
     /// Row-tile sizes `(queries, train rows)` for the pairwise-distance
     /// kernel: both tiles of `d`-wide rows must fit the L1 budget
     /// together so the train tile is reused across the whole query tile.
@@ -96,6 +129,7 @@ impl Default for TileConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::memsim::cache::WESTMERE_CORES_PER_L3;
     use crate::prop_assert;
     use crate::util::prop::check;
 
@@ -123,6 +157,56 @@ mod tests {
         };
         let t = TileConfig::for_levels(&[tiny]);
         assert!(t.mc >= 1 && t.kc >= 1 && t.nc >= 1 && t.l1_f32 >= 64);
+    }
+
+    #[test]
+    fn worker_tiles_match_single_core_at_one_and_shrink_under_pressure() {
+        // workers = 1 is the PR-1 config bit-for-bit.
+        assert_eq!(TileConfig::westmere_workers(1), TileConfig::westmere());
+        // The 12 MiB shared L3 is roomy: up to the testbed's six cores
+        // per socket the Westmere tiles are unchanged.
+        assert_eq!(TileConfig::westmere_workers(WESTMERE_CORES_PER_L3),
+                   TileConfig::westmere());
+        // A pathologically small shared level must shrink the per-worker
+        // streamed block (but never below the floor).
+        let mut levels = westmere_levels();
+        levels[2].size_bytes = 256 << 10;
+        let t1 = TileConfig::for_workers(&levels, 1);
+        let t8 = TileConfig::for_workers(&levels, 8);
+        assert!(t8.mc < t1.mc, "mc {} must shrink below {}", t8.mc, t1.mc);
+        assert!(t8.mc >= 8);
+        assert_eq!((t8.kc, t8.nc, t8.l1_f32), (t1.kc, t1.nc, t1.l1_f32),
+            "private-level tiles must not depend on worker count");
+    }
+
+    #[test]
+    fn worker_tiles_respect_the_shared_level_share() {
+        check("tile-worker-share", 40, |g| {
+            let l1 = 1usize << g.usize_in(9, 16);
+            let l2 = l1 << g.usize_in(0, 4);
+            let l3 = l2 << g.usize_in(0, 6);
+            let mk = |name, size: usize| LevelConfig {
+                name,
+                size_bytes: size as u64,
+                ways: 8,
+                line_bytes: 64,
+                latency_cycles: 4,
+            };
+            let levels = [mk("L1", l1), mk("L2", l2), mk("L3", l3)];
+            let w = g.usize_in(1, 16);
+            let base = TileConfig::for_levels(&levels);
+            let t = TileConfig::for_workers(&levels, w);
+            prop_assert!(
+                (t.kc, t.nc, t.l1_f32) == (base.kc, base.nc, base.l1_f32),
+                "private-level tiles changed with workers");
+            prop_assert!(t.mc <= base.mc, "mc grew: {} > {}", t.mc,
+                base.mc);
+            let l3_f32 = (l3 / 2 / F32_BYTES).max(64);
+            prop_assert!(t.mc == 8 || w * t.mc * t.kc <= l3_f32,
+                "{w} workers x {}x{} blocks exceed half-L3 budget {}",
+                t.mc, t.kc, l3_f32);
+            Ok(())
+        });
     }
 
     #[test]

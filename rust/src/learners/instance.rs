@@ -229,6 +229,85 @@ pub fn joint_scan_tiled(train: &Dataset, test_rows: &[f32], d: usize,
     (knn, prw)
 }
 
+/// Shared skeleton of the parallel scans: queries are split on
+/// query-tile boundaries (`TileConfig::pair_tiles`, the same unit the
+/// tiled kernel blocks on) into per-worker contiguous blocks via the
+/// deterministic `kernels::parallel` partition, and each worker runs
+/// `scan` — one of the single-thread tiled scans — on its slice.
+/// Per-query results are independent, so the concatenated predictions
+/// are bit-identical to the sequential scans at any thread count.
+fn scan_par<T: Send>(
+    train: &Dataset,
+    test_rows: &[f32],
+    d: usize,
+    tiles: &TileConfig,
+    threads: usize,
+    scan: impl Fn(&[f32]) -> Vec<T> + Sync,
+) -> Vec<T> {
+    assert_eq!(d, train.d);
+    let n_test = test_rows.len() / d;
+    let (qt, _) = tiles.pair_tiles(d);
+    let unit = crate::kernels::parallel::shard_unit(qt, n_test, threads);
+    let parts =
+        crate::kernels::parallel::partition_units(n_test.div_ceil(unit),
+                                                  threads);
+    if threads <= 1 || parts.len() <= 1 {
+        return scan(test_rows);
+    }
+    let scan = &scan;
+    let jobs: Vec<Box<dyn FnOnce() -> Vec<T> + Send + '_>> = parts
+        .iter()
+        .map(|p| {
+            let lo = p.start * unit;
+            let hi = (p.end * unit).min(n_test);
+            let rows = &test_rows[lo * d..hi * d];
+            Box::new(move || scan(rows))
+                as Box<dyn FnOnce() -> Vec<T> + Send + '_>
+        })
+        .collect();
+    crate::util::pool::Pool::run_parallel(jobs.len(), jobs)
+        .into_iter()
+        .flatten()
+        .collect()
+}
+
+/// Parallel cache-blocked k-NN scan: query blocks fan out across
+/// `threads` workers; bit-identical to [`knn_scan_tiled`] (and
+/// therefore to [`knn_scan`]) at any thread count.
+pub fn knn_scan_par(train: &Dataset, test_rows: &[f32], d: usize,
+                    k: usize, tiles: &TileConfig, threads: usize)
+    -> Vec<i32> {
+    scan_par(train, test_rows, d, tiles, threads,
+             |rows| knn_scan_tiled(train, rows, d, k, tiles))
+}
+
+/// Parallel cache-blocked PRW scan (see [`knn_scan_par`]).
+pub fn prw_scan_par(train: &Dataset, test_rows: &[f32], d: usize,
+                    bandwidth: f32, tiles: &TileConfig, threads: usize)
+    -> Vec<i32> {
+    scan_par(train, test_rows, d, tiles, threads,
+             |rows| prw_scan_tiled(train, rows, d, bandwidth, tiles))
+}
+
+/// Parallel tile-level joint scan: ONE tiled distance pass per query
+/// block feeds BOTH learners on each worker (§5.2 fusion preserved
+/// inside every shard). Bit-identical to [`joint_scan_tiled`] at any
+/// thread count.
+pub fn joint_scan_par(train: &Dataset, test_rows: &[f32], d: usize,
+                      k: usize, bandwidth: f32, tiles: &TileConfig,
+                      threads: usize) -> (Vec<i32>, Vec<i32>) {
+    let blocks = scan_par(train, test_rows, d, tiles, threads, |rows| {
+        vec![joint_scan_tiled(train, rows, d, k, bandwidth, tiles)]
+    });
+    let mut knn = Vec::new();
+    let mut prw = Vec::new();
+    for (kp, pp) in blocks {
+        knn.extend(kp);
+        prw.extend(pp);
+    }
+    (knn, prw)
+}
+
 /// Classification accuracy helper.
 pub fn accuracy(pred: &[i32], truth: &[i32]) -> f64 {
     assert_eq!(pred.len(), truth.len());
@@ -323,6 +402,47 @@ mod tests {
                 joint_scan_tiled(&train, &test, d, K, BANDWIDTH, &tiles);
             let (kn, pn) = joint_scan(&train, &test, d, K, BANDWIDTH);
             prop_assert!(kj == kn && pj == pn, "tiled joint diverged");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_scans_equal_sequential_scans() {
+        // Fan-out across workers must not change a single prediction —
+        // at any thread count, ragged query blocks included.
+        check("par-scans", 10, |g| {
+            let n = g.usize_in(1, 50);
+            let t = g.usize_in(1, 30);
+            let d = g.usize_in(1, 8);
+            let features = g.f32_vec(n * d, 3.0);
+            let labels: Vec<i32> =
+                (0..n).map(|_| g.usize_in(0, 2) as i32).collect();
+            let train = Dataset::new(features, labels, d, 3);
+            let test = g.f32_vec(t * d, 3.0);
+            let tiles = TileConfig {
+                mc: 1,
+                kc: 1,
+                nc: 1,
+                l1_f32: g.usize_in(2, 16) * d,
+            };
+            for threads in [1usize, 2, 4, 7] {
+                prop_assert!(
+                    knn_scan_par(&train, &test, d, K, &tiles, threads)
+                        == knn_scan_tiled(&train, &test, d, K, &tiles),
+                    "parallel knn diverged at {threads} threads");
+                prop_assert!(
+                    prw_scan_par(&train, &test, d, BANDWIDTH, &tiles,
+                                 threads)
+                        == prw_scan_tiled(&train, &test, d, BANDWIDTH,
+                                          &tiles),
+                    "parallel prw diverged at {threads} threads");
+                let (kp, pp) = joint_scan_par(&train, &test, d, K,
+                                              BANDWIDTH, &tiles, threads);
+                let (ks, ps) = joint_scan_tiled(&train, &test, d, K,
+                                                BANDWIDTH, &tiles);
+                prop_assert!(kp == ks && pp == ps,
+                    "parallel joint scan diverged at {threads} threads");
+            }
             Ok(())
         });
     }

@@ -67,9 +67,14 @@ pub fn svm_step(w: &[f32], x: &[f32], y: &[f32], lr: f32, lam: f32)
 }
 
 /// The §4.3 coupling on the hot path: tile-level fused LR+SVM through
-/// the cache-blocked kernel layer (`kernels::coupled_step_tiled`, tiles
-/// autotuned from the memsim cache model). Bit-identical to
-/// [`coupled_step_naive`], which stays in-tree as the reference oracle.
+/// the parallel macro-tile layer (`kernels::coupled_step_par`) — row
+/// blocks fan out across the session's thread count
+/// (`kernels::parallel::default_threads`: `--threads` override, then
+/// `LOCALITY_ML_THREADS`, then available parallelism), with per-worker
+/// tiles from the shared-L3 budget. At one thread this IS the PR-1
+/// sequential kernel (`coupled_step_tiled` with Westmere tiles), bit
+/// for bit; at N threads the deterministic row-block reduction stays
+/// within 1e-4 of [`coupled_step_naive`], the in-tree reference oracle.
 pub fn coupled_step(
     w_lr: &[f32],
     w_svm: &[f32],
@@ -78,8 +83,15 @@ pub fn coupled_step(
     lr: f32,
     lam: f32,
 ) -> ((Vec<f32>, f32), (Vec<f32>, f32)) {
-    crate::kernels::coupled_step_tiled(
-        w_lr, w_svm, x, y, lr, lam, &crate::kernels::TileConfig::westmere())
+    use crate::kernels::parallel::{default_threads, effective_threads};
+    // ~4·b·d multiply-adds per fused step (two models × two sweeps);
+    // small minibatches stay on the sequential kernel — spawn/join
+    // would cost more than the fan-out saves.
+    let threads =
+        effective_threads(default_threads(), 4 * x.len().max(y.len()));
+    crate::kernels::coupled_step_par(
+        w_lr, w_svm, x, y, lr, lam,
+        &crate::kernels::TileConfig::westmere_workers(threads), threads)
 }
 
 /// The §4.3 coupling, row-level reference: both models updated from ONE
@@ -174,8 +186,13 @@ mod tests {
 
     #[test]
     fn hot_path_equals_naive_reference() {
-        // coupled_step is the tiled kernel; it must not drift from the
-        // row-level oracle (ragged 33×21 exercises edge tiles too).
+        // coupled_step is the parallel tiled kernel; it must not drift
+        // from the row-level oracle (ragged 33×21 exercises edge
+        // tiles). 21 rows fit one coupled row block, so the partition
+        // degenerates to the sequential path and equality is exact at
+        // ANY session thread count — the multi-block case is covered
+        // (bit-identical per partition, ≤1e-4 vs oracle) by the
+        // kernels::parallel property tests.
         let mut g = crate::util::prop::Gen::new(77);
         let (d, b) = (33usize, 21usize);
         let w0 = g.f32_vec(d, 1.0);

@@ -15,7 +15,9 @@
 //! propagation").
 
 use super::mlp::{INPUT_DIM, LAYERS, N_CLASSES, N_PARAMS};
-use crate::kernels::{matmul_bias_tiled, matmul_tn_acc_tiled, TileConfig};
+use crate::kernels::{
+    matmul_bias_tiled_par, matmul_tn_acc_tiled_par, TileConfig,
+};
 
 /// Scratch buffers for one forward+backward pass (allocated once,
 /// reused across steps — no allocation in the training loop).
@@ -32,13 +34,30 @@ pub struct NativeMlp {
     deltas: Vec<Vec<f32>>,
     batch: usize,
     /// cache-blocking parameters for the matmul kernels (autotuned from
-    /// the memsim hierarchy; the ReLU zero-skip lives in the kernels)
+    /// the memsim hierarchy per worker; the ReLU zero-skip lives in the
+    /// kernels)
     tiles: TileConfig,
+    /// worker count for the parallel macro-tile layer (1 = the exact
+    /// PR-1 sequential kernels)
+    threads: usize,
 }
 
 impl NativeMlp {
+    /// Session default: thread count from
+    /// `kernels::parallel::default_threads` (`--threads` override, then
+    /// `LOCALITY_ML_THREADS`, then available parallelism). The matmul
+    /// row partition is output-disjoint, so results are bit-identical
+    /// at every thread count.
     pub fn new(theta: Vec<f32>, batch: usize) -> Self {
+        Self::with_threads(theta, batch,
+                           crate::kernels::parallel::default_threads())
+    }
+
+    /// Explicit thread count (1 = the exact PR-1 sequential path).
+    pub fn with_threads(theta: Vec<f32>, batch: usize, threads: usize)
+        -> Self {
         assert_eq!(theta.len(), N_PARAMS);
+        let threads = threads.max(1);
         let mut acts = vec![vec![0.0; batch * INPUT_DIM]];
         let mut zs = Vec::new();
         let mut deltas = Vec::new();
@@ -54,7 +73,8 @@ impl NativeMlp {
             zs,
             deltas,
             batch,
-            tiles: TileConfig::westmere(),
+            tiles: TileConfig::westmere_workers(threads),
+            threads,
         }
     }
 
@@ -78,15 +98,18 @@ impl NativeMlp {
                 (w, b)
             };
             // z = a_prev @ W + b   (row-major [batch x m] @ [m x n]),
-            // through the cache-blocked kernel: same term multiset and
-            // ReLU zero-skip as the original loop nest (reassociated
-            // only within the kernel's 4-deep groups), with the W panel
-            // cache-resident across the mini-batch (Fig 3).
+            // through the parallel cache-blocked kernel: same term
+            // multiset and ReLU zero-skip as the original loop nest
+            // (reassociated only within the kernel's 4-deep groups),
+            // with the W panel cache-resident across the mini-batch
+            // (Fig 3) and batch row blocks fanned out across workers.
             let (prev_acts, rest) = self.acts.split_at_mut(l + 1);
             let a_prev = &prev_acts[l];
             let z = &mut self.zs[l];
-            matmul_bias_tiled(a_prev, w, b, z, self.batch, m, n,
-                              &self.tiles);
+            let th = crate::kernels::parallel::effective_threads(
+                self.threads, self.batch * m * n);
+            matmul_bias_tiled_par(a_prev, w, b, z, self.batch, m, n,
+                                  &self.tiles, th);
             // activation (ReLU on hidden, identity on the output layer)
             let a = &mut rest[0];
             if l + 1 < n_layers {
@@ -136,11 +159,14 @@ impl NativeMlp {
         for l in (0..n_layers).rev() {
             let (m, n) = LAYERS[l];
             let off = Self::offset(l);
-            // dW = a_prev^T @ delta through the cache-blocked
+            // dW = a_prev^T @ delta through the parallel cache-blocked
             // transpose kernel (accumulation order per element matches
-            // the original per-sample loop — ascending s); db = sum of
-            // delta rows, a cheap n-wide stream kept as a plain loop.
-            matmul_tn_acc_tiled(
+            // the original per-sample loop — ascending s — and weight
+            // row ranges are output-disjoint across workers); db = sum
+            // of delta rows, a cheap n-wide stream kept as a plain loop.
+            let th = crate::kernels::parallel::effective_threads(
+                self.threads, self.batch * m * n);
+            matmul_tn_acc_tiled_par(
                 &self.acts[l],
                 &self.deltas[l],
                 &mut self.grad[off..off + m * n],
@@ -148,6 +174,7 @@ impl NativeMlp {
                 m,
                 n,
                 &self.tiles,
+                th,
             );
             for s in 0..self.batch {
                 let drow = &self.deltas[l][s * n..(s + 1) * n];
@@ -276,5 +303,24 @@ mod tests {
         let mut a = NativeMlp::new(init_params(7), 8);
         let mut b = NativeMlp::new(init_params(7), 8);
         assert_eq!(a.forward(&x), b.forward(&x));
+    }
+
+    #[test]
+    fn thread_count_does_not_change_loss_or_gradient() {
+        // The matmul row partition is output-disjoint, so forward, loss
+        // and gradient must be bit-identical at every thread count.
+        // batch = 64 puts the 784-wide layer-0 matmuls past
+        // MIN_PAR_WORK, so the parallel path really runs (and the
+        // layer-0 dW's 784 output rows give the transpose kernel a
+        // multi-block partition).
+        let b = 64;
+        let (x, y) = batch(9, b);
+        let mut one = NativeMlp::with_threads(init_params(11), b, 1);
+        let mut four = NativeMlp::with_threads(init_params(11), b, 4);
+        let l1 = one.loss_and_grad(&x, &y);
+        let l4 = four.loss_and_grad(&x, &y);
+        assert_eq!(l1, l4, "loss diverged across thread counts");
+        assert_eq!(one.grad(), four.grad(),
+            "gradient diverged across thread counts");
     }
 }

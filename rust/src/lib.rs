@@ -21,7 +21,11 @@
 //! cache-blocked matmul / pairwise-distance / fused-coupled-step paths
 //! whose tile sizes are derived from the [`memsim`] cache model, so the
 //! learners' hot loops apply the same locality guidelines the simulator
-//! measures. Naive row-at-a-time references stay in-tree as oracles.
+//! measures. Naive row-at-a-time references stay in-tree as oracles,
+//! and `kernels::parallel` shards the macro-tiles across a scoped
+//! worker pool (`--threads` / `LOCALITY_ML_THREADS`; one thread is the
+//! exact sequential path) with per-worker tiles sized from the shared
+//! L3.
 
 // Clippy policy: the loop nests deliberately mirror the paper's
 // pseudo-code (explicit indices keep the access patterns auditable

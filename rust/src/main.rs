@@ -12,8 +12,13 @@
 //! locality-ml interchange [--n N] [--m M]                 Alg 1/2 (E4)
 //! locality-ml cache-model                                 §5.1   (E5)
 //! locality-ml audit                                       §3-§4  (E6)
+//! locality-ml kernels  [--sizes ...] [--out-json f]       E12
+//! locality-ml parallel [--sizes ...] [--curve 1,2,4]      E13
 //! locality-ml info    [--artifacts dir]
 //! ```
+//!
+//! Every subcommand accepts `--threads N` (parallel macro-tile layer;
+//! 1 = the exact single-thread kernels).
 
 use std::path::PathBuf;
 
@@ -32,6 +37,15 @@ fn load_config(args: &Args) -> Result<Config> {
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
+    // Global `--threads N` for the parallel macro-tile layer (default:
+    // LOCALITY_ML_THREADS, then available parallelism; 1 = the exact
+    // single-thread kernels).
+    if let Some(t) = args.get("threads") {
+        let n: usize = t.parse()
+            .map_err(|_| anyhow::anyhow!("--threads: bad integer `{t}`"))?;
+        anyhow::ensure!(n >= 1, "--threads must be >= 1");
+        locality_ml::kernels::parallel::set_threads(n);
+    }
     match args.command.as_str() {
         "train" => {
             let cfg = load_config(&args)?;
@@ -102,6 +116,22 @@ fn main() -> Result<()> {
             let out = args.get("out-json").map(PathBuf::from);
             commands::cmd_kernels(&sizes, out.as_deref())?;
         }
+        "parallel" => {
+            let sizes = args
+                .list_or("sizes", &["256", "512"])
+                .iter()
+                .map(|s| s.parse::<usize>().map_err(
+                    |_| anyhow::anyhow!("bad size `{s}`")))
+                .collect::<Result<Vec<_>>>()?;
+            let curve = args
+                .list_or("curve", &["1", "2", "4"])
+                .iter()
+                .map(|s| s.parse::<usize>().map_err(
+                    |_| anyhow::anyhow!("bad thread count `{s}`")))
+                .collect::<Result<Vec<_>>>()?;
+            let out = args.get("out-json").map(PathBuf::from);
+            commands::cmd_parallel(&sizes, &curve, out.as_deref())?;
+        }
         "info" => {
             let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
             commands::cmd_info(&dir)?;
@@ -135,7 +165,12 @@ SUBCOMMANDS
   audit        Reuse-distance audit of the paper's §3-§4 claims
   kernels      L1-native kernels: naive vs cache-blocked timings
                  --sizes 256,512,1024 --out-json BENCH_kernels.json
+  parallel     Parallel macro-tile layer: 1-vs-N thread scaling curve
+                 --sizes 256,512 --curve 1,2,4
+                 --out-json BENCH_parallel.json
   info         List compiled artifacts  [--artifacts artifacts]
 
 Common options: --config experiment.toml --artifacts artifacts --seed N
+                --threads N (parallel kernel layer; 1 = single-thread
+                kernels; default LOCALITY_ML_THREADS or all cores)
 ";

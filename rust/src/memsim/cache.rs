@@ -87,6 +87,14 @@ pub struct LevelStats {
     pub miss_rate: f64,
 }
 
+/// Cores sharing one L3 on the paper's testbed ("dual 6-core Intel(R)
+/// Westmere CPUs", §5.1): six cores per socket share each 12 MiB L3,
+/// while the L1d/L2 below it are per-core private. The parallel kernel
+/// layer (`kernels::TileConfig::for_workers`) uses this sharing split —
+/// private levels size the per-worker tiles, the shared level is divided
+/// among workers.
+pub const WESTMERE_CORES_PER_L3: usize = 6;
+
 /// The Westmere-like level parameters (§5) as plain data — shared by
 /// [`Hierarchy::westmere`] and the native-kernel tile autotuner
 /// (`kernels::TileConfig::for_levels`), so the simulator and the real

@@ -2,9 +2,24 @@
 //!
 //! The coordinator's event loop is synchronous by design — the paper's
 //! experiments are explicitly "all sequential (executed on one core)"
-//! (§5) — but dataset synthesis, artifact pre-compilation and the benchmark
-//! matrix fan out nicely, so a scoped `Pool::run_all` is provided.
+//! (§5) — but dataset synthesis, artifact pre-compilation, the benchmark
+//! matrix and (since the parallel macro-tile layer) the kernel row-block
+//! fan-outs all parallelise nicely, so two fan-out primitives are
+//! provided:
+//!
+//! * [`Pool::run_all`] — queue `'static` jobs on the pool's persistent
+//!   workers and collect results in order. A panicking job no longer
+//!   kills its worker (the queue behind it would never drain and
+//!   `run_all` would hang); the panic is captured and re-raised on the
+//!   caller's thread after every job has run.
+//! * [`Pool::run_parallel`] — **scoped** fan-out with no `'static`
+//!   bound: jobs may borrow the caller's stack (matrix slices, weight
+//!   panels), which is what the `kernels::parallel` layer needs to hand
+//!   disjoint `&mut` output blocks to workers. Threads are scoped to the
+//!   call (`std::thread::scope`), results come back in job order, and a
+//!   worker panic is propagated with its original payload.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -28,7 +43,12 @@ impl Pool {
                 thread::spawn(move || loop {
                     let job = { rx.lock().unwrap().recv() };
                     match job {
-                        Ok(job) => job(),
+                        // A panicking job must not take the worker with
+                        // it: jobs queued behind it would never run and
+                        // run_all would block forever on their results.
+                        Ok(job) => {
+                            let _ = catch_unwind(AssertUnwindSafe(job));
+                        }
                         Err(_) => break, // channel closed -> shut down
                     }
                 })
@@ -43,6 +63,10 @@ impl Pool {
     }
 
     /// Run all closures to completion and return their results in order.
+    ///
+    /// If any job panics, every remaining job still runs, then the
+    /// lowest-index panic payload is re-raised on the caller's thread
+    /// (deterministic regardless of worker scheduling).
     pub fn run_all<T: Send + 'static>(
         &self,
         jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
@@ -52,16 +76,77 @@ impl Pool {
         for (i, job) in jobs.into_iter().enumerate() {
             let rtx = rtx.clone();
             self.submit(move || {
-                let out = job();
+                let out = catch_unwind(AssertUnwindSafe(job));
                 let _ = rtx.send((i, out));
             });
         }
         drop(rtx);
         let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut panic: Option<(usize, Box<dyn std::any::Any + Send>)> =
+            None;
         for _ in 0..n {
             let (i, out) = rrx.recv().expect("worker died");
-            slots[i] = Some(out);
+            match out {
+                Ok(v) => slots[i] = Some(v),
+                Err(payload) => {
+                    if panic.as_ref().map_or(true, |(pi, _)| i < *pi) {
+                        panic = Some((i, payload));
+                    }
+                }
+            }
         }
+        if let Some((_, payload)) = panic {
+            resume_unwind(payload);
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+
+    /// Scoped fan-out: run `jobs` across up to `threads` OS threads and
+    /// return their results in job order. Unlike [`Pool::run_all`] the
+    /// closures carry **no `'static` bound** — they may borrow from the
+    /// caller's stack, which is how the parallel kernels hand each
+    /// worker a disjoint `&mut` block of the output matrix.
+    ///
+    /// Jobs are split into contiguous chunks, one chunk per thread, so
+    /// the mapping of job -> thread is deterministic. `threads <= 1` (or
+    /// a single job) runs everything inline on the caller's thread —
+    /// that path spawns nothing and is the exact sequential behaviour.
+    /// A panicking job is propagated to the caller with its original
+    /// payload after all scoped threads have been joined.
+    pub fn run_parallel<'env, T: Send>(
+        threads: usize,
+        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'env>>,
+    ) -> Vec<T> {
+        let n = jobs.len();
+        if threads <= 1 || n <= 1 {
+            return jobs.into_iter().map(|job| job()).collect();
+        }
+        let workers = threads.min(n);
+        let base = n / workers;
+        let extra = n % workers;
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        thread::scope(|s| {
+            let mut jobs = jobs;
+            let mut rest: &mut [Option<T>] = &mut slots;
+            let mut handles = Vec::with_capacity(workers);
+            for w in 0..workers {
+                let count = base + usize::from(w < extra);
+                let chunk: Vec<_> = jobs.drain(..count).collect();
+                let (head, tail) =
+                    std::mem::take(&mut rest).split_at_mut(count);
+                rest = tail;
+                handles.push(s.spawn(move || {
+                    for (slot, job) in head.iter_mut().zip(chunk) {
+                        *slot = Some(job());
+                    }
+                }));
+            }
+            for h in handles {
+                if let Err(payload) = h.join() {
+                    resume_unwind(payload);
+                }
+            }
+        });
         slots.into_iter().map(|s| s.unwrap()).collect()
     }
 }
@@ -112,5 +197,100 @@ mod tests {
         let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
             (0..8usize).map(|i| Box::new(move || i) as Box<_>).collect();
         assert_eq!(pool.run_all(jobs), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins_workers_after_queue_drain() {
+        // Drop must block until every queued job has *finished* — the
+        // worker handles are joined, not detached. The sleeps make a
+        // detached-drop race essentially certain to be caught.
+        let done = Arc::new(AtomicUsize::new(0));
+        let pool = Pool::new(2);
+        for _ in 0..6 {
+            let d = Arc::clone(&done);
+            pool.submit(move || {
+                thread::sleep(std::time::Duration::from_millis(5));
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        assert_eq!(done.load(Ordering::SeqCst), 6,
+            "drop returned before the workers were joined");
+    }
+
+    #[test]
+    #[should_panic(expected = "job 0 exploded")]
+    fn run_all_propagates_worker_panics_instead_of_hanging() {
+        // One worker, two jobs, the first panics: before the panic-safe
+        // worker loop this hung forever (the dead worker left job 1 in
+        // the queue holding a result sender). Now job 1 still runs and
+        // the panic is re-raised here.
+        let pool = Pool::new(1);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+            Box::new(|| panic!("job 0 exploded")),
+            Box::new(|| 2),
+        ];
+        pool.run_all(jobs);
+    }
+
+    #[test]
+    fn pool_survives_panicking_jobs() {
+        let pool = Pool::new(1);
+        let bad: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            vec![Box::new(|| panic!("transient"))];
+        let caught = catch_unwind(AssertUnwindSafe(|| pool.run_all(bad)));
+        assert!(caught.is_err(), "panic must reach the caller");
+        // The single worker must still be alive and processing.
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..4usize).map(|i| Box::new(move || i) as Box<_>).collect();
+        assert_eq!(pool.run_all(jobs), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn run_parallel_borrows_stack_data_and_preserves_order() {
+        // The whole point of the scoped variant: closures borrow `data`
+        // (no 'static), results come back in job order.
+        let data: Vec<usize> = (0..100).collect();
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send + '_>> = data
+            .chunks(7)
+            .map(|c| Box::new(move || c.iter().sum::<usize>()) as Box<_>)
+            .collect();
+        let out = Pool::run_parallel(4, jobs);
+        let want: Vec<usize> =
+            data.chunks(7).map(|c| c.iter().sum()).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn run_parallel_single_thread_runs_inline() {
+        let main_id = thread::current().id();
+        let jobs: Vec<Box<dyn FnOnce() -> thread::ThreadId + Send>> =
+            (0..4)
+                .map(|_| {
+                    Box::new(|| thread::current().id()) as Box<_>
+                })
+                .collect();
+        let ids = Pool::run_parallel(1, jobs);
+        assert!(ids.iter().all(|&id| id == main_id),
+            "threads=1 must not spawn");
+    }
+
+    #[test]
+    fn run_parallel_handles_more_jobs_than_threads() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..37usize)
+            .map(|i| Box::new(move || i * 3) as Box<_>)
+            .collect();
+        assert_eq!(Pool::run_parallel(5, jobs),
+                   (0..37).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped boom")]
+    fn run_parallel_propagates_panics() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("scoped boom")),
+        ];
+        Pool::run_parallel(2, jobs);
     }
 }

@@ -1,0 +1,47 @@
+#!/usr/bin/env python3
+"""CI gate for the parallel macro-tile layer (ISSUE 2 satellite):
+scaling at 4 threads on the 512^3 matmul must be >= 2x over 1 thread.
+
+Usage: check_bench_parallel.py [BENCH_parallel.json]
+
+Reads the scaling curve written by `cargo bench --bench bench_parallel`
+(schema locality-ml/bench-parallel/v1) and exits non-zero — failing the
+job — if the gate is missed or the file was never measured.
+"""
+import json
+import sys
+
+GATE_KERNEL = "matmul"
+GATE_SHAPE = "512x512x512"
+GATE_THREADS = 4
+GATE_SPEEDUP = 2.0
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_parallel.json"
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("status") == "pending-first-run":
+        print(f"FAIL: {path} is still pending-first-run — the bench "
+              "did not overwrite it", file=sys.stderr)
+        return 1
+    rows = [r for r in doc.get("results", [])
+            if r.get("kernel") == GATE_KERNEL
+            and r.get("shape") == GATE_SHAPE
+            and r.get("threads") == GATE_THREADS]
+    if not rows:
+        print(f"FAIL: no {GATE_THREADS}-thread {GATE_SHAPE} "
+              f"{GATE_KERNEL} record in {path}", file=sys.stderr)
+        return 1
+    speedup = float(rows[0]["speedup_vs_1t"])
+    print(f"{GATE_THREADS}-thread {GATE_SHAPE} {GATE_KERNEL} scaling: "
+          f"{speedup:.2f}x (gate: >= {GATE_SPEEDUP}x)")
+    if speedup < GATE_SPEEDUP:
+        print(f"FAIL: scaling gate missed ({speedup:.2f}x < "
+              f"{GATE_SPEEDUP}x)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
