@@ -1,0 +1,42 @@
+//! Bench E14 — the §4.1.1 parallel shared-distance sweep engine:
+//! the naive per-candidate CV nest vs the shared single pass, plus the
+//! split-sharded parallel sweep at 1/2/4 threads (each point verified
+//! bit-identical to the sequential shared sweep before it is timed).
+//!
+//! Writes `BENCH_sweep.json` at the repo root (uploaded by CI alongside
+//! `BENCH_kernels.json` and `BENCH_parallel.json`). Regenerate with:
+//!
+//! ```bash
+//! cargo bench --bench bench_sweep
+//! # or, with geometry/curve control:
+//! cargo run --release -- sweep --dataset-n 1000 --folds 5 \
+//!     --ks 1,3,5,9,15 --bandwidth-mults 0.5,1,2,4 --curve 1,2,4 \
+//!     --out-json ../BENCH_sweep.json
+//! ```
+//!
+//! This bench *measures and reports*; the acceptance gates — the shared
+//! sweep beats naive by ≥ the candidate-count factor on distance evals,
+//! and the measured wall-clock ratio is > 1 — are enforced in exactly
+//! one place, `scripts/check_bench_sweep.py`, run by the CI bench job
+//! against the JSON this writes.
+
+use std::path::PathBuf;
+
+use locality_ml::cli::commands::cmd_sweep;
+
+fn main() -> anyhow::Result<()> {
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../BENCH_sweep.json");
+    cmd_sweep(
+        1000,
+        5,
+        &[1, 3, 5, 9, 15],
+        &[0.5, 1.0, 2.0, 4.0],
+        &[1, 2, 4],
+        7,
+        Some(out.as_path()),
+    )?;
+    println!("\n(gates live in scripts/check_bench_sweep.py — CI fails \
+              if shared loses the candidate factor or the wall ratio)");
+    Ok(())
+}

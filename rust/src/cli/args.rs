@@ -83,6 +83,35 @@ impl Args {
             None => default.iter().map(|s| s.to_string()).collect(),
         }
     }
+
+    /// Comma-separated list parsed as `usize` (sizes, thread curves,
+    /// candidate k's).
+    pub fn usize_list_or(&self, key: &str, default: &[usize])
+        -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!("--{key}: bad integer `{}`", s.trim())
+                }))
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list parsed as `f32` (bandwidth multipliers).
+    pub fn f32_list_or(&self, key: &str, default: &[f32])
+        -> Result<Vec<f32>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<f32>().map_err(|_| {
+                    anyhow::anyhow!("--{key}: bad number `{}`", s.trim())
+                }))
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +158,17 @@ mod tests {
     #[test]
     fn rejects_positionals_after_subcommand() {
         assert!(Args::parse(["train", "positional"]).is_err());
+    }
+
+    #[test]
+    fn typed_lists_parse_and_default() {
+        let a = Args::parse(["sweep", "--ks", "1, 3,5", "--mults",
+                             "0.5,2"]).unwrap();
+        assert_eq!(a.usize_list_or("ks", &[]).unwrap(), vec![1, 3, 5]);
+        assert_eq!(a.f32_list_or("mults", &[]).unwrap(), vec![0.5, 2.0]);
+        assert_eq!(a.usize_list_or("curve", &[1, 2]).unwrap(), vec![1, 2]);
+        assert!(a.usize_list_or("mults", &[]).is_err(),
+            "float list must not parse as usize");
     }
 
     #[test]

@@ -558,6 +558,130 @@ pub fn cmd_parallel(sizes: &[usize], curve: &[usize],
     Ok(table)
 }
 
+/// E14 — the §4.1.1 parallel shared-distance sweep engine: the naive
+/// per-candidate CV nest vs the shared single pass, plus the
+/// split-sharded parallel sweep's 1-vs-N-thread curve (verified
+/// bit-identical to the sequential shared sweep at every point).
+/// Optionally writes `BENCH_sweep.json`; CI gates via
+/// `scripts/check_bench_sweep.py` (shared beats naive by the candidate
+/// factor on distance evals, wall-clock ratio > 1).
+#[allow(clippy::too_many_arguments)]
+pub fn cmd_sweep(
+    n: usize,
+    folds_k: usize,
+    ks: &[usize],
+    bandwidth_mults: &[f32],
+    curve: &[usize],
+    seed: u64,
+    out_json: Option<&Path>,
+) -> Result<Table> {
+    use crate::coordinator::{
+        silverman_bandwidth, sweep_naive, sweep_shared, sweep_shared_par,
+    };
+
+    anyhow::ensure!(curve.first() == Some(&1),
+        "the thread curve must start at 1 (the scaling baseline)");
+    anyhow::ensure!(!ks.is_empty() && !bandwidth_mults.is_empty(),
+        "need at least one k and one bandwidth candidate");
+    let ds = chembl_like(n, seed);
+    let folds = Folds::split(ds.n, folds_k, seed ^ 0x5EED);
+    let h0 = silverman_bandwidth(&ds);
+    let bandwidths: Vec<f32> =
+        bandwidth_mults.iter().map(|m| m * h0).collect();
+    let candidates = ks.len() + bandwidths.len();
+    eprintln!("# sweep: n={n} d={} folds={folds_k} ks={ks:?} \
+               h0={h0:.3} ({candidates} candidates)", ds.d);
+
+    let reps = 2;
+    let mut naive = None;
+    let naive_s = time_best(reps, || {
+        naive = Some(sweep_naive(&ds, &folds, ks, &bandwidths));
+    });
+    let (nk, nb) = naive.unwrap();
+    let mut shared = None;
+    let shared_s = time_best(reps, || {
+        shared = Some(sweep_shared(&ds, &folds, ks, &bandwidths));
+    });
+    let (sk, sb) = shared.unwrap();
+    anyhow::ensure!(sk.accuracy == nk.accuracy && sb.accuracy == nb.accuracy,
+        "shared and naive sweep accuracies diverged");
+    anyhow::ensure!(
+        nk.distance_evals == sk.distance_evals * ks.len() as u64
+            && nb.distance_evals == sb.distance_evals
+                * bandwidths.len() as u64,
+        "per-sweep distance-eval accounting lost the candidate factor");
+
+    // the parallel engine's thread curve, every point verified
+    // bit-identical to the sequential shared sweep
+    let mut records: Vec<(usize, f64, f64)> = Vec::new();
+    let mut base = f64::NAN;
+    for &th in curve {
+        let mut par = None;
+        let secs = time_best(reps, || {
+            par = Some(sweep_shared_par(&ds, &folds, ks, &bandwidths, th));
+        });
+        let (pk, pb) = par.unwrap();
+        anyhow::ensure!(pk == sk && pb == sb,
+            "parallel sweep diverged from the sequential shared sweep \
+             at {th} threads");
+        if th == 1 {
+            base = secs;
+        }
+        records.push((th, secs, base / secs));
+    }
+
+    let naive_total = nk.distance_evals + nb.distance_evals;
+    let mut table = Table::new(
+        "§4.1.1 sweep engine — naive vs shared vs split-parallel",
+        &["schedule", "threads", "distance evals", "secs", "vs naive"]);
+    table.row(&["naive (per candidate)".into(), "1".into(),
+                naive_total.to_string(), format!("{naive_s:.6}"),
+                "1.00x".into()]);
+    table.row(&["shared (one pass per split)".into(), "1".into(),
+                sk.distance_evals.to_string(), format!("{shared_s:.6}"),
+                format!("{:.2}x", naive_s / shared_s)]);
+    for (th, secs, _) in &records {
+        table.row(&["shared parallel".into(), th.to_string(),
+                    sk.distance_evals.to_string(), format!("{secs:.6}"),
+                    format!("{:.2}x", naive_s / secs)]);
+    }
+    println!("{}", table.to_markdown());
+    if let (Some((bk, ka)), Some((bh, ha))) = (sk.best(), sb.best()) {
+        println!("best k = {bk} (acc {ka:.3}); \
+                  best h = {bh:.3} (acc {ha:.3})");
+    }
+
+    if let Some(path) = out_json {
+        let mut json = String::from("{\n");
+        json.push_str("  \"schema\": \"locality-ml/bench-sweep/v1\",\n");
+        json.push_str(&format!(
+            "  \"dataset\": {{\"n\": {}, \"d\": {}, \"folds\": \
+             {folds_k}, \"seed\": {seed}}},\n", ds.n, ds.d));
+        json.push_str(&format!(
+            "  \"candidates\": {{\"ks\": {}, \"bandwidths\": {}}},\n",
+            ks.len(), bandwidths.len()));
+        json.push_str(&format!(
+            "  \"distance_evals\": {{\"naive_k\": {}, \
+             \"naive_bandwidth\": {}, \"shared\": {}}},\n",
+            nk.distance_evals, nb.distance_evals, sk.distance_evals));
+        json.push_str(&format!(
+            "  \"wall\": {{\"naive_s\": {naive_s:.6}, \"shared_s\": \
+             {shared_s:.6}, \"ratio\": {:.3}}},\n", naive_s / shared_s));
+        json.push_str("  \"results\": [\n");
+        for (i, (th, secs, speedup)) in records.iter().enumerate() {
+            let comma = if i + 1 < records.len() { "," } else { "" };
+            json.push_str(&format!(
+                "    {{\"threads\": {th}, \"secs\": {secs:.6}, \
+                 \"speedup_vs_1t\": {speedup:.3}}}{comma}\n"));
+        }
+        json.push_str("  ]\n}\n");
+        std::fs::write(path, json)
+            .with_context(|| format!("writing {}", path.display()))?;
+        eprintln!("# sweep engine curve -> {}", path.display());
+    }
+    Ok(table)
+}
+
 /// `info` — artifact inventory + platform.
 pub fn cmd_info(artifacts: &Path) -> Result<()> {
     let engine = Engine::open(artifacts)?;

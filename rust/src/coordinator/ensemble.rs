@@ -25,23 +25,24 @@ impl BaggedNb {
         let samples = bagging_samples(train.n, m, seed);
         let members = samples
             .iter()
-            .map(|idx| {
-                // NB's sufficient statistics stream over the index list
-                // directly; gather() is only for learners that need a
-                // contiguous matrix.
-                let sub = train.gather(idx);
-                NaiveBayes::fit(&sub)
-            })
+            // NB's sufficient statistics stream over the index list
+            // directly into the resident copy of T; gather() is only
+            // for learners that need a contiguous matrix.
+            .map(|idx| NaiveBayes::fit_indexed(train, idx))
             .collect();
         Self { members }
     }
 
     /// Majority vote over all members (Alg 6: "a majority vote is
-    /// returned as a result").
+    /// returned as a result"). An empty ensemble casts no votes and
+    /// returns no predictions.
     pub fn predict(&self, rows: &[f32]) -> Vec<i32> {
+        let Some(first) = self.members.first() else {
+            return Vec::new();
+        };
         let votes: Vec<Vec<i32>> =
             self.members.iter().map(|m| m.predict(rows)).collect();
-        majority_vote(&votes, self.members[0].classes)
+        majority_vote(&votes, first.classes)
     }
 }
 
@@ -60,23 +61,23 @@ impl BoostedNb {
         // M1: random subset.
         let all: Vec<i32> = train.labels.clone();
         let m1_sets = boosting_sets(&all, &all, &all, s1_size, 0, seed);
-        let m1 = NaiveBayes::fit(&train.gather(&m1_sets.s1));
+        let m1 = NaiveBayes::fit_indexed(train, &m1_sets.s1);
         // M2: the most informative sample given M1's predictions
         // (the paper's §3.2.2 reuse note: M1's predictions over T are
         // computed once here and reused for both S2 and S3).
         let m1_preds = m1.predict(&train.features);
         let sets = boosting_sets(&train.labels, &m1_preds, &m1_preds,
                                  s1_size, s2_size, seed ^ 1);
-        let m2 = NaiveBayes::fit(&train.gather(&sets.s2));
+        let m2 = NaiveBayes::fit_indexed(train, &sets.s2);
         // M3: where M1 and M2 disagree.
         let m2_preds = m2.predict(&train.features);
         let sets = boosting_sets(&train.labels, &m1_preds, &m2_preds,
                                  s1_size, s2_size, seed ^ 2);
         let m3 = if sets.s3.is_empty() {
             // degenerate: perfect agreement -> fall back to M1's sample
-            NaiveBayes::fit(&train.gather(&sets.s1))
+            NaiveBayes::fit_indexed(train, &sets.s1)
         } else {
-            NaiveBayes::fit(&train.gather(&sets.s3))
+            NaiveBayes::fit_indexed(train, &sets.s3)
         };
         Self { m1, m2, m3 }
     }
@@ -128,6 +129,27 @@ mod tests {
         let bagged = BaggedNb::fit(&train, 3, 9);
         assert_eq!(bagged.members.len(), 3);
         assert_ne!(bagged.members[0].mean, bagged.members[1].mean);
+    }
+
+    #[test]
+    fn indexed_members_match_gather_based_members() {
+        // The §3.1.2 contract change must not move a single bit: every
+        // bagged member streamed over its index list must equal the
+        // member a gather-based fit would have produced.
+        let train = blobs(240, 1.0, 23);
+        let bagged = BaggedNb::fit(&train, 4, 31);
+        let samples = bagging_samples(train.n, 4, 31);
+        for (member, idx) in bagged.members.iter().zip(&samples) {
+            assert_eq!(*member, NaiveBayes::fit(&train.gather(idx)));
+        }
+    }
+
+    #[test]
+    fn empty_ensemble_predicts_nothing_instead_of_panicking() {
+        let train = blobs(60, 1.0, 3);
+        let bagged = BaggedNb::fit(&train, 0, 1);
+        assert!(bagged.members.is_empty());
+        assert!(bagged.predict(&train.features).is_empty());
     }
 
     #[test]

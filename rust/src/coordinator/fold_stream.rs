@@ -9,6 +9,7 @@
 //! replays the naive loop nest (each learner re-reads its k−1 folds).
 
 use crate::data::{Dataset, Folds};
+use crate::util::pool::Pool;
 use crate::util::Rng;
 
 /// Traffic accounting for one cross-validation epoch.
@@ -53,6 +54,58 @@ impl<'a> FoldStream<'a> {
                     }
                 }
             }
+        }
+        stats
+    }
+
+    /// Parallel Figure-1 pass: folds stream in ascending order exactly
+    /// as in [`FoldStream::shared_pass`], but each fold's deliveries to
+    /// its k−1 learner consumers fan out across the scoped worker pool —
+    /// the literal "passing the same fold to all the learners that need
+    /// it *simultaneously*": every consumer walks the same cache-hot
+    /// batch list concurrently.
+    ///
+    /// `states` holds one mutable consumer state per learner instance
+    /// (disjoint `&mut`s handed to the jobs, so no synchronisation);
+    /// `consume(state, learner, batch)` is the per-learner consumer.
+    /// Per-learner delivery order is identical to the sequential shared
+    /// pass at ANY thread count — folds ascend sequentially and each
+    /// learner job walks the fold's chunk list in order — so the §1
+    /// validity criterion holds by construction (and is property-tested
+    /// against `shared_pass`). `threads <= 1` runs the jobs inline.
+    pub fn shared_pass_par<S: Send>(
+        &self,
+        batch: usize,
+        seed: u64,
+        threads: usize,
+        states: &mut [S],
+        consume: impl Fn(&mut S, usize, &[usize]) + Sync,
+    ) -> PassStats {
+        let k = self.folds.k();
+        assert_eq!(states.len(), k,
+            "need one consumer state per learner instance");
+        let mut stats = PassStats::default();
+        let consume = &consume;
+        for fold_id in 0..k {
+            let chunks = self.shuffled_batches(fold_id, batch, seed);
+            let fold_points: u64 =
+                chunks.iter().map(|c| c.len() as u64).sum();
+            stats.points_streamed += fold_points;
+            stats.deliveries += (k as u64 - 1) * fold_points;
+            let chunks_ref = &chunks;
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = states
+                .iter_mut()
+                .enumerate()
+                .filter(|(learner, _)| *learner != fold_id)
+                .map(|(learner, state)| {
+                    Box::new(move || {
+                        for chunk in chunks_ref {
+                            consume(state, learner, chunk.as_slice());
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            Pool::run_parallel(threads, jobs);
         }
         stats
     }
@@ -154,6 +207,41 @@ mod tests {
             });
             prop_assert!(shared == separate,
                 "schedules delivered different streams (k={k}, n={n})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_shared_pass_preserves_per_learner_streams() {
+        // The §1 validity criterion extended to the pooled fan-out: at
+        // every thread count, each learner must receive exactly the
+        // sequence of points the sequential shared pass delivers, and
+        // the traffic accounting must not change.
+        check("fold-stream-par-validity", 8, |g| {
+            let k = g.usize_in(2, 5);
+            let n = k * g.usize_in(2, 8) * 3;
+            let ds = toy_ds(n);
+            let folds = Folds::split(n, k, g.u64());
+            let fs = FoldStream::new(&ds, &folds);
+            let batch = g.usize_in(1, 8);
+            let seed = g.u64();
+            let mut want: HashMap<usize, Vec<usize>> = HashMap::new();
+            let want_stats = fs.shared_pass(batch, seed, |l, b| {
+                want.entry(l).or_default().extend_from_slice(b);
+            });
+            for threads in [1usize, 2, 4, 7] {
+                let mut streams: Vec<Vec<usize>> = vec![Vec::new(); k];
+                let stats = fs.shared_pass_par(
+                    batch, seed, threads, &mut streams,
+                    |s: &mut Vec<usize>, _l, b| s.extend_from_slice(b));
+                prop_assert!(stats == want_stats,
+                    "pass stats diverged at {threads} threads");
+                for (l, got) in streams.iter().enumerate() {
+                    prop_assert!(want[&l] == *got,
+                        "learner {l} stream diverged at {threads} \
+                         threads (k={k}, n={n})");
+                }
+            }
             Ok(())
         });
     }

@@ -12,29 +12,66 @@
 //! two §4.1 hyperparameters) from the shared distance structure. The
 //! naive nest (recompute per candidate) is kept as the measurable
 //! baseline.
+//!
+//! # The parallel shared-distance sweep engine
+//!
+//! Since PR 3 the split distances are batched through the locality-tiled
+//! distance kernel ([`pairwise_sq_dists_gather_par`]) instead of a
+//! per-pair scalar loop, and [`sweep_shared_par`] shards the candidate
+//! sweep across CV splits on the scoped worker pool: one job per split,
+//! results merged in split order. Per-split results are independent and
+//! the merge is u64/f64 arithmetic in a fixed order, so the parallel
+//! sweep is **bit-identical to the sequential [`sweep_shared`] at any
+//! thread count** — property-tested below. [`sweep_shared_auto`] is the
+//! production entry: it resolves the session thread count (`--threads` →
+//! `LOCALITY_ML_THREADS` → cores) and gates the fan-out on the total
+//! distance work via `effective_threads`, so small sweeps stay on the
+//! sequential path.
+//!
+//! # Distance-eval accounting
+//!
+//! Each returned [`SweepResult`] counts only the distance evaluations
+//! performed *for its own sweep*: the naive nest recomputes the split
+//! distances once per candidate, so its k-sweep result carries
+//! `shared × ks.len()` evals and its bandwidth-sweep result
+//! `shared × bandwidths.len()` — each sweep's redundancy factor is its
+//! own candidate count, not the combined total. The shared pass serves
+//! both sweeps from one structure, so both shared results carry the same
+//! single-pass count.
 
 use crate::data::{Dataset, Folds};
-use crate::learners::instance::sq_dist;
+use crate::kernels::parallel::{
+    default_threads, effective_threads, pairwise_sq_dists_gather_par,
+};
+use crate::kernels::TileConfig;
+use crate::util::pool::Pool;
+
+/// Smallest PRW bandwidth the vote will use. Silverman's rule returns
+/// `h = 0` for constant-feature datasets (σ = 0), which would make the
+/// Gaussian `inv` infinite and every score NaN; clamping keeps the vote
+/// finite (a degenerate bandwidth behaves like nearest-neighbour).
+pub const MIN_BANDWIDTH: f32 = 1e-6;
 
 /// Result of a hyperparameter sweep: CV accuracy per candidate.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepResult<T> {
     pub candidates: Vec<T>,
     pub accuracy: Vec<f64>,
-    /// Distance evaluations performed (the redundancy the guideline
-    /// removes).
+    /// Distance evaluations performed *for this sweep* (the redundancy
+    /// the guideline removes; see the module-level accounting note).
     pub distance_evals: u64,
 }
 
 impl<T: Copy> SweepResult<T> {
-    pub fn best(&self) -> (T, f64) {
-        let (i, acc) = self
-            .accuracy
+    /// Argmax candidate by accuracy, `None` for an empty sweep.
+    /// `total_cmp` gives a total order, so a stray non-finite accuracy
+    /// can no longer panic the comparison.
+    pub fn best(&self) -> Option<(T, f64)> {
+        self.accuracy
             .iter()
             .enumerate()
-            .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
-            .unwrap();
-        (self.candidates[i], *acc)
+            .max_by(|(_, a), (_, b)| a.total_cmp(b))
+            .map(|(i, &acc)| (self.candidates[i], acc))
     }
 }
 
@@ -46,26 +83,37 @@ struct SplitDistances {
     truth: Vec<i32>,
 }
 
-fn split_distances(ds: &Dataset, folds: &Folds, test_fold: usize,
-                   count: &mut u64) -> SplitDistances {
+/// Batch one CV split's query×train distances through the tiled kernel
+/// (bit-identical to the scalar `sq_dist` loop it replaced — the tiled
+/// and naive distance paths share per-pair arithmetic) and sort each
+/// query's neighbour list. Returns the split structure and the number
+/// of distance evaluations it cost.
+fn split_distances(
+    ds: &Dataset,
+    folds: &Folds,
+    test_fold: usize,
+    tiles: &TileConfig,
+    threads: usize,
+) -> (SplitDistances, u64) {
     let train_idx = folds.train_indices(test_fold);
     let test_idx = folds.test_indices(test_fold);
+    let n = train_idx.len();
+    let dists = pairwise_sq_dists_gather_par(
+        &ds.features, ds.d, &train_idx, test_idx, tiles, threads);
     let mut neighbours = Vec::with_capacity(test_idx.len());
     let mut truth = Vec::with_capacity(test_idx.len());
-    for &q in test_idx {
-        let qrow = ds.row(q);
-        let mut dists: Vec<(f32, i32)> = train_idx
+    for (q, &qi) in test_idx.iter().enumerate() {
+        let row = &dists[q * n..(q + 1) * n];
+        let mut pairs: Vec<(f32, i32)> = row
             .iter()
-            .map(|&j| {
-                *count += 1;
-                (sq_dist(qrow, ds.row(j)), ds.labels[j])
-            })
+            .zip(&train_idx)
+            .map(|(&dist, &j)| (dist, ds.labels[j]))
             .collect();
-        dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        neighbours.push(dists);
-        truth.push(ds.labels[q]);
+        pairs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        neighbours.push(pairs);
+        truth.push(ds.labels[qi]);
     }
-    SplitDistances { neighbours, truth }
+    (SplitDistances { neighbours, truth }, (test_idx.len() * n) as u64)
 }
 
 fn knn_vote(sorted: &[(f32, i32)], k: usize, classes: usize) -> i32 {
@@ -79,80 +127,187 @@ fn knn_vote(sorted: &[(f32, i32)], k: usize, classes: usize) -> i32 {
 }
 
 fn prw_vote(sorted: &[(f32, i32)], bandwidth: f32, classes: usize) -> i32 {
+    let h = f64::from(bandwidth.max(MIN_BANDWIDTH));
     let dmin = sorted.first().map_or(0.0, |&(d, _)| f64::from(d));
-    let inv = 1.0 / (2.0 * f64::from(bandwidth) * f64::from(bandwidth));
+    let inv = 1.0 / (2.0 * h * h);
     let mut scores = vec![0.0f64; classes];
     for &(d, label) in sorted {
         scores[label as usize] += (-(f64::from(d) - dmin) * inv).exp();
     }
     scores.iter().enumerate()
-        .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
-        .map(|(c, _)| c).unwrap() as i32
+        .max_by(|(_, a), (_, b)| a.total_cmp(b))
+        .map(|(c, _)| c as i32).unwrap_or(0)
+}
+
+/// One CV split's contribution to a shared sweep: per-candidate correct
+/// counts plus the split's point total and distance evals. Integer
+/// partials merged in split order make the parallel sweep bit-identical
+/// to the sequential one.
+struct SplitCounts {
+    k_correct: Vec<u64>,
+    b_correct: Vec<u64>,
+    total: u64,
+    distance_evals: u64,
+}
+
+/// Evaluate every k and every bandwidth on one split's shared distance
+/// structure — the unit of work a sweep job runs.
+fn eval_split(
+    ds: &Dataset,
+    folds: &Folds,
+    test_fold: usize,
+    ks: &[usize],
+    bandwidths: &[f32],
+    tiles: &TileConfig,
+    threads: usize,
+) -> SplitCounts {
+    let (split, distance_evals) =
+        split_distances(ds, folds, test_fold, tiles, threads);
+    let mut k_correct = vec![0u64; ks.len()];
+    let mut b_correct = vec![0u64; bandwidths.len()];
+    let mut total = 0u64;
+    for (sorted, &truth) in split.neighbours.iter().zip(&split.truth) {
+        total += 1;
+        for (i, &k) in ks.iter().enumerate() {
+            if knn_vote(sorted, k, ds.n_classes) == truth {
+                k_correct[i] += 1;
+            }
+        }
+        for (i, &h) in bandwidths.iter().enumerate() {
+            if prw_vote(sorted, h, ds.n_classes) == truth {
+                b_correct[i] += 1;
+            }
+        }
+    }
+    SplitCounts { k_correct, b_correct, total, distance_evals }
+}
+
+/// Merge per-split partials in split order into the two sweep results.
+/// Pure u64 sums plus one final division per candidate, so sequential
+/// and parallel sweeps produce identical bits by construction.
+fn merge_splits(
+    parts: &[SplitCounts],
+    ks: &[usize],
+    bandwidths: &[f32],
+) -> (SweepResult<usize>, SweepResult<f32>) {
+    let mut k_correct = vec![0u64; ks.len()];
+    let mut b_correct = vec![0u64; bandwidths.len()];
+    let (mut total, mut distance_evals) = (0u64, 0u64);
+    for p in parts {
+        for (acc, &c) in k_correct.iter_mut().zip(&p.k_correct) {
+            *acc += c;
+        }
+        for (acc, &c) in b_correct.iter_mut().zip(&p.b_correct) {
+            *acc += c;
+        }
+        total += p.total;
+        distance_evals += p.distance_evals;
+    }
+    let accuracy = |correct: &[u64]| {
+        correct.iter().map(|&c| c as f64 / total as f64).collect()
+    };
+    (
+        SweepResult {
+            candidates: ks.to_vec(),
+            accuracy: accuracy(&k_correct),
+            distance_evals,
+        },
+        SweepResult {
+            candidates: bandwidths.to_vec(),
+            accuracy: accuracy(&b_correct),
+            distance_evals,
+        },
+    )
 }
 
 /// Shared-distance sweep (the guideline): distances per CV split are
 /// computed once; every k and every bandwidth is evaluated from them.
-/// Returns (k sweep, bandwidth sweep).
+/// Sequential over splits — the oracle the parallel engine is checked
+/// against. Returns (k sweep, bandwidth sweep).
 pub fn sweep_shared(
     ds: &Dataset,
     folds: &Folds,
     ks: &[usize],
     bandwidths: &[f32],
 ) -> (SweepResult<usize>, SweepResult<f32>) {
-    let mut distance_evals = 0u64;
-    let mut k_correct = vec![0u64; ks.len()];
-    let mut b_correct = vec![0u64; bandwidths.len()];
-    let mut total = 0u64;
-    for test_fold in 0..folds.k() {
-        let split = split_distances(ds, folds, test_fold,
-                                    &mut distance_evals);
-        for (sorted, &truth) in split.neighbours.iter()
-            .zip(&split.truth) {
-            total += 1;
-            for (i, &k) in ks.iter().enumerate() {
-                if knn_vote(sorted, k, ds.n_classes) == truth {
-                    k_correct[i] += 1;
-                }
-            }
-            for (i, &h) in bandwidths.iter().enumerate() {
-                if prw_vote(sorted, h, ds.n_classes) == truth {
-                    b_correct[i] += 1;
-                }
-            }
-        }
-    }
-    let to_result = |correct: Vec<u64>| {
-        correct.iter().map(|&c| c as f64 / total as f64).collect()
-    };
-    (
-        SweepResult {
-            candidates: ks.to_vec(),
-            accuracy: to_result(k_correct),
-            distance_evals,
-        },
-        SweepResult {
-            candidates: bandwidths.to_vec(),
-            accuracy: to_result(b_correct),
-            distance_evals,
-        },
-    )
+    let tiles = TileConfig::westmere();
+    let parts: Vec<SplitCounts> = (0..folds.k())
+        .map(|test_fold| {
+            eval_split(ds, folds, test_fold, ks, bandwidths, &tiles, 1)
+        })
+        .collect();
+    merge_splits(&parts, ks, bandwidths)
+}
+
+/// The parallel shared-distance sweep engine: one job per CV split,
+/// fanned out over the scoped worker pool, partials merged in split
+/// order. Each job runs the same `eval_split` as [`sweep_shared`] (its
+/// distance kernel stays sequential — the split fan-out already owns
+/// the cores), so the result is bit-identical to the sequential shared
+/// sweep at ANY thread count; `threads = 1` runs the jobs inline.
+pub fn sweep_shared_par(
+    ds: &Dataset,
+    folds: &Folds,
+    ks: &[usize],
+    bandwidths: &[f32],
+    threads: usize,
+) -> (SweepResult<usize>, SweepResult<f32>) {
+    let tiles = TileConfig::westmere_workers(threads.max(1));
+    let tiles_ref = &tiles;
+    let jobs: Vec<Box<dyn FnOnce() -> SplitCounts + Send + '_>> =
+        (0..folds.k())
+        .map(|test_fold| {
+            Box::new(move || {
+                eval_split(ds, folds, test_fold, ks, bandwidths,
+                           tiles_ref, 1)
+            }) as Box<dyn FnOnce() -> SplitCounts + Send + '_>
+        })
+        .collect();
+    let parts = Pool::run_parallel(threads, jobs);
+    merge_splits(&parts, ks, bandwidths)
+}
+
+/// Production entry for the sweep engine: shards across CV splits with
+/// the session thread count (`--threads` → `LOCALITY_ML_THREADS` →
+/// available cores), gated by `effective_threads` on the sweep's total
+/// distance work (multiply-adds) so small sweeps stay on the exact
+/// sequential path with no spawns.
+pub fn sweep_shared_auto(
+    ds: &Dataset,
+    folds: &Folds,
+    ks: &[usize],
+    bandwidths: &[f32],
+) -> (SweepResult<usize>, SweepResult<f32>) {
+    let work: usize = (0..folds.k())
+        .map(|f| {
+            let test = folds.test_indices(f).len();
+            test * (ds.n - test) * ds.d
+        })
+        .sum();
+    let threads = effective_threads(default_threads(), work);
+    sweep_shared_par(ds, folds, ks, bandwidths, threads)
 }
 
 /// The naive nest the paper criticises: every candidate recomputes the
-/// full distance structure for every CV split.
+/// full distance structure for every CV split. Each returned sweep
+/// counts its own recomputation only (k passes for the k sweep,
+/// bandwidth passes for the bandwidth sweep) — see the module-level
+/// accounting note.
 pub fn sweep_naive(
     ds: &Dataset,
     folds: &Folds,
     ks: &[usize],
     bandwidths: &[f32],
 ) -> (SweepResult<usize>, SweepResult<f32>) {
+    let tiles = TileConfig::westmere();
     let mut k_acc = Vec::with_capacity(ks.len());
-    let mut distance_evals = 0u64;
+    let mut k_evals = 0u64;
     for &k in ks {
         let (mut correct, mut total) = (0u64, 0u64);
         for test_fold in 0..folds.k() {
-            let split = split_distances(ds, folds, test_fold,
-                                        &mut distance_evals);
+            let (split, evals) =
+                split_distances(ds, folds, test_fold, &tiles, 1);
+            k_evals += evals;
             for (sorted, &truth) in split.neighbours.iter()
                 .zip(&split.truth) {
                 total += 1;
@@ -164,11 +319,13 @@ pub fn sweep_naive(
         k_acc.push(correct as f64 / total as f64);
     }
     let mut b_acc = Vec::with_capacity(bandwidths.len());
+    let mut b_evals = 0u64;
     for &h in bandwidths {
         let (mut correct, mut total) = (0u64, 0u64);
         for test_fold in 0..folds.k() {
-            let split = split_distances(ds, folds, test_fold,
-                                        &mut distance_evals);
+            let (split, evals) =
+                split_distances(ds, folds, test_fold, &tiles, 1);
+            b_evals += evals;
             for (sorted, &truth) in split.neighbours.iter()
                 .zip(&split.truth) {
                 total += 1;
@@ -181,16 +338,18 @@ pub fn sweep_naive(
     }
     (
         SweepResult { candidates: ks.to_vec(), accuracy: k_acc,
-                      distance_evals },
+                      distance_evals: k_evals },
         SweepResult { candidates: bandwidths.to_vec(), accuracy: b_acc,
-                      distance_evals },
+                      distance_evals: b_evals },
     )
 }
 
 /// Silverman's rule-of-thumb bandwidth (the paper cites the
 /// bandwidth-selection literature [12, 13]; this is the standard
 /// starting point a sweep refines): h = 1.06 · σ · n^(−1/5), with σ the
-/// mean per-feature standard deviation.
+/// mean per-feature standard deviation. Clamped to [`MIN_BANDWIDTH`]:
+/// a constant-feature dataset has σ = 0, and an exactly-zero bandwidth
+/// would poison every PRW score with NaN downstream.
 pub fn silverman_bandwidth(ds: &Dataset) -> f32 {
     let n = ds.n as f64;
     let mut sigma_sum = 0.0f64;
@@ -208,7 +367,7 @@ pub fn silverman_bandwidth(ds: &Dataset) -> f32 {
         sigma_sum += (var / n).sqrt();
     }
     let sigma = sigma_sum / ds.d as f64;
-    (1.06 * sigma * n.powf(-0.2)) as f32
+    ((1.06 * sigma * n.powf(-0.2)) as f32).max(MIN_BANDWIDTH)
 }
 
 #[cfg(test)]
@@ -217,6 +376,8 @@ mod tests {
     use crate::data::synth::chembl_like;
     use crate::data::synth::gaussian_mixture;
     use crate::data::MixtureSpec;
+    use crate::prop_assert;
+    use crate::util::prop::check;
 
     fn small() -> (Dataset, Folds) {
         let ds = gaussian_mixture(MixtureSpec {
@@ -245,13 +406,65 @@ mod tests {
         let (ds, folds) = small();
         let ks = [1usize, 3, 5, 9];
         let hs = [0.5f32, 2.0, 8.0];
-        let (sk, _) = sweep_shared(&ds, &folds, &ks, &hs);
+        let (sk, sb) = sweep_shared(&ds, &folds, &ks, &hs);
         let (nk, nb) = sweep_naive(&ds, &folds, &ks, &hs);
-        // naive recomputes the split distances once per candidate
-        // (4 k's + 3 bandwidths = 7 passes); shared does exactly one.
-        let candidates = (ks.len() + hs.len()) as u64;
-        assert_eq!(nk.distance_evals, sk.distance_evals * candidates);
-        assert_eq!(nb.distance_evals, sk.distance_evals * candidates);
+        // The shared pass serves both sweeps from one distance structure.
+        assert_eq!(sk.distance_evals, sb.distance_evals);
+        // Each naive sweep recomputes the split distances once per *its
+        // own* candidates — the k sweep must not be billed for the
+        // bandwidth passes, nor vice versa.
+        assert_eq!(nk.distance_evals,
+                   sk.distance_evals * ks.len() as u64,
+            "k-sweep factor must be the k candidate count");
+        assert_eq!(nb.distance_evals,
+                   sb.distance_evals * hs.len() as u64,
+            "bandwidth-sweep factor must be the bandwidth count");
+    }
+
+    #[test]
+    fn parallel_sweep_is_bit_identical_to_sequential_shared() {
+        let (ds, folds) = small();
+        let ks = [1usize, 3, 5, 9];
+        let hs = [0.5f32, 2.0, 8.0];
+        let (sk, sb) = sweep_shared(&ds, &folds, &ks, &hs);
+        for threads in [1usize, 2, 4, 7] {
+            let (pk, pb) =
+                sweep_shared_par(&ds, &folds, &ks, &hs, threads);
+            assert_eq!(pk, sk,
+                "k sweep diverged at {threads} threads");
+            assert_eq!(pb, sb,
+                "bandwidth sweep diverged at {threads} threads");
+        }
+        let (ak, ab) = sweep_shared_auto(&ds, &folds, &ks, &hs);
+        assert_eq!((ak, ab), (sk, sb), "auto sweep diverged");
+    }
+
+    #[test]
+    fn parallel_sweep_matches_across_random_geometries() {
+        // The acceptance property across fold counts, shapes, candidate
+        // sets and thread counts: merging per-split partials in split
+        // order must reproduce the sequential sweep exactly.
+        check("sweep-par-bitident", 8, |g| {
+            let k = g.usize_in(2, 6);
+            let n = k * g.usize_in(3, 12);
+            let d = g.usize_in(1, 8);
+            let ds = gaussian_mixture(MixtureSpec {
+                n, d, classes: 2, separation: 0.7, noise: 1.0,
+                seed: g.u64(),
+            });
+            let folds = Folds::split(n, k, g.u64());
+            let ks = [1usize, g.usize_in(2, 7)];
+            let hs = [g.usize_in(1, 8) as f32, 8.0];
+            let want = sweep_shared(&ds, &folds, &ks, &hs);
+            for threads in [2usize, 3, 5] {
+                let got =
+                    sweep_shared_par(&ds, &folds, &ks, &hs, threads);
+                prop_assert!(got == want,
+                    "parallel sweep diverged (k={k}, n={n}, \
+                     threads={threads})");
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -259,7 +472,7 @@ mod tests {
         let ds = chembl_like(300, 9);
         let folds = Folds::split(ds.n, 5, 11);
         let (sk, _) = sweep_shared(&ds, &folds, &[1, 5, 15], &[8.0]);
-        let (_, best_acc) = sk.best();
+        let (_, best_acc) = sk.best().expect("non-empty sweep");
         assert!(best_acc > 0.8, "best k accuracy {best_acc}");
     }
 
@@ -277,12 +490,52 @@ mod tests {
     }
 
     #[test]
+    fn constant_feature_dataset_sweeps_without_panic() {
+        // Regression: Silverman's σ is 0 on constant features, so the
+        // unclamped bandwidth was 0, prw_vote's inv infinite, every
+        // score NaN, and the partial_cmp argmax panicked.
+        let n = 40;
+        let ds = Dataset::new(
+            vec![1.0f32; n * 3],
+            (0..n).map(|i| (i % 2) as i32).collect(),
+            3,
+            2,
+        );
+        let h = silverman_bandwidth(&ds);
+        assert!(h >= MIN_BANDWIDTH, "bandwidth must be clamped, got {h}");
+        let folds = Folds::split(n, 4, 1);
+        // h = 0.0 as an explicit candidate exercises the prw_vote clamp
+        let ks = [1usize, 3];
+        let hs = [h, 0.0];
+        let (sk, sb) = sweep_shared(&ds, &folds, &ks, &hs);
+        assert!(sk.accuracy.iter().chain(&sb.accuracy)
+                    .all(|a| a.is_finite()),
+            "accuracies must stay finite on constant features");
+        assert!(sb.best().is_some());
+        let (nk, nb) = sweep_naive(&ds, &folds, &ks, &hs);
+        assert_eq!(sk.accuracy, nk.accuracy);
+        assert_eq!(sb.accuracy, nb.accuracy);
+        let (pk, pb) = sweep_shared_par(&ds, &folds, &ks, &hs, 4);
+        assert_eq!((pk, pb), (sk, sb));
+    }
+
+    #[test]
     fn best_returns_argmax() {
         let r = SweepResult {
             candidates: vec![1usize, 3, 5],
             accuracy: vec![0.5, 0.9, 0.7],
             distance_evals: 0,
         };
-        assert_eq!(r.best(), (3, 0.9));
+        assert_eq!(r.best(), Some((3, 0.9)));
+    }
+
+    #[test]
+    fn best_on_empty_sweep_is_none_not_a_panic() {
+        let r: SweepResult<usize> = SweepResult {
+            candidates: Vec::new(),
+            accuracy: Vec::new(),
+            distance_evals: 0,
+        };
+        assert_eq!(r.best(), None);
     }
 }

@@ -28,6 +28,19 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
     acc
 }
 
+/// Gather `idx` rows of a row-major `[n × d]` matrix into one
+/// contiguous buffer. Index-sliced consumers (CV splits, bootstrap
+/// samples) pay this one streaming copy so the tiled kernels downstream
+/// see unit-stride rows — the §3.3.1 layout guideline applied to
+/// scattered row sets.
+pub fn gather_rows(src: &[f32], d: usize, idx: &[usize]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(idx.len() * d);
+    for &i in idx {
+        out.extend_from_slice(&src[i * d..(i + 1) * d]);
+    }
+    out
+}
+
 /// Naive reference: `out[q·n + j] = ‖queries[q] − train[j]‖²`, computed
 /// query-at-a-time (each query streams the full training matrix).
 pub fn pairwise_sq_dists_naive(
@@ -96,6 +109,14 @@ mod tests {
         pairwise_sq_dists_tiled(&train, &queries, 2, &mut out,
                                 &TileConfig::westmere());
         assert_eq!(out, [0.0, 25.0]);
+    }
+
+    #[test]
+    fn gather_rows_selects_rows_in_index_order() {
+        let src = [0.0f32, 1.0, 10.0, 11.0, 20.0, 21.0];
+        assert_eq!(gather_rows(&src, 2, &[2, 0, 2]),
+                   vec![20.0, 21.0, 0.0, 1.0, 20.0, 21.0]);
+        assert!(gather_rows(&src, 2, &[]).is_empty());
     }
 
     #[test]

@@ -57,13 +57,16 @@ pub mod parallel;
 pub mod tile;
 
 pub use coupled::coupled_step_tiled;
-pub use distance::{pairwise_sq_dists_naive, pairwise_sq_dists_tiled};
+pub use distance::{
+    gather_rows, pairwise_sq_dists_naive, pairwise_sq_dists_tiled,
+};
 pub use matmul::{
     matmul_acc_tiled, matmul_bias_tiled, matmul_naive, matmul_tiled,
     matmul_tn_acc_naive, matmul_tn_acc_tiled,
 };
 pub use parallel::{
     coupled_step_par, matmul_acc_tiled_par, matmul_bias_tiled_par,
-    matmul_tiled_par, matmul_tn_acc_tiled_par, pairwise_sq_dists_tiled_par,
+    matmul_tiled_par, matmul_tn_acc_tiled_par,
+    pairwise_sq_dists_gather_par, pairwise_sq_dists_tiled_par,
 };
 pub use tile::TileConfig;

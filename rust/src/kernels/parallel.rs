@@ -55,7 +55,7 @@ use super::coupled::{
     coupled_accumulate, coupled_finalize, coupled_step_tiled,
     CoupledPartial,
 };
-use super::distance::pairwise_sq_dists_tiled;
+use super::distance::{gather_rows, pairwise_sq_dists_tiled};
 use super::matmul::{matmul_acc_tiled, matmul_tn_acc_rows, matmul_tn_acc_tiled};
 use super::tile::TileConfig;
 use crate::util::pool::Pool;
@@ -301,6 +301,29 @@ pub fn pairwise_sq_dists_tiled_par(
     if !ran {
         pairwise_sq_dists_tiled(train, queries, d, out, t);
     }
+}
+
+/// Index-sliced parallel pairwise distances: gather the `train_idx` and
+/// `query_idx` rows of one row-major feature matrix into contiguous
+/// buffers (one streaming copy each — the tiled kernel then reads
+/// unit-stride rows), and return the full `|queries| × |train|`
+/// distance matrix. This is the batched replacement for the per-pair
+/// scalar `sq_dist` loop in the §4.1.1 hyperparameter sweep: the
+/// distance arithmetic is shared with `sq_dist`, so the matrix is
+/// bit-identical to the scalar loop at any thread count.
+pub fn pairwise_sq_dists_gather_par(
+    features: &[f32],
+    d: usize,
+    train_idx: &[usize],
+    query_idx: &[usize],
+    t: &TileConfig,
+    threads: usize,
+) -> Vec<f32> {
+    let train = gather_rows(features, d, train_idx);
+    let queries = gather_rows(features, d, query_idx);
+    let mut out = vec![0.0f32; query_idx.len() * train_idx.len()];
+    pairwise_sq_dists_tiled_par(&train, &queries, d, &mut out, t, threads);
+    out
 }
 
 /// Parallel fused coupled LR+SVM step: `coupled_rows()`-aligned row
@@ -556,6 +579,45 @@ mod tests {
             let mut naive = vec![0.0f32; nq * n];
             pairwise_sq_dists_naive(&train, &queries, d, &mut naive);
             prop_assert!(naive == want, "tiled distances diverged");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gathered_distances_match_the_scalar_loop_bit_for_bit() {
+        use crate::kernels::distance::sq_dist;
+        check("par-gather-distance", 15, |g| {
+            let d = g.usize_in(1, 12);
+            let n = g.usize_in(1, 40);
+            let features = g.f32_vec(n * d, 3.0);
+            let train_idx: Vec<usize> =
+                (0..g.usize_in(0, 30)).map(|_| g.usize_in(0, n - 1))
+                                      .collect();
+            let query_idx: Vec<usize> =
+                (0..g.usize_in(0, 15)).map(|_| g.usize_in(0, n - 1))
+                                      .collect();
+            let t = TileConfig {
+                mc: 1,
+                kc: 1,
+                nc: 1,
+                l1_f32: g.usize_in(2, 16) * d,
+            };
+            for threads in [1usize, 3, 5] {
+                let got = pairwise_sq_dists_gather_par(
+                    &features, d, &train_idx, &query_idx, &t, threads);
+                for (q, &qi) in query_idx.iter().enumerate() {
+                    for (j, &ji) in train_idx.iter().enumerate() {
+                        let want = sq_dist(
+                            &features[qi * d..(qi + 1) * d],
+                            &features[ji * d..(ji + 1) * d]);
+                        let have = got[q * train_idx.len() + j];
+                        prop_assert!(
+                            want.to_bits() == have.to_bits(),
+                            "gathered distance diverged at ({q},{j}), \
+                             {threads} threads");
+                    }
+                }
+            }
             Ok(())
         });
     }

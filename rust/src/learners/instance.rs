@@ -157,7 +157,9 @@ fn prw_vote(dists: &[f32], labels: &[i32], n_classes: usize, inv: f64)
     scores
         .iter()
         .enumerate()
-        .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+        // total_cmp: a total order, so a degenerate score row (e.g. a
+        // NaN from a pathological bandwidth) can never panic the argmax.
+        .max_by(|(_, a), (_, b)| a.total_cmp(b))
         .map(|(c, _)| c)
         .unwrap() as i32
 }

@@ -24,11 +24,27 @@ pub struct NaiveBayes {
 impl NaiveBayes {
     /// One-epoch fit (sufficient statistics, single pass over T).
     pub fn fit(train: &Dataset) -> Self {
+        Self::fit_rows(train, 0..train.n)
+    }
+
+    /// One-epoch fit streaming the sufficient statistics over an
+    /// explicit row-index list into the single resident copy of T — the
+    /// §3.1.2 ensemble contract ("bootstrap index lists index into the
+    /// single resident copy of T — no per-member dataset
+    /// materialisation"). Repeats are fine (bootstrap samples repeat by
+    /// design). Bit-identical to `fit(&train.gather(idx))`: same row
+    /// order, same f64 accumulators, minus the gathered copy.
+    pub fn fit_indexed(train: &Dataset, idx: &[usize]) -> Self {
+        Self::fit_rows(train, idx.iter().copied())
+    }
+
+    fn fit_rows(train: &Dataset,
+                rows: impl Iterator<Item = usize>) -> Self {
         let (d, c) = (train.d, train.n_classes);
         let mut counts = vec![0.0f32; c];
         let mut sums = vec![0.0f64; c * d];
         let mut sqsums = vec![0.0f64; c * d];
-        for i in 0..train.n {
+        for i in rows {
             let class = train.labels[i] as usize;
             counts[class] += 1.0;
             let row = train.row(i);
@@ -109,6 +125,22 @@ mod tests {
         assert_eq!(nb.counts, vec![2.0, 2.0]);
         assert_eq!(nb.mean, vec![2.0, 12.0]);
         assert_eq!(nb.var, vec![1.0, 4.0]);
+    }
+
+    #[test]
+    fn indexed_fit_is_bit_identical_to_gather_fit() {
+        let ds = gaussian_mixture(MixtureSpec {
+            n: 80, d: 5, classes: 3, separation: 1.0, noise: 1.0, seed: 9,
+        });
+        // repeats and arbitrary order, like a bootstrap sample
+        let idx: Vec<usize> =
+            (0..120).map(|i| (i * 37 + 11) % ds.n).collect();
+        let streamed = NaiveBayes::fit_indexed(&ds, &idx);
+        let gathered = NaiveBayes::fit(&ds.gather(&idx));
+        assert_eq!(streamed, gathered);
+        // and the 0..n identity: fit IS fit_indexed over all rows
+        let all: Vec<usize> = (0..ds.n).collect();
+        assert_eq!(NaiveBayes::fit_indexed(&ds, &all), NaiveBayes::fit(&ds));
     }
 
     #[test]

@@ -14,6 +14,9 @@
 //! locality-ml audit                                       §3-§4  (E6)
 //! locality-ml kernels  [--sizes ...] [--out-json f]       E12
 //! locality-ml parallel [--sizes ...] [--curve 1,2,4]      E13
+//! locality-ml sweep    [--dataset-n N] [--ks 1,3,5]
+//!                      [--bandwidth-mults 0.5,1,2,4]
+//!                      [--curve 1,2,4] [--out-json f]     E14
 //! locality-ml info    [--artifacts dir]
 //! ```
 //!
@@ -107,30 +110,27 @@ fn main() -> Result<()> {
             commands::cmd_audit()?;
         }
         "kernels" => {
-            let sizes = args
-                .list_or("sizes", &["256", "512"])
-                .iter()
-                .map(|s| s.parse::<usize>().map_err(
-                    |_| anyhow::anyhow!("bad size `{s}`")))
-                .collect::<Result<Vec<_>>>()?;
+            let sizes = args.usize_list_or("sizes", &[256, 512])?;
             let out = args.get("out-json").map(PathBuf::from);
             commands::cmd_kernels(&sizes, out.as_deref())?;
         }
         "parallel" => {
-            let sizes = args
-                .list_or("sizes", &["256", "512"])
-                .iter()
-                .map(|s| s.parse::<usize>().map_err(
-                    |_| anyhow::anyhow!("bad size `{s}`")))
-                .collect::<Result<Vec<_>>>()?;
-            let curve = args
-                .list_or("curve", &["1", "2", "4"])
-                .iter()
-                .map(|s| s.parse::<usize>().map_err(
-                    |_| anyhow::anyhow!("bad thread count `{s}`")))
-                .collect::<Result<Vec<_>>>()?;
+            let sizes = args.usize_list_or("sizes", &[256, 512])?;
+            let curve = args.usize_list_or("curve", &[1, 2, 4])?;
             let out = args.get("out-json").map(PathBuf::from);
             commands::cmd_parallel(&sizes, &curve, out.as_deref())?;
+        }
+        "sweep" => {
+            let n = args.usize_or("dataset-n", 1000)?;
+            let folds = args.usize_or("folds", 5)?;
+            let seed = args.u64_or("seed", 7)?;
+            let ks = args.usize_list_or("ks", &[1, 3, 5, 9, 15])?;
+            let mults = args
+                .f32_list_or("bandwidth-mults", &[0.5, 1.0, 2.0, 4.0])?;
+            let curve = args.usize_list_or("curve", &[1, 2, 4])?;
+            let out = args.get("out-json").map(PathBuf::from);
+            commands::cmd_sweep(n, folds, &ks, &mults, &curve, seed,
+                                out.as_deref())?;
         }
         "info" => {
             let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
@@ -168,6 +168,11 @@ SUBCOMMANDS
   parallel     Parallel macro-tile layer: 1-vs-N thread scaling curve
                  --sizes 256,512 --curve 1,2,4
                  --out-json BENCH_parallel.json
+  sweep        §4.1.1 shared-distance hyperparameter sweep engine:
+               naive vs shared vs split-parallel (bit-identical)
+                 --dataset-n 1000 --folds 5 --ks 1,3,5,9,15
+                 --bandwidth-mults 0.5,1,2,4 --curve 1,2,4
+                 --out-json BENCH_sweep.json
   info         List compiled artifacts  [--artifacts artifacts]
 
 Common options: --config experiment.toml --artifacts artifacts --seed N

@@ -1,0 +1,54 @@
+"""Shared validation helpers for the BENCH_*.json CI gates.
+
+Every gate script (`check_bench_parallel.py`, `check_bench_sweep.py`)
+funnels its failure modes through `CheckFailure` so a malformed record —
+a missing key, a non-numeric value, a file that was never measured —
+produces a clean one-line `FAIL: ...` and exit code 1 instead of a raw
+KeyError/ValueError traceback.
+"""
+import json
+
+
+class CheckFailure(Exception):
+    """A gate violation or malformed input; str(e) is the FAIL message."""
+
+
+def load_doc(path):
+    """Load a bench JSON document, failing cleanly if it is unreadable,
+    not JSON, or still the committed pending-first-run placeholder."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as e:
+        raise CheckFailure(f"cannot read {path}: {e}") from e
+    except json.JSONDecodeError as e:
+        raise CheckFailure(f"{path} is not valid JSON: {e}") from e
+    if not isinstance(doc, dict):
+        raise CheckFailure(f"{path}: top level must be an object")
+    if doc.get("status") == "pending-first-run":
+        raise CheckFailure(
+            f"{path} is still pending-first-run — the bench did not "
+            "overwrite it")
+    return doc
+
+
+def require_number(record, key, context):
+    """Return record[key] as a float, failing cleanly when the key is
+    absent or holds a non-numeric value."""
+    if not isinstance(record, dict):
+        raise CheckFailure(f"{context}: record is not an object")
+    if key not in record:
+        raise CheckFailure(f"{context}: record lacks `{key}`")
+    value = record[key]
+    if isinstance(value, bool):
+        raise CheckFailure(
+            f"{context}: `{key}` is a boolean, not a number")
+    try:
+        value = float(value)
+    except (TypeError, ValueError):
+        raise CheckFailure(
+            f"{context}: `{key}` holds non-numeric value "
+            f"{value!r}") from None
+    if value != value:  # NaN
+        raise CheckFailure(f"{context}: `{key}` is NaN")
+    return value

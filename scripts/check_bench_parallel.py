@@ -6,10 +6,13 @@ Usage: check_bench_parallel.py [BENCH_parallel.json]
 
 Reads the scaling curve written by `cargo bench --bench bench_parallel`
 (schema locality-ml/bench-parallel/v1) and exits non-zero — failing the
-job — if the gate is missed or the file was never measured.
+job — if the gate is missed, the file was never measured, or the gate
+record is malformed (missing/non-numeric `speedup_vs_1t` fails with a
+one-line message instead of a traceback).
 """
-import json
 import sys
+
+from bench_check import CheckFailure, load_doc, require_number
 
 GATE_KERNEL = "matmul"
 GATE_SHAPE = "512x512x512"
@@ -17,28 +20,32 @@ GATE_THREADS = 4
 GATE_SPEEDUP = 2.0
 
 
-def main() -> int:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_parallel.json"
-    with open(path) as f:
-        doc = json.load(f)
-    if doc.get("status") == "pending-first-run":
-        print(f"FAIL: {path} is still pending-first-run — the bench "
-              "did not overwrite it", file=sys.stderr)
-        return 1
+def check(path):
+    doc = load_doc(path)
     rows = [r for r in doc.get("results", [])
-            if r.get("kernel") == GATE_KERNEL
+            if isinstance(r, dict)
+            and r.get("kernel") == GATE_KERNEL
             and r.get("shape") == GATE_SHAPE
             and r.get("threads") == GATE_THREADS]
     if not rows:
-        print(f"FAIL: no {GATE_THREADS}-thread {GATE_SHAPE} "
-              f"{GATE_KERNEL} record in {path}", file=sys.stderr)
-        return 1
-    speedup = float(rows[0]["speedup_vs_1t"])
-    print(f"{GATE_THREADS}-thread {GATE_SHAPE} {GATE_KERNEL} scaling: "
-          f"{speedup:.2f}x (gate: >= {GATE_SPEEDUP}x)")
+        raise CheckFailure(
+            f"no {GATE_THREADS}-thread {GATE_SHAPE} {GATE_KERNEL} "
+            f"record in {path}")
+    context = f"{GATE_THREADS}-thread {GATE_SHAPE} {GATE_KERNEL}"
+    speedup = require_number(rows[0], "speedup_vs_1t", context)
+    print(f"{context} scaling: {speedup:.2f}x "
+          f"(gate: >= {GATE_SPEEDUP}x)")
     if speedup < GATE_SPEEDUP:
-        print(f"FAIL: scaling gate missed ({speedup:.2f}x < "
-              f"{GATE_SPEEDUP}x)", file=sys.stderr)
+        raise CheckFailure(
+            f"scaling gate missed ({speedup:.2f}x < {GATE_SPEEDUP}x)")
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_parallel.json"
+    try:
+        check(path)
+    except CheckFailure as e:
+        print(f"FAIL: {e}", file=sys.stderr)
         return 1
     return 0
 

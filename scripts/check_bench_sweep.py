@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""CI gate for the parallel shared-distance sweep engine (ISSUE 3):
+
+1. the shared sweep must beat the naive nest by at least the
+   candidate-count factor on distance evaluations (the per-sweep
+   accounting makes this exact: each naive sweep recomputes the split
+   distances once per candidate), and
+2. the measured wall-clock ratio naive/shared must be > 1 — removing
+   the redundant distance passes has to actually show up on the clock.
+
+The 1/2/4-thread records of the split-sharded parallel sweep are
+validated for shape (numeric threads/secs/speedup_vs_1t) but not gated
+on a scaling factor: fold counts bound the available parallelism, and
+the bit-identity of the parallel sweep is asserted in-process by the
+bench itself before anything is timed.
+
+Usage: check_bench_sweep.py [BENCH_sweep.json]
+"""
+import sys
+
+from bench_check import CheckFailure, load_doc, require_number
+
+WALL_RATIO_GATE = 1.0
+
+
+def check(path):
+    doc = load_doc(path)
+
+    cands = doc.get("candidates", {})
+    n_ks = require_number(cands, "ks", "candidates")
+    n_bw = require_number(cands, "bandwidths", "candidates")
+    factor_gate = n_ks + n_bw
+
+    evals = doc.get("distance_evals", {})
+    naive = (require_number(evals, "naive_k", "distance_evals")
+             + require_number(evals, "naive_bandwidth", "distance_evals"))
+    shared = require_number(evals, "shared", "distance_evals")
+    if shared <= 0:
+        raise CheckFailure("shared sweep recorded no distance evals")
+    factor = naive / shared
+    print(f"distance evals: naive {naive:.0f} vs shared {shared:.0f} "
+          f"-> {factor:.2f}x (gate: >= {factor_gate:.0f}x, the "
+          f"candidate count)")
+    if factor < factor_gate:
+        raise CheckFailure(
+            f"shared sweep lost the candidate factor "
+            f"({factor:.2f}x < {factor_gate:.0f}x)")
+
+    wall = doc.get("wall", {})
+    ratio = require_number(wall, "ratio", "wall")
+    print(f"wall-clock naive/shared: {ratio:.2f}x "
+          f"(gate: > {WALL_RATIO_GATE:.0f}x)")
+    if ratio <= WALL_RATIO_GATE:
+        raise CheckFailure(
+            f"shared sweep is not faster on the clock ({ratio:.2f}x)")
+
+    results = doc.get("results", [])
+    if not results:
+        raise CheckFailure(f"no thread records in {path}")
+    for i, record in enumerate(results):
+        context = f"results[{i}]"
+        threads = require_number(record, "threads", context)
+        require_number(record, "secs", context)
+        speedup = require_number(record, "speedup_vs_1t", context)
+        print(f"  {threads:.0f}-thread parallel sweep: "
+              f"{speedup:.2f}x vs 1 thread")
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_sweep.json"
+    try:
+        check(path)
+    except CheckFailure as e:
+        print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
