@@ -1,0 +1,44 @@
+//! Bench E15 — the work-stealing tile scheduler on a skewed split
+//! distribution: the shared-distance sweep engine over `Folds::skewed`
+//! CV splits (descending fold weights, so the static contiguous
+//! partition stacks the expensive splits onto one worker), measured
+//! static vs stealing at 1/2/4 threads. Bit-parity with the sequential
+//! sweep is asserted in-process for every point before it is reported.
+//!
+//! Writes `BENCH_steal.json` at the repo root (uploaded by CI alongside
+//! the other BENCH jsons). Regenerate with:
+//!
+//! ```bash
+//! cargo bench --bench bench_steal
+//! # or, with geometry/curve control:
+//! cargo run --release -- steal --dataset-n 2000 \
+//!     --fold-weights 8,7,6,5,4,3,2,1,1,1,1,1 --curve 1,2,4 \
+//!     --out-json ../BENCH_steal.json
+//! ```
+//!
+//! This bench *measures and reports*; the acceptance gate — stealing
+//! ≥ 1.2× over static at 4 threads on the skewed scenario — is enforced
+//! in exactly one place, `scripts/check_bench_steal.py`, run by the CI
+//! bench job against the JSON this writes, so a low-core local machine
+//! can still run the bench without tripping an assert CI alone owns.
+
+use std::path::PathBuf;
+
+use locality_ml::cli::commands::cmd_steal;
+
+fn main() -> anyhow::Result<()> {
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../BENCH_steal.json");
+    cmd_steal(
+        2000,
+        &[8, 7, 6, 5, 4, 3, 2, 1, 1, 1, 1, 1],
+        &[1, 3, 5, 9, 15],
+        &[0.5, 1.0, 2.0, 4.0],
+        &[1, 2, 4],
+        7,
+        Some(out.as_path()),
+    )?;
+    println!("\n(gate lives in scripts/check_bench_steal.py — CI fails \
+              if stealing is not >= 1.2x over static at 4 threads)");
+    Ok(())
+}

@@ -458,6 +458,8 @@ pub fn cmd_parallel(sizes: &[usize], curve: &[usize],
 
     anyhow::ensure!(curve.first() == Some(&1),
         "the thread curve must start at 1 (the scaling baseline)");
+    let sched = crate::kernels::parallel::default_schedule();
+    eprintln!("# parallel: schedule={}", sched.name());
     let mut table = Table::new(
         "Parallel macro-tile layer — 1-vs-N thread scaling \
          (per-worker tiles from the shared-L3 budget)",
@@ -476,7 +478,8 @@ pub fn cmd_parallel(sizes: &[usize], curve: &[usize],
         for &th in curve {
             let tiles = TileConfig::westmere_workers(th);
             let secs = time_best(reps, || {
-                matmul_tiled_par(&a, &b, &mut c, n, n, n, &tiles, th)
+                matmul_tiled_par(&a, &b, &mut c, n, n, n, &tiles, th,
+                                 sched)
             });
             if th == 1 {
                 base = secs;
@@ -495,7 +498,7 @@ pub fn cmd_parallel(sizes: &[usize], curve: &[usize],
             let tiles = TileConfig::westmere_workers(th);
             let secs = time_best(reps, || {
                 pairwise_sq_dists_tiled_par(&train, &q, d, &mut out,
-                                            &tiles, th)
+                                            &tiles, th, sched)
             });
             if th == 1 {
                 base = secs;
@@ -518,7 +521,7 @@ pub fn cmd_parallel(sizes: &[usize], curve: &[usize],
             let secs = time_best(reps, || {
                 crate::bench::black_box(coupled_step_par(
                     &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &tiles,
-                    th));
+                    th, sched));
             });
             if th == 1 {
                 base = secs;
@@ -583,6 +586,13 @@ pub fn cmd_sweep(
         "the thread curve must start at 1 (the scaling baseline)");
     anyhow::ensure!(!ks.is_empty() && !bandwidth_mults.is_empty(),
         "need at least one k and one bandwidth candidate");
+    anyhow::ensure!(ks.iter().all(|&k| k >= 1),
+        "--ks: k = 0 is not a valid k-NN candidate (no neighbours can \
+         vote); drop it from the sweep");
+    anyhow::ensure!(folds_k >= 2 && folds_k <= n,
+        "--folds must satisfy 2 <= folds <= dataset-n \
+         (folds={folds_k}, dataset-n={n})");
+    let sched = crate::kernels::parallel::default_schedule();
     let ds = chembl_like(n, seed);
     let folds = Folds::split(ds.n, folds_k, seed ^ 0x5EED);
     let h0 = silverman_bandwidth(&ds);
@@ -618,7 +628,8 @@ pub fn cmd_sweep(
     for &th in curve {
         let mut par = None;
         let secs = time_best(reps, || {
-            par = Some(sweep_shared_par(&ds, &folds, ks, &bandwidths, th));
+            par = Some(sweep_shared_par(&ds, &folds, ks, &bandwidths, th,
+                                        sched));
         });
         let (pk, pb) = par.unwrap();
         anyhow::ensure!(pk == sk && pb == sb,
@@ -678,6 +689,113 @@ pub fn cmd_sweep(
         std::fs::write(path, json)
             .with_context(|| format!("writing {}", path.display()))?;
         eprintln!("# sweep engine curve -> {}", path.display());
+    }
+    Ok(table)
+}
+
+/// E15 — the work-stealing tile scheduler on a **skewed split
+/// distribution**: the shared-distance sweep engine run over
+/// `Folds::skewed` CV splits (fold sizes proportional to
+/// `fold_weights`, descending by default, so the static contiguous
+/// partition stacks the expensive splits onto one worker), measured
+/// static vs stealing at each thread count. Bit-parity with the
+/// sequential sweep is asserted for every (threads, schedule) point
+/// before anything is reported. Optionally writes `BENCH_steal.json`;
+/// CI gates stealing ≥ 1.2× over static at 4 threads via
+/// `scripts/check_bench_steal.py`.
+#[allow(clippy::too_many_arguments)]
+pub fn cmd_steal(
+    n: usize,
+    fold_weights: &[usize],
+    ks: &[usize],
+    bandwidth_mults: &[f32],
+    curve: &[usize],
+    seed: u64,
+    out_json: Option<&Path>,
+) -> Result<Table> {
+    use crate::coordinator::{
+        silverman_bandwidth, sweep_shared, sweep_shared_par,
+    };
+    use crate::kernels::Schedule;
+
+    anyhow::ensure!(!curve.is_empty(), "need at least one thread count");
+    anyhow::ensure!(fold_weights.len() >= 2,
+        "need at least two fold weights");
+    anyhow::ensure!(n >= fold_weights.len(),
+        "--dataset-n {n} is smaller than the fold count {} (each fold \
+         needs at least one point)", fold_weights.len());
+    anyhow::ensure!(!ks.is_empty() && !bandwidth_mults.is_empty(),
+        "need at least one k and one bandwidth candidate");
+    anyhow::ensure!(ks.iter().all(|&k| k >= 1),
+        "--ks: k = 0 is not a valid k-NN candidate (no neighbours can \
+         vote); drop it from the sweep");
+    let ds = chembl_like(n, seed);
+    let folds = Folds::skewed(ds.n, fold_weights, seed ^ 0x57EA);
+    let sizes: Vec<usize> =
+        folds.folds.iter().map(|f| f.len()).collect();
+    let h0 = silverman_bandwidth(&ds);
+    let bandwidths: Vec<f32> =
+        bandwidth_mults.iter().map(|m| m * h0).collect();
+    eprintln!("# steal: n={n} d={} fold sizes={sizes:?} ks={ks:?} \
+               h0={h0:.3}", ds.d);
+
+    let reps = 2;
+    let seq = sweep_shared(&ds, &folds, ks, &bandwidths);
+
+    // (threads, static_s, stealing_s, speedup)
+    let mut records: Vec<(usize, f64, f64, f64)> = Vec::new();
+    for &th in curve {
+        let timed = |sched: Schedule| -> Result<f64> {
+            let mut out = None;
+            let secs = time_best(reps, || {
+                out = Some(sweep_shared_par(&ds, &folds, ks, &bandwidths,
+                                            th, sched));
+            });
+            anyhow::ensure!(out.unwrap() == seq,
+                "{} sweep diverged from the sequential shared sweep at \
+                 {th} threads", sched.name());
+            Ok(secs)
+        };
+        let static_s = timed(Schedule::Static)?;
+        let stealing_s = timed(Schedule::Stealing)?;
+        records.push((th, static_s, stealing_s, static_s / stealing_s));
+    }
+
+    let mut table = Table::new(
+        "Work-stealing scheduler — static vs stealing on skewed CV \
+         splits (bit-identical results)",
+        &["threads", "static (s)", "stealing (s)", "steal speedup"]);
+    for (th, st, sl, sp) in &records {
+        table.row(&[th.to_string(), format!("{st:.6}"),
+                    format!("{sl:.6}"), format!("{sp:.2}x")]);
+    }
+    println!("{}", table.to_markdown());
+
+    if let Some(path) = out_json {
+        let mut json = String::from("{\n");
+        json.push_str("  \"schema\": \"locality-ml/bench-steal/v1\",\n");
+        json.push_str(&format!(
+            "  \"dataset\": {{\"n\": {}, \"d\": {}, \"seed\": {seed}}},\n",
+            ds.n, ds.d));
+        let sizes_str: Vec<String> =
+            sizes.iter().map(|s| s.to_string()).collect();
+        json.push_str(&format!("  \"fold_sizes\": [{}],\n",
+                               sizes_str.join(", ")));
+        json.push_str(&format!(
+            "  \"candidates\": {{\"ks\": {}, \"bandwidths\": {}}},\n",
+            ks.len(), bandwidths.len()));
+        json.push_str("  \"results\": [\n");
+        for (i, (th, st, sl, sp)) in records.iter().enumerate() {
+            let comma = if i + 1 < records.len() { "," } else { "" };
+            json.push_str(&format!(
+                "    {{\"threads\": {th}, \"static_s\": {st:.6}, \
+                 \"stealing_s\": {sl:.6}, \"speedup\": {sp:.3}}}\
+                 {comma}\n"));
+        }
+        json.push_str("  ]\n}\n");
+        std::fs::write(path, json)
+            .with_context(|| format!("writing {}", path.display()))?;
+        eprintln!("# steal scheduler curve -> {}", path.display());
     }
     Ok(table)
 }

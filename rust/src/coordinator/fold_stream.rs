@@ -9,7 +9,7 @@
 //! replays the naive loop nest (each learner re-reads its k−1 folds).
 
 use crate::data::{Dataset, Folds};
-use crate::util::pool::Pool;
+use crate::kernels::parallel::{run_jobs, Schedule};
 use crate::util::Rng;
 
 /// Traffic accounting for one cross-validation epoch.
@@ -68,8 +68,12 @@ impl<'a> FoldStream<'a> {
     /// `states` holds one mutable consumer state per learner instance
     /// (disjoint `&mut`s handed to the jobs, so no synchronisation);
     /// `consume(state, learner, batch)` is the per-learner consumer.
-    /// Per-learner delivery order is identical to the sequential shared
-    /// pass at ANY thread count — folds ascend sequentially and each
+    /// `schedule` picks how consumer jobs map onto workers: static
+    /// contiguous chunks, or work stealing — a learner whose consumer
+    /// is cheap frees its worker to claim the next learner instead of
+    /// idling behind a skewed static grouping. Per-learner delivery
+    /// order is identical to the sequential shared pass at ANY thread
+    /// count under EITHER schedule — folds ascend sequentially and each
     /// learner job walks the fold's chunk list in order — so the §1
     /// validity criterion holds by construction (and is property-tested
     /// against `shared_pass`). `threads <= 1` runs the jobs inline.
@@ -78,6 +82,7 @@ impl<'a> FoldStream<'a> {
         batch: usize,
         seed: u64,
         threads: usize,
+        schedule: Schedule,
         states: &mut [S],
         consume: impl Fn(&mut S, usize, &[usize]) + Sync,
     ) -> PassStats {
@@ -105,7 +110,7 @@ impl<'a> FoldStream<'a> {
                     }) as Box<dyn FnOnce() + Send + '_>
                 })
                 .collect();
-            Pool::run_parallel(threads, jobs);
+            run_jobs(threads, schedule, jobs);
         }
         stats
     }
@@ -230,16 +235,23 @@ mod tests {
                 want.entry(l).or_default().extend_from_slice(b);
             });
             for threads in [1usize, 2, 4, 7] {
-                let mut streams: Vec<Vec<usize>> = vec![Vec::new(); k];
-                let stats = fs.shared_pass_par(
-                    batch, seed, threads, &mut streams,
-                    |s: &mut Vec<usize>, _l, b| s.extend_from_slice(b));
-                prop_assert!(stats == want_stats,
-                    "pass stats diverged at {threads} threads");
-                for (l, got) in streams.iter().enumerate() {
-                    prop_assert!(want[&l] == *got,
-                        "learner {l} stream diverged at {threads} \
-                         threads (k={k}, n={n})");
+                for sched in [Schedule::Static, Schedule::Stealing,
+                              Schedule::Auto] {
+                    let mut streams: Vec<Vec<usize>> =
+                        vec![Vec::new(); k];
+                    let stats = fs.shared_pass_par(
+                        batch, seed, threads, sched, &mut streams,
+                        |s: &mut Vec<usize>, _l, b| {
+                            s.extend_from_slice(b)
+                        });
+                    prop_assert!(stats == want_stats,
+                        "pass stats diverged at {threads} threads \
+                         under {sched:?}");
+                    for (l, got) in streams.iter().enumerate() {
+                        prop_assert!(want[&l] == *got,
+                            "learner {l} stream diverged at {threads} \
+                             threads under {sched:?} (k={k}, n={n})");
+                    }
                 }
             }
             Ok(())

@@ -19,14 +19,19 @@
 //! distance kernel ([`pairwise_sq_dists_gather_par`]) instead of a
 //! per-pair scalar loop, and [`sweep_shared_par`] shards the candidate
 //! sweep across CV splits on the scoped worker pool: one job per split,
-//! results merged in split order. Per-split results are independent and
-//! the merge is u64/f64 arithmetic in a fixed order, so the parallel
-//! sweep is **bit-identical to the sequential [`sweep_shared`] at any
-//! thread count** — property-tested below. [`sweep_shared_auto`] is the
-//! production entry: it resolves the session thread count (`--threads` →
-//! `LOCALITY_ML_THREADS` → cores) and gates the fan-out on the total
-//! distance work via `effective_threads`, so small sweeps stay on the
-//! sequential path.
+//! results merged in split order. Since PR 4 the split jobs can also be
+//! **work-stolen** ([`Schedule::Stealing`]): workers claim splits from
+//! a shared cursor, so skewed/ragged split distributions no longer
+//! serialise onto the worker whose static contiguous range held the big
+//! folds. Per-split results are independent and the merge is u64/f64
+//! arithmetic in a fixed split order, so the parallel sweep is
+//! **bit-identical to the sequential [`sweep_shared`] at any thread
+//! count under either schedule** — property-tested below.
+//! [`sweep_shared_auto`] is the production entry: it resolves the
+//! session thread count (`--threads` → `LOCALITY_ML_THREADS` → cores)
+//! and schedule (`--schedule` → `LOCALITY_ML_SCHEDULE` → auto), and
+//! gates the fan-out on the total distance work via
+//! `effective_threads`, so small sweeps stay on the sequential path.
 //!
 //! # Distance-eval accounting
 //!
@@ -41,10 +46,10 @@
 
 use crate::data::{Dataset, Folds};
 use crate::kernels::parallel::{
-    default_threads, effective_threads, pairwise_sq_dists_gather_par,
+    default_schedule, default_threads, effective_threads,
+    pairwise_sq_dists_gather_par, run_jobs, Schedule,
 };
 use crate::kernels::TileConfig;
-use crate::util::pool::Pool;
 
 /// Smallest PRW bandwidth the vote will use. Silverman's rule returns
 /// `h = 0` for constant-feature datasets (σ = 0), which would make the
@@ -87,19 +92,21 @@ struct SplitDistances {
 /// (bit-identical to the scalar `sq_dist` loop it replaced — the tiled
 /// and naive distance paths share per-pair arithmetic) and sort each
 /// query's neighbour list. Returns the split structure and the number
-/// of distance evaluations it cost.
+/// of distance evaluations it cost. The kernel runs sequentially by
+/// construction (threads = 1): parallelism lives one level up, in the
+/// split fan-out, which already owns the cores.
 fn split_distances(
     ds: &Dataset,
     folds: &Folds,
     test_fold: usize,
     tiles: &TileConfig,
-    threads: usize,
 ) -> (SplitDistances, u64) {
     let train_idx = folds.train_indices(test_fold);
     let test_idx = folds.test_indices(test_fold);
     let n = train_idx.len();
     let dists = pairwise_sq_dists_gather_par(
-        &ds.features, ds.d, &train_idx, test_idx, tiles, threads);
+        &ds.features, ds.d, &train_idx, test_idx, tiles, 1,
+        Schedule::Static);
     let mut neighbours = Vec::with_capacity(test_idx.len());
     let mut truth = Vec::with_capacity(test_idx.len());
     for (q, &qi) in test_idx.iter().enumerate() {
@@ -117,8 +124,14 @@ fn split_distances(
 }
 
 fn knn_vote(sorted: &[(f32, i32)], k: usize, classes: usize) -> i32 {
+    // k = 0 degenerates to the majority class of the split's training
+    // labels (every neighbour votes), matching the k = 0 guard in
+    // `learners::instance`; the sweep entry points reject k = 0
+    // candidates at the CLI edge, so this is belt-and-braces for
+    // library callers.
+    let take = if k == 0 { sorted.len() } else { k };
     let mut votes = vec![0usize; classes];
-    for &(_, label) in sorted.iter().take(k) {
+    for &(_, label) in sorted.iter().take(take) {
         votes[label as usize] += 1;
     }
     votes.iter().enumerate()
@@ -159,10 +172,9 @@ fn eval_split(
     ks: &[usize],
     bandwidths: &[f32],
     tiles: &TileConfig,
-    threads: usize,
 ) -> SplitCounts {
     let (split, distance_evals) =
-        split_distances(ds, folds, test_fold, tiles, threads);
+        split_distances(ds, folds, test_fold, tiles);
     let mut k_correct = vec![0u64; ks.len()];
     let mut b_correct = vec![0u64; bandwidths.len()];
     let mut total = 0u64;
@@ -233,24 +245,30 @@ pub fn sweep_shared(
     let tiles = TileConfig::westmere();
     let parts: Vec<SplitCounts> = (0..folds.k())
         .map(|test_fold| {
-            eval_split(ds, folds, test_fold, ks, bandwidths, &tiles, 1)
+            eval_split(ds, folds, test_fold, ks, bandwidths, &tiles)
         })
         .collect();
     merge_splits(&parts, ks, bandwidths)
 }
 
 /// The parallel shared-distance sweep engine: one job per CV split,
-/// fanned out over the scoped worker pool, partials merged in split
-/// order. Each job runs the same `eval_split` as [`sweep_shared`] (its
-/// distance kernel stays sequential — the split fan-out already owns
-/// the cores), so the result is bit-identical to the sequential shared
-/// sweep at ANY thread count; `threads = 1` runs the jobs inline.
+/// distributed over the scoped worker pool — contiguously under
+/// [`Schedule::Static`], or claimed split-by-split from the shared
+/// cursor under stealing, so skewed/ragged splits no longer serialise
+/// onto the worker whose contiguous range held the big folds. Partials
+/// come back in **split order** under both schedules and the merge is
+/// pure u64 arithmetic, so the result is bit-identical to the
+/// sequential [`sweep_shared`] at ANY thread count under EITHER
+/// schedule; `threads = 1` runs the jobs inline. Each job runs the same
+/// `eval_split` as [`sweep_shared`] (its distance kernel stays
+/// sequential — the split fan-out already owns the cores).
 pub fn sweep_shared_par(
     ds: &Dataset,
     folds: &Folds,
     ks: &[usize],
     bandwidths: &[f32],
     threads: usize,
+    schedule: Schedule,
 ) -> (SweepResult<usize>, SweepResult<f32>) {
     let tiles = TileConfig::westmere_workers(threads.max(1));
     let tiles_ref = &tiles;
@@ -259,19 +277,20 @@ pub fn sweep_shared_par(
         .map(|test_fold| {
             Box::new(move || {
                 eval_split(ds, folds, test_fold, ks, bandwidths,
-                           tiles_ref, 1)
+                           tiles_ref)
             }) as Box<dyn FnOnce() -> SplitCounts + Send + '_>
         })
         .collect();
-    let parts = Pool::run_parallel(threads, jobs);
+    let parts = run_jobs(threads, schedule, jobs);
     merge_splits(&parts, ks, bandwidths)
 }
 
 /// Production entry for the sweep engine: shards across CV splits with
 /// the session thread count (`--threads` → `LOCALITY_ML_THREADS` →
-/// available cores), gated by `effective_threads` on the sweep's total
-/// distance work (multiply-adds) so small sweeps stay on the exact
-/// sequential path with no spawns.
+/// available cores) and session schedule (`--schedule` →
+/// `LOCALITY_ML_SCHEDULE` → auto), gated by `effective_threads` on the
+/// sweep's total distance work (multiply-adds) so small sweeps stay on
+/// the exact sequential path with no spawns.
 pub fn sweep_shared_auto(
     ds: &Dataset,
     folds: &Folds,
@@ -285,7 +304,8 @@ pub fn sweep_shared_auto(
         })
         .sum();
     let threads = effective_threads(default_threads(), work);
-    sweep_shared_par(ds, folds, ks, bandwidths, threads)
+    sweep_shared_par(ds, folds, ks, bandwidths, threads,
+                     default_schedule())
 }
 
 /// The naive nest the paper criticises: every candidate recomputes the
@@ -306,7 +326,7 @@ pub fn sweep_naive(
         let (mut correct, mut total) = (0u64, 0u64);
         for test_fold in 0..folds.k() {
             let (split, evals) =
-                split_distances(ds, folds, test_fold, &tiles, 1);
+                split_distances(ds, folds, test_fold, &tiles);
             k_evals += evals;
             for (sorted, &truth) in split.neighbours.iter()
                 .zip(&split.truth) {
@@ -324,7 +344,7 @@ pub fn sweep_naive(
         let (mut correct, mut total) = (0u64, 0u64);
         for test_fold in 0..folds.k() {
             let (split, evals) =
-                split_distances(ds, folds, test_fold, &tiles, 1);
+                split_distances(ds, folds, test_fold, &tiles);
             b_evals += evals;
             for (sorted, &truth) in split.neighbours.iter()
                 .zip(&split.truth) {
@@ -428,12 +448,17 @@ mod tests {
         let hs = [0.5f32, 2.0, 8.0];
         let (sk, sb) = sweep_shared(&ds, &folds, &ks, &hs);
         for threads in [1usize, 2, 4, 7] {
-            let (pk, pb) =
-                sweep_shared_par(&ds, &folds, &ks, &hs, threads);
-            assert_eq!(pk, sk,
-                "k sweep diverged at {threads} threads");
-            assert_eq!(pb, sb,
-                "bandwidth sweep diverged at {threads} threads");
+            for sched in [Schedule::Static, Schedule::Stealing,
+                          Schedule::Auto] {
+                let (pk, pb) = sweep_shared_par(&ds, &folds, &ks, &hs,
+                                                threads, sched);
+                assert_eq!(pk, sk,
+                    "k sweep diverged at {threads} threads under \
+                     {sched:?}");
+                assert_eq!(pb, sb,
+                    "bandwidth sweep diverged at {threads} threads \
+                     under {sched:?}");
+            }
         }
         let (ak, ab) = sweep_shared_auto(&ds, &folds, &ks, &hs);
         assert_eq!((ak, ab), (sk, sb), "auto sweep diverged");
@@ -442,8 +467,8 @@ mod tests {
     #[test]
     fn parallel_sweep_matches_across_random_geometries() {
         // The acceptance property across fold counts, shapes, candidate
-        // sets and thread counts: merging per-split partials in split
-        // order must reproduce the sequential sweep exactly.
+        // sets, thread counts and schedules: merging per-split partials
+        // in split order must reproduce the sequential sweep exactly.
         check("sweep-par-bitident", 8, |g| {
             let k = g.usize_in(2, 6);
             let n = k * g.usize_in(3, 12);
@@ -457,14 +482,65 @@ mod tests {
             let hs = [g.usize_in(1, 8) as f32, 8.0];
             let want = sweep_shared(&ds, &folds, &ks, &hs);
             for threads in [2usize, 3, 5] {
-                let got =
-                    sweep_shared_par(&ds, &folds, &ks, &hs, threads);
-                prop_assert!(got == want,
-                    "parallel sweep diverged (k={k}, n={n}, \
-                     threads={threads})");
+                for sched in [Schedule::Static, Schedule::Stealing] {
+                    let got = sweep_shared_par(&ds, &folds, &ks, &hs,
+                                               threads, sched);
+                    prop_assert!(got == want,
+                        "parallel sweep diverged (k={k}, n={n}, \
+                         threads={threads}, {sched:?})");
+                }
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn stealing_sweep_is_bit_identical_on_skewed_splits() {
+        // The scenario the scheduler exists for: deliberately skewed
+        // ragged CV splits (one dominant fold, a ragged tail, fewer
+        // splits than workers at 7 threads). Stealing must reproduce
+        // the sequential sweep bit for bit at every thread count.
+        check("sweep-steal-skewed", 6, |g| {
+            let n = g.usize_in(40, 120);
+            let d = g.usize_in(1, 6);
+            let ds = gaussian_mixture(MixtureSpec {
+                n, d, classes: 2, separation: 0.7, noise: 1.0,
+                seed: g.u64(),
+            });
+            let weights = [g.usize_in(5, 9), 2, 1, 1, 1, 1];
+            let folds = Folds::skewed(n, &weights, g.u64());
+            let ks = [1usize, 3];
+            let hs = [2.0f32, 8.0];
+            let want = sweep_shared(&ds, &folds, &ks, &hs);
+            for threads in [1usize, 2, 4, 7] {
+                for sched in [Schedule::Static, Schedule::Stealing] {
+                    let got = sweep_shared_par(&ds, &folds, &ks, &hs,
+                                               threads, sched);
+                    prop_assert!(got == want,
+                        "skewed sweep diverged (n={n}, \
+                         threads={threads}, {sched:?})");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn k0_candidate_degenerates_to_majority_not_a_panic() {
+        // Regression guard for the sweep side of the k = 0 satellite:
+        // a k = 0 candidate must not panic and must score exactly the
+        // majority-class baseline in every sweep variant (the CLI
+        // rejects k = 0 up front; the library stays total).
+        let (ds, folds) = small();
+        let ks = [0usize, 3];
+        let hs = [8.0f32];
+        let (sk, _) = sweep_shared(&ds, &folds, &ks, &hs);
+        let (nk, _) = sweep_naive(&ds, &folds, &ks, &hs);
+        assert_eq!(sk.accuracy, nk.accuracy);
+        let (pk, _) = sweep_shared_par(&ds, &folds, &ks, &hs, 4,
+                                       Schedule::Stealing);
+        assert_eq!(pk, sk);
+        assert!(sk.accuracy[0].is_finite());
     }
 
     #[test]
@@ -515,7 +591,8 @@ mod tests {
         let (nk, nb) = sweep_naive(&ds, &folds, &ks, &hs);
         assert_eq!(sk.accuracy, nk.accuracy);
         assert_eq!(sb.accuracy, nb.accuracy);
-        let (pk, pb) = sweep_shared_par(&ds, &folds, &ks, &hs, 4);
+        let (pk, pb) =
+            sweep_shared_par(&ds, &folds, &ks, &hs, 4, Schedule::Auto);
         assert_eq!((pk, pb), (sk, sb));
     }
 

@@ -54,9 +54,10 @@ impl MultiClassifier {
     ///
     /// The shared distance pass runs through the parallel macro-tile
     /// layer: query blocks fan out across the session's thread count
-    /// with per-worker tiles from the shared-L3 budget. Per-query
-    /// predictions are bit-identical to the single-thread scans at any
-    /// thread count (and `--threads 1` is the PR-1 path exactly).
+    /// under the session schedule, with per-worker tiles from the
+    /// shared-L3 budget. Per-query predictions are bit-identical to the
+    /// single-thread scans at any thread count and under either
+    /// schedule (and `--threads 1` is the PR-1 path exactly).
     pub fn predict(&self, rows: &[f32]) -> McsPredictions {
         let nb = self.nb.predict(rows);
         // distance work = queries × train rows × features; tiny streams
@@ -68,11 +69,16 @@ impl MultiClassifier {
         let tiles = TileConfig::westmere_workers(threads);
         let (knn, prw) =
             joint_scan_par(&self.train, rows, self.train.d, self.k,
-                           self.bandwidth, &tiles, threads);
+                           self.bandwidth, &tiles, threads,
+                           parallel::default_schedule());
         let vote = majority_vote(
             &[nb.clone(), knn.clone(), prw.clone()],
             self.train.n_classes,
-        );
+        )
+        // every member argmaxes over 0..n_classes, so out-of-range
+        // class ids — the error majority_vote now reports cleanly for
+        // external ensembles — cannot occur here
+        .expect("MCS members emit in-range class ids");
         McsPredictions { nb, knn, prw, vote }
     }
 }

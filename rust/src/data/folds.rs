@@ -26,6 +26,36 @@ impl Folds {
         Self { folds }
     }
 
+    /// Deliberately **skewed** k-fold split: fold sizes proportional to
+    /// `weights` (cumulative apportionment of `n` shuffled points, each
+    /// fold clamped non-empty). `split` keeps producing the balanced
+    /// partition; this constructor builds the ragged split
+    /// distributions the work-stealing scheduler exists for — and the
+    /// `bench_steal` skewed-shape scenario uses it directly.
+    pub fn skewed(n: usize, weights: &[usize], seed: u64) -> Self {
+        let k = weights.len();
+        assert!(k >= 2 && k <= n, "need 2 <= k <= n (k={k}, n={n})");
+        let total: usize = weights.iter().sum();
+        assert!(total > 0, "fold weights must not all be zero");
+        let mut order: Vec<usize> = (0..n).collect();
+        Rng::new(seed).shuffle(&mut order);
+        let mut folds = Vec::with_capacity(k);
+        let mut cum = 0usize;
+        let mut start = 0usize;
+        for (f, &w) in weights.iter().enumerate() {
+            cum += w;
+            // proportional boundary, clamped so this fold is non-empty
+            // and the remaining folds still get at least one point each
+            let end = (n * cum / total)
+                .max(start + 1)
+                .min(n - (k - 1 - f));
+            folds.push(order[start..end].to_vec());
+            start = end;
+        }
+        debug_assert_eq!(start, n);
+        Self { folds }
+    }
+
     pub fn k(&self) -> usize {
         self.folds.len()
     }
@@ -96,6 +126,41 @@ mod tests {
         let b = Folds::split(100, 5, 7);
         assert_eq!(a.folds, b.folds);
         assert_ne!(a.folds, Folds::split(100, 5, 8).folds);
+    }
+
+    #[test]
+    fn skewed_folds_partition_with_proportional_sizes() {
+        check("folds-skewed", 40, |g| {
+            let k = g.usize_in(2, 8);
+            let weights: Vec<usize> =
+                (0..k).map(|_| g.usize_in(0, 9)).collect();
+            if weights.iter().sum::<usize>() == 0 {
+                return Ok(()); // all-zero weights are rejected; skip
+            }
+            let n = g.usize_in(k, 300);
+            let folds = Folds::skewed(n, &weights, g.u64());
+            prop_assert!(folds.k() == k, "wrong fold count");
+            let mut all: Vec<usize> =
+                folds.folds.iter().flatten().copied().collect();
+            all.sort_unstable();
+            prop_assert!(all == (0..n).collect::<Vec<_>>(),
+                "not a partition: n={n} weights={weights:?}");
+            prop_assert!(folds.folds.iter().all(|f| !f.is_empty()),
+                "empty fold: n={n} weights={weights:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn skewed_folds_realise_the_requested_skew() {
+        // An 8:1:1:1:1 weighting over 120 points must give the first
+        // fold ~2/3 of the data — the shape the stealing bench relies
+        // on — and stay deterministic per seed.
+        let folds = Folds::skewed(120, &[8, 1, 1, 1, 1], 3);
+        assert_eq!(folds.folds[0].len(), 80);
+        assert!(folds.folds[1..].iter().all(|f| f.len() == 10));
+        assert_eq!(Folds::skewed(120, &[8, 1, 1, 1, 1], 3).folds,
+                   folds.folds);
     }
 
     #[test]

@@ -5,6 +5,8 @@
 //! *which* training points each learner instance touches; the coordinator
 //! decides *in what order* so the reuse the paper identifies is realised.
 
+use anyhow::{bail, Result};
+
 use crate::util::Rng;
 
 /// One bootstrap sample: `n` indices drawn with replacement from `[0, n)`.
@@ -81,11 +83,33 @@ pub fn boosting_sets(
 /// Majority vote across an ensemble's predictions (bagging / boosting /
 /// multiple-classifier systems, §3.2). Ties break toward the lower class id
 /// (deterministic).
-pub fn majority_vote(predictions: &[Vec<i32>], n_classes: usize) -> Vec<i32> {
-    assert!(!predictions.is_empty());
+///
+/// Member predictions are validated up front: a class id outside
+/// `0..n_classes` — a `-1` "no prediction" sentinel, or a member trained
+/// with a larger class count — used to index `counts` out of bounds and
+/// panic (or, for negative ids, wrap through `as usize` into a huge
+/// index); it now returns a clean error naming the offending member.
+pub fn majority_vote(predictions: &[Vec<i32>], n_classes: usize)
+    -> Result<Vec<i32>> {
+    if predictions.is_empty() {
+        bail!("majority vote over an empty ensemble");
+    }
+    if n_classes == 0 {
+        bail!("majority vote needs at least one class");
+    }
     let n = predictions[0].len();
-    assert!(predictions.iter().all(|p| p.len() == n));
-    (0..n)
+    for (m, p) in predictions.iter().enumerate() {
+        if p.len() != n {
+            bail!("ensemble member {m} predicted {} points, expected {n}",
+                  p.len());
+        }
+        if let Some(&bad) =
+            p.iter().find(|&&c| c < 0 || c as usize >= n_classes) {
+            bail!("ensemble member {m} emitted class id {bad} outside \
+                   0..{n_classes}");
+        }
+    }
+    Ok((0..n)
         .map(|i| {
             let mut counts = vec![0usize; n_classes];
             for p in predictions {
@@ -98,7 +122,7 @@ pub fn majority_vote(predictions: &[Vec<i32>], n_classes: usize) -> Vec<i32> {
                 .unwrap()
                 .0 as i32
         })
-        .collect()
+        .collect())
 }
 
 #[cfg(test)]
@@ -172,12 +196,35 @@ mod tests {
             vec![0, 1, 1],
             vec![1, 1, 2],
         ];
-        assert_eq!(majority_vote(&preds, 3), vec![0, 1, 2]);
+        assert_eq!(majority_vote(&preds, 3).unwrap(), vec![0, 1, 2]);
     }
 
     #[test]
     fn majority_vote_three_way_split_breaks_low() {
         let preds = vec![vec![2], vec![1], vec![0]];
-        assert_eq!(majority_vote(&preds, 3), vec![0]);
+        assert_eq!(majority_vote(&preds, 3).unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn majority_vote_rejects_the_minus_one_sentinel() {
+        // Regression: a -1 "no prediction" sentinel wrapped through
+        // `as usize` into a ~2^64 index and panicked; it must be a
+        // clean error naming the member instead.
+        let preds = vec![vec![0, 1], vec![0, -1]];
+        let err = majority_vote(&preds, 2).unwrap_err().to_string();
+        assert!(err.contains("member 1") && err.contains("-1"),
+            "error must name member and sentinel, got: {err}");
+    }
+
+    #[test]
+    fn majority_vote_rejects_out_of_range_class_ids() {
+        // A member trained with a larger class count used to index
+        // `counts` out of bounds and panic.
+        let preds = vec![vec![0], vec![3]];
+        assert!(majority_vote(&preds, 3).is_err());
+        // mismatched lengths and empty ensembles are clean errors too
+        assert!(majority_vote(&[vec![0], vec![0, 1]], 2).is_err());
+        assert!(majority_vote(&[], 2).is_err());
+        assert!(majority_vote(&[vec![0]], 0).is_err());
     }
 }

@@ -38,7 +38,10 @@
 //! row blocks for the coupled step — with per-worker tile sizes from
 //! [`TileConfig::for_workers`] (private L1/L2, a 1/workers share of the
 //! shared L3). `threads = 1` short-circuits to the sequential kernels
-//! above, bit for bit.
+//! above, bit for bit. A [`Schedule`] selects static contiguous
+//! partitioning or dynamic work stealing per call; both produce the
+//! same bits (partials merge by tile index, never completion order), so
+//! the policy only moves wall-clock on skewed shapes.
 //!
 //! # Correctness contract
 //!
@@ -67,6 +70,6 @@ pub use matmul::{
 pub use parallel::{
     coupled_step_par, matmul_acc_tiled_par, matmul_bias_tiled_par,
     matmul_tiled_par, matmul_tn_acc_tiled_par,
-    pairwise_sq_dists_gather_par, pairwise_sq_dists_tiled_par,
+    pairwise_sq_dists_gather_par, pairwise_sq_dists_tiled_par, Schedule,
 };
 pub use tile::TileConfig;

@@ -23,27 +23,60 @@
 //! * **pairwise distances** — query tiles (`TileConfig::pair_tiles`);
 //!   each worker fills a disjoint block of whole output rows →
 //!   bit-identical at any thread count.
-//! * **coupled LR+SVM** — `coupled_rows()` row blocks of the design
-//!   matrix; workers produce raw `CoupledPartial` sums which are reduced
-//!   in worker-index order and finalised once. The reduction reassociates
-//!   the f32 gradient sums, so multi-thread results can differ from the
-//!   sequential kernel in the last bits (≤ 1e-4 vs the naive oracle,
-//!   property-tested) but are **bit-identical for a given partition**:
-//!   the partition is a pure function of `(batch, tile config, threads)`
-//!   and the reduce order is fixed, so every run at the same thread
-//!   count reproduces the same bits.
+//! * **coupled LR+SVM** — one raw [`CoupledPartial`] per
+//!   `coupled_rows()` macro-tile of the design matrix, reduced in
+//!   **tile-index order** and finalised once. Because the partials are
+//!   per macro-tile (never per worker range), the reduction is a pure
+//!   function of `(batch, tile config)`: the result is bit-identical at
+//!   every thread count and under both schedules. It reassociates the
+//!   f32 gradient sums relative to the single-pass sequential kernel,
+//!   so multi-tile batches differ from [`coupled_step_tiled`] in the
+//!   last bits (≤ 1e-4 vs the naive oracle, property-tested);
+//!   single-macro-tile batches short-circuit to the sequential kernel
+//!   and are exact.
 //!
-//! `partition_units` is the single source of truth for the scheme; a
-//! property test asserts it covers every macro-tile exactly once across
-//! ragged shapes (no gaps, no overlaps).
+//! # Scheduling policy (work stealing for skewed shapes)
 //!
-//! # Thread-count resolution
+//! [`Schedule`] selects how macro-tiles are assigned to workers:
 //!
-//! `threads = 1` short-circuits to the PR-1 sequential kernels —
-//! nothing is spawned and outputs are bit-identical by construction.
+//! * [`Schedule::Static`] — the PR-2 scheme: `partition_units` hands
+//!   each worker one contiguous range up front. Zero coordination, but
+//!   ragged tails, skewed CV splits and heterogeneous per-tile costs
+//!   serialise onto the slowest shard.
+//! * [`Schedule::Stealing`] — macro-tiles are grouped into fixed-size
+//!   chunks (`steal_chunk`: ~4 chunks per worker, so claiming stays
+//!   cheap while leaving slack to rebalance) and workers claim the next
+//!   unclaimed chunk from a shared atomic cursor
+//!   ([`Pool::run_stealing`]). Chunk boundaries are deterministic and
+//!   results are merged in chunk order, so **which worker computes a
+//!   tile never changes the output**: row-disjoint kernels are
+//!   bit-identical to static by row independence, and reductions are
+//!   bit-identical because partials are merged by tile index, not
+//!   completion order.
+//! * [`Schedule::Auto`] — stealing when there are more macro-tiles than
+//!   workers (slack to rebalance), static otherwise. Since both
+//!   schedules produce identical bits, `Auto` is purely a performance
+//!   choice.
+//!
+//! `partition_units` (static) and `chunk_ranges` (stealing) are the two
+//! sources of truth for the scheme; property tests assert each covers
+//! every macro-tile exactly once across ragged shapes (no gaps, no
+//! overlaps), and the parity suite asserts stealing == static ==
+//! sequential bit-for-bit at 1/2/4/7 threads over skewed shapes.
+//!
+//! # Thread-count and schedule resolution
+//!
+//! `threads = 1` spawns nothing: the row-disjoint kernels and scans
+//! short-circuit to the PR-1 sequential kernels bit-for-bit, and the
+//! coupled step runs its per-tile reduction inline — the same bits as
+//! every other thread count (but, for multi-tile batches, not the
+//! single-pass PR-1 kernel's bits; see the coupled bullet above).
 //! [`default_threads`] resolves the session's thread count:
 //! `--threads N` override (via [`set_threads`]) → `LOCALITY_ML_THREADS`
 //! env var (the CI matrix axis) → `std::thread::available_parallelism`.
+//! [`default_schedule`] mirrors it for the scheduling policy:
+//! `--schedule` override (via [`set_schedule`]) →
+//! `LOCALITY_ML_SCHEDULE` → [`Schedule::Auto`].
 //! Per-worker tile sizes come from [`TileConfig::for_workers`], which
 //! caps each worker's streamed block to its share of the shared L3 so
 //! concurrent working sets don't thrash each other.
@@ -67,6 +100,151 @@ static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 /// (`0` clears it).
 pub fn set_threads(threads: usize) {
     THREAD_OVERRIDE.store(threads, Ordering::Relaxed);
+}
+
+/// How macro-tile work is assigned to workers. Both schedules produce
+/// **identical output bits** (see the module docs); the choice only
+/// moves wall-clock on skewed shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// One contiguous macro-tile range per worker, fixed up front.
+    Static,
+    /// Workers claim fixed-size macro-tile chunks from a shared atomic
+    /// cursor; a worker that finishes early steals the next chunk.
+    Stealing,
+    /// Stealing when there are more macro-tiles than workers (slack to
+    /// rebalance), static otherwise.
+    Auto,
+}
+
+impl Schedule {
+    /// Parse a CLI/env spelling. Accepts `static`, `stealing` (or
+    /// `steal`), and `auto`, case-insensitively.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "static" => Some(Self::Static),
+            "stealing" | "steal" => Some(Self::Stealing),
+            "auto" => Some(Self::Auto),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling (the one `parse` round-trips).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Static => "static",
+            Self::Stealing => "stealing",
+            Self::Auto => "auto",
+        }
+    }
+}
+
+/// Session-wide `--schedule` override; 0 = unset, then 1/2/3 for
+/// static/stealing/auto (the encoding is private to this pair of fns).
+static SCHEDULE_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the `--schedule` CLI override for the rest of the process
+/// (`None` clears it).
+pub fn set_schedule(schedule: Option<Schedule>) {
+    let code = match schedule {
+        None => 0,
+        Some(Schedule::Static) => 1,
+        Some(Schedule::Stealing) => 2,
+        Some(Schedule::Auto) => 3,
+    };
+    SCHEDULE_OVERRIDE.store(code, Ordering::Relaxed);
+}
+
+/// Resolve the session scheduling policy: CLI override
+/// ([`set_schedule`]) → `LOCALITY_ML_SCHEDULE` (the CI matrix axis;
+/// unparsable values are ignored, mirroring the threads policy) →
+/// [`Schedule::Auto`].
+pub fn default_schedule() -> Schedule {
+    match SCHEDULE_OVERRIDE.load(Ordering::Relaxed) {
+        1 => return Schedule::Static,
+        2 => return Schedule::Stealing,
+        3 => return Schedule::Auto,
+        _ => {}
+    }
+    if let Ok(v) = std::env::var("LOCALITY_ML_SCHEDULE") {
+        if let Some(s) = Schedule::parse(&v) {
+            return s;
+        }
+    }
+    Schedule::Auto
+}
+
+/// Whether this call should run the stealing executor: explicit
+/// policies are taken verbatim; `Auto` steals only when there are more
+/// macro-tile units than workers (otherwise every worker already owns
+/// at most one unit and there is nothing to rebalance).
+pub(crate) fn use_stealing(
+    schedule: Schedule,
+    units: usize,
+    workers: usize,
+) -> bool {
+    match schedule {
+        Schedule::Static => false,
+        Schedule::Stealing => true,
+        Schedule::Auto => units > workers,
+    }
+}
+
+/// Macro-tile units per stolen chunk: ~4 chunks per worker bounds the
+/// atomic-cursor traffic while leaving enough slack to rebalance a
+/// skewed tail; never below one unit. A pure function of
+/// `(units, workers)`, so chunk boundaries — and therefore merge order
+/// — are deterministic.
+pub(crate) fn steal_chunk(units: usize, workers: usize) -> usize {
+    (units / (workers.max(1) * 4)).max(1)
+}
+
+/// Contiguous ranges of `chunk` units each (last one ragged) — the
+/// stealing counterpart of [`partition_units`]; exactly-once coverage
+/// is property-tested alongside it.
+pub(crate) fn chunk_ranges(units: usize, chunk: usize) -> Vec<Range<usize>> {
+    let chunk = chunk.max(1);
+    (0..units.div_ceil(chunk))
+        .map(|c| c * chunk..((c + 1) * chunk).min(units))
+        .collect()
+}
+
+/// The scheduling-policy core shared by every macro-tile fan-out:
+/// decide whether this call steals and build the matching deterministic
+/// partition — contiguous per-worker ranges for static,
+/// `steal_chunk`-sized ranges for stealing. Flattened in order, both
+/// partitions enumerate units `0..units` exactly once, which is what
+/// keeps outputs schedule-independent. Tweaks to the policy (the `Auto`
+/// rule, chunk sizing) belong here, not at the call sites.
+pub(crate) fn schedule_parts(
+    units: usize,
+    threads: usize,
+    schedule: Schedule,
+) -> (bool, Vec<Range<usize>>) {
+    let stealing = use_stealing(schedule, units, threads);
+    let parts = if stealing {
+        chunk_ranges(units, steal_chunk(units, threads))
+    } else {
+        partition_units(units, threads)
+    };
+    (stealing, parts)
+}
+
+/// Run boxed jobs under the scheduling policy when the jobs themselves
+/// are the macro units (one per CV split, one per learner consumer):
+/// stealing claims job indices from the shared cursor, static chunks
+/// them contiguously per worker. Results come back in job order either
+/// way, so callers' index-ordered merges see identical sequences.
+pub(crate) fn run_jobs<'env, T: Send>(
+    threads: usize,
+    schedule: Schedule,
+    jobs: Vec<Box<dyn FnOnce() -> T + Send + 'env>>,
+) -> Vec<T> {
+    if threads > 1 && use_stealing(schedule, jobs.len(), threads) {
+        Pool::run_stealing(threads, jobs)
+    } else {
+        Pool::run_parallel(threads, jobs)
+    }
 }
 
 /// Minimum kernel work (f32 multiply-adds) before fanning out pays for
@@ -146,21 +324,29 @@ pub(crate) fn shard_unit(macro_rows: usize, total: usize,
 /// kernel: `out` holds `total` rows of `row_width` f32s, partitioned on
 /// `unit`-row macro-tile boundaries across up to `threads` workers;
 /// each worker gets `work(lo, hi, block)` with its global row range and
-/// the matching disjoint `&mut` block. Returns `false` (touching
-/// nothing) when the partition degenerates to a single range — the
-/// caller then runs its sequential kernel, keeping `threads = 1`
-/// bit-identical to PR 1.
+/// the matching disjoint `&mut` block. Under [`Schedule::Static`] the
+/// blocks are one contiguous range per worker; under stealing they are
+/// [`steal_chunk`]-sized and claimed dynamically — per-row bits never
+/// depend on which call computes them, so both produce identical
+/// output. Returns `false` (touching nothing) when the partition
+/// degenerates to a single range — the caller then runs its sequential
+/// kernel, keeping `threads = 1` bit-identical to PR 1.
 fn fan_out_rows(
     out: &mut [f32],
     total: usize,
     row_width: usize,
     unit: usize,
     threads: usize,
+    schedule: Schedule,
     work: impl Fn(usize, usize, &mut [f32]) + Sync,
 ) -> bool {
     let unit = unit.max(1);
-    let parts = partition_units(total.div_ceil(unit), threads);
-    if threads <= 1 || parts.len() <= 1 {
+    let units = total.div_ceil(unit);
+    if threads <= 1 || units <= 1 {
+        return false;
+    }
+    let (stealing, parts) = schedule_parts(units, threads, schedule);
+    if parts.len() <= 1 {
         return false;
     }
     let work = &work;
@@ -178,7 +364,11 @@ fn fan_out_rows(
         jobs.push(Box::new(move || work(lo, hi, head)));
         row0 = hi;
     }
-    Pool::run_parallel(jobs.len(), jobs);
+    if stealing {
+        Pool::run_stealing(threads, jobs);
+    } else {
+        Pool::run_parallel(jobs.len(), jobs);
+    }
     true
 }
 
@@ -192,16 +382,18 @@ pub fn matmul_tiled_par(
     n: usize,
     t: &TileConfig,
     threads: usize,
+    schedule: Schedule,
 ) {
     assert_eq!(c.len(), m * n);
     c.fill(0.0);
-    matmul_acc_tiled_par(a, b, c, m, k, n, t, threads);
+    matmul_acc_tiled_par(a, b, c, m, k, n, t, threads, schedule);
 }
 
 /// Parallel `C += A·B`: `MC`-row macro-tile blocks of the output fan
 /// out across workers, each owning a disjoint `&mut` slice of `C`.
-/// Bit-identical to [`matmul_acc_tiled`] at any thread count (row
-/// results are independent; per-element accumulation order unchanged).
+/// Bit-identical to [`matmul_acc_tiled`] at any thread count and under
+/// either schedule (row results are independent; per-element
+/// accumulation order unchanged).
 pub fn matmul_acc_tiled_par(
     a: &[f32],
     b: &[f32],
@@ -211,13 +403,15 @@ pub fn matmul_acc_tiled_par(
     n: usize,
     t: &TileConfig,
     threads: usize,
+    schedule: Schedule,
 ) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
     let tiles = *t;
     let unit = shard_unit(t.mc, m, threads);
-    let ran = fan_out_rows(c, m, n, unit, threads, |lo, hi, block| {
+    let ran = fan_out_rows(c, m, n, unit, threads, schedule,
+                           |lo, hi, block| {
         matmul_acc_tiled(&a[lo * k..hi * k], b, block, hi - lo, k, n,
                          &tiles);
     });
@@ -237,20 +431,21 @@ pub fn matmul_bias_tiled_par(
     n: usize,
     t: &TileConfig,
     threads: usize,
+    schedule: Schedule,
 ) {
     assert_eq!(bias.len(), n);
     assert_eq!(c.len(), m * n);
     for row in c.chunks_exact_mut(n.max(1)) {
         row.copy_from_slice(bias);
     }
-    matmul_acc_tiled_par(a, b, c, m, k, n, t, threads);
+    matmul_acc_tiled_par(a, b, c, m, k, n, t, threads, schedule);
 }
 
 /// Parallel `C += Aᵀ·B` (`a` stored `[k×m]`): row ranges of the output
 /// fan out across workers via the row-range core. Per-element
 /// accumulation is `p`-ascending regardless of where the row split
 /// falls, so results match the sequential kernel bit for bit at any
-/// thread count.
+/// thread count and under either schedule.
 pub fn matmul_tn_acc_tiled_par(
     a: &[f32],
     b: &[f32],
@@ -260,13 +455,15 @@ pub fn matmul_tn_acc_tiled_par(
     n: usize,
     t: &TileConfig,
     threads: usize,
+    schedule: Schedule,
 ) {
     assert_eq!(a.len(), k * m);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
     let tiles = *t;
     let unit = shard_unit(t.mc, m, threads);
-    let ran = fan_out_rows(c, m, n, unit, threads, |lo, hi, block| {
+    let ran = fan_out_rows(c, m, n, unit, threads, schedule,
+                           |lo, hi, block| {
         matmul_tn_acc_rows(a, b, block, k, m, n, &tiles, lo, hi);
     });
     if !ran {
@@ -276,7 +473,8 @@ pub fn matmul_tn_acc_tiled_par(
 
 /// Parallel pairwise squared distances: query-tile blocks fan out, each
 /// worker filling a disjoint block of whole output rows. Bit-identical
-/// to [`pairwise_sq_dists_tiled`] at any thread count.
+/// to [`pairwise_sq_dists_tiled`] at any thread count and under either
+/// schedule.
 pub fn pairwise_sq_dists_tiled_par(
     train: &[f32],
     queries: &[f32],
@@ -284,6 +482,7 @@ pub fn pairwise_sq_dists_tiled_par(
     out: &mut [f32],
     t: &TileConfig,
     threads: usize,
+    schedule: Schedule,
 ) {
     assert!(d > 0, "feature dimension must be positive");
     assert_eq!(train.len() % d, 0);
@@ -294,7 +493,8 @@ pub fn pairwise_sq_dists_tiled_par(
     let (qt, _) = t.pair_tiles(d);
     let unit = shard_unit(qt, nq, threads);
     let tiles = *t;
-    let ran = fan_out_rows(out, nq, n, unit, threads, |lo, hi, block| {
+    let ran = fan_out_rows(out, nq, n, unit, threads, schedule,
+                           |lo, hi, block| {
         pairwise_sq_dists_tiled(train, &queries[lo * d..hi * d], d,
                                 block, &tiles);
     });
@@ -318,19 +518,24 @@ pub fn pairwise_sq_dists_gather_par(
     query_idx: &[usize],
     t: &TileConfig,
     threads: usize,
+    schedule: Schedule,
 ) -> Vec<f32> {
     let train = gather_rows(features, d, train_idx);
     let queries = gather_rows(features, d, query_idx);
     let mut out = vec![0.0f32; query_idx.len() * train_idx.len()];
-    pairwise_sq_dists_tiled_par(&train, &queries, d, &mut out, t, threads);
+    pairwise_sq_dists_tiled_par(&train, &queries, d, &mut out, t, threads,
+                                schedule);
     out
 }
 
-/// Parallel fused coupled LR+SVM step: `coupled_rows()`-aligned row
-/// blocks of the design matrix fan out, each worker accumulating a raw
-/// [`CoupledPartial`]; partials are reduced in worker-index order and
-/// finalised once over the full batch size. `threads = 1` is the PR-1
-/// sequential kernel bit-for-bit.
+/// Parallel fused coupled LR+SVM step: one raw [`CoupledPartial`] per
+/// `coupled_rows()` macro-tile of the design matrix, reduced in
+/// **tile-index order** and finalised once over the full batch size.
+/// The partial boundaries depend only on `(batch, tile config)` — never
+/// on the thread count or on which worker computed a tile — so the
+/// result is bit-identical at every thread count and under both
+/// schedules; a single-macro-tile batch short-circuits to (and is
+/// exactly) the sequential [`coupled_step_tiled`].
 pub fn coupled_step_par(
     w_lr: &[f32],
     w_svm: &[f32],
@@ -340,35 +545,56 @@ pub fn coupled_step_par(
     lam: f32,
     t: &TileConfig,
     threads: usize,
+    schedule: Schedule,
 ) -> ((Vec<f32>, f32), (Vec<f32>, f32)) {
     let d = w_lr.len();
     assert_eq!(w_svm.len(), d);
     let b = y.len();
     assert_eq!(x.len(), b * d);
     let unit = t.coupled_rows().max(1);
-    let parts = partition_units(b.div_ceil(unit), threads);
-    if threads <= 1 || parts.len() <= 1 {
+    let units = b.div_ceil(unit);
+    if units <= 1 {
         return coupled_step_tiled(w_lr, w_svm, x, y, lr, lam, t);
     }
     let tiles = *t;
-    let jobs: Vec<Box<dyn FnOnce() -> CoupledPartial + Send + '_>> = parts
-        .iter()
-        .map(|part| {
-            let lo = part.start * unit;
-            let hi = (part.end * unit).min(b);
-            let xb = &x[lo * d..hi * d];
-            let yb = &y[lo..hi];
-            Box::new(move || coupled_accumulate(w_lr, w_svm, xb, yb, &tiles))
-                as Box<dyn FnOnce() -> CoupledPartial + Send + '_>
-        })
-        .collect();
-    let partials = Pool::run_parallel(jobs.len(), jobs);
+    let accumulate_range = |range: Range<usize>| -> Vec<CoupledPartial> {
+        range
+            .map(|u| {
+                let lo = u * unit;
+                let hi = ((u + 1) * unit).min(b);
+                coupled_accumulate(w_lr, w_svm, &x[lo * d..hi * d],
+                                   &y[lo..hi], &tiles)
+            })
+            .collect()
+    };
+    let partials: Vec<CoupledPartial> = if threads <= 1 {
+        accumulate_range(0..units)
+    } else {
+        let (stealing, parts) = schedule_parts(units, threads, schedule);
+        let acc = &accumulate_range;
+        let jobs: Vec<Box<dyn FnOnce() -> Vec<CoupledPartial> + Send + '_>> =
+            parts
+                .iter()
+                .map(|part| {
+                    let part = part.clone();
+                    Box::new(move || acc(part))
+                        as Box<dyn FnOnce() -> Vec<CoupledPartial>
+                               + Send + '_>
+                })
+                .collect();
+        let nested = if stealing {
+            Pool::run_stealing(threads, jobs)
+        } else {
+            Pool::run_parallel(jobs.len(), jobs)
+        };
+        nested.into_iter().flatten().collect()
+    };
     let total = reduce_partials(partials, d);
     coupled_finalize(w_lr, w_svm, total, b, lr, lam)
 }
 
-/// Reduce per-block partials in worker-index order (the deterministic
-/// half of the coupled kernel's parallel contract).
+/// Reduce per-macro-tile partials in tile-index order (the
+/// deterministic half of the coupled kernel's parallel contract).
 pub(crate) fn reduce_partials(
     partials: Vec<CoupledPartial>,
     d: usize,
@@ -434,6 +660,66 @@ mod tests {
     }
 
     #[test]
+    fn chunk_ranges_cover_every_unit_exactly_once() {
+        // The stealing partition must satisfy the same exactly-once
+        // invariant as the static one, ragged last chunk included.
+        check("chunk-coverage", 120, |g| {
+            let units = g.usize_in(0, 500);
+            let chunk = g.usize_in(1, 40);
+            let parts = chunk_ranges(units, chunk);
+            let mut prev_end = 0;
+            for p in &parts {
+                prop_assert!(p.start == prev_end,
+                    "gap or overlap before {p:?} (prev end {prev_end})");
+                prop_assert!(p.end > p.start, "empty range {p:?}");
+                prop_assert!(p.end - p.start <= chunk,
+                    "oversized chunk {p:?} (chunk {chunk})");
+                prev_end = p.end;
+            }
+            prop_assert!(prev_end == units,
+                "tail units uncovered: {prev_end}/{units}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn schedule_parse_and_session_default() {
+        assert_eq!(Schedule::parse("static"), Some(Schedule::Static));
+        assert_eq!(Schedule::parse(" Stealing "),
+                   Some(Schedule::Stealing));
+        assert_eq!(Schedule::parse("steal"), Some(Schedule::Stealing));
+        assert_eq!(Schedule::parse("AUTO"), Some(Schedule::Auto));
+        assert_eq!(Schedule::parse("guided"), None);
+        for s in [Schedule::Static, Schedule::Stealing, Schedule::Auto] {
+            assert_eq!(Schedule::parse(s.name()), Some(s),
+                "name() must round-trip through parse()");
+        }
+        // No parallel test depends on the ambient default (kernels take
+        // the schedule verbatim), so briefly setting the override is
+        // safe; it is cleared before returning.
+        set_schedule(Some(Schedule::Stealing));
+        assert_eq!(default_schedule(), Schedule::Stealing);
+        set_schedule(None);
+        let ambient = default_schedule();
+        assert!(matches!(ambient, Schedule::Static | Schedule::Stealing
+                                  | Schedule::Auto));
+    }
+
+    #[test]
+    fn auto_steals_only_when_there_is_slack() {
+        assert!(use_stealing(Schedule::Stealing, 1, 8));
+        assert!(!use_stealing(Schedule::Static, 100, 2));
+        assert!(use_stealing(Schedule::Auto, 9, 8));
+        assert!(!use_stealing(Schedule::Auto, 8, 8),
+            "one unit per worker leaves nothing to rebalance");
+        assert!(!use_stealing(Schedule::Auto, 1, 4));
+        // chunk sizing: ~4 chunks per worker, never zero units
+        assert_eq!(steal_chunk(100, 4), 6);
+        assert_eq!(steal_chunk(3, 4), 1);
+        assert_eq!(steal_chunk(0, 4), 1);
+    }
+
+    #[test]
     fn macro_tile_row_ranges_tile_ragged_shapes_exactly() {
         // Unit ranges converted to row ranges (the way every par kernel
         // does it) must tile 0..m exactly, ragged last tile included.
@@ -455,8 +741,15 @@ mod tests {
         });
     }
 
+    const SCHEDULES: [Schedule; 3] =
+        [Schedule::Static, Schedule::Stealing, Schedule::Auto];
+
     #[test]
     fn parallel_matmul_is_bit_identical_to_the_sequential_kernel() {
+        // The acceptance property: stealing == static == sequential,
+        // bit for bit, at every tested thread count over ragged shapes
+        // (units < workers and single-macro-tile cases included by the
+        // random geometry).
         check("par-matmul", 25, |g| {
             let (m, k, n) =
                 (g.usize_in(1, 60), g.usize_in(1, 24), g.usize_in(1, 24));
@@ -465,11 +758,15 @@ mod tests {
             let t = rand_tiles(g);
             let mut want = vec![0.0f32; m * n];
             matmul_tiled(&a, &b, &mut want, m, k, n, &t);
-            for threads in [1usize, 2, 3, 8] {
-                let mut got = vec![7.0f32; m * n];
-                matmul_tiled_par(&a, &b, &mut got, m, k, n, &t, threads);
-                prop_assert!(got == want,
-                    "parallel matmul diverged at {threads} threads");
+            for threads in [1usize, 2, 4, 7] {
+                for sched in SCHEDULES {
+                    let mut got = vec![7.0f32; m * n];
+                    matmul_tiled_par(&a, &b, &mut got, m, k, n, &t,
+                                     threads, sched);
+                    prop_assert!(got == want,
+                        "parallel matmul diverged at {threads} threads \
+                         under {sched:?}");
+                }
             }
             Ok(())
         });
@@ -487,17 +784,25 @@ mod tests {
             let bias = g.f32_vec(n, 2.0);
             let mut want = vec![0.0f32; m * n];
             matmul_bias_tiled(&a, &b, &bias, &mut want, m, k, n, &t);
-            let mut got = vec![3.0f32; m * n];
-            matmul_bias_tiled_par(&a, &b, &bias, &mut got, m, k, n, &t, 3);
-            prop_assert!(got == want, "parallel bias matmul diverged");
+            for sched in SCHEDULES {
+                let mut got = vec![3.0f32; m * n];
+                matmul_bias_tiled_par(&a, &b, &bias, &mut got, m, k, n,
+                                      &t, 3, sched);
+                prop_assert!(got == want,
+                    "parallel bias matmul diverged under {sched:?}");
+            }
             // transpose-acc variant (a stored [k×m], accumulating)
             let a_t = g.f32_vec(k * m, 2.0);
             let init = g.f32_vec(m * n, 1.0);
             let mut want = init.clone();
             matmul_tn_acc_tiled(&a_t, &b, &mut want, k, m, n, &t);
-            let mut got = init;
-            matmul_tn_acc_tiled_par(&a_t, &b, &mut got, k, m, n, &t, 5);
-            prop_assert!(got == want, "parallel tn matmul diverged");
+            for sched in SCHEDULES {
+                let mut got = init.clone();
+                matmul_tn_acc_tiled_par(&a_t, &b, &mut got, k, m, n, &t,
+                                        5, sched);
+                prop_assert!(got == want,
+                    "parallel tn matmul diverged under {sched:?}");
+            }
             Ok(())
         });
     }
@@ -517,7 +822,8 @@ mod tests {
             partition_units(1024usize.div_ceil(shard_unit(512, 1024, 4)),
                             4).len(),
             4, "1024 queries at qt=512 must shard 4 ways");
-        // sub-macro-tile sharding stays bit-identical (m <= mc)
+        // sub-macro-tile sharding stays bit-identical (m <= mc) — under
+        // both schedules
         let mut g = Gen::new(99);
         let (m, k, n) = (64usize, 20, 20);
         let a = g.f32_vec(m * k, 2.0);
@@ -525,9 +831,11 @@ mod tests {
         let big = TileConfig { mc: 512, kc: 7, nc: 5, l1_f32: 4096 };
         let mut want = vec![0.0f32; m * n];
         matmul_tiled(&a, &b, &mut want, m, k, n, &big);
-        let mut got = vec![0.0f32; m * n];
-        matmul_tiled_par(&a, &b, &mut got, m, k, n, &big, 4);
-        assert_eq!(got, want);
+        for sched in SCHEDULES {
+            let mut got = vec![0.0f32; m * n];
+            matmul_tiled_par(&a, &b, &mut got, m, k, n, &big, 4, sched);
+            assert_eq!(got, want, "diverged under {sched:?}");
+        }
     }
 
     #[test]
@@ -543,7 +851,8 @@ mod tests {
             matmul_naive(&a, &b, &mut want, m, k, n);
             let mut got = vec![0.0f32; m * n];
             matmul_tiled_par(&a, &b, &mut got, m, k, n,
-                             &TileConfig::westmere_workers(4), 4);
+                             &TileConfig::westmere_workers(4), 4,
+                             Schedule::Stealing);
             for i in 0..want.len() {
                 prop_assert!((want[i] - got[i]).abs() <= 1e-4,
                     "c[{i}]: {} vs {}", want[i], got[i]);
@@ -569,11 +878,15 @@ mod tests {
             let mut want = vec![0.0f32; nq * n];
             pairwise_sq_dists_tiled(&train, &queries, d, &mut want, &t);
             for threads in [1usize, 2, 4, 7] {
-                let mut got = vec![-1.0f32; nq * n];
-                pairwise_sq_dists_tiled_par(&train, &queries, d, &mut got,
-                                            &t, threads);
-                prop_assert!(got == want,
-                    "parallel distances diverged at {threads} threads");
+                for sched in SCHEDULES {
+                    let mut got = vec![-1.0f32; nq * n];
+                    pairwise_sq_dists_tiled_par(&train, &queries, d,
+                                                &mut got, &t, threads,
+                                                sched);
+                    prop_assert!(got == want,
+                        "parallel distances diverged at {threads} \
+                         threads under {sched:?}");
+                }
             }
             // and the naive oracle agrees bit-for-bit too
             let mut naive = vec![0.0f32; nq * n];
@@ -604,7 +917,8 @@ mod tests {
             };
             for threads in [1usize, 3, 5] {
                 let got = pairwise_sq_dists_gather_par(
-                    &features, d, &train_idx, &query_idx, &t, threads);
+                    &features, d, &train_idx, &query_idx, &t, threads,
+                    Schedule::Stealing);
                 for (q, &qi) in query_idx.iter().enumerate() {
                     for (j, &ji) in train_idx.iter().enumerate() {
                         let want = sq_dist(
@@ -622,9 +936,9 @@ mod tests {
         });
     }
 
-    /// The deterministic reference for a given partition: the SAME
-    /// blocks, accumulated sequentially, reduced in the same order.
-    fn coupled_reference_for_partition(
+    /// The schedule-independent reference: per-macro-tile partials
+    /// accumulated inline, reduced in tile-index order.
+    fn coupled_tile_reference(
         w0: &[f32],
         w1: &[f32],
         x: &[f32],
@@ -632,20 +946,18 @@ mod tests {
         lr: f32,
         lam: f32,
         t: &TileConfig,
-        threads: usize,
     ) -> ((Vec<f32>, f32), (Vec<f32>, f32)) {
         let d = w0.len();
         let b = y.len();
         let unit = t.coupled_rows().max(1);
-        let parts = partition_units(b.div_ceil(unit), threads);
-        if threads <= 1 || parts.len() <= 1 {
+        let units = b.div_ceil(unit);
+        if units <= 1 {
             return coupled_step_tiled(w0, w1, x, y, lr, lam, t);
         }
-        let partials: Vec<CoupledPartial> = parts
-            .iter()
-            .map(|p| {
-                let lo = p.start * unit;
-                let hi = (p.end * unit).min(b);
+        let partials: Vec<CoupledPartial> = (0..units)
+            .map(|u| {
+                let lo = u * unit;
+                let hi = ((u + 1) * unit).min(b);
                 coupled_accumulate(w0, w1, &x[lo * d..hi * d],
                                    &y[lo..hi], t)
             })
@@ -654,11 +966,12 @@ mod tests {
     }
 
     #[test]
-    fn parallel_coupled_reduction_is_deterministic_per_partition() {
-        // Threaded execution must introduce no nondeterminism: at every
-        // thread count the result equals the sequential simulation of
-        // the same partition, bit for bit — and threads = 1 is the PR-1
-        // kernel itself.
+    fn parallel_coupled_is_invariant_across_threads_and_schedules() {
+        // The work-stealing acceptance property for the reduction
+        // kernel: partials are merged by tile index, never by
+        // completion order, so every (threads, schedule) combination —
+        // the sequential threads=1 engine included — produces the same
+        // bits as the tile-order reference.
         check("par-coupled", 12, |g| {
             let d = g.usize_in(1, 40);
             let b = g.usize_in(1, 200);
@@ -675,31 +988,55 @@ mod tests {
                 nc: 3,
                 l1_f32: g.usize_in(8, 96),
             };
-            for threads in [1usize, 2, 4] {
-                let got = coupled_step_par(
-                    &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t,
-                    threads);
-                let want = coupled_reference_for_partition(
-                    &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t,
-                    threads);
-                prop_assert!(got == want,
-                    "coupled reduction not deterministic at {threads} \
-                     threads");
-            }
-            let seq = coupled_step_tiled(
+            let want = coupled_tile_reference(
                 &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t);
-            let par1 = coupled_step_par(
-                &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t, 1);
-            prop_assert!(par1 == seq,
-                "threads=1 must be the sequential kernel bit-for-bit");
+            for threads in [1usize, 2, 4, 7] {
+                for sched in SCHEDULES {
+                    let got = coupled_step_par(
+                        &w0, &w1, &x, &y, linear::LR, linear::LAMBDA,
+                        &t, threads, sched);
+                    prop_assert!(got == want,
+                        "coupled step diverged at {threads} threads \
+                         under {sched:?}");
+                }
+            }
             Ok(())
         });
     }
 
     #[test]
+    fn single_macro_tile_coupled_batch_is_the_sequential_kernel() {
+        // A batch that fits one coupled_rows() macro-tile must
+        // short-circuit to coupled_step_tiled bit-for-bit at every
+        // thread count (the degenerate units <= 1 case).
+        let mut g = Gen::new(41);
+        let d = 24;
+        let t = TileConfig::westmere();
+        let b = t.coupled_rows().min(40); // one macro-tile by definition
+        let w0 = g.f32_vec(d, 1.0);
+        let w1 = g.f32_vec(d, 1.0);
+        let x = g.f32_vec(b * d, 2.0);
+        let y: Vec<f32> =
+            (0..b).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+        let seq = coupled_step_tiled(&w0, &w1, &x, &y, linear::LR,
+                                     linear::LAMBDA, &t);
+        for threads in [1usize, 4, 7] {
+            for sched in SCHEDULES {
+                let got = coupled_step_par(&w0, &w1, &x, &y, linear::LR,
+                                           linear::LAMBDA, &t, threads,
+                                           sched);
+                assert_eq!(got, seq,
+                    "single-tile batch diverged at {threads} threads \
+                     under {sched:?}");
+            }
+        }
+    }
+
+    #[test]
     fn parallel_coupled_stays_within_tolerance_of_the_naive_oracle() {
-        // ISSUE contract at N threads: the row-block reduction may
-        // reassociate the gradient sums, but never past 1e-4.
+        // ISSUE contract at N threads: the per-tile reduction may
+        // reassociate the gradient sums, but never past 1e-4 — under
+        // either schedule.
         check("par-coupled-tolerance", 6, |g| {
             let d = g.usize_in(80, 160);
             let b = g.usize_in(150, 300);
@@ -712,14 +1049,19 @@ mod tests {
             let t = TileConfig::westmere_workers(4);
             let ((wl, ll), (ws, ls)) = linear::coupled_step_naive(
                 &w0, &w1, &x, &y, linear::LR, linear::LAMBDA);
-            let ((wl2, ll2), (ws2, ls2)) = coupled_step_par(
-                &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t, 4);
-            for f in 0..d {
-                prop_assert!((wl[f] - wl2[f]).abs() < 1e-4, "lr w[{f}]");
-                prop_assert!((ws[f] - ws2[f]).abs() < 1e-4, "svm w[{f}]");
+            for sched in [Schedule::Static, Schedule::Stealing] {
+                let ((wl2, ll2), (ws2, ls2)) = coupled_step_par(
+                    &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t, 4,
+                    sched);
+                for f in 0..d {
+                    prop_assert!((wl[f] - wl2[f]).abs() < 1e-4,
+                        "lr w[{f}] under {sched:?}");
+                    prop_assert!((ws[f] - ws2[f]).abs() < 1e-4,
+                        "svm w[{f}] under {sched:?}");
+                }
+                prop_assert!((ll - ll2).abs() < 1e-4, "lr loss");
+                prop_assert!((ls - ls2).abs() < 1e-4, "svm loss");
             }
-            prop_assert!((ll - ll2).abs() < 1e-4, "lr loss");
-            prop_assert!((ls - ls2).abs() < 1e-4, "svm loss");
             Ok(())
         });
     }
@@ -727,14 +1069,17 @@ mod tests {
     #[test]
     fn zero_and_degenerate_shapes_are_harmless() {
         let t = TileConfig::westmere();
-        let mut c: Vec<f32> = Vec::new();
-        matmul_tiled_par(&[], &[], &mut c, 0, 0, 0, &t, 4);
-        let mut c = vec![5.0f32; 3];
-        matmul_tiled_par(&[], &[], &mut c, 1, 0, 3, &t, 4);
-        assert_eq!(c, vec![0.0; 3], "k = 0 must still zero C");
-        let mut out: Vec<f32> = Vec::new();
-        pairwise_sq_dists_tiled_par(&[], &[], 2, &mut out, &t, 4);
-        assert!(out.is_empty());
+        for sched in SCHEDULES {
+            let mut c: Vec<f32> = Vec::new();
+            matmul_tiled_par(&[], &[], &mut c, 0, 0, 0, &t, 4, sched);
+            let mut c = vec![5.0f32; 3];
+            matmul_tiled_par(&[], &[], &mut c, 1, 0, 3, &t, 4, sched);
+            assert_eq!(c, vec![0.0; 3], "k = 0 must still zero C");
+            let mut out: Vec<f32> = Vec::new();
+            pairwise_sq_dists_tiled_par(&[], &[], 2, &mut out, &t, 4,
+                                        sched);
+            assert!(out.is_empty());
+        }
     }
 
     #[test]

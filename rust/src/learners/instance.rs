@@ -12,7 +12,7 @@
 //! `python/compile/shapes.py`.
 
 use crate::data::Dataset;
-use crate::kernels::{pairwise_sq_dists_tiled, TileConfig};
+use crate::kernels::{pairwise_sq_dists_tiled, Schedule, TileConfig};
 
 /// k for the k-NN vote (shapes.KNN_K).
 pub const K: usize = 5;
@@ -23,6 +23,54 @@ pub const BANDWIDTH: f32 = 8.0;
 /// implementation with the kernel layer, so scan and tiled paths can
 /// never drift apart.
 pub use crate::kernels::distance::sq_dist;
+
+/// Majority class of a label list (ties to the lower class id, matching
+/// every vote in this module). This is the `k = 0` degenerate k-NN
+/// prediction: with no neighbours to vote, the scan falls back to the
+/// training set's prior — shared by the scan, tiled and vote paths so
+/// they cannot disagree.
+fn majority_class(labels: &[i32], n_classes: usize) -> i32 {
+    let mut votes = vec![0usize; n_classes];
+    for &l in labels {
+        votes[l as usize] += 1;
+    }
+    votes
+        .iter()
+        .enumerate()
+        .max_by_key(|(c, &v)| (v, std::cmp::Reverse(*c)))
+        .unwrap()
+        .0 as i32
+}
+
+/// Insert `(dist, j)` into the ascending top-`k` list under the total
+/// order on `(distance, index)`. `total_cmp` is a total order over
+/// every bit pattern (−NaN < −∞ < … < +∞ < +NaN), so a NaN distance
+/// (e.g. `inf − inf` from overflowing features — note this is a
+/// *negative* quiet NaN on x86, ranking below −∞) takes a
+/// deterministic, platform-stable position instead of silently
+/// corrupting the list the way `dist < nd` comparisons did, and the
+/// incremental scans stay in lockstep with the sort-based neighbour
+/// paths (hyperparam's `total_cmp` sort — the PR 3 convention).
+/// Requires `k > 0` (the `k = 0` case is handled by the callers'
+/// majority-class guard).
+fn knn_insert(nearest: &mut Vec<(f32, usize)>, k: usize, dist: f32,
+              j: usize) {
+    debug_assert!(k > 0, "knn_insert requires k > 0");
+    if let Some(&(ld, lj)) = nearest.last() {
+        if nearest.len() >= k
+            && dist.total_cmp(&ld).then(j.cmp(&lj)).is_ge() {
+            return; // not better than the current worst neighbour
+        }
+    }
+    let pos = nearest
+        .iter()
+        .position(|&(nd, nj)| dist.total_cmp(&nd).then(j.cmp(&nj)).is_lt())
+        .unwrap_or(nearest.len());
+    nearest.insert(pos, (dist, j));
+    if nearest.len() > k {
+        nearest.pop();
+    }
+}
 
 /// Pure-rust k-NN classification scan (Algorithm 10, verbatim
 /// structure — deliberately incremental top-k with no distance buffer,
@@ -35,24 +83,21 @@ pub fn knn_scan(train: &Dataset, test_rows: &[f32], d: usize, k: usize)
     -> Vec<i32> {
     assert_eq!(d, train.d);
     let n_test = test_rows.len() / d;
+    if k == 0 {
+        // Regression guard: with k = 0 the old entry condition
+        // (`nearest.len() < k` is never true) fell through to
+        // `nearest.last().unwrap()` and panicked on the empty list.
+        // No neighbours can vote, so predict the training prior.
+        return vec![majority_class(&train.labels, train.n_classes);
+                    n_test];
+    }
     let mut preds = Vec::with_capacity(n_test);
     for q in 0..n_test {
         let qrow = &test_rows[q * d..(q + 1) * d];
         // list of k nearest: (dist, index), kept sorted ascending
         let mut nearest: Vec<(f32, usize)> = Vec::with_capacity(k + 1);
         for j in 0..train.n {
-            let dist = sq_dist(qrow, train.row(j));
-            if nearest.len() < k
-                || dist < nearest.last().unwrap().0 {
-                let pos = nearest
-                    .iter()
-                    .position(|&(nd, _)| dist < nd)
-                    .unwrap_or(nearest.len());
-                nearest.insert(pos, (dist, j));
-                if nearest.len() > k {
-                    nearest.pop();
-                }
-            }
+            knn_insert(&mut nearest, k, sq_dist(qrow, train.row(j)), j);
         }
         let mut votes = vec![0usize; train.n_classes];
         for &(_, j) in &nearest {
@@ -117,18 +162,14 @@ pub fn joint_scan(train: &Dataset, test_rows: &[f32], d: usize, k: usize,
 /// neighbours ranked by (distance, index), class ties to the lower id.
 fn knn_vote(dists: &[f32], labels: &[i32], n_classes: usize, k: usize)
     -> i32 {
+    if k == 0 {
+        // same k = 0 guard as `knn_scan`: no neighbours vote, so the
+        // prediction degenerates to the training majority class
+        return majority_class(labels, n_classes);
+    }
     let mut nearest: Vec<(f32, usize)> = Vec::with_capacity(k + 1);
     for (j, &dist) in dists.iter().enumerate() {
-        if nearest.len() < k || dist < nearest.last().unwrap().0 {
-            let pos = nearest
-                .iter()
-                .position(|&(nd, _)| dist < nd)
-                .unwrap_or(nearest.len());
-            nearest.insert(pos, (dist, j));
-            if nearest.len() > k {
-                nearest.pop();
-            }
-        }
+        knn_insert(&mut nearest, k, dist, j);
     }
     let mut votes = vec![0usize; n_classes];
     for &(_, j) in &nearest {
@@ -233,27 +274,33 @@ pub fn joint_scan_tiled(train: &Dataset, test_rows: &[f32], d: usize,
 
 /// Shared skeleton of the parallel scans: queries are split on
 /// query-tile boundaries (`TileConfig::pair_tiles`, the same unit the
-/// tiled kernel blocks on) into per-worker contiguous blocks via the
-/// deterministic `kernels::parallel` partition, and each worker runs
-/// `scan` — one of the single-thread tiled scans — on its slice.
-/// Per-query results are independent, so the concatenated predictions
-/// are bit-identical to the sequential scans at any thread count.
+/// tiled kernel blocks on) into contiguous blocks — one per worker
+/// under [`Schedule::Static`], finer `steal_chunk`-sized blocks claimed
+/// from the shared cursor under stealing — and each block runs `scan`
+/// (one of the single-thread tiled scans) on its slice. Per-query
+/// results are independent and blocks are concatenated in block order,
+/// so the predictions are bit-identical to the sequential scans at any
+/// thread count under either schedule.
 fn scan_par<T: Send>(
     train: &Dataset,
     test_rows: &[f32],
     d: usize,
     tiles: &TileConfig,
     threads: usize,
+    schedule: Schedule,
     scan: impl Fn(&[f32]) -> Vec<T> + Sync,
 ) -> Vec<T> {
+    use crate::kernels::parallel::{schedule_parts, shard_unit};
     assert_eq!(d, train.d);
     let n_test = test_rows.len() / d;
     let (qt, _) = tiles.pair_tiles(d);
-    let unit = crate::kernels::parallel::shard_unit(qt, n_test, threads);
-    let parts =
-        crate::kernels::parallel::partition_units(n_test.div_ceil(unit),
-                                                  threads);
-    if threads <= 1 || parts.len() <= 1 {
+    let unit = shard_unit(qt, n_test, threads);
+    let units = n_test.div_ceil(unit);
+    if threads <= 1 || units <= 1 {
+        return scan(test_rows);
+    }
+    let (stealing, parts) = schedule_parts(units, threads, schedule);
+    if parts.len() <= 1 {
         return scan(test_rows);
     }
     let scan = &scan;
@@ -267,38 +314,43 @@ fn scan_par<T: Send>(
                 as Box<dyn FnOnce() -> Vec<T> + Send + '_>
         })
         .collect();
-    crate::util::pool::Pool::run_parallel(jobs.len(), jobs)
-        .into_iter()
-        .flatten()
-        .collect()
+    let blocks = if stealing {
+        crate::util::pool::Pool::run_stealing(threads, jobs)
+    } else {
+        crate::util::pool::Pool::run_parallel(jobs.len(), jobs)
+    };
+    blocks.into_iter().flatten().collect()
 }
 
 /// Parallel cache-blocked k-NN scan: query blocks fan out across
 /// `threads` workers; bit-identical to [`knn_scan_tiled`] (and
-/// therefore to [`knn_scan`]) at any thread count.
+/// therefore to [`knn_scan`]) at any thread count, under either
+/// schedule.
 pub fn knn_scan_par(train: &Dataset, test_rows: &[f32], d: usize,
-                    k: usize, tiles: &TileConfig, threads: usize)
-    -> Vec<i32> {
-    scan_par(train, test_rows, d, tiles, threads,
+                    k: usize, tiles: &TileConfig, threads: usize,
+                    schedule: Schedule) -> Vec<i32> {
+    scan_par(train, test_rows, d, tiles, threads, schedule,
              |rows| knn_scan_tiled(train, rows, d, k, tiles))
 }
 
 /// Parallel cache-blocked PRW scan (see [`knn_scan_par`]).
 pub fn prw_scan_par(train: &Dataset, test_rows: &[f32], d: usize,
-                    bandwidth: f32, tiles: &TileConfig, threads: usize)
-    -> Vec<i32> {
-    scan_par(train, test_rows, d, tiles, threads,
+                    bandwidth: f32, tiles: &TileConfig, threads: usize,
+                    schedule: Schedule) -> Vec<i32> {
+    scan_par(train, test_rows, d, tiles, threads, schedule,
              |rows| prw_scan_tiled(train, rows, d, bandwidth, tiles))
 }
 
 /// Parallel tile-level joint scan: ONE tiled distance pass per query
 /// block feeds BOTH learners on each worker (§5.2 fusion preserved
 /// inside every shard). Bit-identical to [`joint_scan_tiled`] at any
-/// thread count.
+/// thread count, under either schedule.
 pub fn joint_scan_par(train: &Dataset, test_rows: &[f32], d: usize,
                       k: usize, bandwidth: f32, tiles: &TileConfig,
-                      threads: usize) -> (Vec<i32>, Vec<i32>) {
-    let blocks = scan_par(train, test_rows, d, tiles, threads, |rows| {
+                      threads: usize, schedule: Schedule)
+    -> (Vec<i32>, Vec<i32>) {
+    let blocks = scan_par(train, test_rows, d, tiles, threads, schedule,
+                          |rows| {
         vec![joint_scan_tiled(train, rows, d, k, bandwidth, tiles)]
     });
     let mut knn = Vec::new();
@@ -428,23 +480,115 @@ mod tests {
                 l1_f32: g.usize_in(2, 16) * d,
             };
             for threads in [1usize, 2, 4, 7] {
-                prop_assert!(
-                    knn_scan_par(&train, &test, d, K, &tiles, threads)
-                        == knn_scan_tiled(&train, &test, d, K, &tiles),
-                    "parallel knn diverged at {threads} threads");
-                prop_assert!(
-                    prw_scan_par(&train, &test, d, BANDWIDTH, &tiles,
-                                 threads)
-                        == prw_scan_tiled(&train, &test, d, BANDWIDTH,
-                                          &tiles),
-                    "parallel prw diverged at {threads} threads");
-                let (kp, pp) = joint_scan_par(&train, &test, d, K,
-                                              BANDWIDTH, &tiles, threads);
-                let (ks, ps) = joint_scan_tiled(&train, &test, d, K,
-                                                BANDWIDTH, &tiles);
-                prop_assert!(kp == ks && pp == ps,
-                    "parallel joint scan diverged at {threads} threads");
+                for sched in [Schedule::Static, Schedule::Stealing,
+                              Schedule::Auto] {
+                    prop_assert!(
+                        knn_scan_par(&train, &test, d, K, &tiles,
+                                     threads, sched)
+                            == knn_scan_tiled(&train, &test, d, K,
+                                              &tiles),
+                        "parallel knn diverged at {threads} threads \
+                         under {sched:?}");
+                    prop_assert!(
+                        prw_scan_par(&train, &test, d, BANDWIDTH, &tiles,
+                                     threads, sched)
+                            == prw_scan_tiled(&train, &test, d,
+                                              BANDWIDTH, &tiles),
+                        "parallel prw diverged at {threads} threads \
+                         under {sched:?}");
+                    let (kp, pp) =
+                        joint_scan_par(&train, &test, d, K, BANDWIDTH,
+                                       &tiles, threads, sched);
+                    let (ks, ps) = joint_scan_tiled(&train, &test, d, K,
+                                                    BANDWIDTH, &tiles);
+                    prop_assert!(kp == ks && pp == ps,
+                        "parallel joint scan diverged at {threads} \
+                         threads under {sched:?}");
+                }
             }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn k0_predicts_the_majority_class_everywhere() {
+        // Regression: k = 0 used to hit `nearest.last().unwrap()` on an
+        // empty list and panic, in both the scan and the vote paths.
+        // Now every path consistently returns the training prior.
+        let train = Dataset::new(
+            vec![0.0, 1.0, 2.0, 10.0, 11.0],
+            vec![1, 1, 1, 0, 0],
+            1,
+            2,
+        );
+        let test = [0.5f32, 10.5];
+        let want = vec![1, 1]; // class 1 holds the majority of T
+        assert_eq!(knn_scan(&train, &test, 1, 0), want);
+        let tiles = TileConfig::westmere();
+        assert_eq!(knn_scan_tiled(&train, &test, 1, 0, &tiles), want,
+            "tiled scan must share the k = 0 guard");
+        assert_eq!(
+            knn_scan_par(&train, &test, 1, 0, &tiles, 4,
+                         Schedule::Stealing),
+            want, "parallel scan must share the k = 0 guard");
+        let (kj, pj) = joint_scan(&train, &test, 1, 0, BANDWIDTH);
+        assert_eq!(kj, want);
+        assert_eq!(pj, prw_scan(&train, &test, 1, BANDWIDTH),
+            "k = 0 must not disturb the PRW half of the joint scan");
+        // majority ties break toward the lower class id, like the votes
+        let tied = Dataset::new(vec![0.0, 1.0], vec![1, 0], 1, 2);
+        assert_eq!(knn_scan(&tied, &[0.2], 1, 0), vec![0]);
+    }
+
+    #[test]
+    fn nan_distances_keep_tiled_and_naive_scans_in_sync() {
+        // Regression: `position(|&(nd, _)| dist < nd)` silently
+        // corrupted the sorted neighbour list once a distance went NaN
+        // (inf − inf between overflowing features), letting the
+        // incremental scan and the sort-based tiled path desync. The
+        // total_cmp insertion gives every NaN a deterministic rank
+        // shared with the sort-based paths.
+        check("nan-scan-sync", 15, |g| {
+            let n = g.usize_in(2, 40);
+            let t = g.usize_in(1, 10);
+            let d = g.usize_in(1, 6);
+            let mut features = g.f32_vec(n * d, 3.0);
+            // poison a few training features with ±inf so some (but not
+            // all) distances become inf or NaN
+            for _ in 0..g.usize_in(1, 4) {
+                let i = g.usize_in(0, n * d - 1);
+                features[i] = if g.bool() { f32::INFINITY }
+                              else { f32::NEG_INFINITY };
+            }
+            let labels: Vec<i32> =
+                (0..n).map(|_| g.usize_in(0, 2) as i32).collect();
+            let train = Dataset::new(features, labels, d, 3);
+            let mut test = g.f32_vec(t * d, 3.0);
+            // ...and at least one query too (inf − inf → NaN distance)
+            let qi = g.usize_in(0, t * d - 1);
+            test[qi] = f32::INFINITY;
+            let tiles = TileConfig {
+                mc: 1,
+                kc: 1,
+                nc: 1,
+                l1_f32: g.usize_in(2, 16) * d,
+            };
+            for k in [1usize, K] {
+                let naive = knn_scan(&train, &test, d, k);
+                prop_assert!(naive.iter().all(|&p| (0..3).contains(&p)),
+                    "prediction out of class range");
+                prop_assert!(
+                    knn_scan_tiled(&train, &test, d, k, &tiles) == naive,
+                    "NaN distances desynced tiled and naive knn (k={k})");
+                prop_assert!(
+                    knn_scan_par(&train, &test, d, k, &tiles, 4,
+                                 Schedule::Stealing) == naive,
+                    "NaN distances desynced the parallel knn (k={k})");
+            }
+            prop_assert!(
+                prw_scan_tiled(&train, &test, d, BANDWIDTH, &tiles)
+                    == prw_scan(&train, &test, d, BANDWIDTH),
+                "NaN distances desynced tiled and naive prw");
             Ok(())
         });
     }

@@ -67,14 +67,17 @@ pub fn svm_step(w: &[f32], x: &[f32], y: &[f32], lr: f32, lam: f32)
 }
 
 /// The §4.3 coupling on the hot path: tile-level fused LR+SVM through
-/// the parallel macro-tile layer (`kernels::coupled_step_par`) — row
-/// blocks fan out across the session's thread count
+/// the parallel macro-tile layer (`kernels::coupled_step_par`) —
+/// macro-tile row blocks distributed across the session's thread count
 /// (`kernels::parallel::default_threads`: `--threads` override, then
-/// `LOCALITY_ML_THREADS`, then available parallelism), with per-worker
-/// tiles from the shared-L3 budget. At one thread this IS the PR-1
-/// sequential kernel (`coupled_step_tiled` with Westmere tiles), bit
-/// for bit; at N threads the deterministic row-block reduction stays
-/// within 1e-4 of [`coupled_step_naive`], the in-tree reference oracle.
+/// `LOCALITY_ML_THREADS`, then available parallelism) under the session
+/// schedule (`default_schedule`: `--schedule`, then
+/// `LOCALITY_ML_SCHEDULE`, then auto), with per-worker tiles from the
+/// shared-L3 budget. The per-tile partials reduce in tile-index order,
+/// so the result is bit-identical at every thread count and under both
+/// schedules; a batch that fits one macro-tile IS the PR-1 sequential
+/// kernel exactly, and multi-tile batches stay within 1e-4 of
+/// [`coupled_step_naive`], the in-tree reference oracle.
 pub fn coupled_step(
     w_lr: &[f32],
     w_svm: &[f32],
@@ -83,7 +86,9 @@ pub fn coupled_step(
     lr: f32,
     lam: f32,
 ) -> ((Vec<f32>, f32), (Vec<f32>, f32)) {
-    use crate::kernels::parallel::{default_threads, effective_threads};
+    use crate::kernels::parallel::{
+        default_schedule, default_threads, effective_threads,
+    };
     // ~4·b·d multiply-adds per fused step (two models × two sweeps);
     // small minibatches stay on the sequential kernel — spawn/join
     // would cost more than the fan-out saves.
@@ -91,7 +96,8 @@ pub fn coupled_step(
         effective_threads(default_threads(), 4 * x.len().max(y.len()));
     crate::kernels::coupled_step_par(
         w_lr, w_svm, x, y, lr, lam,
-        &crate::kernels::TileConfig::westmere_workers(threads), threads)
+        &crate::kernels::TileConfig::westmere_workers(threads), threads,
+        default_schedule())
 }
 
 /// The §4.3 coupling, row-level reference: both models updated from ONE
@@ -188,11 +194,11 @@ mod tests {
     fn hot_path_equals_naive_reference() {
         // coupled_step is the parallel tiled kernel; it must not drift
         // from the row-level oracle (ragged 33×21 exercises edge
-        // tiles). 21 rows fit one coupled row block, so the partition
-        // degenerates to the sequential path and equality is exact at
-        // ANY session thread count — the multi-block case is covered
-        // (bit-identical per partition, ≤1e-4 vs oracle) by the
-        // kernels::parallel property tests.
+        // tiles). 21 rows fit one coupled macro-tile, so the engine
+        // short-circuits to the sequential kernel and equality is exact
+        // at ANY session thread count or schedule — the multi-tile case
+        // is covered (invariant across threads/schedules, ≤1e-4 vs
+        // oracle) by the kernels::parallel property tests.
         let mut g = crate::util::prop::Gen::new(77);
         let (d, b) = (33usize, 21usize);
         let w0 = g.f32_vec(d, 1.0);

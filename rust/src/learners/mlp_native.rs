@@ -16,7 +16,7 @@
 
 use super::mlp::{INPUT_DIM, LAYERS, N_CLASSES, N_PARAMS};
 use crate::kernels::{
-    matmul_bias_tiled_par, matmul_tn_acc_tiled_par, TileConfig,
+    matmul_bias_tiled_par, matmul_tn_acc_tiled_par, Schedule, TileConfig,
 };
 
 /// Scratch buffers for one forward+backward pass (allocated once,
@@ -40,22 +40,37 @@ pub struct NativeMlp {
     /// worker count for the parallel macro-tile layer (1 = the exact
     /// PR-1 sequential kernels)
     threads: usize,
+    /// macro-tile scheduling policy; both choices produce identical
+    /// bits (output-disjoint row partition), so this only moves
+    /// wall-clock on skewed batch shapes
+    schedule: Schedule,
 }
 
 impl NativeMlp {
     /// Session default: thread count from
     /// `kernels::parallel::default_threads` (`--threads` override, then
-    /// `LOCALITY_ML_THREADS`, then available parallelism). The matmul
-    /// row partition is output-disjoint, so results are bit-identical
-    /// at every thread count.
+    /// `LOCALITY_ML_THREADS`, then available parallelism) and schedule
+    /// from `default_schedule` (`--schedule`, then
+    /// `LOCALITY_ML_SCHEDULE`, then auto). The matmul row partition is
+    /// output-disjoint, so results are bit-identical at every thread
+    /// count under either schedule.
     pub fn new(theta: Vec<f32>, batch: usize) -> Self {
-        Self::with_threads(theta, batch,
-                           crate::kernels::parallel::default_threads())
+        Self::with_exec(theta, batch,
+                        crate::kernels::parallel::default_threads(),
+                        crate::kernels::parallel::default_schedule())
     }
 
-    /// Explicit thread count (1 = the exact PR-1 sequential path).
+    /// Explicit thread count (1 = the exact PR-1 sequential path) with
+    /// the session default schedule.
     pub fn with_threads(theta: Vec<f32>, batch: usize, threads: usize)
         -> Self {
+        Self::with_exec(theta, batch, threads,
+                        crate::kernels::parallel::default_schedule())
+    }
+
+    /// Explicit thread count and scheduling policy.
+    pub fn with_exec(theta: Vec<f32>, batch: usize, threads: usize,
+                     schedule: Schedule) -> Self {
         assert_eq!(theta.len(), N_PARAMS);
         let threads = threads.max(1);
         let mut acts = vec![vec![0.0; batch * INPUT_DIM]];
@@ -75,6 +90,7 @@ impl NativeMlp {
             batch,
             tiles: TileConfig::westmere_workers(threads),
             threads,
+            schedule,
         }
     }
 
@@ -109,7 +125,7 @@ impl NativeMlp {
             let th = crate::kernels::parallel::effective_threads(
                 self.threads, self.batch * m * n);
             matmul_bias_tiled_par(a_prev, w, b, z, self.batch, m, n,
-                                  &self.tiles, th);
+                                  &self.tiles, th, self.schedule);
             // activation (ReLU on hidden, identity on the output layer)
             let a = &mut rest[0];
             if l + 1 < n_layers {
@@ -175,6 +191,7 @@ impl NativeMlp {
                 n,
                 &self.tiles,
                 th,
+                self.schedule,
             );
             for s in 0..self.batch {
                 let drow = &self.deltas[l][s * n..(s + 1) * n];
@@ -306,21 +323,26 @@ mod tests {
     }
 
     #[test]
-    fn thread_count_does_not_change_loss_or_gradient() {
+    fn thread_count_and_schedule_do_not_change_loss_or_gradient() {
         // The matmul row partition is output-disjoint, so forward, loss
-        // and gradient must be bit-identical at every thread count.
-        // batch = 64 puts the 784-wide layer-0 matmuls past
-        // MIN_PAR_WORK, so the parallel path really runs (and the
-        // layer-0 dW's 784 output rows give the transpose kernel a
-        // multi-block partition).
+        // and gradient must be bit-identical at every thread count AND
+        // under either scheduling policy. batch = 64 puts the 784-wide
+        // layer-0 matmuls past MIN_PAR_WORK, so the parallel path
+        // really runs (and the layer-0 dW's 784 output rows give the
+        // transpose kernel a multi-block partition).
         let b = 64;
         let (x, y) = batch(9, b);
-        let mut one = NativeMlp::with_threads(init_params(11), b, 1);
-        let mut four = NativeMlp::with_threads(init_params(11), b, 4);
+        let mut one = NativeMlp::with_exec(init_params(11), b, 1,
+                                           Schedule::Static);
         let l1 = one.loss_and_grad(&x, &y);
-        let l4 = four.loss_and_grad(&x, &y);
-        assert_eq!(l1, l4, "loss diverged across thread counts");
-        assert_eq!(one.grad(), four.grad(),
-            "gradient diverged across thread counts");
+        for sched in [Schedule::Static, Schedule::Stealing] {
+            let mut four = NativeMlp::with_exec(init_params(11), b, 4,
+                                                sched);
+            let l4 = four.loss_and_grad(&x, &y);
+            assert_eq!(l1, l4,
+                "loss diverged across thread counts under {sched:?}");
+            assert_eq!(one.grad(), four.grad(),
+                "gradient diverged across thread counts under {sched:?}");
+        }
     }
 }

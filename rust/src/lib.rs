@@ -23,9 +23,11 @@
 //! learners' hot loops apply the same locality guidelines the simulator
 //! measures. Naive row-at-a-time references stay in-tree as oracles,
 //! and `kernels::parallel` shards the macro-tiles across a scoped
-//! worker pool (`--threads` / `LOCALITY_ML_THREADS`; one thread is the
-//! exact sequential path) with per-worker tiles sized from the shared
-//! L3.
+//! worker pool (`--threads` / `LOCALITY_ML_THREADS`; one thread spawns
+//! nothing and, for the row-disjoint kernels, is the exact sequential
+//! path) with per-worker tiles sized from the shared L3, under a static
+//! or work-stealing schedule (`--schedule` / `LOCALITY_ML_SCHEDULE`;
+//! both produce identical bits).
 
 // Clippy policy: the loop nests deliberately mirror the paper's
 // pseudo-code (explicit indices keep the access patterns auditable

@@ -17,11 +17,15 @@
 //! locality-ml sweep    [--dataset-n N] [--ks 1,3,5]
 //!                      [--bandwidth-mults 0.5,1,2,4]
 //!                      [--curve 1,2,4] [--out-json f]     E14
+//! locality-ml steal    [--dataset-n N] [--fold-weights 8,4,2,1]
+//!                      [--curve 1,2,4] [--out-json f]     E15
 //! locality-ml info    [--artifacts dir]
 //! ```
 //!
 //! Every subcommand accepts `--threads N` (parallel macro-tile layer;
-//! 1 = the exact single-thread kernels).
+//! 1 = the exact single-thread kernels) and `--schedule
+//! static|stealing|auto` (macro-tile scheduling policy — identical
+//! output bits either way).
 
 use std::path::PathBuf;
 
@@ -48,6 +52,16 @@ fn main() -> Result<()> {
             .map_err(|_| anyhow::anyhow!("--threads: bad integer `{t}`"))?;
         anyhow::ensure!(n >= 1, "--threads must be >= 1");
         locality_ml::kernels::parallel::set_threads(n);
+    }
+    // Global `--schedule static|stealing|auto` for the macro-tile
+    // scheduling policy (default: LOCALITY_ML_SCHEDULE, then auto).
+    // Both policies produce identical bits; this only moves wall-clock
+    // on skewed shapes.
+    if let Some(s) = args.get("schedule") {
+        let sched = locality_ml::kernels::Schedule::parse(s)
+            .ok_or_else(|| anyhow::anyhow!(
+                "--schedule: `{s}` is not one of static|stealing|auto"))?;
+        locality_ml::kernels::parallel::set_schedule(Some(sched));
     }
     match args.command.as_str() {
         "train" => {
@@ -132,6 +146,22 @@ fn main() -> Result<()> {
             commands::cmd_sweep(n, folds, &ks, &mults, &curve, seed,
                                 out.as_deref())?;
         }
+        "steal" => {
+            let n = args.usize_or("dataset-n", 2000)?;
+            let seed = args.u64_or("seed", 7)?;
+            let ks = args.usize_list_or("ks", &[1, 3, 5, 9, 15])?;
+            let mults = args
+                .f32_list_or("bandwidth-mults", &[0.5, 1.0, 2.0, 4.0])?;
+            // descending weights: the static contiguous partition
+            // stacks the expensive splits onto worker 0 — the
+            // skewed-shape scenario the scheduler exists for
+            let weights = args.usize_list_or(
+                "fold-weights", &[8, 7, 6, 5, 4, 3, 2, 1, 1, 1, 1, 1])?;
+            let curve = args.usize_list_or("curve", &[1, 2, 4])?;
+            let out = args.get("out-json").map(PathBuf::from);
+            commands::cmd_steal(n, &weights, &ks, &mults, &curve, seed,
+                                out.as_deref())?;
+        }
         "info" => {
             let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
             commands::cmd_info(&dir)?;
@@ -173,9 +203,16 @@ SUBCOMMANDS
                  --dataset-n 1000 --folds 5 --ks 1,3,5,9,15
                  --bandwidth-mults 0.5,1,2,4 --curve 1,2,4
                  --out-json BENCH_sweep.json
+  steal        Work-stealing scheduler on skewed CV splits: static vs
+               stealing wall-clock, bit-identical results
+                 --dataset-n 2000 --fold-weights 8,7,6,5,4,3,2,1,1,1,1,1
+                 --curve 1,2,4 --out-json BENCH_steal.json
   info         List compiled artifacts  [--artifacts artifacts]
 
 Common options: --config experiment.toml --artifacts artifacts --seed N
                 --threads N (parallel kernel layer; 1 = single-thread
                 kernels; default LOCALITY_ML_THREADS or all cores)
+                --schedule static|stealing|auto (macro-tile scheduling
+                policy; identical bits either way; default
+                LOCALITY_ML_SCHEDULE or auto)
 ";

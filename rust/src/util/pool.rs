@@ -18,8 +18,19 @@
 //!   disjoint `&mut` output blocks to workers. Threads are scoped to the
 //!   call (`std::thread::scope`), results come back in job order, and a
 //!   worker panic is propagated with its original payload.
+//! * [`Pool::run_stealing`] — the scoped fan-out with **dynamic job
+//!   assignment**: instead of pre-chunking jobs contiguously per worker,
+//!   every worker claims the next unclaimed job index from a shared
+//!   atomic cursor until the list is drained, so a worker that finishes
+//!   a cheap job immediately steals the next one instead of idling
+//!   behind a skewed static partition. Results still come back in **job
+//!   order** (each worker records `(index, result)` pairs and the pairs
+//!   are scattered into index-ordered slots after the join), so callers
+//!   that reduce results see the exact sequence the static fan-out
+//!   produces — completion order never leaks out.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -144,6 +155,74 @@ impl Pool {
             for h in handles {
                 if let Err(payload) = h.join() {
                     resume_unwind(payload);
+                }
+            }
+        });
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+
+    /// Scoped fan-out with **work stealing**: up to `threads` OS threads
+    /// repeatedly claim the next unclaimed job index from a shared
+    /// atomic cursor and run it, so skewed job costs rebalance
+    /// dynamically instead of serialising onto the worker whose static
+    /// chunk happened to hold the expensive jobs. Like
+    /// [`Pool::run_parallel`], jobs carry no `'static` bound and results
+    /// are returned in **job order** — each worker keeps `(index,
+    /// result)` pairs and they are scattered into index-ordered slots
+    /// after every thread is joined, so nondeterministic completion
+    /// order is invisible to the caller.
+    ///
+    /// `threads <= 1` (or a single job) runs everything inline on the
+    /// caller's thread in job order — the exact sequential behaviour,
+    /// nothing spawned. A panicking job is propagated to the caller with
+    /// its original payload after the scoped threads have been joined.
+    pub fn run_stealing<'env, T: Send>(
+        threads: usize,
+        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'env>>,
+    ) -> Vec<T> {
+        let n = jobs.len();
+        if threads <= 1 || n <= 1 {
+            return jobs.into_iter().map(|job| job()).collect();
+        }
+        let workers = threads.min(n);
+        // Each job sits behind its own mutex so the claiming worker can
+        // take ownership; the cursor hands every index out exactly once,
+        // so each mutex is locked once, uncontended, outside the job run.
+        let jobs: Vec<Mutex<Option<Box<dyn FnOnce() -> T + Send + 'env>>>> =
+            jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+        let cursor = AtomicUsize::new(0);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        thread::scope(|s| {
+            let jobs = &jobs;
+            let cursor = &cursor;
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(move || {
+                        let mut done: Vec<(usize, T)> = Vec::new();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            let job = jobs[i]
+                                .lock()
+                                .unwrap()
+                                .take()
+                                .expect("job index claimed twice");
+                            done.push((i, job()));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            for h in handles {
+                match h.join() {
+                    Ok(done) => {
+                        for (i, v) in done {
+                            slots[i] = Some(v);
+                        }
+                    }
+                    Err(payload) => resume_unwind(payload),
                 }
             }
         });
@@ -292,5 +371,64 @@ mod tests {
             Box::new(|| panic!("scoped boom")),
         ];
         Pool::run_parallel(2, jobs);
+    }
+
+    #[test]
+    fn run_stealing_returns_results_in_job_order() {
+        // Completion order is nondeterministic; the returned Vec must be
+        // job-ordered anyway, with every job run exactly once.
+        let ran = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..53usize)
+            .map(|i| {
+                let ran = Arc::clone(&ran);
+                Box::new(move || {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                    if i % 7 == 0 {
+                        thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    i * 11
+                }) as Box<_>
+            })
+            .collect();
+        let out = Pool::run_stealing(4, jobs);
+        assert_eq!(out, (0..53).map(|i| i * 11).collect::<Vec<_>>());
+        assert_eq!(ran.load(Ordering::SeqCst), 53,
+            "every job must run exactly once");
+    }
+
+    #[test]
+    fn run_stealing_single_thread_runs_inline_in_order() {
+        let main_id = thread::current().id();
+        let jobs: Vec<Box<dyn FnOnce() -> thread::ThreadId + Send>> =
+            (0..4)
+                .map(|_| Box::new(|| thread::current().id()) as Box<_>)
+                .collect();
+        let ids = Pool::run_stealing(1, jobs);
+        assert!(ids.iter().all(|&id| id == main_id),
+            "threads=1 must not spawn");
+    }
+
+    #[test]
+    fn run_stealing_borrows_stack_data() {
+        let data: Vec<usize> = (0..90).collect();
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send + '_>> = data
+            .chunks(11)
+            .map(|c| Box::new(move || c.iter().sum::<usize>()) as Box<_>)
+            .collect();
+        let out = Pool::run_stealing(3, jobs);
+        let want: Vec<usize> =
+            data.chunks(11).map(|c| c.iter().sum()).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "stolen boom")]
+    fn run_stealing_propagates_panics() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("stolen boom")),
+            Box::new(|| 3),
+        ];
+        Pool::run_stealing(2, jobs);
     }
 }

@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""CI gate for the work-stealing tile scheduler (ISSUE 4):
+
+on the skewed-split scenario (descending fold weights, so the static
+contiguous partition stacks the expensive CV splits onto one worker),
+stealing must beat static by >= 1.2x wall-clock at 4 threads. The
+bit-identity of stealing vs static vs sequential is asserted in-process
+by the bench itself before anything is timed, so this script only gates
+the clock.
+
+Every thread record is validated for shape (numeric threads /
+static_s / stealing_s / speedup); only the 4-thread record is gated —
+at 1 thread both schedules run the same inline path, and fold counts
+bound what 2 threads can rebalance.
+
+Usage: check_bench_steal.py [BENCH_steal.json]
+"""
+import sys
+
+from bench_check import CheckFailure, load_doc, require_number
+
+GATE_THREADS = 4
+GATE_SPEEDUP = 1.2
+
+
+def check(path):
+    doc = load_doc(path)
+    results = doc.get("results", [])
+    if not results:
+        raise CheckFailure(f"no thread records in {path}")
+    gated = None
+    for i, record in enumerate(results):
+        context = f"results[{i}]"
+        threads = require_number(record, "threads", context)
+        static_s = require_number(record, "static_s", context)
+        stealing_s = require_number(record, "stealing_s", context)
+        speedup = require_number(record, "speedup", context)
+        print(f"  {threads:.0f} threads: static {static_s:.6f}s vs "
+              f"stealing {stealing_s:.6f}s -> {speedup:.2f}x")
+        if threads == GATE_THREADS:
+            gated = speedup
+    if gated is None:
+        raise CheckFailure(
+            f"no {GATE_THREADS}-thread record in {path}")
+    print(f"{GATE_THREADS}-thread stealing vs static on skewed splits: "
+          f"{gated:.2f}x (gate: >= {GATE_SPEEDUP}x)")
+    if gated < GATE_SPEEDUP:
+        raise CheckFailure(
+            f"stealing gate missed ({gated:.2f}x < {GATE_SPEEDUP}x)")
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_steal.json"
+    try:
+        check(path)
+    except CheckFailure as e:
+        print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
