@@ -1,0 +1,36 @@
+//! Bench E16 — the GEMM-formulation distance engine: the Exact tiled
+//! subtract–square–accumulate kernel vs `‖q‖²+‖t‖²−2·q·t` over cached
+//! row norms, plus the fused joint scan (per-tile reduction straight
+//! into the top-k / PRW accumulators), at a sweep-shaped geometry
+//! (1000 queries × 4000 train rows × 64 features). Parity is asserted
+//! in-process before anything is timed: gemm within 1e-4 (relative) of
+//! exact and clamped ≥ 0, fused-Exact prediction-identical to the
+//! materializing tiled scan.
+//!
+//! Writes `BENCH_dists.json` at the repo root (uploaded by CI alongside
+//! the other BENCH jsons). Regenerate with:
+//!
+//! ```bash
+//! cargo bench --bench bench_dists
+//! # or, with geometry control:
+//! cargo run --release -- dists --train-n 4000 --queries 1000 --d 64 \
+//!     --out-json ../BENCH_dists.json
+//! ```
+//!
+//! This bench *measures and reports*; the acceptance gate — gemm
+//! ≥ 1.5× over the exact tiled kernel at this geometry — is enforced
+//! in exactly one place, `scripts/check_bench_dists.py`, run by the CI
+//! bench job against the JSON this writes.
+
+use std::path::PathBuf;
+
+use locality_ml::cli::commands::cmd_dists;
+
+fn main() -> anyhow::Result<()> {
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../BENCH_dists.json");
+    cmd_dists(4000, 1000, 64, 7, Some(out.as_path()))?;
+    println!("\n(gate lives in scripts/check_bench_dists.py — CI fails \
+              if gemm is not >= 1.5x over the exact tiled kernel)");
+    Ok(())
+}

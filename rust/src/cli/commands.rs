@@ -800,6 +800,140 @@ pub fn cmd_steal(
     Ok(table)
 }
 
+/// E16 — the GEMM-formulation distance engine: the Exact tiled
+/// subtract–square–accumulate kernel vs the `‖q‖²+‖t‖²−2·q·t`
+/// decomposition over cached row norms, plus the fused joint scan that
+/// reduces each query-tile × train-tile block straight into the
+/// top-k / PRW accumulators. Parity is asserted **before** anything is
+/// timed: every gemm distance within 1e-4 (relative) of Exact and
+/// clamped ≥ 0, and the fused Exact scan prediction-identical to the
+/// materializing tiled scan. Optionally writes `BENCH_dists.json`;
+/// CI gates gemm ≥ 1.5× over exact via `scripts/check_bench_dists.py`.
+pub fn cmd_dists(
+    n_train: usize,
+    n_queries: usize,
+    d: usize,
+    seed: u64,
+    out_json: Option<&Path>,
+) -> Result<Table> {
+    use crate::data::Dataset;
+    use crate::kernels::{
+        pairwise_sq_dists_gemm, pairwise_sq_dists_tiled, DistanceAlgo,
+        NormCache, TileConfig,
+    };
+    use crate::learners::instance::{BANDWIDTH, K};
+    use crate::learners::{joint_scan_fused, joint_scan_tiled};
+    use crate::util::Rng;
+
+    anyhow::ensure!(n_train >= 1 && n_queries >= 1 && d >= 1,
+        "need at least one train row, one query and one feature");
+    let tiles = TileConfig::westmere();
+    let mut rng = Rng::new(seed);
+    let train: Vec<f32> =
+        (0..n_train * d).map(|_| rng.normal()).collect();
+    let queries: Vec<f32> =
+        (0..n_queries * d).map(|_| rng.normal()).collect();
+    let labels: Vec<i32> = (0..n_train)
+        .map(|_| if rng.bernoulli(0.5) { 1 } else { 0 })
+        .collect();
+    eprintln!("# dists: {n_queries}q x {n_train}t x {d}d seed={seed}");
+
+    // the one-time norm caches — the reuse half of the formulation
+    let train_norms = NormCache::compute(&train, d);
+    let query_norms = NormCache::compute(&queries, d);
+
+    // parity BEFORE timing: gemm within 1e-4 (relative) of exact and
+    // clamped at zero, at the bench geometry itself
+    let mut exact_out = vec![0.0f32; n_queries * n_train];
+    pairwise_sq_dists_tiled(&train, &queries, d, &mut exact_out, &tiles);
+    let mut gemm_out = vec![-1.0f32; n_queries * n_train];
+    pairwise_sq_dists_gemm(&train, &queries, d, train_norms.norms(),
+                           query_norms.norms(), &mut gemm_out, &tiles);
+    for i in 0..exact_out.len() {
+        anyhow::ensure!(gemm_out[i] >= 0.0,
+            "gemm distance {i} escaped the clamp: {}", gemm_out[i]);
+        // scale-aware 1e-4 bound: cancellation error is proportional to
+        // the operand norms, so a rare near-zero distance between two
+        // large-norm rows must be judged against the norm scale
+        let scale = train_norms.norms()[i % n_train]
+            + query_norms.norms()[i / n_train];
+        let tol = 1e-4 * exact_out[i].abs().max(scale).max(1.0);
+        anyhow::ensure!((gemm_out[i] - exact_out[i]).abs() <= tol,
+            "gemm parity failed at {i}: {} vs {}", gemm_out[i],
+            exact_out[i]);
+    }
+
+    // fused-scan parity BEFORE timing: under Exact the fused scan must
+    // be prediction-identical to the materializing tiled scan
+    let ds = Dataset::new(train.clone(), labels, d, 2);
+    let (kt, pt) = joint_scan_tiled(&ds, &queries, d, K, BANDWIDTH,
+                                    &tiles);
+    let (kf, pf) = joint_scan_fused(&ds, &queries, d, K, BANDWIDTH,
+                                    &tiles, DistanceAlgo::Exact,
+                                    &train_norms);
+    anyhow::ensure!(kt == kf && pt == pf,
+        "fused Exact scan diverged from the materializing tiled scan");
+
+    let reps = 2;
+    let exact_s = time_best(reps, || {
+        pairwise_sq_dists_tiled(&train, &queries, d, &mut exact_out,
+                                &tiles)
+    });
+    let gemm_s = time_best(reps, || {
+        pairwise_sq_dists_gemm(&train, &queries, d, train_norms.norms(),
+                               query_norms.norms(), &mut gemm_out,
+                               &tiles)
+    });
+    let joint_tiled_s = time_best(reps, || {
+        crate::bench::black_box(joint_scan_tiled(&ds, &queries, d, K,
+                                                 BANDWIDTH, &tiles));
+    });
+    let joint_fused_s = time_best(reps, || {
+        crate::bench::black_box(joint_scan_fused(
+            &ds, &queries, d, K, BANDWIDTH, &tiles, DistanceAlgo::Gemm,
+            &train_norms));
+    });
+
+    let shape = format!("{n_queries}q x {n_train}t x {d}d");
+    // (variant, secs, speedup vs its exact counterpart)
+    let records: Vec<(&str, f64, f64)> = vec![
+        ("exact-tiled", exact_s, 1.0),
+        ("gemm", gemm_s, exact_s / gemm_s),
+        ("joint-scan-tiled", joint_tiled_s, 1.0),
+        ("joint-scan-fused-gemm", joint_fused_s,
+         joint_tiled_s / joint_fused_s),
+    ];
+    let mut table = Table::new(
+        "Distance engine — exact subtract–square–accumulate vs GEMM \
+         formulation over cached norms (parity asserted pre-timing)",
+        &["variant", "shape", "secs", "speedup vs exact"]);
+    for (variant, secs, speedup) in &records {
+        table.row(&[variant.to_string(), shape.clone(),
+                    format!("{secs:.6}"), format!("{speedup:.2}x")]);
+    }
+    println!("{}", table.to_markdown());
+
+    if let Some(path) = out_json {
+        let mut json = String::from("{\n");
+        json.push_str("  \"schema\": \"locality-ml/bench-dists/v1\",\n");
+        json.push_str(&format!(
+            "  \"shape\": {{\"queries\": {n_queries}, \"train\": \
+             {n_train}, \"d\": {d}, \"seed\": {seed}}},\n"));
+        json.push_str("  \"results\": [\n");
+        for (i, (variant, secs, speedup)) in records.iter().enumerate() {
+            let comma = if i + 1 < records.len() { "," } else { "" };
+            json.push_str(&format!(
+                "    {{\"variant\": \"{variant}\", \"secs\": {secs:.6}, \
+                 \"speedup_vs_exact\": {speedup:.3}}}{comma}\n"));
+        }
+        json.push_str("  ]\n}\n");
+        std::fs::write(path, json)
+            .with_context(|| format!("writing {}", path.display()))?;
+        eprintln!("# distance engine timings -> {}", path.display());
+    }
+    Ok(table)
+}
+
 /// `info` — artifact inventory + platform.
 pub fn cmd_info(artifacts: &Path) -> Result<()> {
     let engine = Engine::open(artifacts)?;

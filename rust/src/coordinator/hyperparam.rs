@@ -16,7 +16,7 @@
 //! # The parallel shared-distance sweep engine
 //!
 //! Since PR 3 the split distances are batched through the locality-tiled
-//! distance kernel ([`pairwise_sq_dists_gather_par`]) instead of a
+//! distance kernel ([`pairwise_sq_dists_gather_algo_par`]) instead of a
 //! per-pair scalar loop, and [`sweep_shared_par`] shards the candidate
 //! sweep across CV splits on the scoped worker pool: one job per split,
 //! results merged in split order. Since PR 4 the split jobs can also be
@@ -28,10 +28,20 @@
 //! **bit-identical to the sequential [`sweep_shared`] at any thread
 //! count under either schedule** — property-tested below.
 //! [`sweep_shared_auto`] is the production entry: it resolves the
-//! session thread count (`--threads` → `LOCALITY_ML_THREADS` → cores)
-//! and schedule (`--schedule` → `LOCALITY_ML_SCHEDULE` → auto), and
-//! gates the fan-out on the total distance work via
+//! session thread count (`--threads` → `LOCALITY_ML_THREADS` → cores),
+//! schedule (`--schedule` → `LOCALITY_ML_SCHEDULE` → auto) and
+//! distance formulation (`--dist-algo` → `LOCALITY_ML_DIST_ALGO` →
+//! auto), and gates the fan-out on the total distance work via
 //! `effective_threads`, so small sweeps stay on the sequential path.
+//!
+//! Since PR 5 the engine is also wired to the **GEMM-formulation
+//! distance kernel**: [`sweep_shared_algo`] builds ONE dataset-level
+//! [`NormCache`] per sweep and every split gathers its row norms from
+//! it — under the old nest each train row's `‖t‖²` was implicitly
+//! recomputed once per split per candidate, pure redundancy by the
+//! paper's "reuse of computation results" guideline. The
+//! `norm_cache_builds` counter property test pins the build-once
+//! contract.
 //!
 //! # Distance-eval accounting
 //!
@@ -45,11 +55,12 @@
 //! single-pass count.
 
 use crate::data::{Dataset, Folds};
+use crate::kernels::distance::default_dist_algo;
 use crate::kernels::parallel::{
     default_schedule, default_threads, effective_threads,
-    pairwise_sq_dists_gather_par, run_jobs, Schedule,
+    pairwise_sq_dists_gather_algo_par, run_jobs, Schedule,
 };
-use crate::kernels::TileConfig;
+use crate::kernels::{DistanceAlgo, NormCache, TileConfig};
 
 /// Smallest PRW bandwidth the vote will use. Silverman's rule returns
 /// `h = 0` for constant-feature datasets (σ = 0), which would make the
@@ -88,24 +99,32 @@ struct SplitDistances {
     truth: Vec<i32>,
 }
 
-/// Batch one CV split's query×train distances through the tiled kernel
-/// (bit-identical to the scalar `sq_dist` loop it replaced — the tiled
-/// and naive distance paths share per-pair arithmetic) and sort each
-/// query's neighbour list. Returns the split structure and the number
-/// of distance evaluations it cost. The kernel runs sequentially by
-/// construction (threads = 1): parallelism lives one level up, in the
-/// split fan-out, which already owns the cores.
+/// Batch one CV split's query×train distances through the
+/// formulation-dispatching kernel. Under [`DistanceAlgo::Exact`] this
+/// is bit-identical to the scalar `sq_dist` loop it replaced (the
+/// tiled and naive distance paths share per-pair arithmetic); under
+/// Gemm the cross term runs through the matmul micro-kernel and the
+/// row norms are **gathered from the dataset-level [`NormCache`]** —
+/// built once per dataset and reused across every split and every
+/// candidate, where the old nest implicitly recomputed each train
+/// row's norm once per split per candidate. Returns the split
+/// structure and the number of distance evaluations it cost. The
+/// kernel runs sequentially by construction (threads = 1): parallelism
+/// lives one level up, in the split fan-out, which already owns the
+/// cores.
 fn split_distances(
     ds: &Dataset,
     folds: &Folds,
     test_fold: usize,
     tiles: &TileConfig,
+    algo: DistanceAlgo,
+    cache: &NormCache,
 ) -> (SplitDistances, u64) {
     let train_idx = folds.train_indices(test_fold);
     let test_idx = folds.test_indices(test_fold);
     let n = train_idx.len();
-    let dists = pairwise_sq_dists_gather_par(
-        &ds.features, ds.d, &train_idx, test_idx, tiles, 1,
+    let dists = pairwise_sq_dists_gather_algo_par(
+        &ds.features, ds.d, &train_idx, test_idx, cache, algo, tiles, 1,
         Schedule::Static);
     let mut neighbours = Vec::with_capacity(test_idx.len());
     let mut truth = Vec::with_capacity(test_idx.len());
@@ -165,6 +184,7 @@ struct SplitCounts {
 
 /// Evaluate every k and every bandwidth on one split's shared distance
 /// structure — the unit of work a sweep job runs.
+#[allow(clippy::too_many_arguments)]
 fn eval_split(
     ds: &Dataset,
     folds: &Folds,
@@ -172,9 +192,11 @@ fn eval_split(
     ks: &[usize],
     bandwidths: &[f32],
     tiles: &TileConfig,
+    algo: DistanceAlgo,
+    cache: &NormCache,
 ) -> SplitCounts {
     let (split, distance_evals) =
-        split_distances(ds, folds, test_fold, tiles);
+        split_distances(ds, folds, test_fold, tiles, algo, cache);
     let mut k_correct = vec![0u64; ks.len()];
     let mut b_correct = vec![0u64; bandwidths.len()];
     let mut total = 0u64;
@@ -232,36 +254,62 @@ fn merge_splits(
     )
 }
 
+/// The fully-parameterised shared-distance sweep engine: one job per
+/// CV split distributed over the scoped worker pool, every split
+/// evaluated under the given [`DistanceAlgo`] against ONE dataset-level
+/// [`NormCache`] built here — once per sweep, reused by every split
+/// and every candidate (the reuse the `norm_cache_builds` property
+/// test pins; the old nest implicitly recomputed each row norm once
+/// per split per candidate). Partials come back in **split order**
+/// under both schedules and the merge is pure u64 arithmetic, so for a
+/// fixed algorithm the result is bit-identical at ANY thread count
+/// under EITHER schedule; `threads = 1` runs the jobs inline.
+pub fn sweep_shared_algo(
+    ds: &Dataset,
+    folds: &Folds,
+    ks: &[usize],
+    bandwidths: &[f32],
+    threads: usize,
+    schedule: Schedule,
+    algo: DistanceAlgo,
+) -> (SweepResult<usize>, SweepResult<f32>) {
+    let tiles = TileConfig::westmere_workers(threads.max(1));
+    let tiles_ref = &tiles;
+    let cache = NormCache::compute(&ds.features, ds.d);
+    let cache_ref = &cache;
+    let jobs: Vec<Box<dyn FnOnce() -> SplitCounts + Send + '_>> =
+        (0..folds.k())
+        .map(|test_fold| {
+            Box::new(move || {
+                eval_split(ds, folds, test_fold, ks, bandwidths,
+                           tiles_ref, algo, cache_ref)
+            }) as Box<dyn FnOnce() -> SplitCounts + Send + '_>
+        })
+        .collect();
+    let parts = run_jobs(threads, schedule, jobs);
+    merge_splits(&parts, ks, bandwidths)
+}
+
 /// Shared-distance sweep (the guideline): distances per CV split are
 /// computed once; every k and every bandwidth is evaluated from them.
-/// Sequential over splits — the oracle the parallel engine is checked
-/// against. Returns (k sweep, bandwidth sweep).
+/// Sequential over splits on the Exact formulation — the oracle the
+/// parallel engine is checked against. Returns (k sweep, bandwidth
+/// sweep).
 pub fn sweep_shared(
     ds: &Dataset,
     folds: &Folds,
     ks: &[usize],
     bandwidths: &[f32],
 ) -> (SweepResult<usize>, SweepResult<f32>) {
-    let tiles = TileConfig::westmere();
-    let parts: Vec<SplitCounts> = (0..folds.k())
-        .map(|test_fold| {
-            eval_split(ds, folds, test_fold, ks, bandwidths, &tiles)
-        })
-        .collect();
-    merge_splits(&parts, ks, bandwidths)
+    sweep_shared_algo(ds, folds, ks, bandwidths, 1, Schedule::Static,
+                      DistanceAlgo::Exact)
 }
 
-/// The parallel shared-distance sweep engine: one job per CV split,
-/// distributed over the scoped worker pool — contiguously under
-/// [`Schedule::Static`], or claimed split-by-split from the shared
-/// cursor under stealing, so skewed/ragged splits no longer serialise
-/// onto the worker whose contiguous range held the big folds. Partials
-/// come back in **split order** under both schedules and the merge is
-/// pure u64 arithmetic, so the result is bit-identical to the
-/// sequential [`sweep_shared`] at ANY thread count under EITHER
-/// schedule; `threads = 1` runs the jobs inline. Each job runs the same
-/// `eval_split` as [`sweep_shared`] (its distance kernel stays
-/// sequential — the split fan-out already owns the cores).
+/// The parallel shared-distance sweep engine on the Exact formulation:
+/// bit-identical to the sequential [`sweep_shared`] at ANY thread
+/// count under EITHER schedule (see [`sweep_shared_algo`] for the
+/// split fan-out and merge contract; each split's distance kernel
+/// stays sequential — the split fan-out already owns the cores).
 pub fn sweep_shared_par(
     ds: &Dataset,
     folds: &Folds,
@@ -270,27 +318,18 @@ pub fn sweep_shared_par(
     threads: usize,
     schedule: Schedule,
 ) -> (SweepResult<usize>, SweepResult<f32>) {
-    let tiles = TileConfig::westmere_workers(threads.max(1));
-    let tiles_ref = &tiles;
-    let jobs: Vec<Box<dyn FnOnce() -> SplitCounts + Send + '_>> =
-        (0..folds.k())
-        .map(|test_fold| {
-            Box::new(move || {
-                eval_split(ds, folds, test_fold, ks, bandwidths,
-                           tiles_ref)
-            }) as Box<dyn FnOnce() -> SplitCounts + Send + '_>
-        })
-        .collect();
-    let parts = run_jobs(threads, schedule, jobs);
-    merge_splits(&parts, ks, bandwidths)
+    sweep_shared_algo(ds, folds, ks, bandwidths, threads, schedule,
+                      DistanceAlgo::Exact)
 }
 
 /// Production entry for the sweep engine: shards across CV splits with
 /// the session thread count (`--threads` → `LOCALITY_ML_THREADS` →
-/// available cores) and session schedule (`--schedule` →
-/// `LOCALITY_ML_SCHEDULE` → auto), gated by `effective_threads` on the
-/// sweep's total distance work (multiply-adds) so small sweeps stay on
-/// the exact sequential path with no spawns.
+/// available cores), session schedule (`--schedule` →
+/// `LOCALITY_ML_SCHEDULE` → auto) and session distance formulation
+/// (`--dist-algo` → `LOCALITY_ML_DIST_ALGO` → auto, resolved per split
+/// on its multiply-adds), gated by `effective_threads` on the sweep's
+/// total distance work so small sweeps stay on the exact sequential
+/// path with no spawns.
 pub fn sweep_shared_auto(
     ds: &Dataset,
     folds: &Folds,
@@ -304,8 +343,8 @@ pub fn sweep_shared_auto(
         })
         .sum();
     let threads = effective_threads(default_threads(), work);
-    sweep_shared_par(ds, folds, ks, bandwidths, threads,
-                     default_schedule())
+    sweep_shared_algo(ds, folds, ks, bandwidths, threads,
+                      default_schedule(), default_dist_algo())
 }
 
 /// The naive nest the paper criticises: every candidate recomputes the
@@ -320,13 +359,18 @@ pub fn sweep_naive(
     bandwidths: &[f32],
 ) -> (SweepResult<usize>, SweepResult<f32>) {
     let tiles = TileConfig::westmere();
+    // the baseline keeps its per-candidate distance redundancy (that is
+    // what it measures) but shares one norm cache like every other
+    // caller — the Exact formulation never reads it
+    let cache = NormCache::compute(&ds.features, ds.d);
     let mut k_acc = Vec::with_capacity(ks.len());
     let mut k_evals = 0u64;
     for &k in ks {
         let (mut correct, mut total) = (0u64, 0u64);
         for test_fold in 0..folds.k() {
-            let (split, evals) =
-                split_distances(ds, folds, test_fold, &tiles);
+            let (split, evals) = split_distances(
+                ds, folds, test_fold, &tiles, DistanceAlgo::Exact,
+                &cache);
             k_evals += evals;
             for (sorted, &truth) in split.neighbours.iter()
                 .zip(&split.truth) {
@@ -343,8 +387,9 @@ pub fn sweep_naive(
     for &h in bandwidths {
         let (mut correct, mut total) = (0u64, 0u64);
         for test_fold in 0..folds.k() {
-            let (split, evals) =
-                split_distances(ds, folds, test_fold, &tiles);
+            let (split, evals) = split_distances(
+                ds, folds, test_fold, &tiles, DistanceAlgo::Exact,
+                &cache);
             b_evals += evals;
             for (sorted, &truth) in split.neighbours.iter()
                 .zip(&split.truth) {
@@ -460,8 +505,17 @@ mod tests {
                      under {sched:?}");
             }
         }
-        let (ak, ab) = sweep_shared_auto(&ds, &folds, &ks, &hs);
-        assert_eq!((ak, ab), (sk, sb), "auto sweep diverged");
+        // sweep_shared_auto follows the session dist-algo policy — the
+        // first env knob that legitimately changes output bits (unlike
+        // threads/schedule, which are bit-invariant by contract) — so
+        // compare it against the engine run with the same resolved
+        // policy rather than against the Exact oracle unconditionally.
+        let algo = crate::kernels::distance::default_dist_algo();
+        let want = sweep_shared_algo(&ds, &folds, &ks, &hs, 1,
+                                     Schedule::Static, algo);
+        let got = sweep_shared_auto(&ds, &folds, &ks, &hs);
+        assert_eq!(got, want,
+            "auto sweep diverged from its resolved-policy engine run");
     }
 
     #[test]
@@ -523,6 +577,99 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn norm_cache_is_built_exactly_once_per_sweep() {
+        // The satellite reuse property: a full sweep — every CV split,
+        // every candidate — builds the dataset-level NormCache exactly
+        // once. The counter is thread-local, so concurrent tests
+        // cannot perturb it; at threads = 1 every split job runs
+        // inline on this thread, so a hidden per-split rebuild would
+        // land on this counter and fail the assertion. The 4-thread
+        // run then pins that the fan-out itself adds no builds on the
+        // calling thread either.
+        use crate::kernels::distance::norm_cache_builds;
+        check("norm-cache-once", 5, |g| {
+            let k = g.usize_in(2, 6);
+            let n = k * g.usize_in(3, 10);
+            let d = g.usize_in(1, 6);
+            let ds = gaussian_mixture(MixtureSpec {
+                n, d, classes: 2, separation: 0.7, noise: 1.0,
+                seed: g.u64(),
+            });
+            let folds = Folds::split(n, k, g.u64());
+            let ks = [1usize, 3];
+            let hs = [8.0f32];
+            let before = norm_cache_builds();
+            let seq = sweep_shared_algo(&ds, &folds, &ks, &hs, 1,
+                                        Schedule::Static,
+                                        DistanceAlgo::Gemm);
+            prop_assert!(norm_cache_builds() - before == 1,
+                "sequential gemm sweep built {} norm caches over {k} \
+                 splits (want exactly 1)",
+                norm_cache_builds() - before);
+            let before = norm_cache_builds();
+            let par = sweep_shared_algo(&ds, &folds, &ks, &hs, 4,
+                                        Schedule::Stealing,
+                                        DistanceAlgo::Gemm);
+            prop_assert!(norm_cache_builds() - before == 1,
+                "parallel gemm sweep built {} norm caches on the \
+                 calling thread (want exactly 1)",
+                norm_cache_builds() - before);
+            prop_assert!(par == seq,
+                "gemm sweep diverged between 1 and 4 threads");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemm_sweep_is_bit_identical_across_threads_and_schedules() {
+        // For a FIXED formulation the split fan-out must stay
+        // bit-identical — the gemm engine inherits the same merge
+        // contract as the exact one.
+        let (ds, folds) = small();
+        let ks = [1usize, 3, 5];
+        let hs = [0.5f32, 8.0];
+        let want = sweep_shared_algo(&ds, &folds, &ks, &hs, 1,
+                                     Schedule::Static,
+                                     DistanceAlgo::Gemm);
+        for threads in [2usize, 4, 7] {
+            for sched in [Schedule::Static, Schedule::Stealing,
+                          Schedule::Auto] {
+                let got = sweep_shared_algo(&ds, &folds, &ks, &hs,
+                                            threads, sched,
+                                            DistanceAlgo::Gemm);
+                assert_eq!(got, want,
+                    "gemm sweep diverged at {threads} threads under \
+                     {sched:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_sweep_stays_close_to_the_exact_oracle() {
+        // The formulations may disagree on near-tied neighbours (the
+        // ≤ 1e-4 distance contract), so accuracies are compared within
+        // a small tolerance rather than bit-exactly; the eval
+        // accounting is shape-based and must be identical.
+        let (ds, folds) = small();
+        let ks = [1usize, 3, 5, 9];
+        let hs = [0.5f32, 2.0, 8.0];
+        let (ek, eb) = sweep_shared(&ds, &folds, &ks, &hs);
+        let (gk, gb) = sweep_shared_algo(&ds, &folds, &ks, &hs, 1,
+                                         Schedule::Static,
+                                         DistanceAlgo::Gemm);
+        assert_eq!(ek.distance_evals, gk.distance_evals);
+        assert_eq!(eb.distance_evals, gb.distance_evals);
+        for (e, g) in ek.accuracy.iter().zip(&gk.accuracy) {
+            assert!((e - g).abs() <= 0.05,
+                "gemm k-sweep accuracy drifted: {e} vs {g}");
+        }
+        for (e, g) in eb.accuracy.iter().zip(&gb.accuracy) {
+            assert!((e - g).abs() <= 0.05,
+                "gemm bandwidth-sweep accuracy drifted: {e} vs {g}");
+        }
     }
 
     #[test]

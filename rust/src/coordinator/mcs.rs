@@ -11,17 +11,23 @@
 
 use crate::data::sampling::majority_vote;
 use crate::data::Dataset;
-use crate::kernels::{parallel, TileConfig};
+use crate::kernels::{distance, parallel, DistanceAlgo, NormCache,
+                     TileConfig};
 use crate::learners::instance::{BANDWIDTH, K};
-use crate::learners::{joint_scan_par, NaiveBayes};
+use crate::learners::{joint_scan_fused_par, joint_scan_par, NaiveBayes};
 
 /// A trained three-member system: NB model + the remembered training set
-/// for the instance-based members.
+/// for the instance-based members, plus the training set's [`NormCache`]
+/// — computed once at fit time and reused by every `predict` call on
+/// the GEMM-formulation distance path (the "reuse of computation
+/// results" guideline applied across ensemble members and streams).
 pub struct MultiClassifier {
     pub nb: NaiveBayes,
     train: Dataset,
     pub k: usize,
     pub bandwidth: f32,
+    norms: NormCache,
+    dist_algo: Option<DistanceAlgo>,
 }
 
 /// Per-member and combined predictions for one stream pass.
@@ -40,10 +46,22 @@ impl MultiClassifier {
     pub fn fit(train: &Dataset) -> Self {
         Self {
             nb: NaiveBayes::fit(train),
+            norms: NormCache::compute(&train.features, train.d),
             train: train.clone(),
             k: K,
             bandwidth: BANDWIDTH,
+            dist_algo: None,
         }
+    }
+
+    /// Pin the distance formulation for this classifier instead of the
+    /// session default (`--dist-algo` → `LOCALITY_ML_DIST_ALGO` →
+    /// auto). Exact keeps every prediction bit-identical to the
+    /// standalone scans; Gemm routes the shared distance pass through
+    /// the GEMM formulation over the fit-time norm cache.
+    pub fn with_dist_algo(mut self, algo: DistanceAlgo) -> Self {
+        self.dist_algo = Some(algo);
+        self
     }
 
     /// One pass over the test stream: every point is consumed by all
@@ -62,15 +80,27 @@ impl MultiClassifier {
         let nb = self.nb.predict(rows);
         // distance work = queries × train rows × features; tiny streams
         // stay on the sequential scan (no spawn overhead)
-        let threads = parallel::effective_threads(
-            parallel::default_threads(),
-            (rows.len() / self.train.d.max(1)) * self.train.n
-                * self.train.d);
+        let work = (rows.len() / self.train.d.max(1)) * self.train.n
+            * self.train.d;
+        let threads =
+            parallel::effective_threads(parallel::default_threads(), work);
         let tiles = TileConfig::westmere_workers(threads);
-        let (knn, prw) =
-            joint_scan_par(&self.train, rows, self.train.d, self.k,
-                           self.bandwidth, &tiles, threads,
-                           parallel::default_schedule());
+        let sched = parallel::default_schedule();
+        // distance formulation: instance pin → session policy, Auto
+        // resolved once on the whole stream's multiply-adds. Gemm runs
+        // the fused scans over the fit-time norm cache; Exact keeps
+        // the bit-stable materializing path.
+        let algo = self
+            .dist_algo
+            .unwrap_or_else(distance::default_dist_algo)
+            .resolve(work);
+        let (knn, prw) = match algo {
+            DistanceAlgo::Gemm => joint_scan_fused_par(
+                &self.train, rows, self.train.d, self.k, self.bandwidth,
+                &tiles, DistanceAlgo::Gemm, &self.norms, threads, sched),
+            _ => joint_scan_par(&self.train, rows, self.train.d, self.k,
+                                self.bandwidth, &tiles, threads, sched),
+        };
         let vote = majority_vote(
             &[nb.clone(), knn.clone(), prw.clone()],
             self.train.n_classes,
@@ -92,12 +122,38 @@ mod tests {
     #[test]
     fn members_match_standalone_learners() {
         let (train, test) = chembl_like(320, 3).split(256);
-        let mcs = MultiClassifier::fit(&train);
+        // pinned Exact: the member-parity contract is bitwise, and the
+        // session default may legitimately resolve to Gemm on a stream
+        // this large
+        let mcs = MultiClassifier::fit(&train)
+            .with_dist_algo(DistanceAlgo::Exact);
         let p = mcs.predict(&test.features);
         assert_eq!(p.nb, mcs.nb.predict(&test.features));
         assert_eq!(p.knn, knn_scan(&train, &test.features, test.d, K));
         assert_eq!(p.prw,
                    prw_scan(&train, &test.features, test.d, BANDWIDTH));
+    }
+
+    #[test]
+    fn gemm_engine_keeps_member_quality_and_majority_contract() {
+        // The Gemm path moves distances by ≤ 1e-4, so member parity is
+        // statistical rather than bitwise: accuracies must hold up and
+        // the vote must still be a true majority of the members.
+        let (train, test) = chembl_like(640, 7).split(512);
+        let p = MultiClassifier::fit(&train)
+            .with_dist_algo(DistanceAlgo::Gemm)
+            .predict(&test.features);
+        assert!(accuracy(&p.knn, &test.labels) > 0.7,
+            "gemm knn member acc {}", accuracy(&p.knn, &test.labels));
+        assert!(accuracy(&p.prw, &test.labels) > 0.6,
+            "gemm prw member acc {}", accuracy(&p.prw, &test.labels));
+        for i in 0..p.vote.len() {
+            let agree = [&p.nb, &p.knn, &p.prw]
+                .iter()
+                .filter(|m| m[i] == p.vote[i])
+                .count();
+            assert!(agree >= 2, "vote {i} is not a majority");
+        }
     }
 
     #[test]

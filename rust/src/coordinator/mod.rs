@@ -21,8 +21,8 @@ pub mod train_loop;
 pub use batcher::{BatchBuffers, EpochBatcher};
 pub use ensemble::{BaggedNb, BoostedNb};
 pub use hyperparam::{
-    silverman_bandwidth, sweep_naive, sweep_shared, sweep_shared_auto,
-    sweep_shared_par, SweepResult, MIN_BANDWIDTH,
+    silverman_bandwidth, sweep_naive, sweep_shared, sweep_shared_algo,
+    sweep_shared_auto, sweep_shared_par, SweepResult, MIN_BANDWIDTH,
 };
 pub use fold_stream::{FoldStream, PassStats};
 pub use joint_exec::{run_joint, run_separate, TimedRun};

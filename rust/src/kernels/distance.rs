@@ -1,19 +1,44 @@
 //! Cache-blocked pairwise squared Euclidean distances — the shared hot
-//! loop of k-NN (Alg 10) and the Parzen–Rosenblatt window (Alg 11).
+//! loop of k-NN (Alg 10) and the Parzen–Rosenblatt window (Alg 11) — in
+//! **two formulations** selected by [`DistanceAlgo`]:
 //!
-//! The naive scan streams the whole training matrix through the cache
-//! once **per query**: for `|RT|` training rows of `d` features, every
-//! query re-reads `|RT|·d` elements whose reuse distance exceeds any
-//! cache level (§4 of the paper measures exactly this). The tiled kernel
-//! blocks both sides: a train tile and a query tile sized by
-//! [`TileConfig::pair_tiles`] fit the L1 budget together, so each train
-//! row loaded from memory is reused against a whole tile of queries.
+//! * **Exact** — one pass over `d` per pair, subtract–square–accumulate
+//!   ([`sq_dist`]). The naive scan streams the whole training matrix
+//!   through the cache once **per query** (§4 of the paper measures
+//!   exactly this); the tiled kernel blocks both sides so a train tile
+//!   is L1-resident across a whole query tile. Per-pair arithmetic is
+//!   identical in both versions, so tiled distances are bit-identical
+//!   to naive ones and prediction parity downstream is exact.
+//! * **Gemm** — the §4 "reuse of computation results" decomposition
+//!   `‖q−t‖² = ‖q‖² + ‖t‖² − 2·q·t`: the dominant cross term becomes a
+//!   plain GEMM over the pre-transposed training matrix, executed by
+//!   the 4-deep unrolled [`matmul_tiled`] micro-kernel (unit-stride
+//!   rows of both operands, SIMD-friendly independent accumulators —
+//!   the same blocking the matmul CI gate measures at ≥ 2×), while the
+//!   row norms are **precomputed once** and reused across every query,
+//!   every CV split, every sweep candidate and every ensemble member
+//!   ([`NormCache`]). Results are within ≤ 1e-4 of Exact on well-scaled
+//!   data (property-tested) but NOT bit-identical: the formulation
+//!   reassociates the reduction. Exact stays the oracle.
 //!
-//! Per-pair arithmetic (one pass over `d`, subtract–square–accumulate)
-//! is identical in both versions, so tiled distances are bit-identical
-//! to naive ones and prediction parity downstream is exact, not just
-//! within tolerance.
+//! # Catastrophic cancellation guard
+//!
+//! When `q ≈ t` (near-duplicate rows) or the feature magnitudes are
+//! large, `‖q‖² + ‖t‖² − 2·q·t` cancels catastrophically and can come
+//! out a few ulps **negative** — a downstream `sqrt` or Gaussian
+//! `exp(−d/2h²)` bandwidth pass would turn that into NaN. Every Gemm
+//! distance is therefore clamped at `0.0` before it leaves the kernel
+//! (regression-tested on near-duplicate, constant-feature and
+//! large-magnitude rows). The Gemm formulation assumes finite features;
+//! non-finite inputs (±inf/NaN) stay on the Exact path, whose NaN
+//! ordering contract is preserved by `total_cmp` downstream.
+//!
+//! [`matmul_tiled`]: super::matmul::matmul_tiled
 
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::matmul::matmul_tiled;
 use super::tile::TileConfig;
 
 /// Squared Euclidean distance, accumulated in ascending feature order.
@@ -40,6 +65,203 @@ pub fn gather_rows(src: &[f32], d: usize, idx: &[usize]) -> Vec<f32> {
     }
     out
 }
+
+// ---------------------------------------------------------------------
+// DistanceAlgo policy
+// ---------------------------------------------------------------------
+
+/// Which distance formulation a call should use. Mirrors the
+/// threads/schedule policies: an explicit CLI/env choice is taken
+/// verbatim, `Auto` picks per call by the work size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DistanceAlgo {
+    /// Subtract–square–accumulate per pair — the bit-stable oracle
+    /// (and the only formulation defined for non-finite features).
+    Exact,
+    /// `‖q‖² + ‖t‖² − 2·q·t` with the cross term as a GEMM over cached
+    /// row norms; ≤ 1e-4 vs Exact on finite data, clamped at 0.
+    Gemm,
+    /// Gemm when the call's multiply-adds clear [`MIN_GEMM_WORK`]
+    /// (the transpose + norm-combine overhead amortises), else Exact.
+    Auto,
+}
+
+/// Minimum distance-kernel work (f32 multiply-adds, `nq·n·d`) before
+/// the Gemm formulation's packing overhead (one train transpose, one
+/// norm-combine pass over the `nq × n` output) pays for itself under
+/// [`DistanceAlgo::Auto`]. Below this the Exact tiled kernel wins.
+pub const MIN_GEMM_WORK: usize = 1 << 18;
+
+impl DistanceAlgo {
+    /// Parse a CLI/env spelling. Accepts `exact`, `gemm` and `auto`,
+    /// case-insensitively.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "exact" => Some(Self::Exact),
+            "gemm" => Some(Self::Gemm),
+            "auto" => Some(Self::Auto),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling (the one `parse` round-trips).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Exact => "exact",
+            Self::Gemm => "gemm",
+            Self::Auto => "auto",
+        }
+    }
+
+    /// Resolve `Auto` against a call's multiply-add count; explicit
+    /// policies pass through verbatim. Never returns `Auto`, so
+    /// dispatch sites can match on the concrete formulation.
+    pub fn resolve(self, work: usize) -> Self {
+        match self {
+            Self::Auto => {
+                if work >= MIN_GEMM_WORK {
+                    Self::Gemm
+                } else {
+                    Self::Exact
+                }
+            }
+            other => other,
+        }
+    }
+}
+
+/// Session-wide `--dist-algo` override; 0 = unset, then 1/2/3 for
+/// exact/gemm/auto (the encoding is private to this pair of fns).
+static DIST_ALGO_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the `--dist-algo` CLI override for the rest of the process
+/// (`None` clears it).
+pub fn set_dist_algo(algo: Option<DistanceAlgo>) {
+    let code = match algo {
+        None => 0,
+        Some(DistanceAlgo::Exact) => 1,
+        Some(DistanceAlgo::Gemm) => 2,
+        Some(DistanceAlgo::Auto) => 3,
+    };
+    DIST_ALGO_OVERRIDE.store(code, Ordering::Relaxed);
+}
+
+/// Resolve the session distance formulation: CLI override
+/// ([`set_dist_algo`]) → `LOCALITY_ML_DIST_ALGO` (unparsable values are
+/// ignored, mirroring the threads/schedule policies) →
+/// [`DistanceAlgo::Auto`].
+pub fn default_dist_algo() -> DistanceAlgo {
+    match DIST_ALGO_OVERRIDE.load(Ordering::Relaxed) {
+        1 => return DistanceAlgo::Exact,
+        2 => return DistanceAlgo::Gemm,
+        3 => return DistanceAlgo::Auto,
+        _ => {}
+    }
+    if let Ok(v) = std::env::var("LOCALITY_ML_DIST_ALGO") {
+        if let Some(a) = DistanceAlgo::parse(&v) {
+            return a;
+        }
+    }
+    DistanceAlgo::Auto
+}
+
+// ---------------------------------------------------------------------
+// Cached row norms
+// ---------------------------------------------------------------------
+
+thread_local! {
+    /// Per-thread count of [`NormCache::compute`] calls — the
+    /// instrumentation behind the "norms are computed once per dataset"
+    /// reuse property tests (thread-local so concurrent tests cannot
+    /// perturb each other's counts; at `threads = 1` every sweep job
+    /// runs inline on the caller's thread, so a hidden per-split
+    /// rebuild lands on the caller's counter and the test catches it).
+    static NORM_CACHE_BUILDS: Cell<u64> = Cell::new(0);
+}
+
+/// This thread's running [`NormCache::compute`] count (see the
+/// thread-local's doc for how the reuse property tests consume it).
+pub fn norm_cache_builds() -> u64 {
+    NORM_CACHE_BUILDS.with(|c| c.get())
+}
+
+/// `‖row‖²` for every row of a row-major `[n × d]` matrix, accumulated
+/// in ascending feature order (bitwise, this is `sq_dist(row, zeros)`).
+pub fn row_sq_norms(rows: &[f32], d: usize) -> Vec<f32> {
+    assert!(d > 0, "feature dimension must be positive");
+    assert_eq!(rows.len() % d, 0);
+    rows.chunks_exact(d)
+        .map(|r| {
+            let mut acc = 0.0f32;
+            for &v in r {
+                acc += v * v;
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Precomputed `‖row‖²` per dataset row — the "reuse of computation
+/// results" half of the Gemm formulation. Built **once per dataset**
+/// and shared (by reference) across every CV split, every sweep
+/// candidate and every ensemble member; index-sliced consumers
+/// [`gather`](NormCache::gather) the subset they need instead of ever
+/// recomputing a norm.
+#[derive(Debug, Clone)]
+pub struct NormCache {
+    norms: Vec<f32>,
+}
+
+impl NormCache {
+    /// Compute the per-row squared norms of a row-major `[n × d]`
+    /// matrix (counted on [`norm_cache_builds`] — the reuse property
+    /// tests assert this happens once per dataset, not once per split).
+    pub fn compute(rows: &[f32], d: usize) -> Self {
+        NORM_CACHE_BUILDS.with(|c| c.set(c.get() + 1));
+        Self { norms: row_sq_norms(rows, d) }
+    }
+
+    /// The cached norms, indexed by dataset row.
+    pub fn norms(&self) -> &[f32] {
+        &self.norms
+    }
+
+    /// Number of cached rows.
+    pub fn len(&self) -> usize {
+        self.norms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.norms.is_empty()
+    }
+
+    /// Norms of an index-sliced row subset (CV split, bootstrap sample)
+    /// — one gather, no recomputation.
+    pub fn gather(&self, idx: &[usize]) -> Vec<f32> {
+        idx.iter().map(|&i| self.norms[i]).collect()
+    }
+}
+
+/// Transpose a row-major `[n × d]` matrix into `[d × n]` — the one-time
+/// packing step that lets the Gemm cross term run as a plain
+/// `[nq × d]·[d × n]` matmul with unit-stride inner rows.
+pub fn transpose_rows(rows: &[f32], d: usize) -> Vec<f32> {
+    assert!(d > 0, "feature dimension must be positive");
+    assert_eq!(rows.len() % d, 0);
+    let n = rows.len() / d;
+    let mut out = vec![0.0f32; rows.len()];
+    for i in 0..n {
+        let row = &rows[i * d..(i + 1) * d];
+        for (f, &v) in row.iter().enumerate() {
+            out[f * n + i] = v;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Exact kernels
+// ---------------------------------------------------------------------
 
 /// Naive reference: `out[q·n + j] = ‖queries[q] − train[j]‖²`, computed
 /// query-at-a-time (each query streams the full training matrix).
@@ -95,11 +317,99 @@ pub fn pairwise_sq_dists_tiled(
     }
 }
 
+// ---------------------------------------------------------------------
+// GEMM formulation
+// ---------------------------------------------------------------------
+
+/// The Gemm-formulation core over a **pre-transposed** training matrix:
+/// `train_t` is `[d × n]` (one [`transpose_rows`] pack, amortised
+/// across every query tile and every caller that reuses it), the cross
+/// term `q·t` runs through the 4-deep unrolled tiled matmul directly
+/// into `out`, and one unit-stride pass rebuilds
+/// `‖q‖² + ‖t‖² − 2·q·t`, clamped at 0 (see the module docs on
+/// cancellation). Row norms come from the caller — a [`NormCache`] for
+/// anything dataset-backed — so they are never recomputed here.
+#[allow(clippy::too_many_arguments)]
+pub fn pairwise_sq_dists_gemm_pre(
+    train_t: &[f32],
+    n: usize,
+    queries: &[f32],
+    d: usize,
+    train_norms: &[f32],
+    query_norms: &[f32],
+    out: &mut [f32],
+    t: &TileConfig,
+) {
+    assert!(d > 0, "feature dimension must be positive");
+    assert_eq!(train_t.len(), d * n);
+    assert_eq!(queries.len() % d, 0);
+    let nq = queries.len() / d;
+    assert_eq!(train_norms.len(), n);
+    assert_eq!(query_norms.len(), nq);
+    assert_eq!(out.len(), nq * n);
+    if n == 0 || nq == 0 {
+        return;
+    }
+    matmul_tiled(queries, train_t, out, nq, d, n, t);
+    for (q, orow) in out.chunks_exact_mut(n).enumerate() {
+        let qn = query_norms[q];
+        for (o, &tn) in orow.iter_mut().zip(train_norms) {
+            *o = (qn + tn - 2.0 * *o).max(0.0);
+        }
+    }
+}
+
+/// GEMM-formulation pairwise distances over row-major operands:
+/// transposes `train` once, then runs [`pairwise_sq_dists_gemm_pre`].
+/// ≤ 1e-4 of the Exact kernels on well-scaled finite data
+/// (property-tested), every distance clamped ≥ 0.
+pub fn pairwise_sq_dists_gemm(
+    train: &[f32],
+    queries: &[f32],
+    d: usize,
+    train_norms: &[f32],
+    query_norms: &[f32],
+    out: &mut [f32],
+    t: &TileConfig,
+) {
+    assert!(d > 0, "feature dimension must be positive");
+    assert_eq!(train.len() % d, 0);
+    let n = train.len() / d;
+    let train_t = transpose_rows(train, d);
+    pairwise_sq_dists_gemm_pre(&train_t, n, queries, d, train_norms,
+                               query_norms, out, t);
+}
+
+/// Formulation-dispatching sequential kernel: resolves `Auto` on this
+/// call's multiply-adds, then runs the tiled Exact kernel or the Gemm
+/// formulation. The norm slices are only read on the Gemm path (pass
+/// empty slices when the policy is known to resolve Exact).
+#[allow(clippy::too_many_arguments)]
+pub fn pairwise_sq_dists_algo(
+    algo: DistanceAlgo,
+    train: &[f32],
+    queries: &[f32],
+    d: usize,
+    train_norms: &[f32],
+    query_norms: &[f32],
+    out: &mut [f32],
+    t: &TileConfig,
+) {
+    assert!(d > 0, "feature dimension must be positive");
+    let n = train.len() / d;
+    let nq = queries.len() / d;
+    match algo.resolve(nq * n * d) {
+        DistanceAlgo::Gemm => pairwise_sq_dists_gemm(
+            train, queries, d, train_norms, query_norms, out, t),
+        _ => pairwise_sq_dists_tiled(train, queries, d, out, t),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::prop_assert;
-    use crate::util::prop::check;
+    use crate::util::prop::{check, Gen};
 
     #[test]
     fn hand_case() {
@@ -108,6 +418,19 @@ mod tests {
         let mut out = [0.0f32; 2];
         pairwise_sq_dists_tiled(&train, &queries, 2, &mut out,
                                 &TileConfig::westmere());
+        assert_eq!(out, [0.0, 25.0]);
+    }
+
+    #[test]
+    fn gemm_hand_case() {
+        let train = [0.0, 0.0, 3.0, 4.0];
+        let queries = [0.0, 0.0];
+        let tn = row_sq_norms(&train, 2);
+        let qn = row_sq_norms(&queries, 2);
+        assert_eq!(tn, vec![0.0, 25.0]);
+        let mut out = [-1.0f32; 2];
+        pairwise_sq_dists_gemm(&train, &queries, 2, &tn, &qn, &mut out,
+                               &TileConfig::westmere());
         assert_eq!(out, [0.0, 25.0]);
     }
 
@@ -143,4 +466,247 @@ mod tests {
         });
     }
 
+    #[test]
+    fn transpose_rows_round_trips() {
+        check("transpose-rows", 30, |g| {
+            let d = g.usize_in(1, 12);
+            let n = g.usize_in(0, 30);
+            let rows = g.f32_vec(n * d, 2.0);
+            let t = transpose_rows(&rows, d);
+            prop_assert!(t.len() == rows.len(), "length changed");
+            for i in 0..n {
+                for f in 0..d {
+                    prop_assert!(
+                        t[f * n + i].to_bits() == rows[i * d + f].to_bits(),
+                        "transpose moved ({i},{f}) wrong");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn row_sq_norms_match_sq_dist_from_origin() {
+        check("row-norms", 25, |g| {
+            let d = g.usize_in(1, 16);
+            let n = g.usize_in(0, 30);
+            let rows = g.f32_vec(n * d, 3.0);
+            let norms = row_sq_norms(&rows, d);
+            let zeros = vec![0.0f32; d];
+            prop_assert!(norms.len() == n, "wrong norm count");
+            for i in 0..n {
+                let want = sq_dist(&rows[i * d..(i + 1) * d], &zeros);
+                prop_assert!(want.to_bits() == norms[i].to_bits(),
+                    "norm[{i}] diverged from sq_dist vs origin");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn norm_cache_counts_builds_and_gathers_without_recomputing() {
+        let rows = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let before = norm_cache_builds();
+        let cache = NormCache::compute(&rows, 2);
+        assert_eq!(norm_cache_builds() - before, 1,
+            "compute must count exactly one build on this thread");
+        assert_eq!(cache.norms(), &[5.0, 25.0, 61.0]);
+        assert_eq!(cache.len(), 3);
+        assert!(!cache.is_empty());
+        // gathers never touch the build counter
+        assert_eq!(cache.gather(&[2, 0, 2]), vec![61.0, 5.0, 61.0]);
+        assert_eq!(norm_cache_builds() - before, 1);
+    }
+
+    fn rand_tiles(g: &mut Gen) -> TileConfig {
+        TileConfig {
+            mc: g.usize_in(1, 9),
+            kc: g.usize_in(1, 9),
+            nc: g.usize_in(1, 9),
+            l1_f32: 1 << g.usize_in(6, 10),
+        }
+    }
+
+    #[test]
+    fn gemm_matches_exact_within_tolerance_and_clamps() {
+        // The acceptance parity contract on well-scaled data: every
+        // Gemm distance within 1e-4 (relative) of the Exact oracle and
+        // clamped at 0, across ragged shapes and ragged tiles.
+        check("gemm-vs-exact", 30, |g| {
+            let d = g.usize_in(1, 16);
+            let n = g.usize_in(0, 40);
+            let nq = g.usize_in(0, 20);
+            let train = g.f32_vec(n * d, 1.0);
+            let queries = g.f32_vec(nq * d, 1.0);
+            let t = rand_tiles(g);
+            let tn = row_sq_norms(&train, d);
+            let qn = row_sq_norms(&queries, d);
+            let mut exact = vec![0.0f32; nq * n];
+            let mut gemm = vec![-1.0f32; nq * n];
+            pairwise_sq_dists_naive(&train, &queries, d, &mut exact);
+            pairwise_sq_dists_gemm(&train, &queries, d, &tn, &qn,
+                                   &mut gemm, &t);
+            for i in 0..exact.len() {
+                prop_assert!(gemm[i] >= 0.0,
+                    "gemm[{i}] = {} escaped the clamp", gemm[i]);
+                let tol = 1e-4 * exact[i].abs().max(1.0);
+                prop_assert!((gemm[i] - exact[i]).abs() <= tol,
+                    "gemm[{i}] {} vs exact {}", gemm[i], exact[i]);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemm_pre_reuses_one_transpose_bit_for_bit() {
+        // The pre-packed entry (what the fused scans and the parallel
+        // fan-out call) must match the one-shot wrapper exactly.
+        check("gemm-pre-vs-wrapper", 15, |g| {
+            let d = g.usize_in(1, 10);
+            let n = g.usize_in(1, 30);
+            let nq = g.usize_in(1, 12);
+            let train = g.f32_vec(n * d, 1.0);
+            let queries = g.f32_vec(nq * d, 1.0);
+            let t = rand_tiles(g);
+            let tn = row_sq_norms(&train, d);
+            let qn = row_sq_norms(&queries, d);
+            let mut want = vec![0.0f32; nq * n];
+            pairwise_sq_dists_gemm(&train, &queries, d, &tn, &qn,
+                                   &mut want, &t);
+            let train_t = transpose_rows(&train, d);
+            let mut got = vec![-1.0f32; nq * n];
+            pairwise_sq_dists_gemm_pre(&train_t, n, &queries, d, &tn,
+                                       &qn, &mut got, &t);
+            prop_assert!(want == got, "pre-transposed gemm diverged");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn near_duplicate_large_magnitude_rows_clamp_to_zero_not_nan() {
+        // Regression (satellite): ‖q‖²+‖t‖²−2·q·t cancels
+        // catastrophically on near-duplicate large-magnitude rows; the
+        // raw sum can come out a few ulps negative, which would NaN a
+        // downstream sqrt / Gaussian bandwidth pass. The clamp plus a
+        // scale-aware error bound must hold.
+        let d = 8;
+        let n = 6;
+        let base: Vec<f32> = (0..d).map(|f| 1.0e3 + f as f32).collect();
+        let mut train = Vec::with_capacity(n * d);
+        for i in 0..n {
+            for f in 0..d {
+                // rows differ by parts in 10^6: worst-case cancellation
+                train.push(base[f] + i as f32 * 1.0e-3);
+            }
+        }
+        let queries = train.clone();
+        let tn = row_sq_norms(&train, d);
+        let qn = row_sq_norms(&queries, d);
+        let mut exact = vec![0.0f32; n * n];
+        let mut gemm = vec![0.0f32; n * n];
+        pairwise_sq_dists_naive(&train, &queries, d, &mut exact);
+        pairwise_sq_dists_gemm(&train, &queries, d, &tn, &qn, &mut gemm,
+                               &TileConfig::westmere());
+        for q in 0..n {
+            for j in 0..n {
+                let v = gemm[q * n + j];
+                assert!(v.is_finite() && v >= 0.0,
+                    "gemm[{q},{j}] = {v} must be finite and clamped");
+                assert!(v.sqrt().is_finite(),
+                    "sqrt(gemm[{q},{j}]) must not NaN");
+                // cancellation error is proportional to the norm scale,
+                // not to the (tiny) true distance
+                let scale = (qn[q] + tn[j]).max(1.0);
+                assert!((v - exact[q * n + j]).abs() <= 1e-4 * scale,
+                    "gemm[{q},{j}] {v} vs exact {} at scale {scale}",
+                    exact[q * n + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn constant_feature_rows_clamp_to_near_zero() {
+        // Regression (satellite): identical constant-feature rows have
+        // exact distance 0; the Gemm reassociation may leave a few ulps
+        // of residue but never a negative (or NaN-producing) value.
+        let d = 5;
+        let n = 4;
+        let train = vec![7.5f32; n * d];
+        let queries = vec![7.5f32; 2 * d];
+        let tn = row_sq_norms(&train, d);
+        let qn = row_sq_norms(&queries, d);
+        let mut gemm = vec![-1.0f32; 2 * n];
+        pairwise_sq_dists_gemm(&train, &queries, d, &tn, &qn, &mut gemm,
+                               &TileConfig::westmere());
+        let scale = tn[0] + qn[0];
+        for (i, &v) in gemm.iter().enumerate() {
+            assert!(v >= 0.0 && v <= 1e-4 * scale,
+                "constant-feature gemm[{i}] = {v} (scale {scale})");
+            assert!(v.sqrt().is_finite());
+        }
+    }
+
+    #[test]
+    fn dist_algo_parse_name_resolve_and_default() {
+        assert_eq!(DistanceAlgo::parse("exact"), Some(DistanceAlgo::Exact));
+        assert_eq!(DistanceAlgo::parse(" GEMM "), Some(DistanceAlgo::Gemm));
+        assert_eq!(DistanceAlgo::parse("Auto"), Some(DistanceAlgo::Auto));
+        assert_eq!(DistanceAlgo::parse("blas"), None);
+        for a in [DistanceAlgo::Exact, DistanceAlgo::Gemm,
+                  DistanceAlgo::Auto] {
+            assert_eq!(DistanceAlgo::parse(a.name()), Some(a),
+                "name() must round-trip through parse()");
+        }
+        // Auto splits on the work threshold; explicit choices pass
+        // through regardless of work.
+        assert_eq!(DistanceAlgo::Auto.resolve(MIN_GEMM_WORK),
+                   DistanceAlgo::Gemm);
+        assert_eq!(DistanceAlgo::Auto.resolve(MIN_GEMM_WORK - 1),
+                   DistanceAlgo::Exact);
+        assert_eq!(DistanceAlgo::Exact.resolve(usize::MAX),
+                   DistanceAlgo::Exact);
+        assert_eq!(DistanceAlgo::Gemm.resolve(0), DistanceAlgo::Gemm);
+        // Briefly setting the override is safe for concurrent tests:
+        // Exact only narrows what Auto would pick, and every
+        // bit-parity test pins its algorithm explicitly.
+        set_dist_algo(Some(DistanceAlgo::Exact));
+        assert_eq!(default_dist_algo(), DistanceAlgo::Exact);
+        set_dist_algo(None);
+        let ambient = default_dist_algo();
+        assert!(matches!(ambient, DistanceAlgo::Exact
+                                  | DistanceAlgo::Gemm
+                                  | DistanceAlgo::Auto));
+    }
+
+    #[test]
+    fn algo_dispatch_picks_the_requested_formulation() {
+        let mut g = Gen::new(17);
+        let (d, n, nq) = (6usize, 20, 8);
+        let train = g.f32_vec(n * d, 1.0);
+        let queries = g.f32_vec(nq * d, 1.0);
+        let t = TileConfig::westmere();
+        let tn = row_sq_norms(&train, d);
+        let qn = row_sq_norms(&queries, d);
+        let mut exact = vec![0.0f32; nq * n];
+        pairwise_sq_dists_tiled(&train, &queries, d, &mut exact, &t);
+        let mut gemm = vec![0.0f32; nq * n];
+        pairwise_sq_dists_gemm(&train, &queries, d, &tn, &qn, &mut gemm,
+                               &t);
+        // explicit Exact ignores the norm slices entirely
+        let mut got = vec![0.0f32; nq * n];
+        pairwise_sq_dists_algo(DistanceAlgo::Exact, &train, &queries, d,
+                               &[], &[], &mut got, &t);
+        assert_eq!(got, exact);
+        // explicit Gemm is the gemm kernel verbatim
+        let mut got = vec![0.0f32; nq * n];
+        pairwise_sq_dists_algo(DistanceAlgo::Gemm, &train, &queries, d,
+                               &tn, &qn, &mut got, &t);
+        assert_eq!(got, gemm);
+        // Auto below the MAC threshold is the Exact kernel
+        assert!(nq * n * d < MIN_GEMM_WORK);
+        let mut got = vec![0.0f32; nq * n];
+        pairwise_sq_dists_algo(DistanceAlgo::Auto, &train, &queries, d,
+                               &[], &[], &mut got, &t);
+        assert_eq!(got, exact);
+    }
 }

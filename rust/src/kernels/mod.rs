@@ -7,6 +7,7 @@
 //! |---|---|---|
 //! | [`matmul_tiled`] (+ bias / transpose-acc variants) | `kernels/matmul.py` | Fig 3 / Alg 14–15 loop nests |
 //! | [`pairwise_sq_dists_tiled`] | `kernels/distance.py` | Alg 10/11 distance pass |
+//! | [`pairwise_sq_dists_gemm`] (+ [`NormCache`]) | `kernels/distance.py` | §4 "reuse of computation results": ‖q−t‖² = ‖q‖²+‖t‖²−2·q·t, cross term through the Fig 3 GEMM |
 //! | [`coupled_step_tiled`] | `linear_coupled` graph | §4.3 coupled LR+SVM |
 //!
 //! # Tiling scheme
@@ -43,6 +44,15 @@
 //! same bits (partials merge by tile index, never completion order), so
 //! the policy only moves wall-clock on skewed shapes.
 //!
+//! The **distance engine** additionally offers a second formulation
+//! ([`DistanceAlgo`]): `Exact` keeps the bit-stable
+//! subtract–square–accumulate pass, `Gemm` decomposes
+//! `‖q−t‖² = ‖q‖² + ‖t‖² − 2·q·t` so the cross term runs through the
+//! matmul micro-kernel over a [`NormCache`] of per-row squared norms
+//! built once per dataset, and `Auto` picks by multiply-add count.
+//! Resolution mirrors the threads/schedule policies: `--dist-algo` →
+//! `LOCALITY_ML_DIST_ALGO` → `Auto`.
+//!
 //! # Correctness contract
 //!
 //! Every tiled kernel sums exactly the same multiset of terms as its
@@ -50,7 +60,10 @@
 //! distance and coupled kernels also preserve accumulation *order*, so
 //! they are bit-identical to their references; the matmul micro-kernel
 //! reassociates within 4-deep groups for speed, so its parity contract
-//! is ≤ 1e-4. Property tests sweep random shapes — including sizes not
+//! is ≤ 1e-4 — a contract the Gemm distance formulation inherits
+//! (≤ 1e-4 vs Exact on well-scaled finite data, clamped ≥ 0; Exact
+//! remains the oracle and the only formulation defined for non-finite
+//! features). Property tests sweep random shapes — including sizes not
 //! divisible by the tiles — and assert these bounds.
 
 pub mod coupled;
@@ -61,7 +74,9 @@ pub mod tile;
 
 pub use coupled::coupled_step_tiled;
 pub use distance::{
-    gather_rows, pairwise_sq_dists_naive, pairwise_sq_dists_tiled,
+    gather_rows, pairwise_sq_dists_algo, pairwise_sq_dists_gemm,
+    pairwise_sq_dists_naive, pairwise_sq_dists_tiled, DistanceAlgo,
+    NormCache,
 };
 pub use matmul::{
     matmul_acc_tiled, matmul_bias_tiled, matmul_naive, matmul_tiled,
@@ -70,6 +85,8 @@ pub use matmul::{
 pub use parallel::{
     coupled_step_par, matmul_acc_tiled_par, matmul_bias_tiled_par,
     matmul_tiled_par, matmul_tn_acc_tiled_par,
-    pairwise_sq_dists_gather_par, pairwise_sq_dists_tiled_par, Schedule,
+    pairwise_sq_dists_algo_par, pairwise_sq_dists_gather_algo_par,
+    pairwise_sq_dists_gather_par, pairwise_sq_dists_gemm_par,
+    pairwise_sq_dists_tiled_par, Schedule,
 };
 pub use tile::TileConfig;

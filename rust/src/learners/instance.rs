@@ -12,7 +12,12 @@
 //! `python/compile/shapes.py`.
 
 use crate::data::Dataset;
-use crate::kernels::{pairwise_sq_dists_tiled, Schedule, TileConfig};
+use crate::kernels::distance::{
+    pairwise_sq_dists_gemm_pre, row_sq_norms, transpose_rows,
+};
+use crate::kernels::{
+    pairwise_sq_dists_tiled, DistanceAlgo, NormCache, Schedule, TileConfig,
+};
 
 /// k for the k-NN vote (shapes.KNN_K).
 pub const K: usize = 5;
@@ -34,12 +39,53 @@ fn majority_class(labels: &[i32], n_classes: usize) -> i32 {
     for &l in labels {
         votes[l as usize] += 1;
     }
+    argmax_votes(&votes)
+}
+
+/// Argmax of a vote tally: most votes, ties to the lower class id —
+/// the one tie-break rule every k-NN/majority vote in this module
+/// shares (the key `(votes, Reverse(class))` is unique per class, so
+/// the argmax is fully deterministic).
+fn argmax_votes(votes: &[usize]) -> i32 {
     votes
         .iter()
         .enumerate()
         .max_by_key(|(c, &v)| (v, std::cmp::Reverse(*c)))
         .unwrap()
         .0 as i32
+}
+
+/// Argmax of a PRW score row under `total_cmp` (a total order, so a
+/// degenerate NaN score can never panic the comparison) — shared by
+/// the materializing and fused PRW paths so they cannot drift.
+fn argmax_scores(scores: &[f64]) -> i32 {
+    scores
+        .iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| a.total_cmp(b))
+        .map(|(c, _)| c)
+        .unwrap() as i32
+}
+
+/// Reusable per-query vote state. The scan hot loops used to allocate
+/// fresh `nearest`/`votes`/`scores` vectors for **every query**; one
+/// scratch per scan hoists that churn out of the loop (each query
+/// still starts from cleared state, so behaviour is unchanged — the
+/// scan-parity property tests pin this).
+struct VoteScratch {
+    nearest: Vec<(f32, usize)>,
+    votes: Vec<usize>,
+    scores: Vec<f64>,
+}
+
+impl VoteScratch {
+    fn new(n_classes: usize, k: usize) -> Self {
+        Self {
+            nearest: Vec::with_capacity(k + 1),
+            votes: vec![0usize; n_classes],
+            scores: vec![0.0f64; n_classes],
+        }
+    }
 }
 
 /// Insert `(dist, j)` into the ascending top-`k` list under the total
@@ -75,10 +121,11 @@ fn knn_insert(nearest: &mut Vec<(f32, usize)>, k: usize, dist: f32,
 /// Pure-rust k-NN classification scan (Algorithm 10, verbatim
 /// structure — deliberately incremental top-k with no distance buffer,
 /// unlike the tiled path; the selection logic is mirrored in
-/// `knn_vote`, and the `tiled_scans_equal_naive_scans` property test
-/// guards the two against desynchronising). Tie-breaking matches the
-/// artifact: neighbours ranked by (distance, index), class vote ties
-/// go to the lower class id.
+/// `knn_vote_into`, and the `tiled_scans_equal_naive_scans` property
+/// test guards the two against desynchronising). Tie-breaking matches
+/// the artifact: neighbours ranked by (distance, index), class vote
+/// ties go to the lower class id. The neighbour list and vote tally
+/// live in one scratch reused across the whole query loop.
 pub fn knn_scan(train: &Dataset, test_rows: &[f32], d: usize, k: usize)
     -> Vec<i32> {
     assert_eq!(d, train.d);
@@ -92,24 +139,19 @@ pub fn knn_scan(train: &Dataset, test_rows: &[f32], d: usize, k: usize)
                     n_test];
     }
     let mut preds = Vec::with_capacity(n_test);
+    let mut s = VoteScratch::new(train.n_classes, k);
     for q in 0..n_test {
         let qrow = &test_rows[q * d..(q + 1) * d];
         // list of k nearest: (dist, index), kept sorted ascending
-        let mut nearest: Vec<(f32, usize)> = Vec::with_capacity(k + 1);
+        s.nearest.clear();
         for j in 0..train.n {
-            knn_insert(&mut nearest, k, sq_dist(qrow, train.row(j)), j);
+            knn_insert(&mut s.nearest, k, sq_dist(qrow, train.row(j)), j);
         }
-        let mut votes = vec![0usize; train.n_classes];
-        for &(_, j) in &nearest {
-            votes[train.labels[j] as usize] += 1;
+        s.votes.fill(0);
+        for &(_, j) in &s.nearest {
+            s.votes[train.labels[j] as usize] += 1;
         }
-        let best = votes
-            .iter()
-            .enumerate()
-            .max_by_key(|(c, &v)| (v, std::cmp::Reverse(*c)))
-            .unwrap()
-            .0;
-        preds.push(best as i32);
+        preds.push(argmax_votes(&s.votes));
     }
     preds
 }
@@ -117,7 +159,8 @@ pub fn knn_scan(train: &Dataset, test_rows: &[f32], d: usize, k: usize)
 /// Pure-rust PRW classification scan (Algorithm 11): every training point
 /// contributes a Gaussian-kernel weight to its class total. The vote —
 /// including the row-min shift that keeps exp() from underflowing to an
-/// all-zero tally — lives in `prw_vote`, shared with the tiled path.
+/// all-zero tally — lives in `prw_vote_into`, shared with the tiled
+/// path; the score row is scratch reused across the query loop.
 pub fn prw_scan(train: &Dataset, test_rows: &[f32], d: usize,
                 bandwidth: f32) -> Vec<i32> {
     assert_eq!(d, train.d);
@@ -125,12 +168,14 @@ pub fn prw_scan(train: &Dataset, test_rows: &[f32], d: usize,
     let inv = 1.0f64 / (2.0 * bandwidth as f64 * bandwidth as f64);
     let mut dists = vec![0.0f32; train.n];
     let mut preds = Vec::with_capacity(n_test);
+    let mut s = VoteScratch::new(train.n_classes, 0);
     for q in 0..n_test {
         let qrow = &test_rows[q * d..(q + 1) * d];
         for j in 0..train.n {
             dists[j] = sq_dist(qrow, train.row(j));
         }
-        preds.push(prw_vote(&dists, &train.labels, train.n_classes, inv));
+        preds.push(prw_vote_into(&dists, &train.labels, train.n_classes,
+                                 inv, &mut s));
     }
     preds
 }
@@ -145,64 +190,59 @@ pub fn joint_scan(train: &Dataset, test_rows: &[f32], d: usize, k: usize,
     let mut knn = Vec::with_capacity(n_test);
     let mut prw = Vec::with_capacity(n_test);
     let mut dists = vec![0.0f32; train.n];
+    let mut s = VoteScratch::new(train.n_classes, k);
     for q in 0..n_test {
         let qrow = &test_rows[q * d..(q + 1) * d];
         // one distance pass, shared by both learners
         for j in 0..train.n {
             dists[j] = sq_dist(qrow, train.row(j));
         }
-        knn.push(knn_vote(&dists, &train.labels, train.n_classes, k));
-        prw.push(prw_vote(&dists, &train.labels, train.n_classes, inv));
+        knn.push(knn_vote_into(&dists, &train.labels, train.n_classes, k,
+                               &mut s));
+        prw.push(prw_vote_into(&dists, &train.labels, train.n_classes,
+                               inv, &mut s));
     }
     (knn, prw)
 }
 
-/// k-NN vote over one query's precomputed distance row. Identical
-/// selection and tie-breaking to the inline code in [`knn_scan`]:
-/// neighbours ranked by (distance, index), class ties to the lower id.
-fn knn_vote(dists: &[f32], labels: &[i32], n_classes: usize, k: usize)
-    -> i32 {
+/// k-NN vote over one query's precomputed distance row, reducing into
+/// the caller's scratch (hoisted out of the query loops — satellite).
+/// Identical selection and tie-breaking to the inline code in
+/// [`knn_scan`]: neighbours ranked by (distance, index), class ties to
+/// the lower id.
+fn knn_vote_into(dists: &[f32], labels: &[i32], n_classes: usize,
+                 k: usize, s: &mut VoteScratch) -> i32 {
     if k == 0 {
         // same k = 0 guard as `knn_scan`: no neighbours vote, so the
         // prediction degenerates to the training majority class
         return majority_class(labels, n_classes);
     }
-    let mut nearest: Vec<(f32, usize)> = Vec::with_capacity(k + 1);
+    s.nearest.clear();
     for (j, &dist) in dists.iter().enumerate() {
-        knn_insert(&mut nearest, k, dist, j);
+        knn_insert(&mut s.nearest, k, dist, j);
     }
-    let mut votes = vec![0usize; n_classes];
-    for &(_, j) in &nearest {
-        votes[labels[j] as usize] += 1;
+    s.votes.fill(0);
+    for &(_, j) in &s.nearest {
+        s.votes[labels[j] as usize] += 1;
     }
-    votes
-        .iter()
-        .enumerate()
-        .max_by_key(|(c, &v)| (v, std::cmp::Reverse(*c)))
-        .unwrap()
-        .0 as i32
+    argmax_votes(&s.votes)
 }
 
 /// PRW vote over one query's precomputed distance row, with the same
-/// f64 row-min stabilisation as [`prw_scan`].
-fn prw_vote(dists: &[f32], labels: &[i32], n_classes: usize, inv: f64)
-    -> i32 {
+/// f64 row-min stabilisation as [`prw_scan`], reducing into the
+/// caller's scratch (hoisted out of the query loops — satellite).
+fn prw_vote_into(dists: &[f32], labels: &[i32], n_classes: usize,
+                 inv: f64, s: &mut VoteScratch) -> i32 {
     let mut dmin = f64::INFINITY;
     for &dist in dists {
         dmin = dmin.min(dist as f64);
     }
-    let mut scores = vec![0.0f64; n_classes];
+    s.scores.fill(0.0);
     for (j, &dist) in dists.iter().enumerate() {
-        scores[labels[j] as usize] += (-(dist as f64 - dmin) * inv).exp();
+        s.scores[labels[j] as usize] +=
+            (-(dist as f64 - dmin) * inv).exp();
     }
-    scores
-        .iter()
-        .enumerate()
-        // total_cmp: a total order, so a degenerate score row (e.g. a
-        // NaN from a pathological bandwidth) can never panic the argmax.
-        .max_by(|(_, a), (_, b)| a.total_cmp(b))
-        .map(|(c, _)| c)
-        .unwrap() as i32
+    argmax_scores(&s.scores)
 }
 
 /// The shared tiling skeleton of the cache-blocked scans: queries are
@@ -238,8 +278,10 @@ fn scan_tiled_blocks(
 pub fn knn_scan_tiled(train: &Dataset, test_rows: &[f32], d: usize,
                       k: usize, tiles: &TileConfig) -> Vec<i32> {
     let mut preds = Vec::new();
+    let mut s = VoteScratch::new(train.n_classes, k);
     scan_tiled_blocks(train, test_rows, d, tiles, |row| {
-        preds.push(knn_vote(row, &train.labels, train.n_classes, k));
+        preds.push(knn_vote_into(row, &train.labels, train.n_classes, k,
+                                 &mut s));
     });
     preds
 }
@@ -249,8 +291,10 @@ pub fn prw_scan_tiled(train: &Dataset, test_rows: &[f32], d: usize,
                       bandwidth: f32, tiles: &TileConfig) -> Vec<i32> {
     let inv = 1.0f64 / (2.0 * bandwidth as f64 * bandwidth as f64);
     let mut preds = Vec::new();
+    let mut s = VoteScratch::new(train.n_classes, 0);
     scan_tiled_blocks(train, test_rows, d, tiles, |row| {
-        preds.push(prw_vote(row, &train.labels, train.n_classes, inv));
+        preds.push(prw_vote_into(row, &train.labels, train.n_classes,
+                                 inv, &mut s));
     });
     preds
 }
@@ -265,9 +309,12 @@ pub fn joint_scan_tiled(train: &Dataset, test_rows: &[f32], d: usize,
     let inv = 1.0f64 / (2.0 * bandwidth as f64 * bandwidth as f64);
     let mut knn = Vec::new();
     let mut prw = Vec::new();
+    let mut s = VoteScratch::new(train.n_classes, k);
     scan_tiled_blocks(train, test_rows, d, tiles, |row| {
-        knn.push(knn_vote(row, &train.labels, train.n_classes, k));
-        prw.push(prw_vote(row, &train.labels, train.n_classes, inv));
+        knn.push(knn_vote_into(row, &train.labels, train.n_classes, k,
+                               &mut s));
+        prw.push(prw_vote_into(row, &train.labels, train.n_classes, inv,
+                               &mut s));
     });
     (knn, prw)
 }
@@ -352,6 +399,364 @@ pub fn joint_scan_par(train: &Dataset, test_rows: &[f32], d: usize,
     let blocks = scan_par(train, test_rows, d, tiles, threads, schedule,
                           |rows| {
         vec![joint_scan_tiled(train, rows, d, k, bandwidth, tiles)]
+    });
+    let mut knn = Vec::new();
+    let mut prw = Vec::new();
+    for (kp, pp) in blocks {
+        knn.extend(kp);
+        prw.extend(pp);
+    }
+    (knn, prw)
+}
+
+// ---------------------------------------------------------------------
+// Fused scans — the GEMM-formulation distance engine's consumers
+// ---------------------------------------------------------------------
+
+/// Streaming k-NN accumulator: one ascending top-k list per query, fed
+/// tile-by-tile in ascending train order — the same insertion sequence
+/// the materializing votes perform over a full distance row, so (under
+/// [`DistanceAlgo::Exact`]) the final lists and votes are identical.
+struct KnnAcc {
+    nearest: Vec<Vec<(f32, usize)>>,
+    k: usize,
+}
+
+impl KnnAcc {
+    fn new(n_test: usize, k: usize) -> Self {
+        Self {
+            nearest: (0..n_test)
+                .map(|_| Vec::with_capacity(k + 1))
+                .collect(),
+            k,
+        }
+    }
+
+    fn consume(&mut self, q: usize, j0: usize, dists: &[f32]) {
+        let heap = &mut self.nearest[q];
+        for (off, &dist) in dists.iter().enumerate() {
+            knn_insert(heap, self.k, dist, j0 + off);
+        }
+    }
+
+    fn finalize(&self, labels: &[i32], n_classes: usize) -> Vec<i32> {
+        let mut votes = vec![0usize; n_classes];
+        self.nearest
+            .iter()
+            .map(|heap| {
+                votes.fill(0);
+                for &(_, j) in heap {
+                    votes[labels[j] as usize] += 1;
+                }
+                argmax_votes(&votes)
+            })
+            .collect()
+    }
+}
+
+/// Streaming PRW accumulator with a **running** row-min shift: class
+/// scores per query accumulate tile-by-tile; when a later tile lowers
+/// the query's minimum distance, the already-accumulated scores are
+/// rescaled by `exp(−(old−new)·inv)` — exactly the factor that rebases
+/// every earlier term onto the new shift. This reassociates the
+/// materializing vote's f64 sums in the last ulps (so scores are not
+/// bit-identical across tile layouts, but the argmax — the prediction —
+/// agrees on anything short of an exact f64 score tie, which the
+/// fused-vs-tiled property test pins on ragged shapes), while needing
+/// only the current tile's distances.
+struct PrwAcc {
+    scores: Vec<f64>,
+    dmin: Vec<f64>,
+    c: usize,
+    inv: f64,
+}
+
+impl PrwAcc {
+    fn new(n_test: usize, c: usize, inv: f64) -> Self {
+        Self {
+            scores: vec![0.0f64; n_test * c],
+            dmin: vec![f64::INFINITY; n_test],
+            c,
+            inv,
+        }
+    }
+
+    fn consume(&mut self, q: usize, j0: usize, dists: &[f32],
+               labels: &[i32]) {
+        // tile minimum first, so every term of THIS tile is computed
+        // against its final shift (NaN distances are skipped by
+        // f64::min, matching the materializing row-min)
+        let mut tmin = f64::INFINITY;
+        for &dist in dists {
+            tmin = tmin.min(dist as f64);
+        }
+        let row = &mut self.scores[q * self.c..(q + 1) * self.c];
+        if tmin < self.dmin[q] {
+            if self.dmin[q].is_finite() {
+                let scale = (-(self.dmin[q] - tmin) * self.inv).exp();
+                for s in row.iter_mut() {
+                    *s *= scale;
+                }
+            }
+            self.dmin[q] = tmin;
+        }
+        let shift = self.dmin[q];
+        for (off, &dist) in dists.iter().enumerate() {
+            row[labels[j0 + off] as usize] +=
+                (-(dist as f64 - shift) * self.inv).exp();
+        }
+    }
+
+    fn finalize(&self) -> Vec<i32> {
+        (0..self.dmin.len())
+            .map(|q| {
+                argmax_scores(&self.scores[q * self.c..(q + 1) * self.c])
+            })
+            .collect()
+    }
+}
+
+/// One-time Gemm packing for a fused scan: a `[d × len]` transposed
+/// panel per `jt`-row train tile, in the exact tile layout
+/// `scan_fused_blocks` consumes (`jt` from `tiles.pair_tiles(d)`).
+/// The parallel fused scans pack this ONCE on the calling thread and
+/// share it across every query shard, so no worker re-transposes the
+/// training matrix.
+fn pack_panels(train: &Dataset, d: usize, tiles: &TileConfig)
+    -> Vec<Vec<f32>> {
+    let (_, jt) = tiles.pair_tiles(d);
+    (0..train.n)
+        .step_by(jt)
+        .map(|j0| {
+            let jhi = (j0 + jt).min(train.n);
+            transpose_rows(&train.features[j0 * d..jhi * d], d)
+        })
+        .collect()
+}
+
+/// The shared skeleton of the fused scans: queries are processed in
+/// `pair_tiles` blocks and, inside each query block, the train rows in
+/// `jt`-row tiles — `consume_tile` receives each query's distances for
+/// one train tile at a time, so the `qb × jt` tile block is the ONLY
+/// distance storage that ever exists (the materializing tiled scans
+/// hold a full query-tile × train block; nothing here is ever
+/// `nq × n`, at any size). Under [`DistanceAlgo::Gemm`] the train
+/// tiles come pre-transposed via `packed` (shared across parallel
+/// shards) or are packed here once per call, the query norms are
+/// computed once for the whole scan, and the train-side norms come
+/// from the caller's dataset-level [`NormCache`] — never recomputed
+/// here.
+#[allow(clippy::too_many_arguments)]
+fn scan_fused_blocks(
+    train: &Dataset,
+    test_rows: &[f32],
+    d: usize,
+    tiles: &TileConfig,
+    algo: DistanceAlgo,
+    norms: &NormCache,
+    packed: Option<&[Vec<f32>]>,
+    mut consume_tile: impl FnMut(usize, usize, &[f32]),
+) {
+    assert_eq!(d, train.d);
+    assert_eq!(norms.len(), train.n,
+        "norm cache does not match the training set");
+    let n_test = test_rows.len() / d;
+    let n = train.n;
+    if n_test == 0 || n == 0 {
+        return;
+    }
+    let algo = algo.resolve(n_test * n * d);
+    let (qt, jt) = tiles.pair_tiles(d);
+    let mut local_panels = Vec::new();
+    let panels: &[Vec<f32>] = match (algo == DistanceAlgo::Gemm, packed) {
+        (false, _) => &[],
+        (true, Some(p)) => p,
+        (true, None) => {
+            local_panels = pack_panels(train, d, tiles);
+            &local_panels
+        }
+    };
+    let qnorms: Vec<f32> = if algo == DistanceAlgo::Gemm {
+        row_sq_norms(test_rows, d)
+    } else {
+        Vec::new()
+    };
+    let mut block = vec![0.0f32; qt.min(n_test) * jt.min(n)];
+    for q0 in (0..n_test).step_by(qt) {
+        let qhi = (q0 + qt).min(n_test);
+        let qb = qhi - q0;
+        let qrows = &test_rows[q0 * d..qhi * d];
+        for (ji, j0) in (0..n).step_by(jt).enumerate() {
+            let jhi = (j0 + jt).min(n);
+            let len = jhi - j0;
+            let out = &mut block[..qb * len];
+            if algo == DistanceAlgo::Gemm {
+                pairwise_sq_dists_gemm_pre(
+                    &panels[ji], len, qrows, d, &norms.norms()[j0..jhi],
+                    &qnorms[q0..qhi], out, tiles);
+            } else {
+                pairwise_sq_dists_tiled(
+                    &train.features[j0 * d..jhi * d], qrows, d, out,
+                    tiles);
+            }
+            for q in 0..qb {
+                consume_tile(q0 + q, j0, &out[q * len..(q + 1) * len]);
+            }
+        }
+    }
+}
+
+/// Fused k-NN scan: each query-tile × train-tile distance block reduces
+/// straight into the per-query top-k lists. With
+/// [`DistanceAlgo::Exact`] the insertions see exactly the bits of the
+/// materializing scans, so predictions are identical to
+/// [`knn_scan_tiled`] / [`knn_scan`] (property-tested); with Gemm the
+/// distances carry the ≤ 1e-4 formulation contract and the train norms
+/// come from the dataset-level `norms` cache.
+pub fn knn_scan_fused(train: &Dataset, test_rows: &[f32], d: usize,
+                      k: usize, tiles: &TileConfig, algo: DistanceAlgo,
+                      norms: &NormCache) -> Vec<i32> {
+    knn_scan_fused_packed(train, test_rows, d, k, tiles, algo, norms,
+                          None)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn knn_scan_fused_packed(train: &Dataset, test_rows: &[f32], d: usize,
+                         k: usize, tiles: &TileConfig,
+                         algo: DistanceAlgo, norms: &NormCache,
+                         packed: Option<&[Vec<f32>]>) -> Vec<i32> {
+    assert_eq!(d, train.d);
+    let n_test = test_rows.len() / d;
+    if k == 0 {
+        // the shared k = 0 guard: no neighbours vote → training prior
+        return vec![majority_class(&train.labels, train.n_classes);
+                    n_test];
+    }
+    let mut acc = KnnAcc::new(n_test, k);
+    scan_fused_blocks(train, test_rows, d, tiles, algo, norms, packed,
+                      |q, j0, dists| acc.consume(q, j0, dists));
+    acc.finalize(&train.labels, train.n_classes)
+}
+
+/// Fused PRW scan (see [`knn_scan_fused`] and [`PrwAcc`] for the
+/// streaming row-min contract).
+pub fn prw_scan_fused(train: &Dataset, test_rows: &[f32], d: usize,
+                      bandwidth: f32, tiles: &TileConfig,
+                      algo: DistanceAlgo, norms: &NormCache) -> Vec<i32> {
+    prw_scan_fused_packed(train, test_rows, d, bandwidth, tiles, algo,
+                          norms, None)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn prw_scan_fused_packed(train: &Dataset, test_rows: &[f32], d: usize,
+                         bandwidth: f32, tiles: &TileConfig,
+                         algo: DistanceAlgo, norms: &NormCache,
+                         packed: Option<&[Vec<f32>]>) -> Vec<i32> {
+    assert_eq!(d, train.d);
+    let n_test = test_rows.len() / d;
+    let inv = 1.0f64 / (2.0 * bandwidth as f64 * bandwidth as f64);
+    let mut acc = PrwAcc::new(n_test, train.n_classes, inv);
+    scan_fused_blocks(train, test_rows, d, tiles, algo, norms, packed,
+                      |q, j0, dists| {
+        acc.consume(q, j0, dists, &train.labels);
+    });
+    acc.finalize()
+}
+
+/// Fused joint scan (§5.2 fusion carried all the way down): ONE
+/// distance tile feeds BOTH learners while it is hot — each
+/// query-tile × train-tile block is consumed by the k-NN top-k lists
+/// and the PRW score accumulators before the next tile is computed.
+#[allow(clippy::too_many_arguments)]
+pub fn joint_scan_fused(train: &Dataset, test_rows: &[f32], d: usize,
+                        k: usize, bandwidth: f32, tiles: &TileConfig,
+                        algo: DistanceAlgo, norms: &NormCache)
+    -> (Vec<i32>, Vec<i32>) {
+    joint_scan_fused_packed(train, test_rows, d, k, bandwidth, tiles,
+                            algo, norms, None)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn joint_scan_fused_packed(train: &Dataset, test_rows: &[f32], d: usize,
+                           k: usize, bandwidth: f32, tiles: &TileConfig,
+                           algo: DistanceAlgo, norms: &NormCache,
+                           packed: Option<&[Vec<f32>]>)
+    -> (Vec<i32>, Vec<i32>) {
+    assert_eq!(d, train.d);
+    let n_test = test_rows.len() / d;
+    let inv = 1.0f64 / (2.0 * bandwidth as f64 * bandwidth as f64);
+    let mut knn_acc = KnnAcc::new(n_test, k);
+    let mut prw_acc = PrwAcc::new(n_test, train.n_classes, inv);
+    scan_fused_blocks(train, test_rows, d, tiles, algo, norms, packed,
+                      |q, j0, dists| {
+        if k > 0 {
+            knn_acc.consume(q, j0, dists);
+        }
+        prw_acc.consume(q, j0, dists, &train.labels);
+    });
+    let knn = if k == 0 {
+        vec![majority_class(&train.labels, train.n_classes); n_test]
+    } else {
+        knn_acc.finalize(&train.labels, train.n_classes)
+    };
+    (knn, prw_acc.finalize())
+}
+
+/// Parallel fused k-NN scan: the query fan-out of [`knn_scan_par`]
+/// over [`knn_scan_fused`] blocks. [`DistanceAlgo::Auto`] is resolved
+/// ONCE on the whole scan's multiply-adds before the fan-out, so every
+/// worker block runs the same formulation and the predictions are
+/// bit-identical to the sequential fused scan at any thread count
+/// under either schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn knn_scan_fused_par(train: &Dataset, test_rows: &[f32], d: usize,
+                          k: usize, tiles: &TileConfig,
+                          algo: DistanceAlgo, norms: &NormCache,
+                          threads: usize, schedule: Schedule) -> Vec<i32> {
+    let algo = algo.resolve((test_rows.len() / d.max(1)) * train.n * d);
+    // pack the train panels ONCE here; the shards share them read-only
+    let packed = (algo == DistanceAlgo::Gemm)
+        .then(|| pack_panels(train, d, tiles));
+    let packed_ref = packed.as_deref();
+    scan_par(train, test_rows, d, tiles, threads, schedule, |rows| {
+        knn_scan_fused_packed(train, rows, d, k, tiles, algo, norms,
+                              packed_ref)
+    })
+}
+
+/// Parallel fused PRW scan (see [`knn_scan_fused_par`]).
+#[allow(clippy::too_many_arguments)]
+pub fn prw_scan_fused_par(train: &Dataset, test_rows: &[f32], d: usize,
+                          bandwidth: f32, tiles: &TileConfig,
+                          algo: DistanceAlgo, norms: &NormCache,
+                          threads: usize, schedule: Schedule) -> Vec<i32> {
+    let algo = algo.resolve((test_rows.len() / d.max(1)) * train.n * d);
+    let packed = (algo == DistanceAlgo::Gemm)
+        .then(|| pack_panels(train, d, tiles));
+    let packed_ref = packed.as_deref();
+    scan_par(train, test_rows, d, tiles, threads, schedule, |rows| {
+        prw_scan_fused_packed(train, rows, d, bandwidth, tiles, algo,
+                              norms, packed_ref)
+    })
+}
+
+/// Parallel fused joint scan: ONE per-tile distance block feeds both
+/// learners inside every shard (see [`knn_scan_fused_par`] for the
+/// Auto pre-resolution and one-time-packing contract).
+#[allow(clippy::too_many_arguments)]
+pub fn joint_scan_fused_par(train: &Dataset, test_rows: &[f32],
+                            d: usize, k: usize, bandwidth: f32,
+                            tiles: &TileConfig, algo: DistanceAlgo,
+                            norms: &NormCache, threads: usize,
+                            schedule: Schedule) -> (Vec<i32>, Vec<i32>) {
+    let algo = algo.resolve((test_rows.len() / d.max(1)) * train.n * d);
+    let packed = (algo == DistanceAlgo::Gemm)
+        .then(|| pack_panels(train, d, tiles));
+    let packed_ref = packed.as_deref();
+    let blocks = scan_par(train, test_rows, d, tiles, threads, schedule,
+                          |rows| {
+        vec![joint_scan_fused_packed(train, rows, d, k, bandwidth,
+                                     tiles, algo, norms, packed_ref)]
     });
     let mut knn = Vec::new();
     let mut prw = Vec::new();
@@ -508,6 +913,194 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn fused_exact_scans_equal_materializing_scans() {
+        // The satellite contract: the fused scans — which never hold
+        // more than one query-tile × train-tile distance block — must
+        // be prediction-identical to the materializing tiled scans on
+        // ragged shapes. Under Exact the distances are bit-identical
+        // and the reductions run in the same train order, so this is
+        // exact, multi-tile PRW rescaling included.
+        check("fused-vs-tiled", 12, |g| {
+            let n = g.usize_in(1, 50);
+            let t = g.usize_in(1, 14);
+            let d = g.usize_in(1, 8);
+            let features = g.f32_vec(n * d, 3.0);
+            let labels: Vec<i32> =
+                (0..n).map(|_| g.usize_in(0, 2) as i32).collect();
+            let train = Dataset::new(features, labels, d, 3);
+            let test = g.f32_vec(t * d, 3.0);
+            // tiny l1 budgets force real multi-tile execution on both
+            // the query and the train axis (rescale path included)
+            let tiles = TileConfig {
+                mc: 1,
+                kc: 1,
+                nc: 1,
+                l1_f32: g.usize_in(2, 16) * d,
+            };
+            let norms = NormCache::compute(&train.features, d);
+            prop_assert!(
+                knn_scan_fused(&train, &test, d, K, &tiles,
+                               DistanceAlgo::Exact, &norms)
+                    == knn_scan_tiled(&train, &test, d, K, &tiles),
+                "fused knn diverged from the tiled scan");
+            prop_assert!(
+                prw_scan_fused(&train, &test, d, BANDWIDTH, &tiles,
+                               DistanceAlgo::Exact, &norms)
+                    == prw_scan_tiled(&train, &test, d, BANDWIDTH,
+                                      &tiles),
+                "fused prw diverged from the tiled scan");
+            let (kf, pf) = joint_scan_fused(&train, &test, d, K,
+                                            BANDWIDTH, &tiles,
+                                            DistanceAlgo::Exact, &norms);
+            let (kt, pt) =
+                joint_scan_tiled(&train, &test, d, K, BANDWIDTH, &tiles);
+            prop_assert!(kf == kt && pf == pt,
+                "fused joint scan diverged from the tiled scan");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_parallel_scans_equal_sequential_fused_scans() {
+        // Fan-out must not change a fused prediction at any thread
+        // count under either schedule, for BOTH formulations (Auto is
+        // resolved once before the fan-out, so it is covered by the
+        // two explicit cases).
+        check("fused-par-scans", 8, |g| {
+            let n = g.usize_in(1, 40);
+            let t = g.usize_in(1, 24);
+            let d = g.usize_in(1, 6);
+            let features = g.f32_vec(n * d, 2.0);
+            let labels: Vec<i32> =
+                (0..n).map(|_| g.usize_in(0, 2) as i32).collect();
+            let train = Dataset::new(features, labels, d, 3);
+            let test = g.f32_vec(t * d, 2.0);
+            let tiles = TileConfig {
+                mc: 1,
+                kc: 1,
+                nc: 1,
+                l1_f32: g.usize_in(2, 12) * d,
+            };
+            let norms = NormCache::compute(&train.features, d);
+            for algo in [DistanceAlgo::Exact, DistanceAlgo::Gemm] {
+                let want_k = knn_scan_fused(&train, &test, d, K, &tiles,
+                                            algo, &norms);
+                let want_p = prw_scan_fused(&train, &test, d, BANDWIDTH,
+                                            &tiles, algo, &norms);
+                let want_j = joint_scan_fused(&train, &test, d, K,
+                                              BANDWIDTH, &tiles, algo,
+                                              &norms);
+                for threads in [1usize, 2, 4, 7] {
+                    for sched in [Schedule::Static, Schedule::Stealing] {
+                        prop_assert!(
+                            knn_scan_fused_par(&train, &test, d, K,
+                                               &tiles, algo, &norms,
+                                               threads, sched) == want_k,
+                            "fused parallel knn diverged ({algo:?}, \
+                             {threads} threads, {sched:?})");
+                        prop_assert!(
+                            prw_scan_fused_par(&train, &test, d,
+                                               BANDWIDTH, &tiles, algo,
+                                               &norms, threads, sched)
+                                == want_p,
+                            "fused parallel prw diverged ({algo:?}, \
+                             {threads} threads, {sched:?})");
+                        prop_assert!(
+                            joint_scan_fused_par(&train, &test, d, K,
+                                                 BANDWIDTH, &tiles,
+                                                 algo, &norms, threads,
+                                                 sched) == want_j,
+                            "fused parallel joint diverged ({algo:?}, \
+                             {threads} threads, {sched:?})");
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_gemm_scans_keep_prediction_quality() {
+        // The Gemm formulation moves distances by ≤ 1e-4, so exact
+        // prediction equality is not contractual — but on clustered
+        // data the learners must stay as accurate as the exact scans.
+        let (train, test) = chembl_like(500, 1).split(400);
+        let norms = NormCache::compute(&train.features, train.d);
+        let tiles = TileConfig::westmere();
+        let knn = knn_scan_fused(&train, &test.features, test.d, K,
+                                 &tiles, DistanceAlgo::Gemm, &norms);
+        let prw = prw_scan_fused(&train, &test.features, test.d,
+                                 BANDWIDTH, &tiles, DistanceAlgo::Gemm,
+                                 &norms);
+        assert!(accuracy(&knn, &test.labels) > 0.7,
+            "fused gemm knn acc {}", accuracy(&knn, &test.labels));
+        assert!(accuracy(&prw, &test.labels) > 0.6,
+            "fused gemm prw acc {}", accuracy(&prw, &test.labels));
+        let (kj, pj) = joint_scan_fused(&train, &test.features, test.d,
+                                        K, BANDWIDTH, &tiles,
+                                        DistanceAlgo::Gemm, &norms);
+        assert_eq!(kj, knn, "joint gemm knn must match the single scan");
+        assert_eq!(pj, prw, "joint gemm prw must match the single scan");
+    }
+
+    #[test]
+    fn fused_gemm_survives_near_duplicate_large_magnitude_rows() {
+        // Regression (satellite): without the ≥ 0 clamp the gemm
+        // distances on near-duplicate large-magnitude rows go slightly
+        // negative and the PRW exp/bandwidth path would see NaN. Every
+        // prediction must stay a valid class id.
+        let d = 4;
+        let n = 8;
+        let mut features = Vec::with_capacity(n * d);
+        for i in 0..n {
+            for f in 0..d {
+                features.push(2.0e3 + f as f32 + i as f32 * 1.0e-3);
+            }
+        }
+        let labels: Vec<i32> = (0..n).map(|i| (i % 2) as i32).collect();
+        let train = Dataset::new(features.clone(), labels, d, 2);
+        let test: Vec<f32> = features[..3 * d].to_vec();
+        let norms = NormCache::compute(&train.features, d);
+        // tiny tiles force multi-tile reduction through the clamp
+        let tiles = TileConfig { mc: 1, kc: 1, nc: 1, l1_f32: 2 * d };
+        for k in [1usize, K] {
+            let preds = knn_scan_fused(&train, &test, d, k, &tiles,
+                                       DistanceAlgo::Gemm, &norms);
+            assert!(preds.iter().all(|&p| (0..2).contains(&p)),
+                "knn prediction out of range: {preds:?}");
+        }
+        let preds = prw_scan_fused(&train, &test, d, BANDWIDTH, &tiles,
+                                   DistanceAlgo::Gemm, &norms);
+        assert!(preds.iter().all(|&p| (0..2).contains(&p)),
+            "prw prediction out of range: {preds:?}");
+    }
+
+    #[test]
+    fn fused_k0_predicts_the_majority_class() {
+        let train = Dataset::new(
+            vec![0.0, 1.0, 2.0, 10.0, 11.0],
+            vec![1, 1, 1, 0, 0],
+            1,
+            2,
+        );
+        let test = [0.5f32, 10.5];
+        let want = vec![1, 1];
+        let tiles = TileConfig::westmere();
+        let norms = NormCache::compute(&train.features, 1);
+        for algo in [DistanceAlgo::Exact, DistanceAlgo::Gemm] {
+            assert_eq!(
+                knn_scan_fused(&train, &test, 1, 0, &tiles, algo, &norms),
+                want, "fused scan must share the k = 0 guard ({algo:?})");
+            let (kj, pj) = joint_scan_fused(&train, &test, 1, 0,
+                                            BANDWIDTH, &tiles, algo,
+                                            &norms);
+            assert_eq!(kj, want);
+            assert_eq!(pj.len(), 2,
+                "k = 0 must not disturb the PRW half ({algo:?})");
+        }
     }
 
     #[test]

@@ -19,13 +19,17 @@
 //!                      [--curve 1,2,4] [--out-json f]     E14
 //! locality-ml steal    [--dataset-n N] [--fold-weights 8,4,2,1]
 //!                      [--curve 1,2,4] [--out-json f]     E15
+//! locality-ml dists    [--train-n N] [--queries N] [--d D]
+//!                      [--out-json f]                     E16
 //! locality-ml info    [--artifacts dir]
 //! ```
 //!
 //! Every subcommand accepts `--threads N` (parallel macro-tile layer;
-//! 1 = the exact single-thread kernels) and `--schedule
+//! 1 = the exact single-thread kernels), `--schedule
 //! static|stealing|auto` (macro-tile scheduling policy — identical
-//! output bits either way).
+//! output bits either way) and `--dist-algo exact|gemm|auto` (distance
+//! formulation: exact is the bit-stable oracle, gemm the cached-norm
+//! GEMM decomposition within 1e-4 of it).
 
 use std::path::PathBuf;
 
@@ -62,6 +66,17 @@ fn main() -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!(
                 "--schedule: `{s}` is not one of static|stealing|auto"))?;
         locality_ml::kernels::parallel::set_schedule(Some(sched));
+    }
+    // Global `--dist-algo exact|gemm|auto` for the distance engine
+    // (default: LOCALITY_ML_DIST_ALGO, then auto). Exact is the
+    // bit-stable oracle; gemm is the ‖q‖²+‖t‖²−2·q·t formulation over
+    // cached row norms (≤ 1e-4 of exact, clamped ≥ 0); auto picks per
+    // call by multiply-add count.
+    if let Some(s) = args.get("dist-algo") {
+        let algo = locality_ml::kernels::DistanceAlgo::parse(s)
+            .ok_or_else(|| anyhow::anyhow!(
+                "--dist-algo: `{s}` is not one of exact|gemm|auto"))?;
+        locality_ml::kernels::distance::set_dist_algo(Some(algo));
     }
     match args.command.as_str() {
         "train" => {
@@ -162,6 +177,14 @@ fn main() -> Result<()> {
             commands::cmd_steal(n, &weights, &ks, &mults, &curve, seed,
                                 out.as_deref())?;
         }
+        "dists" => {
+            let n = args.usize_or("train-n", 4000)?;
+            let nq = args.usize_or("queries", 1000)?;
+            let d = args.usize_or("d", 64)?;
+            let seed = args.u64_or("seed", 7)?;
+            let out = args.get("out-json").map(PathBuf::from);
+            commands::cmd_dists(n, nq, d, seed, out.as_deref())?;
+        }
         "info" => {
             let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
             commands::cmd_info(&dir)?;
@@ -207,6 +230,10 @@ SUBCOMMANDS
                stealing wall-clock, bit-identical results
                  --dataset-n 2000 --fold-weights 8,7,6,5,4,3,2,1,1,1,1,1
                  --curve 1,2,4 --out-json BENCH_steal.json
+  dists        Distance engine: exact tiled kernel vs GEMM formulation
+               over cached norms vs fused scans (parity pre-timing)
+                 --train-n 4000 --queries 1000 --d 64
+                 --out-json BENCH_dists.json
   info         List compiled artifacts  [--artifacts artifacts]
 
 Common options: --config experiment.toml --artifacts artifacts --seed N
@@ -215,4 +242,8 @@ Common options: --config experiment.toml --artifacts artifacts --seed N
                 --schedule static|stealing|auto (macro-tile scheduling
                 policy; identical bits either way; default
                 LOCALITY_ML_SCHEDULE or auto)
+                --dist-algo exact|gemm|auto (distance formulation: exact
+                is the bit-stable oracle, gemm the cached-norm GEMM
+                decomposition <= 1e-4 of it; default
+                LOCALITY_ML_DIST_ALGO or auto)
 ";

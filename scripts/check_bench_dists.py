@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""CI gate for the GEMM-formulation distance engine (ISSUE 5):
+
+at the sweep-shaped gate geometry (1000 queries x 4000 train rows x 64
+features), the gemm formulation — cross term through the 4-deep
+unrolled matmul micro-kernel, row norms from the one-time NormCache —
+must beat the exact tiled subtract-square-accumulate kernel by >= 1.5x
+wall-clock. Numerical parity (gemm within 1e-4 relative of exact,
+clamped >= 0) and fused-scan prediction parity are asserted in-process
+by the bench itself before anything is timed, so this script only
+gates the clock.
+
+Every record is validated for shape (string variant, numeric secs /
+speedup_vs_exact); only the "gemm" kernel record is gated — the fused
+joint-scan records are reported for visibility (their vote/top-k
+reduction dilutes the pure-kernel ratio).
+
+Usage: check_bench_dists.py [BENCH_dists.json]
+"""
+import sys
+
+from bench_check import CheckFailure, load_doc, require_number
+
+GATE_VARIANT = "gemm"
+GATE_SPEEDUP = 1.5
+
+
+def check(path):
+    doc = load_doc(path)
+    results = doc.get("results", [])
+    if not results:
+        raise CheckFailure(f"no variant records in {path}")
+    gated = None
+    for i, record in enumerate(results):
+        context = f"results[{i}]"
+        if not isinstance(record, dict) or "variant" not in record:
+            raise CheckFailure(f"{context}: record lacks `variant`")
+        variant = record["variant"]
+        if not isinstance(variant, str):
+            raise CheckFailure(f"{context}: `variant` is not a string")
+        secs = require_number(record, "secs", context)
+        speedup = require_number(record, "speedup_vs_exact", context)
+        print(f"  {variant}: {secs:.6f}s -> {speedup:.2f}x vs exact")
+        if variant == GATE_VARIANT:
+            gated = speedup
+    if gated is None:
+        raise CheckFailure(f"no `{GATE_VARIANT}` record in {path}")
+    print(f"gemm formulation vs exact tiled kernel: {gated:.2f}x "
+          f"(gate: >= {GATE_SPEEDUP}x)")
+    if gated < GATE_SPEEDUP:
+        raise CheckFailure(
+            f"gemm gate missed ({gated:.2f}x < {GATE_SPEEDUP}x)")
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_dists.json"
+    try:
+        check(path)
+    except CheckFailure as e:
+        print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
