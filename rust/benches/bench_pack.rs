@@ -1,0 +1,48 @@
+//! Bench E17 — the BLIS-style packed SIMD micro-kernel: the
+//! cache-blocked tiled matmul vs the packed register-blocked path
+//! (operands packed once per macro-tile into reuse-ordered panels,
+//! `MR × NR` register block, runtime scalar/SSE2/AVX2 dispatch), at
+//! n = 256 / 512, plus a prepacked row timing the pack-once-reuse
+//! path the learners use at inference.
+//!
+//! Writes the timings to `BENCH_pack.json` at the repo root (uploaded
+//! by CI alongside the other BENCH artifacts). Regenerate with:
+//!
+//! ```bash
+//! cargo bench --bench bench_pack
+//! # or, with size control:
+//! cargo run --release -- pack --sizes 256,512 \
+//!     --out-json ../BENCH_pack.json
+//! # forced-scalar tier (bit-identical; times the fallback):
+//! LOCALITY_ML_FORCE_SCALAR=1 cargo bench --bench bench_pack
+//! ```
+//!
+//! This bench *measures and reports*; the ≥2× acceptance gate on the
+//! 512³ packed-vs-tiled speedup is enforced in exactly one place —
+//! `scripts/check_bench_pack.py`, run by the CI bench job against the
+//! JSON this writes — so a machine stuck on the scalar tier can still
+//! run the bench without tripping an assert that CI alone is meant to
+//! own. Bit-parity with the naive oracle is asserted inside `cmd_pack`
+//! before anything is timed, on every tier.
+
+use std::path::PathBuf;
+
+use locality_ml::cli::commands::cmd_pack;
+
+fn main() -> anyhow::Result<()> {
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../BENCH_pack.json");
+    let table = cmd_pack(&[256, 512], Some(out.as_path()))?;
+
+    // rows: [shape, tier, tiled, packed, prepacked, "X.XXx"]
+    let speedup = table
+        .rows
+        .iter()
+        .find(|r| r[0] == "512x512x512")
+        .map(|r| (r[1].clone(), r[5].clone()))
+        .expect("no 512^3 packed row");
+    println!("\n512^3 packed vs tiled: {} on the {} tier (CI gates \
+              >=2x via scripts/check_bench_pack.py)",
+             speedup.1, speedup.0);
+    Ok(())
+}

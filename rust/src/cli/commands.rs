@@ -450,8 +450,8 @@ pub fn cmd_kernels(sizes: &[usize], out_json: Option<&Path>)
 pub fn cmd_parallel(sizes: &[usize], curve: &[usize],
                     out_json: Option<&Path>) -> Result<Table> {
     use crate::kernels::{
-        coupled_step_par, matmul_tiled_par, pairwise_sq_dists_tiled_par,
-        TileConfig,
+        coupled_step_exec, matmul_exec, pairwise_sq_dists_exec,
+        DistanceAlgo, ExecPolicy, TileConfig,
     };
     use crate::learners::linear;
     use crate::util::Rng;
@@ -460,6 +460,15 @@ pub fn cmd_parallel(sizes: &[usize], curve: &[usize],
         "the thread curve must start at 1 (the scaling baseline)");
     let sched = crate::kernels::parallel::default_schedule();
     eprintln!("# parallel: schedule={}", sched.name());
+    // one policy per curve point: thread count pinned, session
+    // schedule, Exact formulation (this bench measures the tiled
+    // fan-out, not the formulation dispatch)
+    let policy_at = |th: usize| {
+        ExecPolicy::default()
+            .with_threads(th)
+            .with_schedule(sched)
+            .with_algo(DistanceAlgo::Exact)
+    };
     let mut table = Table::new(
         "Parallel macro-tile layer — 1-vs-N thread scaling \
          (per-worker tiles from the shared-L3 budget)",
@@ -477,9 +486,9 @@ pub fn cmd_parallel(sizes: &[usize], curve: &[usize],
         let mut base = f64::NAN;
         for &th in curve {
             let tiles = TileConfig::westmere_workers(th);
+            let pol = policy_at(th);
             let secs = time_best(reps, || {
-                matmul_tiled_par(&a, &b, &mut c, n, n, n, &tiles, th,
-                                 sched)
+                matmul_exec(&a, &b, &mut c, n, n, n, &tiles, &pol)
             });
             if th == 1 {
                 base = secs;
@@ -496,9 +505,10 @@ pub fn cmd_parallel(sizes: &[usize], curve: &[usize],
         let mut out = vec![0.0f32; queries * n];
         for &th in curve {
             let tiles = TileConfig::westmere_workers(th);
+            let pol = policy_at(th);
             let secs = time_best(reps, || {
-                pairwise_sq_dists_tiled_par(&train, &q, d, &mut out,
-                                            &tiles, th, sched)
+                pairwise_sq_dists_exec(&train, &q, d, &[], &[], &mut out,
+                                       &tiles, &pol)
             });
             if th == 1 {
                 base = secs;
@@ -518,10 +528,11 @@ pub fn cmd_parallel(sizes: &[usize], curve: &[usize],
             .collect();
         for &th in curve {
             let tiles = TileConfig::westmere_workers(th);
+            let pol = policy_at(th);
             let secs = time_best(reps, || {
-                crate::bench::black_box(coupled_step_par(
+                crate::bench::black_box(coupled_step_exec(
                     &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &tiles,
-                    th, sched));
+                    &pol));
             });
             if th == 1 {
                 base = secs;
@@ -579,8 +590,9 @@ pub fn cmd_sweep(
     out_json: Option<&Path>,
 ) -> Result<Table> {
     use crate::coordinator::{
-        silverman_bandwidth, sweep_naive, sweep_shared, sweep_shared_par,
+        silverman_bandwidth, sweep_naive, sweep_shared, sweep_shared_exec,
     };
+    use crate::kernels::{DistanceAlgo, ExecPolicy};
 
     anyhow::ensure!(curve.first() == Some(&1),
         "the thread curve must start at 1 (the scaling baseline)");
@@ -626,10 +638,17 @@ pub fn cmd_sweep(
     let mut records: Vec<(usize, f64, f64)> = Vec::new();
     let mut base = f64::NAN;
     for &th in curve {
+        // Exact pinned (the naive-vs-shared comparison is on the Exact
+        // oracle); the engine gates tiny sweeps to 1 thread, which is
+        // bit-identical by the merge contract either way
+        let pol = ExecPolicy::default()
+            .with_threads(th)
+            .with_schedule(sched)
+            .with_algo(DistanceAlgo::Exact);
         let mut par = None;
         let secs = time_best(reps, || {
-            par = Some(sweep_shared_par(&ds, &folds, ks, &bandwidths, th,
-                                        sched));
+            par = Some(sweep_shared_exec(&ds, &folds, ks, &bandwidths,
+                                         &pol));
         });
         let (pk, pb) = par.unwrap();
         anyhow::ensure!(pk == sk && pb == sb,
@@ -714,9 +733,9 @@ pub fn cmd_steal(
     out_json: Option<&Path>,
 ) -> Result<Table> {
     use crate::coordinator::{
-        silverman_bandwidth, sweep_shared, sweep_shared_par,
+        silverman_bandwidth, sweep_shared, sweep_shared_exec,
     };
-    use crate::kernels::Schedule;
+    use crate::kernels::{DistanceAlgo, ExecPolicy, Schedule};
 
     anyhow::ensure!(!curve.is_empty(), "need at least one thread count");
     anyhow::ensure!(fold_weights.len() >= 2,
@@ -746,10 +765,14 @@ pub fn cmd_steal(
     let mut records: Vec<(usize, f64, f64, f64)> = Vec::new();
     for &th in curve {
         let timed = |sched: Schedule| -> Result<f64> {
+            let pol = ExecPolicy::default()
+                .with_threads(th)
+                .with_schedule(sched)
+                .with_algo(DistanceAlgo::Exact);
             let mut out = None;
             let secs = time_best(reps, || {
-                out = Some(sweep_shared_par(&ds, &folds, ks, &bandwidths,
-                                            th, sched));
+                out = Some(sweep_shared_exec(&ds, &folds, ks, &bandwidths,
+                                             &pol));
             });
             anyhow::ensure!(out.unwrap() == seq,
                 "{} sweep diverged from the sequential shared sweep at \
@@ -930,6 +953,105 @@ pub fn cmd_dists(
         std::fs::write(path, json)
             .with_context(|| format!("writing {}", path.display()))?;
         eprintln!("# distance engine timings -> {}", path.display());
+    }
+    Ok(table)
+}
+
+/// E17 — the BLIS-style packed micro-kernel: the cache-blocked tiled
+/// matmul vs the packed register-blocked path (operands packed once
+/// per macro-tile into reuse-ordered panels, `MR × NR` register block,
+/// runtime-dispatched scalar / SSE2 / AVX2 tiers). Parity is asserted
+/// **before** anything is timed: the packed product must be
+/// bit-identical to the naive oracle (the pack module's accumulation
+/// contract). The prepacked row times the pack-once-reuse-everywhere
+/// path the learners use at inference. Optionally writes
+/// `BENCH_pack.json`; CI gates packed ≥ 2× over tiled at 512³ via
+/// `scripts/check_bench_pack.py`.
+pub fn cmd_pack(sizes: &[usize], out_json: Option<&Path>)
+    -> Result<Table> {
+    use crate::kernels::{
+        matmul_acc_prepacked, matmul_naive, matmul_packed, matmul_tiled,
+        micro_kernel, PackedPanel, TileConfig,
+    };
+    use crate::util::Rng;
+
+    anyhow::ensure!(!sizes.is_empty(), "need at least one size");
+    let tiles = TileConfig::westmere();
+    let tier = format!("{:?}", micro_kernel()).to_lowercase();
+    eprintln!("# pack: micro-kernel tier={tier} tiles=({}, {}, {})",
+              tiles.mc, tiles.kc, tiles.nc);
+    let mut table = Table::new(
+        "Packed SIMD micro-kernel — cache-tiled vs packed \
+         register-blocked (bit-parity with the naive oracle asserted \
+         pre-timing)",
+        &["shape", "tier", "tiled (s)", "packed (s)", "prepacked (s)",
+          "packed vs tiled"]);
+    // (shape, tiled_s, packed_s, prepacked_s)
+    let mut records: Vec<(String, f64, f64, f64)> = Vec::new();
+    let mut rng = Rng::new(42);
+    let reps = 3;
+
+    for &n in sizes {
+        let a: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut c = vec![0.0f32; n * n];
+
+        // parity BEFORE timing: the packed path is bit-identical to the
+        // naive oracle at any blocking (the pack module's contract)
+        let mut want = vec![0.0f32; n * n];
+        matmul_naive(&a, &b, &mut want, n, n, n);
+        matmul_packed(&a, &b, &mut c, n, n, n, &tiles);
+        anyhow::ensure!(c == want,
+            "packed matmul diverged from the naive oracle at {n}³");
+
+        let tiled_s = time_best(reps, || {
+            matmul_tiled(&a, &b, &mut c, n, n, n, &tiles)
+        });
+        let packed_s = time_best(reps, || {
+            matmul_packed(&a, &b, &mut c, n, n, n, &tiles)
+        });
+        // pack B once outside the timed region — the reuse the learner
+        // inference paths get from PackedPanel caching
+        let pb = PackedPanel::pack(&b, n, n, tiles.kc);
+        let prepacked_s = time_best(reps, || {
+            c.fill(0.0);
+            matmul_acc_prepacked(&a, &pb, &mut c, n, &tiles)
+        });
+        records.push((format!("{n}x{n}x{n}"), tiled_s, packed_s,
+                      prepacked_s));
+    }
+
+    for (shape, tiled_s, packed_s, prepacked_s) in &records {
+        table.row(&[shape.clone(), tier.clone(),
+                    format!("{tiled_s:.6}"), format!("{packed_s:.6}"),
+                    format!("{prepacked_s:.6}"),
+                    format!("{:.2}x", tiled_s / packed_s)]);
+    }
+    println!("{}", table.to_markdown());
+
+    if let Some(path) = out_json {
+        let mut json = String::from("{\n");
+        json.push_str("  \"schema\": \"locality-ml/bench-pack/v1\",\n");
+        json.push_str(&format!("  \"tier\": \"{tier}\",\n"));
+        json.push_str(&format!(
+            "  \"tiles\": {{\"mc\": {}, \"kc\": {}, \"nc\": {}}},\n",
+            tiles.mc, tiles.kc, tiles.nc));
+        json.push_str("  \"results\": [\n");
+        for (i, (shape, tiled_s, packed_s, prepacked_s)) in
+            records.iter().enumerate() {
+            let comma = if i + 1 < records.len() { "," } else { "" };
+            json.push_str(&format!(
+                "    {{\"shape\": \"{shape}\", \"tiled_s\": \
+                 {tiled_s:.6}, \"packed_s\": {packed_s:.6}, \
+                 \"prepacked_s\": {prepacked_s:.6}, \
+                 \"speedup_vs_tiled\": {:.3}, \
+                 \"prepacked_speedup_vs_tiled\": {:.3}}}{comma}\n",
+                tiled_s / packed_s, tiled_s / prepacked_s));
+        }
+        json.push_str("  ]\n}\n");
+        std::fs::write(path, json)
+            .with_context(|| format!("writing {}", path.display()))?;
+        eprintln!("# packed micro-kernel timings -> {}", path.display());
     }
     Ok(table)
 }

@@ -10,6 +10,7 @@
 
 use crate::data::{Dataset, Folds};
 use crate::kernels::parallel::{run_jobs, Schedule};
+use crate::kernels::ExecPolicy;
 use crate::util::Rng;
 
 /// Traffic accounting for one cross-validation epoch.
@@ -77,7 +78,36 @@ impl<'a> FoldStream<'a> {
     /// learner job walks the fold's chunk list in order — so the §1
     /// validity criterion holds by construction (and is property-tested
     /// against `shared_pass`). `threads <= 1` runs the jobs inline.
+    pub fn shared_pass_exec<S: Send>(
+        &self,
+        batch: usize,
+        seed: u64,
+        policy: &ExecPolicy,
+        states: &mut [S],
+        consume: impl Fn(&mut S, usize, &[usize]) + Sync,
+    ) -> PassStats {
+        let p = policy.resolve();
+        self.shared_pass_core(batch, seed, p.threads, p.schedule, states,
+                              consume)
+    }
+
+    /// Deprecated tuple-taking form of [`FoldStream::shared_pass_exec`];
+    /// bit-identical delivery for the same `(threads, schedule)`.
+    #[deprecated(note = "use `shared_pass_exec` with an `ExecPolicy`")]
     pub fn shared_pass_par<S: Send>(
+        &self,
+        batch: usize,
+        seed: u64,
+        threads: usize,
+        schedule: Schedule,
+        states: &mut [S],
+        consume: impl Fn(&mut S, usize, &[usize]) + Sync,
+    ) -> PassStats {
+        self.shared_pass_core(batch, seed, threads, schedule, states,
+                              consume)
+    }
+
+    fn shared_pass_core<S: Send>(
         &self,
         batch: usize,
         seed: u64,
@@ -156,6 +186,9 @@ impl<'a> FoldStream<'a> {
 
 #[cfg(test)]
 mod tests {
+    // the deprecated tuple entry point stays under test: its parity
+    // with shared_pass_exec is part of the migration contract
+    #![allow(deprecated)]
     use super::*;
     use crate::data::synth::gaussian_mixture;
     use crate::data::MixtureSpec;
@@ -252,6 +285,22 @@ mod tests {
                             "learner {l} stream diverged at {threads} \
                              threads under {sched:?} (k={k}, n={n})");
                     }
+                    // the ExecPolicy entry must deliver the same
+                    // streams as the tuple form it replaces
+                    let mut exec_streams: Vec<Vec<usize>> =
+                        vec![Vec::new(); k];
+                    let pol = ExecPolicy::default()
+                        .with_threads(threads)
+                        .with_schedule(sched);
+                    let exec_stats = fs.shared_pass_exec(
+                        batch, seed, &pol, &mut exec_streams,
+                        |s: &mut Vec<usize>, _l, b| {
+                            s.extend_from_slice(b)
+                        });
+                    prop_assert!(exec_stats == want_stats
+                                 && exec_streams == streams,
+                        "shared_pass_exec diverged at {threads} \
+                         threads under {sched:?}");
                 }
             }
             Ok(())

@@ -16,9 +16,9 @@
 //! # The parallel shared-distance sweep engine
 //!
 //! Since PR 3 the split distances are batched through the locality-tiled
-//! distance kernel ([`pairwise_sq_dists_gather_algo_par`]) instead of a
-//! per-pair scalar loop, and [`sweep_shared_par`] shards the candidate
-//! sweep across CV splits on the scoped worker pool: one job per split,
+//! distance kernel ([`pairwise_sq_dists_gather_exec`]) instead of a
+//! per-pair scalar loop, and the engine shards the candidate sweep
+//! across CV splits on the scoped worker pool: one job per split,
 //! results merged in split order. Since PR 4 the split jobs can also be
 //! **work-stolen** ([`Schedule::Stealing`]): workers claim splits from
 //! a shared cursor, so skewed/ragged split distributions no longer
@@ -27,21 +27,23 @@
 //! arithmetic in a fixed split order, so the parallel sweep is
 //! **bit-identical to the sequential [`sweep_shared`] at any thread
 //! count under either schedule** — property-tested below.
-//! [`sweep_shared_auto`] is the production entry: it resolves the
-//! session thread count (`--threads` → `LOCALITY_ML_THREADS` → cores),
-//! schedule (`--schedule` → `LOCALITY_ML_SCHEDULE` → auto) and
-//! distance formulation (`--dist-algo` → `LOCALITY_ML_DIST_ALGO` →
-//! auto), and gates the fan-out on the total distance work via
-//! `effective_threads`, so small sweeps stay on the sequential path.
+//! [`sweep_shared_exec`] is the production entry: one [`ExecPolicy`]
+//! carries the thread count, schedule and distance formulation
+//! (still-Auto axes resolve `--threads` → `LOCALITY_ML_THREADS` →
+//! cores, `--schedule` → `LOCALITY_ML_SCHEDULE` → auto, `--dist-algo`
+//! → `LOCALITY_ML_DIST_ALGO` → auto), and the fan-out is gated on the
+//! total distance work via [`ExecPolicy::threads_for`], so small
+//! sweeps stay on the sequential path. The old tuple-taking entries
+//! survive only as deprecated wrappers over the same core.
 //!
 //! Since PR 5 the engine is also wired to the **GEMM-formulation
-//! distance kernel**: [`sweep_shared_algo`] builds ONE dataset-level
-//! [`NormCache`] per sweep and every split gathers its row norms from
-//! it — under the old nest each train row's `‖t‖²` was implicitly
-//! recomputed once per split per candidate, pure redundancy by the
-//! paper's "reuse of computation results" guideline. The
-//! `norm_cache_builds` counter property test pins the build-once
-//! contract.
+//! distance kernel**: it builds ONE dataset-level [`NormCache`] per
+//! sweep and every split gathers its row norms from it — under the old
+//! nest each train row's `‖t‖²` was implicitly recomputed once per
+//! split per candidate, pure redundancy by the paper's "reuse of
+//! computation results" guideline. The `norm_cache_builds` counter
+//! property test pins the build-once contract. Under Gemm the cross
+//! term now runs through the packed SIMD micro-kernel.
 //!
 //! # Distance-eval accounting
 //!
@@ -55,12 +57,11 @@
 //! single-pass count.
 
 use crate::data::{Dataset, Folds};
-use crate::kernels::distance::default_dist_algo;
-use crate::kernels::parallel::{
-    default_schedule, default_threads, effective_threads,
-    pairwise_sq_dists_gather_algo_par, run_jobs, Schedule,
+use crate::kernels::parallel::{run_jobs, Schedule};
+use crate::kernels::{
+    pairwise_sq_dists_gather_exec, DistanceAlgo, ExecPolicy, NormCache,
+    TileConfig,
 };
-use crate::kernels::{DistanceAlgo, NormCache, TileConfig};
 
 /// Smallest PRW bandwidth the vote will use. Silverman's rule returns
 /// `h = 0` for constant-feature datasets (σ = 0), which would make the
@@ -123,9 +124,9 @@ fn split_distances(
     let train_idx = folds.train_indices(test_fold);
     let test_idx = folds.test_indices(test_fold);
     let n = train_idx.len();
-    let dists = pairwise_sq_dists_gather_algo_par(
-        &ds.features, ds.d, &train_idx, test_idx, cache, algo, tiles, 1,
-        Schedule::Static);
+    let dists = pairwise_sq_dists_gather_exec(
+        &ds.features, ds.d, &train_idx, test_idx, cache, tiles,
+        &ExecPolicy::sequential().with_algo(algo));
     let mut neighbours = Vec::with_capacity(test_idx.len());
     let mut truth = Vec::with_capacity(test_idx.len());
     for (q, &qi) in test_idx.iter().enumerate() {
@@ -254,9 +255,9 @@ fn merge_splits(
     )
 }
 
-/// The fully-parameterised shared-distance sweep engine: one job per
-/// CV split distributed over the scoped worker pool, every split
-/// evaluated under the given [`DistanceAlgo`] against ONE dataset-level
+/// The shared-distance sweep engine body: one job per CV split
+/// distributed over the scoped worker pool, every split evaluated
+/// under the given [`DistanceAlgo`] against ONE dataset-level
 /// [`NormCache`] built here — once per sweep, reused by every split
 /// and every candidate (the reuse the `norm_cache_builds` property
 /// test pins; the old nest implicitly recomputed each row norm once
@@ -264,7 +265,7 @@ fn merge_splits(
 /// under both schedules and the merge is pure u64 arithmetic, so for a
 /// fixed algorithm the result is bit-identical at ANY thread count
 /// under EITHER schedule; `threads = 1` runs the jobs inline.
-pub fn sweep_shared_algo(
+fn sweep_core(
     ds: &Dataset,
     folds: &Folds,
     ks: &[usize],
@@ -290,6 +291,34 @@ pub fn sweep_shared_algo(
     merge_splits(&parts, ks, bandwidths)
 }
 
+/// Production entry for the sweep engine: one [`ExecPolicy`] carries
+/// all three execution axes. Still-Auto axes resolve against the
+/// session defaults (`--threads` → `LOCALITY_ML_THREADS` → cores;
+/// `--schedule` → `LOCALITY_ML_SCHEDULE` → auto; `--dist-algo` →
+/// `LOCALITY_ML_DIST_ALGO` → auto, then per split on its
+/// multiply-adds), and the split fan-out is gated on the sweep's total
+/// distance work via [`ExecPolicy::threads_for`] so small sweeps stay
+/// on the exact sequential path with no spawns. For a fixed resolved
+/// formulation the result is bit-identical at ANY thread count under
+/// EITHER schedule — the split-order merge contract of the engine.
+pub fn sweep_shared_exec(
+    ds: &Dataset,
+    folds: &Folds,
+    ks: &[usize],
+    bandwidths: &[f32],
+    policy: &ExecPolicy,
+) -> (SweepResult<usize>, SweepResult<f32>) {
+    let work: usize = (0..folds.k())
+        .map(|f| {
+            let test = folds.test_indices(f).len();
+            test * (ds.n - test) * ds.d
+        })
+        .sum();
+    let p = policy.resolve();
+    sweep_core(ds, folds, ks, bandwidths, policy.threads_for(work),
+               p.schedule, p.algo)
+}
+
 /// Shared-distance sweep (the guideline): distances per CV split are
 /// computed once; every k and every bandwidth is evaluated from them.
 /// Sequential over splits on the Exact formulation — the oracle the
@@ -301,15 +330,32 @@ pub fn sweep_shared(
     ks: &[usize],
     bandwidths: &[f32],
 ) -> (SweepResult<usize>, SweepResult<f32>) {
-    sweep_shared_algo(ds, folds, ks, bandwidths, 1, Schedule::Static,
-                      DistanceAlgo::Exact)
+    sweep_core(ds, folds, ks, bandwidths, 1, Schedule::Static,
+               DistanceAlgo::Exact)
+}
+
+/// Deprecated tuple-taking engine entry; [`sweep_shared_exec`] with a
+/// pinned [`ExecPolicy`] is the replacement. Bit-identical for the
+/// same `(threads, schedule, algo)`.
+#[deprecated(note = "use `sweep_shared_exec` with an `ExecPolicy`")]
+pub fn sweep_shared_algo(
+    ds: &Dataset,
+    folds: &Folds,
+    ks: &[usize],
+    bandwidths: &[f32],
+    threads: usize,
+    schedule: Schedule,
+    algo: DistanceAlgo,
+) -> (SweepResult<usize>, SweepResult<f32>) {
+    sweep_core(ds, folds, ks, bandwidths, threads, schedule, algo)
 }
 
 /// The parallel shared-distance sweep engine on the Exact formulation:
 /// bit-identical to the sequential [`sweep_shared`] at ANY thread
-/// count under EITHER schedule (see [`sweep_shared_algo`] for the
-/// split fan-out and merge contract; each split's distance kernel
-/// stays sequential — the split fan-out already owns the cores).
+/// count under EITHER schedule (each split's distance kernel stays
+/// sequential — the split fan-out already owns the cores).
+#[deprecated(note = "use `sweep_shared_exec` with an `ExecPolicy` \
+                     pinning `DistanceAlgo::Exact`")]
 pub fn sweep_shared_par(
     ds: &Dataset,
     folds: &Folds,
@@ -318,33 +364,21 @@ pub fn sweep_shared_par(
     threads: usize,
     schedule: Schedule,
 ) -> (SweepResult<usize>, SweepResult<f32>) {
-    sweep_shared_algo(ds, folds, ks, bandwidths, threads, schedule,
-                      DistanceAlgo::Exact)
+    sweep_core(ds, folds, ks, bandwidths, threads, schedule,
+               DistanceAlgo::Exact)
 }
 
-/// Production entry for the sweep engine: shards across CV splits with
-/// the session thread count (`--threads` → `LOCALITY_ML_THREADS` →
-/// available cores), session schedule (`--schedule` →
-/// `LOCALITY_ML_SCHEDULE` → auto) and session distance formulation
-/// (`--dist-algo` → `LOCALITY_ML_DIST_ALGO` → auto, resolved per split
-/// on its multiply-adds), gated by `effective_threads` on the sweep's
-/// total distance work so small sweeps stay on the exact sequential
-/// path with no spawns.
+/// Session-default sweep; equivalent to [`sweep_shared_exec`] with the
+/// fully-Auto [`ExecPolicy`].
+#[deprecated(note = "use `sweep_shared_exec` with \
+                     `ExecPolicy::default()`")]
 pub fn sweep_shared_auto(
     ds: &Dataset,
     folds: &Folds,
     ks: &[usize],
     bandwidths: &[f32],
 ) -> (SweepResult<usize>, SweepResult<f32>) {
-    let work: usize = (0..folds.k())
-        .map(|f| {
-            let test = folds.test_indices(f).len();
-            test * (ds.n - test) * ds.d
-        })
-        .sum();
-    let threads = effective_threads(default_threads(), work);
-    sweep_shared_algo(ds, folds, ks, bandwidths, threads,
-                      default_schedule(), default_dist_algo())
+    sweep_shared_exec(ds, folds, ks, bandwidths, &ExecPolicy::default())
 }
 
 /// The naive nest the paper criticises: every candidate recomputes the
@@ -437,6 +471,9 @@ pub fn silverman_bandwidth(ds: &Dataset) -> f32 {
 
 #[cfg(test)]
 mod tests {
+    // the deprecated tuple entries stay under test: their parity with
+    // sweep_shared_exec is part of the migration contract
+    #![allow(deprecated)]
     use super::*;
     use crate::data::synth::chembl_like;
     use crate::data::synth::gaussian_mixture;
@@ -516,6 +553,39 @@ mod tests {
         let got = sweep_shared_auto(&ds, &folds, &ks, &hs);
         assert_eq!(got, want,
             "auto sweep diverged from its resolved-policy engine run");
+    }
+
+    #[test]
+    fn exec_engine_matches_the_tuple_entries_bit_for_bit() {
+        // The api_redesign contract: the ExecPolicy entry is the same
+        // engine as the deprecated tuple wrappers. The sweep is
+        // thread/schedule bit-invariant for a fixed formulation, so
+        // the exec entry's work gating cannot move the comparison.
+        let (ds, folds) = small();
+        let ks = [1usize, 3, 5];
+        let hs = [0.5f32, 8.0];
+        assert_eq!(
+            sweep_shared_exec(&ds, &folds, &ks, &hs,
+                              &ExecPolicy::sequential()),
+            sweep_shared(&ds, &folds, &ks, &hs),
+            "sequential-policy exec sweep diverged from the oracle");
+        for algo in [DistanceAlgo::Exact, DistanceAlgo::Gemm] {
+            let want = sweep_shared_algo(&ds, &folds, &ks, &hs, 1,
+                                         Schedule::Static, algo);
+            for threads in [2usize, 4, 7] {
+                for sched in [Schedule::Static, Schedule::Stealing] {
+                    let pol = ExecPolicy::default()
+                        .with_threads(threads)
+                        .with_schedule(sched)
+                        .with_algo(algo);
+                    let got = sweep_shared_exec(&ds, &folds, &ks, &hs,
+                                                &pol);
+                    assert_eq!(got, want,
+                        "exec sweep diverged at {threads} threads \
+                         under {sched:?} on {algo:?}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -11,10 +11,9 @@
 
 use crate::data::sampling::majority_vote;
 use crate::data::Dataset;
-use crate::kernels::{distance, parallel, DistanceAlgo, NormCache,
-                     TileConfig};
+use crate::kernels::{DistanceAlgo, ExecPolicy, NormCache, TileConfig};
 use crate::learners::instance::{BANDWIDTH, K};
-use crate::learners::{joint_scan_fused_par, joint_scan_par, NaiveBayes};
+use crate::learners::{joint_scan_exec, NaiveBayes};
 
 /// A trained three-member system: NB model + the remembered training set
 /// for the instance-based members, plus the training set's [`NormCache`]
@@ -27,7 +26,10 @@ pub struct MultiClassifier {
     pub k: usize,
     pub bandwidth: f32,
     norms: NormCache,
-    dist_algo: Option<DistanceAlgo>,
+    /// execution policy for the shared distance pass — fully-Auto by
+    /// default; [`MultiClassifier::with_policy`] /
+    /// [`MultiClassifier::with_dist_algo`] pin axes per instance
+    policy: ExecPolicy,
 }
 
 /// Per-member and combined predictions for one stream pass.
@@ -50,8 +52,17 @@ impl MultiClassifier {
             train: train.clone(),
             k: K,
             bandwidth: BANDWIDTH,
-            dist_algo: None,
+            policy: ExecPolicy::default(),
         }
+    }
+
+    /// Pin the full execution policy (threads, schedule, distance
+    /// formulation) for this classifier's shared distance pass;
+    /// still-Auto axes resolve against the session defaults at predict
+    /// time, gated on each stream's work.
+    pub fn with_policy(mut self, policy: &ExecPolicy) -> Self {
+        self.policy = *policy;
+        self
     }
 
     /// Pin the distance formulation for this classifier instead of the
@@ -60,7 +71,7 @@ impl MultiClassifier {
     /// standalone scans; Gemm routes the shared distance pass through
     /// the GEMM formulation over the fit-time norm cache.
     pub fn with_dist_algo(mut self, algo: DistanceAlgo) -> Self {
-        self.dist_algo = Some(algo);
+        self.policy = self.policy.with_algo(algo);
         self
     }
 
@@ -79,28 +90,24 @@ impl MultiClassifier {
     pub fn predict(&self, rows: &[f32]) -> McsPredictions {
         let nb = self.nb.predict(rows);
         // distance work = queries × train rows × features; tiny streams
-        // stay on the sequential scan (no spawn overhead)
+        // stay on the sequential scan (no spawn overhead) and small
+        // streams on the Exact formulation — both gates live on the
+        // instance's ExecPolicy, resolved once on the whole stream
         let work = (rows.len() / self.train.d.max(1)) * self.train.n
             * self.train.d;
-        let threads =
-            parallel::effective_threads(parallel::default_threads(), work);
+        let threads = self.policy.threads_for(work);
         let tiles = TileConfig::westmere_workers(threads);
-        let sched = parallel::default_schedule();
-        // distance formulation: instance pin → session policy, Auto
-        // resolved once on the whole stream's multiply-adds. Gemm runs
-        // the fused scans over the fit-time norm cache; Exact keeps
-        // the bit-stable materializing path.
-        let algo = self
-            .dist_algo
-            .unwrap_or_else(distance::default_dist_algo)
-            .resolve(work);
-        let (knn, prw) = match algo {
-            DistanceAlgo::Gemm => joint_scan_fused_par(
-                &self.train, rows, self.train.d, self.k, self.bandwidth,
-                &tiles, DistanceAlgo::Gemm, &self.norms, threads, sched),
-            _ => joint_scan_par(&self.train, rows, self.train.d, self.k,
-                                self.bandwidth, &tiles, threads, sched),
-        };
+        // the fused scans consume the pinned-axis policy: Gemm runs
+        // over the fit-time norm cache through the packed micro-kernel;
+        // Exact keeps the bit-stable per-pair path (fused Exact is
+        // prediction-identical to the materializing scans — the
+        // instance-learner parity suite pins that)
+        let pol = self.policy
+            .with_threads(threads)
+            .with_algo(self.policy.algo_for(work));
+        let (knn, prw) = joint_scan_exec(
+            &self.train, rows, self.train.d, self.k, self.bandwidth,
+            &tiles, &self.norms, &pol);
         let vote = majority_vote(
             &[nb.clone(), knn.clone(), prw.clone()],
             self.train.n_classes,

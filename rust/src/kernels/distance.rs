@@ -12,14 +12,20 @@
 //! * **Gemm** — the §4 "reuse of computation results" decomposition
 //!   `‖q−t‖² = ‖q‖² + ‖t‖² − 2·q·t`: the dominant cross term becomes a
 //!   plain GEMM over the pre-transposed training matrix, executed by
-//!   the 4-deep unrolled [`matmul_tiled`] micro-kernel (unit-stride
-//!   rows of both operands, SIMD-friendly independent accumulators —
-//!   the same blocking the matmul CI gate measures at ≥ 2×), while the
-//!   row norms are **precomputed once** and reused across every query,
-//!   every CV split, every sweep candidate and every ensemble member
+//!   the **packed SIMD micro-kernel** ([`matmul_packed`]) — the
+//!   training operand is packed once into reuse-ordered, 32-byte
+//!   aligned [`PackedPanel`]s and streamed through the register-blocked
+//!   scalar/SSE2/AVX2 kernel (the blocking the `bench_pack` CI gate
+//!   measures at ≥ 2× over the tiled-scalar loop) — while the row norms
+//!   are **precomputed once** and reused across every query, every CV
+//!   split, every sweep candidate and every ensemble member
 //!   ([`NormCache`]). Results are within ≤ 1e-4 of Exact on well-scaled
 //!   data (property-tested) but NOT bit-identical: the formulation
-//!   reassociates the reduction. Exact stays the oracle.
+//!   reassociates the reduction. Exact stays the oracle. (The packed
+//!   matmul itself is bit-identical to the naive matmul at every SIMD
+//!   tier, so the Gemm distances do not depend on blocking, thread
+//!   count, or the dispatched tier — only the *formulation* moves
+//!   bits.)
 //!
 //! # Catastrophic cancellation guard
 //!
@@ -33,12 +39,14 @@
 //! non-finite inputs (±inf/NaN) stay on the Exact path, whose NaN
 //! ordering contract is preserved by `total_cmp` downstream.
 //!
-//! [`matmul_tiled`]: super::matmul::matmul_tiled
+//! [`matmul_packed`]: super::matmul::matmul_packed
+//! [`PackedPanel`]: super::pack::PackedPanel
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use super::matmul::matmul_tiled;
+use super::matmul::matmul_acc_prepacked;
+use super::pack::PackedPanel;
 use super::tile::TileConfig;
 
 /// Squared Euclidean distance, accumulated in ascending feature order.
@@ -321,14 +329,51 @@ pub fn pairwise_sq_dists_tiled(
 // GEMM formulation
 // ---------------------------------------------------------------------
 
-/// The Gemm-formulation core over a **pre-transposed** training matrix:
-/// `train_t` is `[d × n]` (one [`transpose_rows`] pack, amortised
-/// across every query tile and every caller that reuses it), the cross
-/// term `q·t` runs through the 4-deep unrolled tiled matmul directly
-/// into `out`, and one unit-stride pass rebuilds
+/// The Gemm-formulation core over an **already-packed** training
+/// operand: `pb` holds the `[d × n]` transposed training matrix packed
+/// once into reuse-ordered [`PackedPanel`]s (built at fit time for the
+/// instance learners, or once per fan-out on the calling thread — then
+/// shared read-only by every worker and every query tile). The cross
+/// term `q·t` runs through the register-blocked SIMD micro-kernel
+/// directly into `out`, and one unit-stride pass rebuilds
 /// `‖q‖² + ‖t‖² − 2·q·t`, clamped at 0 (see the module docs on
 /// cancellation). Row norms come from the caller — a [`NormCache`] for
 /// anything dataset-backed — so they are never recomputed here.
+pub fn pairwise_sq_dists_gemm_packed(
+    pb: &PackedPanel,
+    queries: &[f32],
+    d: usize,
+    train_norms: &[f32],
+    query_norms: &[f32],
+    out: &mut [f32],
+    t: &TileConfig,
+) {
+    assert!(d > 0, "feature dimension must be positive");
+    assert_eq!(pb.k(), d, "pack depth must be the feature dimension");
+    let n = pb.n();
+    assert_eq!(queries.len() % d, 0);
+    let nq = queries.len() / d;
+    assert_eq!(train_norms.len(), n);
+    assert_eq!(query_norms.len(), nq);
+    assert_eq!(out.len(), nq * n);
+    if n == 0 || nq == 0 {
+        return;
+    }
+    out.fill(0.0);
+    matmul_acc_prepacked(queries, pb, out, nq, t);
+    for (q, orow) in out.chunks_exact_mut(n).enumerate() {
+        let qn = query_norms[q];
+        for (o, &tn) in orow.iter_mut().zip(train_norms) {
+            *o = (qn + tn - 2.0 * *o).max(0.0);
+        }
+    }
+}
+
+/// The Gemm-formulation core over a **pre-transposed** training matrix:
+/// packs `train_t` (`[d × n]`) into [`PackedPanel`]s and runs
+/// [`pairwise_sq_dists_gemm_packed`]. Callers that hold the pack
+/// itself (fused scans, the parallel fan-out) should call the packed
+/// entry directly so the packing cost is paid once, not per call.
 #[allow(clippy::too_many_arguments)]
 pub fn pairwise_sq_dists_gemm_pre(
     train_t: &[f32],
@@ -342,21 +387,9 @@ pub fn pairwise_sq_dists_gemm_pre(
 ) {
     assert!(d > 0, "feature dimension must be positive");
     assert_eq!(train_t.len(), d * n);
-    assert_eq!(queries.len() % d, 0);
-    let nq = queries.len() / d;
-    assert_eq!(train_norms.len(), n);
-    assert_eq!(query_norms.len(), nq);
-    assert_eq!(out.len(), nq * n);
-    if n == 0 || nq == 0 {
-        return;
-    }
-    matmul_tiled(queries, train_t, out, nq, d, n, t);
-    for (q, orow) in out.chunks_exact_mut(n).enumerate() {
-        let qn = query_norms[q];
-        for (o, &tn) in orow.iter_mut().zip(train_norms) {
-            *o = (qn + tn - 2.0 * *o).max(0.0);
-        }
-    }
+    let pb = PackedPanel::pack(train_t, d, n, t.kc);
+    pairwise_sq_dists_gemm_packed(&pb, queries, d, train_norms,
+                                  query_norms, out, t);
 }
 
 /// GEMM-formulation pairwise distances over row-major operands:
@@ -578,6 +611,43 @@ mod tests {
             pairwise_sq_dists_gemm_pre(&train_t, n, &queries, d, &tn,
                                        &qn, &mut got, &t);
             prop_assert!(want == got, "pre-transposed gemm diverged");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemm_packed_reuses_one_pack_bit_for_bit() {
+        // The PackedPanel entry (what the fused scans and the parallel
+        // fan-out hold across calls) must match the pack-per-call
+        // entry exactly, and — because packed-matmul bits are
+        // independent of blocking — the distances must not depend on
+        // the tile config at all.
+        check("gemm-packed-vs-pre", 15, |g| {
+            let d = g.usize_in(1, 10);
+            let n = g.usize_in(1, 30);
+            let nq = g.usize_in(1, 12);
+            let train = g.f32_vec(n * d, 1.0);
+            let queries = g.f32_vec(nq * d, 1.0);
+            let t = rand_tiles(g);
+            let t2 = rand_tiles(g);
+            let tn = row_sq_norms(&train, d);
+            let qn = row_sq_norms(&queries, d);
+            let train_t = transpose_rows(&train, d);
+            let mut want = vec![0.0f32; nq * n];
+            pairwise_sq_dists_gemm_pre(&train_t, n, &queries, d, &tn,
+                                       &qn, &mut want, &t);
+            let pb = PackedPanel::pack(&train_t, d, n, t.kc);
+            for _ in 0..2 {
+                let mut got = vec![-1.0f32; nq * n];
+                pairwise_sq_dists_gemm_packed(&pb, &queries, d, &tn,
+                                              &qn, &mut got, &t);
+                prop_assert!(want == got, "reused pack diverged");
+            }
+            let mut other = vec![0.0f32; nq * n];
+            pairwise_sq_dists_gemm_pre(&train_t, n, &queries, d, &tn,
+                                       &qn, &mut other, &t2);
+            prop_assert!(want == other,
+                "gemm distances must not depend on the tile config");
             Ok(())
         });
     }

@@ -22,7 +22,21 @@
 //! A zero-skip on the `A` scalars is kept from the original MLP loop
 //! nest: ReLU activations make `A` sparse in the backprop paths and
 //! skipping a row of multiplies per dead group is free for dense inputs.
+//!
+//! A third path — **packed** ([`matmul_packed`] and the `prepacked`
+//! variants) — adds the BLIS-style register rung on top of the cache
+//! blocking: operands are packed once per macro-tile into aligned
+//! [`PackedPanel`]/A-panel buffers ([`super::pack`]) and multiplied by
+//! an `MR × NR` SIMD micro-kernel. Unlike the tiled kernel it performs
+//! NO zero-skip and NO group reassociation: each C element is one
+//! `p`-ascending mul/add chain, so the packed path is **bit-identical
+//! to [`matmul_naive`]** at every [`super::pack::MicroKernel`] tier and
+//! for every tile configuration.
 
+use super::pack::{
+    pack_a_block, round_up, run_micro, MicroKernel, PackedBuf,
+    PackedPanel, MR, NR,
+};
 use super::tile::TileConfig;
 
 /// Naive reference: `C = A·B` via `i-j-k` dot products.
@@ -253,6 +267,152 @@ pub(crate) fn matmul_tn_acc_rows(
     }
 }
 
+/// Packed-operand `C = A·B` (overwrites `c`): packs `b` once with the
+/// config's `kc` blocking, then runs [`matmul_acc_prepacked`].
+/// Bit-identical to [`matmul_naive`] (see module docs).
+pub fn matmul_packed(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    t: &TileConfig,
+) {
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    let pb = PackedPanel::pack(b, k, n, t.kc.max(1));
+    matmul_acc_prepacked(a, &pb, c, m, t);
+}
+
+/// Packed-operand `C += A·B` — packs `b` per call; prefer
+/// [`matmul_acc_prepacked`] when `b` is reused across calls.
+pub fn matmul_acc_packed(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    t: &TileConfig,
+) {
+    assert_eq!(b.len(), k * n);
+    let pb = PackedPanel::pack(b, k, n, t.kc.max(1));
+    matmul_acc_prepacked(a, &pb, c, m, t);
+}
+
+/// Packed-operand `C = bias ⊕ A·B` — the NN forward primitive on the
+/// packed path.
+pub fn matmul_bias_packed(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    t: &TileConfig,
+) {
+    assert_eq!(b.len(), k * n);
+    let pb = PackedPanel::pack(b, k, n, t.kc.max(1));
+    matmul_bias_prepacked(a, &pb, bias, c, m, t);
+}
+
+/// `C += A·B` against an already-packed `B` operand, on the session's
+/// dispatched micro-kernel tier. This is the reuse entry point: the
+/// GEMM distance engine packs each train panel once per sweep,
+/// `NativeMlp` packs its forward weights once at fit time, and every
+/// subsequent multiply streams the packed bytes straight into the
+/// register block.
+pub fn matmul_acc_prepacked(
+    a: &[f32],
+    pb: &PackedPanel,
+    c: &mut [f32],
+    m: usize,
+    t: &TileConfig,
+) {
+    matmul_acc_prepacked_with(super::pack::micro_kernel(), a, pb, c, m,
+                              t);
+}
+
+/// `C = bias ⊕ A·B` against an already-packed `B` operand.
+pub fn matmul_bias_prepacked(
+    a: &[f32],
+    pb: &PackedPanel,
+    bias: &[f32],
+    c: &mut [f32],
+    m: usize,
+    t: &TileConfig,
+) {
+    assert_eq!(bias.len(), pb.n());
+    assert_eq!(c.len(), m * pb.n());
+    for row in c.chunks_exact_mut(pb.n().max(1)) {
+        row.copy_from_slice(bias);
+    }
+    matmul_acc_prepacked(a, pb, c, m, t);
+}
+
+/// Explicit-tier core of [`matmul_acc_prepacked`] — the entry point
+/// the tier-parity property tests drive directly. Panics if `kernel`
+/// is not available on this CPU.
+///
+/// Loop structure (BLIS loops 4–1 with `NC` subsumed by the prepacked
+/// operand): per depth block of `pb`, per `mc`-row block of `A` (packed
+/// here, once per element), per `NR`-column panel of packed B, per
+/// `MR`-row panel of packed A, one micro-kernel call. Accumulators are
+/// seeded from `C`, so per-element bits are independent of every
+/// blocking parameter.
+pub fn matmul_acc_prepacked_with(
+    kernel: MicroKernel,
+    a: &[f32],
+    pb: &PackedPanel,
+    c: &mut [f32],
+    m: usize,
+    t: &TileConfig,
+) {
+    let (k, n) = (pb.k(), pb.n());
+    assert_eq!(a.len(), m * k);
+    assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mc = round_up(t.mc.max(1), MR);
+    let mut apack =
+        PackedBuf::zeroed(mc.min(round_up(m, MR)) * pb.kc().max(1));
+    for (bi, (p0, kb)) in pb.depth_blocks().enumerate() {
+        for ic in (0..m).step_by(mc) {
+            let rows = (ic + mc).min(m) - ic;
+            let apanels = rows.div_ceil(MR);
+            pack_a_block(a, k, ic, rows, p0, kb, apack.as_mut_slice());
+            let apack = apack.as_slice();
+            for jp in 0..pb.col_panels() {
+                let bp = pb.panel(bi, jp);
+                let j0 = jp * NR;
+                let cols = NR.min(n - j0);
+                for ip in 0..apanels {
+                    let i0 = ic + ip * MR;
+                    let live = MR.min(m - i0);
+                    let ap =
+                        &apack[ip * MR * kb..ip * MR * kb + MR * kb];
+                    let mut acc = [0.0f32; MR * NR];
+                    for r in 0..live {
+                        let s = (i0 + r) * n + j0;
+                        acc[r * NR..r * NR + cols]
+                            .copy_from_slice(&c[s..s + cols]);
+                    }
+                    run_micro(kernel, ap, bp, kb, &mut acc);
+                    for r in 0..live {
+                        let s = (i0 + r) * n + j0;
+                        c[s..s + cols]
+                            .copy_from_slice(&acc[r * NR..r * NR + cols]);
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -396,5 +556,124 @@ mod tests {
         // k = 0: C must still be zeroed (empty sum)
         matmul_tiled(&[], &[], &mut c, 1, 0, 3, &t);
         assert_eq!(c, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn packed_is_bit_identical_to_naive_on_every_tier() {
+        // The tentpole contract: one accumulator per C element,
+        // p-ascending mul/add, seeded from C — so the packed kernel
+        // reproduces the naive i-j-p chain EXACTLY, for every blocking
+        // and every runnable micro-kernel tier, on ragged shapes.
+        check("matmul-packed-vs-naive", 30, |g| {
+            let (m, k, n) =
+                (g.usize_in(1, 40), g.usize_in(1, 40), g.usize_in(1, 40));
+            let a = g.f32_vec(m * k, 2.0);
+            let b = g.f32_vec(k * n, 2.0);
+            let t = rand_tiles(g);
+            let mut want = vec![0.0f32; m * n];
+            matmul_naive(&a, &b, &mut want, m, k, n);
+            let pb = PackedPanel::pack(&b, k, n, t.kc.max(1));
+            for tier in MicroKernel::supported() {
+                let mut got = vec![0.0f32; m * n];
+                matmul_acc_prepacked_with(tier, &a, &pb, &mut got, m,
+                                          &t);
+                if got != want {
+                    return Err(format!(
+                        "{} tier != naive at {m}x{k}x{n}, tiles {t:?}",
+                        tier.name()));
+                }
+            }
+            let mut got = vec![7.0f32; m * n]; // must be overwritten
+            matmul_packed(&a, &b, &mut got, m, k, n, &t);
+            if got != want {
+                return Err(format!(
+                    "matmul_packed != naive at {m}x{k}x{n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_bits_do_not_depend_on_blocking() {
+        // kc/mc splits only change which registers hold the chain, not
+        // the chain itself: any two tile configs agree bitwise.
+        check("matmul-packed-blocking-invariance", 15, |g| {
+            let (m, k, n) =
+                (g.usize_in(1, 33), g.usize_in(1, 48), g.usize_in(1, 33));
+            let a = g.f32_vec(m * k, 2.0);
+            let b = g.f32_vec(k * n, 2.0);
+            let (t1, t2) = (rand_tiles(g), rand_tiles(g));
+            let mut c1 = vec![0.0f32; m * n];
+            let mut c2 = vec![0.0f32; m * n];
+            matmul_packed(&a, &b, &mut c1, m, k, n, &t1);
+            matmul_packed(&a, &b, &mut c2, m, k, n, &t2);
+            if c1 != c2 {
+                return Err(format!(
+                    "blocking changed bits at {m}x{k}x{n}: {t1:?} vs \
+                     {t2:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prepacked_panel_reuse_matches_fresh_pack() {
+        // The reuse story: one PackedPanel serving several A operands
+        // must give the same bits as packing per call.
+        let mut g = Gen::new(9);
+        let (k, n) = (37usize, 19usize);
+        let b = g.f32_vec(k * n, 2.0);
+        let t = TileConfig::westmere();
+        let pb = PackedPanel::pack(&b, k, n, t.kc);
+        for m in [1usize, 4, 13] {
+            let a = g.f32_vec(m * k, 2.0);
+            let mut fresh = vec![0.0f32; m * n];
+            matmul_packed(&a, &b, &mut fresh, m, k, n, &t);
+            let mut reused = vec![0.0f32; m * n];
+            matmul_acc_prepacked(&a, &pb, &mut reused, m, &t);
+            assert_eq!(fresh, reused, "reuse diverged at m={m}");
+        }
+    }
+
+    #[test]
+    fn packed_bias_matches_reference() {
+        check("matmul-packed-bias", 15, |g| {
+            let (m, k, n) =
+                (g.usize_in(1, 20), g.usize_in(1, 20), g.usize_in(1, 20));
+            let a = g.f32_vec(m * k, 2.0);
+            let b = g.f32_vec(k * n, 2.0);
+            let bias = g.f32_vec(n, 2.0);
+            let t = rand_tiles(g);
+            // bias-seeded naive chain: acc starts at bias[j]
+            let mut want = vec![0.0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = bias[j];
+                    for p in 0..k {
+                        acc += a[i * k + p] * b[p * n + j];
+                    }
+                    want[i * n + j] = acc;
+                }
+            }
+            let mut got = vec![0.0f32; m * n];
+            matmul_bias_packed(&a, &b, &bias, &mut got, m, k, n, &t);
+            if got != want {
+                return Err(format!(
+                    "packed bias != reference at {m}x{k}x{n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_zero_dims_are_harmless() {
+        let t = TileConfig::westmere();
+        let mut c: Vec<f32> = Vec::new();
+        matmul_packed(&[], &[], &mut c, 0, 0, 0, &t);
+        let mut c = vec![5.0f32; 3];
+        matmul_packed(&[], &[], &mut c, 1, 0, 3, &t);
+        assert_eq!(c, vec![0.0; 3]);
+        let mut c: Vec<f32> = Vec::new();
+        matmul_packed(&[], &[1.0, 2.0], &mut c, 0, 1, 2, &t);
     }
 }

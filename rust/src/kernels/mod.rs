@@ -9,6 +9,7 @@
 //! | [`pairwise_sq_dists_tiled`] | `kernels/distance.py` | Alg 10/11 distance pass |
 //! | [`pairwise_sq_dists_gemm`] (+ [`NormCache`]) | `kernels/distance.py` | §4 "reuse of computation results": ‖q−t‖² = ‖q‖²+‖t‖²−2·q·t, cross term through the Fig 3 GEMM |
 //! | [`coupled_step_tiled`] | `linear_coupled` graph | §4.3 coupled LR+SVM |
+//! | [`matmul_packed`] (+ [`PackedPanel`] / [`MicroKernel`]) | — | register-level reuse: the hierarchy ladder's last rung — operands packed once into reuse-ordered panels, an `MR × NR` register block reused across the whole `K` reduction (Fig 3 taken down to the register file) |
 //!
 //! # Tiling scheme
 //!
@@ -34,6 +35,15 @@
 //! paper's §5 testbed). The simulator predicts the miss-rate effects;
 //! these kernels realise them on the host running the experiments.
 //!
+//! Below the cache tiles, the [`pack`] module adds the **register**
+//! rung: A/B operands are packed once per macro-tile into contiguous
+//! 32-byte-aligned panels ([`PackedPanel`]) ordered exactly as the
+//! `MR × NR` register-blocked micro-kernel streams them, and one
+//! [`MicroKernel`] dispatch point picks scalar / SSE2 / AVX2 at runtime
+//! (`LOCALITY_ML_FORCE_SCALAR` pins the fallback). All tiers are
+//! bit-identical, and the packed matmul is bit-identical to the naive
+//! oracle — see `pack`'s module docs for why.
+//!
 //! The [`parallel`] layer shards these macro-tiles across a scoped
 //! worker pool — `MC`-row blocks for matmul, query tiles for distances,
 //! row blocks for the coupled step — with per-worker tile sizes from
@@ -43,6 +53,14 @@
 //! partitioning or dynamic work stealing per call; both produce the
 //! same bits (partials merge by tile index, never completion order), so
 //! the policy only moves wall-clock on skewed shapes.
+//!
+//! All three execution axes — worker count, schedule, distance
+//! formulation — are carried by one [`ExecPolicy`] value
+//! ([`policy`]): `ExecPolicy::default()` is fully-Auto,
+//! [`ExecPolicy::resolve`] is the single CLI→env→Auto resolution
+//! point, and every kernel/coordinator entry point takes
+//! `&ExecPolicy` (the old bare `(threads, schedule[, algo])`
+//! signatures survive only as deprecated wrappers).
 //!
 //! The **distance engine** additionally offers a second formulation
 //! ([`DistanceAlgo`]): `Exact` keeps the bit-stable
@@ -69,24 +87,36 @@
 pub mod coupled;
 pub mod distance;
 pub mod matmul;
+pub mod pack;
 pub mod parallel;
+pub mod policy;
 pub mod tile;
 
 pub use coupled::coupled_step_tiled;
 pub use distance::{
     gather_rows, pairwise_sq_dists_algo, pairwise_sq_dists_gemm,
-    pairwise_sq_dists_naive, pairwise_sq_dists_tiled, DistanceAlgo,
-    NormCache,
+    pairwise_sq_dists_gemm_packed, pairwise_sq_dists_naive,
+    pairwise_sq_dists_tiled, DistanceAlgo, NormCache,
 };
 pub use matmul::{
-    matmul_acc_tiled, matmul_bias_tiled, matmul_naive, matmul_tiled,
+    matmul_acc_prepacked, matmul_acc_tiled, matmul_bias_prepacked,
+    matmul_bias_tiled, matmul_naive, matmul_packed, matmul_tiled,
     matmul_tn_acc_naive, matmul_tn_acc_tiled,
 };
+pub use pack::{micro_kernel, MicroKernel, PackedPanel};
+pub use policy::ExecPolicy;
+#[allow(deprecated)]
 pub use parallel::{
     coupled_step_par, matmul_acc_tiled_par, matmul_bias_tiled_par,
     matmul_tiled_par, matmul_tn_acc_tiled_par,
     pairwise_sq_dists_algo_par, pairwise_sq_dists_gather_algo_par,
     pairwise_sq_dists_gather_par, pairwise_sq_dists_gemm_par,
     pairwise_sq_dists_tiled_par, Schedule,
+};
+pub use parallel::{
+    coupled_step_exec, matmul_acc_exec, matmul_bias_exec,
+    matmul_bias_prepacked_exec, matmul_exec, matmul_tn_acc_exec,
+    pairwise_sq_dists_exec, pairwise_sq_dists_gather_exec,
+    pairwise_sq_dists_gemm_exec,
 };
 pub use tile::TileConfig;

@@ -1,0 +1,607 @@
+//! BLIS-style operand packing + the register-blocked SIMD micro-kernel.
+//!
+//! The cache-blocked kernels in [`super::matmul`] fix the *cache*-level
+//! traffic but still stream unpacked row-major slices through a scalar
+//! inner loop, so register/SIMD-level reuse — the last rung of the
+//! paper's memory-hierarchy ladder — is left on the table. This module
+//! supplies that rung:
+//!
+//! * **Packing** (`PackedPanel`, `pack_a_block`): operand panels are
+//!   copied once per macro-tile into contiguous, 32-byte-aligned,
+//!   reuse-ordered buffers. The B operand packs into `NR`-column panels
+//!   (`p`-major within a panel: the micro-kernel streams it forward
+//!   exactly once per C stripe); the A operand packs into `MR`-row
+//!   panels (`p`-major, `MR` consecutive rows per slice — one broadcast
+//!   each). Edge panels are zero-padded so the micro-kernel never
+//!   branches on shape.
+//! * **Micro-kernel** (`MicroKernel`): an `MR`×`NR` = 4×8 register
+//!   block per C update — one AVX2 `ymm` (or two SSE2 `xmm`) of B per
+//!   `p` step against four broadcast A scalars, accumulated in four
+//!   (eight) vector registers. Tiers: `Scalar` (portable fallback,
+//!   builds on any target), `Sse2` (x86-64 baseline), `Avx2` (runtime
+//!   `is_x86_feature_detected!`). `LOCALITY_ML_FORCE_SCALAR` pins the
+//!   fallback for CI parity legs.
+//!
+//! # Bit-stability contract
+//!
+//! Every tier gives each C element ONE accumulator, updated with a
+//! separate multiply and add (never FMA) in ascending-`p` order, and
+//! the accumulator is seeded from C itself, so:
+//!
+//! * `Scalar`, `Sse2` and `Avx2` produce **bit-identical** results
+//!   (IEEE-754 lane-wise mul/add are exact per-lane operations — the
+//!   vector width only changes how many independent chains advance per
+//!   instruction, never a chain's order);
+//! * per-element bits are independent of the `MR`/`NR`/`mc` blocking
+//!   AND of `kc`: a C element's value is the chain
+//!   `((c₀ + a·b) + a·b) + …` over `p = 0..k` regardless of how the
+//!   loops are split, i.e. bit-identical to the naive `i–j–p` kernel.
+//!
+//! The zero padding preserves this: padded A×B lanes contribute
+//! `0·0 = +0.0` to lanes that are masked off at write-back anyway, and
+//! `x + 0.0 = x` for every finite/subnormal x the kernels see.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Micro-kernel register-block rows (A panel height).
+pub const MR: usize = 4;
+/// Micro-kernel register-block columns (B panel width) — one AVX2
+/// vector, two SSE2 vectors.
+pub const NR: usize = 8;
+
+/// `x` rounded up to the next multiple of `m`.
+pub fn round_up(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+// ---------------------------------------------------------------------
+// Aligned storage
+// ---------------------------------------------------------------------
+
+/// One 32-byte-aligned lane of 8 f32 — the allocation unit of packed
+/// buffers, so `as_slice().as_ptr()` is always 32-byte aligned and the
+/// AVX2 tier could use aligned loads (it uses `loadu`, which is
+/// penalty-free on aligned addresses on every µarch this targets).
+#[repr(C, align(32))]
+#[derive(Clone, Copy)]
+struct Lane([f32; 8]);
+
+/// Contiguous, 32-byte-aligned, zero-initialised f32 buffer.
+pub struct PackedBuf {
+    lanes: Vec<Lane>,
+    len: usize,
+}
+
+impl PackedBuf {
+    /// A zeroed buffer holding `len` f32s (rounded up to whole lanes).
+    pub fn zeroed(len: usize) -> Self {
+        Self { lanes: vec![Lane([0.0; 8]); len.div_ceil(8)], len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: `lanes` is a contiguous Vec of repr(C) [f32; 8]
+        // blocks, so the first `len` f32s are initialised, contiguous
+        // and live as long as `self`.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.lanes.as_ptr().cast::<f32>(), self.len)
+        }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: as `as_slice`, plus exclusive access via `&mut self`.
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.lanes.as_mut_ptr().cast::<f32>(), self.len)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------
+
+/// Pack the `rows × kb` block of row-major `a` starting at
+/// (`i0`, `p0`) into MR-row panels: panel `ip` holds rows
+/// `i0 + ip*MR ..`, stored `p`-major as `kb` slices of `MR` values
+/// (missing edge rows pad with zeros). `lda` is the row stride of `a`.
+/// `dst` must hold `round_up(rows, MR) * kb` f32s.
+pub fn pack_a_block(
+    a: &[f32], lda: usize, i0: usize, rows: usize, p0: usize, kb: usize,
+    dst: &mut [f32],
+) {
+    let panels = rows.div_ceil(MR);
+    assert!(dst.len() >= panels * MR * kb);
+    for ip in 0..panels {
+        let base = ip * MR * kb;
+        let live = MR.min(rows - ip * MR);
+        for p in 0..kb {
+            let s = base + p * MR;
+            for i in 0..live {
+                dst[s + i] = a[(i0 + ip * MR + i) * lda + (p0 + p)];
+            }
+            for i in live..MR {
+                dst[s + i] = 0.0;
+            }
+        }
+    }
+}
+
+/// A whole `k × n` row-major B operand packed for reuse: `kc`-deep
+/// depth blocks, each split into `NR`-column panels stored `p`-major.
+/// This is the once-per-operand layout the GEMM distance engine, the
+/// fused scans and `NativeMlp` forward weights cache and re-stream —
+/// pack once, multiply many times.
+pub struct PackedPanel {
+    buf: PackedBuf,
+    /// logical depth (rows of B)
+    k: usize,
+    /// logical width (columns of B)
+    n: usize,
+    /// depth blocking the panels were packed with
+    kc: usize,
+    /// column-panel count = ceil(n / NR)
+    np: usize,
+    /// (p0, depth, buffer offset) per depth block
+    blocks: Vec<(usize, usize, usize)>,
+}
+
+impl PackedPanel {
+    /// Pack row-major `b` (`k × n`, row stride = `n`) with depth
+    /// blocking `kc`.
+    pub fn pack(b: &[f32], k: usize, n: usize, kc: usize) -> Self {
+        assert_eq!(b.len(), k * n, "PackedPanel::pack: b is not k x n");
+        let kc = kc.max(1);
+        let np = n.div_ceil(NR).max(1);
+        let mut blocks = Vec::with_capacity(k.div_ceil(kc).max(1));
+        let mut total = 0usize;
+        let mut p0 = 0usize;
+        while p0 < k {
+            let kb = kc.min(k - p0);
+            blocks.push((p0, kb, total));
+            total += np * NR * kb;
+            p0 += kc;
+        }
+        if blocks.is_empty() {
+            // k == 0: a single empty block keeps the driver loop trivial
+            blocks.push((0, 0, 0));
+        }
+        let mut buf = PackedBuf::zeroed(total);
+        {
+            let dst = buf.as_mut_slice();
+            for &(p0, kb, off) in &blocks {
+                for jp in 0..np {
+                    let j0 = jp * NR;
+                    let live = NR.min(n.saturating_sub(j0));
+                    let base = off + jp * NR * kb;
+                    for p in 0..kb {
+                        let s = base + p * NR;
+                        let row = (p0 + p) * n + j0;
+                        dst[s..s + live]
+                            .copy_from_slice(&b[row..row + live]);
+                        // padding lanes stay 0.0 from zeroed()
+                    }
+                }
+            }
+        }
+        Self { buf, k, n, kc, np, blocks }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Depth blocking this operand was packed with.
+    pub fn kc(&self) -> usize {
+        self.kc
+    }
+
+    /// Number of NR-column panels.
+    pub fn col_panels(&self) -> usize {
+        self.np
+    }
+
+    /// The depth blocks as (p0, depth) pairs, ascending in `p0`.
+    pub fn depth_blocks(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.blocks.iter().map(|&(p0, kb, _)| (p0, kb))
+    }
+
+    /// Packed data of column-panel `jp` within depth block `bi`:
+    /// `depth * NR` f32s, `p`-major.
+    pub fn panel(&self, bi: usize, jp: usize) -> &[f32] {
+        let (_, kb, off) = self.blocks[bi];
+        let s = off + jp * NR * kb;
+        &self.buf.as_slice()[s..s + kb * NR]
+    }
+
+    /// Total packed footprint in f32s (padding included) — what the
+    /// memsim tile model charges for a resident packed operand.
+    pub fn footprint_f32(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Micro-kernel dispatch
+// ---------------------------------------------------------------------
+
+/// The register-blocked inner kernel tier. All tiers are bit-identical
+/// (see module docs); the choice only moves wall-clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MicroKernel {
+    /// Portable scalar fallback — the only tier off x86-64.
+    Scalar,
+    /// x86-64 baseline: two 128-bit accumulator rows per C row.
+    Sse2,
+    /// Runtime-detected: one 256-bit accumulator row per C row.
+    Avx2,
+}
+
+/// 0 = unset (read the env), 1 = force scalar, 2 = force auto.
+static FORCE_SCALAR: AtomicU8 = AtomicU8::new(0);
+static ENV_FORCE: OnceLock<bool> = OnceLock::new();
+static DETECTED: OnceLock<MicroKernel> = OnceLock::new();
+
+/// Does this `LOCALITY_ML_FORCE_SCALAR` value request the scalar tier?
+/// Unset / empty / `0` / `false` / `off` (case-insensitive) mean no;
+/// anything else pins the fallback.
+pub fn parse_force_scalar(val: Option<&str>) -> bool {
+    match val {
+        None => false,
+        Some(v) => {
+            let v = v.trim();
+            !(v.is_empty()
+                || v.eq_ignore_ascii_case("0")
+                || v.eq_ignore_ascii_case("false")
+                || v.eq_ignore_ascii_case("off"))
+        }
+    }
+}
+
+/// Programmatic override of `LOCALITY_ML_FORCE_SCALAR` (tests/CLI);
+/// `None` restores the environment default.
+pub fn set_force_scalar(force: Option<bool>) {
+    let v = match force {
+        None => 0,
+        Some(true) => 1,
+        Some(false) => 2,
+    };
+    FORCE_SCALAR.store(v, Ordering::Relaxed);
+}
+
+fn force_scalar() -> bool {
+    match FORCE_SCALAR.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => *ENV_FORCE.get_or_init(|| {
+            parse_force_scalar(
+                std::env::var("LOCALITY_ML_FORCE_SCALAR").ok().as_deref())
+        }),
+    }
+}
+
+impl MicroKernel {
+    /// Is this tier runnable on the current CPU?
+    pub fn available(self) -> bool {
+        match self {
+            MicroKernel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            MicroKernel::Sse2 => true, // x86-64 baseline
+            #[cfg(target_arch = "x86_64")]
+            MicroKernel::Avx2 => std::is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => false,
+        }
+    }
+
+    /// Every tier runnable on the current CPU (always includes Scalar).
+    pub fn supported() -> Vec<MicroKernel> {
+        [MicroKernel::Scalar, MicroKernel::Sse2, MicroKernel::Avx2]
+            .into_iter()
+            .filter(|k| k.available())
+            .collect()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MicroKernel::Scalar => "scalar",
+            MicroKernel::Sse2 => "sse2",
+            MicroKernel::Avx2 => "avx2",
+        }
+    }
+}
+
+fn detect_best() -> MicroKernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            return MicroKernel::Avx2;
+        }
+        MicroKernel::Sse2
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        MicroKernel::Scalar
+    }
+}
+
+/// THE dispatch point: the tier every packed kernel runs unless handed
+/// an explicit one. `LOCALITY_ML_FORCE_SCALAR` (or `set_force_scalar`)
+/// pins `Scalar`; otherwise the best runtime-detected tier, cached.
+pub fn micro_kernel() -> MicroKernel {
+    if force_scalar() {
+        return MicroKernel::Scalar;
+    }
+    *DETECTED.get_or_init(detect_best)
+}
+
+// ---------------------------------------------------------------------
+// Micro-kernel implementations
+// ---------------------------------------------------------------------
+
+/// `acc[MR×NR] += Apanel · Bpanel` over `kb` depth steps, scalar tier.
+/// `ap` is `p`-major `MR`-wide, `bp` is `p`-major `NR`-wide. The
+/// per-element operation sequence (one mul, one add, ascending `p`) is
+/// the contract every SIMD tier must reproduce bit-for-bit.
+fn mk_scalar(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR]) {
+    for p in 0..kb {
+        let arow = &ap[p * MR..p * MR + MR];
+        let brow = &bp[p * NR..p * NR + NR];
+        for i in 0..MR {
+            let a = arow[i];
+            let dst = &mut acc[i * NR..i * NR + NR];
+            for j in 0..NR {
+                dst[j] += a * brow[j];
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// SSE2 tier: 8 xmm accumulators (two per C row). Separate
+    /// `mul_ps` + `add_ps` — no FMA — so each lane's chain matches the
+    /// scalar tier bit-for-bit.
+    ///
+    /// # Safety
+    /// SSE2 is part of the x86-64 baseline; `ap`/`bp` must hold at
+    /// least `kb*MR` / `kb*NR` elements (checked by the caller).
+    pub unsafe fn mk_sse2(
+        ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR],
+    ) {
+        debug_assert!(ap.len() >= kb * MR && bp.len() >= kb * NR);
+        let mut c: [[__m128; 2]; MR] = [[_mm_setzero_ps(); 2]; MR];
+        for (i, ci) in c.iter_mut().enumerate() {
+            ci[0] = _mm_loadu_ps(acc.as_ptr().add(i * NR));
+            ci[1] = _mm_loadu_ps(acc.as_ptr().add(i * NR + 4));
+        }
+        let a = ap.as_ptr();
+        let b = bp.as_ptr();
+        for p in 0..kb {
+            let b0 = _mm_loadu_ps(b.add(p * NR));
+            let b1 = _mm_loadu_ps(b.add(p * NR + 4));
+            for (i, ci) in c.iter_mut().enumerate() {
+                let av = _mm_set1_ps(*a.add(p * MR + i));
+                ci[0] = _mm_add_ps(ci[0], _mm_mul_ps(av, b0));
+                ci[1] = _mm_add_ps(ci[1], _mm_mul_ps(av, b1));
+            }
+        }
+        for (i, ci) in c.iter().enumerate() {
+            _mm_storeu_ps(acc.as_mut_ptr().add(i * NR), ci[0]);
+            _mm_storeu_ps(acc.as_mut_ptr().add(i * NR + 4), ci[1]);
+        }
+    }
+
+    /// AVX2 tier: 4 ymm accumulators, one per C row. Same
+    /// mul-then-add chain as the scalar tier, 8 lanes at a time.
+    ///
+    /// # Safety
+    /// Caller must have verified `avx2` via `is_x86_feature_detected!`;
+    /// slice lengths as for [`mk_sse2`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mk_avx2(
+        ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR],
+    ) {
+        debug_assert!(ap.len() >= kb * MR && bp.len() >= kb * NR);
+        let mut c: [__m256; MR] = [_mm256_setzero_ps(); MR];
+        for (i, ci) in c.iter_mut().enumerate() {
+            *ci = _mm256_loadu_ps(acc.as_ptr().add(i * NR));
+        }
+        let a = ap.as_ptr();
+        let b = bp.as_ptr();
+        for p in 0..kb {
+            let bv = _mm256_loadu_ps(b.add(p * NR));
+            for (i, ci) in c.iter_mut().enumerate() {
+                let av = _mm256_set1_ps(*a.add(p * MR + i));
+                *ci = _mm256_add_ps(*ci, _mm256_mul_ps(av, bv));
+            }
+        }
+        for (i, ci) in c.iter().enumerate() {
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i * NR), *ci);
+        }
+    }
+}
+
+/// Run one micro-kernel invocation on the given tier.
+/// Panics if the tier is not [`MicroKernel::available`] here.
+pub fn run_micro(
+    kernel: MicroKernel, ap: &[f32], bp: &[f32], kb: usize,
+    acc: &mut [f32; MR * NR],
+) {
+    assert!(ap.len() >= kb * MR, "A panel shorter than kb*MR");
+    assert!(bp.len() >= kb * NR, "B panel shorter than kb*NR");
+    match kernel {
+        MicroKernel::Scalar => mk_scalar(ap, bp, kb, acc),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is unconditionally present on x86-64; bounds
+        // asserted above.
+        MicroKernel::Sse2 => unsafe { x86::mk_sse2(ap, bp, kb, acc) },
+        #[cfg(target_arch = "x86_64")]
+        MicroKernel::Avx2 => {
+            assert!(kernel.available(),
+                "AVX2 micro-kernel requested on a CPU without AVX2");
+            // SAFETY: avx2 presence just asserted; bounds asserted
+            // above.
+            unsafe { x86::mk_avx2(ap, bp, kb, acc) }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => panic!("{} micro-kernel unavailable on this target",
+                    kernel.name()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Gen;
+
+    #[test]
+    fn pack_a_block_layout_and_padding() {
+        // 3x4 block of a 5-wide matrix, rows 1..4, cols 1..5: one MR
+        // panel, rows 3 live + 1 zero pad, p-major.
+        let lda = 5;
+        let a: Vec<f32> = (0..25).map(|v| v as f32).collect();
+        let mut dst = vec![f32::NAN; round_up(3, MR) * 4];
+        pack_a_block(&a, lda, 1, 3, 1, 4, &mut dst);
+        for p in 0..4 {
+            for i in 0..3 {
+                assert_eq!(dst[p * MR + i], a[(1 + i) * lda + 1 + p],
+                    "panel slice p={p} row {i}");
+            }
+            assert_eq!(dst[p * MR + 3], 0.0, "pad row at p={p}");
+        }
+    }
+
+    #[test]
+    fn packed_panel_layout_edges_and_footprint() {
+        // k=5, n=11, kc=3: blocks (0,3) and (3,2); np=2 with 3 padded
+        // columns in panel 1.
+        let (k, n) = (5usize, 11usize);
+        let b: Vec<f32> = (0..k * n).map(|v| v as f32 * 0.5).collect();
+        let pb = PackedPanel::pack(&b, k, n, 3);
+        assert_eq!(pb.col_panels(), 2);
+        let blocks: Vec<_> = pb.depth_blocks().collect();
+        assert_eq!(blocks, vec![(0, 3), (3, 2)]);
+        assert_eq!(pb.footprint_f32(), 2 * NR * 3 + 2 * NR * 2);
+        for (bi, &(p0, kb)) in blocks.iter().enumerate() {
+            for jp in 0..pb.col_panels() {
+                let panel = pb.panel(bi, jp);
+                assert_eq!(panel.len(), kb * NR);
+                for p in 0..kb {
+                    for j in 0..NR {
+                        let col = jp * NR + j;
+                        let want = if col < n {
+                            b[(p0 + p) * n + col]
+                        } else {
+                            0.0
+                        };
+                        assert_eq!(panel[p * NR + j], want,
+                            "block {bi} panel {jp} p={p} j={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_buf_is_32_byte_aligned() {
+        for len in [1usize, 7, 8, 9, 1023] {
+            let buf = PackedBuf::zeroed(len);
+            assert_eq!(buf.as_slice().as_ptr() as usize % 32, 0);
+            assert_eq!(buf.len(), len);
+        }
+    }
+
+    #[test]
+    fn all_supported_tiers_match_scalar_bitwise() {
+        // The core SIMD contract: every runnable tier reproduces the
+        // scalar chain exactly, including on non-zero seed accumulators
+        // and ragged depths.
+        let mut g = Gen::new(42);
+        for _ in 0..40 {
+            let kb = g.usize_in(1, 70);
+            let ap = g.f32_vec(kb * MR, 2.0);
+            let bp = g.f32_vec(kb * NR, 2.0);
+            let seed = g.f32_vec(MR * NR, 1.0);
+            let mut want = [0.0f32; MR * NR];
+            want.copy_from_slice(&seed);
+            mk_scalar(&ap, &bp, kb, &mut want);
+            for tier in MicroKernel::supported() {
+                let mut got = [0.0f32; MR * NR];
+                got.copy_from_slice(&seed);
+                run_micro(tier, &ap, &bp, kb, &mut got);
+                assert_eq!(got, want,
+                    "{} tier diverged from scalar at kb={kb}",
+                    tier.name());
+            }
+        }
+    }
+
+    #[test]
+    fn micro_kernel_chain_is_kc_split_invariant() {
+        // Running one kb=K call must equal two chained calls at any
+        // split point — the property that makes packed bits independent
+        // of the kc blocking.
+        let mut g = Gen::new(7);
+        let k = 53usize;
+        let ap = g.f32_vec(k * MR, 2.0);
+        let bp = g.f32_vec(k * NR, 2.0);
+        let mut whole = [0.0f32; MR * NR];
+        mk_scalar(&ap, &bp, k, &mut whole);
+        for split in [1usize, 8, 31, 52] {
+            let mut parts = [0.0f32; MR * NR];
+            mk_scalar(&ap[..split * MR], &bp[..split * NR], split,
+                      &mut parts);
+            mk_scalar(&ap[split * MR..], &bp[split * NR..], k - split,
+                      &mut parts);
+            assert_eq!(parts, whole, "split at {split} changed bits");
+        }
+    }
+
+    #[test]
+    fn force_scalar_parsing() {
+        assert!(!parse_force_scalar(None));
+        assert!(!parse_force_scalar(Some("")));
+        assert!(!parse_force_scalar(Some("0")));
+        assert!(!parse_force_scalar(Some("false")));
+        assert!(!parse_force_scalar(Some("OFF")));
+        assert!(parse_force_scalar(Some("1")));
+        assert!(parse_force_scalar(Some("yes")));
+        assert!(parse_force_scalar(Some("scalar")));
+    }
+
+    #[test]
+    fn dispatch_returns_a_runnable_tier() {
+        let k = micro_kernel();
+        assert!(k.available(), "dispatched tier {k:?} not runnable");
+        assert!(MicroKernel::Scalar.available());
+        assert!(MicroKernel::supported().contains(&MicroKernel::Scalar));
+    }
+
+    #[test]
+    fn zero_depth_panel_is_harmless() {
+        let pb = PackedPanel::pack(&[], 0, 5, 64);
+        assert_eq!(pb.k(), 0);
+        assert_eq!(pb.n(), 5);
+        assert_eq!(pb.depth_blocks().count(), 1);
+        let (p0, kb) = pb.depth_blocks().next().unwrap();
+        assert_eq!((p0, kb), (0, 0));
+        assert_eq!(pb.panel(0, 0).len(), 0);
+    }
+}

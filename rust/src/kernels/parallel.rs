@@ -80,6 +80,20 @@
 //! Per-worker tile sizes come from [`TileConfig::for_workers`], which
 //! caps each worker's streamed block to its share of the shared L3 so
 //! concurrent working sets don't thrash each other.
+//!
+//! # The `ExecPolicy` API
+//!
+//! Every public kernel in this layer now takes one
+//! [`&ExecPolicy`](ExecPolicy) — the `*_exec` functions — instead of a
+//! hand-threaded `(threads, schedule[, algo])` tuple. The policy is
+//! [`resolved`](ExecPolicy::resolve) once per call (so `threads = 0`
+//! and `Schedule::Auto` pick up the session overrides) and its thread
+//! count is then used **verbatim**, exactly as the tuple signatures
+//! did: work-size gating stays a call-site concern
+//! ([`ExecPolicy::threads_for`]), so tests and benches can still shard
+//! tiny shapes on purpose. The old tuple signatures survive as thin
+//! `#[deprecated]` wrappers over the same private cores, keeping the
+//! PR-2/3/4 parity suites green unchanged.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -89,10 +103,15 @@ use super::coupled::{
     CoupledPartial,
 };
 use super::distance::{
-    gather_rows, pairwise_sq_dists_gemm_pre, pairwise_sq_dists_tiled,
+    gather_rows, pairwise_sq_dists_gemm_packed, pairwise_sq_dists_tiled,
     transpose_rows, DistanceAlgo, NormCache,
 };
-use super::matmul::{matmul_acc_tiled, matmul_tn_acc_rows, matmul_tn_acc_tiled};
+use super::matmul::{
+    matmul_acc_tiled, matmul_bias_prepacked, matmul_tn_acc_rows,
+    matmul_tn_acc_tiled,
+};
+use super::pack::PackedPanel;
+use super::policy::ExecPolicy;
 use super::tile::TileConfig;
 use crate::util::pool::Pool;
 
@@ -375,29 +394,13 @@ fn fan_out_rows(
     true
 }
 
-/// Parallel `C = A·B`: zero then accumulate (mirrors `matmul_tiled`).
-pub fn matmul_tiled_par(
-    a: &[f32],
-    b: &[f32],
-    c: &mut [f32],
-    m: usize,
-    k: usize,
-    n: usize,
-    t: &TileConfig,
-    threads: usize,
-    schedule: Schedule,
-) {
-    assert_eq!(c.len(), m * n);
-    c.fill(0.0);
-    matmul_acc_tiled_par(a, b, c, m, k, n, t, threads, schedule);
-}
-
-/// Parallel `C += A·B`: `MC`-row macro-tile blocks of the output fan
+/// Core for `C += A·B`: `MC`-row macro-tile blocks of the output fan
 /// out across workers, each owning a disjoint `&mut` slice of `C`.
 /// Bit-identical to [`matmul_acc_tiled`] at any thread count and under
 /// either schedule (row results are independent; per-element
 /// accumulation order unchanged).
-pub fn matmul_acc_tiled_par(
+#[allow(clippy::too_many_arguments)]
+fn matmul_acc_core(
     a: &[f32],
     b: &[f32],
     c: &mut [f32],
@@ -423,7 +426,139 @@ pub fn matmul_acc_tiled_par(
     }
 }
 
-/// Parallel `C = bias ⊕ A·B` (mirrors `matmul_bias_tiled`).
+/// `C = A·B` under an [`ExecPolicy`]: zero then accumulate (mirrors
+/// `matmul_tiled`). The policy is resolved once; its thread count is
+/// used verbatim (gate with [`ExecPolicy::threads_for`] at the call
+/// site if the shape may be tiny).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_exec(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    t: &TileConfig,
+    policy: &ExecPolicy,
+) {
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    matmul_acc_exec(a, b, c, m, k, n, t, policy);
+}
+
+/// `C += A·B` under an [`ExecPolicy`]. Bit-identical to
+/// [`matmul_acc_tiled`] under every policy.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_acc_exec(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    t: &TileConfig,
+    policy: &ExecPolicy,
+) {
+    let p = policy.resolve();
+    matmul_acc_core(a, b, c, m, k, n, t, p.threads, p.schedule);
+}
+
+/// Tuple-signature wrapper kept for the PR-2 parity suites.
+#[deprecated(note = "use `matmul_exec` with an `ExecPolicy`")]
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_tiled_par(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    t: &TileConfig,
+    threads: usize,
+    schedule: Schedule,
+) {
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    matmul_acc_core(a, b, c, m, k, n, t, threads, schedule);
+}
+
+/// Tuple-signature wrapper kept for the PR-2 parity suites.
+#[deprecated(note = "use `matmul_acc_exec` with an `ExecPolicy`")]
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_acc_tiled_par(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    t: &TileConfig,
+    threads: usize,
+    schedule: Schedule,
+) {
+    matmul_acc_core(a, b, c, m, k, n, t, threads, schedule);
+}
+
+/// `C = bias ⊕ A·B` under an [`ExecPolicy`] (mirrors
+/// `matmul_bias_tiled`).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bias_exec(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    t: &TileConfig,
+    policy: &ExecPolicy,
+) {
+    assert_eq!(bias.len(), n);
+    assert_eq!(c.len(), m * n);
+    for row in c.chunks_exact_mut(n.max(1)) {
+        row.copy_from_slice(bias);
+    }
+    matmul_acc_exec(a, b, c, m, k, n, t, policy);
+}
+
+/// `C = bias ⊕ A·B` against a [`PackedPanel`] of `B`, under an
+/// [`ExecPolicy`]: the pack is built **once** (at fit time for
+/// [`NativeMlp`](crate::learners::NativeMlp) weights) and shared
+/// read-only across the row fan-out — each worker streams the same
+/// reuse-ordered panels through the SIMD micro-kernel into its disjoint
+/// `&mut` rows of `C`. Packed-matmul bits are independent of the row
+/// split and of every blocking parameter, so this is bit-identical to
+/// the sequential [`matmul_bias_prepacked`] (and to the
+/// naive-chain reference) under every policy.
+pub fn matmul_bias_prepacked_exec(
+    a: &[f32],
+    pb: &PackedPanel,
+    bias: &[f32],
+    c: &mut [f32],
+    m: usize,
+    t: &TileConfig,
+    policy: &ExecPolicy,
+) {
+    let (k, n) = (pb.k(), pb.n());
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bias.len(), n);
+    assert_eq!(c.len(), m * n);
+    let p = policy.resolve();
+    let tiles = *t;
+    let unit = shard_unit(t.mc, m, p.threads);
+    let ran = fan_out_rows(c, m, n, unit, p.threads, p.schedule,
+                           |lo, hi, block| {
+        matmul_bias_prepacked(&a[lo * k..hi * k], pb, bias, block,
+                              hi - lo, &tiles);
+    });
+    if !ran {
+        matmul_bias_prepacked(a, pb, bias, c, m, t);
+    }
+}
+
+/// Tuple-signature wrapper kept for the PR-2 parity suites.
+#[deprecated(note = "use `matmul_bias_exec` with an `ExecPolicy`")]
+#[allow(clippy::too_many_arguments)]
 pub fn matmul_bias_tiled_par(
     a: &[f32],
     b: &[f32],
@@ -441,15 +576,16 @@ pub fn matmul_bias_tiled_par(
     for row in c.chunks_exact_mut(n.max(1)) {
         row.copy_from_slice(bias);
     }
-    matmul_acc_tiled_par(a, b, c, m, k, n, t, threads, schedule);
+    matmul_acc_core(a, b, c, m, k, n, t, threads, schedule);
 }
 
-/// Parallel `C += Aᵀ·B` (`a` stored `[k×m]`): row ranges of the output
+/// Core for `C += Aᵀ·B` (`a` stored `[k×m]`): row ranges of the output
 /// fan out across workers via the row-range core. Per-element
 /// accumulation is `p`-ascending regardless of where the row split
 /// falls, so results match the sequential kernel bit for bit at any
 /// thread count and under either schedule.
-pub fn matmul_tn_acc_tiled_par(
+#[allow(clippy::too_many_arguments)]
+fn matmul_tn_acc_core(
     a: &[f32],
     b: &[f32],
     c: &mut [f32],
@@ -474,11 +610,45 @@ pub fn matmul_tn_acc_tiled_par(
     }
 }
 
-/// Parallel pairwise squared distances: query-tile blocks fan out, each
-/// worker filling a disjoint block of whole output rows. Bit-identical
-/// to [`pairwise_sq_dists_tiled`] at any thread count and under either
-/// schedule.
-pub fn pairwise_sq_dists_tiled_par(
+/// `C += Aᵀ·B` under an [`ExecPolicy`] (`a` stored `[k×m]`).
+/// Bit-identical to [`matmul_tn_acc_tiled`] under every policy.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_tn_acc_exec(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    t: &TileConfig,
+    policy: &ExecPolicy,
+) {
+    let p = policy.resolve();
+    matmul_tn_acc_core(a, b, c, k, m, n, t, p.threads, p.schedule);
+}
+
+/// Tuple-signature wrapper kept for the PR-4 parity suites.
+#[deprecated(note = "use `matmul_tn_acc_exec` with an `ExecPolicy`")]
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_tn_acc_tiled_par(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    t: &TileConfig,
+    threads: usize,
+    schedule: Schedule,
+) {
+    matmul_tn_acc_core(a, b, c, k, m, n, t, threads, schedule);
+}
+
+/// Core for Exact parallel pairwise squared distances: query-tile
+/// blocks fan out, each worker filling a disjoint block of whole output
+/// rows. Bit-identical to [`pairwise_sq_dists_tiled`] at any thread
+/// count and under either schedule.
+fn dists_tiled_core(
     train: &[f32],
     queries: &[f32],
     d: usize,
@@ -506,6 +676,21 @@ pub fn pairwise_sq_dists_tiled_par(
     }
 }
 
+/// Tuple-signature wrapper kept for the PR-2 parity suites.
+#[deprecated(note = "use `pairwise_sq_dists_exec` with an `ExecPolicy` \
+                     (pin `DistanceAlgo::Exact` for this path)")]
+pub fn pairwise_sq_dists_tiled_par(
+    train: &[f32],
+    queries: &[f32],
+    d: usize,
+    out: &mut [f32],
+    t: &TileConfig,
+    threads: usize,
+    schedule: Schedule,
+) {
+    dists_tiled_core(train, queries, d, out, t, threads, schedule);
+}
+
 /// Index-sliced parallel pairwise distances: gather the `train_idx` and
 /// `query_idx` rows of one row-major feature matrix into contiguous
 /// buffers (one streaming copy each — the tiled kernel then reads
@@ -514,6 +699,8 @@ pub fn pairwise_sq_dists_tiled_par(
 /// scalar `sq_dist` loop in the §4.1.1 hyperparameter sweep: the
 /// distance arithmetic is shared with `sq_dist`, so the matrix is
 /// bit-identical to the scalar loop at any thread count.
+#[deprecated(note = "use `pairwise_sq_dists_gather_exec` with an \
+                     `ExecPolicy` (pin `DistanceAlgo::Exact`)")]
 pub fn pairwise_sq_dists_gather_par(
     features: &[f32],
     d: usize,
@@ -526,24 +713,24 @@ pub fn pairwise_sq_dists_gather_par(
     let train = gather_rows(features, d, train_idx);
     let queries = gather_rows(features, d, query_idx);
     let mut out = vec![0.0f32; query_idx.len() * train_idx.len()];
-    pairwise_sq_dists_tiled_par(&train, &queries, d, &mut out, t, threads,
-                                schedule);
+    dists_tiled_core(&train, &queries, d, &mut out, t, threads, schedule);
     out
 }
 
-/// Parallel GEMM-formulation pairwise distances
+/// Core for GEMM-formulation parallel pairwise distances
 /// (`‖q‖² + ‖t‖² − 2·q·t`, clamped ≥ 0): the train matrix is
-/// transposed **once** on the calling thread, then query-row blocks
-/// fan out exactly like [`pairwise_sq_dists_tiled_par`], each worker
-/// running the pre-packed Gemm core on its disjoint `&mut` block of
-/// whole output rows. Per-row bits depend only on the tile config's
-/// `kc` reduction blocking (never on which worker computes a row), so
-/// the result is bit-identical to the sequential
+/// transposed and **packed once** on the calling thread into a
+/// [`PackedPanel`] (reuse-ordered, 32-byte-aligned panels), then
+/// query-row blocks fan out exactly like the Exact core, every worker
+/// streaming the *same* read-only pack through the SIMD micro-kernel
+/// into its disjoint `&mut` block of whole output rows. Packed-matmul
+/// bits are independent of blocking and of the row split, so the
+/// result is bit-identical to the sequential
 /// [`pairwise_sq_dists_gemm`](super::distance::pairwise_sq_dists_gemm)
 /// at any thread count and under either schedule — and within ≤ 1e-4
 /// of the Exact kernels on well-scaled finite data (property-tested).
 #[allow(clippy::too_many_arguments)]
-pub fn pairwise_sq_dists_gemm_par(
+fn dists_gemm_core(
     train: &[f32],
     queries: &[f32],
     d: usize,
@@ -563,28 +750,94 @@ pub fn pairwise_sq_dists_gemm_par(
     assert_eq!(query_norms.len(), nq);
     assert_eq!(out.len(), nq * n);
     let train_t = transpose_rows(train, d);
-    let tt = &train_t;
+    let pb = PackedPanel::pack(&train_t, d, n, t.kc);
+    let pbr = &pb;
     let (qt, _) = t.pair_tiles(d);
     let unit = shard_unit(qt, nq, threads);
     let tiles = *t;
     let ran = fan_out_rows(out, nq, n, unit, threads, schedule,
                            |lo, hi, block| {
-        pairwise_sq_dists_gemm_pre(tt, n, &queries[lo * d..hi * d], d,
-                                   train_norms, &query_norms[lo..hi],
-                                   block, &tiles);
+        pairwise_sq_dists_gemm_packed(pbr, &queries[lo * d..hi * d], d,
+                                      train_norms, &query_norms[lo..hi],
+                                      block, &tiles);
     });
     if !ran {
-        pairwise_sq_dists_gemm_pre(tt, n, queries, d, train_norms,
-                                   query_norms, out, t);
+        pairwise_sq_dists_gemm_packed(pbr, queries, d, train_norms,
+                                      query_norms, out, t);
     }
 }
 
-/// Formulation-dispatching parallel distances: resolves
-/// [`DistanceAlgo::Auto`] **once** on this call's total multiply-adds
-/// (so a fan-out can never split one logical pass across formulations),
-/// then runs the Exact tiled fan-out or the Gemm fan-out. The norm
+/// GEMM-formulation parallel pairwise distances under an
+/// [`ExecPolicy`] (formulation pinned to Gemm; see
+/// [`pairwise_sq_dists_exec`] for the dispatching entry point).
+#[allow(clippy::too_many_arguments)]
+pub fn pairwise_sq_dists_gemm_exec(
+    train: &[f32],
+    queries: &[f32],
+    d: usize,
+    train_norms: &[f32],
+    query_norms: &[f32],
+    out: &mut [f32],
+    t: &TileConfig,
+    policy: &ExecPolicy,
+) {
+    let p = policy.resolve();
+    dists_gemm_core(train, queries, d, train_norms, query_norms, out, t,
+                    p.threads, p.schedule);
+}
+
+/// Tuple-signature wrapper kept for the PR-5 parity suites.
+#[deprecated(note = "use `pairwise_sq_dists_gemm_exec` with an \
+                     `ExecPolicy`")]
+#[allow(clippy::too_many_arguments)]
+pub fn pairwise_sq_dists_gemm_par(
+    train: &[f32],
+    queries: &[f32],
+    d: usize,
+    train_norms: &[f32],
+    query_norms: &[f32],
+    out: &mut [f32],
+    t: &TileConfig,
+    threads: usize,
+    schedule: Schedule,
+) {
+    dists_gemm_core(train, queries, d, train_norms, query_norms, out, t,
+                    threads, schedule);
+}
+
+/// THE parallel distance entry point: one [`ExecPolicy`] decides
+/// worker count, schedule, *and* formulation. The policy's algo is
+/// resolved **once** on this call's total multiply-adds (so a fan-out
+/// can never split one logical pass across formulations), then the
+/// Exact tiled fan-out or the packed Gemm fan-out runs. The norm
 /// slices are only read on the Gemm path (pass empty slices when the
-/// policy is known to resolve Exact).
+/// policy is pinned Exact).
+#[allow(clippy::too_many_arguments)]
+pub fn pairwise_sq_dists_exec(
+    train: &[f32],
+    queries: &[f32],
+    d: usize,
+    train_norms: &[f32],
+    query_norms: &[f32],
+    out: &mut [f32],
+    t: &TileConfig,
+    policy: &ExecPolicy,
+) {
+    assert!(d > 0, "feature dimension must be positive");
+    let n = train.len() / d;
+    let nq = queries.len() / d;
+    let p = policy.resolve();
+    match p.algo.resolve(nq * n * d) {
+        DistanceAlgo::Gemm => dists_gemm_core(
+            train, queries, d, train_norms, query_norms, out, t,
+            p.threads, p.schedule),
+        _ => dists_tiled_core(train, queries, d, out, t, p.threads,
+                              p.schedule),
+    }
+}
+
+/// Tuple-signature wrapper kept for the PR-5 parity suites.
+#[deprecated(note = "use `pairwise_sq_dists_exec` with an `ExecPolicy`")]
 #[allow(clippy::too_many_arguments)]
 pub fn pairwise_sq_dists_algo_par(
     algo: DistanceAlgo,
@@ -602,24 +855,23 @@ pub fn pairwise_sq_dists_algo_par(
     let n = train.len() / d;
     let nq = queries.len() / d;
     match algo.resolve(nq * n * d) {
-        DistanceAlgo::Gemm => pairwise_sq_dists_gemm_par(
+        DistanceAlgo::Gemm => dists_gemm_core(
             train, queries, d, train_norms, query_norms, out, t, threads,
             schedule),
-        _ => pairwise_sq_dists_tiled_par(train, queries, d, out, t,
-                                         threads, schedule),
+        _ => dists_tiled_core(train, queries, d, out, t, threads,
+                              schedule),
     }
 }
 
-/// Index-sliced, formulation-dispatching parallel distances — the
-/// batched engine behind the §4.1.1 hyperparameter sweep. Rows are
-/// gathered exactly like [`pairwise_sq_dists_gather_par`]; under the
-/// Gemm formulation the row norms are **gathered from the dataset-level
-/// [`NormCache`]** (built once per dataset, reused across every CV
-/// split and every sweep candidate), never recomputed per split — the
-/// redundancy the paper's "reuse of computation results" guideline
-/// removes.
+/// Core for the index-sliced, formulation-dispatching parallel
+/// distances — the batched engine behind the §4.1.1 hyperparameter
+/// sweep. Under the Gemm formulation the row norms are **gathered from
+/// the dataset-level [`NormCache`]** (built once per dataset, reused
+/// across every CV split and every sweep candidate), never recomputed
+/// per split — the redundancy the paper's "reuse of computation
+/// results" guideline removes.
 #[allow(clippy::too_many_arguments)]
-pub fn pairwise_sq_dists_gather_algo_par(
+fn dists_gather_core(
     features: &[f32],
     d: usize,
     train_idx: &[usize],
@@ -637,24 +889,64 @@ pub fn pairwise_sq_dists_gather_algo_par(
         DistanceAlgo::Gemm => {
             let tn = cache.gather(train_idx);
             let qn = cache.gather(query_idx);
-            pairwise_sq_dists_gemm_par(&train, &queries, d, &tn, &qn,
-                                       &mut out, t, threads, schedule);
+            dists_gemm_core(&train, &queries, d, &tn, &qn, &mut out, t,
+                            threads, schedule);
         }
-        _ => pairwise_sq_dists_tiled_par(&train, &queries, d, &mut out,
-                                         t, threads, schedule),
+        _ => dists_tiled_core(&train, &queries, d, &mut out, t, threads,
+                              schedule),
     }
     out
 }
 
-/// Parallel fused coupled LR+SVM step: one raw [`CoupledPartial`] per
-/// `coupled_rows()` macro-tile of the design matrix, reduced in
-/// **tile-index order** and finalised once over the full batch size.
-/// The partial boundaries depend only on `(batch, tile config)` — never
-/// on the thread count or on which worker computed a tile — so the
-/// result is bit-identical at every thread count and under both
-/// schedules; a single-macro-tile batch short-circuits to (and is
-/// exactly) the sequential [`coupled_step_tiled`].
-pub fn coupled_step_par(
+/// Index-sliced parallel distances under an [`ExecPolicy`]: gathers
+/// the `train_idx`/`query_idx` rows of one row-major feature matrix
+/// and returns the full `|queries| × |train|` distance matrix, with
+/// worker count, schedule, and formulation all carried by the policy
+/// (norms come from the dataset-level [`NormCache`] on the Gemm path).
+pub fn pairwise_sq_dists_gather_exec(
+    features: &[f32],
+    d: usize,
+    train_idx: &[usize],
+    query_idx: &[usize],
+    cache: &NormCache,
+    t: &TileConfig,
+    policy: &ExecPolicy,
+) -> Vec<f32> {
+    let p = policy.resolve();
+    dists_gather_core(features, d, train_idx, query_idx, cache, p.algo,
+                      t, p.threads, p.schedule)
+}
+
+/// Tuple-signature wrapper kept for the PR-5 parity suites.
+#[deprecated(note = "use `pairwise_sq_dists_gather_exec` with an \
+                     `ExecPolicy`")]
+#[allow(clippy::too_many_arguments)]
+pub fn pairwise_sq_dists_gather_algo_par(
+    features: &[f32],
+    d: usize,
+    train_idx: &[usize],
+    query_idx: &[usize],
+    cache: &NormCache,
+    algo: DistanceAlgo,
+    t: &TileConfig,
+    threads: usize,
+    schedule: Schedule,
+) -> Vec<f32> {
+    dists_gather_core(features, d, train_idx, query_idx, cache, algo, t,
+                      threads, schedule)
+}
+
+/// Core for the parallel fused coupled LR+SVM step: one raw
+/// [`CoupledPartial`] per `coupled_rows()` macro-tile of the design
+/// matrix, reduced in **tile-index order** and finalised once over the
+/// full batch size. The partial boundaries depend only on
+/// `(batch, tile config)` — never on the thread count or on which
+/// worker computed a tile — so the result is bit-identical at every
+/// thread count and under both schedules; a single-macro-tile batch
+/// short-circuits to (and is exactly) the sequential
+/// [`coupled_step_tiled`].
+#[allow(clippy::too_many_arguments)]
+fn coupled_step_core(
     w_lr: &[f32],
     w_svm: &[f32],
     x: &[f32],
@@ -711,6 +1003,40 @@ pub fn coupled_step_par(
     coupled_finalize(w_lr, w_svm, total, b, lr, lam)
 }
 
+/// Parallel fused coupled LR+SVM step under an [`ExecPolicy`].
+/// Bit-identical to [`coupled_step_tiled`] under every policy.
+pub fn coupled_step_exec(
+    w_lr: &[f32],
+    w_svm: &[f32],
+    x: &[f32],
+    y: &[f32],
+    lr: f32,
+    lam: f32,
+    t: &TileConfig,
+    policy: &ExecPolicy,
+) -> ((Vec<f32>, f32), (Vec<f32>, f32)) {
+    let p = policy.resolve();
+    coupled_step_core(w_lr, w_svm, x, y, lr, lam, t, p.threads,
+                      p.schedule)
+}
+
+/// Tuple-signature wrapper kept for the PR-4 parity suites.
+#[deprecated(note = "use `coupled_step_exec` with an `ExecPolicy`")]
+#[allow(clippy::too_many_arguments)]
+pub fn coupled_step_par(
+    w_lr: &[f32],
+    w_svm: &[f32],
+    x: &[f32],
+    y: &[f32],
+    lr: f32,
+    lam: f32,
+    t: &TileConfig,
+    threads: usize,
+    schedule: Schedule,
+) -> ((Vec<f32>, f32), (Vec<f32>, f32)) {
+    coupled_step_core(w_lr, w_svm, x, y, lr, lam, t, threads, schedule)
+}
+
 /// Reduce per-macro-tile partials in tile-index order (the
 /// deterministic half of the coupled kernel's parallel contract).
 pub(crate) fn reduce_partials(
@@ -736,13 +1062,20 @@ pub(crate) fn reduce_partials(
 
 #[cfg(test)]
 mod tests {
+    // The PR-2/4/5 parity contracts are asserted through the deprecated
+    // tuple wrappers on purpose: they delegate to the same cores as the
+    // `*_exec` API, so these suites pin the migration itself.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::kernels::distance::{
         pairwise_sq_dists_gemm, pairwise_sq_dists_naive, row_sq_norms,
     };
     use crate::kernels::matmul::{
-        matmul_bias_tiled, matmul_naive, matmul_tiled,
+        matmul_bias_prepacked, matmul_bias_tiled, matmul_naive,
+        matmul_tiled,
     };
+    use crate::kernels::pack::set_force_scalar;
     use crate::learners::linear;
     use crate::prop_assert;
     use crate::util::prop::{check, Gen};
@@ -1379,5 +1712,185 @@ mod tests {
         assert_eq!(default_threads(), 3);
         set_threads(0);
         assert!(default_threads() >= 1);
+    }
+
+    /// The `*_exec` API and the deprecated tuple wrappers share one
+    /// core: a pinned policy must reproduce the wrapper bit for bit on
+    /// every kernel, at several thread counts and both schedules.
+    #[test]
+    fn exec_api_matches_tuple_wrappers_bit_for_bit() {
+        check("exec-vs-wrappers", 56, |g| {
+            let m = g.usize_in(1, 40);
+            let k = g.usize_in(1, 24);
+            let n = g.usize_in(1, 40);
+            let a = g.f32_vec(m * k, 1.0);
+            let b = g.f32_vec(k * n, 1.0);
+            let bias = g.f32_vec(n, 1.0);
+            let t = rand_tiles(g);
+            let threads = [1usize, 2, 4, 7][g.usize_in(0, 3)];
+            let sched = SCHEDULES[g.usize_in(0, 2)];
+            let pol = ExecPolicy::auto()
+                .with_threads(threads)
+                .with_schedule(sched);
+
+            let mut c1 = vec![0.0f32; m * n];
+            let mut c2 = vec![0.0f32; m * n];
+            matmul_tiled_par(&a, &b, &mut c1, m, k, n, &t, threads,
+                             sched);
+            matmul_exec(&a, &b, &mut c2, m, k, n, &t, &pol);
+            prop_assert!(c1 == c2, "matmul_exec != matmul_tiled_par");
+
+            let mut c1 = vec![0.25f32; m * n];
+            let mut c2 = vec![0.25f32; m * n];
+            matmul_bias_tiled_par(&a, &b, &bias, &mut c1, m, k, n, &t,
+                                  threads, sched);
+            matmul_bias_exec(&a, &b, &bias, &mut c2, m, k, n, &t, &pol);
+            prop_assert!(c1 == c2, "bias exec != par");
+
+            let at = g.f32_vec(k * m, 1.0);
+            let mut c1 = vec![0.5f32; m * n];
+            let mut c2 = vec![0.5f32; m * n];
+            matmul_tn_acc_tiled_par(&at, &b, &mut c1, k, m, n, &t,
+                                    threads, sched);
+            matmul_tn_acc_exec(&at, &b, &mut c2, k, m, n, &t, &pol);
+            prop_assert!(c1 == c2, "tn exec != par");
+
+            let d = g.usize_in(1, 12);
+            let nt = g.usize_in(1, 30);
+            let nq = g.usize_in(1, 30);
+            let train = g.f32_vec(nt * d, 1.0);
+            let queries = g.f32_vec(nq * d, 1.0);
+            let tn = row_sq_norms(&train, d);
+            let qn = row_sq_norms(&queries, d);
+            for algo in [DistanceAlgo::Exact, DistanceAlgo::Gemm] {
+                let mut o1 = vec![0.0f32; nq * nt];
+                let mut o2 = vec![0.0f32; nq * nt];
+                pairwise_sq_dists_algo_par(algo, &train, &queries, d,
+                                           &tn, &qn, &mut o1, &t,
+                                           threads, sched);
+                pairwise_sq_dists_exec(&train, &queries, d, &tn, &qn,
+                                       &mut o2, &t,
+                                       &pol.with_algo(algo));
+                prop_assert!(o1 == o2, "dists exec != par ({algo:?})");
+            }
+            Ok(())
+        });
+    }
+
+    /// The gather engine under a policy must reuse the `NormCache`
+    /// exactly like the tuple wrapper it replaces.
+    #[test]
+    fn gather_exec_matches_the_tuple_engine_bit_for_bit() {
+        check("gather-exec-vs-engine", 24, |g| {
+            let d = g.usize_in(1, 10);
+            let rows = g.usize_in(4, 40);
+            let features = g.f32_vec(rows * d, 1.0);
+            let cache = NormCache::compute(&features, d);
+            let ti: Vec<usize> =
+                (0..g.usize_in(1, rows)).map(|_| g.usize_in(0, rows - 1))
+                                        .collect();
+            let qi: Vec<usize> =
+                (0..g.usize_in(1, rows)).map(|_| g.usize_in(0, rows - 1))
+                                        .collect();
+            let t = rand_tiles(g);
+            for algo in [DistanceAlgo::Exact, DistanceAlgo::Gemm] {
+                for threads in [1usize, 4] {
+                    let sched = SCHEDULES[g.usize_in(0, 2)];
+                    let got = pairwise_sq_dists_gather_exec(
+                        &features, d, &ti, &qi, &cache, &t,
+                        &ExecPolicy::auto()
+                            .with_threads(threads)
+                            .with_schedule(sched)
+                            .with_algo(algo));
+                    let want = pairwise_sq_dists_gather_algo_par(
+                        &features, d, &ti, &qi, &cache, algo, &t,
+                        threads, sched);
+                    prop_assert!(got == want,
+                        "gather exec != par ({algo:?}, {threads})");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Coupled step: `ExecPolicy::sequential()` IS the sequential
+    /// kernel, and any pinned policy matches the tuple wrapper bitwise.
+    #[test]
+    fn coupled_exec_matches_wrapper_and_sequential_policy() {
+        check("coupled-exec", 24, |g| {
+            let d = g.usize_in(1, 12);
+            let b = g.usize_in(1, 60);
+            let w0 = g.f32_vec(d, 0.5);
+            let w1 = g.f32_vec(d, 0.5);
+            let x = g.f32_vec(b * d, 1.0);
+            let y: Vec<f32> = (0..b)
+                .map(|_| if g.bool() { 1.0 } else { -1.0 })
+                .collect();
+            let t = rand_tiles(g);
+            let seq = coupled_step_tiled(&w0, &w1, &x, &y, linear::LR,
+                                         linear::LAMBDA, &t);
+            let via_policy = coupled_step_exec(
+                &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t,
+                &ExecPolicy::sequential());
+            prop_assert!(seq == via_policy,
+                "sequential policy must be the sequential kernel");
+            for threads in [2usize, 7] {
+                let sched = SCHEDULES[g.usize_in(0, 2)];
+                let a = coupled_step_par(&w0, &w1, &x, &y, linear::LR,
+                                         linear::LAMBDA, &t, threads,
+                                         sched);
+                let e = coupled_step_exec(
+                    &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t,
+                    &ExecPolicy::auto().with_threads(threads)
+                                       .with_schedule(sched));
+                prop_assert!(a == e, "coupled exec != par");
+            }
+            Ok(())
+        });
+    }
+
+    /// The shared-pack parallel forward: a `PackedPanel` packed once
+    /// and fanned out read-only must equal the sequential prepacked
+    /// kernel bit for bit at every thread count and schedule — and,
+    /// because packed bits are tier-invariant, forcing the scalar
+    /// micro-kernel mid-flight must not change a single bit either.
+    #[test]
+    fn prepacked_fan_out_is_bit_stable_and_tier_invariant() {
+        check("prepacked-fan-out", 32, |g| {
+            let m = g.usize_in(1, 48);
+            let k = g.usize_in(1, 24);
+            let n = g.usize_in(1, 40);
+            let a = g.f32_vec(m * k, 1.0);
+            let b = g.f32_vec(k * n, 1.0);
+            let bias = g.f32_vec(n, 1.0);
+            let t = rand_tiles(g);
+            let pb = PackedPanel::pack(&b, k, n, t.kc);
+            let mut want = vec![0.0f32; m * n];
+            matmul_bias_prepacked(&a, &pb, &bias, &mut want, m, &t);
+            for threads in [1usize, 2, 4, 7] {
+                for sched in SCHEDULES {
+                    let pol = ExecPolicy::auto()
+                        .with_threads(threads)
+                        .with_schedule(sched);
+                    let mut got = vec![0.0f32; m * n];
+                    matmul_bias_prepacked_exec(&a, &pb, &bias, &mut got,
+                                               m, &t, &pol);
+                    prop_assert!(got == want,
+                        "prepacked fan-out bits ({threads}, {sched:?})");
+                    // Tier invariance: forcing scalar is safe to flip
+                    // globally because every tier is bit-identical —
+                    // any concurrently running test just takes the
+                    // scalar path and still sees the same bits.
+                    set_force_scalar(Some(true));
+                    let mut forced = vec![0.0f32; m * n];
+                    matmul_bias_prepacked_exec(&a, &pb, &bias,
+                                               &mut forced, m, &t, &pol);
+                    set_force_scalar(None);
+                    prop_assert!(forced == want,
+                        "forced-scalar bits ({threads}, {sched:?})");
+                }
+            }
+            Ok(())
+        });
     }
 }

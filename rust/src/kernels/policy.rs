@@ -1,0 +1,206 @@
+//! `ExecPolicy` — the one execution-policy knob for every kernel and
+//! coordinator entry point.
+//!
+//! PR 2–5 grew three independent policy axes, each hand-threaded through
+//! call chains as a bare parameter triple:
+//!
+//! * worker count (`--threads` → `LOCALITY_ML_THREADS` → all cores),
+//! * macro-tile schedule (`--schedule` → `LOCALITY_ML_SCHEDULE` → auto),
+//! * distance formulation (`--dist-algo` → `LOCALITY_ML_DIST_ALGO` →
+//!   auto).
+//!
+//! [`ExecPolicy`] collapses the triple into one value with a builder;
+//! [`ExecPolicy::resolve`] is the single point where the CLI/env
+//! override layers are consulted. `Default` is fully-Auto: every field
+//! defers to the session override chain, and whatever remains Auto
+//! after resolution is decided per call from the work size (thread
+//! gating via [`ExecPolicy::threads_for`], formulation via
+//! [`ExecPolicy::algo_for`]).
+//!
+//! Policy invariants (unchanged from the per-parameter era, now stated
+//! once): thread count and schedule NEVER change result bits — worker
+//! partitions are output-disjoint or reduce in deterministic order —
+//! and the formulation moves distances by ≤ 1e-4 (Exact is the
+//! bit-stable oracle).
+
+use super::distance::{self, DistanceAlgo};
+use super::parallel::{self, Schedule};
+
+/// Execution policy: worker count, macro-tile schedule, and distance
+/// formulation. `threads == 0` means "session default / auto".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecPolicy {
+    /// Worker count for the parallel macro-tile layer; 0 = resolve
+    /// from `--threads` → `LOCALITY_ML_THREADS` → available cores,
+    /// 1 = the exact sequential kernels.
+    pub threads: usize,
+    /// Macro-tile scheduling policy; `Auto` = resolve from
+    /// `--schedule` → `LOCALITY_ML_SCHEDULE`, then per-call heuristic.
+    pub schedule: Schedule,
+    /// Distance formulation; `Auto` = resolve from `--dist-algo` →
+    /// `LOCALITY_ML_DIST_ALGO`, then per-call multiply-add count.
+    pub algo: DistanceAlgo,
+}
+
+impl Default for ExecPolicy {
+    /// Fully-Auto: every axis defers to the session override chain.
+    fn default() -> Self {
+        Self {
+            threads: 0,
+            schedule: Schedule::Auto,
+            algo: DistanceAlgo::Auto,
+        }
+    }
+}
+
+impl ExecPolicy {
+    /// The fully-Auto policy (same as `Default`).
+    pub fn auto() -> Self {
+        Self::default()
+    }
+
+    /// The exact sequential policy: one thread, static schedule, Exact
+    /// distances — bit-identical to the PR-1 kernels by construction.
+    pub fn sequential() -> Self {
+        Self {
+            threads: 1,
+            schedule: Schedule::Static,
+            algo: DistanceAlgo::Exact,
+        }
+    }
+
+    /// Builder: pin the worker count (0 restores auto).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Builder: pin the macro-tile schedule.
+    pub fn with_schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    /// Builder: pin the distance formulation.
+    pub fn with_algo(mut self, algo: DistanceAlgo) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    /// THE resolution point: consult the CLI→env→default chain once
+    /// for every still-Auto axis. After this, `threads >= 1`;
+    /// `schedule`/`algo` may legitimately remain `Auto`, meaning "no
+    /// session override — decide per call from the work size".
+    pub fn resolve(&self) -> Self {
+        Self {
+            threads: if self.threads == 0 {
+                parallel::default_threads()
+            } else {
+                self.threads
+            },
+            schedule: match self.schedule {
+                Schedule::Auto => parallel::default_schedule(),
+                s => s,
+            },
+            algo: match self.algo {
+                DistanceAlgo::Auto => distance::default_dist_algo(),
+                a => a,
+            },
+        }
+    }
+
+    /// Worker count for a job of `work` multiply-adds: the resolved
+    /// thread count, gated so sub-`MIN_PAR_WORK` jobs stay on the
+    /// sequential kernel (spawn/join would cost more than it saves).
+    pub fn threads_for(&self, work: usize) -> usize {
+        let t = if self.threads == 0 {
+            parallel::default_threads()
+        } else {
+            self.threads
+        };
+        parallel::effective_threads(t, work)
+    }
+
+    /// Distance formulation for a job of `work` multiply-adds: the
+    /// resolved algo, with a still-Auto choice decided by work size.
+    pub fn algo_for(&self, work: usize) -> DistanceAlgo {
+        match self.algo {
+            DistanceAlgo::Auto => distance::default_dist_algo(),
+            a => a,
+        }
+        .resolve(work)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_fully_auto() {
+        let p = ExecPolicy::default();
+        assert_eq!(p.threads, 0);
+        assert_eq!(p.schedule, Schedule::Auto);
+        assert_eq!(p.algo, DistanceAlgo::Auto);
+        assert_eq!(p, ExecPolicy::auto());
+    }
+
+    #[test]
+    fn sequential_is_the_exact_policy() {
+        let p = ExecPolicy::sequential();
+        assert_eq!(p.threads, 1);
+        assert_eq!(p.schedule, Schedule::Static);
+        assert_eq!(p.algo, DistanceAlgo::Exact);
+        // resolve() must not disturb pinned fields
+        assert_eq!(p.resolve(), p);
+    }
+
+    #[test]
+    fn builder_pins_fields() {
+        let p = ExecPolicy::auto()
+            .with_threads(3)
+            .with_schedule(Schedule::Stealing)
+            .with_algo(DistanceAlgo::Gemm);
+        assert_eq!(p.threads, 3);
+        assert_eq!(p.schedule, Schedule::Stealing);
+        assert_eq!(p.algo, DistanceAlgo::Gemm);
+        assert_eq!(p.with_threads(0).resolve().schedule,
+                   Schedule::Stealing);
+    }
+
+    #[test]
+    fn resolve_fills_auto_threads() {
+        let r = ExecPolicy::auto().resolve();
+        assert!(r.threads >= 1, "resolved threads must be >= 1");
+        // pinned threads pass through untouched
+        assert_eq!(ExecPolicy::auto().with_threads(7).resolve().threads,
+                   7);
+    }
+
+    #[test]
+    fn threads_for_gates_small_work() {
+        let p = ExecPolicy::auto().with_threads(8);
+        assert_eq!(p.threads_for(16), 1,
+            "tiny jobs must stay sequential");
+        assert_eq!(p.threads_for(usize::MAX / 2), 8);
+        // explicit 1 stays 1 at any size
+        assert_eq!(ExecPolicy::sequential().threads_for(usize::MAX / 2),
+                   1);
+    }
+
+    #[test]
+    fn algo_for_resolves_pinned_and_auto() {
+        let huge = 1 << 30;
+        assert_eq!(
+            ExecPolicy::auto().with_algo(DistanceAlgo::Exact)
+                .algo_for(huge),
+            DistanceAlgo::Exact);
+        assert_eq!(
+            ExecPolicy::auto().with_algo(DistanceAlgo::Gemm).algo_for(0),
+            DistanceAlgo::Gemm);
+        // Auto resolves to a concrete formulation, never Auto itself
+        let got = ExecPolicy::auto().algo_for(huge);
+        assert!(got == DistanceAlgo::Exact || got == DistanceAlgo::Gemm,
+            "algo_for left Auto unresolved: {got:?}");
+    }
+}

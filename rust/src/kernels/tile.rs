@@ -19,6 +19,7 @@
 //!   kernels (pairwise distances, fused coupled step) whose working sets
 //!   depend on runtime dimensions.
 
+use super::pack::{round_up, MR, NR};
 use crate::memsim::cache::{westmere_levels, LevelConfig};
 
 const F32_BYTES: usize = 4;
@@ -118,6 +119,34 @@ impl TileConfig {
         (self.l1_f32.saturating_sub(4 * self.kc) / self.kc.max(1))
             .clamp(1, 512)
     }
+
+    /// Packing-buffer working set (in f32 elements) the packed matmul
+    /// path holds live at any instant for an `m×k · k×n` product under
+    /// these tiles: one `mc × kc` A macro-panel with rows rounded up to
+    /// the `MR` register block, plus one `kc × nc` B panel with columns
+    /// rounded up to `NR` (edge panels are zero-padded so the
+    /// micro-kernel never branches on shape). This is what the memsim
+    /// tile model charges the packed path on top of the operands
+    /// themselves — the panels are *reused* across the whole macro-tile,
+    /// so they are a footprint, not a traffic term.
+    pub fn packed_footprint_f32(&self, m: usize, k: usize, n: usize)
+        -> usize
+    {
+        let kb = self.kc.min(k);
+        let a_panel = round_up(self.mc.min(m), MR) * kb;
+        let b_panel = kb * round_up(self.nc.min(n), NR);
+        a_panel + b_panel
+    }
+
+    /// F32 footprint of a fully prepacked B operand (`k × n`), i.e.
+    /// what [`super::PackedPanel::pack`] allocates: every column panel
+    /// rounded up to `NR`, all depth blocks resident at once. This is
+    /// the pack-once-reuse cost the MLP pays per layer to keep its
+    /// weights panel-ordered across predict calls; it depends only on
+    /// the operand shape, not on the cache-derived tiles.
+    pub fn prepacked_b_f32(k: usize, n: usize) -> usize {
+        k * round_up(n, NR)
+    }
 }
 
 impl Default for TileConfig {
@@ -205,6 +234,60 @@ mod tests {
             prop_assert!(t.mc == 8 || w * t.mc * t.kc <= l3_f32,
                 "{w} workers x {}x{} blocks exceed half-L3 budget {}",
                 t.mc, t.kc, l3_f32);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_footprint_fits_the_blocking_budgets_on_westmere() {
+        // The panels the packed path keeps live must fit the same
+        // levels the tiles were derived for: the B panel (kc × nc
+        // rounded to NR) inside the half-L1 budget, the A macro-panel
+        // (mc × kc rounded to MR) inside the half-L2 budget. Westmere
+        // tiles are already MR/NR-aligned, so rounding adds nothing.
+        let t = TileConfig::westmere();
+        let big = 1 << 20; // operands larger than any tile
+        let a_panel = round_up(t.mc, MR) * t.kc;
+        let b_panel = t.kc * round_up(t.nc, NR);
+        assert_eq!(t.packed_footprint_f32(big, big, big),
+                   a_panel + b_panel);
+        assert!(b_panel <= t.l1_f32,
+            "B panel {b_panel} exceeds half-L1 budget {}", t.l1_f32);
+        assert!(a_panel * F32_BYTES <= 256 << 10,
+            "A macro-panel {a_panel} exceeds the half-L2 budget");
+    }
+
+    #[test]
+    fn packed_footprint_shrinks_with_the_operands() {
+        check("tile-packed-footprint", 50, |g| {
+            let t = TileConfig::westmere_workers(g.usize_in(1, 8));
+            let (m, k, n) =
+                (g.usize_in(1, 2048), g.usize_in(1, 2048),
+                 g.usize_in(1, 2048));
+            let fp = t.packed_footprint_f32(m, k, n);
+            // Never below the live data actually packed...
+            prop_assert!(
+                fp >= t.mc.min(m) * t.kc.min(k)
+                    + t.kc.min(k) * t.nc.min(n),
+                "footprint {fp} below the unpadded panel volume");
+            // ...and zero-padding is bounded by one register block per
+            // panel edge.
+            let pad = (MR - 1) * t.kc.min(k) + t.kc.min(k) * (NR - 1);
+            prop_assert!(
+                fp <= t.mc.min(m) * t.kc.min(k)
+                    + t.kc.min(k) * t.nc.min(n) + pad,
+                "footprint {fp} exceeds volume + edge padding {pad}");
+            // Small operands must not be charged for full tiles.
+            prop_assert!(t.packed_footprint_f32(1, 1, 1)
+                <= round_up(1, MR) + round_up(1, NR),
+                "tiny product charged a full macro-tile");
+            // The prepacked-B accounting matches what PackedPanel
+            // actually allocates: every depth block holds round_up(n,
+            // NR) columns, k rows in total across blocks.
+            prop_assert!(
+                TileConfig::prepacked_b_f32(k, n)
+                    == k * round_up(n, NR),
+                "prepacked footprint diverged from the pack layout");
             Ok(())
         });
     }

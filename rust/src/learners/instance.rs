@@ -13,10 +13,11 @@
 
 use crate::data::Dataset;
 use crate::kernels::distance::{
-    pairwise_sq_dists_gemm_pre, row_sq_norms, transpose_rows,
+    pairwise_sq_dists_gemm_packed, row_sq_norms, transpose_rows,
 };
 use crate::kernels::{
-    pairwise_sq_dists_tiled, DistanceAlgo, NormCache, Schedule, TileConfig,
+    pairwise_sq_dists_tiled, DistanceAlgo, ExecPolicy, NormCache,
+    PackedPanel, Schedule, TileConfig,
 };
 
 /// k for the k-NN vote (shapes.KNN_K).
@@ -373,6 +374,8 @@ fn scan_par<T: Send>(
 /// `threads` workers; bit-identical to [`knn_scan_tiled`] (and
 /// therefore to [`knn_scan`]) at any thread count, under either
 /// schedule.
+#[deprecated(note = "use `knn_scan_exec` with an `ExecPolicy` \
+                     (pin `DistanceAlgo::Exact` for this path)")]
 pub fn knn_scan_par(train: &Dataset, test_rows: &[f32], d: usize,
                     k: usize, tiles: &TileConfig, threads: usize,
                     schedule: Schedule) -> Vec<i32> {
@@ -381,6 +384,8 @@ pub fn knn_scan_par(train: &Dataset, test_rows: &[f32], d: usize,
 }
 
 /// Parallel cache-blocked PRW scan (see [`knn_scan_par`]).
+#[deprecated(note = "use `prw_scan_exec` with an `ExecPolicy` \
+                     (pin `DistanceAlgo::Exact` for this path)")]
 pub fn prw_scan_par(train: &Dataset, test_rows: &[f32], d: usize,
                     bandwidth: f32, tiles: &TileConfig, threads: usize,
                     schedule: Schedule) -> Vec<i32> {
@@ -392,6 +397,8 @@ pub fn prw_scan_par(train: &Dataset, test_rows: &[f32], d: usize,
 /// block feeds BOTH learners on each worker (§5.2 fusion preserved
 /// inside every shard). Bit-identical to [`joint_scan_tiled`] at any
 /// thread count, under either schedule.
+#[deprecated(note = "use `joint_scan_exec` with an `ExecPolicy` \
+                     (pin `DistanceAlgo::Exact` for this path)")]
 pub fn joint_scan_par(train: &Dataset, test_rows: &[f32], d: usize,
                       k: usize, bandwidth: f32, tiles: &TileConfig,
                       threads: usize, schedule: Schedule)
@@ -516,20 +523,23 @@ impl PrwAcc {
     }
 }
 
-/// One-time Gemm packing for a fused scan: a `[d × len]` transposed
-/// panel per `jt`-row train tile, in the exact tile layout
-/// `scan_fused_blocks` consumes (`jt` from `tiles.pair_tiles(d)`).
-/// The parallel fused scans pack this ONCE on the calling thread and
-/// share it across every query shard, so no worker re-transposes the
-/// training matrix.
+/// One-time Gemm packing for a fused scan: one [`PackedPanel`] per
+/// `jt`-row train tile — the tile's `[d × len]` transpose packed once
+/// into the reuse-ordered, 32-byte-aligned panel layout the SIMD
+/// micro-kernel streams — in the exact tile order `scan_fused_blocks`
+/// consumes (`jt` from `tiles.pair_tiles(d)`). The parallel fused
+/// scans pack this ONCE on the calling thread and share it read-only
+/// across every query shard, so no worker re-transposes or re-packs
+/// the training matrix.
 fn pack_panels(train: &Dataset, d: usize, tiles: &TileConfig)
-    -> Vec<Vec<f32>> {
+    -> Vec<PackedPanel> {
     let (_, jt) = tiles.pair_tiles(d);
     (0..train.n)
         .step_by(jt)
         .map(|j0| {
             let jhi = (j0 + jt).min(train.n);
-            transpose_rows(&train.features[j0 * d..jhi * d], d)
+            let tt = transpose_rows(&train.features[j0 * d..jhi * d], d);
+            PackedPanel::pack(&tt, d, jhi - j0, tiles.kc)
         })
         .collect()
 }
@@ -541,11 +551,11 @@ fn pack_panels(train: &Dataset, d: usize, tiles: &TileConfig)
 /// distance storage that ever exists (the materializing tiled scans
 /// hold a full query-tile × train block; nothing here is ever
 /// `nq × n`, at any size). Under [`DistanceAlgo::Gemm`] the train
-/// tiles come pre-transposed via `packed` (shared across parallel
-/// shards) or are packed here once per call, the query norms are
-/// computed once for the whole scan, and the train-side norms come
-/// from the caller's dataset-level [`NormCache`] — never recomputed
-/// here.
+/// tiles come pre-packed into [`PackedPanel`]s via `packed` (shared
+/// across parallel shards) or are packed here once per call, the query
+/// norms are computed once for the whole scan, and the train-side
+/// norms come from the caller's dataset-level [`NormCache`] — never
+/// recomputed here.
 #[allow(clippy::too_many_arguments)]
 fn scan_fused_blocks(
     train: &Dataset,
@@ -554,7 +564,7 @@ fn scan_fused_blocks(
     tiles: &TileConfig,
     algo: DistanceAlgo,
     norms: &NormCache,
-    packed: Option<&[Vec<f32>]>,
+    packed: Option<&[PackedPanel]>,
     mut consume_tile: impl FnMut(usize, usize, &[f32]),
 ) {
     assert_eq!(d, train.d);
@@ -568,7 +578,8 @@ fn scan_fused_blocks(
     let algo = algo.resolve(n_test * n * d);
     let (qt, jt) = tiles.pair_tiles(d);
     let mut local_panels = Vec::new();
-    let panels: &[Vec<f32>] = match (algo == DistanceAlgo::Gemm, packed) {
+    let panels: &[PackedPanel] = match (algo == DistanceAlgo::Gemm,
+                                        packed) {
         (false, _) => &[],
         (true, Some(p)) => p,
         (true, None) => {
@@ -591,8 +602,8 @@ fn scan_fused_blocks(
             let len = jhi - j0;
             let out = &mut block[..qb * len];
             if algo == DistanceAlgo::Gemm {
-                pairwise_sq_dists_gemm_pre(
-                    &panels[ji], len, qrows, d, &norms.norms()[j0..jhi],
+                pairwise_sq_dists_gemm_packed(
+                    &panels[ji], qrows, d, &norms.norms()[j0..jhi],
                     &qnorms[q0..qhi], out, tiles);
             } else {
                 pairwise_sq_dists_tiled(
@@ -624,7 +635,7 @@ pub fn knn_scan_fused(train: &Dataset, test_rows: &[f32], d: usize,
 fn knn_scan_fused_packed(train: &Dataset, test_rows: &[f32], d: usize,
                          k: usize, tiles: &TileConfig,
                          algo: DistanceAlgo, norms: &NormCache,
-                         packed: Option<&[Vec<f32>]>) -> Vec<i32> {
+                         packed: Option<&[PackedPanel]>) -> Vec<i32> {
     assert_eq!(d, train.d);
     let n_test = test_rows.len() / d;
     if k == 0 {
@@ -651,7 +662,7 @@ pub fn prw_scan_fused(train: &Dataset, test_rows: &[f32], d: usize,
 fn prw_scan_fused_packed(train: &Dataset, test_rows: &[f32], d: usize,
                          bandwidth: f32, tiles: &TileConfig,
                          algo: DistanceAlgo, norms: &NormCache,
-                         packed: Option<&[Vec<f32>]>) -> Vec<i32> {
+                         packed: Option<&[PackedPanel]>) -> Vec<i32> {
     assert_eq!(d, train.d);
     let n_test = test_rows.len() / d;
     let inv = 1.0f64 / (2.0 * bandwidth as f64 * bandwidth as f64);
@@ -680,7 +691,7 @@ pub fn joint_scan_fused(train: &Dataset, test_rows: &[f32], d: usize,
 fn joint_scan_fused_packed(train: &Dataset, test_rows: &[f32], d: usize,
                            k: usize, bandwidth: f32, tiles: &TileConfig,
                            algo: DistanceAlgo, norms: &NormCache,
-                           packed: Option<&[Vec<f32>]>)
+                           packed: Option<&[PackedPanel]>)
     -> (Vec<i32>, Vec<i32>) {
     assert_eq!(d, train.d);
     let n_test = test_rows.len() / d;
@@ -702,17 +713,17 @@ fn joint_scan_fused_packed(train: &Dataset, test_rows: &[f32], d: usize,
     (knn, prw_acc.finalize())
 }
 
-/// Parallel fused k-NN scan: the query fan-out of [`knn_scan_par`]
-/// over [`knn_scan_fused`] blocks. [`DistanceAlgo::Auto`] is resolved
-/// ONCE on the whole scan's multiply-adds before the fan-out, so every
-/// worker block runs the same formulation and the predictions are
-/// bit-identical to the sequential fused scan at any thread count
-/// under either schedule.
+/// Core of the parallel fused k-NN scan: the query fan-out of the
+/// materializing parallel scans over [`knn_scan_fused`] blocks.
+/// [`DistanceAlgo::Auto`] is resolved ONCE on the whole scan's
+/// multiply-adds before the fan-out, so every worker block runs the
+/// same formulation and the predictions are bit-identical to the
+/// sequential fused scan at any thread count under either schedule.
 #[allow(clippy::too_many_arguments)]
-pub fn knn_scan_fused_par(train: &Dataset, test_rows: &[f32], d: usize,
-                          k: usize, tiles: &TileConfig,
-                          algo: DistanceAlgo, norms: &NormCache,
-                          threads: usize, schedule: Schedule) -> Vec<i32> {
+fn knn_fused_core(train: &Dataset, test_rows: &[f32], d: usize,
+                  k: usize, tiles: &TileConfig, algo: DistanceAlgo,
+                  norms: &NormCache, threads: usize,
+                  schedule: Schedule) -> Vec<i32> {
     let algo = algo.resolve((test_rows.len() / d.max(1)) * train.n * d);
     // pack the train panels ONCE here; the shards share them read-only
     let packed = (algo == DistanceAlgo::Gemm)
@@ -724,12 +735,12 @@ pub fn knn_scan_fused_par(train: &Dataset, test_rows: &[f32], d: usize,
     })
 }
 
-/// Parallel fused PRW scan (see [`knn_scan_fused_par`]).
+/// Core of the parallel fused PRW scan (see [`knn_fused_core`]).
 #[allow(clippy::too_many_arguments)]
-pub fn prw_scan_fused_par(train: &Dataset, test_rows: &[f32], d: usize,
-                          bandwidth: f32, tiles: &TileConfig,
-                          algo: DistanceAlgo, norms: &NormCache,
-                          threads: usize, schedule: Schedule) -> Vec<i32> {
+fn prw_fused_core(train: &Dataset, test_rows: &[f32], d: usize,
+                  bandwidth: f32, tiles: &TileConfig,
+                  algo: DistanceAlgo, norms: &NormCache, threads: usize,
+                  schedule: Schedule) -> Vec<i32> {
     let algo = algo.resolve((test_rows.len() / d.max(1)) * train.n * d);
     let packed = (algo == DistanceAlgo::Gemm)
         .then(|| pack_panels(train, d, tiles));
@@ -740,15 +751,15 @@ pub fn prw_scan_fused_par(train: &Dataset, test_rows: &[f32], d: usize,
     })
 }
 
-/// Parallel fused joint scan: ONE per-tile distance block feeds both
-/// learners inside every shard (see [`knn_scan_fused_par`] for the
-/// Auto pre-resolution and one-time-packing contract).
+/// Core of the parallel fused joint scan: ONE per-tile distance block
+/// feeds both learners inside every shard (see [`knn_fused_core`] for
+/// the Auto pre-resolution and one-time-packing contract).
 #[allow(clippy::too_many_arguments)]
-pub fn joint_scan_fused_par(train: &Dataset, test_rows: &[f32],
-                            d: usize, k: usize, bandwidth: f32,
-                            tiles: &TileConfig, algo: DistanceAlgo,
-                            norms: &NormCache, threads: usize,
-                            schedule: Schedule) -> (Vec<i32>, Vec<i32>) {
+fn joint_fused_core(train: &Dataset, test_rows: &[f32], d: usize,
+                    k: usize, bandwidth: f32, tiles: &TileConfig,
+                    algo: DistanceAlgo, norms: &NormCache,
+                    threads: usize, schedule: Schedule)
+    -> (Vec<i32>, Vec<i32>) {
     let algo = algo.resolve((test_rows.len() / d.max(1)) * train.n * d);
     let packed = (algo == DistanceAlgo::Gemm)
         .then(|| pack_panels(train, d, tiles));
@@ -767,6 +778,76 @@ pub fn joint_scan_fused_par(train: &Dataset, test_rows: &[f32],
     (knn, prw)
 }
 
+/// THE k-NN scan entry point: one [`ExecPolicy`] carries worker count,
+/// schedule and distance formulation. `ExecPolicy::sequential()` (or
+/// any `threads == 1` policy) short-circuits to the sequential fused
+/// scan; under `Exact` the predictions are identical to [`knn_scan`]
+/// (property-tested), under `Gemm` the distances run through the
+/// packed SIMD engine with norms from the dataset-level [`NormCache`].
+pub fn knn_scan_exec(train: &Dataset, test_rows: &[f32], d: usize,
+                     k: usize, tiles: &TileConfig, norms: &NormCache,
+                     policy: &ExecPolicy) -> Vec<i32> {
+    let p = policy.resolve();
+    knn_fused_core(train, test_rows, d, k, tiles, p.algo, norms,
+                   p.threads, p.schedule)
+}
+
+/// THE PRW scan entry point (see [`knn_scan_exec`]).
+pub fn prw_scan_exec(train: &Dataset, test_rows: &[f32], d: usize,
+                     bandwidth: f32, tiles: &TileConfig,
+                     norms: &NormCache, policy: &ExecPolicy) -> Vec<i32> {
+    let p = policy.resolve();
+    prw_fused_core(train, test_rows, d, bandwidth, tiles, p.algo, norms,
+                   p.threads, p.schedule)
+}
+
+/// THE joint-scan entry point: ONE distance pass feeds both learners,
+/// with every execution axis carried by the [`ExecPolicy`] (see
+/// [`knn_scan_exec`]).
+#[allow(clippy::too_many_arguments)]
+pub fn joint_scan_exec(train: &Dataset, test_rows: &[f32], d: usize,
+                       k: usize, bandwidth: f32, tiles: &TileConfig,
+                       norms: &NormCache, policy: &ExecPolicy)
+    -> (Vec<i32>, Vec<i32>) {
+    let p = policy.resolve();
+    joint_fused_core(train, test_rows, d, k, bandwidth, tiles, p.algo,
+                     norms, p.threads, p.schedule)
+}
+
+/// Tuple-signature wrapper kept for the PR-5 parity suites.
+#[deprecated(note = "use `knn_scan_exec` with an `ExecPolicy`")]
+#[allow(clippy::too_many_arguments)]
+pub fn knn_scan_fused_par(train: &Dataset, test_rows: &[f32], d: usize,
+                          k: usize, tiles: &TileConfig,
+                          algo: DistanceAlgo, norms: &NormCache,
+                          threads: usize, schedule: Schedule) -> Vec<i32> {
+    knn_fused_core(train, test_rows, d, k, tiles, algo, norms, threads,
+                   schedule)
+}
+
+/// Tuple-signature wrapper kept for the PR-5 parity suites.
+#[deprecated(note = "use `prw_scan_exec` with an `ExecPolicy`")]
+#[allow(clippy::too_many_arguments)]
+pub fn prw_scan_fused_par(train: &Dataset, test_rows: &[f32], d: usize,
+                          bandwidth: f32, tiles: &TileConfig,
+                          algo: DistanceAlgo, norms: &NormCache,
+                          threads: usize, schedule: Schedule) -> Vec<i32> {
+    prw_fused_core(train, test_rows, d, bandwidth, tiles, algo, norms,
+                   threads, schedule)
+}
+
+/// Tuple-signature wrapper kept for the PR-5 parity suites.
+#[deprecated(note = "use `joint_scan_exec` with an `ExecPolicy`")]
+#[allow(clippy::too_many_arguments)]
+pub fn joint_scan_fused_par(train: &Dataset, test_rows: &[f32],
+                            d: usize, k: usize, bandwidth: f32,
+                            tiles: &TileConfig, algo: DistanceAlgo,
+                            norms: &NormCache, threads: usize,
+                            schedule: Schedule) -> (Vec<i32>, Vec<i32>) {
+    joint_fused_core(train, test_rows, d, k, bandwidth, tiles, algo,
+                     norms, threads, schedule)
+}
+
 /// Classification accuracy helper.
 pub fn accuracy(pred: &[i32], truth: &[i32]) -> f64 {
     assert_eq!(pred.len(), truth.len());
@@ -779,6 +860,11 @@ pub fn accuracy(pred: &[i32], truth: &[i32]) -> f64 {
 
 #[cfg(test)]
 mod tests {
+    // The scan parity contracts are asserted through the deprecated
+    // tuple wrappers on purpose: they delegate to the same cores as
+    // the `*_exec` API, so these suites pin the migration itself.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::data::synth::chembl_like;
     use crate::prop_assert;
@@ -1228,5 +1314,74 @@ mod tests {
     fn accuracy_helper() {
         assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
         assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn exec_scans_match_wrappers_and_sequential_oracles() {
+        // The `*_exec` entry points must (a) reproduce the tuple
+        // wrappers they replace bit for bit under a pinned policy and
+        // (b) short-circuit ExecPolicy::sequential() + Exact to the
+        // Alg 10/11 oracles' predictions.
+        check("exec-scans", 8, |g| {
+            let n = g.usize_in(1, 40);
+            let t = g.usize_in(1, 20);
+            let d = g.usize_in(1, 6);
+            let features = g.f32_vec(n * d, 2.0);
+            let labels: Vec<i32> =
+                (0..n).map(|_| g.usize_in(0, 2) as i32).collect();
+            let train = Dataset::new(features, labels, d, 3);
+            let test = g.f32_vec(t * d, 2.0);
+            let tiles = TileConfig {
+                mc: 1,
+                kc: 1,
+                nc: 1,
+                l1_f32: g.usize_in(2, 12) * d,
+            };
+            let norms = NormCache::compute(&train.features, d);
+            let seq = ExecPolicy::sequential();
+            prop_assert!(
+                knn_scan_exec(&train, &test, d, K, &tiles, &norms, &seq)
+                    == knn_scan(&train, &test, d, K),
+                "sequential exec knn diverged from the Alg 10 oracle");
+            prop_assert!(
+                prw_scan_exec(&train, &test, d, BANDWIDTH, &tiles,
+                              &norms, &seq)
+                    == prw_scan(&train, &test, d, BANDWIDTH),
+                "sequential exec prw diverged from the Alg 11 oracle");
+            for algo in [DistanceAlgo::Exact, DistanceAlgo::Gemm] {
+                for threads in [1usize, 4] {
+                    for sched in [Schedule::Static, Schedule::Stealing] {
+                        let pol = ExecPolicy::auto()
+                            .with_threads(threads)
+                            .with_schedule(sched)
+                            .with_algo(algo);
+                        prop_assert!(
+                            knn_scan_exec(&train, &test, d, K, &tiles,
+                                          &norms, &pol)
+                                == knn_scan_fused_par(
+                                    &train, &test, d, K, &tiles, algo,
+                                    &norms, threads, sched),
+                            "knn exec != wrapper ({algo:?})");
+                        prop_assert!(
+                            prw_scan_exec(&train, &test, d, BANDWIDTH,
+                                          &tiles, &norms, &pol)
+                                == prw_scan_fused_par(
+                                    &train, &test, d, BANDWIDTH, &tiles,
+                                    algo, &norms, threads, sched),
+                            "prw exec != wrapper ({algo:?})");
+                        prop_assert!(
+                            joint_scan_exec(&train, &test, d, K,
+                                            BANDWIDTH, &tiles, &norms,
+                                            &pol)
+                                == joint_scan_fused_par(
+                                    &train, &test, d, K, BANDWIDTH,
+                                    &tiles, algo, &norms, threads,
+                                    sched),
+                            "joint exec != wrapper ({algo:?})");
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

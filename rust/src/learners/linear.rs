@@ -67,17 +67,16 @@ pub fn svm_step(w: &[f32], x: &[f32], y: &[f32], lr: f32, lam: f32)
 }
 
 /// The §4.3 coupling on the hot path: tile-level fused LR+SVM through
-/// the parallel macro-tile layer (`kernels::coupled_step_par`) —
-/// macro-tile row blocks distributed across the session's thread count
-/// (`kernels::parallel::default_threads`: `--threads` override, then
-/// `LOCALITY_ML_THREADS`, then available parallelism) under the session
-/// schedule (`default_schedule`: `--schedule`, then
-/// `LOCALITY_ML_SCHEDULE`, then auto), with per-worker tiles from the
-/// shared-L3 budget. The per-tile partials reduce in tile-index order,
-/// so the result is bit-identical at every thread count and under both
-/// schedules; a batch that fits one macro-tile IS the PR-1 sequential
-/// kernel exactly, and multi-tile batches stay within 1e-4 of
-/// [`coupled_step_naive`], the in-tree reference oracle.
+/// the parallel macro-tile layer (`kernels::coupled_step_exec`) under
+/// the session's fully-Auto [`crate::kernels::ExecPolicy`] (threads
+/// from `--threads` → `LOCALITY_ML_THREADS` → available parallelism,
+/// schedule from `--schedule` → `LOCALITY_ML_SCHEDULE` → auto), with
+/// per-worker tiles from the shared-L3 budget. The per-tile partials
+/// reduce in tile-index order, so the result is bit-identical at every
+/// thread count and under both schedules; a batch that fits one
+/// macro-tile IS the PR-1 sequential kernel exactly, and multi-tile
+/// batches stay within 1e-4 of [`coupled_step_naive`], the in-tree
+/// reference oracle.
 pub fn coupled_step(
     w_lr: &[f32],
     w_svm: &[f32],
@@ -86,18 +85,16 @@ pub fn coupled_step(
     lr: f32,
     lam: f32,
 ) -> ((Vec<f32>, f32), (Vec<f32>, f32)) {
-    use crate::kernels::parallel::{
-        default_schedule, default_threads, effective_threads,
-    };
+    use crate::kernels::ExecPolicy;
     // ~4·b·d multiply-adds per fused step (two models × two sweeps);
     // small minibatches stay on the sequential kernel — spawn/join
     // would cost more than the fan-out saves.
-    let threads =
-        effective_threads(default_threads(), 4 * x.len().max(y.len()));
-    crate::kernels::coupled_step_par(
+    let threads = ExecPolicy::default()
+        .threads_for(4 * x.len().max(y.len()));
+    crate::kernels::coupled_step_exec(
         w_lr, w_svm, x, y, lr, lam,
-        &crate::kernels::TileConfig::westmere_workers(threads), threads,
-        default_schedule())
+        &crate::kernels::TileConfig::westmere_workers(threads),
+        &ExecPolicy::default().with_threads(threads))
 }
 
 /// The §4.3 coupling, row-level reference: both models updated from ONE

@@ -13,10 +13,22 @@
 //! layer (weights reused across the mini-batch — the Fig 3 matmul
 //! pattern), backward in reverse order ("the complement of forward
 //! propagation").
+//!
+//! Since the packed-kernel PR the forward weights run through the
+//! BLIS-style packed micro-kernel: each layer's `W` is packed once into
+//! a reuse-ordered [`PackedPanel`] and the `batch × m × n` product runs
+//! register-blocked. [`NativeMlp::pack_weights`] hoists the packing out
+//! of the per-call path entirely — pack once at fit time, reuse across
+//! every predict batch (the paper's "reuse of computation results"
+//! applied to the operand *layout*, not just its values). `theta` is
+//! public and trainers mutate it in place between steps, so
+//! [`NativeMlp::loss_and_grad`] drops any cached panels before its
+//! forward pass; cached-panel reuse is an inference-path contract.
 
 use super::mlp::{INPUT_DIM, LAYERS, N_CLASSES, N_PARAMS};
 use crate::kernels::{
-    matmul_bias_tiled_par, matmul_tn_acc_tiled_par, Schedule, TileConfig,
+    matmul_bias_prepacked_exec, matmul_tn_acc_exec, ExecPolicy,
+    PackedPanel, TileConfig,
 };
 
 /// Scratch buffers for one forward+backward pass (allocated once,
@@ -34,45 +46,56 @@ pub struct NativeMlp {
     deltas: Vec<Vec<f32>>,
     batch: usize,
     /// cache-blocking parameters for the matmul kernels (autotuned from
-    /// the memsim hierarchy per worker; the ReLU zero-skip lives in the
-    /// kernels)
+    /// the memsim hierarchy per worker)
     tiles: TileConfig,
-    /// worker count for the parallel macro-tile layer (1 = the exact
-    /// PR-1 sequential kernels)
-    threads: usize,
-    /// macro-tile scheduling policy; both choices produce identical
-    /// bits (output-disjoint row partition), so this only moves
-    /// wall-clock on skewed batch shapes
-    schedule: Schedule,
+    /// execution policy (threads + schedule) resolved once at
+    /// construction; per-call thread counts are still gated on the
+    /// layer's multiply-add work via [`ExecPolicy::threads_for`]
+    policy: ExecPolicy,
+    /// per-layer forward weights packed into micro-kernel panel order —
+    /// `Some` only between [`NativeMlp::pack_weights`] and the next
+    /// `theta` mutation point ([`NativeMlp::loss_and_grad`] invalidates)
+    packed: Option<Vec<PackedPanel>>,
 }
 
 impl NativeMlp {
-    /// Session default: thread count from
-    /// `kernels::parallel::default_threads` (`--threads` override, then
-    /// `LOCALITY_ML_THREADS`, then available parallelism) and schedule
-    /// from `default_schedule` (`--schedule`, then
-    /// `LOCALITY_ML_SCHEDULE`, then auto). The matmul row partition is
-    /// output-disjoint, so results are bit-identical at every thread
+    /// Session default: the fully-Auto [`ExecPolicy`] (threads from
+    /// `--threads` → `LOCALITY_ML_THREADS` → available parallelism,
+    /// schedule from `--schedule` → `LOCALITY_ML_SCHEDULE` → auto). The
+    /// matmul row partition is output-disjoint and the packed kernel is
+    /// tier-invariant, so results are bit-identical at every thread
     /// count under either schedule.
     pub fn new(theta: Vec<f32>, batch: usize) -> Self {
-        Self::with_exec(theta, batch,
-                        crate::kernels::parallel::default_threads(),
-                        crate::kernels::parallel::default_schedule())
+        Self::with_policy(theta, batch, &ExecPolicy::default())
     }
 
-    /// Explicit thread count (1 = the exact PR-1 sequential path) with
-    /// the session default schedule.
+    /// Explicit thread count (1 = the exact sequential path) with the
+    /// session default schedule.
+    #[deprecated(note = "use `with_policy` with an `ExecPolicy`")]
     pub fn with_threads(theta: Vec<f32>, batch: usize, threads: usize)
         -> Self {
-        Self::with_exec(theta, batch, threads,
-                        crate::kernels::parallel::default_schedule())
+        Self::with_policy(theta, batch,
+                          &ExecPolicy::default().with_threads(threads))
     }
 
     /// Explicit thread count and scheduling policy.
+    #[deprecated(note = "use `with_policy` with an `ExecPolicy`")]
     pub fn with_exec(theta: Vec<f32>, batch: usize, threads: usize,
-                     schedule: Schedule) -> Self {
+                     schedule: crate::kernels::Schedule) -> Self {
+        Self::with_policy(theta, batch,
+                          &ExecPolicy::default()
+                              .with_threads(threads)
+                              .with_schedule(schedule))
+    }
+
+    /// Explicit execution policy — the single configuration entry
+    /// point. The policy is resolved once here (Auto axes bind to the
+    /// session defaults); tile sizes come from the resolved worker
+    /// count's share of the hierarchy.
+    pub fn with_policy(theta: Vec<f32>, batch: usize,
+                       policy: &ExecPolicy) -> Self {
         assert_eq!(theta.len(), N_PARAMS);
-        let threads = threads.max(1);
+        let policy = policy.resolve();
         let mut acts = vec![vec![0.0; batch * INPUT_DIM]];
         let mut zs = Vec::new();
         let mut deltas = Vec::new();
@@ -88,9 +111,9 @@ impl NativeMlp {
             zs,
             deltas,
             batch,
-            tiles: TileConfig::westmere_workers(threads),
-            threads,
-            schedule,
+            tiles: TileConfig::westmere_workers(policy.threads.max(1)),
+            policy,
+            packed: None,
         }
     }
 
@@ -98,6 +121,24 @@ impl NativeMlp {
     /// flat vector.
     fn offset(l: usize) -> usize {
         LAYERS[..l].iter().map(|(m, n)| m * n + n).sum()
+    }
+
+    /// Pack every layer's forward weights into micro-kernel panel order
+    /// once, so subsequent [`NativeMlp::forward`] calls skip the
+    /// per-call pack entirely — the inference-path reuse contract.
+    /// Bit-identical to the pack-per-call path (the panels hold the
+    /// same bytes either way). Call again after mutating `theta`
+    /// directly; [`NativeMlp::loss_and_grad`] invalidates for you.
+    pub fn pack_weights(&mut self) {
+        let panels = (0..LAYERS.len())
+            .map(|l| {
+                let (m, n) = LAYERS[l];
+                let off = Self::offset(l);
+                PackedPanel::pack(&self.theta[off..off + m * n], m, n,
+                                  self.tiles.kc)
+            })
+            .collect();
+        self.packed = Some(panels);
     }
 
     /// Forward pass (Algorithm 14). Fills `acts`/`zs`; returns logits.
@@ -113,19 +154,30 @@ impl NativeMlp {
                 let b = &self.theta[off + m * n..off + m * n + n];
                 (w, b)
             };
-            // z = a_prev @ W + b   (row-major [batch x m] @ [m x n]),
-            // through the parallel cache-blocked kernel: same term
-            // multiset and ReLU zero-skip as the original loop nest
-            // (reassociated only within the kernel's 4-deep groups),
-            // with the W panel cache-resident across the mini-batch
-            // (Fig 3) and batch row blocks fanned out across workers.
+            // z = a_prev @ W + b   (row-major [batch x m] @ [m x n])
+            // through the packed register-blocked kernel: W is packed
+            // into reuse-ordered panels (cached across calls when
+            // `pack_weights` ran, else packed here once per call) and
+            // stays register/L1-resident across the whole mini-batch
+            // (Fig 3 taken down to the register file); batch row blocks
+            // fan out across workers. The packed kernel's bits are
+            // invariant to tier, blocking and thread count.
             let (prev_acts, rest) = self.acts.split_at_mut(l + 1);
             let a_prev = &prev_acts[l];
             let z = &mut self.zs[l];
-            let th = crate::kernels::parallel::effective_threads(
-                self.threads, self.batch * m * n);
-            matmul_bias_tiled_par(a_prev, w, b, z, self.batch, m, n,
-                                  &self.tiles, th, self.schedule);
+            let pol = self.policy
+                .with_threads(self.policy.threads_for(
+                    self.batch * m * n));
+            let fresh;
+            let panel = match &self.packed {
+                Some(panels) => &panels[l],
+                None => {
+                    fresh = PackedPanel::pack(w, m, n, self.tiles.kc);
+                    &fresh
+                }
+            };
+            matmul_bias_prepacked_exec(a_prev, panel, b, z, self.batch,
+                                       &self.tiles, &pol);
             // activation (ReLU on hidden, identity on the output layer)
             let a = &mut rest[0];
             if l + 1 < n_layers {
@@ -141,8 +193,11 @@ impl NativeMlp {
 
     /// Forward + softmax cross-entropy + backward (Algorithm 15).
     /// Returns the mean batch loss; the gradient is in `self.grad`
-    /// (flat, same layout as θ).
+    /// (flat, same layout as θ). Drops any cached weight panels first:
+    /// `theta` is public and trainers mutate it between steps, so a
+    /// panel packed before the step would silently serve stale weights.
     pub fn loss_and_grad(&mut self, x: &[f32], y_onehot: &[f32]) -> f32 {
+        self.packed = None;
         let n_layers = LAYERS.len();
         let classes = N_CLASSES;
         self.forward(x);
@@ -180,9 +235,10 @@ impl NativeMlp {
             // the original per-sample loop — ascending s — and weight
             // row ranges are output-disjoint across workers); db = sum
             // of delta rows, a cheap n-wide stream kept as a plain loop.
-            let th = crate::kernels::parallel::effective_threads(
-                self.threads, self.batch * m * n);
-            matmul_tn_acc_tiled_par(
+            let pol = self.policy
+                .with_threads(self.policy.threads_for(
+                    self.batch * m * n));
+            matmul_tn_acc_exec(
                 &self.acts[l],
                 &self.deltas[l],
                 &mut self.grad[off..off + m * n],
@@ -190,8 +246,7 @@ impl NativeMlp {
                 m,
                 n,
                 &self.tiles,
-                th,
-                self.schedule,
+                &pol,
             );
             for s in 0..self.batch {
                 let drow = &self.deltas[l][s * n..(s + 1) * n];
@@ -239,6 +294,7 @@ impl NativeMlp {
 mod tests {
     use super::super::mlp::init_params;
     use super::*;
+    use crate::kernels::Schedule;
     use crate::util::Rng;
 
     fn batch(seed: u64, b: usize) -> (Vec<f32>, Vec<f32>) {
@@ -323,8 +379,39 @@ mod tests {
     }
 
     #[test]
+    fn packed_weight_reuse_is_bit_identical() {
+        // The inference-path contract: pack_weights() hoists the panel
+        // build out of forward, and the cached panels hold the same
+        // bytes the per-call pack would produce — so forward bits are
+        // identical with and without the cache, across repeated calls,
+        // and after the loss_and_grad invalidate → repack cycle.
+        let b = 8;
+        let (x, y) = batch(10, b);
+        let mut fresh = NativeMlp::new(init_params(13), b);
+        let want = fresh.forward(&x).to_vec();
+        let mut cached = NativeMlp::new(init_params(13), b);
+        cached.pack_weights();
+        assert_eq!(cached.forward(&x), &want[..],
+            "cached-panel forward diverged from pack-per-call");
+        assert_eq!(cached.forward(&x), &want[..],
+            "second reuse of the cached panels diverged");
+        // loss_and_grad owns the invalidate: theta mutated directly
+        // afterwards must not be served from stale panels.
+        cached.loss_and_grad(&x, &y);
+        for t in cached.theta.iter_mut() {
+            *t *= 0.5;
+        }
+        cached.pack_weights();
+        let mut moved = NativeMlp::new(
+            fresh.theta.iter().map(|t| t * 0.5).collect(), b);
+        assert_eq!(cached.forward(&x), moved.forward(&x),
+            "repacked panels diverged from fresh weights");
+    }
+
+    #[test]
     fn thread_count_and_schedule_do_not_change_loss_or_gradient() {
-        // The matmul row partition is output-disjoint, so forward, loss
+        // The matmul row partition is output-disjoint and the packed
+        // kernel's bits are tier/blocking-invariant, so forward, loss
         // and gradient must be bit-identical at every thread count AND
         // under either scheduling policy. batch = 64 puts the 784-wide
         // layer-0 matmuls past MIN_PAR_WORK, so the parallel path
@@ -332,12 +419,16 @@ mod tests {
         // transpose kernel a multi-block partition).
         let b = 64;
         let (x, y) = batch(9, b);
-        let mut one = NativeMlp::with_exec(init_params(11), b, 1,
-                                           Schedule::Static);
+        let mut one = NativeMlp::with_policy(
+            init_params(11), b,
+            &ExecPolicy::default().with_threads(1)
+                .with_schedule(Schedule::Static));
         let l1 = one.loss_and_grad(&x, &y);
         for sched in [Schedule::Static, Schedule::Stealing] {
-            let mut four = NativeMlp::with_exec(init_params(11), b, 4,
-                                                sched);
+            let mut four = NativeMlp::with_policy(
+                init_params(11), b,
+                &ExecPolicy::default().with_threads(4)
+                    .with_schedule(sched));
             let l4 = four.loss_and_grad(&x, &y);
             assert_eq!(l1, l4,
                 "loss diverged across thread counts under {sched:?}");

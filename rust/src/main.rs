@@ -21,6 +21,7 @@
 //!                      [--curve 1,2,4] [--out-json f]     E15
 //! locality-ml dists    [--train-n N] [--queries N] [--d D]
 //!                      [--out-json f]                     E16
+//! locality-ml pack     [--sizes ...] [--out-json f]       E17
 //! locality-ml info    [--artifacts dir]
 //! ```
 //!
@@ -185,6 +186,11 @@ fn main() -> Result<()> {
             let out = args.get("out-json").map(PathBuf::from);
             commands::cmd_dists(n, nq, d, seed, out.as_deref())?;
         }
+        "pack" => {
+            let sizes = args.usize_list_or("sizes", &[256, 512])?;
+            let out = args.get("out-json").map(PathBuf::from);
+            commands::cmd_pack(&sizes, out.as_deref())?;
+        }
         "info" => {
             let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
             commands::cmd_info(&dir)?;
@@ -234,6 +240,10 @@ SUBCOMMANDS
                over cached norms vs fused scans (parity pre-timing)
                  --train-n 4000 --queries 1000 --d 64
                  --out-json BENCH_dists.json
+  pack         Packed SIMD micro-kernel: cache-tiled vs packed
+               register-blocked matmul (scalar/SSE2/AVX2 dispatch;
+               bit-parity with the naive oracle asserted pre-timing)
+                 --sizes 256,512 --out-json BENCH_pack.json
   info         List compiled artifacts  [--artifacts artifacts]
 
 Common options: --config experiment.toml --artifacts artifacts --seed N
@@ -246,4 +256,7 @@ Common options: --config experiment.toml --artifacts artifacts --seed N
                 is the bit-stable oracle, gemm the cached-norm GEMM
                 decomposition <= 1e-4 of it; default
                 LOCALITY_ML_DIST_ALGO or auto)
+                LOCALITY_ML_FORCE_SCALAR=1 pins the packed micro-kernel
+                to the scalar tier (SIMD tiers are bit-identical; this
+                exists for dispatch testing and perf triage)
 ";

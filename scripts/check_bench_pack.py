@@ -1,0 +1,57 @@
+#!/usr/bin/env python3
+"""CI gate for the packed SIMD micro-kernel (packed-kernel PR
+tentpole): the packed register-blocked matmul must be >= 2x over the
+cache-tiled scalar kernel on the 512^3 product.
+
+Usage: check_bench_pack.py [BENCH_pack.json]
+
+Reads the timings written by `cargo bench --bench bench_pack` (schema
+locality-ml/bench-pack/v1) and exits non-zero — failing the job — if
+the gate is missed, the file was never measured, or the gate record is
+malformed (missing/non-numeric `speedup_vs_tiled` fails with a
+one-line message instead of a traceback). The gate only binds on SIMD
+tiers: a forced-scalar or non-x86 run records tier "scalar", where the
+packed path buys layout, not lanes, and the gate relaxes to >= 1x
+(packing must never *lose* to the tiled kernel).
+"""
+import sys
+
+from bench_check import CheckFailure, load_doc, require_number
+
+GATE_SHAPE = "512x512x512"
+GATE_SPEEDUP_SIMD = 2.0
+GATE_SPEEDUP_SCALAR = 1.0
+
+
+def check(path):
+    doc = load_doc(path)
+    tier = doc.get("tier")
+    if not isinstance(tier, str) or not tier:
+        raise CheckFailure(f"{path} lacks a micro-kernel `tier`")
+    rows = [r for r in doc.get("results", [])
+            if isinstance(r, dict) and r.get("shape") == GATE_SHAPE]
+    if not rows:
+        raise CheckFailure(f"no {GATE_SHAPE} record in {path}")
+    gate = (GATE_SPEEDUP_SCALAR if tier == "scalar"
+            else GATE_SPEEDUP_SIMD)
+    context = f"{GATE_SHAPE} packed ({tier} tier)"
+    speedup = require_number(rows[0], "speedup_vs_tiled", context)
+    print(f"{context} vs tiled: {speedup:.2f}x (gate: >= {gate}x)")
+    if speedup < gate:
+        raise CheckFailure(
+            f"packed micro-kernel gate missed "
+            f"({speedup:.2f}x < {gate}x on the {tier} tier)")
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_pack.json"
+    try:
+        check(path)
+    except CheckFailure as e:
+        print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
