@@ -1,0 +1,42 @@
+//! Bench E19 — the resident serving engine: a saturated query stream
+//! replayed through the micro-batching front end at several
+//! `max_batch` settings (batch=1 is the no-coalescing baseline), over
+//! the standard sweep-shaped working set (512 queries × 4000 train
+//! rows). Reports the latency-vs-throughput curve the coalescing knob
+//! trades along: per-query p50/p99 end-to-end latency (queue wait +
+//! batch compute) and throughput, plus the mean compute time per
+//! dispatched batch. Parity is asserted in-process before anything is
+//! timed: at a deliberately ragged batch size every reply must equal
+//! one-query-at-a-time `MultiClassifier::predict` on all three member
+//! predictions and the vote — batching is a latency/throughput
+//! decision, never a semantic one.
+//!
+//! Writes `BENCH_serve.json` at the repo root (uploaded by CI
+//! alongside the other BENCH jsons). Regenerate with:
+//!
+//! ```bash
+//! cargo bench --bench bench_serve
+//! # or, with geometry control:
+//! cargo run --release -- serve-bench --train-n 4000 --queries 512 \
+//!     --batches 1,8,64 --out-json ../BENCH_serve.json
+//! ```
+//!
+//! This bench *measures and reports*; the acceptance gates — largest
+//! batch ≥ 2× the batch-1 throughput, p99 latency under the
+//! knob-derived bound — are enforced in exactly one place,
+//! `scripts/check_bench_serve.py`, run by the CI bench job against
+//! the JSON this writes.
+
+use std::path::PathBuf;
+
+use locality_ml::cli::commands::cmd_serve_bench;
+
+fn main() -> anyhow::Result<()> {
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../BENCH_serve.json");
+    cmd_serve_bench(4000, 512, 7, &[1, 8, 64], Some(out.as_path()))?;
+    println!("\n(gates live in scripts/check_bench_serve.py — CI fails \
+              if batch-64 throughput is not >= 2x batch-1, or p99 \
+              exceeds the knob-derived bound)");
+    Ok(())
+}

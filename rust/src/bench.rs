@@ -18,15 +18,18 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// Start a benchmark definition (defaults: 1 warmup, 5 timed runs).
     pub fn new(name: impl Into<String>) -> Self {
         Self { name: name.into(), warmup: 1, runs: 5 }
     }
 
+    /// Set the number of discarded warmup runs.
     pub fn warmup(mut self, n: usize) -> Self {
         self.warmup = n;
         self
     }
 
+    /// Set the number of timed runs (must be > 0).
     pub fn runs(mut self, n: usize) -> Self {
         assert!(n > 0);
         self.runs = n;

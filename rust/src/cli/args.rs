@@ -10,6 +10,7 @@ use anyhow::{bail, Result};
 /// Parsed command line: a subcommand plus string options.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Args {
+    /// The subcommand name (empty for flag-only command lines).
     pub command: String,
     options: BTreeMap<String, String>,
 }
@@ -44,18 +45,22 @@ impl Args {
         Ok(Self { command, options })
     }
 
+    /// Parse the process's own command line (skipping argv[0]).
     pub fn from_env() -> Result<Self> {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Raw string value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(String::as_str)
     }
 
+    /// String option with a default.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// `usize` option with a default; malformed values are an error.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -64,6 +69,7 @@ impl Args {
         }
     }
 
+    /// `u64` option with a default; malformed values are an error.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None => Ok(default),
@@ -72,6 +78,7 @@ impl Args {
         }
     }
 
+    /// Boolean flag: true for `--key`, `--key=1`, `--key=yes`.
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }

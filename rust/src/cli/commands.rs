@@ -1056,6 +1056,371 @@ pub fn cmd_pack(sizes: &[usize], out_json: Option<&Path>)
     Ok(table)
 }
 
+/// What the serve transports feed the event loop: connection
+/// lifecycle + raw protocol lines, tagged with an opaque client id.
+enum Inbound {
+    /// A client attached; route its replies through this writer.
+    Connect(usize, Box<dyn std::io::Write + Send>),
+    /// One protocol line from a client.
+    Line(usize, String),
+    /// A client went away; drop its writer (pending replies are
+    /// computed and discarded — batches never reorder around a leave).
+    Disconnect(usize),
+}
+
+/// E18 — the resident serving engine: fit once, stay resident, serve
+/// micro-batched JSONL queries until the input stream closes.
+///
+/// Transports: stdin→stdout by default (one process = one client), or
+/// `--socket PATH` (unix domain socket, multi-client; each accepted
+/// connection gets its own reader thread and reply stream). Both feed
+/// the same transport-agnostic [`ServeEngine`]: flush on `max_batch`
+/// or `max_wait_us` — whichever first — and shed load past
+/// `queue_cap` with an explicit `overloaded` reply. On end of input
+/// the queue is drained and a latency/occupancy summary goes to
+/// stderr.
+pub fn cmd_serve(train_n: usize, seed: u64,
+                 policy: crate::kernels::ServePolicy,
+                 socket: Option<&Path>) -> Result<()> {
+    use crate::coordinator::{MultiClassifier, ServeEngine};
+
+    anyhow::ensure!(train_n >= 2, "need at least two training rows");
+    let train = chembl_like(train_n, seed);
+    let mcs = MultiClassifier::fit(&train);
+    let mut engine = ServeEngine::new(mcs, policy);
+    let p = *engine.policy();
+    eprintln!(
+        "# serve: train_n={train_n} d={} classes={} seed={seed} \
+         max_batch={} max_wait_us={} queue_cap={} packed={}",
+        engine.dim(), engine.classifier().n_classes(), p.max_batch,
+        p.max_wait_us, p.queue_cap, engine.resident().is_packed());
+
+    let (tx, rx) = std::sync::mpsc::channel::<Inbound>();
+    match socket {
+        None => {
+            tx.send(Inbound::Connect(0, Box::new(std::io::stdout())))
+                .ok();
+            let reader_tx = tx;
+            std::thread::spawn(move || {
+                use std::io::BufRead;
+                let stdin = std::io::stdin();
+                for line in stdin.lock().lines() {
+                    let Ok(line) = line else { break };
+                    if reader_tx.send(Inbound::Line(0, line)).is_err() {
+                        break;
+                    }
+                }
+                // dropping reader_tx disconnects the channel and ends
+                // the event loop
+            });
+        }
+        Some(path) => {
+            spawn_unix_acceptor(path, tx)?;
+        }
+    }
+    serve_loop(&mut engine, rx)
+}
+
+/// Bind `path` and hand every accepted connection its own reader
+/// thread feeding the shared event-loop channel.
+#[cfg(unix)]
+fn spawn_unix_acceptor(path: &Path,
+                       tx: std::sync::mpsc::Sender<Inbound>)
+    -> Result<()> {
+    use std::os::unix::net::UnixListener;
+    // a stale socket file from a previous run would fail the bind
+    let _ = std::fs::remove_file(path);
+    let listener = UnixListener::bind(path)
+        .with_context(|| format!("binding {}", path.display()))?;
+    eprintln!("# serve: listening on {}", path.display());
+    std::thread::spawn(move || {
+        for (client, stream) in listener.incoming().enumerate() {
+            let Ok(stream) = stream else { continue };
+            let Ok(writer) = stream.try_clone() else { continue };
+            if tx.send(Inbound::Connect(client, Box::new(writer)))
+                .is_err() {
+                break;
+            }
+            let line_tx = tx.clone();
+            std::thread::spawn(move || {
+                use std::io::BufRead;
+                let reader = std::io::BufReader::new(stream);
+                for line in reader.lines() {
+                    let Ok(line) = line else { break };
+                    if line_tx.send(Inbound::Line(client, line))
+                        .is_err() {
+                        break;
+                    }
+                }
+                line_tx.send(Inbound::Disconnect(client)).ok();
+            });
+        }
+    });
+    Ok(())
+}
+
+/// Non-unix targets have no unix-socket transport; stdin mode still
+/// works everywhere.
+#[cfg(not(unix))]
+fn spawn_unix_acceptor(_path: &Path,
+                       _tx: std::sync::mpsc::Sender<Inbound>)
+    -> Result<()> {
+    anyhow::bail!("--socket requires a unix target; use stdin mode")
+}
+
+/// The serve event loop: wait for the next line or the oldest query's
+/// age-out deadline, whichever first; offer/poll/route; on channel
+/// close (stdin EOF), drain everything and print the stats summary.
+fn serve_loop(engine: &mut crate::coordinator::ServeEngine,
+              rx: std::sync::mpsc::Receiver<Inbound>) -> Result<()> {
+    use std::collections::HashMap;
+    use std::io::Write;
+    use std::sync::mpsc::RecvTimeoutError;
+    use std::time::Duration;
+
+    let clock = crate::util::Stopwatch::start();
+    let now_us = |c: &crate::util::Stopwatch| {
+        c.elapsed().as_micros() as u64
+    };
+    let mut writers: HashMap<usize, Box<dyn Write + Send>> =
+        HashMap::new();
+    let mut route = |writers: &mut HashMap<usize,
+                                          Box<dyn Write + Send>>,
+                     replies: Vec<(usize,
+                                   crate::coordinator::ServeReply)>| {
+        for (client, reply) in replies {
+            if let Some(w) = writers.get_mut(&client) {
+                if writeln!(w, "{}", reply.to_jsonl())
+                    .and_then(|_| w.flush())
+                    .is_err() {
+                    writers.remove(&client);
+                }
+            }
+        }
+    };
+    loop {
+        let now = now_us(&clock);
+        // sleep until the oldest query ages out (or an idle tick when
+        // nothing is pending) — never spin
+        let timeout = match engine.next_deadline_us() {
+            Some(dl) => Duration::from_micros(dl.saturating_sub(now)),
+            None => Duration::from_millis(50),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(Inbound::Connect(client, w)) => {
+                writers.insert(client, w);
+            }
+            Ok(Inbound::Line(client, line)) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let now = now_us(&clock);
+                if let Some(reply) =
+                    engine.offer_line(client, &line, now) {
+                    route(&mut writers, vec![reply]);
+                }
+                loop {
+                    let replies = engine.poll(now_us(&clock));
+                    if replies.is_empty() {
+                        break;
+                    }
+                    route(&mut writers, replies);
+                }
+            }
+            Ok(Inbound::Disconnect(client)) => {
+                writers.remove(&client);
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                loop {
+                    let replies = engine.poll(now_us(&clock));
+                    if replies.is_empty() {
+                        break;
+                    }
+                    route(&mut writers, replies);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // end of input: flush the tail, report, exit
+                let replies = engine.drain(now_us(&clock));
+                route(&mut writers, replies);
+                break;
+            }
+        }
+    }
+    let st = engine.stats();
+    eprintln!(
+        "# serve: admitted={} shed={} batches={} (size={} timeout={}) \
+         queries={} mean_batch={:.2} largest={} predict_total_us={} \
+         p50_us={} p99_us={}",
+        st.queue.admitted, st.queue.shed, st.queue.batches,
+        st.queue.size_flushes, st.queue.timeout_flushes,
+        st.dispatch.queries, st.dispatch.mean_batch(),
+        st.dispatch.largest_batch, st.dispatch.predict_us_total,
+        st.p50_us, st.p99_us);
+    Ok(())
+}
+
+/// E19 — the serving-engine benchmark: replay a saturated query
+/// stream through the resident engine at several `max_batch` settings
+/// (batch=1 is the no-coalescing baseline) and report the
+/// latency-vs-throughput curve the micro-batching knob trades along.
+///
+/// Parity is asserted BEFORE timing, twice: the engine's replies at a
+/// deliberately ragged batch size must equal one-query-at-a-time
+/// `predict` on every member prediction (the serving determinism
+/// contract), and every reply id must come back exactly once.
+/// Optionally writes `BENCH_serve.json`; CI gates the largest batch's
+/// throughput ≥ 2x batch=1 and p99 latency under the knob-derived
+/// bound via `scripts/check_bench_serve.py`.
+pub fn cmd_serve_bench(train_n: usize, n_queries: usize, seed: u64,
+                       batches: &[usize], out_json: Option<&Path>)
+    -> Result<Table> {
+    use crate::coordinator::{
+        MultiClassifier, ServeEngine, ServeReply, ServeRequest,
+    };
+    use crate::kernels::ServePolicy;
+    use crate::util::Stopwatch;
+
+    anyhow::ensure!(train_n >= 2 && n_queries >= 1,
+        "need a training set and at least one query");
+    anyhow::ensure!(!batches.is_empty() && batches.iter().all(|&b| b > 0),
+        "--batches needs positive batch sizes");
+    let ds = chembl_like(train_n + n_queries, seed);
+    let (train, test) = ds.split(train_n);
+    let queries = &test.features;
+    let d = test.d;
+    let max_wait_us: u64 = 2_000;
+    eprintln!("# serve-bench: {n_queries}q over {train_n}t x {d}d \
+               seed={seed} batches={batches:?}");
+
+    // replay the whole stream through a fresh engine at one max_batch
+    // setting; returns (wall secs, replies in id order)
+    let replay = |max_batch: usize| -> Result<(f64, Vec<ServeReply>,
+                                               crate::coordinator::ServeStats)> {
+        let mcs = MultiClassifier::fit(&train);
+        let mut eng = ServeEngine::new(
+            mcs,
+            ServePolicy::auto()
+                .with_max_batch(max_batch)
+                .with_max_wait_us(max_wait_us)
+                .with_queue_cap(2 * max_batch.max(n_queries.min(1024))),
+        );
+        let clock = Stopwatch::start();
+        let mut replies: Vec<(u64, ServeReply)> = Vec::new();
+        for q in 0..n_queries {
+            let now = clock.elapsed().as_micros() as u64;
+            let req = ServeRequest {
+                id: q as u64,
+                x: queries[q * d..(q + 1) * d].to_vec(),
+            };
+            if let Some((_, r)) = eng.offer(0, req, now) {
+                anyhow::bail!("query {q} rejected during replay: {r:?}");
+            }
+            for (_, r) in
+                eng.poll(clock.elapsed().as_micros() as u64) {
+                replies.push((r.id(), r));
+            }
+        }
+        for (_, r) in
+            eng.drain(clock.elapsed().as_micros() as u64) {
+            replies.push((r.id(), r));
+        }
+        let secs = clock.elapsed_secs();
+        anyhow::ensure!(replies.len() == n_queries,
+            "{} replies for {n_queries} queries", replies.len());
+        replies.sort_by_key(|&(id, _)| id);
+        for (i, (id, _)) in replies.iter().enumerate() {
+            anyhow::ensure!(*id == i as u64,
+                "reply ids not a permutation: {id} at {i}");
+        }
+        Ok((secs, replies.into_iter().map(|(_, r)| r).collect(),
+            eng.stats()))
+    };
+
+    // parity BEFORE timing: a ragged batch size against the
+    // one-query-at-a-time oracle, every member prediction compared
+    let oracle_mcs = MultiClassifier::fit(&train);
+    let (_, parity_replies, _) = replay(7)?;
+    for (q, reply) in parity_replies.iter().enumerate() {
+        let single = oracle_mcs.predict(&queries[q * d..(q + 1) * d]);
+        let ServeReply::Predictions { id, nb, knn, prw, vote } = reply
+        else {
+            anyhow::bail!("non-prediction reply during parity: \
+                           {reply:?}");
+        };
+        anyhow::ensure!(
+            *id == q as u64 && *nb == single.nb[0]
+                && *knn == single.knn[0] && *prw == single.prw[0]
+                && *vote == single.vote[0],
+            "serve parity failed at query {q}: \
+             ({nb},{knn},{prw},{vote}) vs ({},{},{},{})",
+            single.nb[0], single.knn[0], single.prw[0], single.vote[0]);
+    }
+
+    // (batch, secs, qps, p50_us, p99_us, mean compute us per batch)
+    let mut records: Vec<(usize, f64, f64, u64, u64, f64)> = Vec::new();
+    for &bs in batches {
+        // best-of-2 on wall clock; stats come from the better run
+        let (s1, _, st1) = replay(bs)?;
+        let (s2, _, st2) = replay(bs)?;
+        let (secs, st) = if s1 <= s2 { (s1, st1) } else { (s2, st2) };
+        let qps = n_queries as f64 / secs;
+        let compute_per_batch = if st.dispatch.batches == 0 {
+            0.0
+        } else {
+            st.dispatch.predict_us_total as f64
+                / st.dispatch.batches as f64
+        };
+        records.push((bs, secs, qps, st.p50_us, st.p99_us,
+                      compute_per_batch));
+    }
+
+    let base_qps = records
+        .iter()
+        .find(|r| r.0 == 1)
+        .map(|r| r.2)
+        .unwrap_or(records[0].2);
+    let mut table = Table::new(
+        "Serving engine — micro-batched replay (batch=1 baseline; \
+         parity vs one-query-at-a-time predict asserted pre-timing)",
+        &["max_batch", "secs", "qps", "speedup vs b=1", "p50 (us)",
+          "p99 (us)", "compute/batch (us)"]);
+    for &(bs, secs, qps, p50, p99, cpb) in &records {
+        table.row(&[bs.to_string(), format!("{secs:.6}"),
+                    format!("{qps:.0}"),
+                    format!("{:.2}x", qps / base_qps),
+                    p50.to_string(), p99.to_string(),
+                    format!("{cpb:.0}")]);
+    }
+    println!("{}", table.to_markdown());
+
+    if let Some(path) = out_json {
+        let mut json = String::from("{\n");
+        json.push_str("  \"schema\": \"locality-ml/bench-serve/v1\",\n");
+        json.push_str(&format!(
+            "  \"shape\": {{\"train\": {train_n}, \"queries\": \
+             {n_queries}, \"d\": {d}, \"seed\": {seed}}},\n"));
+        json.push_str(&format!(
+            "  \"knobs\": {{\"max_wait_us\": {max_wait_us}}},\n"));
+        json.push_str("  \"results\": [\n");
+        for (i, &(bs, secs, qps, p50, p99, cpb)) in
+            records.iter().enumerate() {
+            let comma = if i + 1 < records.len() { "," } else { "" };
+            json.push_str(&format!(
+                "    {{\"batch\": {bs}, \"secs\": {secs:.6}, \
+                 \"throughput_qps\": {qps:.1}, \"speedup_vs_b1\": \
+                 {:.3}, \"p50_us\": {p50}, \"p99_us\": {p99}, \
+                 \"compute_us_per_batch\": {cpb:.1}}}{comma}\n",
+                qps / base_qps));
+        }
+        json.push_str("  ]\n}\n");
+        std::fs::write(path, json)
+            .with_context(|| format!("writing {}", path.display()))?;
+        eprintln!("# serving engine timings -> {}", path.display());
+    }
+    Ok(table)
+}
+
 /// `info` — artifact inventory + platform.
 pub fn cmd_info(artifacts: &Path) -> Result<()> {
     let engine = Engine::open(artifacts)?;

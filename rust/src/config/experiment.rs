@@ -12,22 +12,31 @@ use crate::opt::OptimizerKind;
 /// Fig 5 / E1: the SW-SGD convergence sweep.
 #[derive(Debug, Clone)]
 pub struct TrainExperiment {
+    /// Directory holding the AOT-compiled artifacts.
     pub artifacts: PathBuf,
     /// Total dataset size (train folds + held-out fold come from this).
     pub dataset_n: usize,
+    /// Number of CV folds.
     pub folds: usize,
     /// Run full k-fold CV (paper protocol) or a single split (quick).
     pub cross_validate: bool,
+    /// Optimizers to sweep (Fig 5 compares all four).
     pub optimizers: Vec<OptimizerKind>,
+    /// SW-SGD window sizes to sweep (0 = plain SGD).
     pub windows: Vec<usize>,
+    /// SGD batch size (fixed at 128 by the artifact geometry).
     pub batch: usize,
+    /// Epochs per (optimizer, window) cell.
     pub epochs: usize,
+    /// Master seed for dataset synthesis and shuffling.
     pub seed: u64,
     /// Optional CSV output path for the curves.
     pub out_csv: Option<PathBuf>,
 }
 
 impl TrainExperiment {
+    /// Assemble from a parsed [`Config`], applying the paper-shaped
+    /// defaults and validating geometry.
     pub fn from_config(c: &Config) -> Result<Self> {
         let optimizers = c
             .str_list_or("train.optimizers",
@@ -63,6 +72,7 @@ impl TrainExperiment {
         Ok(exp)
     }
 
+    /// Check the geometry constraints the AOT artifacts impose.
     pub fn validate(&self) -> Result<()> {
         if self.batch != 128 {
             bail!("batch must be 128: the AOT grad artifacts are lowered \
@@ -84,17 +94,23 @@ impl TrainExperiment {
 /// Table 1 / E2: the joint k-NN + PRW run.
 #[derive(Debug, Clone)]
 pub struct JointExperiment {
+    /// Directory holding the AOT-compiled artifacts.
     pub artifacts: PathBuf,
     /// Where the .lmld files live / are generated.
     pub data_dir: PathBuf,
+    /// Training-set size (fixed at 20480 by the artifact geometry).
     pub train_n: usize,
+    /// Test-set size (multiple of the 256-row eval tile).
     pub test_n: usize,
+    /// Master seed for dataset synthesis.
     pub seed: u64,
     /// Regenerate the datasets even if the files exist.
     pub regenerate: bool,
 }
 
 impl JointExperiment {
+    /// Assemble from a parsed [`Config`], validating the artifact
+    /// geometry constraints.
     pub fn from_config(c: &Config) -> Result<Self> {
         let exp = Self {
             artifacts: PathBuf::from(c.str_or("artifacts", "artifacts")),
@@ -113,10 +129,12 @@ impl JointExperiment {
         Ok(exp)
     }
 
+    /// Path of the generated training-set file.
     pub fn train_path(&self) -> PathBuf {
         self.data_dir.join("chembl_train.lmld")
     }
 
+    /// Path of the generated test-set file.
     pub fn test_path(&self) -> PathBuf {
         self.data_dir.join("chembl_test.lmld")
     }

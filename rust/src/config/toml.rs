@@ -22,14 +22,20 @@ use anyhow::{bail, Context, Result};
 /// A parsed scalar or flat array value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A double-quoted string literal.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal (integers coerce via [`Value::as_float`]).
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat `[a, b, c]` array of scalars.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string payload, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -37,6 +43,7 @@ impl Value {
         }
     }
 
+    /// The integer payload, if this is an `Int`.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -44,6 +51,7 @@ impl Value {
         }
     }
 
+    /// The numeric payload as `f64` (`Float` directly, `Int` widened).
     pub fn as_float(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -52,6 +60,7 @@ impl Value {
         }
     }
 
+    /// The boolean payload, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -87,6 +96,7 @@ pub struct Config {
 }
 
 impl Config {
+    /// Parse the TOML-subset text (see the module header for the grammar).
     pub fn parse(text: &str) -> Result<Self> {
         let mut values = BTreeMap::new();
         let mut section = String::new();
@@ -138,29 +148,35 @@ impl Config {
         Ok(Self { values })
     }
 
+    /// Read and parse a config file.
     pub fn load(path: &std::path::Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         Self::parse(&text)
     }
 
+    /// Value at dotted key `"section.key"` (bare `"key"` for the root).
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.values.get(key)
     }
 
+    /// String at `key` (missing or wrong type -> default).
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).and_then(Value::as_str).unwrap_or(default)
             .to_string()
     }
 
+    /// Integer at `key` (missing or wrong type -> default).
     pub fn int_or(&self, key: &str, default: i64) -> i64 {
         self.get(key).and_then(Value::as_int).unwrap_or(default)
     }
 
+    /// Float at `key` (missing or wrong type -> default; ints widen).
     pub fn float_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(Value::as_float).unwrap_or(default)
     }
 
+    /// Boolean at `key` (missing or wrong type -> default).
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(Value::as_bool).unwrap_or(default)
     }

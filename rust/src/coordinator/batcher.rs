@@ -1,12 +1,28 @@
-//! Epoch-shuffled minibatch assembly (Algorithm 9's prologue: "Randomly
-//! shuffle the order of all the training data in T / Divide T into
-//! mini-batches of size n").
+//! Batch assembly for both halves of the crate's lifecycle:
 //!
-//! The batcher owns preallocated staging buffers so the training hot loop
-//! performs **zero heap allocation** per step (L3 perf target, DESIGN.md
-//! §8): gather-into-buffer, hand out slices.
+//! * **Training** — [`EpochBatcher`] + [`BatchBuffers`] implement
+//!   Algorithm 9's prologue ("Randomly shuffle the order of all the
+//!   training data in T / Divide T into mini-batches of size n") with
+//!   preallocated staging buffers so the training hot loop performs
+//!   **zero heap allocation** per step (L3 perf target, DESIGN.md §8):
+//!   gather-into-buffer, hand out slices.
+//! * **Serving** — [`MicroBatchQueue`] is the admission/coalescing
+//!   queue of the resident serving engine (`coordinator::serve`): live
+//!   queries accumulate until either `max_batch` of them are pending
+//!   or the *oldest* has waited `max_wait_us`, then drain as one batch
+//!   that rides a single pass over the resident train tiles. A bounded
+//!   queue ([`ServePolicy::queue_cap`]) sheds overload at admission
+//!   time ([`Admission::Shed`]) instead of buffering without limit.
+//!
+//! The queue is deliberately time-agnostic: callers pass a microsecond
+//! clock reading into [`MicroBatchQueue::offer`] / `ready` /
+//! `drain_batch`, so tests drive it with a synthetic clock and the
+//! flush policy stays exactly reproducible.
+
+use std::collections::VecDeque;
 
 use crate::data::Dataset;
+use crate::kernels::ServePolicy;
 use crate::util::Rng;
 
 /// Streams shuffled index batches over `[0, n)`, reshuffling every epoch.
@@ -16,10 +32,12 @@ pub struct EpochBatcher {
     cursor: usize,
     batch: usize,
     rng: Rng,
+    /// Completed passes over the data (bumps on reshuffle).
     pub epoch: usize,
 }
 
 impl EpochBatcher {
+    /// Batcher over `[0, n)` in shuffled `batch`-sized chunks.
     pub fn new(n: usize, batch: usize, seed: u64) -> Self {
         assert!(batch > 0 && batch <= n, "batch {batch} vs n {n}");
         let mut rng = Rng::new(seed);
@@ -50,7 +68,9 @@ impl EpochBatcher {
 /// Preallocated gather buffers for feature/one-hot batches.
 #[derive(Debug)]
 pub struct BatchBuffers {
+    /// Gathered feature rows, row-major `[points × d]`.
     pub x: Vec<f32>,
+    /// Gathered one-hot labels, row-major `[points × classes]`.
     pub y_onehot: Vec<f32>,
     capacity_points: usize,
     d: usize,
@@ -91,6 +111,146 @@ impl BatchBuffers {
     /// The gathered slices for a batch of `n` points.
     pub fn slices(&self, n: usize) -> (&[f32], &[f32]) {
         (&self.x[..n * self.d], &self.y_onehot[..n * self.classes])
+    }
+}
+
+/// Admission verdict for one query offered to a [`MicroBatchQueue`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Accepted; the payload sits at this 0-based queue position.
+    Queued(usize),
+    /// Rejected: the bounded queue is full. The serving layer turns
+    /// this into an explicit `overloaded` reply — backpressure is a
+    /// visible protocol event, never silent buffering.
+    Shed,
+}
+
+/// Occupancy counters for a [`MicroBatchQueue`], cumulative since
+/// construction. Feeds the `serve-bench` occupancy report.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Queries accepted by [`MicroBatchQueue::offer`].
+    pub admitted: u64,
+    /// Queries rejected with [`Admission::Shed`].
+    pub shed: u64,
+    /// Batches drained.
+    pub batches: u64,
+    /// Batches drained because `max_batch` queries were pending.
+    pub size_flushes: u64,
+    /// Batches drained because the oldest query aged past
+    /// `max_wait_us` (includes explicit end-of-stream flushes).
+    pub timeout_flushes: u64,
+}
+
+/// The admission/coalescing queue of the serving engine.
+///
+/// Payloads are generic so the queue holds whatever the caller needs
+/// to route replies (the engine stores `(client, request id, feature
+/// row)`); the queue itself only decides *when a batch forms*:
+///
+/// * [`offer`](Self::offer) admits or sheds, against `queue_cap`;
+/// * [`ready`](Self::ready) is true once `max_batch` payloads are
+///   pending **or** the oldest has waited `max_wait_us`;
+/// * [`drain_batch`](Self::drain_batch) removes up to `max_batch`
+///   payloads in arrival order together with their enqueue timestamps.
+///
+/// Arrival order is preserved end to end, which is what makes the
+/// serving engine's replies independent of how queries interleave with
+/// flush boundaries (see the parity property tests in
+/// `coordinator::serve`).
+#[derive(Debug)]
+pub struct MicroBatchQueue<T> {
+    items: VecDeque<(T, u64)>,
+    policy: ServePolicy,
+    stats: QueueStats,
+}
+
+impl<T> MicroBatchQueue<T> {
+    /// Build a queue under `policy` (resolved here; sentinel fields
+    /// fall back to their `LOCALITY_ML_*` env overrides / defaults).
+    pub fn new(policy: ServePolicy) -> Self {
+        Self {
+            items: VecDeque::new(),
+            policy: policy.resolve(),
+            stats: QueueStats::default(),
+        }
+    }
+
+    /// The resolved policy the queue runs under.
+    pub fn policy(&self) -> &ServePolicy {
+        &self.policy
+    }
+
+    /// Pending payload count.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True when nothing is pending.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Cumulative occupancy counters.
+    pub fn stats(&self) -> QueueStats {
+        self.stats
+    }
+
+    /// Offer one payload at clock reading `now_us`. Sheds when
+    /// `queue_cap` payloads are already pending.
+    pub fn offer(&mut self, item: T, now_us: u64) -> Admission {
+        if self.items.len() >= self.policy.queue_cap {
+            self.stats.shed += 1;
+            return Admission::Shed;
+        }
+        self.items.push_back((item, now_us));
+        self.stats.admitted += 1;
+        Admission::Queued(self.items.len() - 1)
+    }
+
+    /// True when a batch should flush at clock reading `now_us`:
+    /// either `max_batch` payloads are pending, or the oldest has
+    /// waited at least `max_wait_us`.
+    pub fn ready(&self, now_us: u64) -> bool {
+        if self.items.len() >= self.policy.max_batch {
+            return !self.items.is_empty();
+        }
+        match self.items.front() {
+            Some(&(_, t0)) => {
+                now_us.saturating_sub(t0) >= self.policy.max_wait_us
+            }
+            None => false,
+        }
+    }
+
+    /// The clock reading at which the oldest pending payload ages out
+    /// (`None` when the queue is empty). The serve loop sleeps until
+    /// this deadline instead of spinning.
+    pub fn next_deadline_us(&self) -> Option<u64> {
+        self.items
+            .front()
+            .map(|&(_, t0)| t0.saturating_add(self.policy.max_wait_us))
+    }
+
+    /// Drain up to `max_batch` payloads in arrival order, each with
+    /// its enqueue timestamp (so the caller can account queue wait
+    /// into per-query latency). A drain of a full batch counts as a
+    /// size flush in [`QueueStats`]; any partial drain — aged-out or
+    /// explicit end-of-stream — counts as a timeout flush.
+    pub fn drain_batch(&mut self) -> Vec<(T, u64)> {
+        if self.items.is_empty() {
+            return Vec::new();
+        }
+        let by_size = self.items.len() >= self.policy.max_batch;
+        let take = self.items.len().min(self.policy.max_batch);
+        let batch: Vec<(T, u64)> = self.items.drain(..take).collect();
+        self.stats.batches += 1;
+        if by_size {
+            self.stats.size_flushes += 1;
+        } else {
+            self.stats.timeout_flushes += 1;
+        }
+        batch
     }
 }
 
@@ -183,5 +343,91 @@ mod tests {
         });
         let mut buf = BatchBuffers::new(2, 2, 2);
         buf.gather(&ds, &[0, 1, 2]);
+    }
+
+    fn pinned(max_batch: usize, max_wait_us: u64, cap: usize)
+        -> MicroBatchQueue<usize>
+    {
+        MicroBatchQueue::new(
+            ServePolicy::auto()
+                .with_max_batch(max_batch)
+                .with_max_wait_us(max_wait_us)
+                .with_queue_cap(cap),
+        )
+    }
+
+    #[test]
+    fn micro_batch_flushes_on_size() {
+        let mut q = pinned(4, 1_000, 16);
+        for i in 0..3 {
+            assert_eq!(q.offer(i, 0), Admission::Queued(i));
+            assert!(!q.ready(0), "below max_batch, below max_wait");
+        }
+        q.offer(3, 0);
+        assert!(q.ready(0), "max_batch pending flushes immediately");
+        let batch = q.drain_batch();
+        assert_eq!(
+            batch.iter().map(|&(i, _)| i).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3],
+            "arrival order preserved"
+        );
+        assert!(q.is_empty());
+        let s = q.stats();
+        assert_eq!((s.batches, s.size_flushes, s.timeout_flushes),
+                   (1, 1, 0));
+    }
+
+    #[test]
+    fn micro_batch_flushes_on_oldest_age() {
+        let mut q = pinned(64, 500, 1_024);
+        q.offer(7, 100);
+        assert!(!q.ready(400), "oldest has waited 300us < 500us");
+        q.offer(8, 550);
+        assert_eq!(q.next_deadline_us(), Some(600));
+        assert!(q.ready(600), "oldest aged out");
+        let batch = q.drain_batch();
+        assert_eq!(batch, vec![(7, 100), (8, 550)]);
+        let s = q.stats();
+        assert_eq!((s.size_flushes, s.timeout_flushes), (0, 1));
+    }
+
+    #[test]
+    fn micro_batch_bounded_queue_sheds() {
+        let mut q = pinned(2, 1_000, 3);
+        assert_eq!(q.offer(0, 0), Admission::Queued(0));
+        assert_eq!(q.offer(1, 0), Admission::Queued(1));
+        assert_eq!(q.offer(2, 0), Admission::Queued(2));
+        assert_eq!(q.offer(3, 0), Admission::Shed, "cap reached");
+        assert_eq!(q.stats().shed, 1);
+        // draining frees capacity again — shedding is load-dependent,
+        // not sticky
+        assert_eq!(q.drain_batch().len(), 2, "max_batch bounds drains");
+        assert_eq!(q.offer(4, 0), Admission::Queued(2));
+        assert_eq!(q.stats().admitted, 4);
+    }
+
+    #[test]
+    fn micro_batch_one_disables_coalescing() {
+        let mut q = pinned(1, u64::MAX - 1, 8);
+        assert!(!q.ready(0), "empty queue is never ready");
+        q.offer(9, 0);
+        assert!(q.ready(0), "max_batch=1: every query is its own batch");
+        assert_eq!(q.drain_batch(), vec![(9, 0)]);
+    }
+
+    #[test]
+    fn micro_batch_empty_drain_is_noop() {
+        let mut q = pinned(4, 1_000, 16);
+        assert!(q.drain_batch().is_empty());
+        assert_eq!(q.stats().batches, 0, "no batch recorded for a no-op");
+        assert_eq!(q.next_deadline_us(), None);
+    }
+
+    #[test]
+    fn micro_batch_cap_clamps_to_batch() {
+        // queue_cap below max_batch could never fill a batch; resolve
+        // clamps it up
+        let q = pinned(8, 1_000, 2);
+        assert_eq!(q.policy().queue_cap, 8);
     }
 }

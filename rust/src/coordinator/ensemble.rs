@@ -14,6 +14,7 @@ use crate::learners::NaiveBayes;
 
 /// A bagged ensemble of naive Bayes members.
 pub struct BaggedNb {
+    /// The trained members, one per bootstrap sample.
     pub members: Vec<NaiveBayes>,
 }
 
@@ -53,12 +54,17 @@ impl BaggedNb {
 /// half-correct/half-incorrect (w.r.t. M1) sample, M3 on the M1/M2
 /// disagreement set.
 pub struct BoostedNb {
+    /// Trained on a random `s1_size` subset.
     pub m1: NaiveBayes,
+    /// Trained on the half-correct/half-incorrect (w.r.t. M1) sample.
     pub m2: NaiveBayes,
+    /// Trained on the M1/M2 disagreement set.
     pub m3: NaiveBayes,
 }
 
 impl BoostedNb {
+    /// Train the triple per Algorithm 7 (M1's predictions over T are
+    /// computed once and reused for both S2 and S3).
     pub fn fit(train: &Dataset, s1_size: usize, s2_size: usize, seed: u64)
         -> Self {
         // M1: random subset.

@@ -26,11 +26,14 @@ pub struct PassStats {
 
 /// Streams CV folds to learner instances in either schedule.
 pub struct FoldStream<'a> {
+    /// The single resident copy of the dataset.
     pub ds: &'a Dataset,
+    /// The CV fold assignment being streamed.
     pub folds: &'a Folds,
 }
 
 impl<'a> FoldStream<'a> {
+    /// Stream over `ds` split by `folds`.
     pub fn new(ds: &'a Dataset, folds: &'a Folds) -> Self {
         Self { ds, folds }
     }

@@ -72,7 +72,9 @@ pub const MIN_BANDWIDTH: f32 = 1e-6;
 /// Result of a hyperparameter sweep: CV accuracy per candidate.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepResult<T> {
+    /// The candidate values swept, in sweep order.
     pub candidates: Vec<T>,
+    /// Cross-validated accuracy of each candidate (same order).
     pub accuracy: Vec<f64>,
     /// Distance evaluations performed *for this sweep* (the redundancy
     /// the guideline removes; see the module-level accounting note).

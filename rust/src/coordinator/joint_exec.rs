@@ -22,19 +22,28 @@ use crate::data::{read_dataset, Dataset};
 use crate::runtime::{Engine, HostTensor, Input};
 use crate::util::Stopwatch;
 
-/// Expected artifact geometry (python shapes.py: CHEMBL_*, TEST_TILE).
+/// Expected artifact geometry (python shapes.py: CHEMBL_*, TEST_TILE):
+/// training rows.
 pub const TRAIN_N: usize = 20480;
+/// Test rows per artifact execution.
 pub const TEST_TILE: usize = 256;
+/// Feature dimension.
 pub const DIM: usize = 128;
+/// Class count.
 pub const CLASSES: usize = 2;
 
 /// One timed scenario run.
 #[derive(Debug, Clone)]
 pub struct TimedRun {
+    /// Scenario label ("resident", "reload", ...).
     pub scenario: &'static str,
+    /// Seconds spent (re)loading data and uploading tensors.
     pub load_secs: f64,
+    /// Seconds spent executing over all test tiles.
     pub test_secs: f64,
+    /// k-NN predictions, one per test row.
     pub knn: Vec<i32>,
+    /// Parzen window predictions, one per test row.
     pub prw: Vec<i32>,
 }
 

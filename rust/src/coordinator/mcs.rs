@@ -11,9 +11,14 @@
 
 use crate::data::sampling::majority_vote;
 use crate::data::Dataset;
-use crate::kernels::{DistanceAlgo, ExecPolicy, NormCache, TileConfig};
+use crate::kernels::{
+    DistanceAlgo, ExecPolicy, NormCache, PackedPanel, TileConfig,
+};
 use crate::learners::instance::{BANDWIDTH, K};
-use crate::learners::{joint_scan_exec, NaiveBayes};
+use crate::learners::{
+    joint_scan_exec, joint_scan_exec_prepacked, pack_train_panels,
+    NaiveBayes,
+};
 
 /// A trained three-member system: NB model + the remembered training set
 /// for the instance-based members, plus the training set's [`NormCache`]
@@ -21,9 +26,12 @@ use crate::learners::{joint_scan_exec, NaiveBayes};
 /// the GEMM-formulation distance path (the "reuse of computation
 /// results" guideline applied across ensemble members and streams).
 pub struct MultiClassifier {
+    /// The trained naive Bayes member.
     pub nb: NaiveBayes,
     train: Dataset,
+    /// Neighbour count for the k-NN member.
     pub k: usize,
+    /// Parzen window bandwidth for the PRW member.
     pub bandwidth: f32,
     norms: NormCache,
     /// execution policy for the shared distance pass — fully-Auto by
@@ -35,10 +43,62 @@ pub struct MultiClassifier {
 /// Per-member and combined predictions for one stream pass.
 #[derive(Debug, Clone, PartialEq)]
 pub struct McsPredictions {
+    /// Naive-Bayes member predictions, one class id per query.
     pub nb: Vec<i32>,
+    /// k-NN member predictions.
     pub knn: Vec<i32>,
+    /// Parzen–Rosenblatt-window member predictions.
     pub prw: Vec<i32>,
+    /// Majority vote over the three members (NB-posterior tiebreak).
     pub vote: Vec<i32>,
+}
+
+/// The execution configuration a serving engine pins ONCE at engine
+/// build, so that every micro-batch — whatever its size — runs the
+/// shared distance pass identically.
+///
+/// [`MultiClassifier::predict`] re-derives threads, tiles and the
+/// distance formulation from each call's work; batch-size-dependent
+/// resolution is exactly right for one-shot streams and exactly wrong
+/// for serving, where coalescing must never change an answer. This
+/// snapshot therefore freezes all three — and pre-packs the Gemm train
+/// panels — so [`MultiClassifier::predict_resident`] is a pure
+/// function of the query bytes:
+///
+/// * the [`DistanceAlgo`] is resolved on *single-query* work, the
+///   batch-invariant choice (what a `max_batch = 1` server would run);
+/// * the [`TileConfig`] is frozen (Gemm bits depend on the tile
+///   split);
+/// * under `Gemm` the train panels are packed here, once, and reused
+///   read-only by every batch (under `Exact` no panels exist).
+///
+/// Under `Exact` (the default-resolved choice for the repo's dataset
+/// scale) predictions are additionally bit-identical to the plain
+/// one-query-at-a-time [`MultiClassifier::predict`] — the serving
+/// parity property tests pin that end to end.
+pub struct ResidentState {
+    policy: ExecPolicy,
+    tiles: TileConfig,
+    packed: Option<Vec<PackedPanel>>,
+}
+
+impl ResidentState {
+    /// The fully-resolved policy every batch runs under (its algo is
+    /// always concrete, never `Auto`).
+    pub fn policy(&self) -> &ExecPolicy {
+        &self.policy
+    }
+
+    /// The frozen tile configuration.
+    pub fn tiles(&self) -> &TileConfig {
+        &self.tiles
+    }
+
+    /// True when the Gemm train panels are resident (i.e. the pinned
+    /// formulation is `Gemm`).
+    pub fn is_packed(&self) -> bool {
+        self.packed.is_some()
+    }
 }
 
 impl MultiClassifier {
@@ -118,6 +178,61 @@ impl MultiClassifier {
         .expect("MCS members emit in-range class ids");
         McsPredictions { nb, knn, prw, vote }
     }
+
+    /// Feature dimensionality the classifier was fitted on (queries
+    /// must arrive as length-`dim` rows).
+    pub fn dim(&self) -> usize {
+        self.train.d
+    }
+
+    /// Training-set size (the resident working set every query batch
+    /// scans against).
+    pub fn n_train(&self) -> usize {
+        self.train.n
+    }
+
+    /// Number of classes the members vote over.
+    pub fn n_classes(&self) -> usize {
+        self.train.n_classes
+    }
+
+    /// Freeze the execution configuration for a long-lived serving
+    /// process: resolve the policy once, pin the distance formulation
+    /// on *single-query* work (so batch size can never flip it), fix
+    /// the tile split, and pre-pack the Gemm train panels. See
+    /// [`ResidentState`] for the invariance contract.
+    pub fn prepare_resident(&self) -> ResidentState {
+        let p = self.policy.resolve();
+        // the batch-invariant algo choice: what a max_batch = 1 server
+        // would resolve for every call
+        let algo = p.algo.resolve(self.train.n * self.train.d);
+        let tiles = TileConfig::westmere_workers(p.threads.max(1));
+        let packed = (algo == DistanceAlgo::Gemm)
+            .then(|| pack_train_panels(&self.train, self.train.d,
+                                       &tiles));
+        ResidentState { policy: p.with_algo(algo), tiles, packed }
+    }
+
+    /// One batch through the resident configuration: identical
+    /// members/vote semantics to [`MultiClassifier::predict`], but
+    /// threads, tiles, formulation and (under Gemm) the packed train
+    /// panels come frozen from `resident` instead of being re-derived
+    /// from this batch's size — predictions for a query are the same
+    /// bits whether it travels alone or inside any batch.
+    pub fn predict_resident(&self, rows: &[f32],
+                            resident: &ResidentState) -> McsPredictions {
+        let nb = self.nb.predict(rows);
+        let (knn, prw) = joint_scan_exec_prepacked(
+            &self.train, rows, self.train.d, self.k, self.bandwidth,
+            &resident.tiles, &self.norms, &resident.policy,
+            resident.packed.as_deref());
+        let vote = majority_vote(
+            &[nb.clone(), knn.clone(), prw.clone()],
+            self.train.n_classes,
+        )
+        .expect("MCS members emit in-range class ids");
+        McsPredictions { nb, knn, prw, vote }
+    }
 }
 
 #[cfg(test)]
@@ -160,6 +275,51 @@ mod tests {
                 .filter(|m| m[i] == p.vote[i])
                 .count();
             assert!(agree >= 2, "vote {i} is not a majority");
+        }
+    }
+
+    #[test]
+    fn resident_exact_matches_one_shot_predict() {
+        // the serving contract at its strongest: under Exact the
+        // resident path reproduces the plain per-call predict bits,
+        // batched or not
+        let (train, test) = chembl_like(320, 11).split(256);
+        let mcs = MultiClassifier::fit(&train)
+            .with_dist_algo(DistanceAlgo::Exact);
+        let rs = mcs.prepare_resident();
+        assert!(!rs.is_packed(), "Exact keeps no panels resident");
+        let batched = mcs.predict_resident(&test.features, &rs);
+        assert_eq!(batched, mcs.predict(&test.features));
+        for q in 0..test.n {
+            let single = mcs.predict(test.row(q));
+            assert_eq!(single.vote[0], batched.vote[q],
+                "query {q}: alone vs inside the full batch");
+        }
+    }
+
+    #[test]
+    fn resident_gemm_is_batch_size_invariant() {
+        // under Gemm the contract is resident-single == resident-
+        // batched (the frozen tiles/panels make batch size irrelevant)
+        let (train, test) = chembl_like(384, 13).split(256);
+        let mcs = MultiClassifier::fit(&train)
+            .with_dist_algo(DistanceAlgo::Gemm);
+        let rs = mcs.prepare_resident();
+        assert!(rs.is_packed(), "Gemm panels packed at engine build");
+        let full = mcs.predict_resident(&test.features, &rs);
+        let mut q = 0;
+        for sz in [1usize, 3, 16, 64].iter().cycle() {
+            if q >= test.n {
+                break;
+            }
+            let hi = (q + sz).min(test.n);
+            let part = mcs.predict_resident(
+                &test.features[q * test.d..hi * test.d], &rs);
+            assert_eq!(part.vote, full.vote[q..hi],
+                "ragged batch [{q}, {hi}) diverged from the full pass");
+            assert_eq!(part.knn, full.knn[q..hi]);
+            assert_eq!(part.prw, full.prw[q..hi]);
+            q = hi;
         }
     }
 

@@ -1,12 +1,16 @@
 //! The locality-aware coordinator (DESIGN.md system S9) — the paper's
 //! contribution as a first-class system layer:
 //!
-//! * [`batcher`]        — shuffled epochs, zero-alloc batch assembly
+//! * [`batcher`]        — shuffled epochs, zero-alloc batch assembly,
+//!   and the serving engine's micro-batch admission queue
 //! * [`sliding_window`] — SW-SGD's cached-window composition (§5.1)
 //! * [`train_loop`]     — the Fig 5 driver (optimizer × window sweep)
 //! * [`fold_stream`]    — Figure 1 fold streams for cross-validation
 //! * [`joint_exec`]     — Table 1 joint k-NN+PRW executor (§5.2)
-//! * [`scheduler`]      — learner-major ↔ data-major interchange (§3.2)
+//! * [`scheduler`]      — learner-major ↔ data-major interchange
+//!   (§3.2) + the serving batch dispatcher
+//! * [`serve`]          — the resident micro-batched serving engine
+//!   (JSONL protocol, admission/backpressure, latency accounting)
 
 pub mod batcher;
 pub mod ensemble;
@@ -15,10 +19,13 @@ pub mod fold_stream;
 pub mod joint_exec;
 pub mod mcs;
 pub mod scheduler;
+pub mod serve;
 pub mod sliding_window;
 pub mod train_loop;
 
-pub use batcher::{BatchBuffers, EpochBatcher};
+pub use batcher::{
+    Admission, BatchBuffers, EpochBatcher, MicroBatchQueue, QueueStats,
+};
 pub use ensemble::{BaggedNb, BoostedNb};
 pub use hyperparam::{
     silverman_bandwidth, sweep_naive, sweep_shared, sweep_shared_exec,
@@ -29,7 +36,12 @@ pub use hyperparam::{sweep_shared_algo, sweep_shared_auto,
                      sweep_shared_par};
 pub use fold_stream::{FoldStream, PassStats};
 pub use joint_exec::{run_joint, run_separate, TimedRun};
-pub use mcs::{McsPredictions, MultiClassifier};
-pub use scheduler::{schedule, Order, Task};
+pub use mcs::{McsPredictions, MultiClassifier, ResidentState};
+pub use scheduler::{
+    schedule, BatchDispatcher, DispatchLog, Order, Task,
+};
+pub use serve::{
+    percentile_us, ServeEngine, ServeReply, ServeRequest, ServeStats,
+};
 pub use sliding_window::SlidingWindow;
 pub use train_loop::{train_swsgd, train_swsgd_cv, TrainSpec};

@@ -14,20 +14,35 @@
 //! Validity (paper §1: "first and foremost the validity of the
 //! transformation is important"): each learner must still see its blocks
 //! in its original relative order — checked by property test.
+//!
+//! The same interchange, applied to serving, is [`BatchDispatcher`]:
+//! a coalesced micro-batch is the "data-major" unit — one pass over
+//! the resident train tiles feeds *every* query in the batch (reuse
+//! distance ≈ 0 across queries), where dispatching queries one at a
+//! time would re-stream the training set per query (the learner-major
+//! pathology with queries in the learner role).
 
+use crate::coordinator::mcs::{
+    McsPredictions, MultiClassifier, ResidentState,
+};
 use crate::memsim::ReuseProfiler;
+use crate::util::timing::Stopwatch;
 
 /// One unit of work: learner `learner` consumes data block `block`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Task {
+    /// Which learner runs.
     pub learner: usize,
+    /// Which data block it consumes.
     pub block: usize,
 }
 
 /// Schedule order for a (learners × blocks) workload.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Order {
+    /// Naive nest: each learner streams all blocks before the next starts.
     LearnerMajor,
+    /// Interchanged nest: each block streams once through all learners.
     DataMajor,
 }
 
@@ -78,6 +93,93 @@ pub fn preserves_per_learner_order(tasks: &[Task], learners: usize)
         last[t.learner] = Some(t.block);
     }
     true
+}
+
+/// Cumulative dispatch counters for one [`BatchDispatcher`] — the
+/// compute-side half of the serving metrics (the queue side lives in
+/// [`crate::coordinator::batcher::QueueStats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DispatchLog {
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Total queries across all batches.
+    pub queries: u64,
+    /// Total wall-clock microseconds spent inside
+    /// `predict_resident`, summed over batches.
+    pub predict_us_total: u64,
+    /// Largest batch dispatched so far (occupancy high-water mark).
+    pub largest_batch: usize,
+}
+
+impl DispatchLog {
+    /// Mean queries per dispatched batch (0 when nothing dispatched).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.queries as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Drives coalesced micro-batches onto the resident classifier.
+///
+/// Owns the fitted [`MultiClassifier`] and the [`ResidentState`]
+/// frozen from it at construction; every [`dispatch`](Self::dispatch)
+/// call runs one batch through `predict_resident` on the existing
+/// worker pool under the frozen `ExecPolicy`, times it, and updates
+/// the [`DispatchLog`]. The dispatcher is deliberately synchronous —
+/// admission/coalescing (and therefore all waiting) happens upstream
+/// in the [`crate::coordinator::batcher::MicroBatchQueue`]; compute
+/// happens here, one batch at a time, so batches can never reorder.
+pub struct BatchDispatcher {
+    mcs: MultiClassifier,
+    resident: ResidentState,
+    log: DispatchLog,
+}
+
+impl BatchDispatcher {
+    /// Freeze `mcs`'s execution configuration (see
+    /// [`MultiClassifier::prepare_resident`]) and wrap it for batch
+    /// dispatch.
+    pub fn new(mcs: MultiClassifier) -> Self {
+        let resident = mcs.prepare_resident();
+        Self { mcs, resident, log: DispatchLog::default() }
+    }
+
+    /// The resident classifier.
+    pub fn classifier(&self) -> &MultiClassifier {
+        &self.mcs
+    }
+
+    /// The frozen execution configuration.
+    pub fn resident(&self) -> &ResidentState {
+        &self.resident
+    }
+
+    /// Cumulative dispatch counters.
+    pub fn log(&self) -> &DispatchLog {
+        &self.log
+    }
+
+    /// Run one coalesced batch (row-major `len·d` floats) through the
+    /// resident configuration. Returns the per-query predictions and
+    /// the batch's compute time in microseconds.
+    pub fn dispatch(&mut self, rows: &[f32]) -> (McsPredictions, u64) {
+        let d = self.mcs.dim();
+        assert!(d > 0 && rows.len() % d == 0,
+            "batch of {} floats is not a whole number of {d}-feature \
+             rows", rows.len());
+        let n = rows.len() / d;
+        let sw = Stopwatch::start();
+        let preds = self.mcs.predict_resident(rows, &self.resident);
+        let us = sw.elapsed().as_micros() as u64;
+        self.log.batches += 1;
+        self.log.queries += n as u64;
+        self.log.predict_us_total += us;
+        self.log.largest_batch = self.log.largest_batch.max(n);
+        (preds, us)
+    }
 }
 
 #[cfg(test)]
@@ -133,5 +235,37 @@ mod tests {
             Task { learner: 0, block: 0 },
         ];
         assert!(!preserves_per_learner_order(&bad, 1));
+    }
+
+    #[test]
+    fn dispatcher_matches_resident_predict_and_counts() {
+        use crate::data::synth::chembl_like;
+        let (train, test) = chembl_like(192, 17).split(128);
+        let mut disp = BatchDispatcher::new(MultiClassifier::fit(&train));
+        let expect = disp
+            .classifier()
+            .predict_resident(&test.features, disp.resident());
+        let (got, _) = disp.dispatch(&test.features);
+        assert_eq!(got, expect, "dispatch is predict_resident + counters");
+        let (one, _) = disp.dispatch(test.row(0));
+        assert_eq!(one.vote[0], expect.vote[0],
+            "a single-query batch sees the same bits");
+        let log = *disp.log();
+        assert_eq!(log.batches, 2);
+        assert_eq!(log.queries, test.n as u64 + 1);
+        assert_eq!(log.largest_batch, test.n);
+        let mean = log.mean_batch();
+        assert!((mean - (test.n as f64 + 1.0) / 2.0).abs() < 1e-9,
+            "mean batch {mean}");
+    }
+
+    #[test]
+    #[should_panic(expected = "whole number")]
+    fn dispatcher_rejects_ragged_rows() {
+        use crate::data::synth::chembl_like;
+        let (train, _) = chembl_like(64, 17).split(48);
+        let mut disp = BatchDispatcher::new(MultiClassifier::fit(&train));
+        let d = disp.classifier().dim();
+        disp.dispatch(&vec![0.0; d + 1]);
     }
 }

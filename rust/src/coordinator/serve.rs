@@ -1,0 +1,625 @@
+//! The resident serving engine: micro-batched inference over a
+//! long-lived [`MultiClassifier`].
+//!
+//! Everything else in the crate is a one-shot CLI run; this module is
+//! the consumer the locality machinery was built for. A fitted
+//! classifier, its `NormCache` and (under Gemm) its packed train
+//! panels stay **resident** across requests
+//! ([`MultiClassifier::prepare_resident`]), and live queries are
+//! coalesced by a [`MicroBatchQueue`] into micro-batches that ride ONE
+//! pass over the resident train tiles — the paper's reuse argument
+//! applied to serving: a single-query k-NN predict is memory-bound (every
+//! train byte streamed for one consumer), a 64-query batch reuses each
+//! train tile 64 times while it is cache-hot.
+//!
+//! # Wire protocol (JSONL, one object per line)
+//!
+//! Requests:
+//!
+//! ```text
+//! {"id": 7, "x": [0.25, -1.5, 3.0]}
+//! ```
+//!
+//! Replies (one line per query, in arrival order within a batch):
+//!
+//! ```text
+//! {"id":7,"vote":2,"nb":2,"knn":2,"prw":1}
+//! {"id":8,"error":"overloaded"}
+//! {"id":9,"error":"expected 3 features, got 2"}
+//! ```
+//!
+//! `overloaded` is the backpressure contract: when `queue_cap` queries
+//! are already pending the engine sheds the arrival with an explicit
+//! reply instead of buffering without bound. Malformed lines and
+//! wrong-dimension rows get an `error` reply and never enter the
+//! queue, so one bad client cannot poison a batch.
+//!
+//! # Determinism contract
+//!
+//! Batching is a latency/throughput decision, never a semantic one:
+//! the reply for a query is bit-identical whether it travels alone or
+//! inside any batch, independent of arrival interleaving, thread
+//! count and schedule — the engine runs every batch through the
+//! execution configuration frozen in [`ResidentState`] at engine
+//! build. Property tests (`prop_serve_parity` below) pin this.
+//!
+//! The engine is deliberately clock-agnostic: every entry point takes
+//! a microsecond reading `now_us` from the caller's monotonic clock,
+//! so the CLI drives it with a [`Stopwatch`](crate::util::Stopwatch)
+//! and the tests with a synthetic clock — flush policy included,
+//! serving is exactly reproducible.
+
+use crate::coordinator::batcher::{Admission, MicroBatchQueue, QueueStats};
+use crate::coordinator::mcs::MultiClassifier;
+use crate::coordinator::scheduler::{BatchDispatcher, DispatchLog};
+use crate::kernels::ServePolicy;
+
+/// Cap on the retained per-query latency samples (a ring: newest
+/// overwrite oldest) — enough for stable p99 estimates without
+/// unbounded growth in a long-lived process.
+const LATENCY_RING_CAP: usize = 4096;
+
+/// One parsed query: `{"id": N, "x": [f32...]}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeRequest {
+    /// Client-chosen correlation id, echoed verbatim in the reply.
+    pub id: u64,
+    /// The feature row (must be exactly the fitted dimensionality).
+    pub x: Vec<f32>,
+}
+
+impl ServeRequest {
+    /// Parse one JSONL request line. The accepted grammar is the
+    /// protocol's, not all of JSON: a flat object with a non-negative
+    /// integer `id` and a flat numeric array `x`, in either order.
+    pub fn parse(line: &str) -> Result<ServeRequest, String> {
+        let s = line.trim();
+        let inner = s
+            .strip_prefix('{')
+            .and_then(|t| t.strip_suffix('}'))
+            .ok_or_else(|| "request is not a JSON object".to_string())?;
+        let id_txt = field(inner, "id")?;
+        let id: u64 = id_txt
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad id {:?}", id_txt.trim()))?;
+        let x_txt = field(inner, "x")?;
+        let arr = x_txt
+            .trim()
+            .strip_prefix('[')
+            .and_then(|t| t.strip_suffix(']'))
+            .ok_or_else(|| "\"x\" is not an array".to_string())?;
+        let mut x = Vec::new();
+        for tok in arr.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue; // the empty array "[]"
+            }
+            x.push(tok.parse::<f32>().map_err(|_| {
+                format!("bad feature value {tok:?}")
+            })?);
+        }
+        Ok(ServeRequest { id, x })
+    }
+}
+
+/// Extract the raw text of `"key": <value>` from a flat JSON object
+/// body (no nested objects and no string values — the request grammar
+/// has neither). The value runs to the next top-level comma.
+fn field<'a>(body: &'a str, key: &str) -> Result<&'a str, String> {
+    let pat = format!("\"{key}\"");
+    let at = body
+        .find(&pat)
+        .ok_or_else(|| format!("missing \"{key}\""))?;
+    let rest = &body[at + pat.len()..];
+    let rest = rest
+        .trim_start()
+        .strip_prefix(':')
+        .ok_or_else(|| format!("missing ':' after \"{key}\""))?;
+    let mut depth = 0usize;
+    for (i, c) in rest.char_indices() {
+        match c {
+            '[' => depth += 1,
+            ']' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => return Ok(&rest[..i]),
+            _ => {}
+        }
+    }
+    Ok(rest)
+}
+
+/// One reply line. Exactly one of these goes back per offered query —
+/// predictions on success, an explicit error otherwise.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeReply {
+    /// All three member predictions plus the majority vote.
+    Predictions {
+        /// Echoed request id.
+        id: u64,
+        /// Naive-Bayes member class.
+        nb: i32,
+        /// k-NN member class.
+        knn: i32,
+        /// Parzen–Rosenblatt-window member class.
+        prw: i32,
+        /// Majority vote (the answer).
+        vote: i32,
+    },
+    /// The bounded queue was full — the query was shed at admission
+    /// (backpressure made visible, never silent buffering).
+    Overloaded {
+        /// Echoed request id.
+        id: u64,
+    },
+    /// The request never entered the queue (parse failure, wrong
+    /// dimensionality).
+    Error {
+        /// Echoed request id (0 when the line was too malformed to
+        /// carry one).
+        id: u64,
+        /// Human-readable reason.
+        msg: String,
+    },
+}
+
+impl ServeReply {
+    /// The echoed request id.
+    pub fn id(&self) -> u64 {
+        match self {
+            ServeReply::Predictions { id, .. }
+            | ServeReply::Overloaded { id }
+            | ServeReply::Error { id, .. } => *id,
+        }
+    }
+
+    /// Serialize as one JSONL line (no trailing newline).
+    pub fn to_jsonl(&self) -> String {
+        match self {
+            ServeReply::Predictions { id, nb, knn, prw, vote } => {
+                format!(
+                    "{{\"id\":{id},\"vote\":{vote},\"nb\":{nb},\
+                     \"knn\":{knn},\"prw\":{prw}}}"
+                )
+            }
+            ServeReply::Overloaded { id } => {
+                format!("{{\"id\":{id},\"error\":\"overloaded\"}}")
+            }
+            ServeReply::Error { id, msg } => {
+                // the grammar never puts quotes/backslashes in msg,
+                // but escape them anyway so the line stays valid JSON
+                let esc = msg.replace('\\', "\\\\").replace('"', "\\\"");
+                format!("{{\"id\":{id},\"error\":\"{esc}\"}}")
+            }
+        }
+    }
+}
+
+/// A queued query: who asked (`client` is an opaque routing tag the
+/// transport layer assigns — fd index, connection slot), which request
+/// id, and the feature row.
+#[derive(Debug, Clone)]
+struct Pending {
+    client: usize,
+    id: u64,
+    x: Vec<f32>,
+}
+
+/// Latency/occupancy snapshot for the `serve` status line and the
+/// serve bench.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeStats {
+    /// Admission-queue counters (admitted / shed / flush reasons).
+    pub queue: QueueStats,
+    /// Compute-side counters (batches, queries, predict time).
+    pub dispatch: DispatchLog,
+    /// p50 end-to-end latency (queue wait + batch compute), µs, over
+    /// the retained sample ring.
+    pub p50_us: u64,
+    /// p99 end-to-end latency, µs.
+    pub p99_us: u64,
+    /// Latency samples currently retained (≤ the ring cap).
+    pub samples: usize,
+}
+
+/// The resident serving engine: admission queue + batch dispatcher +
+/// per-query latency accounting, glued to the JSONL protocol.
+///
+/// Transport-agnostic by construction — the CLI loop owns the bytes
+/// (stdin or unix socket) and the clock, the engine owns the policy:
+/// [`offer`](Self::offer) admits/sheds/rejects, [`poll`](Self::poll)
+/// flushes a batch when one is due, [`drain`](Self::drain) flushes
+/// everything at end of stream. Replies carry the `client` tag given
+/// at `offer` so the transport can route them back.
+pub struct ServeEngine {
+    queue: MicroBatchQueue<Pending>,
+    dispatcher: BatchDispatcher,
+    dim: usize,
+    latencies: Vec<u64>,
+    lat_cursor: usize,
+    staging: Vec<f32>,
+}
+
+impl ServeEngine {
+    /// Build the engine: freeze `mcs`'s execution configuration
+    /// (see [`MultiClassifier::prepare_resident`]) and stand up the
+    /// admission queue under `policy` (resolved here).
+    pub fn new(mcs: MultiClassifier, policy: ServePolicy) -> Self {
+        let dim = mcs.dim();
+        Self {
+            queue: MicroBatchQueue::new(policy),
+            dispatcher: BatchDispatcher::new(mcs),
+            dim,
+            latencies: Vec::new(),
+            lat_cursor: 0,
+            staging: Vec::new(),
+        }
+    }
+
+    /// The resolved serving policy the queue runs under.
+    pub fn policy(&self) -> &ServePolicy {
+        self.queue.policy()
+    }
+
+    /// Feature dimensionality every request's `x` must match.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The resident classifier (for parity checks and status output).
+    pub fn classifier(&self) -> &MultiClassifier {
+        self.dispatcher.classifier()
+    }
+
+    /// The execution configuration frozen at engine build.
+    pub fn resident(&self) -> &crate::coordinator::mcs::ResidentState {
+        self.dispatcher.resident()
+    }
+
+    /// Offer one query at clock reading `now_us`.
+    ///
+    /// Returns `None` when the query was queued (its reply will come
+    /// from a later [`poll`](Self::poll)/[`drain`](Self::drain)), or
+    /// an immediate routed reply when it never entered the queue:
+    /// [`ServeReply::Overloaded`] on a full queue,
+    /// [`ServeReply::Error`] on a dimensionality mismatch.
+    pub fn offer(&mut self, client: usize, req: ServeRequest,
+                 now_us: u64) -> Option<(usize, ServeReply)> {
+        if req.x.len() != self.dim {
+            return Some((client, ServeReply::Error {
+                id: req.id,
+                msg: format!("expected {} features, got {}", self.dim,
+                             req.x.len()),
+            }));
+        }
+        let pending = Pending { client, id: req.id, x: req.x };
+        match self.queue.offer(pending, now_us) {
+            Admission::Queued(_) => None,
+            Admission::Shed => {
+                Some((client, ServeReply::Overloaded { id: req.id }))
+            }
+        }
+    }
+
+    /// Offer one raw protocol line (convenience for the transports):
+    /// parse failures become an immediate `Error` reply with id 0.
+    pub fn offer_line(&mut self, client: usize, line: &str,
+                      now_us: u64) -> Option<(usize, ServeReply)> {
+        match ServeRequest::parse(line) {
+            Ok(req) => self.offer(client, req, now_us),
+            Err(msg) => {
+                Some((client, ServeReply::Error { id: 0, msg }))
+            }
+        }
+    }
+
+    /// The clock reading at which the oldest pending query ages out —
+    /// the transport sleeps until this deadline (or the next arrival)
+    /// instead of spinning. `None` when nothing is pending.
+    pub fn next_deadline_us(&self) -> Option<u64> {
+        self.queue.next_deadline_us()
+    }
+
+    /// True when a batch is due at `now_us` (size or age trigger).
+    pub fn ready(&self, now_us: u64) -> bool {
+        self.queue.ready(now_us)
+    }
+
+    /// Flush AT MOST one due batch. Returns routed replies in arrival
+    /// order (empty when no batch is due — the empty queue never
+    /// dispatches an empty batch).
+    pub fn poll(&mut self, now_us: u64) -> Vec<(usize, ServeReply)> {
+        if !self.queue.ready(now_us) {
+            return Vec::new();
+        }
+        self.run_batch(now_us)
+    }
+
+    /// End-of-stream: flush every pending query regardless of the
+    /// triggers, in arrival order, `max_batch` queries per dispatch.
+    pub fn drain(&mut self, now_us: u64) -> Vec<(usize, ServeReply)> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            out.extend(self.run_batch(now_us));
+        }
+        out
+    }
+
+    /// Dispatch one drained batch and account per-query latency
+    /// (queue wait until `now_us` + the batch's compute time).
+    fn run_batch(&mut self, now_us: u64) -> Vec<(usize, ServeReply)> {
+        let batch = self.queue.drain_batch();
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        self.staging.clear();
+        for (p, _) in &batch {
+            self.staging.extend_from_slice(&p.x);
+        }
+        let rows = std::mem::take(&mut self.staging);
+        let (preds, predict_us) = self.dispatcher.dispatch(&rows);
+        self.staging = rows;
+        batch
+            .into_iter()
+            .enumerate()
+            .map(|(i, (p, t0))| {
+                let wait = now_us.saturating_sub(t0);
+                self.record_latency(wait + predict_us);
+                (p.client, ServeReply::Predictions {
+                    id: p.id,
+                    nb: preds.nb[i],
+                    knn: preds.knn[i],
+                    prw: preds.prw[i],
+                    vote: preds.vote[i],
+                })
+            })
+            .collect()
+    }
+
+    fn record_latency(&mut self, us: u64) {
+        if self.latencies.len() < LATENCY_RING_CAP {
+            self.latencies.push(us);
+        } else {
+            self.latencies[self.lat_cursor] = us;
+            self.lat_cursor = (self.lat_cursor + 1) % LATENCY_RING_CAP;
+        }
+    }
+
+    /// Current latency/occupancy snapshot.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            queue: self.queue.stats(),
+            dispatch: *self.dispatcher.log(),
+            p50_us: percentile_us(&self.latencies, 50.0),
+            p99_us: percentile_us(&self.latencies, 99.0),
+            samples: self.latencies.len(),
+        }
+    }
+}
+
+/// Nearest-rank percentile over unsorted microsecond samples (0 when
+/// empty). Public so the serve bench aggregates its own sample sets
+/// with the exact same estimator.
+pub fn percentile_us(samples: &[u64], p: f64) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_unstable();
+    let rank = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+    s[rank.min(s.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::chembl_like;
+    use crate::kernels::{DistanceAlgo, ExecPolicy, Schedule};
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    fn fitted(seed: u64) -> (MultiClassifier, crate::data::Dataset) {
+        let (train, test) = chembl_like(256, seed).split(192);
+        (MultiClassifier::fit(&train), test)
+    }
+
+    fn req(id: u64, x: &[f32]) -> ServeRequest {
+        ServeRequest { id, x: x.to_vec() }
+    }
+
+    #[test]
+    fn parse_roundtrip_and_field_order() {
+        let r = ServeRequest::parse(
+            "  {\"id\": 42, \"x\": [1.5, -2.0, 3e1]}  ").unwrap();
+        assert_eq!(r, ServeRequest { id: 42, x: vec![1.5, -2.0, 30.0] });
+        let swapped = ServeRequest::parse(
+            "{\"x\":[0.5],\"id\":7}").unwrap();
+        assert_eq!(swapped, ServeRequest { id: 7, x: vec![0.5] });
+        let empty = ServeRequest::parse("{\"id\":1,\"x\":[]}").unwrap();
+        assert!(empty.x.is_empty());
+        for bad in ["", "{}", "{\"id\":1}", "{\"id\":x,\"x\":[1]}",
+                    "{\"id\":1,\"x\":[1,oops]}", "[1,2]"] {
+            assert!(ServeRequest::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn reply_jsonl_shapes() {
+        let p = ServeReply::Predictions {
+            id: 3, nb: 1, knn: 2, prw: 0, vote: 2,
+        };
+        assert_eq!(p.to_jsonl(),
+            "{\"id\":3,\"vote\":2,\"nb\":1,\"knn\":2,\"prw\":0}");
+        assert_eq!(ServeReply::Overloaded { id: 9 }.to_jsonl(),
+            "{\"id\":9,\"error\":\"overloaded\"}");
+        let e = ServeReply::Error { id: 0, msg: "bad \"x\"".into() };
+        assert_eq!(e.to_jsonl(),
+            "{\"id\":0,\"error\":\"bad \\\"x\\\"\"}");
+        // parse(reply.to_jsonl()) also exercises the field scanner on
+        // output we generate
+        assert_eq!(p.id(), 3);
+    }
+
+    #[test]
+    fn shed_and_error_replies_are_immediate() {
+        let (mcs, test) = fitted(21);
+        let d = mcs.dim();
+        let mut eng = ServeEngine::new(
+            mcs,
+            ServePolicy::auto()
+                .with_max_batch(4)
+                .with_max_wait_us(1_000)
+                .with_queue_cap(4),
+        );
+        // wrong dimensionality: immediate error, never queued
+        let bad = eng.offer(0, req(1, &vec![0.0; d + 1]), 0).unwrap();
+        assert!(matches!(bad.1, ServeReply::Error { id: 1, .. }));
+        assert_eq!(eng.stats().queue.admitted, 0);
+        // fill the queue, then the 5th arrival sheds
+        for i in 0..4u64 {
+            assert!(eng.offer(0, req(i, test.row(0)), 0).is_none());
+        }
+        let shed = eng.offer(0, req(99, test.row(0)), 0).unwrap();
+        assert_eq!(shed.1, ServeReply::Overloaded { id: 99 });
+        let s = eng.stats().queue;
+        assert_eq!((s.admitted, s.shed), (4, 1));
+        // malformed line: immediate error with id 0
+        let e = eng.offer_line(0, "{nope", 0).unwrap();
+        assert!(matches!(e.1, ServeReply::Error { id: 0, .. }));
+    }
+
+    #[test]
+    fn poll_honours_size_and_age_triggers() {
+        let (mcs, test) = fitted(22);
+        let mut eng = ServeEngine::new(
+            mcs,
+            ServePolicy::auto()
+                .with_max_batch(2)
+                .with_max_wait_us(500)
+                .with_queue_cap(16),
+        );
+        eng.offer(7, req(1, test.row(0)), 100);
+        assert!(eng.poll(200).is_empty(), "1 < max_batch, 100us < 500us");
+        assert_eq!(eng.next_deadline_us(), Some(600));
+        // age trigger: partial batch flushes at the deadline
+        let replies = eng.poll(600);
+        assert_eq!(replies.len(), 1);
+        assert_eq!(replies[0].0, 7, "client tag routed back");
+        assert_eq!(replies[0].1.id(), 1);
+        // size trigger: two arrivals flush immediately
+        eng.offer(8, req(2, test.row(1)), 700);
+        eng.offer(9, req(3, test.row(2)), 700);
+        let replies = eng.poll(700);
+        assert_eq!(replies.iter().map(|r| r.1.id()).collect::<Vec<_>>(),
+                   vec![2, 3], "arrival order preserved");
+        let st = eng.stats();
+        assert_eq!(st.queue.timeout_flushes, 1);
+        assert_eq!(st.queue.size_flushes, 1);
+        assert_eq!(st.dispatch.queries, 3);
+        assert_eq!(st.samples, 3);
+        assert!(st.p99_us >= st.p50_us, "p99 below p50");
+        // the first query waited 500us in the queue, so its recorded
+        // end-to-end latency must include that wait
+        assert!(st.p99_us >= 500, "queue wait missing from latency");
+    }
+
+    #[test]
+    fn drain_flushes_everything_in_arrival_order() {
+        let (mcs, test) = fitted(23);
+        let mut eng = ServeEngine::new(
+            mcs,
+            ServePolicy::auto()
+                .with_max_batch(3)
+                .with_max_wait_us(u64::MAX - 1)
+                .with_queue_cap(64),
+        );
+        assert!(eng.drain(0).is_empty(), "empty drain is a no-op");
+        for i in 0..7u64 {
+            eng.offer(0, req(i, test.row(i as usize % test.n)), 0);
+        }
+        let replies = eng.drain(10);
+        assert_eq!(replies.iter().map(|r| r.1.id()).collect::<Vec<_>>(),
+                   (0..7u64).collect::<Vec<_>>());
+        // 7 queries at max_batch 3 → dispatches of 3, 3, 1
+        let st = eng.stats();
+        assert_eq!(st.dispatch.batches, 3);
+        assert_eq!(st.dispatch.largest_batch, 3);
+    }
+
+    /// THE serving determinism contract (ISSUE 7 acceptance): replies
+    /// are bit-identical to one-query-at-a-time `predict`, across
+    /// ragged batch sizes × threads × schedules, independent of how
+    /// arrivals interleave with flush boundaries.
+    #[test]
+    fn prop_serve_parity_across_batching_threads_schedules() {
+        let (train, test) = chembl_like(224, 29).split(160);
+        // one-query-at-a-time oracle: plain predict, Exact pinned —
+        // the bitwise contract's home turf
+        let oracle_mcs = MultiClassifier::fit(&train)
+            .with_dist_algo(DistanceAlgo::Exact);
+        let oracle: Vec<i32> = (0..test.n)
+            .map(|q| oracle_mcs.predict(test.row(q)).vote[0])
+            .collect();
+        check("serve-batching-parity", 12, |g| {
+            let threads = if g.bool() { 1 } else { 4 };
+            let schedule = if g.bool() {
+                Schedule::Static
+            } else {
+                Schedule::Stealing
+            };
+            let max_batch = g.usize_in(1, 32);
+            let pol = ExecPolicy::default()
+                .with_threads(threads)
+                .with_schedule(schedule)
+                .with_algo(DistanceAlgo::Exact);
+            let mcs = MultiClassifier::fit(&train).with_policy(&pol);
+            let mut eng = ServeEngine::new(
+                mcs,
+                ServePolicy::auto()
+                    .with_max_batch(max_batch)
+                    .with_max_wait_us(1_000)
+                    .with_queue_cap(4 * test.n),
+            );
+            // adversarial arrival interleaving: random think times and
+            // random mid-stream polls so flush boundaries fall
+            // anywhere relative to the query stream
+            let mut got: Vec<(u64, i32)> = Vec::new();
+            let mut sink = |replies: Vec<(usize, ServeReply)>,
+                            got: &mut Vec<(u64, i32)>| {
+                for (_, r) in replies {
+                    match r {
+                        ServeReply::Predictions { id, vote, .. } => {
+                            got.push((id, vote));
+                        }
+                        other => {
+                            return Err(format!("unexpected {other:?}"));
+                        }
+                    }
+                }
+                Ok(())
+            };
+            let mut now = 0u64;
+            for q in 0..test.n {
+                now += g.usize_in(0, 700) as u64;
+                let imm = eng.offer(q, req(q as u64, test.row(q)), now);
+                prop_assert!(imm.is_none(),
+                    "query {q} not admitted: {imm:?}");
+                if g.bool() {
+                    let r = eng.poll(now);
+                    sink(r, &mut got)?;
+                }
+            }
+            sink(eng.drain(now + 10_000), &mut got)?;
+            prop_assert!(got.len() == test.n,
+                "{} replies for {} queries", got.len(), test.n);
+            got.sort_by_key(|&(id, _)| id);
+            for (i, &(id, vote)) in got.iter().enumerate() {
+                prop_assert!(id == i as u64, "reply ids {id} vs {i}");
+                prop_assert!(vote == oracle[i],
+                    "query {i}: served {vote} vs single-query \
+                     {} (threads={threads}, schedule={schedule:?}, \
+                     max_batch={max_batch})", oracle[i]);
+            }
+            Ok(())
+        });
+    }
+}

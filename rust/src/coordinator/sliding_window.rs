@@ -31,6 +31,7 @@ impl SlidingWindow {
         }
     }
 
+    /// The configured window size `w`.
     pub fn w(&self) -> usize {
         self.w
     }

@@ -18,6 +18,7 @@ use crate::runtime::Engine;
 /// One Fig 5 training configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct TrainSpec {
+    /// Which weight-update rule to run.
     pub optimizer: OptimizerKind,
     /// Learning rate; `None` = the optimizer's tuned default.
     pub lr: Option<f32>,
@@ -25,11 +26,14 @@ pub struct TrainSpec {
     pub window: usize,
     /// Fresh-batch size B (paper: 128).
     pub batch: usize,
+    /// Number of passes over the training fold.
     pub epochs: usize,
+    /// Shuffle/init seed (same seed → bit-identical run).
     pub seed: u64,
 }
 
 impl TrainSpec {
+    /// Short tag for tables and loss-curve labels, e.g. `adam-w2`.
     pub fn label(&self) -> String {
         format!("{}-w{}", self.optimizer.name(), self.window)
     }

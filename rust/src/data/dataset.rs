@@ -7,14 +7,21 @@
 /// A labelled dataset. Features are row-major `[n x d]`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Dataset {
+    /// Row-major `[n x d]` feature matrix.
     pub features: Vec<f32>,
+    /// Class label per point, in `0..n_classes`.
     pub labels: Vec<i32>,
+    /// Number of points.
     pub n: usize,
+    /// Features per point.
     pub d: usize,
+    /// Number of distinct classes.
     pub n_classes: usize,
 }
 
 impl Dataset {
+    /// Assemble a dataset, deriving `n` from the buffer lengths (panics
+    /// on a features/labels shape mismatch).
     pub fn new(features: Vec<f32>, labels: Vec<i32>, d: usize,
                n_classes: usize) -> Self {
         assert_eq!(features.len() % d, 0, "features not a multiple of d");

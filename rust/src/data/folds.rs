@@ -5,6 +5,7 @@ use crate::util::Rng;
 /// A k-fold partition of `n` point indices.
 #[derive(Debug, Clone)]
 pub struct Folds {
+    /// Point indices per fold; disjoint and jointly covering `0..n`.
     pub folds: Vec<Vec<usize>>,
 }
 
@@ -56,6 +57,7 @@ impl Folds {
         Self { folds }
     }
 
+    /// Number of folds.
     pub fn k(&self) -> usize {
         self.folds.len()
     }
@@ -72,6 +74,7 @@ impl Folds {
             .collect()
     }
 
+    /// Held-out indices for CV split `test_fold`.
     pub fn test_indices(&self, test_fold: usize) -> &[usize] {
         &self.folds[test_fold]
     }

@@ -12,13 +12,17 @@ use crate::util::Rng;
 /// Parameters for a Gaussian-mixture classification dataset.
 #[derive(Debug, Clone, Copy)]
 pub struct MixtureSpec {
+    /// Number of points to draw.
     pub n: usize,
+    /// Feature dimensionality.
     pub d: usize,
+    /// Number of mixture components (= classes).
     pub classes: usize,
     /// Distance scale of the class means (higher = easier problem).
     pub separation: f32,
     /// Per-sample isotropic noise.
     pub noise: f32,
+    /// PRNG seed — same spec, same bits.
     pub seed: u64,
 }
 

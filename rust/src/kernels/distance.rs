@@ -239,6 +239,7 @@ impl NormCache {
         self.norms.len()
     }
 
+    /// True when no rows are cached.
     pub fn is_empty(&self) -> bool {
         self.norms.is_empty()
     }

@@ -10,6 +10,7 @@
 //! | [`pairwise_sq_dists_gemm`] (+ [`NormCache`]) | `kernels/distance.py` | §4 "reuse of computation results": ‖q−t‖² = ‖q‖²+‖t‖²−2·q·t, cross term through the Fig 3 GEMM |
 //! | [`coupled_step_tiled`] | `linear_coupled` graph | §4.3 coupled LR+SVM |
 //! | [`matmul_packed`] (+ [`PackedPanel`] / [`MicroKernel`]) | — | register-level reuse: the hierarchy ladder's last rung — operands packed once into reuse-ordered panels, an `MR × NR` register block reused across the whole `K` reduction (Fig 3 taken down to the register file) |
+//! | [`ServePolicy`] (+ `coordinator::serve`) | — | §4 "reuse of computation results" lifted to serving: live queries coalesced into micro-batches so one pass over the resident train tiles (norms + packed panels held across requests) is amortized over the whole batch instead of re-streamed per query |
 //!
 //! # Tiling scheme
 //!
@@ -104,7 +105,7 @@ pub use matmul::{
     matmul_tn_acc_naive, matmul_tn_acc_tiled,
 };
 pub use pack::{micro_kernel, MicroKernel, PackedPanel};
-pub use policy::ExecPolicy;
+pub use policy::{ExecPolicy, ServePolicy};
 #[allow(deprecated)]
 pub use parallel::{
     coupled_step_par, matmul_acc_tiled_par, matmul_bias_tiled_par,

@@ -79,14 +79,17 @@ impl PackedBuf {
         Self { lanes: vec![Lane([0.0; 8]); len.div_ceil(8)], len }
     }
 
+    /// Number of f32s the buffer holds.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when the buffer holds no values.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// The buffer as a `&[f32]` (32-byte-aligned base pointer).
     pub fn as_slice(&self) -> &[f32] {
         // SAFETY: `lanes` is a contiguous Vec of repr(C) [f32; 8]
         // blocks, so the first `len` f32s are initialised, contiguous
@@ -97,6 +100,7 @@ impl PackedBuf {
         }
     }
 
+    /// The buffer as a `&mut [f32]` (32-byte-aligned base pointer).
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
         // SAFETY: as `as_slice`, plus exclusive access via `&mut self`.
         unsafe {
@@ -196,10 +200,12 @@ impl PackedPanel {
         Self { buf, k, n, kc, np, blocks }
     }
 
+    /// Depth (rows of the unpacked operand) this was packed from.
     pub fn k(&self) -> usize {
         self.k
     }
 
+    /// Width (columns of the unpacked operand) this was packed from.
     pub fn n(&self) -> usize {
         self.n
     }
@@ -315,6 +321,7 @@ impl MicroKernel {
             .collect()
     }
 
+    /// Stable lower-case tier name (as printed by `--explain` and BENCH).
     pub fn name(self) -> &'static str {
         match self {
             MicroKernel::Scalar => "scalar",

@@ -132,6 +132,131 @@ impl ExecPolicy {
     }
 }
 
+/// Default micro-batch size for the resident serving engine: large
+/// enough that a full batch amortizes one pass over the resident train
+/// tiles (the fused joint scan's reuse window), small enough that the
+/// coalescing delay stays in the microsecond regime.
+pub const DEFAULT_MAX_BATCH: usize = 64;
+/// Default admission-queue coalescing window in microseconds: how long
+/// the oldest queued query may wait for the batch to fill before the
+/// batcher flushes a partial batch.
+pub const DEFAULT_MAX_WAIT_US: u64 = 2_000;
+/// Default bound on the admission queue. Once this many queries are
+/// pending, further arrivals are shed with an explicit `overloaded`
+/// reply instead of growing the queue without limit.
+pub const DEFAULT_QUEUE_CAP: usize = 1_024;
+
+/// The serving-engine policy knobs — the micro-batching counterpart of
+/// [`ExecPolicy`].
+///
+/// Where [`ExecPolicy`] decides *how* a batch executes (threads,
+/// schedule, distance formulation), `ServePolicy` decides *when* a
+/// batch forms: how many queries coalesce into one pass over the
+/// resident train tiles (`max_batch`), how long the oldest query may
+/// wait for co-travellers (`max_wait_us`), and how deep the admission
+/// queue may grow before load is shed (`queue_cap`).
+///
+/// Resolution mirrors the execution axes: every still-Auto field
+/// defers to its `LOCALITY_ML_*` environment variable, then to the
+/// compiled default — [`ServePolicy::resolve`] is the single point
+/// where that chain is consulted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServePolicy {
+    /// Flush a batch as soon as this many queries are pending;
+    /// `0` = resolve from `LOCALITY_ML_MAX_BATCH` →
+    /// [`DEFAULT_MAX_BATCH`]. `1` disables coalescing (every query
+    /// dispatches alone — the latency-over-throughput extreme).
+    pub max_batch: usize,
+    /// Flush a partial batch once the *oldest* pending query has
+    /// waited this many microseconds; `u64::MAX` = resolve from
+    /// `LOCALITY_ML_MAX_WAIT_US` → [`DEFAULT_MAX_WAIT_US`]. `0` is a
+    /// legitimate pinned value: flush on the next poll, never hold a
+    /// query back.
+    pub max_wait_us: u64,
+    /// Shed arrivals once this many queries are pending; `0` = resolve
+    /// from `LOCALITY_ML_QUEUE_CAP` → [`DEFAULT_QUEUE_CAP`]. Resolved
+    /// values are clamped to at least `max_batch` so a full batch can
+    /// always form.
+    pub queue_cap: usize,
+}
+
+impl Default for ServePolicy {
+    /// Fully-Auto: every knob defers to the env-override chain.
+    fn default() -> Self {
+        Self { max_batch: 0, max_wait_us: u64::MAX, queue_cap: 0 }
+    }
+}
+
+impl ServePolicy {
+    /// The fully-Auto policy (same as `Default`).
+    pub fn auto() -> Self {
+        Self::default()
+    }
+
+    /// Builder: pin the batch size (0 restores auto).
+    pub fn with_max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Builder: pin the coalescing window (`u64::MAX` restores auto).
+    pub fn with_max_wait_us(mut self, max_wait_us: u64) -> Self {
+        self.max_wait_us = max_wait_us;
+        self
+    }
+
+    /// Builder: pin the admission-queue bound (0 restores auto).
+    pub fn with_queue_cap(mut self, queue_cap: usize) -> Self {
+        self.queue_cap = queue_cap;
+        self
+    }
+
+    /// THE resolution point for the serving knobs: consult the
+    /// CLI→env→default chain once per still-Auto field. After this
+    /// `max_batch >= 1`, `max_wait_us` is finite and
+    /// `queue_cap >= max_batch`.
+    pub fn resolve(&self) -> Self {
+        let max_batch = if self.max_batch == 0 {
+            env_usize("LOCALITY_ML_MAX_BATCH")
+                .unwrap_or(DEFAULT_MAX_BATCH)
+                .max(1)
+        } else {
+            self.max_batch
+        };
+        let max_wait_us = if self.max_wait_us == u64::MAX {
+            env_u64("LOCALITY_ML_MAX_WAIT_US")
+                .unwrap_or(DEFAULT_MAX_WAIT_US)
+        } else {
+            self.max_wait_us
+        };
+        let queue_cap = if self.queue_cap == 0 {
+            env_usize("LOCALITY_ML_QUEUE_CAP").unwrap_or(DEFAULT_QUEUE_CAP)
+        } else {
+            self.queue_cap
+        };
+        Self {
+            max_batch,
+            max_wait_us,
+            // a cap below the batch size could never fill a batch; the
+            // clamp keeps the two knobs independently settable
+            queue_cap: queue_cap.max(max_batch),
+        }
+    }
+}
+
+/// Parse an environment variable as `usize`, ignoring unset or
+/// unparsable values (mirroring the threads/schedule/dist-algo
+/// policies).
+fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+/// Parse an environment variable as `u64`, ignoring unset or
+/// unparsable values.
+fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -814,6 +814,56 @@ pub fn joint_scan_exec(train: &Dataset, test_rows: &[f32], d: usize,
                      norms, p.threads, p.schedule)
 }
 
+/// One-time packing of the training set's Gemm panels for a resident
+/// consumer (the serving engine's `ResidentState`): one
+/// [`PackedPanel`] per `jt`-row train tile, in exactly the tile order
+/// the fused scans stream, sized by the same `tiles` the scans will
+/// run under. Pack once at engine build, then pass the panels to
+/// [`joint_scan_exec_prepacked`] on every batch — the per-call
+/// re-transpose/re-pack the one-shot entries pay disappears from the
+/// serving hot path.
+pub fn pack_train_panels(train: &Dataset, d: usize, tiles: &TileConfig)
+    -> Vec<PackedPanel> {
+    pack_panels(train, d, tiles)
+}
+
+/// The resident-serving joint-scan entry point: identical bits to
+/// [`joint_scan_exec`] under the same resolved policy and tiles, but
+/// Gemm train panels come pre-packed from [`pack_train_panels`]
+/// instead of being rebuilt per call (`packed` is ignored under
+/// `Exact`, and a Gemm call with `packed: None` falls back to local
+/// packing).
+///
+/// Bit-stability contract for resident callers: `DistanceAlgo::Auto`
+/// is still resolved on *this call's* multiply-add count, so a caller
+/// that wants batch-size-invariant bits must pass a policy whose algo
+/// is already concrete — the serving engine pins one at engine build.
+#[allow(clippy::too_many_arguments)]
+pub fn joint_scan_exec_prepacked(train: &Dataset, test_rows: &[f32],
+                                 d: usize, k: usize, bandwidth: f32,
+                                 tiles: &TileConfig, norms: &NormCache,
+                                 policy: &ExecPolicy,
+                                 packed: Option<&[PackedPanel]>)
+    -> (Vec<i32>, Vec<i32>) {
+    let p = policy.resolve();
+    let algo = p.algo.resolve((test_rows.len() / d.max(1)) * train.n * d);
+    let local = (algo == DistanceAlgo::Gemm && packed.is_none())
+        .then(|| pack_panels(train, d, tiles));
+    let packed_ref = packed.or(local.as_deref());
+    let blocks = scan_par(train, test_rows, d, tiles, p.threads,
+                          p.schedule, |rows| {
+        vec![joint_scan_fused_packed(train, rows, d, k, bandwidth,
+                                     tiles, algo, norms, packed_ref)]
+    });
+    let mut knn = Vec::new();
+    let mut prw = Vec::new();
+    for (kp, pp) in blocks {
+        knn.extend(kp);
+        prw.extend(pp);
+    }
+    (knn, prw)
+}
+
 /// Tuple-signature wrapper kept for the PR-5 parity suites.
 #[deprecated(note = "use `knn_scan_exec` with an `ExecPolicy`")]
 #[allow(clippy::too_many_arguments)]

@@ -20,8 +20,9 @@ pub const LAYERS: [(usize, usize); 4] =
 /// Total flat parameter count (weights + biases): 99 710.
 pub const N_PARAMS: usize = 78_500 + 10_100 + 10_100 + 1_010;
 
-/// Input feature dimension / class count.
+/// Input feature dimension (28×28 pixels).
 pub const INPUT_DIM: usize = 784;
+/// Output class count.
 pub const N_CLASSES: usize = 10;
 /// Evaluation artifact tile size (shapes.EVAL_TILE).
 pub const EVAL_TILE: usize = 256;
@@ -43,11 +44,14 @@ pub fn init_params(seed: u64) -> Vec<f32> {
 
 /// An MLP under training: flat parameters + optimizer state.
 pub struct MlpTrainer {
+    /// Flat parameter vector (layout: per layer W then b).
     pub theta: Vec<f32>,
+    /// The update rule and its moment state.
     pub optimizer: Optimizer,
 }
 
 impl MlpTrainer {
+    /// He-initialised trainer with a fresh optimizer.
     pub fn new(kind: OptimizerKind, lr: f32, seed: u64) -> Self {
         Self {
             theta: init_params(seed),
@@ -123,8 +127,11 @@ impl MlpTrainer {
 /// Evaluation summary.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EvalResult {
+    /// Mean cross-entropy loss over the evaluation set.
     pub mean_loss: f64,
+    /// Fraction of points classified correctly.
     pub accuracy: f64,
+    /// Points evaluated.
     pub n: usize,
 }
 

@@ -285,6 +285,7 @@ impl NativeMlp {
         (loss / self.batch as f64) as f32
     }
 
+    /// The flat gradient computed by the last backward pass.
     pub fn grad(&self) -> &[f32] {
         &self.grad
     }

@@ -14,10 +14,10 @@ pub mod mlp_native;
 pub mod naive_bayes;
 
 pub use instance::{
-    accuracy, joint_scan, joint_scan_exec, joint_scan_fused,
-    joint_scan_tiled, knn_scan, knn_scan_exec, knn_scan_fused,
-    knn_scan_tiled, prw_scan, prw_scan_exec, prw_scan_fused,
-    prw_scan_tiled,
+    accuracy, joint_scan, joint_scan_exec, joint_scan_exec_prepacked,
+    joint_scan_fused, joint_scan_tiled, knn_scan, knn_scan_exec,
+    knn_scan_fused, knn_scan_tiled, pack_train_panels, prw_scan,
+    prw_scan_exec, prw_scan_fused, prw_scan_tiled,
 };
 #[allow(deprecated)]
 pub use instance::{

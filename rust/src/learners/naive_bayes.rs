@@ -13,11 +13,16 @@ pub const VAR_FLOOR: f32 = 1e-3;
 /// Fitted Gaussian NB model.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NaiveBayes {
+    /// Training points seen per class.
     pub counts: Vec<f32>,
     /// `[classes x d]` row-major.
     pub mean: Vec<f32>,
+    /// Per-class feature variances, `[classes x d]` row-major, floored
+    /// at [`VAR_FLOOR`].
     pub var: Vec<f32>,
+    /// Feature dimensionality.
     pub d: usize,
+    /// Number of classes.
     pub classes: usize,
 }
 

@@ -29,6 +29,10 @@
 //! or work-stealing schedule (`--schedule` / `LOCALITY_ML_SCHEDULE`;
 //! both produce identical bits).
 
+// Every public item carries rustdoc; the contracts (bit-parity,
+// determinism across threads/schedules/batching) live on the items
+// that promise them, so `cargo doc` is the API reference.
+#![warn(missing_docs)]
 // Clippy policy: the loop nests deliberately mirror the paper's
 // pseudo-code (explicit indices keep the access patterns auditable
 // against Algorithms 1-15), and the kernel/learner APIs use flat

@@ -22,6 +22,11 @@
 //! locality-ml dists    [--train-n N] [--queries N] [--d D]
 //!                      [--out-json f]                     E16
 //! locality-ml pack     [--sizes ...] [--out-json f]       E17
+//! locality-ml serve    [--train-n N] [--max-batch N]
+//!                      [--max-wait-us N] [--queue-cap N]
+//!                      [--socket path]                    E18
+//! locality-ml serve-bench [--train-n N] [--queries N]
+//!                      [--batches 1,8,64] [--out-json f]  E19
 //! locality-ml info    [--artifacts dir]
 //! ```
 //!
@@ -191,6 +196,30 @@ fn main() -> Result<()> {
             let out = args.get("out-json").map(PathBuf::from);
             commands::cmd_pack(&sizes, out.as_deref())?;
         }
+        "serve" => {
+            let train_n = args.usize_or("train-n", 4000)?;
+            let seed = args.u64_or("seed", 7)?;
+            // 0 / u64::MAX are the "auto" sentinels: unset knobs fall
+            // through to LOCALITY_ML_MAX_BATCH / _MAX_WAIT_US /
+            // _QUEUE_CAP, then the compiled defaults (64 / 2000 / 1024)
+            let policy = locality_ml::kernels::ServePolicy::auto()
+                .with_max_batch(args.usize_or("max-batch", 0)?)
+                .with_max_wait_us(
+                    args.u64_or("max-wait-us", u64::MAX)?)
+                .with_queue_cap(args.usize_or("queue-cap", 0)?);
+            let socket = args.get("socket").map(PathBuf::from);
+            commands::cmd_serve(train_n, seed, policy,
+                                socket.as_deref())?;
+        }
+        "serve-bench" => {
+            let train_n = args.usize_or("train-n", 4000)?;
+            let nq = args.usize_or("queries", 512)?;
+            let seed = args.u64_or("seed", 7)?;
+            let batches = args.usize_list_or("batches", &[1, 8, 64])?;
+            let out = args.get("out-json").map(PathBuf::from);
+            commands::cmd_serve_bench(train_n, nq, seed, &batches,
+                                      out.as_deref())?;
+        }
         "info" => {
             let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
             commands::cmd_info(&dir)?;
@@ -244,6 +273,19 @@ SUBCOMMANDS
                register-blocked matmul (scalar/SSE2/AVX2 dispatch;
                bit-parity with the naive oracle asserted pre-timing)
                  --sizes 256,512 --out-json BENCH_pack.json
+  serve        Resident serving engine: fit once, then serve JSONL
+               queries from stdin (or --socket PATH, unix) coalesced
+               into micro-batches; flush on --max-batch or
+               --max-wait-us, shed past --queue-cap with an explicit
+               overloaded reply; replies are bit-identical to
+               single-query predict
+                 --train-n 4000 --max-batch 64 --max-wait-us 2000
+                 --queue-cap 1024 --socket /tmp/locality-ml.sock
+  serve-bench  Serving engine latency/throughput curve: saturated
+               replay at several batch sizes (batch=1 baseline;
+               parity vs single-query predict asserted pre-timing)
+                 --train-n 4000 --queries 512 --batches 1,8,64
+                 --out-json BENCH_serve.json
   info         List compiled artifacts  [--artifacts artifacts]
 
 Common options: --config experiment.toml --artifacts artifacts --seed N

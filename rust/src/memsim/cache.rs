@@ -13,15 +13,20 @@ use super::trace::{Access, Sink};
 /// Configuration of one cache level.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LevelConfig {
+    /// Level label (e.g. `"L1d"`).
     pub name: &'static str,
+    /// Total capacity in bytes.
     pub size_bytes: u64,
+    /// Associativity (lines per set).
     pub ways: u64,
+    /// Cache-line size in bytes (must be a power of two).
     pub line_bytes: u64,
     /// Latency charged when the access *hits* at this level.
     pub latency_cycles: u64,
 }
 
 impl LevelConfig {
+    /// Number of sets this configuration implies.
     pub fn sets(&self) -> u64 {
         self.size_bytes / (self.ways * self.line_bytes)
     }
@@ -81,9 +86,13 @@ impl Level {
 /// Per-level statistics snapshot.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LevelStats {
+    /// Level label, copied from its [`LevelConfig`].
     pub name: &'static str,
+    /// Accesses that hit at this level.
     pub hits: u64,
+    /// Accesses that missed at this level.
     pub misses: u64,
+    /// `misses / (hits + misses)` (0 when untouched).
     pub miss_rate: f64,
 }
 
@@ -113,12 +122,17 @@ pub fn westmere_levels() -> [LevelConfig; 3] {
 /// A full hierarchy: ordered levels + DRAM latency behind them.
 pub struct Hierarchy {
     levels: Vec<Level>,
+    /// Cycles charged when every level misses (DRAM).
     pub mem_latency: u64,
+    /// Total accesses simulated so far.
     pub accesses: u64,
+    /// Total cycles charged so far.
     pub cycles: u64,
 }
 
 impl Hierarchy {
+    /// Build a hierarchy from ordered level configs (fastest first) plus
+    /// the DRAM latency behind them.
     pub fn new(levels: Vec<LevelConfig>, mem_latency: u64) -> Self {
         Self {
             levels: levels.into_iter().map(Level::new).collect(),
@@ -177,6 +191,7 @@ impl Hierarchy {
         cost
     }
 
+    /// Per-level hit/miss snapshot, fastest level first.
     pub fn stats(&self) -> Vec<LevelStats> {
         self.levels
             .iter()

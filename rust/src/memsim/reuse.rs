@@ -124,6 +124,7 @@ pub struct ReuseProfiler {
     fenwick: Fenwick,
     last_time: HashMap<u64, usize>,
     time: usize,
+    /// Running results (histogram, cold count, total).
     pub report: ReuseReport,
 }
 
@@ -134,6 +135,7 @@ impl Default for ReuseProfiler {
 }
 
 impl ReuseProfiler {
+    /// Fresh profiler with an empty report.
     pub fn new() -> Self {
         Self {
             // Small initial capacity: growth (rebuild) is exercised by any
@@ -169,6 +171,7 @@ impl ReuseProfiler {
         dist
     }
 
+    /// Consume the profiler and return the accumulated report.
     pub fn finish(self) -> ReuseReport {
         self.report
     }

@@ -10,23 +10,31 @@
 /// read or also written to?") needs the distinction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Kind {
+    /// A load.
     Read,
+    /// A store.
     Write,
 }
 
 /// One memory touch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Access {
+    /// Byte address touched.
     pub addr: u64,
+    /// Load or store.
     pub kind: Kind,
 }
 
 /// A named, contiguous array of `elems` elements of `elem_size` bytes.
 #[derive(Debug, Clone)]
 pub struct Region {
+    /// Human-readable label used in trace attribution.
     pub name: String,
+    /// Byte address of element 0.
     pub base: u64,
+    /// Number of elements.
     pub elems: u64,
+    /// Bytes per element.
     pub elem_size: u64,
 }
 
@@ -45,10 +53,12 @@ impl Region {
         self.at(row * cols + col)
     }
 
+    /// Does `addr` fall inside this region?
     pub fn contains(&self, addr: u64) -> bool {
         addr >= self.base && addr < self.base + self.elems * self.elem_size
     }
 
+    /// Total footprint in bytes.
     pub fn size_bytes(&self) -> u64 {
         self.elems * self.elem_size
     }
@@ -58,6 +68,7 @@ impl Region {
 #[derive(Debug, Default)]
 pub struct AddressSpace {
     next: u64,
+    /// Every region allocated so far, in allocation order.
     pub regions: Vec<Region>,
 }
 
@@ -66,11 +77,13 @@ pub struct AddressSpace {
 const REGION_ALIGN: u64 = 4096;
 
 impl AddressSpace {
+    /// Fresh address space (allocation starts one page above zero).
     pub fn new() -> Self {
         // Start away from address 0 so "null-ish" bugs are loud.
         Self { next: REGION_ALIGN, regions: Vec::new() }
     }
 
+    /// Allocate a page-aligned region of `elems` × `elem_size` bytes.
     pub fn alloc(&mut self, name: &str, elems: u64, elem_size: u64) -> Region {
         let region = Region {
             name: name.to_string(),
@@ -94,12 +107,15 @@ impl AddressSpace {
 /// Anything that consumes a stream of accesses: the profiler, the cache
 /// hierarchy, or a plain recording.
 pub trait Sink {
+    /// Consume one access.
     fn touch(&mut self, access: Access);
 
+    /// Convenience: consume a load of `addr`.
     fn read(&mut self, addr: u64) {
         self.touch(Access { addr, kind: Kind::Read });
     }
 
+    /// Convenience: consume a store to `addr`.
     fn write(&mut self, addr: u64) {
         self.touch(Access { addr, kind: Kind::Write });
     }
@@ -108,18 +124,22 @@ pub trait Sink {
 /// In-memory recording of a full trace.
 #[derive(Debug, Default)]
 pub struct VecTrace {
+    /// The recorded accesses, in program order.
     pub accesses: Vec<Access>,
 }
 
 impl VecTrace {
+    /// Empty recording.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Number of recorded accesses.
     pub fn len(&self) -> usize {
         self.accesses.len()
     }
 
+    /// True if nothing has been recorded.
     pub fn is_empty(&self) -> bool {
         self.accesses.is_empty()
     }
@@ -150,7 +170,9 @@ impl Sink for VecTrace {
 
 /// Fan an access stream out to two sinks at once (e.g. profiler + cache).
 pub struct Tee<'a, A: Sink, B: Sink> {
+    /// First downstream sink.
     pub a: &'a mut A,
+    /// Second downstream sink.
     pub b: &'a mut B,
 }
 

@@ -8,20 +8,24 @@ use std::fmt::Write as _;
 /// A per-epoch training/validation curve (Fig 5's series).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct LossCurve {
+    /// Series label (e.g. `"adam-w2"`).
     pub label: String,
     /// (epoch, train loss, validation loss)
     pub points: Vec<(usize, f64, f64)>,
 }
 
 impl LossCurve {
+    /// Start an empty curve with a series label.
     pub fn new(label: impl Into<String>) -> Self {
         Self { label: label.into(), points: Vec::new() }
     }
 
+    /// Append one epoch's (train, validation) losses.
     pub fn push(&mut self, epoch: usize, train: f64, val: f64) {
         self.points.push((epoch, train, val));
     }
 
+    /// Validation loss of the last recorded epoch, if any.
     pub fn final_val(&self) -> Option<f64> {
         self.points.last().map(|&(_, _, v)| v)
     }
@@ -49,12 +53,16 @@ impl LossCurve {
 /// A markdown table builder that prints paper-style result tables.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Table caption (rendered as a `###` heading; empty = none).
     pub title: String,
+    /// Column headers; every row must match this width.
     pub headers: Vec<String>,
+    /// Row cells, already stringified.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Start a table with a title and column headers.
     pub fn new(title: impl Into<String>,
                headers: &[&str]) -> Self {
         Self {
@@ -64,6 +72,7 @@ impl Table {
         }
     }
 
+    /// Append a row (panics if its width differs from the headers).
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(),
             "row width != header width");
@@ -71,6 +80,7 @@ impl Table {
         self
     }
 
+    /// Append a row of displayable values (stringified here).
     pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display])
         -> &mut Self {
         let cells: Vec<String> = cells.iter().map(|c| c.to_string())
@@ -117,18 +127,22 @@ pub struct Counters {
 }
 
 impl Counters {
+    /// Empty counter set.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add `delta` to `name` (creating it at zero first).
     pub fn add(&mut self, name: &str, delta: u64) {
         *self.map.entry(name.to_string()).or_insert(0) += delta;
     }
 
+    /// Current value of `name` (zero if never touched).
     pub fn get(&self, name: &str) -> u64 {
         self.map.get(name).copied().unwrap_or(0)
     }
 
+    /// Iterate counters in name order.
     pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
         self.map.iter().map(|(k, &v)| (k.as_str(), v))
     }

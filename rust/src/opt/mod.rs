@@ -11,13 +11,18 @@
 /// The Fig 5 optimizer family.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OptimizerKind {
+    /// Plain stochastic gradient descent.
     Sgd,
+    /// SGD with classical momentum (μ = 0.9).
     Momentum,
+    /// Adam with the standard (β₁, β₂, ε) and bias correction.
     Adam,
+    /// Adagrad with per-parameter accumulated squared gradients.
     Adagrad,
 }
 
 impl OptimizerKind {
+    /// Every optimizer in the Fig 5 sweep, in report order.
     pub const ALL: [OptimizerKind; 4] = [
         OptimizerKind::Sgd,
         OptimizerKind::Momentum,
@@ -25,6 +30,7 @@ impl OptimizerKind {
         OptimizerKind::Adagrad,
     ];
 
+    /// Stable lower-case name (CLI/report token).
     pub fn name(&self) -> &'static str {
         match self {
             OptimizerKind::Sgd => "sgd",
@@ -34,6 +40,7 @@ impl OptimizerKind {
         }
     }
 
+    /// Inverse of [`OptimizerKind::name`]; `None` for unknown tokens.
     pub fn parse(s: &str) -> Option<Self> {
         Self::ALL.iter().copied().find(|k| k.name() == s)
     }
@@ -91,7 +98,9 @@ enum State {
 
 /// A stateful optimizer over a flat parameter vector.
 pub struct Optimizer {
+    /// Which update rule this state implements.
     pub kind: OptimizerKind,
+    /// Learning rate applied on every [`Optimizer::step`].
     pub lr: f32,
     state: State,
 }

@@ -17,14 +17,18 @@ use super::tensor::HostTensor;
 
 /// A device-resident input (uploaded once, reused across executions).
 pub struct DeviceTensor {
+    /// The device-resident PJRT buffer.
     pub buffer: xla::PjRtBuffer,
+    /// Dimensions the buffer was uploaded with (validated on use).
     pub spec_dims: Vec<usize>,
 }
 
 /// Inputs to an execution: host tensors are uploaded per call, device
 /// tensors are already resident.
 pub enum Input<'a> {
+    /// A host tensor uploaded for this call only.
     Host(&'a HostTensor),
+    /// An already-uploaded tensor reused across calls.
     Device(&'a DeviceTensor),
     /// Borrowed f32 slice + dims: the zero-copy-on-the-rust-side hot path
     /// (one host→device copy total; no clone, no Literal intermediate).
@@ -34,8 +38,11 @@ pub enum Input<'a> {
 /// Execution statistics (the L3 hot-path observables for E9).
 #[derive(Debug, Default, Clone)]
 pub struct EngineStats {
+    /// Artifact executions completed.
     pub executions: u64,
+    /// Host→device uploads performed via [`Engine::upload`].
     pub uploads: u64,
+    /// Wall-clock seconds spent inside artifact execution.
     pub exec_seconds: f64,
 }
 
@@ -45,6 +52,7 @@ pub struct Engine {
     manifest: Manifest,
     dir: PathBuf,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Running execution/upload counters (see [`EngineStats`]).
     pub stats: EngineStats,
 }
 
@@ -65,14 +73,17 @@ impl Engine {
         })
     }
 
+    /// PJRT platform name (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// The parsed artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Interface of artifact `name` (error if absent from the manifest).
     pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
         self.manifest.get(name)
     }

@@ -20,7 +20,9 @@ use anyhow::{bail, Context, Result};
 /// Element types the artifacts use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit IEEE float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -37,15 +39,19 @@ impl DType {
 /// Shape + dtype of one artifact input or output.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Element type.
     pub dtype: DType,
+    /// Dimensions, outermost first (empty = rank-0 scalar).
     pub dims: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn elems(&self) -> usize {
         self.dims.iter().product()
     }
 
+    /// True for rank-0 (scalar) specs.
     pub fn is_scalar(&self) -> bool {
         self.dims.is_empty()
     }
@@ -73,18 +79,23 @@ impl TensorSpec {
 /// One artifact's interface.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactSpec {
+    /// Artifact name (the manifest key and `.hlo` file stem).
     pub name: String,
+    /// Input tensor interfaces, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor interfaces, in result order.
     pub outputs: Vec<TensorSpec>,
 }
 
 /// The parsed manifest: artifact name -> interface.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
+    /// Artifact interfaces, keyed by artifact name.
     pub artifacts: HashMap<String, ArtifactSpec>,
 }
 
 impl Manifest {
+    /// Parse manifest text (see the module header for the line grammar).
     pub fn parse(text: &str) -> Result<Self> {
         let mut artifacts = HashMap::new();
         for (lineno, line) in text.lines().enumerate() {
@@ -110,12 +121,14 @@ impl Manifest {
         Ok(Self { artifacts })
     }
 
+    /// Read and parse `manifest.txt`.
     pub fn load(path: &Path) -> Result<Self> {
         let text = fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         Self::parse(&text)
     }
 
+    /// Interface of artifact `name` (error if absent).
     pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts.get(name)
             .with_context(|| format!("artifact `{name}` not in manifest"))

@@ -8,27 +8,43 @@ use super::manifest::{DType, TensorSpec};
 /// A host-side tensor (row-major).
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostTensor {
-    F32 { dims: Vec<usize>, data: Vec<f32> },
-    I32 { dims: Vec<usize>, data: Vec<i32> },
+    /// A float tensor: row-major `data` of shape `dims`.
+    F32 {
+        /// Dimensions, outermost first (empty = rank-0 scalar).
+        dims: Vec<usize>,
+        /// Row-major payload, `dims.iter().product()` elements.
+        data: Vec<f32>,
+    },
+    /// An integer tensor: row-major `data` of shape `dims`.
+    I32 {
+        /// Dimensions, outermost first (empty = rank-0 scalar).
+        dims: Vec<usize>,
+        /// Row-major payload, `dims.iter().product()` elements.
+        data: Vec<i32>,
+    },
 }
 
 impl HostTensor {
+    /// Build an f32 tensor (panics on a dims/data length mismatch).
     pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(dims.iter().product::<usize>(), data.len(),
             "dims {dims:?} vs {} elements", data.len());
         HostTensor::F32 { dims, data }
     }
 
+    /// Build an i32 tensor (panics on a dims/data length mismatch).
     pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
         assert_eq!(dims.iter().product::<usize>(), data.len(),
             "dims {dims:?} vs {} elements", data.len());
         HostTensor::I32 { dims, data }
     }
 
+    /// Rank-0 f32 scalar.
     pub fn scalar_f32(v: f32) -> Self {
         HostTensor::F32 { dims: vec![], data: vec![v] }
     }
 
+    /// Tensor dimensions, outermost first.
     pub fn dims(&self) -> &[usize] {
         match self {
             HostTensor::F32 { dims, .. } | HostTensor::I32 { dims, .. } =>
@@ -36,6 +52,7 @@ impl HostTensor {
         }
     }
 
+    /// Element type.
     pub fn dtype(&self) -> DType {
         match self {
             HostTensor::F32 { .. } => DType::F32,
@@ -43,6 +60,7 @@ impl HostTensor {
         }
     }
 
+    /// Total element count.
     pub fn elems(&self) -> usize {
         self.dims().iter().product()
     }
@@ -55,6 +73,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow as i32 slice (error on f32 tensors).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             HostTensor::I32 { data, .. } => Ok(data),

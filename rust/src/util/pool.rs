@@ -44,6 +44,7 @@ pub struct Pool {
 }
 
 impl Pool {
+    /// Spawn a pool with `threads` persistent workers (must be > 0).
     pub fn new(threads: usize) -> Self {
         assert!(threads > 0);
         let (tx, rx) = mpsc::channel::<Job>();

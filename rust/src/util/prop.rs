@@ -10,10 +10,12 @@ use super::rng::Rng;
 /// Deterministic case generator handed to each property execution.
 pub struct Gen {
     rng: Rng,
+    /// The seed this case was derived from — report it to replay the case.
     pub seed: u64,
 }
 
 impl Gen {
+    /// Build the generator for one property case from its seed.
     pub fn new(seed: u64) -> Self {
         Self { rng: Rng::new(seed), seed }
     }
@@ -24,18 +26,22 @@ impl Gen {
         lo + self.rng.below(hi - lo + 1)
     }
 
+    /// Uniform `u64` over the full range.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()
     }
 
+    /// Uniform `f32` in `[lo, hi)`.
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         lo + self.rng.f32() * (hi - lo)
     }
 
+    /// Standard normal sample.
     pub fn normal(&mut self) -> f32 {
         self.rng.normal()
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.bernoulli(0.5)
     }
@@ -51,6 +57,7 @@ impl Gen {
         self.vec(n, |g| g.f32_in(-s, s))
     }
 
+    /// In-place Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         self.rng.shuffle(xs);
     }

@@ -12,10 +12,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seed the expander directly with a raw `u64`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next pseudo-random 64-bit value.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -41,6 +43,7 @@ impl Rng {
         }
     }
 
+    /// Next pseudo-random 64-bit value.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]

@@ -10,18 +10,22 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Self { start: Instant::now() }
     }
 
+    /// Time elapsed since [`Stopwatch::start`] (or the last `restart`).
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// [`Stopwatch::elapsed`] as fractional seconds.
     pub fn elapsed_secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
 
+    /// Return the elapsed time and reset the start point to now.
     pub fn restart(&mut self) -> Duration {
         let e = self.elapsed();
         self.start = Instant::now();
@@ -32,14 +36,20 @@ impl Stopwatch {
 /// Simple summary statistics over a set of duration samples (seconds).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Stats {
+    /// Number of samples summarized.
     pub n: usize,
+    /// Arithmetic mean, in seconds.
     pub mean: f64,
+    /// Population standard deviation, in seconds.
     pub stddev: f64,
+    /// Smallest sample, in seconds.
     pub min: f64,
+    /// Largest sample, in seconds.
     pub max: f64,
 }
 
 impl Stats {
+    /// Summarize a non-empty set of samples (seconds).
     pub fn from_samples(samples: &[f64]) -> Self {
         assert!(!samples.is_empty(), "no samples");
         let n = samples.len();

@@ -403,6 +403,87 @@ fn swsgd_linear_grad_artifact_matches_logistic_math() {
 // dataset round-trip feeds the runtime without copies going stale
 // ---------------------------------------------------------------------------
 
+// ---------------------------------------------------------------------------
+// serving engine: backpressure sheds visibly, answers stay bit-identical
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serve_engine_sheds_under_load_and_stays_bit_identical() {
+    use locality_ml::coordinator::{
+        MultiClassifier, ServeEngine, ServeReply, ServeRequest,
+    };
+    use locality_ml::kernels::{
+        DistanceAlgo, ExecPolicy, Schedule, ServePolicy,
+    };
+
+    let (train, test) = chembl_like(280, 33).split(216);
+    let d = test.d;
+    let oracle = MultiClassifier::fit(&train)
+        .with_dist_algo(DistanceAlgo::Exact);
+    // the adversarial execution cell: 4 threads, work stealing — the
+    // serving contract says none of it may show up in the bits
+    let pol = ExecPolicy::default()
+        .with_threads(4)
+        .with_schedule(Schedule::Stealing)
+        .with_algo(DistanceAlgo::Exact);
+    let mut eng = ServeEngine::new(
+        MultiClassifier::fit(&train).with_policy(&pol),
+        ServePolicy::auto()
+            .with_max_batch(5)
+            .with_max_wait_us(1_000_000)
+            .with_queue_cap(8),
+    );
+    let mut served: Vec<Option<i32>> = vec![None; test.n];
+    let mut record = |replies: Vec<(usize, ServeReply)>,
+                      served: &mut Vec<Option<i32>>| {
+        for (_, r) in replies {
+            match r {
+                ServeReply::Predictions { id, vote, .. } => {
+                    assert!(served[id as usize].replace(vote).is_none(),
+                        "query {id} answered twice");
+                }
+                other => panic!("unexpected batch reply {other:?}"),
+            }
+        }
+    };
+    // saturate: 13 arrivals per poll against queue_cap 8 — the bounded
+    // queue must shed the overflow with explicit overloaded replies
+    let mut shed = 0usize;
+    for q in 0..test.n {
+        let req = ServeRequest {
+            id: q as u64,
+            x: test.features[q * d..(q + 1) * d].to_vec(),
+        };
+        match eng.offer(0, req, 0) {
+            None => {}
+            Some((_, ServeReply::Overloaded { id })) => {
+                assert_eq!(id, q as u64);
+                shed += 1;
+            }
+            Some((_, other)) => {
+                panic!("unexpected immediate reply {other:?}");
+            }
+        }
+        if q % 13 == 0 {
+            let r = eng.poll(0);
+            record(r, &mut served);
+        }
+    }
+    let r = eng.drain(1_000_000);
+    record(r, &mut served);
+    assert!(shed > 0, "saturation never tripped the bounded queue");
+    let answered = served.iter().filter(|s| s.is_some()).count();
+    assert_eq!(answered + shed, test.n,
+        "every query needs exactly one disposition");
+    assert_eq!(eng.stats().queue.shed, shed as u64);
+    for q in 0..test.n {
+        if let Some(vote) = served[q] {
+            assert_eq!(vote, oracle.predict(test.row(q)).vote[0],
+                "served query {q} diverged from single-query predict");
+        }
+    }
+}
+
 #[test]
 fn dataset_io_roundtrip_preserves_learner_results() {
     let ds = chembl_like(600, 41);

@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""CI gate for the resident serving engine (ISSUE 7):
+
+the whole point of micro-batching is that a coalesced batch amortizes
+one pass over the resident train tiles, so (a) the largest measured
+batch size must deliver >= 2x the throughput of the batch=1 (no
+coalescing) baseline, and (b) the p99 end-to-end latency of EVERY
+batch setting must stay under the knob-derived bound
+`max_wait_us + LATENCY_SLACK * compute_us_per_batch` — a query can
+legitimately wait out the coalescing window and then ride one batch's
+compute, but it must never be stranded behind an unbounded pile-up
+(that is what the bounded queue's explicit overloaded shed is for).
+
+Prediction parity (serve replies bit-identical to one-query-at-a-time
+predict) is asserted in-process by the bench itself before anything is
+timed, so this script only gates the clock.
+
+Usage: check_bench_serve.py [BENCH_serve.json]
+"""
+import sys
+
+from bench_check import CheckFailure, load_doc, require_number
+
+GATE_SPEEDUP = 2.0
+# p99 allowance in units of mean batch compute time: the oldest query
+# in a batch waits for the window plus (pipelined behind the previous
+# batch) a few batch computes. 8x is far above steady state and far
+# below a pathological stall.
+LATENCY_SLACK = 8.0
+
+
+def check(path):
+    doc = load_doc(path)
+    results = doc.get("results", [])
+    if not results:
+        raise CheckFailure(f"no batch records in {path}")
+    knobs = doc.get("knobs")
+    if not isinstance(knobs, dict):
+        raise CheckFailure(f"{path}: missing `knobs` object")
+    max_wait_us = require_number(knobs, "max_wait_us", "knobs")
+
+    base_qps = None
+    best = None  # (batch, qps)
+    for i, record in enumerate(results):
+        context = f"results[{i}]"
+        batch = require_number(record, "batch", context)
+        if batch < 1 or batch != int(batch):
+            raise CheckFailure(
+                f"{context}: `batch` must be a positive integer, got "
+                f"{batch!r}")
+        qps = require_number(record, "throughput_qps", context)
+        p50 = require_number(record, "p50_us", context)
+        p99 = require_number(record, "p99_us", context)
+        compute = require_number(record, "compute_us_per_batch", context)
+        if qps <= 0:
+            raise CheckFailure(f"{context}: non-positive throughput")
+        if p99 < p50:
+            raise CheckFailure(f"{context}: p99 {p99} below p50 {p50}")
+        bound = max_wait_us + LATENCY_SLACK * compute
+        print(f"  batch={int(batch)}: {qps:.0f} qps, p50={p50:.0f}us "
+              f"p99={p99:.0f}us (bound {bound:.0f}us), "
+              f"compute/batch={compute:.0f}us")
+        if p99 > bound:
+            raise CheckFailure(
+                f"{context}: p99 {p99:.0f}us exceeds the knob bound "
+                f"{bound:.0f}us (max_wait_us={max_wait_us:.0f} + "
+                f"{LATENCY_SLACK} x compute {compute:.0f}us)")
+        if batch == 1:
+            base_qps = qps
+        if best is None or batch > best[0]:
+            best = (batch, qps)
+    if base_qps is None:
+        raise CheckFailure(f"no batch=1 baseline record in {path}")
+    if best[0] <= 1:
+        raise CheckFailure(
+            f"{path} has no coalesced record to gate (largest batch "
+            f"is {int(best[0])})")
+    ratio = best[1] / base_qps
+    print(f"batch={int(best[0])} throughput vs batch=1: {ratio:.2f}x "
+          f"(gate: >= {GATE_SPEEDUP}x)")
+    if ratio < GATE_SPEEDUP:
+        raise CheckFailure(
+            f"micro-batching gate missed ({ratio:.2f}x < "
+            f"{GATE_SPEEDUP}x at batch={int(best[0])})")
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_serve.json"
+    try:
+        check(path)
+    except CheckFailure as e:
+        print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
