@@ -203,7 +203,8 @@ pub fn cmd_audit() -> Result<Table> {
         table.row(&["NN fwd weights".into(),
                     "distance = neurons x weights".into(),
                     format!("max distance {}",
-                            r.histogram.keys().max().unwrap()),
+                            r.histogram.keys().copied().max()
+                                .unwrap_or(0)),
                     verdict(ok)]);
     }
     // NN backward: the complement of forward (Alg 15).
@@ -218,7 +219,8 @@ pub fn cmd_audit() -> Result<Table> {
         table.row(&["NN bwd weights".into(),
                     "complement of forward".into(),
                     format!("max distance {}",
-                            r.histogram.keys().max().unwrap()),
+                            r.histogram.keys().copied().max()
+                                .unwrap_or(0)),
                     verdict(ok)]);
     }
     // Cross-validation: fold reuse carried at loop level 1.

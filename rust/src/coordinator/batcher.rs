@@ -39,6 +39,9 @@ pub struct EpochBatcher {
 impl EpochBatcher {
     /// Batcher over `[0, n)` in shuffled `batch`-sized chunks.
     pub fn new(n: usize, batch: usize, seed: u64) -> Self {
+        // locality-lint: allow(panic-in-serve-path): training-side
+        // epoch batching, constructed before serving ever starts — the
+        // request path runs through MicroBatchQueue below instead
         assert!(batch > 0 && batch <= n, "batch {batch} vs n {n}");
         let mut rng = Rng::new(seed);
         let mut order: Vec<usize> = (0..n).collect();
@@ -93,9 +96,14 @@ impl BatchBuffers {
     /// cached window) into the staging buffers. Returns the point count.
     /// No allocation.
     pub fn gather(&mut self, ds: &Dataset, indices: &[usize]) -> usize {
+        // locality-lint: allow(panic-in-serve-path): training-side
+        // gather invariants (sized at fit time), never reached from
+        // the serve request path
         assert!(indices.len() <= self.capacity_points,
             "{} > capacity {}", indices.len(), self.capacity_points);
+        // locality-lint: allow(panic-in-serve-path): fit-time shapes
         assert_eq!(ds.d, self.d);
+        // locality-lint: allow(panic-in-serve-path): fit-time shapes
         assert_eq!(ds.n_classes, self.classes);
         let n = indices.len();
         self.y_onehot[..n * self.classes].fill(0.0);

@@ -473,9 +473,6 @@ pub fn silverman_bandwidth(ds: &Dataset) -> f32 {
 
 #[cfg(test)]
 mod tests {
-    // the deprecated tuple entries stay under test: their parity with
-    // sweep_shared_exec is part of the migration contract
-    #![allow(deprecated)]
     use super::*;
     use crate::data::synth::chembl_like;
     use crate::data::synth::gaussian_mixture;
@@ -490,6 +487,29 @@ mod tests {
         });
         let folds = Folds::split(ds.n, 4, 5);
         (ds, folds)
+    }
+
+    /// A geometry whose total sweep distance work clears the exec
+    /// entry's [`MIN_PAR_WORK`] gate, so `sweep_shared_exec` with a
+    /// pinned thread count actually fans the splits out over the pool
+    /// instead of resolving to the inline path (which is what every
+    /// `small()`-sized sweep does).
+    fn fan_out() -> (Dataset, Folds) {
+        let ds = gaussian_mixture(MixtureSpec {
+            n: 720, d: 6, classes: 2, separation: 0.8, noise: 1.0,
+            seed: 9,
+        });
+        let folds = Folds::split(ds.n, 4, 17);
+        (ds, folds)
+    }
+
+    fn sweep_work(ds: &Dataset, folds: &Folds) -> usize {
+        (0..folds.k())
+            .map(|f| {
+                let test = folds.test_indices(f).len();
+                test * (ds.n - test) * ds.d
+            })
+            .sum()
     }
 
     #[test]
@@ -527,15 +547,26 @@ mod tests {
 
     #[test]
     fn parallel_sweep_is_bit_identical_to_sequential_shared() {
-        let (ds, folds) = small();
-        let ks = [1usize, 3, 5, 9];
-        let hs = [0.5f32, 2.0, 8.0];
+        // The exec-spelled parity suite: a geometry over the
+        // MIN_PAR_WORK gate, so pinned thread counts really fan out.
+        let (ds, folds) = fan_out();
+        assert!(
+            sweep_work(&ds, &folds)
+                >= crate::kernels::parallel::MIN_PAR_WORK,
+            "fan_out() no longer clears the exec work gate — grow it \
+             or this test silently stops exercising the pool");
+        let ks = [1usize, 5];
+        let hs = [0.5f32, 8.0];
         let (sk, sb) = sweep_shared(&ds, &folds, &ks, &hs);
-        for threads in [1usize, 2, 4, 7] {
+        for threads in [2usize, 7] {
             for sched in [Schedule::Static, Schedule::Stealing,
                           Schedule::Auto] {
-                let (pk, pb) = sweep_shared_par(&ds, &folds, &ks, &hs,
-                                                threads, sched);
+                let pol = ExecPolicy::default()
+                    .with_threads(threads)
+                    .with_schedule(sched)
+                    .with_algo(DistanceAlgo::Exact);
+                let (pk, pb) =
+                    sweep_shared_exec(&ds, &folds, &ks, &hs, &pol);
                 assert_eq!(pk, sk,
                     "k sweep diverged at {threads} threads under \
                      {sched:?}");
@@ -544,20 +575,29 @@ mod tests {
                      under {sched:?}");
             }
         }
-        // sweep_shared_auto follows the session dist-algo policy — the
-        // first env knob that legitimately changes output bits (unlike
-        // threads/schedule, which are bit-invariant by contract) — so
-        // compare it against the engine run with the same resolved
-        // policy rather than against the Exact oracle unconditionally.
+        // The fully-Auto policy follows the session dist-algo knob —
+        // the first env knob that legitimately changes output bits
+        // (unlike threads/schedule, which are bit-invariant by
+        // contract) — so compare it against the engine run with the
+        // same resolved formulation rather than against the Exact
+        // oracle unconditionally.
+        let (ds, folds) = small();
         let algo = crate::kernels::distance::default_dist_algo();
-        let want = sweep_shared_algo(&ds, &folds, &ks, &hs, 1,
-                                     Schedule::Static, algo);
-        let got = sweep_shared_auto(&ds, &folds, &ks, &hs);
+        let want = sweep_shared_exec(
+            &ds, &folds, &ks, &hs,
+            &ExecPolicy::sequential().with_algo(algo));
+        let got = sweep_shared_exec(&ds, &folds, &ks, &hs,
+                                    &ExecPolicy::default());
         assert_eq!(got, want,
             "auto sweep diverged from its resolved-policy engine run");
     }
 
     #[test]
+    // The ONLY remaining deprecated callers in this suite: tuple↔exec
+    // parity is the migration contract itself, and the tuple entries
+    // skip the exec work gate, so this test is also what pins the
+    // pool at forced thread counts on small geometries.
+    #[allow(deprecated)]
     fn exec_engine_matches_the_tuple_entries_bit_for_bit() {
         // The api_redesign contract: the ExecPolicy entry is the same
         // engine as the deprecated tuple wrappers. The sweep is
@@ -609,8 +649,17 @@ mod tests {
             let want = sweep_shared(&ds, &folds, &ks, &hs);
             for threads in [2usize, 3, 5] {
                 for sched in [Schedule::Static, Schedule::Stealing] {
-                    let got = sweep_shared_par(&ds, &folds, &ks, &hs,
-                                               threads, sched);
+                    // exec spelling: these geometries sit under the
+                    // work gate, so the pinned policy resolves to the
+                    // inline path — the assertion is that the entry
+                    // still reproduces the oracle bit for bit (forced
+                    // fan-out parity is pinned by the tuple test).
+                    let pol = ExecPolicy::default()
+                        .with_threads(threads)
+                        .with_schedule(sched)
+                        .with_algo(DistanceAlgo::Exact);
+                    let got = sweep_shared_exec(&ds, &folds, &ks, &hs,
+                                                &pol);
                     prop_assert!(got == want,
                         "parallel sweep diverged (k={k}, n={n}, \
                          threads={threads}, {sched:?})");
@@ -640,8 +689,12 @@ mod tests {
             let want = sweep_shared(&ds, &folds, &ks, &hs);
             for threads in [1usize, 2, 4, 7] {
                 for sched in [Schedule::Static, Schedule::Stealing] {
-                    let got = sweep_shared_par(&ds, &folds, &ks, &hs,
-                                               threads, sched);
+                    let pol = ExecPolicy::default()
+                        .with_threads(threads)
+                        .with_schedule(sched)
+                        .with_algo(DistanceAlgo::Exact);
+                    let got = sweep_shared_exec(&ds, &folds, &ks, &hs,
+                                                &pol);
                     prop_assert!(got == want,
                         "skewed sweep diverged (n={n}, \
                          threads={threads}, {sched:?})");
@@ -674,17 +727,26 @@ mod tests {
             let ks = [1usize, 3];
             let hs = [8.0f32];
             let before = norm_cache_builds();
-            let seq = sweep_shared_algo(&ds, &folds, &ks, &hs, 1,
-                                        Schedule::Static,
-                                        DistanceAlgo::Gemm);
+            let seq = sweep_shared_exec(
+                &ds, &folds, &ks, &hs,
+                &ExecPolicy::sequential()
+                    .with_algo(DistanceAlgo::Gemm));
             prop_assert!(norm_cache_builds() - before == 1,
                 "sequential gemm sweep built {} norm caches over {k} \
                  splits (want exactly 1)",
                 norm_cache_builds() - before);
+            // The pinned-4-thread policy goes through the same engine;
+            // the cache is built on the calling thread BEFORE the
+            // split fan-out, so exactly one build must land on this
+            // counter whether the work gate resolves the geometry to
+            // the pool or (as at these sizes) to the inline path.
             let before = norm_cache_builds();
-            let par = sweep_shared_algo(&ds, &folds, &ks, &hs, 4,
-                                        Schedule::Stealing,
-                                        DistanceAlgo::Gemm);
+            let par = sweep_shared_exec(
+                &ds, &folds, &ks, &hs,
+                &ExecPolicy::default()
+                    .with_threads(4)
+                    .with_schedule(Schedule::Stealing)
+                    .with_algo(DistanceAlgo::Gemm));
             prop_assert!(norm_cache_builds() - before == 1,
                 "parallel gemm sweep built {} norm caches on the \
                  calling thread (want exactly 1)",
@@ -700,18 +762,21 @@ mod tests {
         // For a FIXED formulation the split fan-out must stay
         // bit-identical — the gemm engine inherits the same merge
         // contract as the exact one.
-        let (ds, folds) = small();
-        let ks = [1usize, 3, 5];
+        let (ds, folds) = fan_out();
+        let ks = [1usize, 5];
         let hs = [0.5f32, 8.0];
-        let want = sweep_shared_algo(&ds, &folds, &ks, &hs, 1,
-                                     Schedule::Static,
-                                     DistanceAlgo::Gemm);
-        for threads in [2usize, 4, 7] {
+        let want = sweep_shared_exec(
+            &ds, &folds, &ks, &hs,
+            &ExecPolicy::sequential().with_algo(DistanceAlgo::Gemm));
+        for threads in [2usize, 7] {
             for sched in [Schedule::Static, Schedule::Stealing,
                           Schedule::Auto] {
-                let got = sweep_shared_algo(&ds, &folds, &ks, &hs,
-                                            threads, sched,
-                                            DistanceAlgo::Gemm);
+                let pol = ExecPolicy::default()
+                    .with_threads(threads)
+                    .with_schedule(sched)
+                    .with_algo(DistanceAlgo::Gemm);
+                let got = sweep_shared_exec(&ds, &folds, &ks, &hs,
+                                            &pol);
                 assert_eq!(got, want,
                     "gemm sweep diverged at {threads} threads under \
                      {sched:?}");
@@ -729,9 +794,9 @@ mod tests {
         let ks = [1usize, 3, 5, 9];
         let hs = [0.5f32, 2.0, 8.0];
         let (ek, eb) = sweep_shared(&ds, &folds, &ks, &hs);
-        let (gk, gb) = sweep_shared_algo(&ds, &folds, &ks, &hs, 1,
-                                         Schedule::Static,
-                                         DistanceAlgo::Gemm);
+        let (gk, gb) = sweep_shared_exec(
+            &ds, &folds, &ks, &hs,
+            &ExecPolicy::sequential().with_algo(DistanceAlgo::Gemm));
         assert_eq!(ek.distance_evals, gk.distance_evals);
         assert_eq!(eb.distance_evals, gb.distance_evals);
         for (e, g) in ek.accuracy.iter().zip(&gk.accuracy) {
@@ -756,8 +821,11 @@ mod tests {
         let (sk, _) = sweep_shared(&ds, &folds, &ks, &hs);
         let (nk, _) = sweep_naive(&ds, &folds, &ks, &hs);
         assert_eq!(sk.accuracy, nk.accuracy);
-        let (pk, _) = sweep_shared_par(&ds, &folds, &ks, &hs, 4,
-                                       Schedule::Stealing);
+        let pol = ExecPolicy::default()
+            .with_threads(4)
+            .with_schedule(Schedule::Stealing)
+            .with_algo(DistanceAlgo::Exact);
+        let (pk, _) = sweep_shared_exec(&ds, &folds, &ks, &hs, &pol);
         assert_eq!(pk, sk);
         assert!(sk.accuracy[0].is_finite());
     }
@@ -810,8 +878,10 @@ mod tests {
         let (nk, nb) = sweep_naive(&ds, &folds, &ks, &hs);
         assert_eq!(sk.accuracy, nk.accuracy);
         assert_eq!(sb.accuracy, nb.accuracy);
-        let (pk, pb) =
-            sweep_shared_par(&ds, &folds, &ks, &hs, 4, Schedule::Auto);
+        let pol = ExecPolicy::default()
+            .with_threads(4)
+            .with_algo(DistanceAlgo::Exact);
+        let (pk, pb) = sweep_shared_exec(&ds, &folds, &ks, &hs, &pol);
         assert_eq!((pk, pb), (sk, sb));
     }
 

@@ -9,6 +9,8 @@
 //! *every* member (reuse distance ≈ 0 for the point across members), and
 //! the two instance-based members share one distance pass (§5.2).
 
+use anyhow::Result;
+
 use crate::data::sampling::majority_vote;
 use crate::data::Dataset;
 use crate::kernels::{
@@ -148,6 +150,17 @@ impl MultiClassifier {
     /// single-thread scans at any thread count and under either
     /// schedule (and `--threads 1` is the PR-1 path exactly).
     pub fn predict(&self, rows: &[f32]) -> McsPredictions {
+        self.try_predict(rows)
+            // locality-lint: allow(panic-in-serve-path): one-shot
+            // CLI/bench entry — serving uses `try_predict_resident`
+            .expect("MCS members emit in-range class ids")
+    }
+
+    /// Fallible spelling of [`MultiClassifier::predict`]: member or
+    /// vote failures come back as errors instead of panics, so callers
+    /// on a no-death path (the serving engine) can turn them into
+    /// per-query error replies.
+    pub fn try_predict(&self, rows: &[f32]) -> Result<McsPredictions> {
         let nb = self.nb.predict(rows);
         // distance work = queries × train rows × features; tiny streams
         // stay on the sequential scan (no spawn overhead) and small
@@ -168,15 +181,15 @@ impl MultiClassifier {
         let (knn, prw) = joint_scan_exec(
             &self.train, rows, self.train.d, self.k, self.bandwidth,
             &tiles, &self.norms, &pol);
+        // every member argmaxes over 0..n_classes, so out-of-range
+        // class ids — the error majority_vote reports cleanly for
+        // external ensembles — cannot occur here; propagate anyway so
+        // a serving caller survives even an internal-contract bug
         let vote = majority_vote(
             &[nb.clone(), knn.clone(), prw.clone()],
             self.train.n_classes,
-        )
-        // every member argmaxes over 0..n_classes, so out-of-range
-        // class ids — the error majority_vote now reports cleanly for
-        // external ensembles — cannot occur here
-        .expect("MCS members emit in-range class ids");
-        McsPredictions { nb, knn, prw, vote }
+        )?;
+        Ok(McsPredictions { nb, knn, prw, vote })
     }
 
     /// Feature dimensionality the classifier was fitted on (queries
@@ -221,6 +234,19 @@ impl MultiClassifier {
     /// bits whether it travels alone or inside any batch.
     pub fn predict_resident(&self, rows: &[f32],
                             resident: &ResidentState) -> McsPredictions {
+        self.try_predict_resident(rows, resident)
+            // locality-lint: allow(panic-in-serve-path): parity-test/
+            // bench entry — the engine calls `try_predict_resident`
+            .expect("MCS members emit in-range class ids")
+    }
+
+    /// Fallible spelling of [`MultiClassifier::predict_resident`] —
+    /// the entry the serving dispatcher uses, so a vote failure
+    /// becomes per-query error replies instead of killing the
+    /// resident process.
+    pub fn try_predict_resident(&self, rows: &[f32],
+                                resident: &ResidentState)
+                                -> Result<McsPredictions> {
         let nb = self.nb.predict(rows);
         let (knn, prw) = joint_scan_exec_prepacked(
             &self.train, rows, self.train.d, self.k, self.bandwidth,
@@ -229,9 +255,8 @@ impl MultiClassifier {
         let vote = majority_vote(
             &[nb.clone(), knn.clone(), prw.clone()],
             self.train.n_classes,
-        )
-        .expect("MCS members emit in-range class ids");
-        McsPredictions { nb, knn, prw, vote }
+        )?;
+        Ok(McsPredictions { nb, knn, prw, vote })
     }
 }
 

@@ -22,6 +22,8 @@
 //! time would re-stream the training set per query (the learner-major
 //! pathology with queries in the learner role).
 
+use anyhow::{bail, Result};
+
 use crate::coordinator::mcs::{
     McsPredictions, MultiClassifier, ResidentState,
 };
@@ -165,20 +167,27 @@ impl BatchDispatcher {
     /// Run one coalesced batch (row-major `len·d` floats) through the
     /// resident configuration. Returns the per-query predictions and
     /// the batch's compute time in microseconds.
-    pub fn dispatch(&mut self, rows: &[f32]) -> (McsPredictions, u64) {
+    ///
+    /// The dispatcher sits on the serve request path, so contract
+    /// violations (ragged batches, member/vote failures) come back as
+    /// `Err` — the caller turns them into per-query error replies —
+    /// rather than panicking the resident process.
+    pub fn dispatch(&mut self, rows: &[f32])
+                    -> Result<(McsPredictions, u64)> {
         let d = self.mcs.dim();
-        assert!(d > 0 && rows.len() % d == 0,
-            "batch of {} floats is not a whole number of {d}-feature \
-             rows", rows.len());
+        if d == 0 || rows.len() % d != 0 {
+            bail!("batch of {} floats is not a whole number of \
+                   {d}-feature rows", rows.len());
+        }
         let n = rows.len() / d;
         let sw = Stopwatch::start();
-        let preds = self.mcs.predict_resident(rows, &self.resident);
+        let preds = self.mcs.try_predict_resident(rows, &self.resident)?;
         let us = sw.elapsed().as_micros() as u64;
         self.log.batches += 1;
         self.log.queries += n as u64;
         self.log.predict_us_total += us;
         self.log.largest_batch = self.log.largest_batch.max(n);
-        (preds, us)
+        Ok((preds, us))
     }
 }
 
@@ -245,9 +254,9 @@ mod tests {
         let expect = disp
             .classifier()
             .predict_resident(&test.features, disp.resident());
-        let (got, _) = disp.dispatch(&test.features);
+        let (got, _) = disp.dispatch(&test.features).unwrap();
         assert_eq!(got, expect, "dispatch is predict_resident + counters");
-        let (one, _) = disp.dispatch(test.row(0));
+        let (one, _) = disp.dispatch(test.row(0)).unwrap();
         assert_eq!(one.vote[0], expect.vote[0],
             "a single-query batch sees the same bits");
         let log = *disp.log();
@@ -260,12 +269,17 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "whole number")]
-    fn dispatcher_rejects_ragged_rows() {
+    fn dispatcher_rejects_ragged_rows_without_panicking() {
         use crate::data::synth::chembl_like;
         let (train, _) = chembl_like(64, 17).split(48);
         let mut disp = BatchDispatcher::new(MultiClassifier::fit(&train));
         let d = disp.classifier().dim();
-        disp.dispatch(&vec![0.0; d + 1]);
+        let err = disp.dispatch(&vec![0.0; d + 1]).unwrap_err();
+        assert!(err.to_string().contains("whole number"), "{err}");
+        assert_eq!(disp.log().batches, 0,
+            "a rejected batch must not count as dispatched");
+        // the dispatcher stays usable after a bad batch
+        let ok = disp.dispatch(&vec![0.0; d]);
+        assert!(ok.is_ok(), "dispatcher died after a rejected batch");
     }
 }

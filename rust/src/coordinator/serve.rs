@@ -291,6 +291,15 @@ impl ServeEngine {
                              req.x.len()),
             }));
         }
+        // reject poisoned payloads at admission: a NaN feature would
+        // silently corrupt distances for the whole coalesced batch
+        // (and the parser accepts "NaN"/"inf" spellings)
+        if let Some(pos) = req.x.iter().position(|v| !v.is_finite()) {
+            return Some((client, ServeReply::Error {
+                id: req.id,
+                msg: format!("non-finite feature at index {pos}"),
+            }));
+        }
         let pending = Pending { client, id: req.id, x: req.x };
         match self.queue.offer(pending, now_us) {
             Admission::Queued(_) => None,
@@ -346,6 +355,11 @@ impl ServeEngine {
 
     /// Dispatch one drained batch and account per-query latency
     /// (queue wait until `now_us` + the batch's compute time).
+    ///
+    /// A dispatch failure (an internal-contract bug — admission
+    /// already filtered malformed queries) must not kill the resident
+    /// process: every query in the batch gets an `Error` reply and the
+    /// engine keeps serving.
     fn run_batch(&mut self, now_us: u64) -> Vec<(usize, ServeReply)> {
         let batch = self.queue.drain_batch();
         if batch.is_empty() {
@@ -356,8 +370,35 @@ impl ServeEngine {
             self.staging.extend_from_slice(&p.x);
         }
         let rows = std::mem::take(&mut self.staging);
-        let (preds, predict_us) = self.dispatcher.dispatch(&rows);
+        let dispatched = self.dispatcher.dispatch(&rows);
         self.staging = rows;
+        let (preds, predict_us) = match dispatched {
+            Ok(out) => out,
+            Err(e) => {
+                let msg = format!("internal dispatch error: {e}");
+                return batch
+                    .into_iter()
+                    .map(|(p, _)| (p.client, ServeReply::Error {
+                        id: p.id,
+                        msg: msg.clone(),
+                    }))
+                    .collect();
+            }
+        };
+        if preds.vote.len() != batch.len() {
+            // defensive length re-check so the reply builder below can
+            // index without any panic path
+            let msg = format!(
+                "internal dispatch error: {} predictions for a batch \
+                 of {}", preds.vote.len(), batch.len());
+            return batch
+                .into_iter()
+                .map(|(p, _)| (p.client, ServeReply::Error {
+                    id: p.id,
+                    msg: msg.clone(),
+                }))
+                .collect();
+        }
         batch
             .into_iter()
             .enumerate()
@@ -485,6 +526,50 @@ mod tests {
         // malformed line: immediate error with id 0
         let e = eng.offer_line(0, "{nope", 0).unwrap();
         assert!(matches!(e.1, ServeReply::Error { id: 0, .. }));
+    }
+
+    #[test]
+    fn malformed_or_poisoned_queries_cannot_kill_the_engine() {
+        let (mcs, test) = fitted(23);
+        let d = mcs.dim();
+        let mut eng = ServeEngine::new(
+            mcs,
+            ServePolicy::auto()
+                .with_max_batch(2)
+                .with_max_wait_us(1_000)
+                .with_queue_cap(16),
+        );
+        // every hostile shape the transport can hand over: garbage
+        // lines, ragged rows, NaN/inf payloads — each one must come
+        // back as a routed reply, never a panic
+        let garbage = eng.offer_line(1, "][ not json", 0).unwrap();
+        assert!(matches!(garbage.1, ServeReply::Error { id: 0, .. }));
+        let ragged = eng.offer(2, req(10, &vec![0.0; d + 3]), 0).unwrap();
+        assert!(matches!(ragged.1, ServeReply::Error { id: 10, .. }));
+        let mut poisoned = test.row(0).to_vec();
+        poisoned[d / 2] = f32::NAN;
+        let nan = eng.offer(3, req(11, &poisoned), 0).unwrap();
+        match nan.1 {
+            ServeReply::Error { id, ref msg } => {
+                assert_eq!(id, 11);
+                assert!(msg.contains("non-finite"), "{msg}");
+            }
+            other => panic!("NaN query admitted: {other:?}"),
+        }
+        poisoned[d / 2] = f32::INFINITY;
+        let inf = eng.offer(3, req(12, &poisoned), 0).unwrap();
+        assert!(matches!(inf.1, ServeReply::Error { id: 12, .. }));
+        // nothing hostile was admitted…
+        assert_eq!(eng.stats().queue.admitted, 0);
+        // …and the engine still serves healthy traffic afterwards
+        assert!(eng.offer(4, req(20, test.row(0)), 0).is_none());
+        assert!(eng.offer(4, req(21, test.row(1)), 0).is_none());
+        let replies = eng.poll(0);
+        assert_eq!(replies.len(), 2, "engine dead after hostile input");
+        for (_, reply) in replies {
+            assert!(matches!(reply, ServeReply::Predictions { .. }),
+                "healthy query got {reply:?}");
+        }
     }
 
     #[test]

@@ -27,6 +27,82 @@ use super::dataset::Dataset;
 const MAGIC: &[u8; 4] = b"LMLD";
 const VERSION: u32 = 1;
 
+/// Values per staging chunk for the bulk payload converters: big
+/// enough that the `Read`/`Write` call overhead amortises, small
+/// enough that the chunk stays in L1.
+const CHUNK: usize = 2048;
+
+/// Serialize an `f32` slice as explicit little-endian bytes.
+///
+/// The old implementation viewed the slice as raw bytes
+/// (`from_raw_parts`), which silently wrote *native*-endian payloads —
+/// an `.lmld` file produced on a big-endian target was unreadable on
+/// x86 even though the header claimed little endian.  Converting
+/// value-by-value through `to_le_bytes` into a reusable staging chunk
+/// keeps the bulk-copy throughput without any `unsafe`.
+fn write_f32s<W: Write>(w: &mut W, vals: &[f32]) -> Result<()> {
+    let mut buf = [0u8; 4 * CHUNK];
+    for chunk in vals.chunks(CHUNK) {
+        let bytes = &mut buf[..4 * chunk.len()];
+        for (slot, v) in bytes.chunks_exact_mut(4).zip(chunk) {
+            slot.copy_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+/// Serialize an `i32` slice as explicit little-endian bytes.
+fn write_i32s<W: Write>(w: &mut W, vals: &[i32]) -> Result<()> {
+    let mut buf = [0u8; 4 * CHUNK];
+    for chunk in vals.chunks(CHUNK) {
+        let bytes = &mut buf[..4 * chunk.len()];
+        for (slot, v) in bytes.chunks_exact_mut(4).zip(chunk) {
+            slot.copy_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+/// Read `count` little-endian `f32`s.
+fn read_f32s<R: Read>(r: &mut R, count: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(count);
+    let mut buf = [0u8; 4 * CHUNK];
+    let mut left = count;
+    while left > 0 {
+        let take = left.min(CHUNK);
+        let bytes = &mut buf[..4 * take];
+        r.read_exact(bytes)?;
+        for slot in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([
+                slot[0], slot[1], slot[2], slot[3],
+            ]));
+        }
+        left -= take;
+    }
+    Ok(out)
+}
+
+/// Read `count` little-endian `i32`s.
+fn read_i32s<R: Read>(r: &mut R, count: usize) -> Result<Vec<i32>> {
+    let mut out = Vec::with_capacity(count);
+    let mut buf = [0u8; 4 * CHUNK];
+    let mut left = count;
+    while left > 0 {
+        let take = left.min(CHUNK);
+        let bytes = &mut buf[..4 * take];
+        r.read_exact(bytes)?;
+        for slot in bytes.chunks_exact(4) {
+            out.push(i32::from_le_bytes([
+                slot[0], slot[1], slot[2], slot[3],
+            ]));
+        }
+        left -= take;
+    }
+    Ok(out)
+}
+
 /// Write `ds` to `path` in `.lmld` format.
 pub fn write_dataset(ds: &Dataset, path: &Path) -> Result<()> {
     let file = File::create(path)
@@ -37,21 +113,8 @@ pub fn write_dataset(ds: &Dataset, path: &Path) -> Result<()> {
     w.write_all(&(ds.n as u64).to_le_bytes())?;
     w.write_all(&(ds.d as u64).to_le_bytes())?;
     w.write_all(&(ds.n_classes as u32).to_le_bytes())?;
-    // bulk-copy the feature matrix
-    let bytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(
-            ds.features.as_ptr() as *const u8,
-            ds.features.len() * 4,
-        )
-    };
-    w.write_all(bytes)?;
-    let lbytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(
-            ds.labels.as_ptr() as *const u8,
-            ds.labels.len() * 4,
-        )
-    };
-    w.write_all(lbytes)?;
+    write_f32s(&mut w, &ds.features)?;
+    write_i32s(&mut w, &ds.labels)?;
     w.flush()?;
     Ok(())
 }
@@ -80,22 +143,8 @@ pub fn read_dataset(path: &Path) -> Result<Dataset> {
     r.read_exact(&mut u32buf)?;
     let classes = u32::from_le_bytes(u32buf) as usize;
 
-    let mut features = vec![0f32; n * d];
-    let fbytes: &mut [u8] = unsafe {
-        std::slice::from_raw_parts_mut(
-            features.as_mut_ptr() as *mut u8,
-            features.len() * 4,
-        )
-    };
-    r.read_exact(fbytes)?;
-    let mut labels = vec![0i32; n];
-    let lbytes: &mut [u8] = unsafe {
-        std::slice::from_raw_parts_mut(
-            labels.as_mut_ptr() as *mut u8,
-            labels.len() * 4,
-        )
-    };
-    r.read_exact(lbytes)?;
+    let features = read_f32s(&mut r, n * d)?;
+    let labels = read_i32s(&mut r, n)?;
     Ok(Dataset::new(features, labels, d, classes))
 }
 
@@ -131,6 +180,21 @@ mod tests {
     #[test]
     fn missing_file_is_error_not_panic() {
         assert!(read_dataset(Path::new("/nonexistent/x.lmld")).is_err());
+    }
+
+    #[test]
+    fn payload_is_little_endian_on_any_host() {
+        // 1.0f32 is 0x3f800000; LE on disk regardless of host order.
+        let ds = Dataset::new(vec![1.0f32], vec![7i32], 1, 8);
+        let path = tmp("endian.lmld");
+        write_dataset(&ds, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let features_at = 4 + 4 + 8 + 8 + 4;
+        assert_eq!(&bytes[features_at..features_at + 4],
+                   &[0x00, 0x00, 0x80, 0x3f]);
+        assert_eq!(&bytes[features_at + 4..features_at + 8],
+                   &[0x07, 0x00, 0x00, 0x00]);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

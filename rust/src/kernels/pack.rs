@@ -393,25 +393,31 @@ mod x86 {
         ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR],
     ) {
         debug_assert!(ap.len() >= kb * MR && bp.len() >= kb * NR);
-        let mut c: [[__m128; 2]; MR] = [[_mm_setzero_ps(); 2]; MR];
-        for (i, ci) in c.iter_mut().enumerate() {
-            ci[0] = _mm_loadu_ps(acc.as_ptr().add(i * NR));
-            ci[1] = _mm_loadu_ps(acc.as_ptr().add(i * NR + 4));
-        }
-        let a = ap.as_ptr();
-        let b = bp.as_ptr();
-        for p in 0..kb {
-            let b0 = _mm_loadu_ps(b.add(p * NR));
-            let b1 = _mm_loadu_ps(b.add(p * NR + 4));
+        // SAFETY: the `# Safety` contract above — SSE2 is baseline on
+        // x86-64, and every pointer offset stays under `kb*MR` for
+        // `ap`, `kb*NR` for `bp`, `MR*NR` for `acc`, which the caller
+        // (run_micro) asserts.
+        unsafe {
+            let mut c: [[__m128; 2]; MR] = [[_mm_setzero_ps(); 2]; MR];
             for (i, ci) in c.iter_mut().enumerate() {
-                let av = _mm_set1_ps(*a.add(p * MR + i));
-                ci[0] = _mm_add_ps(ci[0], _mm_mul_ps(av, b0));
-                ci[1] = _mm_add_ps(ci[1], _mm_mul_ps(av, b1));
+                ci[0] = _mm_loadu_ps(acc.as_ptr().add(i * NR));
+                ci[1] = _mm_loadu_ps(acc.as_ptr().add(i * NR + 4));
             }
-        }
-        for (i, ci) in c.iter().enumerate() {
-            _mm_storeu_ps(acc.as_mut_ptr().add(i * NR), ci[0]);
-            _mm_storeu_ps(acc.as_mut_ptr().add(i * NR + 4), ci[1]);
+            let a = ap.as_ptr();
+            let b = bp.as_ptr();
+            for p in 0..kb {
+                let b0 = _mm_loadu_ps(b.add(p * NR));
+                let b1 = _mm_loadu_ps(b.add(p * NR + 4));
+                for (i, ci) in c.iter_mut().enumerate() {
+                    let av = _mm_set1_ps(*a.add(p * MR + i));
+                    ci[0] = _mm_add_ps(ci[0], _mm_mul_ps(av, b0));
+                    ci[1] = _mm_add_ps(ci[1], _mm_mul_ps(av, b1));
+                }
+            }
+            for (i, ci) in c.iter().enumerate() {
+                _mm_storeu_ps(acc.as_mut_ptr().add(i * NR), ci[0]);
+                _mm_storeu_ps(acc.as_mut_ptr().add(i * NR + 4), ci[1]);
+            }
         }
     }
 
@@ -426,21 +432,27 @@ mod x86 {
         ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR],
     ) {
         debug_assert!(ap.len() >= kb * MR && bp.len() >= kb * NR);
-        let mut c: [__m256; MR] = [_mm256_setzero_ps(); MR];
-        for (i, ci) in c.iter_mut().enumerate() {
-            *ci = _mm256_loadu_ps(acc.as_ptr().add(i * NR));
-        }
-        let a = ap.as_ptr();
-        let b = bp.as_ptr();
-        for p in 0..kb {
-            let bv = _mm256_loadu_ps(b.add(p * NR));
+        // SAFETY: the `# Safety` contract above — the caller verified
+        // avx2, and every pointer offset stays under `kb*MR` for `ap`,
+        // `kb*NR` for `bp`, `MR*NR` for `acc`, which the caller
+        // (run_micro) asserts.
+        unsafe {
+            let mut c: [__m256; MR] = [_mm256_setzero_ps(); MR];
             for (i, ci) in c.iter_mut().enumerate() {
-                let av = _mm256_set1_ps(*a.add(p * MR + i));
-                *ci = _mm256_add_ps(*ci, _mm256_mul_ps(av, bv));
+                *ci = _mm256_loadu_ps(acc.as_ptr().add(i * NR));
             }
-        }
-        for (i, ci) in c.iter().enumerate() {
-            _mm256_storeu_ps(acc.as_mut_ptr().add(i * NR), *ci);
+            let a = ap.as_ptr();
+            let b = bp.as_ptr();
+            for p in 0..kb {
+                let bv = _mm256_loadu_ps(b.add(p * NR));
+                for (i, ci) in c.iter_mut().enumerate() {
+                    let av = _mm256_set1_ps(*a.add(p * MR + i));
+                    *ci = _mm256_add_ps(*ci, _mm256_mul_ps(av, bv));
+                }
+            }
+            for (i, ci) in c.iter().enumerate() {
+                _mm256_storeu_ps(acc.as_mut_ptr().add(i * NR), *ci);
+            }
         }
     }
 }

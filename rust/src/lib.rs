@@ -33,6 +33,10 @@
 // determinism across threads/schedules/batching) live on the items
 // that promise them, so `cargo doc` is the API reference.
 #![warn(missing_docs)]
+// Every unsafe operation inside an `unsafe fn` still needs its own
+// `unsafe {}` block with a `// SAFETY:` comment — enforced without a
+// toolchain by `scripts/lint/` (rule: undocumented-unsafe).
+#![deny(unsafe_op_in_unsafe_fn)]
 // Clippy policy: the loop nests deliberately mirror the paper's
 // pseudo-code (explicit indices keep the access patterns auditable
 // against Algorithms 1-15), and the kernel/learner APIs use flat

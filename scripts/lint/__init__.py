@@ -1,0 +1,6 @@
+"""locality-lint: a toolchain-independent static-analysis pass over rust/src.
+
+The engine tokenizes Rust source (strings, comments, char literals) so
+rules match code rather than prose, then applies the repo-specific rules
+in `rules.py`.  Entry point: `python scripts/lint/run.py rust/src`.
+"""

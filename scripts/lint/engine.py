@@ -1,0 +1,366 @@
+"""locality-lint engine: file analysis, rule registry, baseline, output.
+
+A `SourceFile` pre-computes everything rules keep asking for — the code
+view (strings/comments blanked), per-line comment text, attribute
+lines, `#[cfg(test)]` regions, and per-line brace depth — so each rule
+stays a short pattern match over code, not prose.
+
+Suppressions come in two forms:
+  * an inline marker comment on the finding line or the line above:
+      // locality-lint: allow(rule-name): reason
+  * an entry in `baseline.toml` (see `Baseline`), for findings that are
+    accepted repo state rather than per-line design decisions.
+Both require a reason; unused baseline entries are reported so the file
+can only shrink.
+"""
+
+import json
+import os
+import re
+import sys
+
+from lint import rust_tokens as rt
+
+ALLOW_RE = re.compile(r"locality-lint:\s*allow\(([a-z0-9-]+)\)")
+CFG_TEST_RE = re.compile(r"#\s*\[\s*cfg\s*\(\s*test\s*\)\s*\]")
+
+
+class Finding:
+    """One rule violation at a specific line."""
+
+    def __init__(self, rule, path, line, message, snippet):
+        self.rule = rule
+        self.path = path
+        self.line = line
+        self.message = message
+        self.snippet = snippet.strip()
+
+    def as_dict(self):
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "message": self.message,
+            "snippet": self.snippet,
+        }
+
+    def render(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}\n" \
+               f"    {self.snippet}"
+
+
+class SourceFile:
+    """A tokenized Rust file plus the derived per-line facts rules use."""
+
+    def __init__(self, path, rel, text):
+        self.path = path
+        self.rel = rel.replace(os.sep, "/")
+        self.text = text
+        self.spans = rt.scan(text)
+        self.code = rt.code_view(text, self.spans)
+        self.lines = rt.LineIndex(text)
+        self.comment_by_line = self._comment_map()
+        self.attr_lines = self._attr_lines()
+        self.test_lines = self._test_lines()
+        self.depth_at_line = self._line_depths()
+
+    # -- derived facts -------------------------------------------------
+
+    def _comment_map(self):
+        """line number -> concatenated comment text on that line."""
+        out = {}
+        for kind, start, end in self.spans:
+            if kind not in (rt.KIND_LINE_COMMENT, rt.KIND_BLOCK_COMMENT):
+                continue
+            first = self.lines.line(start)
+            last = self.lines.line(max(start, end - 1))
+            for ln in range(first, last + 1):
+                ls, le = self.lines.line_span(ln)
+                piece = self.text[max(start, ls):min(end, le)]
+                out[ln] = out.get(ln, "") + piece
+        return out
+
+    def _attr_lines(self):
+        """Lines occupied by `#[...]` / `#![...]` attributes, including
+        multi-line attribute bodies."""
+        out = set()
+        for m in re.finditer(r"#!?\[", self.code):
+            depth, j = 1, m.end()
+            while j < len(self.code) and depth:
+                if self.code[j] == "[":
+                    depth += 1
+                elif self.code[j] == "]":
+                    depth -= 1
+                j += 1
+            for ln in range(self.lines.line(m.start()),
+                            self.lines.line(max(m.start(), j - 1)) + 1):
+                out.add(ln)
+        return out
+
+    def _brace_region(self, open_pos):
+        """Return the position one past the `}` matching the `{` at
+        `open_pos` in the code view."""
+        depth, j = 1, open_pos + 1
+        while j < len(self.code) and depth:
+            if self.code[j] == "{":
+                depth += 1
+            elif self.code[j] == "}":
+                depth -= 1
+            j += 1
+        return j
+
+    def _test_lines(self):
+        """Lines inside `#[cfg(test)] mod ... { ... }` regions (and any
+        other `#[cfg(test)]`-gated braced item)."""
+        out = set()
+        for m in CFG_TEST_RE.finditer(self.code):
+            brace = self.code.find("{", m.end())
+            if brace == -1:
+                continue
+            end = self._brace_region(brace)
+            for ln in range(self.lines.line(m.start()),
+                            self.lines.line(max(brace, end - 1)) + 1):
+                out.add(ln)
+        return out
+
+    def _line_depths(self):
+        """Brace depth at the *start* of each line, from the code view."""
+        depths = [0] * (self.lines.count + 1)
+        depth = 0
+        ln = 1
+        depths[0] = 0
+        for i, c in enumerate(self.code):
+            if c == "\n":
+                ln += 1
+                if ln <= self.lines.count:
+                    depths[ln - 1] = depth
+            elif c == "{":
+                depth += 1
+            elif c == "}":
+                depth -= 1
+        return depths
+
+    # -- helpers rules call --------------------------------------------
+
+    def is_test_line(self, lineno):
+        return lineno in self.test_lines
+
+    def code_line(self, lineno):
+        start, end = self.lines.line_span(lineno)
+        return self.code[start:end].rstrip("\n")
+
+    def is_blank_or_attr(self, lineno):
+        if lineno in self.attr_lines:
+            return True
+        return self.code_line(lineno).strip() == "" \
+            and lineno not in self.comment_by_line
+
+    def is_comment_line(self, lineno):
+        """True when the line holds only comment (no code)."""
+        return lineno in self.comment_by_line \
+            and self.code_line(lineno).strip() == ""
+
+    def has_allow(self, rule, lineno):
+        """True when a `locality-lint: allow(rule)` marker sits on the
+        line itself or anywhere in the contiguous comment block
+        immediately above it."""
+        def marked(ln):
+            m = ALLOW_RE.search(self.comment_by_line.get(ln, ""))
+            return bool(m and m.group(1) == rule)
+
+        if marked(lineno):
+            return True
+        cur = lineno - 1
+        while cur >= 1 and self.is_comment_line(cur):
+            if marked(cur):
+                return True
+            cur -= 1
+        return False
+
+
+class Rule:
+    """Base class: subclasses set `name`/`description` and implement
+    `check(sf) -> [Finding]`.  `prepare(files)` runs once with every
+    scanned file, for rules that need crate-wide context."""
+
+    name = "?"
+    description = "?"
+
+    def prepare(self, files):
+        pass
+
+    def check(self, sf):
+        raise NotImplementedError
+
+    def finding(self, sf, lineno, message):
+        return Finding(self.name, sf.rel, lineno, message,
+                       sf.lines.line_text(lineno))
+
+
+class BaselineError(Exception):
+    """Raised for a malformed baseline file."""
+
+
+class Baseline:
+    """The `baseline.toml` allowlist.
+
+    Format (a deliberately tiny TOML subset — string values only, so it
+    parses on Python 3.10 without tomllib):
+
+        [[suppress]]
+        rule = "env-read-outside-policy"
+        path = "kernels/foo.rs"
+        contains = "LOCALITY_ML_X"      # optional substring of the line
+        reason = "why this is accepted"
+    """
+
+    def __init__(self, entries):
+        self.entries = entries
+        self.used = [False] * len(entries)
+
+    @classmethod
+    def load(cls, path):
+        entries = []
+        current = None
+        with open(path, encoding="utf-8") as fh:
+            for n, raw in enumerate(fh, 1):
+                line = raw.strip()
+                if not line or line.startswith("#"):
+                    continue
+                if line == "[[suppress]]":
+                    current = {}
+                    entries.append(current)
+                    continue
+                m = re.match(r'^([A-Za-z_]+)\s*=\s*"(.*)"\s*(?:#.*)?$',
+                             line)
+                if not m or current is None:
+                    raise BaselineError(
+                        f"{path}:{n}: expected [[suppress]] or "
+                        f'key = "value", got: {line}')
+                current[m.group(1)] = m.group(2)
+        for e in entries:
+            for key in ("rule", "path", "reason"):
+                if key not in e:
+                    raise BaselineError(
+                        f"{path}: suppress entry missing {key!r}: {e}")
+        return cls(entries)
+
+    def suppresses(self, finding):
+        for i, e in enumerate(self.entries):
+            if e["rule"] != finding.rule or e["path"] != finding.path:
+                continue
+            if e.get("contains") and e["contains"] not in finding.snippet:
+                continue
+            self.used[i] = True
+            return True
+        return False
+
+    def unused(self):
+        return [e for i, e in enumerate(self.entries) if not self.used[i]]
+
+
+def collect_files(roots):
+    """Yield (abs_path, rel_path) for every .rs file under the roots.
+    A root that is itself a file is yielded with its basename as rel."""
+    for root in roots:
+        if os.path.isfile(root):
+            yield root, os.path.basename(root)
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames.sort()
+            for name in sorted(filenames):
+                if name.endswith(".rs"):
+                    path = os.path.join(dirpath, name)
+                    yield path, os.path.relpath(path, root)
+
+
+def run_rules(rules, roots):
+    """Scan the roots, run the rules, return (findings, n_files).
+    Inline `locality-lint: allow(rule)` markers are applied here;
+    baseline filtering is the caller's job."""
+    files = []
+    for path, rel in collect_files(roots):
+        with open(path, encoding="utf-8") as fh:
+            files.append(SourceFile(path, rel, fh.read()))
+    for rule in rules:
+        rule.prepare(files)
+    findings = []
+    for sf in files:
+        for rule in rules:
+            for f in rule.check(sf):
+                if not sf.has_allow(f.rule, f.line):
+                    findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, len(files)
+
+
+def main(argv=None):
+    import argparse
+
+    from lint import rules as rules_mod
+
+    parser = argparse.ArgumentParser(
+        prog="locality-lint",
+        description="static-analysis gate for the locality-ml Rust tree")
+    parser.add_argument("roots", nargs="+",
+                        help="directories (or files) to scan")
+    parser.add_argument("--rule", action="append", default=None,
+                        help="run only this rule (repeatable)")
+    parser.add_argument("--json", action="store_true",
+                        help="emit findings as JSON on stdout")
+    parser.add_argument("--baseline",
+                        default=os.path.join(os.path.dirname(
+                            os.path.abspath(__file__)), "baseline.toml"),
+                        help="baseline allowlist (default: the committed "
+                             "scripts/lint/baseline.toml)")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="ignore the baseline entirely")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the registered rules and exit")
+    args = parser.parse_args(argv)
+
+    all_rules = rules_mod.all_rules()
+    if args.list_rules:
+        for r in all_rules:
+            print(f"{r.name:28s} {r.description}")
+        return 0
+    if args.rule:
+        known = {r.name for r in all_rules}
+        for name in args.rule:
+            if name not in known:
+                print(f"unknown rule: {name}", file=sys.stderr)
+                return 2
+        all_rules = [r for r in all_rules if r.name in args.rule]
+
+    try:
+        findings, n_files = run_rules(all_rules, args.roots)
+    except OSError as e:
+        print(f"locality-lint: {e}", file=sys.stderr)
+        return 2
+
+    baseline = None
+    if not args.no_baseline and os.path.exists(args.baseline):
+        try:
+            baseline = Baseline.load(args.baseline)
+        except BaselineError as e:
+            print(f"locality-lint: {e}", file=sys.stderr)
+            return 2
+        findings = [f for f in findings if not baseline.suppresses(f)]
+
+    if args.json:
+        print(json.dumps({
+            "files": n_files,
+            "rules": [r.name for r in all_rules],
+            "findings": [f.as_dict() for f in findings],
+        }, indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        stale = baseline.unused() if baseline else []
+        for e in stale:
+            print(f"warning: unused baseline entry: rule={e['rule']} "
+                  f"path={e['path']}")
+        status = "FAIL" if findings else "ok"
+        print(f"locality-lint: {status} — {len(findings)} finding(s) "
+              f"across {n_files} file(s), {len(all_rules)} rule(s)")
+    return 1 if findings else 0

@@ -1,0 +1,434 @@
+"""The six locality-ml lint rules.
+
+Each rule mechanically enforces one of the hand-maintained contracts
+documented in `docs/ARCHITECTURE.md` ("Enforced invariants"):
+
+  undocumented-unsafe        every `unsafe` needs an adjacent SAFETY note
+  env-read-outside-policy    one ExecPolicy/ServePolicy resolution point
+  deprecated-internal-caller no non-test caller of #[deprecated] shims
+  nondeterministic-iteration no HashMap/HashSet in bit-parity layers
+  panic-in-serve-path        serve path sheds or errors, never panics
+  missing-docs               every public item carries rustdoc
+
+Rules work on the tokenizer's code view, so occurrences inside strings
+and comments never count.
+"""
+
+import os
+import re
+
+from lint import rust_tokens as rt
+from lint.engine import Rule
+
+
+def _in_scope(rel, scopes):
+    """True when `rel` (posix-style, relative to the scan root) lives
+    under one of the scope prefixes — matched at the root or at any
+    path depth, so fixture trees behave like the real tree."""
+    return any(rel.startswith(s) or f"/{s}" in rel for s in scopes)
+
+
+class UndocumentedUnsafe(Rule):
+    """Rule 1: every `unsafe` keyword must have a `// SAFETY:` comment
+    (or a `/// # Safety` doc section, for `unsafe fn` declarations) on
+    the same line or immediately above it — only comments, attributes
+    and blank lines may sit in between."""
+
+    name = "undocumented-unsafe"
+    description = ("every unsafe block/fn needs an adjacent "
+                   "`// SAFETY:` comment or `# Safety` doc section")
+    WINDOW = 12
+    UNSAFE_RE = re.compile(r"\bunsafe\b")
+
+    def check(self, sf):
+        out = []
+        seen = set()
+        for m in self.UNSAFE_RE.finditer(sf.code):
+            ln = sf.lines.line(m.start())
+            if ln in seen:
+                continue
+            seen.add(ln)
+            if not self._documented(sf, ln):
+                out.append(self.finding(
+                    sf, ln,
+                    "`unsafe` without an adjacent `// SAFETY:` comment "
+                    "(or `/// # Safety` section)"))
+        return out
+
+    @staticmethod
+    def _marked(comment):
+        return "SAFETY:" in comment or "# Safety" in comment
+
+    def _documented(self, sf, ln):
+        if self._marked(sf.comment_by_line.get(ln, "")):
+            return True
+        cur, steps = ln - 1, 0
+        while cur >= 1 and steps < self.WINDOW:
+            if sf.is_comment_line(cur):
+                if self._marked(sf.comment_by_line[cur]):
+                    return True
+            elif not sf.is_blank_or_attr(cur):
+                return False  # hit a code line first
+            cur, steps = cur - 1, steps + 1
+        return False
+
+
+class EnvReadOutsidePolicy(Rule):
+    """Rule 2: `std::env::var(...)` may only appear at the allowlisted
+    resolve points, so flag -> env -> Auto resolution keeps exactly one
+    entry point per knob."""
+
+    name = "env-read-outside-policy"
+    description = ("std::env::var only at the ExecPolicy/ServePolicy "
+                   "resolve points (kernels/policy.rs + documented "
+                   "legacy sites)")
+    # policy.rs owns the serve knobs; distance/parallel/pack hold the
+    # documented pre-ExecPolicy legacy reads (Auto-mode defaults).
+    ALLOWED = (
+        "kernels/policy.rs",
+        "kernels/distance.rs",
+        "kernels/parallel.rs",
+        "kernels/pack.rs",
+    )
+    ENV_RE = re.compile(r"\benv\s*::\s*var(?:_os)?\b")
+
+    def check(self, sf):
+        if _in_scope(sf.rel, self.ALLOWED):
+            return []
+        out = []
+        for m in self.ENV_RE.finditer(sf.code):
+            ln = sf.lines.line(m.start())
+            if sf.is_test_line(ln):
+                continue
+            var = self._literal_arg(sf, m.end())
+            what = f"environment read of {var}" if var \
+                else "environment read"
+            out.append(self.finding(
+                sf, ln,
+                f"{what} outside the policy resolve points "
+                f"({', '.join(self.ALLOWED)})"))
+        return out
+
+    @staticmethod
+    def _literal_arg(sf, pos):
+        for kind, start, end in sf.spans:
+            if kind == rt.KIND_STRING and start >= pos:
+                return sf.text[start:end] if start - pos < 80 else None
+        return None
+
+
+class DeprecatedInternalCaller(Rule):
+    """Rule 3: no non-test source caller of a `#[deprecated]` function.
+    The tuple-entry shims stay only as parity oracles for the first
+    toolchain session; internal code must use the `*_exec` spellings."""
+
+    name = "deprecated-internal-caller"
+    description = ("no non-test src caller of #[deprecated] functions "
+                   "(the ExecPolicy tuple shims)")
+    DEPRECATED_RE = re.compile(r"#\s*\[\s*deprecated\b")
+    FN_RE = re.compile(r"\bfn\s+([A-Za-z_][A-Za-z0-9_]*)")
+
+    def prepare(self, files):
+        deprecated_sites = {}   # name -> {(rel, line)}
+        all_sites = {}          # name -> {(rel, line)}
+        for sf in files:
+            for dm in self.DEPRECATED_RE.finditer(sf.code):
+                fm = self.FN_RE.search(sf.code, dm.end())
+                if fm and fm.start() - dm.end() < 400:
+                    site = (sf.rel, sf.lines.line(fm.start()))
+                    deprecated_sites.setdefault(fm.group(1),
+                                                set()).add(site)
+            for fm in self.FN_RE.finditer(sf.code):
+                site = (sf.rel, sf.lines.line(fm.start()))
+                all_sites.setdefault(fm.group(1), set()).add(site)
+        # A name also defined without #[deprecated] (e.g. the unrelated
+        # ExecPolicy::with_threads vs NativeMlp::with_threads) cannot be
+        # attributed textually — skip it rather than false-positive.
+        self.targets = {
+            name: sites for name, sites in deprecated_sites.items()
+            if all_sites.get(name, set()) == sites
+        }
+
+    def check(self, sf):
+        out = []
+        for name, def_sites in sorted(self.targets.items()):
+            pat = re.compile(
+                rf"(?<![A-Za-z0-9_]){name}\s*(?:::\s*<[^>]*>\s*)?\(")
+            for m in pat.finditer(sf.code):
+                ln = sf.lines.line(m.start())
+                if sf.is_test_line(ln):
+                    continue
+                if (sf.rel, ln) in def_sites:
+                    continue  # the definition itself
+                head = sf.code_line(ln).lstrip()
+                if head.startswith(("use ", "pub use ")):
+                    continue  # re-exports are deliberate API surface
+                out.append(self.finding(
+                    sf, ln,
+                    f"call of #[deprecated] `{name}` outside tests — "
+                    f"use the ExecPolicy `*_exec` spelling"))
+        return out
+
+
+class NondeterministicIteration(Rule):
+    """Rule 4: kernels/coordinator/learners code feeds bit-parity
+    outputs, and HashMap/HashSet iteration order is nondeterministic
+    across processes — so those layers may not use hash collections at
+    all (BTreeMap/BTreeSet/Vec are the deterministic spellings).
+    Keyed-lookup-only uses can carry an inline
+    `// locality-lint: allow(nondeterministic-iteration): reason`."""
+
+    name = "nondeterministic-iteration"
+    description = ("no HashMap/HashSet in kernel/coordinator/learner "
+                   "code (bit-parity contract)")
+    SCOPES = ("kernels/", "coordinator/", "learners/")
+    HASH_RE = re.compile(r"\bHash(?:Map|Set)\b")
+
+    def check(self, sf):
+        if not _in_scope(sf.rel, self.SCOPES):
+            return []
+        out = []
+        seen = set()
+        for m in self.HASH_RE.finditer(sf.code):
+            ln = sf.lines.line(m.start())
+            if ln in seen or sf.is_test_line(ln):
+                continue
+            seen.add(ln)
+            out.append(self.finding(
+                sf, ln,
+                "HashMap/HashSet in a bit-parity layer: hash iteration "
+                "order is nondeterministic — use BTreeMap/BTreeSet/Vec"))
+        return out
+
+
+class PanicInServePath(Rule):
+    """Rule 5: the request-handling path (serve/batcher/scheduler/mcs)
+    must shed or reply with an error, never die — no unwrap/expect/
+    panic!/assert! in non-test code there.  `debug_assert!` is fine
+    (compiled out of release builds); training-side helpers that share
+    a file with the serve path carry an inline allow with a reason."""
+
+    name = "panic-in-serve-path"
+    description = ("no unwrap/expect/panic!/assert! in the serve "
+                   "request path (coordinator/{serve,batcher,"
+                   "scheduler,mcs}.rs)")
+    FILES = (
+        "coordinator/serve.rs",
+        "coordinator/batcher.rs",
+        "coordinator/scheduler.rs",
+        "coordinator/mcs.rs",
+    )
+    PANIC_RE = re.compile(
+        r"\.unwrap\s*\(|\.expect\s*\(|\bpanic!|\bunreachable!"
+        r"|\btodo!|\bunimplemented!|\bassert(?:_eq|_ne)?!")
+
+    def check(self, sf):
+        if not _in_scope(sf.rel, self.FILES):
+            return []
+        out = []
+        for m in self.PANIC_RE.finditer(sf.code):
+            ln = sf.lines.line(m.start())
+            if sf.is_test_line(ln):
+                continue
+            token = m.group(0).lstrip(".").rstrip("(").strip()
+            out.append(self.finding(
+                sf, ln,
+                f"`{token}` in the serve request path — return an "
+                f"error reply or shed instead of panicking"))
+        return out
+
+
+class MissingDocs(Rule):
+    """Rule 6: every public item (fn/struct/enum/trait/type/const/
+    static/mod, plus pub struct fields and pub-enum variants) carries a
+    doc comment — the engine-resident version of the PR-7 rustdoc pass
+    behind `#![warn(missing_docs)]`.  Trait impls and impls of private
+    types are exempt, matching rustc's missing_docs lint."""
+
+    name = "missing-docs"
+    description = ("every public item needs a rustdoc comment "
+                   "(mirrors #![warn(missing_docs)])")
+    ITEM_RE = re.compile(
+        r"^(\s*)pub\s+(?:unsafe\s+)?(?:async\s+)?(?:const\s+)?"
+        r"(?:extern\s+\"[^\"]*\"\s+)?"
+        r"(fn|struct|enum|union|trait|type|mod|const|static)\s+"
+        r"([A-Za-z_][A-Za-z0-9_]*)", re.M)
+    PUB_TYPE_RE = re.compile(
+        r"\bpub\s+(?:struct|enum|union|trait|type)\s+"
+        r"([A-Za-z_][A-Za-z0-9_]*)")
+    FIELD_RE = re.compile(r"^\s*pub\s+([A-Za-z_][A-Za-z0-9_]*)\s*:")
+    VARIANT_RE = re.compile(r"^\s*([A-Z][A-Za-z0-9_]*)\s*(?:[,({=]|$)")
+
+    def prepare(self, files):
+        self.pub_types = set()
+        for sf in files:
+            for m in self.PUB_TYPE_RE.finditer(sf.code):
+                self.pub_types.add(m.group(1))
+
+    # -- doc detection -------------------------------------------------
+
+    def _doc_lines(self, sf):
+        """Lines carrying *item* doc comments (`///`, `/** */`).
+        Inner docs (`//!`, `/*!`) document the enclosing module, not
+        the next item, so they do not count here."""
+        out = set()
+        for kind, start, end in sf.spans:
+            text = sf.text[start:end]
+            if kind == rt.KIND_LINE_COMMENT and text.startswith("///"):
+                out.add(sf.lines.line(start))
+            elif kind == rt.KIND_BLOCK_COMMENT and \
+                    text.startswith("/**") and not \
+                    text.startswith("/***"):
+                for ln in range(sf.lines.line(start),
+                                sf.lines.line(max(start, end - 1)) + 1):
+                    out.add(ln)
+        return out
+
+    def _documented(self, sf, doc_lines, ln):
+        cur = ln - 1
+        while cur >= 1:
+            if cur in doc_lines:
+                return True
+            if cur in sf.attr_lines:
+                if "#[doc" in sf.code_line(cur):
+                    return True
+                cur -= 1
+            elif sf.is_comment_line(cur) or \
+                    (sf.code_line(cur).strip() == ""
+                     and cur not in sf.comment_by_line):
+                cur -= 1
+            else:
+                return False
+        return False
+
+    # -- impl exemptions ----------------------------------------------
+
+    IMPL_RE = re.compile(r"^\s*(?:pub\s+)?impl\b", re.M)
+
+    @staticmethod
+    def _skip_generics(code, i):
+        """`i` sits on `<`; return the index one past the matching `>`,
+        ignoring `->` return arrows inside closure bounds."""
+        depth = 0
+        while i < len(code):
+            c = code[i]
+            if c == "<":
+                depth += 1
+            elif c == ">" and code[i - 1] != "-":
+                depth -= 1
+                if depth == 0:
+                    return i + 1
+            i += 1
+        return i
+
+    def _exempt_regions(self, sf):
+        """Char ranges of trait impls and impls of non-pub types —
+        rustc's missing_docs does not fire inside either."""
+        regions = []
+        for m in self.IMPL_RE.finditer(sf.code):
+            brace = sf.code.find("{", m.end())
+            if brace == -1:
+                continue
+            header = sf.code[m.start():brace]
+            end = sf._brace_region(brace)
+            if " for " in header:
+                regions.append((m.start(), end))
+                continue
+            i = m.end()
+            while i < len(sf.code) and sf.code[i].isspace():
+                i += 1
+            if i < len(sf.code) and sf.code[i] == "<":
+                i = self._skip_generics(sf.code, i)
+            tm = re.match(r"\s*([A-Za-z_][A-Za-z0-9_]*)",
+                          sf.code[i:brace])
+            if tm and tm.group(1) not in self.pub_types:
+                regions.append((m.start(), end))
+        return regions
+
+    # -- the rule ------------------------------------------------------
+
+    def check(self, sf):
+        doc_lines = self._doc_lines(sf)
+        exempt = self._exempt_regions(sf)
+        out = []
+        for m in self.ITEM_RE.finditer(sf.code):
+            ln = sf.lines.line(m.start() + len(m.group(1)))
+            if sf.is_test_line(ln):
+                continue
+            if any(a <= m.start() < b for a, b in exempt):
+                continue
+            kind, name = m.group(2), m.group(3)
+            if not self._documented(sf, doc_lines, ln) and \
+                    not self._mod_file_doc(sf, kind, name, m.end()):
+                out.append(self.finding(
+                    sf, ln, f"public {kind} `{name}` has no doc comment"))
+            if kind in ("struct", "enum"):
+                out.extend(self._members(sf, doc_lines, kind, name,
+                                         m.start(), ln))
+        return out
+
+    def _mod_file_doc(self, sf, kind, name, after):
+        """`pub mod name;` is documented when the module file opens with
+        inner docs (`//!` / `/*!`), the idiom lib.rs and mod.rs use."""
+        if kind != "mod":
+            return False
+        tail = sf.code[after:after + 40].lstrip()
+        if not tail.startswith(";"):
+            return False
+        base = os.path.dirname(sf.path)
+        for cand in (os.path.join(base, f"{name}.rs"),
+                     os.path.join(base, name, "mod.rs")):
+            try:
+                with open(cand, encoding="utf-8") as fh:
+                    head = fh.read(4096)
+            except OSError:
+                continue
+            for line in head.splitlines():
+                s = line.strip()
+                if not s:
+                    continue
+                return s.startswith(("//!", "/*!"))
+        return False
+
+    def _members(self, sf, doc_lines, kind, name, item_start, item_ln):
+        """Require docs on pub fields of a pub struct and on every
+        variant of a pub enum."""
+        out = []
+        stop = sf.code.find(";", item_start)
+        brace = sf.code.find("{", item_start)
+        if brace == -1 or (stop != -1 and stop < brace):
+            return out  # unit / tuple struct, or `pub struct X;`
+        end = sf._brace_region(brace)
+        item_depth = sf.depth_at_line[item_ln - 1]
+        first = sf.lines.line(brace) + 1
+        last = sf.lines.line(max(brace, end - 1))
+        member_re = self.FIELD_RE if kind == "struct" else self.VARIANT_RE
+        for ln in range(first, last):
+            if sf.is_test_line(ln):
+                continue
+            if sf.depth_at_line[ln - 1] != item_depth + 1:
+                continue
+            if ln in sf.attr_lines or sf.is_comment_line(ln):
+                continue
+            mm = member_re.match(sf.code_line(ln))
+            if not mm:
+                continue
+            if not self._documented(sf, doc_lines, ln):
+                what = "field" if kind == "struct" else "variant"
+                out.append(self.finding(
+                    sf, ln,
+                    f"public {what} `{name}::{mm.group(1)}` has no "
+                    f"doc comment"))
+        return out
+
+
+def all_rules():
+    """The registry, in reporting order."""
+    return [
+        UndocumentedUnsafe(),
+        EnvReadOutsidePolicy(),
+        DeprecatedInternalCaller(),
+        NondeterministicIteration(),
+        PanicInServePath(),
+        MissingDocs(),
+    ]

@@ -1,0 +1,24 @@
+#!/usr/bin/env python3
+"""locality-lint entry point.
+
+    python scripts/lint/run.py rust/src              # the CI gate
+    python scripts/lint/run.py rust/src --json       # machine output
+    python scripts/lint/run.py rust/src --rule missing-docs
+    python scripts/lint/run.py --list-rules rust/src
+
+Exit status: 0 clean, 1 findings, 2 usage/IO error.  Findings already
+listed in `scripts/lint/baseline.toml` (each with a reason) are
+suppressed; pass `--no-baseline` to see everything.
+"""
+
+import os
+import sys
+
+if __package__ in (None, ""):
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from lint.engine import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

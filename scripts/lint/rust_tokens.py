@@ -1,0 +1,192 @@
+r"""A small lossless Rust surface tokenizer.
+
+Splits a source file into typed spans — code, line comments, block
+comments (nested), string literals (plain / raw / byte), and char
+literals — without a full parse.  The point is to let lint rules match
+against a *code view* of the file (strings and comments blanked out, so
+`"unwrap()"` inside a string or a comment never trips a rule) while
+still being able to read comment text (the SAFETY-comment rule needs
+it) and string contents (the env-var rule needs them).
+
+Handled edge cases, each covered by a unit test:
+  * nested block comments: `/* outer /* inner */ still comment */`
+  * raw strings with any hash depth: `r"x"`, `r#"x"#`, `br##"x"##`
+  * byte strings/chars: `b"..."`, `b'x'`
+  * lifetimes vs char literals: `'a` (code) vs `'a'` / `'\n'` (char)
+  * escapes: `"\""`, `'\''`, `'\u{1F600}'`
+"""
+
+import bisect
+import re
+
+KIND_CODE = "code"
+KIND_LINE_COMMENT = "line_comment"
+KIND_BLOCK_COMMENT = "block_comment"
+KIND_STRING = "string"
+KIND_CHAR = "char"
+
+_IDENT = re.compile(r"[A-Za-z0-9_]")
+_RAW_PREFIX = re.compile(r'(?:br|rb|r|b)(#*)"')
+
+
+def _scan_plain_string(text, i):
+    """`i` sits on the opening quote; return index one past the close."""
+    n = len(text)
+    j = i + 1
+    while j < n:
+        c = text[j]
+        if c == "\\":
+            j += 2
+        elif c == '"':
+            return j + 1
+        else:
+            j += 1
+    return n  # unterminated: consume to EOF
+
+
+def _scan_raw_string(text, i, hashes):
+    """`i` sits on the opening quote of an `r#*"` literal."""
+    close = '"' + "#" * hashes
+    j = text.find(close, i + 1)
+    return len(text) if j == -1 else j + len(close)
+
+
+def _match_string_prefix(text, i):
+    """Return the end index if a string literal with an r/b prefix
+    starts at `i`, else None.  `i` must not be inside an identifier."""
+    if i > 0 and _IDENT.match(text[i - 1]):
+        return None
+    m = _RAW_PREFIX.match(text, i)
+    if not m:
+        return None
+    prefix = m.group(0)
+    hashes = len(m.group(1))
+    quote = i + len(prefix) - 1
+    if "r" in prefix[: len(prefix) - hashes - 1] or hashes:
+        return _scan_raw_string(text, quote, hashes)
+    # plain byte string b"..." — escapes apply
+    return _scan_plain_string(text, quote)
+
+
+def _match_char(text, i):
+    """`i` sits on a `'`.  Return end index if this is a char literal,
+    or None if it is a lifetime / loop label."""
+    n = len(text)
+    if i + 1 >= n:
+        return None
+    c = text[i + 1]
+    if c == "\\":
+        j = i + 1
+        while j < n:
+            if text[j] == "\\":
+                j += 2
+            elif text[j] == "'":
+                return j + 1
+            else:
+                j += 1
+        return n
+    if c != "'" and i + 2 < n and text[i + 2] == "'":
+        return i + 3
+    return None  # lifetime ('a), label ('outer:), or stray quote
+
+
+def scan(text):
+    """Tokenize `text` into a list of (kind, start, end) spans that
+    exactly cover the input."""
+    spans = []
+    i, n = 0, len(text)
+    code_start = 0
+
+    def flush(upto):
+        if upto > code_start:
+            spans.append((KIND_CODE, code_start, upto))
+
+    while i < n:
+        c = text[i]
+        if c == "/" and i + 1 < n and text[i + 1] == "/":
+            flush(i)
+            j = text.find("\n", i)
+            j = n if j == -1 else j
+            spans.append((KIND_LINE_COMMENT, i, j))
+            i = code_start = j
+        elif c == "/" and i + 1 < n and text[i + 1] == "*":
+            flush(i)
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if text.startswith("/*", j):
+                    depth, j = depth + 1, j + 2
+                elif text.startswith("*/", j):
+                    depth, j = depth - 1, j + 2
+                else:
+                    j += 1
+            spans.append((KIND_BLOCK_COMMENT, i, j))
+            i = code_start = j
+        elif c == '"':
+            flush(i)
+            j = _scan_plain_string(text, i)
+            spans.append((KIND_STRING, i, j))
+            i = code_start = j
+        elif c in "rb":
+            j = _match_string_prefix(text, i)
+            if j is None:
+                i += 1
+            else:
+                flush(i)
+                spans.append((KIND_STRING, i, j))
+                i = code_start = j
+        elif c == "'":
+            j = _match_char(text, i)
+            if j is None:
+                i += 1
+            else:
+                flush(i)
+                spans.append((KIND_CHAR, i, j))
+                i = code_start = j
+        else:
+            i += 1
+    flush(n)
+    return spans
+
+
+def code_view(text, spans):
+    """Return a string the same length as `text` with everything that is
+    not code replaced by spaces (newlines kept, so byte offsets and line
+    numbers are stable)."""
+    out = []
+    for kind, start, end in spans:
+        chunk = text[start:end]
+        if kind == KIND_CODE:
+            out.append(chunk)
+        else:
+            out.append("".join(ch if ch == "\n" else " " for ch in chunk))
+    return "".join(out)
+
+
+class LineIndex:
+    """Byte offset → 1-based line number, and per-line slices."""
+
+    def __init__(self, text):
+        self.text = text
+        self.offsets = [0]
+        for m in re.finditer("\n", text):
+            self.offsets.append(m.end())
+
+    def line(self, pos):
+        return bisect.bisect_right(self.offsets, pos)
+
+    def line_span(self, lineno):
+        start = self.offsets[lineno - 1]
+        end = (
+            self.offsets[lineno]
+            if lineno < len(self.offsets)
+            else len(self.text)
+        )
+        return start, end
+
+    def line_text(self, lineno):
+        start, end = self.line_span(lineno)
+        return self.text[start:end].rstrip("\n")
+
+    @property
+    def count(self):
+        return len(self.offsets)

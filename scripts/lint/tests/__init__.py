@@ -1,0 +1,13 @@
+"""Unit tests for the locality-lint engine (tokenizer + rules).
+
+Run with: python -m unittest discover -s scripts/lint/tests
+"""
+
+import os
+import sys
+
+# Make `import lint` work no matter where the runner was started.
+sys.path.insert(
+    0,
+    os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__)))))

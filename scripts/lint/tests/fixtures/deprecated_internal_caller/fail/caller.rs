@@ -1,0 +1,6 @@
+//! Fail fixture half 2: a non-test caller of the shim.
+
+/// Still routes through the deprecated tuple entry.
+pub fn run_all(x: usize) -> usize {
+    crate::shims::sweep_par(x)
+}

@@ -1,0 +1,7 @@
+//! Fail fixture half 1: the deprecated definition.
+
+/// The legacy tuple shim.
+#[deprecated(note = "use sweep_exec")]
+pub fn sweep_par(x: usize) -> usize {
+    x * 2
+}

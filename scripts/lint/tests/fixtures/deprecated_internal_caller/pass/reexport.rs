@@ -1,0 +1,4 @@
+//! Pass fixture: `use` lines are deliberate API surface, not callers.
+
+#[allow(deprecated)]
+pub use crate::shims::sweep_par;

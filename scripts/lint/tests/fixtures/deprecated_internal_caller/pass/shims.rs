@@ -1,0 +1,24 @@
+//! Pass fixture: deprecated shims may exist, be re-exported, and be
+//! called from tests — just not from non-test source.
+
+/// The modern spelling.
+pub fn sweep_exec(x: usize) -> usize {
+    x * 2
+}
+
+/// The legacy tuple shim, kept as a parity oracle.
+#[deprecated(note = "use sweep_exec")]
+pub fn sweep_par(x: usize) -> usize {
+    sweep_exec(x)
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(deprecated)]
+    use super::*;
+
+    #[test]
+    fn parity() {
+        assert_eq!(sweep_par(3), sweep_exec(3));
+    }
+}

@@ -1,0 +1,6 @@
+//! Fail fixture: an env read away from the resolve points.
+
+/// Reads a knob where it must not.
+pub fn sneaky_threads() -> Option<usize> {
+    std::env::var("LOCALITY_ML_THREADS").ok()?.parse().ok()
+}

@@ -1,0 +1,6 @@
+//! Pass fixture: the resolve point itself may read the environment.
+
+/// Resolve the thread-count knob.
+pub fn env_threads() -> Option<usize> {
+    std::env::var("LOCALITY_ML_THREADS").ok()?.parse().ok()
+}

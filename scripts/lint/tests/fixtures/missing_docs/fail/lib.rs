@@ -1,0 +1,26 @@
+//! Fail fixture: four undocumented public surfaces.
+
+pub fn undocumented_fn(x: u32) -> u32 {
+    x + 1
+}
+
+/// Documented struct with an undocumented public field.
+pub struct Half {
+    pub exposed: u32,
+}
+
+/// Documented enum with an undocumented variant.
+pub enum Signal {
+    Naked,
+    /// This one is fine.
+    Documented,
+}
+
+/// Documented type with an undocumented public method.
+pub struct Holder(u32);
+
+impl Holder {
+    pub fn get(&self) -> u32 {
+        self.0
+    }
+}

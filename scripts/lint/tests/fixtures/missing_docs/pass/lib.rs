@@ -1,0 +1,67 @@
+//! Pass fixture: every public item documented; private items, trait
+//! impls, and impls of private types are exempt.
+
+/// A documented public struct.
+#[derive(Clone)]
+pub struct Config {
+    /// Documented public field.
+    pub threads: usize,
+    internal: usize,
+}
+
+/// A documented public enum.
+pub enum Reply {
+    /// Success payload.
+    Done(u32),
+    /// Back-pressure signal.
+    Overloaded { until_us: u64 },
+}
+
+/// Documented trait.
+pub trait Step {
+    /// Documented required method.
+    fn step(&mut self) -> u32;
+}
+
+/// Documented alias.
+pub type Pair = (u32, u32);
+
+/// Documented constant.
+pub const LIMIT: usize = 8;
+
+/// Documented function; attribute between doc and item is fine.
+#[inline]
+pub fn run(cfg: &Config) -> usize {
+    helper(cfg.threads, cfg.internal)
+}
+
+fn helper(a: usize, b: usize) -> usize {
+    a + b
+}
+
+struct Private {
+    n: u32,
+}
+
+impl Private {
+    pub fn bump(&mut self) {
+        self.n += 1;
+    }
+}
+
+impl Step for Config {
+    fn step(&mut self) -> u32 {
+        self.threads as u32
+    }
+}
+
+impl Config {
+    /// Documented public method on a public type.
+    pub fn new(threads: usize) -> Self {
+        Config { threads, internal: 0 }
+    }
+
+    fn private_method(&self) -> usize {
+        self.internal
+    }
+}

@@ -1,0 +1,12 @@
+//! Fail fixture: hash iteration feeding a coordinator output.
+
+use std::collections::HashMap;
+
+/// Iteration order decides output order — nondeterministic.
+pub fn tally_unstable(xs: &[u32]) -> Vec<(u32, u32)> {
+    let mut m: HashMap<u32, u32> = HashMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    m.into_iter().collect()
+}

@@ -1,0 +1,8 @@
+//! Pass fixture: outside the bit-parity layers the rule does not apply.
+
+use std::collections::HashMap;
+
+/// Keyed lookups in CLI plumbing are out of scope.
+pub fn route(writers: &mut HashMap<usize, String>, id: usize) -> Option<&mut String> {
+    writers.get_mut(&id)
+}

@@ -1,0 +1,25 @@
+//! Pass fixture: deterministic collections in a bit-parity layer, and
+//! hash collections confined to tests.
+
+use std::collections::BTreeMap;
+
+/// Order-stable accumulation.
+pub fn tally(xs: &[u32]) -> BTreeMap<u32, u32> {
+    let mut out = BTreeMap::new();
+    for &x in xs {
+        *out.entry(x).or_insert(0) += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn hash_in_tests_is_fine() {
+        let mut m: HashMap<u32, u32> = HashMap::new();
+        m.insert(1, 2);
+        assert_eq!(m[&1], 2);
+    }
+}

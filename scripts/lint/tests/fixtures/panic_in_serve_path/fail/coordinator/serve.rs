@@ -1,0 +1,17 @@
+//! Fail fixture: three ways to kill the resident process.
+
+/// Dies on a malformed query.
+pub fn handle(q: Option<u32>) -> u32 {
+    q.unwrap()
+}
+
+/// Dies on a contract violation.
+pub fn check(d: usize, len: usize) -> usize {
+    assert!(d > 0 && len % d == 0, "ragged batch");
+    len / d
+}
+
+/// Dies explicitly.
+pub fn never(code: u32) -> ! {
+    panic!("serve loop gave up with {code}");
+}

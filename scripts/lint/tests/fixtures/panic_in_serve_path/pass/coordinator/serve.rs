@@ -1,0 +1,33 @@
+//! Pass fixture: the serve path degrades gracefully.
+
+/// Errors become replies, absent values get defaults, debug-only
+/// invariant checks are compiled out of release builds.
+pub fn handle(q: Result<u32, String>, fallback: u32) -> u32 {
+    debug_assert!(fallback < 1_000);
+    match q {
+        Ok(v) => v,
+        Err(_) => fallback,
+    }
+}
+
+/// `unwrap_or` never panics; prose saying panic!("...") is not code.
+pub fn depth(v: &[u32]) -> u32 {
+    v.iter().copied().max().unwrap_or(0)
+}
+
+/// Training-side helper sharing the file with the serve path.
+pub fn epoch_len(batch: usize, n: usize) -> usize {
+    // locality-lint: allow(panic-in-serve-path): training-side setup
+    assert!(batch > 0 && batch <= n);
+    n / batch
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(super::handle(Ok(3), 0), 3);
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Fail fixture: two undocumented `unsafe` sites.
+
+/// A block with no SAFETY comment anywhere near it.
+pub fn bad_block(v: &[f32]) -> &[u8] {
+    let n = v.len();
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, 4 * n) }
+}
+
+/// An unsafe fn whose docs never state the safety contract.
+pub unsafe fn bad_fn(p: *const f32) -> f32 {
+    *p
+}

@@ -1,0 +1,28 @@
+//! Pass fixture: every `unsafe` carries an adjacent SAFETY note.
+
+/// Reinterpret a float slice as bytes.
+pub fn as_bytes(v: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no invalid bit patterns and the length is
+    // derived from the same slice, so the view cannot go out of bounds.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, 4 * v.len()) }
+}
+
+/// Adds two raw pointers' targets.
+///
+/// # Safety
+/// Both pointers must be valid, aligned reads.
+pub unsafe fn add_raw(a: *const f32, b: *const f32) -> f32 {
+    // SAFETY: validity and alignment are the caller's contract above.
+    unsafe { *a + *b }
+}
+
+/// Same-line marker form.
+pub fn tail(v: &[f32]) -> f32 {
+    unsafe { *v.as_ptr().add(v.len() - 1) } // SAFETY: caller checked non-empty
+}
+
+/// Mentions of unsafe in prose must not fire: the string "unsafe code"
+/// and this comment about unsafe blocks are not code.
+pub fn prose() -> &'static str {
+    "this text says unsafe but is a string literal"
+}

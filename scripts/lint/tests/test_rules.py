@@ -1,0 +1,167 @@
+"""Per-rule pass/fail fixture tests plus engine-level behaviors
+(inline allows, baseline suppression, exit semantics)."""
+
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__)))))
+
+from lint import engine, rules  # noqa: E402
+
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "fixtures")
+
+
+def run_rule(rule_name, root):
+    only = [r for r in rules.all_rules() if r.name == rule_name]
+    assert only, f"unknown rule {rule_name}"
+    findings, n_files = engine.run_rules(only, [root])
+    assert n_files > 0, f"fixture tree {root} is empty"
+    return findings
+
+
+class FixtureTest(unittest.TestCase):
+    """Every rule has at least one pass and one fail fixture tree."""
+
+    CASES = {
+        "undocumented-unsafe": "undocumented_unsafe",
+        "env-read-outside-policy": "env_read_outside_policy",
+        "deprecated-internal-caller": "deprecated_internal_caller",
+        "nondeterministic-iteration": "nondeterministic_iteration",
+        "panic-in-serve-path": "panic_in_serve_path",
+        "missing-docs": "missing_docs",
+    }
+
+    def test_every_rule_has_fixtures(self):
+        self.assertEqual(
+            sorted(self.CASES),
+            sorted(r.name for r in rules.all_rules()))
+        for d in self.CASES.values():
+            for half in ("pass", "fail"):
+                self.assertTrue(
+                    os.path.isdir(os.path.join(FIXTURES, d, half)),
+                    f"missing fixture tree {d}/{half}")
+
+    def test_pass_fixtures_are_clean(self):
+        for rule_name, d in self.CASES.items():
+            findings = run_rule(rule_name,
+                                os.path.join(FIXTURES, d, "pass"))
+            self.assertEqual(
+                [], [f.render() for f in findings],
+                f"pass fixture for {rule_name} raised findings")
+
+    def test_fail_fixtures_are_flagged(self):
+        expected_min = {
+            "undocumented-unsafe": 2,
+            "env-read-outside-policy": 1,
+            "deprecated-internal-caller": 1,
+            "nondeterministic-iteration": 1,
+            "panic-in-serve-path": 3,
+            "missing-docs": 4,
+        }
+        for rule_name, d in self.CASES.items():
+            findings = run_rule(rule_name,
+                                os.path.join(FIXTURES, d, "fail"))
+            self.assertGreaterEqual(
+                len(findings), expected_min[rule_name],
+                f"fail fixture for {rule_name} under-reported: "
+                f"{[f.render() for f in findings]}")
+            for f in findings:
+                self.assertEqual(f.rule, rule_name)
+
+
+class FindingDetailTest(unittest.TestCase):
+    """Spot-check that findings land on the right lines/identifiers."""
+
+    def test_deprecated_caller_names_the_shim(self):
+        findings = run_rule(
+            "deprecated-internal-caller",
+            os.path.join(FIXTURES, "deprecated_internal_caller", "fail"))
+        self.assertEqual(len(findings), 1)
+        self.assertEqual(findings[0].path, "caller.rs")
+        self.assertIn("sweep_par", findings[0].message)
+
+    def test_env_read_reports_the_variable(self):
+        findings = run_rule(
+            "env-read-outside-policy",
+            os.path.join(FIXTURES, "env_read_outside_policy", "fail"))
+        self.assertEqual(len(findings), 1)
+        self.assertIn("LOCALITY_ML_THREADS", findings[0].message)
+
+    def test_missing_docs_covers_fields_variants_methods(self):
+        findings = run_rule(
+            "missing-docs", os.path.join(FIXTURES, "missing_docs", "fail"))
+        messages = "\n".join(f.message for f in findings)
+        for needle in ("undocumented_fn", "Half::exposed",
+                       "Signal::Naked", "`get`"):
+            self.assertIn(needle, messages)
+
+
+class EngineTest(unittest.TestCase):
+    def _lint_source(self, source, rule_name, rel="coordinator/serve.rs"):
+        with tempfile.TemporaryDirectory() as tmp:
+            path = os.path.join(tmp, rel)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "w", encoding="utf-8") as fh:
+                fh.write(source)
+            return run_rule(rule_name, tmp)
+
+    def test_inline_allow_suppresses(self):
+        src = ("pub fn f(x: Option<u32>) -> u32 {\n"
+               "    // locality-lint: allow(panic-in-serve-path): demo\n"
+               "    x.unwrap()\n"
+               "}\n")
+        self.assertEqual([], self._lint_source(src, "panic-in-serve-path"))
+
+    def test_inline_allow_for_other_rule_does_not_suppress(self):
+        src = ("pub fn f(x: Option<u32>) -> u32 {\n"
+               "    // locality-lint: allow(missing-docs): wrong rule\n"
+               "    x.unwrap()\n"
+               "}\n")
+        self.assertEqual(
+            1, len(self._lint_source(src, "panic-in-serve-path")))
+
+    def test_baseline_suppresses_and_tracks_usage(self):
+        f = engine.Finding("panic-in-serve-path", "coordinator/serve.rs",
+                           3, "msg", "x.unwrap()")
+        with tempfile.TemporaryDirectory() as tmp:
+            path = os.path.join(tmp, "baseline.toml")
+            with open(path, "w", encoding="utf-8") as fh:
+                fh.write('[[suppress]]\n'
+                         'rule = "panic-in-serve-path"\n'
+                         'path = "coordinator/serve.rs"\n'
+                         'contains = "unwrap"\n'
+                         'reason = "demo"\n'
+                         '[[suppress]]\n'
+                         'rule = "missing-docs"\n'
+                         'path = "other.rs"\n'
+                         'reason = "stale"\n')
+            baseline = engine.Baseline.load(path)
+        self.assertTrue(baseline.suppresses(f))
+        self.assertEqual(1, len(baseline.unused()))
+        self.assertEqual("missing-docs", baseline.unused()[0]["rule"])
+
+    def test_baseline_rejects_entry_without_reason(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            path = os.path.join(tmp, "baseline.toml")
+            with open(path, "w", encoding="utf-8") as fh:
+                fh.write('[[suppress]]\nrule = "x"\npath = "y.rs"\n')
+            with self.assertRaises(engine.BaselineError):
+                engine.Baseline.load(path)
+
+    def test_main_exit_codes(self):
+        clean = os.path.join(FIXTURES, "missing_docs", "pass")
+        dirty = os.path.join(FIXTURES, "missing_docs", "fail")
+        self.assertEqual(0, engine.main(
+            [clean, "--rule", "missing-docs", "--no-baseline"]))
+        self.assertEqual(1, engine.main(
+            [dirty, "--rule", "missing-docs", "--no-baseline"]))
+        self.assertEqual(2, engine.main(
+            [clean, "--rule", "no-such-rule"]))
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,117 @@
+r"""Tokenizer unit tests: raw strings, nested block comments,
+lifetimes vs char literals, and `r#"..."#` edge cases."""
+
+import os
+import sys
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__)))))
+
+from lint import rust_tokens as rt  # noqa: E402
+
+
+def kinds_for(text):
+    return [(kind, text[a:b]) for kind, a, b in rt.scan(text)]
+
+
+def view(text):
+    return rt.code_view(text, rt.scan(text))
+
+
+class TokenizerTest(unittest.TestCase):
+    def test_spans_cover_input_exactly(self):
+        text = 'fn f() { let s = "x"; /* c */ } // tail\n'
+        spans = rt.scan(text)
+        self.assertEqual(spans[0][1], 0)
+        self.assertEqual(spans[-1][2], len(text))
+        for (_, _, e1), (_, s2, _) in zip(spans, spans[1:]):
+            self.assertEqual(e1, s2)
+
+    def test_line_comment(self):
+        got = kinds_for("let x = 1; // note\nlet y = 2;\n")
+        self.assertIn((rt.KIND_LINE_COMMENT, "// note"), got)
+
+    def test_nested_block_comment(self):
+        text = "a /* outer /* inner */ still comment */ b"
+        got = kinds_for(text)
+        self.assertEqual(
+            got,
+            [
+                (rt.KIND_CODE, "a "),
+                (rt.KIND_BLOCK_COMMENT,
+                 "/* outer /* inner */ still comment */"),
+                (rt.KIND_CODE, " b"),
+            ])
+
+    def test_plain_string_with_escapes(self):
+        text = r'let s = "he said \"unsafe\" loudly"; unsafe {}'
+        v = view(text)
+        self.assertNotIn("he said", v)
+        self.assertIn("unsafe {}", v)
+        # exactly one `unsafe` survives in the code view
+        self.assertEqual(v.count("unsafe"), 1)
+
+    def test_raw_string_no_hashes(self):
+        got = kinds_for('let p = r"C:\\dir\\file";')
+        self.assertIn((rt.KIND_STRING, r'r"C:\dir\file"'), got)
+
+    def test_raw_string_with_hashes_and_inner_quote(self):
+        text = 'let j = r#"{"k": "v // not a comment"}"#; f();'
+        got = kinds_for(text)
+        self.assertIn(
+            (rt.KIND_STRING, 'r#"{"k": "v // not a comment"}"#'), got)
+        self.assertIn("f();", view(text))
+
+    def test_raw_string_double_hash(self):
+        text = 'r##"contains "# inside"##'
+        got = kinds_for(text)
+        self.assertEqual(got, [(rt.KIND_STRING, text)])
+
+    def test_byte_and_raw_byte_strings(self):
+        got = kinds_for(r'let a = b"\x00"; let b2 = br#"raw"#;')
+        self.assertIn((rt.KIND_STRING, r'b"\x00"'), got)
+        self.assertIn((rt.KIND_STRING, 'br#"raw"#'), got)
+
+    def test_identifier_ending_in_r_is_not_raw_prefix(self):
+        # `for` ends in `r`; the following string is a plain string.
+        got = kinds_for('for x in par("y") {}')
+        self.assertIn((rt.KIND_STRING, '"y"'), got)
+        joined = "".join(t for k, t in got if k == rt.KIND_CODE)
+        self.assertIn("for x in par(", joined)
+
+    def test_lifetime_is_code_char_is_not(self):
+        text = "fn f<'a>(x: &'a str) -> char { 'x' }"
+        v = view(text)
+        self.assertIn("<'a>", v)
+        self.assertIn("&'a str", v)
+        self.assertNotIn("'x'", v)
+
+    def test_char_escapes(self):
+        for lit in (r"'\''", r"'\n'", r"'\u{1F600}'"):
+            got = kinds_for(f"let c = {lit};")
+            self.assertIn((rt.KIND_CHAR, lit), got,
+                          f"char literal {lit} not tokenized")
+
+    def test_loop_label_is_code(self):
+        v = view("'outer: for i in 0..n { break 'outer; }")
+        self.assertIn("'outer:", v)
+        self.assertIn("break 'outer;", v)
+
+    def test_code_view_preserves_lines(self):
+        text = 'a\n"two\nline string"\n/* two\nline comment */\nb\n'
+        v = view(text)
+        self.assertEqual(v.count("\n"), text.count("\n"))
+        self.assertEqual(len(v), len(text))
+
+    def test_line_index(self):
+        text = "one\ntwo\nthree\n"
+        li = rt.LineIndex(text)
+        self.assertEqual(li.line(0), 1)
+        self.assertEqual(li.line(4), 2)
+        self.assertEqual(li.line_text(3), "three")
+        self.assertEqual(li.count, 4)  # trailing newline opens line 4
+
+
+if __name__ == "__main__":
+    unittest.main()
