@@ -1,0 +1,47 @@
+//! Bench E21 — the out-of-core train store: the three-member MCS
+//! serving one query stream from the resident backend (whole train
+//! set pinned in memory) and then from a chunked `.lmtc` store at
+//! three pinned-small chunk sizes (256/512/2000 of 4000 rows — 16, 8
+//! and 2 chunks) streamed through the double-buffered scan. The sizes
+//! are pinned explicitly so every chunked run genuinely streams — at
+//! the auto ~4 MiB chunk size this working set would fit in one chunk
+//! and resident vs chunked would be the same code path. Parity is
+//! asserted in-process at every size before anything is timed:
+//! chunking is a working-set decision, never a semantic one
+//! (determinism contract #6).
+//!
+//! Writes `BENCH_ooc.json` at the repo root (uploaded by CI alongside
+//! the other BENCH jsons). Regenerate with:
+//!
+//! ```bash
+//! cargo bench --bench bench_ooc
+//! # or, with geometry control:
+//! cargo run --release -- ooc --train-n 4000 --queries 256 \
+//!     --chunk-sizes 256,512,2000 --out-json ../BENCH_ooc.json
+//! ```
+//!
+//! This bench *measures and reports*; the acceptance gate — every
+//! chunk size's throughput ≥ 0.7× resident, i.e. the double buffer
+//! hides most of the streaming latency — is enforced in exactly one
+//! place, `scripts/check_bench_ooc.py`, run by the CI bench job
+//! against the JSON this writes.
+
+use std::path::PathBuf;
+
+use locality_ml::cli::commands::cmd_ooc;
+
+fn main() -> anyhow::Result<()> {
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../BENCH_ooc.json");
+    let store = std::env::temp_dir()
+        .join(format!("locality_ml_bench_ooc_{}.lmtc",
+                      std::process::id()));
+    let result = cmd_ooc(4000, 256, 7, &store, &[256, 512, 2000],
+                         Some(out.as_path()));
+    std::fs::remove_file(&store).ok();
+    result?;
+    println!("\n(gate lives in scripts/check_bench_ooc.py — CI fails \
+              if any chunk size's throughput drops below 0.7x \
+              resident)");
+    Ok(())
+}

@@ -130,8 +130,8 @@ pub fn cmd_joint(exp: &JointExperiment) -> Result<Table> {
                 format!("{:.2}x", sep.test_secs / joint.test_secs)]);
     println!("{}", table.to_markdown());
     println!("accuracy: knn={:.3} prw={:.3} (identical in both scenarios)",
-        accuracy(&joint.knn, &test.labels),
-        accuracy(&joint.prw, &test.labels));
+        accuracy(&joint.knn, test.labels()),
+        accuracy(&joint.prw, test.labels()));
     Ok(table)
 }
 
@@ -1289,7 +1289,7 @@ pub fn cmd_serve_bench(train_n: usize, n_queries: usize, seed: u64,
         "--batches needs positive batch sizes");
     let ds = chembl_like(train_n + n_queries, seed);
     let (train, test) = ds.split(train_n);
-    let queries = &test.features;
+    let queries = test.features();
     let d = test.d;
     let max_wait_us: u64 = 2_000;
     eprintln!("# serve-bench: {n_queries}q over {train_n}t x {d}d \
@@ -1419,6 +1419,181 @@ pub fn cmd_serve_bench(train_n: usize, n_queries: usize, seed: u64,
         std::fs::write(path, json)
             .with_context(|| format!("writing {}", path.display()))?;
         eprintln!("# serving engine timings -> {}", path.display());
+    }
+    Ok(table)
+}
+
+/// `convert` — write a dataset out in the chunked `.lmtc` layout the
+/// out-of-core [`TrainStore`] backend streams from. With `--in` the
+/// source is an existing `.lmld` resident dataset; without it a
+/// synthetic Chembl-like set of `--train-n` rows is generated. The
+/// chunk size resolves through the session chain (`--chunk-rows` →
+/// `LOCALITY_ML_CHUNK_ROWS` → the ~4 MiB auto size).
+///
+/// [`TrainStore`]: crate::data::TrainStore
+pub fn cmd_convert(input: Option<&Path>, out: &Path, train_n: usize,
+                   seed: u64) -> Result<()> {
+    use crate::data::{read_dataset, write_chunked, TrainStore};
+    use crate::kernels::{default_chunk_rows, TileConfig};
+
+    let ds = match input {
+        Some(path) => read_dataset(path)?,
+        None => {
+            anyhow::ensure!(train_n >= 1, "--train-n must be >= 1");
+            eprintln!("# generating synthetic Chembl-like data \
+                       ({train_n} rows, seed={seed})");
+            chembl_like(train_n, seed)
+        }
+    };
+    let chunk_rows = default_chunk_rows(ds.d, &TileConfig::westmere());
+    if let Some(dir) = out.parent().filter(|p| !p.as_os_str().is_empty())
+    {
+        std::fs::create_dir_all(dir)?;
+    }
+    write_chunked(&ds, out, chunk_rows)?;
+    // re-open through the seam: proves the file round-trips before the
+    // caller points a long job at it
+    let store = TrainStore::open_chunked(out)?;
+    let chunks = store.n().div_ceil(store.chunk_rows());
+    println!("wrote {} — n={} d={} classes={} chunk_rows={} ({chunks} \
+              chunk(s), {:.1} MiB features, {:.1} MiB per chunk)",
+             out.display(), store.n(), store.d(), store.n_classes(),
+             store.chunk_rows(),
+             (store.n() * store.d() * 4) as f64 / (1 << 20) as f64,
+             (store.chunk_rows().min(store.n()) * store.d() * 4) as f64
+                 / (1 << 20) as f64);
+    Ok(())
+}
+
+/// `ooc` — the out-of-core demonstration: fit and serve the
+/// three-member MCS from the resident backend, then from a chunked
+/// `.lmtc` store at each requested chunk size, assert every chunked
+/// run's predictions equal the resident run's bit for bit (the sixth
+/// determinism contract: chunking never changes bits), and report the
+/// wall-clock and working-set trade each chunk size buys.
+///
+/// An empty `chunk_sizes` resolves one size through the session chain
+/// (`--chunk-rows` → `LOCALITY_ML_CHUNK_ROWS` → the ~4 MiB auto size);
+/// the bench harness pins several small explicit sizes so the chunked
+/// runs genuinely stream. Optionally writes `BENCH_ooc.json`; CI gates
+/// every chunked size's throughput ≥ 0.7x resident via
+/// `scripts/check_bench_ooc.py`.
+pub fn cmd_ooc(train_n: usize, n_queries: usize, seed: u64,
+               store_path: &Path, chunk_sizes: &[usize],
+               out_json: Option<&Path>) -> Result<Table> {
+    use crate::coordinator::{McsPredictions, MultiClassifier};
+    use crate::data::{write_chunked, TrainStore};
+    use crate::kernels::{default_chunk_rows, TileConfig};
+    use crate::util::Stopwatch;
+
+    anyhow::ensure!(train_n >= 2 && n_queries >= 1,
+        "need a training set and at least one query");
+    let ds = chembl_like(train_n + n_queries, seed);
+    let (train, test) = ds.split(train_n);
+    let d = train.d;
+    let chunk_sizes = if chunk_sizes.is_empty() {
+        vec![default_chunk_rows(d, &TileConfig::westmere())]
+    } else {
+        chunk_sizes.to_vec()
+    };
+    anyhow::ensure!(chunk_sizes.iter().all(|&c| c >= 1),
+        "chunk sizes must be >= 1");
+    eprintln!("# ooc: {n_queries}q over {train_n}t x {d}d seed={seed} \
+               chunk_sizes={chunk_sizes:?}");
+    if let Some(dir) =
+        store_path.parent().filter(|p| !p.as_os_str().is_empty())
+    {
+        std::fs::create_dir_all(dir)?;
+    }
+
+    // best-of-2 wall clock (a parity pass always precedes the timed
+    // runs, so the page cache and the allocator are already warm)
+    let time = |f: &dyn Fn() -> Result<McsPredictions>| -> Result<f64> {
+        let mut best = f64::INFINITY;
+        for _ in 0..2 {
+            let clock = Stopwatch::start();
+            std::hint::black_box(f()?);
+            best = best.min(clock.elapsed_secs());
+        }
+        Ok(best)
+    };
+
+    // resident baseline: whole train set pinned in memory; its
+    // predictions are the parity oracle for every chunked run
+    let resident = MultiClassifier::fit(&train);
+    let want = resident.predict(test.features());
+    let resident_secs =
+        time(&|| resident.try_predict(test.features()))?;
+    let resident_mib = (train.n * d * 4) as f64 / (1 << 20) as f64;
+
+    // one chunked run per size, features streamed from disk through
+    // the double buffer; parity BEFORE timing, every size
+    let mut runs: Vec<(usize, usize, f64, f64)> = Vec::new();
+    for &chunk_rows in &chunk_sizes {
+        write_chunked(&train, store_path, chunk_rows)?;
+        let mcs = MultiClassifier::fit_store(
+            TrainStore::open_chunked(store_path)?)?;
+        anyhow::ensure!(mcs.is_chunked(), "store opened resident");
+        let got = mcs.try_predict(test.features())?;
+        anyhow::ensure!(got == want,
+            "chunked predictions diverged from resident at chunk_rows \
+             {chunk_rows} — the chunking determinism contract is \
+             broken");
+        let secs = time(&|| mcs.try_predict(test.features()))?;
+        // two chunks in flight under the double buffer
+        let mib = (2 * chunk_rows.min(train.n) * d * 4) as f64
+            / (1 << 20) as f64;
+        runs.push((chunk_rows, train.n.div_ceil(chunk_rows), secs, mib));
+    }
+
+    let acc = accuracy(&want.vote, test.labels());
+    let mut table = Table::new(
+        "Out-of-core MCS — resident vs chunked `.lmtc` backend \
+         (predictions bit-identical at every chunk size, asserted \
+         before timing)",
+        &["backend", "chunk rows", "chunks", "train features (MiB)",
+          "secs", "queries/s", "vote accuracy"]);
+    table.row(&["resident".into(), "-".into(), "-".into(),
+                format!("{resident_mib:.1}"),
+                format!("{resident_secs:.6}"),
+                format!("{:.0}", n_queries as f64 / resident_secs),
+                format!("{acc:.4}")]);
+    for &(chunk_rows, chunks, secs, mib) in &runs {
+        table.row(&["chunked".into(), chunk_rows.to_string(),
+                    chunks.to_string(), format!("{mib:.1}"),
+                    format!("{secs:.6}"),
+                    format!("{:.0}", n_queries as f64 / secs),
+                    format!("{acc:.4}")]);
+    }
+    println!("{}", table.to_markdown());
+    eprintln!("# store -> {}", store_path.display());
+
+    if let Some(path) = out_json {
+        let mut json = String::from("{\n");
+        json.push_str("  \"schema\": \"locality-ml/bench-ooc/v1\",\n");
+        json.push_str(&format!(
+            "  \"shape\": {{\"train\": {train_n}, \"queries\": \
+             {n_queries}, \"d\": {d}, \"seed\": {seed}}},\n"));
+        json.push_str("  \"results\": [\n");
+        json.push_str(&format!(
+            "    {{\"backend\": \"resident\", \"secs\": \
+             {resident_secs:.6}, \"throughput_qps\": {:.1}, \
+             \"working_set_mib\": {resident_mib:.2}}},\n",
+            n_queries as f64 / resident_secs));
+        for (i, &(chunk_rows, chunks, secs, mib)) in
+            runs.iter().enumerate() {
+            let comma = if i + 1 < runs.len() { "," } else { "" };
+            json.push_str(&format!(
+                "    {{\"backend\": \"chunked\", \"chunk_rows\": \
+                 {chunk_rows}, \"chunks\": {chunks}, \"secs\": \
+                 {secs:.6}, \"throughput_qps\": {:.1}, \
+                 \"working_set_mib\": {mib:.2}}}{comma}\n",
+                n_queries as f64 / secs));
+        }
+        json.push_str("  ]\n}\n");
+        std::fs::write(path, json)
+            .with_context(|| format!("writing {}", path.display()))?;
+        eprintln!("# out-of-core timings -> {}", path.display());
     }
     Ok(table)
 }

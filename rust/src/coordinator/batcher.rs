@@ -111,7 +111,7 @@ impl BatchBuffers {
             self.x[slot * self.d..(slot + 1) * self.d]
                 .copy_from_slice(ds.row(i));
             self.y_onehot[slot * self.classes
-                + ds.labels[i] as usize] = 1.0;
+                + ds.labels()[i] as usize] = 1.0;
         }
         n
     }

@@ -68,19 +68,19 @@ impl BoostedNb {
     pub fn fit(train: &Dataset, s1_size: usize, s2_size: usize, seed: u64)
         -> Self {
         // M1: random subset.
-        let all: Vec<i32> = train.labels.clone();
+        let all: Vec<i32> = train.labels().to_vec();
         let m1_sets = boosting_sets(&all, &all, &all, s1_size, 0, seed);
         let m1 = NaiveBayes::fit_indexed(train, &m1_sets.s1);
         // M2: the most informative sample given M1's predictions
         // (the paper's §3.2.2 reuse note: M1's predictions over T are
         // computed once here and reused for both S2 and S3).
-        let m1_preds = m1.predict(&train.features);
-        let sets = boosting_sets(&train.labels, &m1_preds, &m1_preds,
+        let m1_preds = m1.predict(train.features());
+        let sets = boosting_sets(train.labels(), &m1_preds, &m1_preds,
                                  s1_size, s2_size, seed ^ 1);
         let m2 = NaiveBayes::fit_indexed(train, &sets.s2);
         // M3: where M1 and M2 disagree.
-        let m2_preds = m2.predict(&train.features);
-        let sets = boosting_sets(&train.labels, &m1_preds, &m2_preds,
+        let m2_preds = m2.predict(train.features());
+        let sets = boosting_sets(train.labels(), &m1_preds, &m2_preds,
                                  s1_size, s2_size, seed ^ 2);
         let m3 = if sets.s3.is_empty() {
             // degenerate: perfect agreement -> fall back to M1's sample

@@ -94,22 +94,6 @@ impl<'a> FoldStream<'a> {
                               consume)
     }
 
-    /// Deprecated tuple-taking form of [`FoldStream::shared_pass_exec`];
-    /// bit-identical delivery for the same `(threads, schedule)`.
-    #[deprecated(note = "use `shared_pass_exec` with an `ExecPolicy`")]
-    pub fn shared_pass_par<S: Send>(
-        &self,
-        batch: usize,
-        seed: u64,
-        threads: usize,
-        schedule: Schedule,
-        states: &mut [S],
-        consume: impl Fn(&mut S, usize, &[usize]) + Sync,
-    ) -> PassStats {
-        self.shared_pass_core(batch, seed, threads, schedule, states,
-                              consume)
-    }
-
     fn shared_pass_core<S: Send>(
         &self,
         batch: usize,
@@ -189,9 +173,6 @@ impl<'a> FoldStream<'a> {
 
 #[cfg(test)]
 mod tests {
-    // the deprecated tuple entry point stays under test: its parity
-    // with shared_pass_exec is part of the migration contract
-    #![allow(deprecated)]
     use super::*;
     use crate::data::synth::gaussian_mixture;
     use crate::data::MixtureSpec;
@@ -275,8 +256,11 @@ mod tests {
                               Schedule::Auto] {
                     let mut streams: Vec<Vec<usize>> =
                         vec![Vec::new(); k];
-                    let stats = fs.shared_pass_par(
-                        batch, seed, threads, sched, &mut streams,
+                    let pol = ExecPolicy::default()
+                        .with_threads(threads)
+                        .with_schedule(sched);
+                    let stats = fs.shared_pass_exec(
+                        batch, seed, &pol, &mut streams,
                         |s: &mut Vec<usize>, _l, b| {
                             s.extend_from_slice(b)
                         });
@@ -288,22 +272,6 @@ mod tests {
                             "learner {l} stream diverged at {threads} \
                              threads under {sched:?} (k={k}, n={n})");
                     }
-                    // the ExecPolicy entry must deliver the same
-                    // streams as the tuple form it replaces
-                    let mut exec_streams: Vec<Vec<usize>> =
-                        vec![Vec::new(); k];
-                    let pol = ExecPolicy::default()
-                        .with_threads(threads)
-                        .with_schedule(sched);
-                    let exec_stats = fs.shared_pass_exec(
-                        batch, seed, &pol, &mut exec_streams,
-                        |s: &mut Vec<usize>, _l, b| {
-                            s.extend_from_slice(b)
-                        });
-                    prop_assert!(exec_stats == want_stats
-                                 && exec_streams == streams,
-                        "shared_pass_exec diverged at {threads} \
-                         threads under {sched:?}");
                 }
             }
             Ok(())

@@ -16,14 +16,14 @@
 //! # The parallel shared-distance sweep engine
 //!
 //! Since PR 3 the split distances are batched through the locality-tiled
-//! distance kernel ([`pairwise_sq_dists_gather_exec`]) instead of a
-//! per-pair scalar loop, and the engine shards the candidate sweep
-//! across CV splits on the scoped worker pool: one job per split,
-//! results merged in split order. Since PR 4 the split jobs can also be
-//! **work-stolen** ([`Schedule::Stealing`]): workers claim splits from
-//! a shared cursor, so skewed/ragged split distributions no longer
-//! serialise onto the worker whose static contiguous range held the big
-//! folds. Per-split results are independent and the merge is u64/f64
+//! distance kernel instead of a per-pair scalar loop, and the engine
+//! shards the candidate sweep across CV splits on the scoped worker
+//! pool: one job per split, results merged in split order. Since PR 4
+//! the split jobs can also be **work-stolen**
+//! ([`Schedule::Stealing`]): workers claim splits from a shared
+//! cursor, so skewed/ragged split distributions no longer serialise
+//! onto the worker whose static contiguous range held the big folds.
+//! Per-split results are independent and the merge is u64/f64
 //! arithmetic in a fixed split order, so the parallel sweep is
 //! **bit-identical to the sequential [`sweep_shared`] at any thread
 //! count under either schedule** — property-tested below.
@@ -33,17 +33,27 @@
 //! cores, `--schedule` → `LOCALITY_ML_SCHEDULE` → auto, `--dist-algo`
 //! → `LOCALITY_ML_DIST_ALGO` → auto), and the fan-out is gated on the
 //! total distance work via [`ExecPolicy::threads_for`], so small
-//! sweeps stay on the sequential path. The old tuple-taking entries
-//! survive only as deprecated wrappers over the same core.
+//! sweeps stay on the sequential path.
 //!
 //! Since PR 5 the engine is also wired to the **GEMM-formulation
-//! distance kernel**: it builds ONE dataset-level [`NormCache`] per
+//! distance kernel**: the per-dataset norm cache is built ONCE per
 //! sweep and every split gathers its row norms from it — under the old
 //! nest each train row's `‖t‖²` was implicitly recomputed once per
 //! split per candidate, pure redundancy by the paper's "reuse of
 //! computation results" guideline. The `norm_cache_builds` counter
 //! property test pins the build-once contract. Under Gemm the cross
 //! term now runs through the packed SIMD micro-kernel.
+//!
+//! Since PR 9 the engine reads train data through the
+//! [`TrainStore`] seam: every split's query×train distance block comes
+//! from [`TrainStore::gather_dists`] over the store's row-index views,
+//! so the same sweep runs against a resident dataset or an out-of-core
+//! `.lmtc` chunk file ([`sweep_store_exec`]) — with bit-identical
+//! results between the backends at any chunk size, because the
+//! gathered distance bits themselves are chunk-invariant (the store's
+//! own property suite pins that; the sweep-level parity is pinned
+//! below). The store also owns the sweep's norm cache (built once at
+//! store construction), which is what keeps the build-once contract.
 //!
 //! # Distance-eval accounting
 //!
@@ -56,12 +66,11 @@
 //! both sweeps from one structure, so both shared results carry the same
 //! single-pass count.
 
-use crate::data::{Dataset, Folds};
+use anyhow::Result;
+
+use crate::data::{Dataset, Folds, TrainStore};
 use crate::kernels::parallel::{run_jobs, Schedule};
-use crate::kernels::{
-    pairwise_sq_dists_gather_exec, DistanceAlgo, ExecPolicy, NormCache,
-    TileConfig,
-};
+use crate::kernels::{DistanceAlgo, ExecPolicy, TileConfig};
 
 /// Smallest PRW bandwidth the vote will use. Silverman's rule returns
 /// `h = 0` for constant-feature datasets (σ = 0), which would make the
@@ -102,33 +111,35 @@ struct SplitDistances {
     truth: Vec<i32>,
 }
 
-/// Batch one CV split's query×train distances through the
-/// formulation-dispatching kernel. Under [`DistanceAlgo::Exact`] this
+/// Batch one CV split's query×train distances through the store's
+/// formulation-dispatching gather. Under [`DistanceAlgo::Exact`] this
 /// is bit-identical to the scalar `sq_dist` loop it replaced (the
 /// tiled and naive distance paths share per-pair arithmetic); under
 /// Gemm the cross term runs through the matmul micro-kernel and the
-/// row norms are **gathered from the dataset-level [`NormCache`]** —
-/// built once per dataset and reused across every split and every
+/// row norms are **gathered from the store-level norm cache** — built
+/// once at store construction and reused across every split and every
 /// candidate, where the old nest implicitly recomputed each train
-/// row's norm once per split per candidate. Returns the split
-/// structure and the number of distance evaluations it cost. The
-/// kernel runs sequentially by construction (threads = 1): parallelism
-/// lives one level up, in the split fan-out, which already owns the
-/// cores.
+/// row's norm once per split per candidate. A `Chunked` store streams
+/// the needed train rows from disk with the same distance bits
+/// (chunk-invariance is the store's own property contract). Returns
+/// the split structure and the number of distance evaluations it cost.
+/// The kernel runs sequentially by construction (threads = 1):
+/// parallelism lives one level up, in the split fan-out, which already
+/// owns the cores.
 fn split_distances(
-    ds: &Dataset,
+    store: &TrainStore,
     folds: &Folds,
     test_fold: usize,
     tiles: &TileConfig,
     algo: DistanceAlgo,
-    cache: &NormCache,
-) -> (SplitDistances, u64) {
+) -> Result<(SplitDistances, u64)> {
     let train_idx = folds.train_indices(test_fold);
     let test_idx = folds.test_indices(test_fold);
     let n = train_idx.len();
-    let dists = pairwise_sq_dists_gather_exec(
-        &ds.features, ds.d, &train_idx, test_idx, cache, tiles,
-        &ExecPolicy::sequential().with_algo(algo));
+    let dists = store.gather_dists(
+        &train_idx, test_idx, tiles,
+        &ExecPolicy::sequential().with_algo(algo))?;
+    let labels = store.labels();
     let mut neighbours = Vec::with_capacity(test_idx.len());
     let mut truth = Vec::with_capacity(test_idx.len());
     for (q, &qi) in test_idx.iter().enumerate() {
@@ -136,13 +147,14 @@ fn split_distances(
         let mut pairs: Vec<(f32, i32)> = row
             .iter()
             .zip(&train_idx)
-            .map(|(&dist, &j)| (dist, ds.labels[j]))
+            .map(|(&dist, &j)| (dist, labels[j]))
             .collect();
         pairs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         neighbours.push(pairs);
-        truth.push(ds.labels[qi]);
+        truth.push(labels[qi]);
     }
-    (SplitDistances { neighbours, truth }, (test_idx.len() * n) as u64)
+    Ok((SplitDistances { neighbours, truth },
+        (test_idx.len() * n) as u64))
 }
 
 fn knn_vote(sorted: &[(f32, i32)], k: usize, classes: usize) -> i32 {
@@ -189,34 +201,34 @@ struct SplitCounts {
 /// structure — the unit of work a sweep job runs.
 #[allow(clippy::too_many_arguments)]
 fn eval_split(
-    ds: &Dataset,
+    store: &TrainStore,
     folds: &Folds,
     test_fold: usize,
     ks: &[usize],
     bandwidths: &[f32],
     tiles: &TileConfig,
     algo: DistanceAlgo,
-    cache: &NormCache,
-) -> SplitCounts {
+) -> Result<SplitCounts> {
     let (split, distance_evals) =
-        split_distances(ds, folds, test_fold, tiles, algo, cache);
+        split_distances(store, folds, test_fold, tiles, algo)?;
+    let classes = store.n_classes();
     let mut k_correct = vec![0u64; ks.len()];
     let mut b_correct = vec![0u64; bandwidths.len()];
     let mut total = 0u64;
     for (sorted, &truth) in split.neighbours.iter().zip(&split.truth) {
         total += 1;
         for (i, &k) in ks.iter().enumerate() {
-            if knn_vote(sorted, k, ds.n_classes) == truth {
+            if knn_vote(sorted, k, classes) == truth {
                 k_correct[i] += 1;
             }
         }
         for (i, &h) in bandwidths.iter().enumerate() {
-            if prw_vote(sorted, h, ds.n_classes) == truth {
+            if prw_vote(sorted, h, classes) == truth {
                 b_correct[i] += 1;
             }
         }
     }
-    SplitCounts { k_correct, b_correct, total, distance_evals }
+    Ok(SplitCounts { k_correct, b_correct, total, distance_evals })
 }
 
 /// Merge per-split partials in split order into the two sweep results.
@@ -259,38 +271,40 @@ fn merge_splits(
 
 /// The shared-distance sweep engine body: one job per CV split
 /// distributed over the scoped worker pool, every split evaluated
-/// under the given [`DistanceAlgo`] against ONE dataset-level
-/// [`NormCache`] built here — once per sweep, reused by every split
-/// and every candidate (the reuse the `norm_cache_builds` property
-/// test pins; the old nest implicitly recomputed each row norm once
-/// per split per candidate). Partials come back in **split order**
-/// under both schedules and the merge is pure u64 arithmetic, so for a
-/// fixed algorithm the result is bit-identical at ANY thread count
-/// under EITHER schedule; `threads = 1` runs the jobs inline.
+/// under the given [`DistanceAlgo`] against the store's norm cache —
+/// built once at store construction, reused by every split and every
+/// candidate (the reuse the `norm_cache_builds` property test pins;
+/// the old nest implicitly recomputed each row norm once per split per
+/// candidate). Partials come back in **split order** under both
+/// schedules and the merge is pure u64 arithmetic, so for a fixed
+/// algorithm the result is bit-identical at ANY thread count under
+/// EITHER schedule; `threads = 1` runs the jobs inline. A `Chunked`
+/// store is re-streamed independently per split job (each gather
+/// opens its own read handle), so the fan-out needs no coordination.
 fn sweep_core(
-    ds: &Dataset,
+    store: &TrainStore,
     folds: &Folds,
     ks: &[usize],
     bandwidths: &[f32],
     threads: usize,
     schedule: Schedule,
     algo: DistanceAlgo,
-) -> (SweepResult<usize>, SweepResult<f32>) {
+) -> Result<(SweepResult<usize>, SweepResult<f32>)> {
     let tiles = TileConfig::westmere_workers(threads.max(1));
     let tiles_ref = &tiles;
-    let cache = NormCache::compute(&ds.features, ds.d);
-    let cache_ref = &cache;
-    let jobs: Vec<Box<dyn FnOnce() -> SplitCounts + Send + '_>> =
+    let jobs: Vec<Box<dyn FnOnce() -> Result<SplitCounts> + Send + '_>> =
         (0..folds.k())
         .map(|test_fold| {
             Box::new(move || {
-                eval_split(ds, folds, test_fold, ks, bandwidths,
-                           tiles_ref, algo, cache_ref)
-            }) as Box<dyn FnOnce() -> SplitCounts + Send + '_>
+                eval_split(store, folds, test_fold, ks, bandwidths,
+                           tiles_ref, algo)
+            }) as Box<dyn FnOnce() -> Result<SplitCounts> + Send + '_>
         })
         .collect();
-    let parts = run_jobs(threads, schedule, jobs);
-    merge_splits(&parts, ks, bandwidths)
+    let parts = run_jobs(threads, schedule, jobs)
+        .into_iter()
+        .collect::<Result<Vec<_>>>()?;
+    Ok(merge_splits(&parts, ks, bandwidths))
 }
 
 /// Production entry for the sweep engine: one [`ExecPolicy`] carries
@@ -310,14 +324,35 @@ pub fn sweep_shared_exec(
     bandwidths: &[f32],
     policy: &ExecPolicy,
 ) -> (SweepResult<usize>, SweepResult<f32>) {
+    let store = TrainStore::resident_ref(ds);
+    // infallible: a resident store never touches I/O and fold indices
+    // are in range by construction
+    sweep_store_exec(&store, folds, ks, bandwidths, policy)
+        .expect("resident sweep cannot fail")
+}
+
+/// The store-backed sweep entry: [`sweep_shared_exec`] lifted onto the
+/// [`TrainStore`] seam, so the same engine sweeps a resident dataset
+/// or an out-of-core `.lmtc` chunk file. Determinism contract: for a
+/// fixed resolved formulation the result is bit-identical between the
+/// two backends at any chunk size (the gathered distance bits are
+/// chunk-invariant), at any thread count, under either schedule.
+pub fn sweep_store_exec(
+    store: &TrainStore,
+    folds: &Folds,
+    ks: &[usize],
+    bandwidths: &[f32],
+    policy: &ExecPolicy,
+) -> Result<(SweepResult<usize>, SweepResult<f32>)> {
+    let (n, d) = (store.n(), store.d());
     let work: usize = (0..folds.k())
         .map(|f| {
             let test = folds.test_indices(f).len();
-            test * (ds.n - test) * ds.d
+            test * (n - test) * d
         })
         .sum();
     let p = policy.resolve();
-    sweep_core(ds, folds, ks, bandwidths, policy.threads_for(work),
+    sweep_core(store, folds, ks, bandwidths, policy.threads_for(work),
                p.schedule, p.algo)
 }
 
@@ -332,55 +367,8 @@ pub fn sweep_shared(
     ks: &[usize],
     bandwidths: &[f32],
 ) -> (SweepResult<usize>, SweepResult<f32>) {
-    sweep_core(ds, folds, ks, bandwidths, 1, Schedule::Static,
-               DistanceAlgo::Exact)
-}
-
-/// Deprecated tuple-taking engine entry; [`sweep_shared_exec`] with a
-/// pinned [`ExecPolicy`] is the replacement. Bit-identical for the
-/// same `(threads, schedule, algo)`.
-#[deprecated(note = "use `sweep_shared_exec` with an `ExecPolicy`")]
-pub fn sweep_shared_algo(
-    ds: &Dataset,
-    folds: &Folds,
-    ks: &[usize],
-    bandwidths: &[f32],
-    threads: usize,
-    schedule: Schedule,
-    algo: DistanceAlgo,
-) -> (SweepResult<usize>, SweepResult<f32>) {
-    sweep_core(ds, folds, ks, bandwidths, threads, schedule, algo)
-}
-
-/// The parallel shared-distance sweep engine on the Exact formulation:
-/// bit-identical to the sequential [`sweep_shared`] at ANY thread
-/// count under EITHER schedule (each split's distance kernel stays
-/// sequential — the split fan-out already owns the cores).
-#[deprecated(note = "use `sweep_shared_exec` with an `ExecPolicy` \
-                     pinning `DistanceAlgo::Exact`")]
-pub fn sweep_shared_par(
-    ds: &Dataset,
-    folds: &Folds,
-    ks: &[usize],
-    bandwidths: &[f32],
-    threads: usize,
-    schedule: Schedule,
-) -> (SweepResult<usize>, SweepResult<f32>) {
-    sweep_core(ds, folds, ks, bandwidths, threads, schedule,
-               DistanceAlgo::Exact)
-}
-
-/// Session-default sweep; equivalent to [`sweep_shared_exec`] with the
-/// fully-Auto [`ExecPolicy`].
-#[deprecated(note = "use `sweep_shared_exec` with \
-                     `ExecPolicy::default()`")]
-pub fn sweep_shared_auto(
-    ds: &Dataset,
-    folds: &Folds,
-    ks: &[usize],
-    bandwidths: &[f32],
-) -> (SweepResult<usize>, SweepResult<f32>) {
-    sweep_shared_exec(ds, folds, ks, bandwidths, &ExecPolicy::default())
+    sweep_shared_exec(ds, folds, ks, bandwidths,
+                      &ExecPolicy::sequential())
 }
 
 /// The naive nest the paper criticises: every candidate recomputes the
@@ -396,17 +384,17 @@ pub fn sweep_naive(
 ) -> (SweepResult<usize>, SweepResult<f32>) {
     let tiles = TileConfig::westmere();
     // the baseline keeps its per-candidate distance redundancy (that is
-    // what it measures) but shares one norm cache like every other
-    // caller — the Exact formulation never reads it
-    let cache = NormCache::compute(&ds.features, ds.d);
+    // what it measures) but reads T through the same store seam as
+    // every other caller (one norm cache, built at store construction)
+    let store = TrainStore::resident_ref(ds);
     let mut k_acc = Vec::with_capacity(ks.len());
     let mut k_evals = 0u64;
     for &k in ks {
         let (mut correct, mut total) = (0u64, 0u64);
         for test_fold in 0..folds.k() {
             let (split, evals) = split_distances(
-                ds, folds, test_fold, &tiles, DistanceAlgo::Exact,
-                &cache);
+                &store, folds, test_fold, &tiles, DistanceAlgo::Exact)
+                .expect("resident sweep cannot fail");
             k_evals += evals;
             for (sorted, &truth) in split.neighbours.iter()
                 .zip(&split.truth) {
@@ -424,8 +412,8 @@ pub fn sweep_naive(
         let (mut correct, mut total) = (0u64, 0u64);
         for test_fold in 0..folds.k() {
             let (split, evals) = split_distances(
-                ds, folds, test_fold, &tiles, DistanceAlgo::Exact,
-                &cache);
+                &store, folds, test_fold, &tiles, DistanceAlgo::Exact)
+                .expect("resident sweep cannot fail");
             b_evals += evals;
             for (sorted, &truth) in split.neighbours.iter()
                 .zip(&split.truth) {
@@ -593,41 +581,51 @@ mod tests {
     }
 
     #[test]
-    // The ONLY remaining deprecated callers in this suite: tuple↔exec
-    // parity is the migration contract itself, and the tuple entries
-    // skip the exec work gate, so this test is also what pins the
-    // pool at forced thread counts on small geometries.
-    #[allow(deprecated)]
-    fn exec_engine_matches_the_tuple_entries_bit_for_bit() {
-        // The api_redesign contract: the ExecPolicy entry is the same
-        // engine as the deprecated tuple wrappers. The sweep is
-        // thread/schedule bit-invariant for a fixed formulation, so
-        // the exec entry's work gating cannot move the comparison.
+    fn store_sweep_resident_equals_chunked_to_the_bit() {
+        // The PR 9 seam contract at the sweep level: the SAME engine
+        // swept over a resident dataset and over its `.lmtc` chunk
+        // file must produce identical bits — for both formulations, at
+        // edge-case chunk geometries (single-row chunks, chunk ==
+        // whole set, ragged last chunk), sequential and fanned out.
         let (ds, folds) = small();
         let ks = [1usize, 3, 5];
         let hs = [0.5f32, 8.0];
-        assert_eq!(
-            sweep_shared_exec(&ds, &folds, &ks, &hs,
-                              &ExecPolicy::sequential()),
-            sweep_shared(&ds, &folds, &ks, &hs),
-            "sequential-policy exec sweep diverged from the oracle");
+        let oracle = sweep_shared(&ds, &folds, &ks, &hs);
+        let resident = TrainStore::resident_ref(&ds);
+        let path = std::env::temp_dir().join(format!(
+            "locality_ml_sweep_{}.lmtc", std::process::id()));
         for algo in [DistanceAlgo::Exact, DistanceAlgo::Gemm] {
-            let want = sweep_shared_algo(&ds, &folds, &ks, &hs, 1,
-                                         Schedule::Static, algo);
-            for threads in [2usize, 4, 7] {
-                for sched in [Schedule::Static, Schedule::Stealing] {
-                    let pol = ExecPolicy::default()
-                        .with_threads(threads)
-                        .with_schedule(sched)
-                        .with_algo(algo);
-                    let got = sweep_shared_exec(&ds, &folds, &ks, &hs,
-                                                &pol);
-                    assert_eq!(got, want,
-                        "exec sweep diverged at {threads} threads \
-                         under {sched:?} on {algo:?}");
-                }
+            let seq = ExecPolicy::sequential().with_algo(algo);
+            let want = sweep_store_exec(&resident, &folds, &ks, &hs,
+                                        &seq).unwrap();
+            if algo == DistanceAlgo::Exact {
+                assert_eq!(want, oracle,
+                    "resident store sweep diverged from the oracle");
+            }
+            for chunk_rows in [1usize, 37, ds.n, ds.n + 5] {
+                crate::data::write_chunked(&ds, &path, chunk_rows)
+                    .unwrap();
+                let chunked =
+                    TrainStore::open_chunked(&path).unwrap();
+                assert_eq!(
+                    sweep_store_exec(&chunked, &folds, &ks, &hs, &seq)
+                        .unwrap(),
+                    want,
+                    "chunked sweep diverged (chunk_rows {chunk_rows}, \
+                     {algo:?})");
+                let par = ExecPolicy::default()
+                    .with_threads(4)
+                    .with_schedule(Schedule::Stealing)
+                    .with_algo(algo);
+                assert_eq!(
+                    sweep_store_exec(&chunked, &folds, &ks, &hs, &par)
+                        .unwrap(),
+                    want,
+                    "fanned-out chunked sweep diverged (chunk_rows \
+                     {chunk_rows}, {algo:?})");
             }
         }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -60,8 +60,8 @@ fn validate(train: &Dataset, test: &Dataset) -> Result<()> {
 }
 
 fn tile_tensor(test: &Dataset, tile: usize) -> HostTensor {
-    let rows =
-        &test.features[tile * TEST_TILE * DIM..(tile + 1) * TEST_TILE * DIM];
+    let rows = &test.features()
+        [tile * TEST_TILE * DIM..(tile + 1) * TEST_TILE * DIM];
     HostTensor::f32(vec![TEST_TILE, DIM], rows.to_vec())
 }
 
@@ -78,11 +78,11 @@ pub fn run_separate(engine: &mut Engine, train_path: &Path,
     validate(&train_knn, &test_knn)?;
     validate(&train_prw, &test_prw)?;
     let dev_x_knn = engine.upload(&HostTensor::f32(
-        vec![TRAIN_N, DIM], train_knn.features.clone()))?;
+        vec![TRAIN_N, DIM], train_knn.features().to_vec()))?;
     let dev_y_knn = engine.upload(&HostTensor::f32(
         vec![TRAIN_N, CLASSES], train_knn.one_hot()))?;
     let dev_x_prw = engine.upload(&HostTensor::f32(
-        vec![TRAIN_N, DIM], train_prw.features.clone()))?;
+        vec![TRAIN_N, DIM], train_prw.features().to_vec()))?;
     let dev_y_prw = engine.upload(&HostTensor::f32(
         vec![TRAIN_N, CLASSES], train_prw.one_hot()))?;
     let load_secs = sw.elapsed_secs();
@@ -123,7 +123,7 @@ pub fn run_joint(engine: &mut Engine, train_path: &Path, test_path: &Path)
     let test = read_dataset(test_path)?;
     validate(&train, &test)?;
     let dev_x = engine.upload(&HostTensor::f32(
-        vec![TRAIN_N, DIM], train.features.clone()))?;
+        vec![TRAIN_N, DIM], train.features().to_vec()))?;
     let dev_y = engine.upload(&HostTensor::f32(
         vec![TRAIN_N, CLASSES], train.one_hot()))?;
     let load_secs = sw.elapsed_secs();

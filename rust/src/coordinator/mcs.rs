@@ -12,30 +12,33 @@
 use anyhow::Result;
 
 use crate::data::sampling::majority_vote;
-use crate::data::Dataset;
+use crate::data::{Dataset, TrainStore};
 use crate::kernels::{
-    DistanceAlgo, ExecPolicy, NormCache, PackedPanel, TileConfig,
+    DistanceAlgo, ExecPolicy, PackedPanel, TileConfig,
 };
 use crate::learners::instance::{BANDWIDTH, K};
 use crate::learners::{
-    joint_scan_exec, joint_scan_exec_prepacked, pack_train_panels,
+    joint_scan_exec_prepacked, joint_scan_store_exec, pack_train_panels,
     NaiveBayes,
 };
 
-/// A trained three-member system: NB model + the remembered training set
-/// for the instance-based members, plus the training set's [`NormCache`]
-/// — computed once at fit time and reused by every `predict` call on
-/// the GEMM-formulation distance path (the "reuse of computation
-/// results" guideline applied across ensemble members and streams).
+/// A trained three-member system: NB model + the [`TrainStore`] the
+/// instance-based members scan against. The store carries the training
+/// set (resident bytes or a streamed `.lmtc` file) plus its norm cache
+/// — computed/loaded once at fit time and reused by every `predict`
+/// call on the GEMM-formulation distance path (the "reuse of
+/// computation results" guideline applied across ensemble members and
+/// streams). With a chunked store the whole system — NB fit included —
+/// runs out of core, and predictions are bit-identical to the resident
+/// backend at any chunk size.
 pub struct MultiClassifier {
     /// The trained naive Bayes member.
     pub nb: NaiveBayes,
-    train: Dataset,
+    store: TrainStore<'static>,
     /// Neighbour count for the k-NN member.
     pub k: usize,
     /// Parzen window bandwidth for the PRW member.
     pub bandwidth: f32,
-    norms: NormCache,
     /// execution policy for the shared distance pass — fully-Auto by
     /// default; [`MultiClassifier::with_policy`] /
     /// [`MultiClassifier::with_dist_algo`] pin axes per instance
@@ -96,8 +99,9 @@ impl ResidentState {
         &self.tiles
     }
 
-    /// True when the Gemm train panels are resident (i.e. the pinned
-    /// formulation is `Gemm`).
+    /// True when the Gemm train panels are resident (the pinned
+    /// formulation is `Gemm` *and* the backend is resident — a chunked
+    /// store packs per chunk inside the streamed scan instead).
     pub fn is_packed(&self) -> bool {
         self.packed.is_some()
     }
@@ -106,16 +110,29 @@ impl ResidentState {
 impl MultiClassifier {
     /// "Each of the learners must still be individually trained" — NB
     /// fits its one-epoch statistics; the instance-based members just
-    /// remember T.
+    /// remember T (as a resident [`TrainStore`]).
     pub fn fit(train: &Dataset) -> Self {
-        Self {
-            nb: NaiveBayes::fit(train),
-            norms: NormCache::compute(&train.features, train.d),
-            train: train.clone(),
+        Self::fit_store(TrainStore::resident(train.clone()))
+            // locality-lint: allow(panic-in-serve-path): fit-time
+            // entry on the resident backend, where NB's streaming fit
+            // cannot fail — serving deployments construct via
+            // `fit_store` and handle the error
+            .expect("resident store fit cannot fail")
+    }
+
+    /// Fit the system over any [`TrainStore`] backend — the out-of-core
+    /// entry. NB streams its sufficient statistics chunk by chunk
+    /// ([`NaiveBayes::fit_store`], bit-identical to the resident fit);
+    /// the instance-based members keep the store and scan it per query
+    /// batch. Errors surface only from the chunked backend's I/O.
+    pub fn fit_store(store: TrainStore<'static>) -> Result<Self> {
+        Ok(Self {
+            nb: NaiveBayes::fit_store(&store)?,
+            store,
             k: K,
             bandwidth: BANDWIDTH,
             policy: ExecPolicy::default(),
-        }
+        })
     }
 
     /// Pin the full execution policy (threads, schedule, distance
@@ -162,32 +179,33 @@ impl MultiClassifier {
     /// per-query error replies.
     pub fn try_predict(&self, rows: &[f32]) -> Result<McsPredictions> {
         let nb = self.nb.predict(rows);
+        let (n, d) = (self.store.n(), self.store.d());
         // distance work = queries × train rows × features; tiny streams
         // stay on the sequential scan (no spawn overhead) and small
         // streams on the Exact formulation — both gates live on the
         // instance's ExecPolicy, resolved once on the whole stream
-        let work = (rows.len() / self.train.d.max(1)) * self.train.n
-            * self.train.d;
+        let work = (rows.len() / d.max(1)) * n * d;
         let threads = self.policy.threads_for(work);
         let tiles = TileConfig::westmere_workers(threads);
         // the fused scans consume the pinned-axis policy: Gemm runs
         // over the fit-time norm cache through the packed micro-kernel;
         // Exact keeps the bit-stable per-pair path (fused Exact is
         // prediction-identical to the materializing scans — the
-        // instance-learner parity suite pins that)
+        // instance-learner parity suite pins that). The store entry
+        // routes a resident backend to the legacy fused scan verbatim
+        // and streams a chunked backend — same bits either way.
         let pol = self.policy
             .with_threads(threads)
             .with_algo(self.policy.algo_for(work));
-        let (knn, prw) = joint_scan_exec(
-            &self.train, rows, self.train.d, self.k, self.bandwidth,
-            &tiles, &self.norms, &pol);
+        let (knn, prw) = joint_scan_store_exec(
+            &self.store, rows, self.k, self.bandwidth, &tiles, &pol)?;
         // every member argmaxes over 0..n_classes, so out-of-range
         // class ids — the error majority_vote reports cleanly for
         // external ensembles — cannot occur here; propagate anyway so
         // a serving caller survives even an internal-contract bug
         let vote = majority_vote(
             &[nb.clone(), knn.clone(), prw.clone()],
-            self.train.n_classes,
+            self.store.n_classes(),
         )?;
         Ok(McsPredictions { nb, knn, prw, vote })
     }
@@ -195,34 +213,46 @@ impl MultiClassifier {
     /// Feature dimensionality the classifier was fitted on (queries
     /// must arrive as length-`dim` rows).
     pub fn dim(&self) -> usize {
-        self.train.d
+        self.store.d()
     }
 
-    /// Training-set size (the resident working set every query batch
-    /// scans against).
+    /// Training-set size (the working set every query batch scans
+    /// against — resident bytes or streamed chunks).
     pub fn n_train(&self) -> usize {
-        self.train.n
+        self.store.n()
     }
 
     /// Number of classes the members vote over.
     pub fn n_classes(&self) -> usize {
-        self.train.n_classes
+        self.store.n_classes()
+    }
+
+    /// True when the instance members stream train features from a
+    /// chunked `.lmtc` store instead of resident memory.
+    pub fn is_chunked(&self) -> bool {
+        self.store.is_chunked()
     }
 
     /// Freeze the execution configuration for a long-lived serving
     /// process: resolve the policy once, pin the distance formulation
     /// on *single-query* work (so batch size can never flip it), fix
-    /// the tile split, and pre-pack the Gemm train panels. See
+    /// the tile split, and — on a resident backend under Gemm —
+    /// pre-pack the train panels. A chunked backend keeps no resident
+    /// panels (its features live on disk); it re-packs per chunk
+    /// inside the streamed scan, which changes no bits. See
     /// [`ResidentState`] for the invariance contract.
     pub fn prepare_resident(&self) -> ResidentState {
         let p = self.policy.resolve();
         // the batch-invariant algo choice: what a max_batch = 1 server
         // would resolve for every call
-        let algo = p.algo.resolve(self.train.n * self.train.d);
+        let algo = p.algo.resolve(self.store.n() * self.store.d());
         let tiles = TileConfig::westmere_workers(p.threads.max(1));
-        let packed = (algo == DistanceAlgo::Gemm)
-            .then(|| pack_train_panels(&self.train, self.train.d,
-                                       &tiles));
+        let packed = match self.store.as_resident() {
+            Some(ds) if algo == DistanceAlgo::Gemm => {
+                Some(pack_train_panels(ds, ds.d, &tiles))
+            }
+            _ => None,
+        };
         ResidentState { policy: p.with_algo(algo), tiles, packed }
     }
 
@@ -248,13 +278,23 @@ impl MultiClassifier {
                                 resident: &ResidentState)
                                 -> Result<McsPredictions> {
         let nb = self.nb.predict(rows);
-        let (knn, prw) = joint_scan_exec_prepacked(
-            &self.train, rows, self.train.d, self.k, self.bandwidth,
-            &resident.tiles, &self.norms, &resident.policy,
-            resident.packed.as_deref());
+        // resident backend: the prepacked fused scan, panels frozen at
+        // engine build. Chunked backend: the streamed store scan under
+        // the same frozen tiles and policy — the policy's algo is
+        // already concrete, so re-resolution inside the store entry is
+        // the identity and batch size still cannot flip it.
+        let (knn, prw) = match self.store.as_resident() {
+            Some(ds) => joint_scan_exec_prepacked(
+                ds, rows, ds.d, self.k, self.bandwidth,
+                &resident.tiles, self.store.norms(), &resident.policy,
+                resident.packed.as_deref()),
+            None => joint_scan_store_exec(
+                &self.store, rows, self.k, self.bandwidth,
+                &resident.tiles, &resident.policy)?,
+        };
         let vote = majority_vote(
             &[nb.clone(), knn.clone(), prw.clone()],
-            self.train.n_classes,
+            self.store.n_classes(),
         )?;
         Ok(McsPredictions { nb, knn, prw, vote })
     }
@@ -264,6 +304,7 @@ impl MultiClassifier {
 mod tests {
     use super::*;
     use crate::data::synth::chembl_like;
+    use crate::data::write_chunked;
     use crate::learners::{accuracy, knn_scan, prw_scan};
 
     #[test]
@@ -346,6 +387,46 @@ mod tests {
             assert_eq!(part.prw, full.prw[q..hi]);
             q = hi;
         }
+    }
+
+    #[test]
+    fn chunked_store_system_matches_the_resident_system() {
+        // The tentpole at the MCS layer: fitting and predicting over a
+        // chunked .lmtc store reproduces the resident system exactly —
+        // NB's streamed fit to the bit, and the shared distance pass
+        // (one-shot and frozen-resident) prediction-for-prediction at
+        // every chunk geometry, under both formulations.
+        let (train, test) = chembl_like(320, 17).split(256);
+        let path = std::env::temp_dir().join(format!(
+            "locality_ml_mcs_{}.lmtc", std::process::id()));
+        for algo in [DistanceAlgo::Exact, DistanceAlgo::Gemm] {
+            let resident = MultiClassifier::fit(&train)
+                .with_dist_algo(algo);
+            let want = resident.predict(&test.features);
+            let want_frozen = resident.predict_resident(
+                &test.features, &resident.prepare_resident());
+            for chunk_rows in [1usize, 19, train.n, train.n + 8] {
+                write_chunked(&train, &path, chunk_rows).unwrap();
+                let mcs = MultiClassifier::fit_store(
+                    TrainStore::open_chunked(&path).unwrap())
+                    .unwrap()
+                    .with_dist_algo(algo);
+                assert!(mcs.is_chunked());
+                assert_eq!(mcs.nb, resident.nb,
+                    "NB fit diverged at chunk_rows {chunk_rows}");
+                assert_eq!(mcs.predict(&test.features), want,
+                    "one-shot predictions diverged at chunk_rows \
+                     {chunk_rows} under {algo:?}");
+                let rs = mcs.prepare_resident();
+                assert!(!rs.is_packed(),
+                    "a chunked store keeps no resident panels");
+                assert_eq!(mcs.predict_resident(&test.features, &rs),
+                    want_frozen,
+                    "frozen-resident predictions diverged at \
+                     chunk_rows {chunk_rows} under {algo:?}");
+            }
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

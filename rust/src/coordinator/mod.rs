@@ -29,11 +29,8 @@ pub use batcher::{
 pub use ensemble::{BaggedNb, BoostedNb};
 pub use hyperparam::{
     silverman_bandwidth, sweep_naive, sweep_shared, sweep_shared_exec,
-    SweepResult, MIN_BANDWIDTH,
+    sweep_store_exec, SweepResult, MIN_BANDWIDTH,
 };
-#[allow(deprecated)]
-pub use hyperparam::{sweep_shared_algo, sweep_shared_auto,
-                     sweep_shared_par};
 pub use fold_stream::{FoldStream, PassStats};
 pub use joint_exec::{run_joint, run_separate, TimedRun};
 pub use mcs::{McsPredictions, MultiClassifier, ResidentState};

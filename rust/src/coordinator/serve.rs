@@ -3,14 +3,21 @@
 //!
 //! Everything else in the crate is a one-shot CLI run; this module is
 //! the consumer the locality machinery was built for. A fitted
-//! classifier, its `NormCache` and (under Gemm) its packed train
-//! panels stay **resident** across requests
+//! classifier, its norm cache and (under Gemm on a resident backend)
+//! its packed train panels stay **resident** across requests
 //! ([`MultiClassifier::prepare_resident`]), and live queries are
 //! coalesced by a [`MicroBatchQueue`] into micro-batches that ride ONE
 //! pass over the resident train tiles — the paper's reuse argument
 //! applied to serving: a single-query k-NN predict is memory-bound (every
 //! train byte streamed for one consumer), a 64-query batch reuses each
 //! train tile 64 times while it is cache-hot.
+//!
+//! The classifier's train side lives behind the
+//! [`TrainStore`](crate::data::TrainStore) seam, so the same engine
+//! serves a RAM-resident training set or an out-of-core `.lmtc` store
+//! bigger than memory — with bit-identical replies (the store's
+//! "chunking never changes bits" contract, pinned by the parity test
+//! below).
 //!
 //! # Wire protocol (JSONL, one object per line)
 //!
@@ -628,6 +635,45 @@ mod tests {
         let st = eng.stats();
         assert_eq!(st.dispatch.batches, 3);
         assert_eq!(st.dispatch.largest_batch, 3);
+    }
+
+    #[test]
+    fn chunked_store_engine_serves_identical_replies() {
+        // The out-of-core serving contract: an engine whose classifier
+        // streams train features from a chunked .lmtc store replies
+        // with exactly the bits of the resident engine — backend, like
+        // batching, is invisible to clients.
+        let (train, test) = chembl_like(224, 31).split(160);
+        let pol = ExecPolicy::default().with_algo(DistanceAlgo::Exact);
+        let serve_pol = ServePolicy::auto()
+            .with_max_batch(8)
+            .with_max_wait_us(1_000)
+            .with_queue_cap(4 * test.n);
+        let mut resident_eng = ServeEngine::new(
+            MultiClassifier::fit(&train).with_policy(&pol), serve_pol);
+        let path = std::env::temp_dir().join(format!(
+            "locality_ml_serve_{}.lmtc", std::process::id()));
+        crate::data::write_chunked(&train, &path, 23).unwrap();
+        let chunked_mcs = MultiClassifier::fit_store(
+            crate::data::TrainStore::open_chunked(&path).unwrap())
+            .unwrap()
+            .with_policy(&pol);
+        assert!(chunked_mcs.is_chunked());
+        let mut chunked_eng = ServeEngine::new(chunked_mcs, serve_pol);
+        let mut now = 0u64;
+        for q in 0..test.n {
+            now += 150;
+            for eng in [&mut resident_eng, &mut chunked_eng] {
+                assert!(eng.offer(q, req(q as u64, test.row(q)), now)
+                    .is_none(), "query {q} not admitted");
+            }
+        }
+        let want = resident_eng.drain(now + 10_000);
+        let got = chunked_eng.drain(now + 10_000);
+        assert_eq!(want.len(), test.n);
+        assert_eq!(want, got,
+            "chunked-store replies diverged from the resident engine");
+        std::fs::remove_file(&path).ok();
     }
 
     /// THE serving determinism contract (ISSUE 7 acceptance): replies

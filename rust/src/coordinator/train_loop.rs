@@ -71,7 +71,7 @@ pub fn train_swsgd(
             // exactly what the paper's Fig 5 y-axis ("cost") shows.
             loss_sum += trainer.train_step(engine, n, x, y)? as f64;
         }
-        let eval = trainer.evaluate(engine, &val.features, &val_onehot)?;
+        let eval = trainer.evaluate(engine, val.features(), &val_onehot)?;
         curve.push(epoch, loss_sum / steps_per_epoch as f64,
                    eval.mean_loss);
     }

@@ -31,6 +31,23 @@ impl Dataset {
         Self { features, labels, n, d, n_classes }
     }
 
+    /// The whole row-major `[n x d]` feature matrix. Accessor twin of
+    /// the `features` field: consumers outside `data/` read train
+    /// bytes through this (or through the `TrainStore` seam), never by
+    /// naming the field — the `raw-train-access` lint pins that, so
+    /// the out-of-core store stays the only other door to train bytes.
+    #[inline]
+    pub fn features(&self) -> &[f32] {
+        &self.features
+    }
+
+    /// The per-point class labels (accessor twin of the `labels`
+    /// field; see [`Dataset::features`] for the access convention).
+    #[inline]
+    pub fn labels(&self) -> &[i32] {
+        &self.labels
+    }
+
     /// Feature row of point `i`.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {

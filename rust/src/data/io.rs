@@ -40,7 +40,10 @@ const CHUNK: usize = 2048;
 /// x86 even though the header claimed little endian.  Converting
 /// value-by-value through `to_le_bytes` into a reusable staging chunk
 /// keeps the bulk-copy throughput without any `unsafe`.
-fn write_f32s<W: Write>(w: &mut W, vals: &[f32]) -> Result<()> {
+///
+/// `pub(crate)` so the chunked `.lmtc` store (`data/store.rs`) shares
+/// the exact same safe LE converters for its payload blocks.
+pub(crate) fn write_f32s<W: Write>(w: &mut W, vals: &[f32]) -> Result<()> {
     let mut buf = [0u8; 4 * CHUNK];
     for chunk in vals.chunks(CHUNK) {
         let bytes = &mut buf[..4 * chunk.len()];
@@ -53,7 +56,7 @@ fn write_f32s<W: Write>(w: &mut W, vals: &[f32]) -> Result<()> {
 }
 
 /// Serialize an `i32` slice as explicit little-endian bytes.
-fn write_i32s<W: Write>(w: &mut W, vals: &[i32]) -> Result<()> {
+pub(crate) fn write_i32s<W: Write>(w: &mut W, vals: &[i32]) -> Result<()> {
     let mut buf = [0u8; 4 * CHUNK];
     for chunk in vals.chunks(CHUNK) {
         let bytes = &mut buf[..4 * chunk.len()];
@@ -66,7 +69,7 @@ fn write_i32s<W: Write>(w: &mut W, vals: &[i32]) -> Result<()> {
 }
 
 /// Read `count` little-endian `f32`s.
-fn read_f32s<R: Read>(r: &mut R, count: usize) -> Result<Vec<f32>> {
+pub(crate) fn read_f32s<R: Read>(r: &mut R, count: usize) -> Result<Vec<f32>> {
     let mut out = Vec::with_capacity(count);
     let mut buf = [0u8; 4 * CHUNK];
     let mut left = count;
@@ -85,7 +88,7 @@ fn read_f32s<R: Read>(r: &mut R, count: usize) -> Result<Vec<f32>> {
 }
 
 /// Read `count` little-endian `i32`s.
-fn read_i32s<R: Read>(r: &mut R, count: usize) -> Result<Vec<i32>> {
+pub(crate) fn read_i32s<R: Read>(r: &mut R, count: usize) -> Result<Vec<i32>> {
     let mut out = Vec::with_capacity(count);
     let mut buf = [0u8; 4 * CHUNK];
     let mut left = count;

@@ -1,14 +1,18 @@
 //! Dataset substrate (DESIGN.md systems S4–S5): containers, synthetic
-//! generators standing in for MNIST/Chembl, on-disk format, k-fold
-//! partitioning, and the sub-sampling machinery of paper §3.
+//! generators standing in for MNIST/Chembl, on-disk formats (resident
+//! `.lmld` and chunked out-of-core `.lmtc`), the [`TrainStore`] seam
+//! every train-data consumer reads through, k-fold partitioning, and
+//! the sub-sampling machinery of paper §3.
 
 pub mod dataset;
 pub mod folds;
 pub mod io;
 pub mod sampling;
+pub mod store;
 pub mod synth;
 
 pub use dataset::Dataset;
 pub use folds::Folds;
 pub use io::{read_dataset, write_dataset};
+pub use store::{write_chunked, ChunkedStore, TrainStore};
 pub use synth::{chembl_like, gaussian_mixture, mnist_like, MixtureSpec};

@@ -1,0 +1,769 @@
+//! The **train-data seam**: [`TrainStore`] is the one door through
+//! which train bytes reach the distance engine, the fused instance
+//! scans, the sweep coordinators and the serving stack.
+//!
+//! Two backends, one contract:
+//!
+//! * [`TrainStore::Resident`] — today's row-major `Vec<f32>` dataset,
+//!   unchanged bits. Every consumer that held a `&Dataset` before this
+//!   seam holds a resident store now and produces the same output bits.
+//! * [`TrainStore::Chunked`] — an on-disk `.lmtc` file streamed through
+//!   explicit **double-buffered** chunk loads: while the caller scans
+//!   chunk *c*, a prefetch thread reads chunk *c+1*, so the working set
+//!   is two chunks of features plus the (small) resident labels and
+//!   per-row norms. A laptop-RAM process can train on and serve a
+//!   train set bigger than memory.
+//!
+//! # `.lmtc` layout (little endian)
+//!
+//! ```text
+//! magic      b"LMTC"     4 bytes
+//! version    u32         currently 1
+//! n          u64         number of points
+//! d          u64         features per point
+//! classes    u32
+//! chunk_rows u64         rows per feature chunk (>= 1)
+//! labels     n   x i32   resident at open
+//! norms      n   x f32   per-row squared norms, resident at open
+//! features   n*d x f32   row-major, streamed chunk_rows rows at a time
+//! ```
+//!
+//! Labels and norms sit **before** the feature payload so
+//! [`ChunkedStore::open`] materialises them in one buffered pass and
+//! never touches the feature region; feature bytes are only read by
+//! [`TrainStore::scan_chunks`] / [`TrainStore::gather`]. The norms are
+//! written by [`write_chunked`] from the same feature buffer with the
+//! same ascending accumulation as [`NormCache::compute`], so a loaded
+//! norm is bit-identical to a computed one.
+//!
+//! # Determinism contract (the sixth axis)
+//!
+//! **Chunking never changes bits.** Every per-pair distance this crate
+//! computes — Exact's subtract–square–accumulate and Gemm's
+//! `‖q‖²+‖t‖²−2·q·t` over the packed micro-kernel — depends only on the
+//! two rows involved, never on which other rows share a tile, panel or
+//! chunk (the packed matmul is bit-identical across blockings and
+//! tiers). So computing a distance block per chunk and scattering it by
+//! global row index reproduces the resident engine bit for bit at any
+//! chunk size, thread count, schedule and SIMD tier — property-tested
+//! here and in every consumer.
+
+use std::borrow::Cow;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read as _, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::thread;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::dataset::Dataset;
+use super::io::{read_f32s, read_i32s, write_f32s, write_i32s};
+use crate::kernels::distance::row_sq_norms;
+use crate::kernels::{
+    gather_rows, pairwise_sq_dists_exec, pairwise_sq_dists_gather_exec,
+    ExecPolicy, NormCache, TileConfig,
+};
+
+const MAGIC: &[u8; 4] = b"LMTC";
+const VERSION: u32 = 1;
+
+/// Fixed header bytes before the labels block.
+const HEADER_BYTES: u64 = 4 + 4 + 8 + 8 + 4 + 8;
+
+/// Write `ds` to `path` in `.lmtc` chunked format with `chunk_rows`
+/// feature rows per chunk. The per-row squared norms are computed here
+/// once (same accumulation order as [`NormCache::compute`], so the
+/// stored bits equal the resident cache's bits) and persisted so
+/// opening the store never streams the features just to rebuild them.
+pub fn write_chunked(ds: &Dataset, path: &Path, chunk_rows: usize)
+    -> Result<()> {
+    if chunk_rows == 0 {
+        bail!("chunk_rows must be >= 1");
+    }
+    let file = File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(ds.n as u64).to_le_bytes())?;
+    w.write_all(&(ds.d as u64).to_le_bytes())?;
+    w.write_all(&(ds.n_classes as u32).to_le_bytes())?;
+    w.write_all(&(chunk_rows as u64).to_le_bytes())?;
+    write_i32s(&mut w, &ds.labels)?;
+    write_f32s(&mut w, &row_sq_norms(&ds.features, ds.d))?;
+    write_f32s(&mut w, &ds.features)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// The streamed `.lmtc` backend: labels and per-row norms resident,
+/// features read on demand in `chunk_rows`-row chunks through a
+/// double-buffered scan. Everything is validated at [`open`]
+/// (magic, version, file-size arithmetic, label range), so the scan
+/// path can trust the geometry.
+///
+/// [`open`]: ChunkedStore::open
+#[derive(Debug)]
+pub struct ChunkedStore {
+    path: PathBuf,
+    n: usize,
+    d: usize,
+    n_classes: usize,
+    chunk_rows: usize,
+    labels: Vec<i32>,
+    norms: NormCache,
+    data_off: u64,
+}
+
+impl ChunkedStore {
+    /// Open and validate a `.lmtc` file: magic, version, header/file
+    /// size arithmetic and label range are all checked here; the
+    /// labels and norms blocks are materialised (one buffered pass),
+    /// the feature region is left on disk.
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let total = file.metadata()?.len();
+        let mut r = BufReader::new(file);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not an LMTC file", path.display());
+        }
+        let mut u32buf = [0u8; 4];
+        let mut u64buf = [0u8; 8];
+        r.read_exact(&mut u32buf)?;
+        let version = u32::from_le_bytes(u32buf);
+        if version != VERSION {
+            bail!("{}: unsupported version {version}", path.display());
+        }
+        r.read_exact(&mut u64buf)?;
+        let n = u64::from_le_bytes(u64buf) as usize;
+        r.read_exact(&mut u64buf)?;
+        let d = u64::from_le_bytes(u64buf) as usize;
+        r.read_exact(&mut u32buf)?;
+        let n_classes = u32::from_le_bytes(u32buf) as usize;
+        r.read_exact(&mut u64buf)?;
+        let chunk_rows = u64::from_le_bytes(u64buf) as usize;
+        if d == 0 {
+            bail!("{}: feature dimension must be >= 1", path.display());
+        }
+        if n_classes == 0 {
+            bail!("{}: class count must be >= 1", path.display());
+        }
+        if chunk_rows == 0 {
+            bail!("{}: chunk_rows must be >= 1", path.display());
+        }
+        let data_off = HEADER_BYTES + 8 * n as u64;
+        let expect = data_off + 4 * (n as u64) * (d as u64);
+        if total != expect {
+            bail!("{}: file size {total} != expected {expect} \
+                   (n={n}, d={d})", path.display());
+        }
+        let labels = read_i32s(&mut r, n)?;
+        if let Some(bad) =
+            labels.iter().find(|&&l| l < 0 || l as usize >= n_classes)
+        {
+            bail!("{}: label {bad} outside 0..{n_classes}",
+                  path.display());
+        }
+        let norms = NormCache::from_norms(read_f32s(&mut r, n)?);
+        Ok(Self {
+            path: path.to_path_buf(),
+            n,
+            d,
+            n_classes,
+            chunk_rows,
+            labels,
+            norms,
+            data_off,
+        })
+    }
+
+    /// Stream the feature matrix through `consume(row0, rows)` in
+    /// ascending `chunk_rows`-row chunks (the last one ragged), with
+    /// the next chunk prefetched on its own thread while the caller
+    /// scans the current one — the double buffer that overlaps disk
+    /// latency with compute.
+    pub fn scan_chunks(
+        &self,
+        mut consume: impl FnMut(usize, &[f32]) -> Result<()>,
+    ) -> Result<()> {
+        if self.n == 0 {
+            return Ok(());
+        }
+        let d = self.d;
+        let mut file = File::open(&self.path)
+            .with_context(|| format!("opening {}", self.path.display()))?;
+        file.seek(SeekFrom::Start(self.data_off))?;
+        let mut cur_rows = self.chunk_rows.min(self.n);
+        let mut cur = read_f32s(&mut file, cur_rows * d)?;
+        let mut file_slot = Some(file);
+        let mut row0 = 0usize;
+        loop {
+            let next_row0 = row0 + cur_rows;
+            // Kick off the next chunk's read before consuming the
+            // current one: the File is owned, travels through the
+            // prefetch thread, and comes back with the buffer.
+            let prefetch = if next_row0 < self.n {
+                let rows = self.chunk_rows.min(self.n - next_row0);
+                let mut f = file_slot
+                    .take()
+                    .ok_or_else(|| anyhow!("prefetch file handle lost"))?;
+                Some(thread::spawn(move || {
+                    let buf = read_f32s(&mut f, rows * d);
+                    (f, buf, rows)
+                }))
+            } else {
+                None
+            };
+            consume(row0, &cur)?;
+            row0 = next_row0;
+            match prefetch {
+                Some(handle) => {
+                    let (f, buf, rows) = handle.join().map_err(|_| {
+                        anyhow!("chunk prefetch thread panicked")
+                    })?;
+                    file_slot = Some(f);
+                    cur = buf?;
+                    cur_rows = rows;
+                }
+                None => return Ok(()),
+            }
+        }
+    }
+}
+
+/// Tile-granular train-data store: the abstraction every train-data
+/// consumer (distance engine, fused scans, sweeps, multi-classifier,
+/// serving) is seamed onto. See the module docs for the backend
+/// contract and the "chunking never changes bits" determinism axis.
+#[derive(Debug)]
+pub enum TrainStore<'a> {
+    /// RAM-resident backend: the plain row-major dataset plus its
+    /// norm cache, built once at construction.
+    Resident {
+        /// The dataset, owned ([`TrainStore::resident`]) or borrowed
+        /// ([`TrainStore::resident_ref`]).
+        ds: Cow<'a, Dataset>,
+        /// Per-row squared norms ([`NormCache::compute`], one build).
+        norms: NormCache,
+    },
+    /// Streamed `.lmtc` backend (labels + norms resident, features on
+    /// disk).
+    Chunked(ChunkedStore),
+}
+
+impl TrainStore<'static> {
+    /// Wrap an owned dataset as a resident store. Computes the
+    /// [`NormCache`] once here (exactly one build on the counter).
+    pub fn resident(ds: Dataset) -> Self {
+        let norms = NormCache::compute(&ds.features, ds.d);
+        TrainStore::Resident { ds: Cow::Owned(ds), norms }
+    }
+
+    /// Open a `.lmtc` file as a chunked store.
+    pub fn open_chunked(path: &Path) -> Result<Self> {
+        Ok(TrainStore::Chunked(ChunkedStore::open(path)?))
+    }
+}
+
+impl<'a> TrainStore<'a> {
+    /// Wrap a borrowed dataset as a resident store (no feature copy).
+    /// Computes the [`NormCache`] once here — the one-build-per-sweep
+    /// reuse contract callers like `sweep_shared_exec` pin in tests.
+    pub fn resident_ref(ds: &'a Dataset) -> TrainStore<'a> {
+        let norms = NormCache::compute(&ds.features, ds.d);
+        TrainStore::Resident { ds: Cow::Borrowed(ds), norms }
+    }
+
+    /// Number of train points.
+    pub fn n(&self) -> usize {
+        match self {
+            TrainStore::Resident { ds, .. } => ds.n,
+            TrainStore::Chunked(cs) => cs.n,
+        }
+    }
+
+    /// Features per point.
+    pub fn d(&self) -> usize {
+        match self {
+            TrainStore::Resident { ds, .. } => ds.d,
+            TrainStore::Chunked(cs) => cs.d,
+        }
+    }
+
+    /// Number of distinct classes.
+    pub fn n_classes(&self) -> usize {
+        match self {
+            TrainStore::Resident { ds, .. } => ds.n_classes,
+            TrainStore::Chunked(cs) => cs.n_classes,
+        }
+    }
+
+    /// Class labels, indexed by global row — resident in both
+    /// backends (4 bytes/point).
+    pub fn labels(&self) -> &[i32] {
+        match self {
+            TrainStore::Resident { ds, .. } => &ds.labels,
+            TrainStore::Chunked(cs) => &cs.labels,
+        }
+    }
+
+    /// The per-row squared-norm cache, indexed by global row —
+    /// resident in both backends and bit-identical between them (the
+    /// chunked norms are persisted from the same accumulation).
+    pub fn norms(&self) -> &NormCache {
+        match self {
+            TrainStore::Resident { norms, .. } => norms,
+            TrainStore::Chunked(cs) => &cs.norms,
+        }
+    }
+
+    /// Rows per feature chunk: the whole set for the resident backend,
+    /// the `.lmtc` header value for the chunked one.
+    pub fn chunk_rows(&self) -> usize {
+        match self {
+            TrainStore::Resident { ds, .. } => ds.n.max(1),
+            TrainStore::Chunked(cs) => cs.chunk_rows,
+        }
+    }
+
+    /// The resident dataset, when this store holds one (`None` for
+    /// chunked — callers use this to gate resident-only fast paths
+    /// like fit-time panel packing).
+    pub fn as_resident(&self) -> Option<&Dataset> {
+        match self {
+            TrainStore::Resident { ds, .. } => Some(ds.as_ref()),
+            TrainStore::Chunked(_) => None,
+        }
+    }
+
+    /// True for the streamed backend.
+    pub fn is_chunked(&self) -> bool {
+        matches!(self, TrainStore::Chunked(_))
+    }
+
+    /// Stream the feature matrix through `consume(row0, rows)` in
+    /// ascending row order: one whole-matrix callback for the resident
+    /// backend, double-buffered `chunk_rows`-row chunks for the
+    /// chunked one. Consumers must therefore handle arbitrary chunk
+    /// geometry — which is exactly what the chunk-edge property tests
+    /// exercise.
+    pub fn scan_chunks(
+        &self,
+        mut consume: impl FnMut(usize, &[f32]) -> Result<()>,
+    ) -> Result<()> {
+        match self {
+            TrainStore::Resident { ds, .. } => {
+                if ds.n == 0 {
+                    return Ok(());
+                }
+                consume(0, &ds.features)
+            }
+            TrainStore::Chunked(cs) => cs.scan_chunks(consume),
+        }
+    }
+
+    /// Gather `idx` feature rows (duplicates allowed, any order) into
+    /// one contiguous row-major buffer — bit-identical between
+    /// backends. The chunked path sorts the requests by row and
+    /// serves them in one streaming pass.
+    pub fn gather(&self, idx: &[usize]) -> Result<Vec<f32>> {
+        let n = self.n();
+        if let Some(&bad) = idx.iter().find(|&&i| i >= n) {
+            bail!("row index {bad} out of range (n = {n})");
+        }
+        match self {
+            TrainStore::Resident { ds, .. } => {
+                Ok(gather_rows(&ds.features, ds.d, idx))
+            }
+            TrainStore::Chunked(cs) => {
+                let d = cs.d;
+                let mut order: Vec<(usize, usize)> = idx
+                    .iter()
+                    .enumerate()
+                    .map(|(pos, &row)| (row, pos))
+                    .collect();
+                order.sort_unstable();
+                let mut out = vec![0.0f32; idx.len() * d];
+                let mut ptr = 0usize;
+                cs.scan_chunks(|row0, feats| {
+                    let hi = row0 + feats.len() / d;
+                    while ptr < order.len() && order[ptr].0 < hi {
+                        let (row, pos) = order[ptr];
+                        let lo = (row - row0) * d;
+                        out[pos * d..(pos + 1) * d]
+                            .copy_from_slice(&feats[lo..lo + d]);
+                        ptr += 1;
+                    }
+                    Ok(())
+                })?;
+                Ok(out)
+            }
+        }
+    }
+
+    /// Materialise the whole store as a resident [`Dataset`] (one
+    /// streaming pass for the chunked backend). Test/convert helper —
+    /// the training and serving paths never call this.
+    pub fn to_dataset(&self) -> Result<Dataset> {
+        match self {
+            TrainStore::Resident { ds, .. } => Ok(ds.as_ref().clone()),
+            TrainStore::Chunked(cs) => {
+                let mut features = Vec::with_capacity(cs.n * cs.d);
+                cs.scan_chunks(|_, feats| {
+                    features.extend_from_slice(feats);
+                    Ok(())
+                })?;
+                Ok(Dataset::new(features, cs.labels.clone(), cs.d,
+                                cs.n_classes))
+            }
+        }
+    }
+
+    /// The index-sliced distance engine over the store: the
+    /// `|query_idx| × |train_idx|` squared-distance matrix, with both
+    /// index sets addressing global store rows. The resident backend
+    /// is [`pairwise_sq_dists_gather_exec`] verbatim; the chunked
+    /// backend gathers the (small) query side once, resolves the
+    /// formulation **once on the whole call's work** (so the chunk
+    /// geometry can never flip Exact↔Gemm mid-call), then streams the
+    /// train side and computes one distance sub-block per chunk,
+    /// scattered into place by global column. Per-pair bits depend
+    /// only on the two rows involved, so the result is bit-identical
+    /// to the resident engine at any chunk size.
+    pub fn gather_dists(
+        &self,
+        train_idx: &[usize],
+        query_idx: &[usize],
+        tiles: &TileConfig,
+        policy: &ExecPolicy,
+    ) -> Result<Vec<f32>> {
+        match self {
+            TrainStore::Resident { ds, norms } => {
+                let n = ds.n;
+                if let Some(&bad) = train_idx
+                    .iter()
+                    .chain(query_idx)
+                    .find(|&&i| i >= n)
+                {
+                    bail!("row index {bad} out of range (n = {n})");
+                }
+                Ok(pairwise_sq_dists_gather_exec(
+                    &ds.features, ds.d, train_idx, query_idx, norms,
+                    tiles, policy))
+            }
+            TrainStore::Chunked(cs) => {
+                let d = cs.d;
+                let m = train_idx.len();
+                let nq = query_idx.len();
+                let mut out = vec![0.0f32; nq * m];
+                if m == 0 || nq == 0 {
+                    return Ok(out);
+                }
+                let queries = self.gather(query_idx)?;
+                let qnorms = cs.norms.gather(query_idx);
+                let p = policy.resolve();
+                // one formulation for the whole call, resolved on the
+                // same global multiply-add count the resident gather
+                // engine uses
+                let pinned = p.with_algo(p.algo.resolve(nq * m * d));
+                let mut order: Vec<(usize, usize)> = train_idx
+                    .iter()
+                    .enumerate()
+                    .map(|(pos, &row)| (row, pos))
+                    .collect();
+                if let Some(&(bad, _)) =
+                    order.iter().find(|&&(row, _)| row >= cs.n)
+                {
+                    bail!("row index {bad} out of range (n = {})", cs.n);
+                }
+                order.sort_unstable();
+                let mut ptr = 0usize;
+                cs.scan_chunks(|row0, feats| {
+                    let hi = row0 + feats.len() / d;
+                    let start = ptr;
+                    while ptr < order.len() && order[ptr].0 < hi {
+                        ptr += 1;
+                    }
+                    if ptr == start {
+                        return Ok(());
+                    }
+                    let cols = &order[start..ptr];
+                    let mut sub = Vec::with_capacity(cols.len() * d);
+                    let mut tn = Vec::with_capacity(cols.len());
+                    for &(row, _) in cols {
+                        let lo = (row - row0) * d;
+                        sub.extend_from_slice(&feats[lo..lo + d]);
+                        tn.push(cs.norms.norms()[row]);
+                    }
+                    let mut block = vec![0.0f32; nq * cols.len()];
+                    pairwise_sq_dists_exec(&sub, &queries, d, &tn,
+                                           &qnorms, &mut block, tiles,
+                                           &pinned);
+                    for q in 0..nq {
+                        let brow = &block[q * cols.len()..
+                                          (q + 1) * cols.len()];
+                        for (&(_, pos), &v) in cols.iter().zip(brow) {
+                            out[q * m + pos] = v;
+                        }
+                    }
+                    Ok(())
+                })?;
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::chembl_like;
+    use crate::kernels::distance::norm_cache_builds;
+    use crate::kernels::parallel::Schedule;
+    use crate::kernels::DistanceAlgo;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("locality_ml_store_{name}_{}",
+                       std::process::id()));
+        p
+    }
+
+    #[test]
+    fn chunked_roundtrip_preserves_the_dataset() {
+        let ds = chembl_like(97, 7);
+        let path = tmp("roundtrip.lmtc");
+        write_chunked(&ds, &path, 13).unwrap();
+        let store = TrainStore::open_chunked(&path).unwrap();
+        assert_eq!((store.n(), store.d(), store.n_classes()),
+                   (97, 7, ds.n_classes));
+        assert_eq!(store.chunk_rows(), 13);
+        assert!(store.is_chunked());
+        assert!(store.as_resident().is_none());
+        assert_eq!(store.labels(), &ds.labels[..]);
+        assert_eq!(store.to_dataset().unwrap(), ds);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn loaded_norms_are_bit_identical_to_computed_norms() {
+        // The chunked store loads its norms from the file (a load, not
+        // a build — the counter must not move), and the loaded bits
+        // must equal NormCache::compute on the same features.
+        let ds = chembl_like(64, 6);
+        let path = tmp("norms.lmtc");
+        write_chunked(&ds, &path, 10).unwrap();
+        let before = norm_cache_builds();
+        let store = TrainStore::open_chunked(&path).unwrap();
+        assert_eq!(norm_cache_builds() - before, 0,
+            "opening a chunked store must not count a norm build");
+        let computed = NormCache::compute(&ds.features, ds.d);
+        assert_eq!(store.norms().norms(), computed.norms());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resident_store_builds_norms_exactly_once() {
+        let ds = chembl_like(32, 4);
+        let before = norm_cache_builds();
+        let store = TrainStore::resident_ref(&ds);
+        assert_eq!(norm_cache_builds() - before, 1);
+        assert!(!store.is_chunked());
+        assert_eq!(store.as_resident().unwrap(), &ds);
+        assert_eq!(store.chunk_rows(), ds.n);
+        let owned = TrainStore::resident(ds.clone());
+        assert_eq!(norm_cache_builds() - before, 2);
+        assert_eq!(owned.to_dataset().unwrap(), ds);
+    }
+
+    #[test]
+    fn open_rejects_corrupt_files() {
+        // wrong magic
+        let path = tmp("badmagic.lmtc");
+        std::fs::write(&path, b"NOPE............").unwrap();
+        assert!(ChunkedStore::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+        // truncated payload: header size arithmetic must catch it
+        let ds = chembl_like(20, 3);
+        let path = tmp("truncated.lmtc");
+        write_chunked(&ds, &path, 5).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(ChunkedStore::open(&path).is_err());
+        // out-of-range label: labels start right after the header
+        std::fs::write(&path, &bytes).unwrap();
+        let mut corrupt = bytes.clone();
+        corrupt[HEADER_BYTES as usize..HEADER_BYTES as usize + 4]
+            .copy_from_slice(&(-1i32).to_le_bytes());
+        std::fs::write(&path, &corrupt).unwrap();
+        assert!(ChunkedStore::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+        // zero chunk_rows is rejected at write time already
+        assert!(write_chunked(&ds, &tmp("zc.lmtc"), 0).is_err());
+        // missing file is an error, not a panic
+        assert!(ChunkedStore::open(Path::new("/nonexistent/x.lmtc"))
+            .is_err());
+    }
+
+    #[test]
+    fn scan_chunks_covers_every_row_exactly_once_in_order() {
+        // Chunk-edge geometry: ragged n (chunk doesn't divide n),
+        // single-row chunks, chunk == whole set, chunk > n — each must
+        // stream the rows in ascending order with no gap or overlap
+        // and byte-exact content.
+        let ds = chembl_like(53, 5);
+        for chunk_rows in [1usize, 7, 53, 200] {
+            let path = tmp(&format!("scan{chunk_rows}.lmtc"));
+            write_chunked(&ds, &path, chunk_rows).unwrap();
+            let store = TrainStore::open_chunked(&path).unwrap();
+            let mut seen = 0usize;
+            let mut streamed: Vec<f32> = Vec::new();
+            store
+                .scan_chunks(|row0, feats| {
+                    assert_eq!(row0, seen, "chunk out of order");
+                    assert_eq!(feats.len() % ds.d, 0);
+                    let rows = feats.len() / ds.d;
+                    assert!(rows >= 1 && rows <= chunk_rows,
+                        "bad chunk geometry: {rows} rows");
+                    seen += rows;
+                    streamed.extend_from_slice(feats);
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(seen, ds.n, "rows covered (chunk {chunk_rows})");
+            assert_eq!(streamed, ds.features,
+                "streamed bytes diverged (chunk {chunk_rows})");
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn scan_chunks_propagates_consumer_errors() {
+        let ds = chembl_like(24, 3);
+        let path = tmp("scanerr.lmtc");
+        write_chunked(&ds, &path, 6).unwrap();
+        let store = TrainStore::open_chunked(&path).unwrap();
+        let mut calls = 0usize;
+        let res = store.scan_chunks(|_, _| {
+            calls += 1;
+            if calls == 2 {
+                bail!("stop here");
+            }
+            Ok(())
+        });
+        assert!(res.is_err());
+        assert_eq!(calls, 2, "scan must stop at the first error");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn gather_is_bit_identical_between_backends() {
+        check("store-gather-parity", 12, |g| {
+            let d = g.usize_in(1, 8);
+            let n = g.usize_in(1, 60);
+            let ds = Dataset::new(
+                g.f32_vec(n * d, 2.0),
+                (0..n).map(|i| (i % 3) as i32).collect(),
+                d,
+                3,
+            );
+            let resident = TrainStore::resident_ref(&ds);
+            let idx: Vec<usize> = (0..g.usize_in(0, 40))
+                .map(|_| g.usize_in(0, n - 1))
+                .collect();
+            let want = resident.gather(&idx).unwrap();
+            let chunk_rows = g.usize_in(1, n + 3);
+            let path = tmp(&format!("gather{n}_{chunk_rows}.lmtc"));
+            write_chunked(&ds, &path, chunk_rows).unwrap();
+            let chunked = TrainStore::open_chunked(&path).unwrap();
+            let got = chunked.gather(&idx).unwrap();
+            std::fs::remove_file(&path).ok();
+            prop_assert!(want == got,
+                "gather diverged (n={n}, chunk={chunk_rows})");
+            // out-of-range indices error on both backends
+            prop_assert!(resident.gather(&[n]).is_err(),
+                "resident gather must reject row {n}");
+            prop_assert!(chunked.gather(&[n]).is_err(),
+                "chunked gather must reject row {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gather_dists_is_bit_identical_between_backends() {
+        // The tentpole property at the distance-engine layer: Resident
+        // == Chunked to the bit at any chunk size (ragged, single-row,
+        // whole-set, mid-macro-tile boundaries via random tiles),
+        // thread count, schedule, and both formulations.
+        check("store-dists-parity", 8, |g| {
+            let d = g.usize_in(1, 8);
+            let n = g.usize_in(2, 48);
+            let ds = Dataset::new(
+                g.f32_vec(n * d, 1.0),
+                (0..n).map(|i| (i % 2) as i32).collect(),
+                d,
+                2,
+            );
+            let resident = TrainStore::resident_ref(&ds);
+            let train_idx: Vec<usize> = (0..g.usize_in(1, 30))
+                .map(|_| g.usize_in(0, n - 1))
+                .collect();
+            let query_idx: Vec<usize> = (0..g.usize_in(1, 10))
+                .map(|_| g.usize_in(0, n - 1))
+                .collect();
+            let tiles = TileConfig {
+                mc: g.usize_in(1, 7),
+                kc: g.usize_in(1, 7),
+                nc: g.usize_in(1, 7),
+                l1_f32: g.usize_in(2, 16) * d,
+            };
+            let chunk_rows = [1, g.usize_in(1, n), n, n + 9]
+                [g.usize_in(0, 3)];
+            let path = tmp(&format!("dists{n}_{chunk_rows}.lmtc"));
+            write_chunked(&ds, &path, chunk_rows).unwrap();
+            let chunked = TrainStore::open_chunked(&path).unwrap();
+            for algo in [DistanceAlgo::Exact, DistanceAlgo::Gemm] {
+                let threads = [1usize, 4][g.usize_in(0, 1)];
+                let sched = [Schedule::Static, Schedule::Stealing]
+                    [g.usize_in(0, 1)];
+                let pol = ExecPolicy::auto()
+                    .with_threads(threads)
+                    .with_schedule(sched)
+                    .with_algo(algo);
+                let want = resident
+                    .gather_dists(&train_idx, &query_idx, &tiles, &pol)
+                    .unwrap();
+                let got = chunked
+                    .gather_dists(&train_idx, &query_idx, &tiles, &pol)
+                    .unwrap();
+                prop_assert!(want == got,
+                    "store distances diverged ({algo:?}, chunk \
+                     {chunk_rows}, {threads} threads, {sched:?})");
+            }
+            std::fs::remove_file(&path).ok();
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_dataset_round_trips() {
+        let ds = Dataset::new(Vec::new(), Vec::new(), 3, 2);
+        let path = tmp("empty.lmtc");
+        write_chunked(&ds, &path, 8).unwrap();
+        let store = TrainStore::open_chunked(&path).unwrap();
+        assert_eq!(store.n(), 0);
+        let mut called = false;
+        store.scan_chunks(|_, _| {
+            called = true;
+            Ok(())
+        }).unwrap();
+        assert!(!called, "no chunks to scan on an empty store");
+        assert_eq!(store.to_dataset().unwrap(), ds);
+        std::fs::remove_file(&path).ok();
+    }
+}

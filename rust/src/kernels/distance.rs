@@ -229,6 +229,16 @@ impl NormCache {
         Self { norms: row_sq_norms(rows, d) }
     }
 
+    /// Wrap already-materialised per-row norms — e.g. the norms block
+    /// of a chunked `.lmtc` train store, persisted at conversion time
+    /// from the same ascending accumulation as [`NormCache::compute`].
+    /// A *load*, not a *build*: [`norm_cache_builds`] does not move, so
+    /// the once-per-dataset reuse tests keep their exact counts on the
+    /// out-of-core path too.
+    pub fn from_norms(norms: Vec<f32>) -> Self {
+        Self { norms }
+    }
+
     /// The cached norms, indexed by dataset row.
     pub fn norms(&self) -> &[f32] {
         &self.norms

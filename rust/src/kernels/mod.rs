@@ -60,8 +60,8 @@
 //! ([`policy`]): `ExecPolicy::default()` is fully-Auto,
 //! [`ExecPolicy::resolve`] is the single CLI→env→Auto resolution
 //! point, and every kernel/coordinator entry point takes
-//! `&ExecPolicy` (the old bare `(threads, schedule[, algo])`
-//! signatures survive only as deprecated wrappers).
+//! `&ExecPolicy` (the old bare `(threads, schedule[, algo])` tuple
+//! signatures are gone).
 //!
 //! The **distance engine** additionally offers a second formulation
 //! ([`DistanceAlgo`]): `Exact` keeps the bit-stable
@@ -105,19 +105,13 @@ pub use matmul::{
     matmul_tn_acc_naive, matmul_tn_acc_tiled,
 };
 pub use pack::{micro_kernel, MicroKernel, PackedPanel};
-pub use policy::{ExecPolicy, ServePolicy};
-#[allow(deprecated)]
-pub use parallel::{
-    coupled_step_par, matmul_acc_tiled_par, matmul_bias_tiled_par,
-    matmul_tiled_par, matmul_tn_acc_tiled_par,
-    pairwise_sq_dists_algo_par, pairwise_sq_dists_gather_algo_par,
-    pairwise_sq_dists_gather_par, pairwise_sq_dists_gemm_par,
-    pairwise_sq_dists_tiled_par, Schedule,
+pub use policy::{
+    default_chunk_rows, set_chunk_rows, ExecPolicy, ServePolicy,
 };
 pub use parallel::{
     coupled_step_exec, matmul_acc_exec, matmul_bias_exec,
     matmul_bias_prepacked_exec, matmul_exec, matmul_tn_acc_exec,
     pairwise_sq_dists_exec, pairwise_sq_dists_gather_exec,
-    pairwise_sq_dists_gemm_exec,
+    pairwise_sq_dists_gemm_exec, Schedule,
 };
 pub use tile::TileConfig;

@@ -91,9 +91,10 @@
 //! count is then used **verbatim**, exactly as the tuple signatures
 //! did: work-size gating stays a call-site concern
 //! ([`ExecPolicy::threads_for`]), so tests and benches can still shard
-//! tiny shapes on purpose. The old tuple signatures survive as thin
-//! `#[deprecated]` wrappers over the same private cores, keeping the
-//! PR-2/3/4 parity suites green unchanged.
+//! tiny shapes on purpose. The old bare `(threads, schedule[, algo])`
+//! tuple signatures are gone: every caller — the parity suites
+//! included — goes through the `*_exec` spellings, with pinned-axis
+//! policies standing in where a test needs an explicit grid point.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -463,42 +464,6 @@ pub fn matmul_acc_exec(
     matmul_acc_core(a, b, c, m, k, n, t, p.threads, p.schedule);
 }
 
-/// Tuple-signature wrapper kept for the PR-2 parity suites.
-#[deprecated(note = "use `matmul_exec` with an `ExecPolicy`")]
-#[allow(clippy::too_many_arguments)]
-pub fn matmul_tiled_par(
-    a: &[f32],
-    b: &[f32],
-    c: &mut [f32],
-    m: usize,
-    k: usize,
-    n: usize,
-    t: &TileConfig,
-    threads: usize,
-    schedule: Schedule,
-) {
-    assert_eq!(c.len(), m * n);
-    c.fill(0.0);
-    matmul_acc_core(a, b, c, m, k, n, t, threads, schedule);
-}
-
-/// Tuple-signature wrapper kept for the PR-2 parity suites.
-#[deprecated(note = "use `matmul_acc_exec` with an `ExecPolicy`")]
-#[allow(clippy::too_many_arguments)]
-pub fn matmul_acc_tiled_par(
-    a: &[f32],
-    b: &[f32],
-    c: &mut [f32],
-    m: usize,
-    k: usize,
-    n: usize,
-    t: &TileConfig,
-    threads: usize,
-    schedule: Schedule,
-) {
-    matmul_acc_core(a, b, c, m, k, n, t, threads, schedule);
-}
-
 /// `C = bias ⊕ A·B` under an [`ExecPolicy`] (mirrors
 /// `matmul_bias_tiled`).
 #[allow(clippy::too_many_arguments)]
@@ -556,29 +521,6 @@ pub fn matmul_bias_prepacked_exec(
     }
 }
 
-/// Tuple-signature wrapper kept for the PR-2 parity suites.
-#[deprecated(note = "use `matmul_bias_exec` with an `ExecPolicy`")]
-#[allow(clippy::too_many_arguments)]
-pub fn matmul_bias_tiled_par(
-    a: &[f32],
-    b: &[f32],
-    bias: &[f32],
-    c: &mut [f32],
-    m: usize,
-    k: usize,
-    n: usize,
-    t: &TileConfig,
-    threads: usize,
-    schedule: Schedule,
-) {
-    assert_eq!(bias.len(), n);
-    assert_eq!(c.len(), m * n);
-    for row in c.chunks_exact_mut(n.max(1)) {
-        row.copy_from_slice(bias);
-    }
-    matmul_acc_core(a, b, c, m, k, n, t, threads, schedule);
-}
-
 /// Core for `C += Aᵀ·B` (`a` stored `[k×m]`): row ranges of the output
 /// fan out across workers via the row-range core. Per-element
 /// accumulation is `p`-ascending regardless of where the row split
@@ -627,23 +569,6 @@ pub fn matmul_tn_acc_exec(
     matmul_tn_acc_core(a, b, c, k, m, n, t, p.threads, p.schedule);
 }
 
-/// Tuple-signature wrapper kept for the PR-4 parity suites.
-#[deprecated(note = "use `matmul_tn_acc_exec` with an `ExecPolicy`")]
-#[allow(clippy::too_many_arguments)]
-pub fn matmul_tn_acc_tiled_par(
-    a: &[f32],
-    b: &[f32],
-    c: &mut [f32],
-    k: usize,
-    m: usize,
-    n: usize,
-    t: &TileConfig,
-    threads: usize,
-    schedule: Schedule,
-) {
-    matmul_tn_acc_core(a, b, c, k, m, n, t, threads, schedule);
-}
-
 /// Core for Exact parallel pairwise squared distances: query-tile
 /// blocks fan out, each worker filling a disjoint block of whole output
 /// rows. Bit-identical to [`pairwise_sq_dists_tiled`] at any thread
@@ -674,47 +599,6 @@ fn dists_tiled_core(
     if !ran {
         pairwise_sq_dists_tiled(train, queries, d, out, t);
     }
-}
-
-/// Tuple-signature wrapper kept for the PR-2 parity suites.
-#[deprecated(note = "use `pairwise_sq_dists_exec` with an `ExecPolicy` \
-                     (pin `DistanceAlgo::Exact` for this path)")]
-pub fn pairwise_sq_dists_tiled_par(
-    train: &[f32],
-    queries: &[f32],
-    d: usize,
-    out: &mut [f32],
-    t: &TileConfig,
-    threads: usize,
-    schedule: Schedule,
-) {
-    dists_tiled_core(train, queries, d, out, t, threads, schedule);
-}
-
-/// Index-sliced parallel pairwise distances: gather the `train_idx` and
-/// `query_idx` rows of one row-major feature matrix into contiguous
-/// buffers (one streaming copy each — the tiled kernel then reads
-/// unit-stride rows), and return the full `|queries| × |train|`
-/// distance matrix. This is the batched replacement for the per-pair
-/// scalar `sq_dist` loop in the §4.1.1 hyperparameter sweep: the
-/// distance arithmetic is shared with `sq_dist`, so the matrix is
-/// bit-identical to the scalar loop at any thread count.
-#[deprecated(note = "use `pairwise_sq_dists_gather_exec` with an \
-                     `ExecPolicy` (pin `DistanceAlgo::Exact`)")]
-pub fn pairwise_sq_dists_gather_par(
-    features: &[f32],
-    d: usize,
-    train_idx: &[usize],
-    query_idx: &[usize],
-    t: &TileConfig,
-    threads: usize,
-    schedule: Schedule,
-) -> Vec<f32> {
-    let train = gather_rows(features, d, train_idx);
-    let queries = gather_rows(features, d, query_idx);
-    let mut out = vec![0.0f32; query_idx.len() * train_idx.len()];
-    dists_tiled_core(&train, &queries, d, &mut out, t, threads, schedule);
-    out
 }
 
 /// Core for GEMM-formulation parallel pairwise distances
@@ -786,25 +670,6 @@ pub fn pairwise_sq_dists_gemm_exec(
                     p.threads, p.schedule);
 }
 
-/// Tuple-signature wrapper kept for the PR-5 parity suites.
-#[deprecated(note = "use `pairwise_sq_dists_gemm_exec` with an \
-                     `ExecPolicy`")]
-#[allow(clippy::too_many_arguments)]
-pub fn pairwise_sq_dists_gemm_par(
-    train: &[f32],
-    queries: &[f32],
-    d: usize,
-    train_norms: &[f32],
-    query_norms: &[f32],
-    out: &mut [f32],
-    t: &TileConfig,
-    threads: usize,
-    schedule: Schedule,
-) {
-    dists_gemm_core(train, queries, d, train_norms, query_norms, out, t,
-                    threads, schedule);
-}
-
 /// THE parallel distance entry point: one [`ExecPolicy`] decides
 /// worker count, schedule, *and* formulation. The policy's algo is
 /// resolved **once** on this call's total multiply-adds (so a fan-out
@@ -833,33 +698,6 @@ pub fn pairwise_sq_dists_exec(
             p.threads, p.schedule),
         _ => dists_tiled_core(train, queries, d, out, t, p.threads,
                               p.schedule),
-    }
-}
-
-/// Tuple-signature wrapper kept for the PR-5 parity suites.
-#[deprecated(note = "use `pairwise_sq_dists_exec` with an `ExecPolicy`")]
-#[allow(clippy::too_many_arguments)]
-pub fn pairwise_sq_dists_algo_par(
-    algo: DistanceAlgo,
-    train: &[f32],
-    queries: &[f32],
-    d: usize,
-    train_norms: &[f32],
-    query_norms: &[f32],
-    out: &mut [f32],
-    t: &TileConfig,
-    threads: usize,
-    schedule: Schedule,
-) {
-    assert!(d > 0, "feature dimension must be positive");
-    let n = train.len() / d;
-    let nq = queries.len() / d;
-    match algo.resolve(nq * n * d) {
-        DistanceAlgo::Gemm => dists_gemm_core(
-            train, queries, d, train_norms, query_norms, out, t, threads,
-            schedule),
-        _ => dists_tiled_core(train, queries, d, out, t, threads,
-                              schedule),
     }
 }
 
@@ -915,25 +753,6 @@ pub fn pairwise_sq_dists_gather_exec(
     let p = policy.resolve();
     dists_gather_core(features, d, train_idx, query_idx, cache, p.algo,
                       t, p.threads, p.schedule)
-}
-
-/// Tuple-signature wrapper kept for the PR-5 parity suites.
-#[deprecated(note = "use `pairwise_sq_dists_gather_exec` with an \
-                     `ExecPolicy`")]
-#[allow(clippy::too_many_arguments)]
-pub fn pairwise_sq_dists_gather_algo_par(
-    features: &[f32],
-    d: usize,
-    train_idx: &[usize],
-    query_idx: &[usize],
-    cache: &NormCache,
-    algo: DistanceAlgo,
-    t: &TileConfig,
-    threads: usize,
-    schedule: Schedule,
-) -> Vec<f32> {
-    dists_gather_core(features, d, train_idx, query_idx, cache, algo, t,
-                      threads, schedule)
 }
 
 /// Core for the parallel fused coupled LR+SVM step: one raw
@@ -1020,23 +839,6 @@ pub fn coupled_step_exec(
                       p.schedule)
 }
 
-/// Tuple-signature wrapper kept for the PR-4 parity suites.
-#[deprecated(note = "use `coupled_step_exec` with an `ExecPolicy`")]
-#[allow(clippy::too_many_arguments)]
-pub fn coupled_step_par(
-    w_lr: &[f32],
-    w_svm: &[f32],
-    x: &[f32],
-    y: &[f32],
-    lr: f32,
-    lam: f32,
-    t: &TileConfig,
-    threads: usize,
-    schedule: Schedule,
-) -> ((Vec<f32>, f32), (Vec<f32>, f32)) {
-    coupled_step_core(w_lr, w_svm, x, y, lr, lam, t, threads, schedule)
-}
-
 /// Reduce per-macro-tile partials in tile-index order (the
 /// deterministic half of the coupled kernel's parallel contract).
 pub(crate) fn reduce_partials(
@@ -1062,11 +864,6 @@ pub(crate) fn reduce_partials(
 
 #[cfg(test)]
 mod tests {
-    // The PR-2/4/5 parity contracts are asserted through the deprecated
-    // tuple wrappers on purpose: they delegate to the same cores as the
-    // `*_exec` API, so these suites pin the migration itself.
-    #![allow(deprecated)]
-
     use super::*;
     use crate::kernels::distance::{
         pairwise_sq_dists_gemm, pairwise_sq_dists_naive, row_sq_norms,
@@ -1087,6 +884,13 @@ mod tests {
             nc: g.usize_in(1, 17),
             l1_f32: 1 << g.usize_in(6, 10),
         }
+    }
+
+    /// A grid point with the thread and schedule axes pinned: the suite
+    /// sweeps the exact (threads, schedule) lattice the old tuple
+    /// spellings enumerated, through the one public `*_exec` surface.
+    fn pinned(threads: usize, sched: Schedule) -> ExecPolicy {
+        ExecPolicy::auto().with_threads(threads).with_schedule(sched)
     }
 
     #[test]
@@ -1214,8 +1018,8 @@ mod tests {
             for threads in [1usize, 2, 4, 7] {
                 for sched in SCHEDULES {
                     let mut got = vec![7.0f32; m * n];
-                    matmul_tiled_par(&a, &b, &mut got, m, k, n, &t,
-                                     threads, sched);
+                    matmul_exec(&a, &b, &mut got, m, k, n, &t,
+                                &pinned(threads, sched));
                     prop_assert!(got == want,
                         "parallel matmul diverged at {threads} threads \
                          under {sched:?}");
@@ -1239,8 +1043,8 @@ mod tests {
             matmul_bias_tiled(&a, &b, &bias, &mut want, m, k, n, &t);
             for sched in SCHEDULES {
                 let mut got = vec![3.0f32; m * n];
-                matmul_bias_tiled_par(&a, &b, &bias, &mut got, m, k, n,
-                                      &t, 3, sched);
+                matmul_bias_exec(&a, &b, &bias, &mut got, m, k, n, &t,
+                                 &pinned(3, sched));
                 prop_assert!(got == want,
                     "parallel bias matmul diverged under {sched:?}");
             }
@@ -1251,8 +1055,8 @@ mod tests {
             matmul_tn_acc_tiled(&a_t, &b, &mut want, k, m, n, &t);
             for sched in SCHEDULES {
                 let mut got = init.clone();
-                matmul_tn_acc_tiled_par(&a_t, &b, &mut got, k, m, n, &t,
-                                        5, sched);
+                matmul_tn_acc_exec(&a_t, &b, &mut got, k, m, n, &t,
+                                   &pinned(5, sched));
                 prop_assert!(got == want,
                     "parallel tn matmul diverged under {sched:?}");
             }
@@ -1286,7 +1090,8 @@ mod tests {
         matmul_tiled(&a, &b, &mut want, m, k, n, &big);
         for sched in SCHEDULES {
             let mut got = vec![0.0f32; m * n];
-            matmul_tiled_par(&a, &b, &mut got, m, k, n, &big, 4, sched);
+            matmul_exec(&a, &b, &mut got, m, k, n, &big,
+                        &pinned(4, sched));
             assert_eq!(got, want, "diverged under {sched:?}");
         }
     }
@@ -1303,9 +1108,9 @@ mod tests {
             let mut want = vec![0.0f32; m * n];
             matmul_naive(&a, &b, &mut want, m, k, n);
             let mut got = vec![0.0f32; m * n];
-            matmul_tiled_par(&a, &b, &mut got, m, k, n,
-                             &TileConfig::westmere_workers(4), 4,
-                             Schedule::Stealing);
+            matmul_exec(&a, &b, &mut got, m, k, n,
+                        &TileConfig::westmere_workers(4),
+                        &pinned(4, Schedule::Stealing));
             for i in 0..want.len() {
                 prop_assert!((want[i] - got[i]).abs() <= 1e-4,
                     "c[{i}]: {} vs {}", want[i], got[i]);
@@ -1333,9 +1138,10 @@ mod tests {
             for threads in [1usize, 2, 4, 7] {
                 for sched in SCHEDULES {
                     let mut got = vec![-1.0f32; nq * n];
-                    pairwise_sq_dists_tiled_par(&train, &queries, d,
-                                                &mut got, &t, threads,
-                                                sched);
+                    pairwise_sq_dists_exec(
+                        &train, &queries, d, &[], &[], &mut got, &t,
+                        &pinned(threads, sched)
+                            .with_algo(DistanceAlgo::Exact));
                     prop_assert!(got == want,
                         "parallel distances diverged at {threads} \
                          threads under {sched:?}");
@@ -1356,6 +1162,9 @@ mod tests {
             let d = g.usize_in(1, 12);
             let n = g.usize_in(1, 40);
             let features = g.f32_vec(n * d, 3.0);
+            // the Exact path never reads the cache, but the gather
+            // engine's seam always carries one
+            let cache = NormCache::compute(&features, d);
             let train_idx: Vec<usize> =
                 (0..g.usize_in(0, 30)).map(|_| g.usize_in(0, n - 1))
                                       .collect();
@@ -1369,9 +1178,10 @@ mod tests {
                 l1_f32: g.usize_in(2, 16) * d,
             };
             for threads in [1usize, 3, 5] {
-                let got = pairwise_sq_dists_gather_par(
-                    &features, d, &train_idx, &query_idx, &t, threads,
-                    Schedule::Stealing);
+                let got = pairwise_sq_dists_gather_exec(
+                    &features, d, &train_idx, &query_idx, &cache, &t,
+                    &pinned(threads, Schedule::Stealing)
+                        .with_algo(DistanceAlgo::Exact));
                 for (q, &qi) in query_idx.iter().enumerate() {
                     for (j, &ji) in train_idx.iter().enumerate() {
                         let want = sq_dist(
@@ -1414,9 +1224,9 @@ mod tests {
             for threads in [1usize, 2, 4, 7] {
                 for sched in SCHEDULES {
                     let mut got = vec![-1.0f32; nq * n];
-                    pairwise_sq_dists_gemm_par(&train, &queries, d, &tn,
-                                               &qn, &mut got, &t,
-                                               threads, sched);
+                    pairwise_sq_dists_gemm_exec(
+                        &train, &queries, d, &tn, &qn, &mut got, &t,
+                        &pinned(threads, sched));
                     prop_assert!(got == want,
                         "parallel gemm distances diverged at {threads} \
                          threads under {sched:?}");
@@ -1450,9 +1260,9 @@ mod tests {
             for threads in [1usize, 2, 4, 7] {
                 for sched in [Schedule::Static, Schedule::Stealing] {
                     let mut gemm = vec![-1.0f32; nq * n];
-                    pairwise_sq_dists_gemm_par(&train, &queries, d, &tn,
-                                               &qn, &mut gemm, &t,
-                                               threads, sched);
+                    pairwise_sq_dists_gemm_exec(
+                        &train, &queries, d, &tn, &qn, &mut gemm, &t,
+                        &pinned(threads, sched));
                     for i in 0..exact.len() {
                         prop_assert!(gemm[i] >= 0.0,
                             "gemm[{i}] = {} escaped the clamp at \
@@ -1473,7 +1283,7 @@ mod tests {
         // The gather engine under Gemm must equal the dense Gemm kernel
         // run on the gathered buffers with norms gathered from the
         // dataset-level cache — and under Exact it must stay the
-        // existing gather path exactly.
+        // per-pair scalar formulation exactly.
         check("gather-algo-gemm", 12, |g| {
             let d = g.usize_in(1, 10);
             let n = g.usize_in(1, 30);
@@ -1499,31 +1309,34 @@ mod tests {
                                    &cache.gather(&train_idx),
                                    &cache.gather(&query_idx), &mut want,
                                    &t);
+            let mut exact_want =
+                vec![0.0f32; query_idx.len() * train_idx.len()];
+            pairwise_sq_dists_naive(&train, &queries, d,
+                                    &mut exact_want);
             for threads in [1usize, 3, 5] {
-                let got = pairwise_sq_dists_gather_algo_par(
-                    &features, d, &train_idx, &query_idx, &cache,
-                    DistanceAlgo::Gemm, &t, threads, Schedule::Stealing);
+                let got = pairwise_sq_dists_gather_exec(
+                    &features, d, &train_idx, &query_idx, &cache, &t,
+                    &pinned(threads, Schedule::Stealing)
+                        .with_algo(DistanceAlgo::Gemm));
                 prop_assert!(got == want,
                     "gather gemm diverged at {threads} threads");
-                let exact = pairwise_sq_dists_gather_algo_par(
-                    &features, d, &train_idx, &query_idx, &cache,
-                    DistanceAlgo::Exact, &t, threads, Schedule::Static);
-                let legacy = pairwise_sq_dists_gather_par(
-                    &features, d, &train_idx, &query_idx, &t, threads,
-                    Schedule::Static);
-                prop_assert!(exact == legacy,
-                    "gather exact diverged from the legacy path");
+                let exact = pairwise_sq_dists_gather_exec(
+                    &features, d, &train_idx, &query_idx, &cache, &t,
+                    &pinned(threads, Schedule::Static)
+                        .with_algo(DistanceAlgo::Exact));
+                prop_assert!(exact == exact_want,
+                    "gather exact diverged from the per-pair oracle");
             }
             Ok(())
         });
     }
 
     #[test]
-    fn algo_par_resolves_auto_once_for_the_whole_call() {
+    fn exec_resolves_auto_algo_once_for_the_whole_call() {
         // Auto below the MAC threshold must run the Exact fan-out;
         // explicit Gemm must run the gemm fan-out — and the dispatch
-        // happens before the fan-out, so a split pass cannot mix
-        // formulations.
+        // happens once in `resolve()`, before the fan-out, so a split
+        // pass cannot mix formulations.
         let mut g = Gen::new(23);
         let (d, n, nq) = (5usize, 30, 12);
         let train = g.f32_vec(n * d, 1.0);
@@ -1532,21 +1345,22 @@ mod tests {
         let tn = row_sq_norms(&train, d);
         let qn = row_sq_norms(&queries, d);
         let mut exact = vec![0.0f32; nq * n];
-        pairwise_sq_dists_tiled_par(&train, &queries, d, &mut exact, &t,
-                                    4, Schedule::Static);
+        pairwise_sq_dists_exec(&train, &queries, d, &[], &[], &mut exact,
+                               &t, &pinned(4, Schedule::Static)
+                                   .with_algo(DistanceAlgo::Exact));
         let mut gemm = vec![0.0f32; nq * n];
-        pairwise_sq_dists_gemm_par(&train, &queries, d, &tn, &qn,
-                                   &mut gemm, &t, 4, Schedule::Static);
+        pairwise_sq_dists_gemm_exec(&train, &queries, d, &tn, &qn,
+                                    &mut gemm, &t,
+                                    &pinned(4, Schedule::Static));
         assert!(nq * n * d < crate::kernels::distance::MIN_GEMM_WORK);
         let mut got = vec![0.0f32; nq * n];
-        pairwise_sq_dists_algo_par(DistanceAlgo::Auto, &train, &queries,
-                                   d, &[], &[], &mut got, &t, 4,
-                                   Schedule::Static);
+        pairwise_sq_dists_exec(&train, &queries, d, &[], &[], &mut got,
+                               &t, &pinned(4, Schedule::Static));
         assert_eq!(got, exact, "small-work Auto must stay Exact");
         let mut got = vec![0.0f32; nq * n];
-        pairwise_sq_dists_algo_par(DistanceAlgo::Gemm, &train, &queries,
-                                   d, &tn, &qn, &mut got, &t, 4,
-                                   Schedule::Static);
+        pairwise_sq_dists_exec(&train, &queries, d, &tn, &qn, &mut got,
+                               &t, &pinned(4, Schedule::Static)
+                                   .with_algo(DistanceAlgo::Gemm));
         assert_eq!(got, gemm, "explicit Gemm must run the gemm fan-out");
     }
 
@@ -1606,9 +1420,9 @@ mod tests {
                 &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t);
             for threads in [1usize, 2, 4, 7] {
                 for sched in SCHEDULES {
-                    let got = coupled_step_par(
+                    let got = coupled_step_exec(
                         &w0, &w1, &x, &y, linear::LR, linear::LAMBDA,
-                        &t, threads, sched);
+                        &t, &pinned(threads, sched));
                     prop_assert!(got == want,
                         "coupled step diverged at {threads} threads \
                          under {sched:?}");
@@ -1636,9 +1450,9 @@ mod tests {
                                      linear::LAMBDA, &t);
         for threads in [1usize, 4, 7] {
             for sched in SCHEDULES {
-                let got = coupled_step_par(&w0, &w1, &x, &y, linear::LR,
-                                           linear::LAMBDA, &t, threads,
-                                           sched);
+                let got = coupled_step_exec(&w0, &w1, &x, &y, linear::LR,
+                                            linear::LAMBDA, &t,
+                                            &pinned(threads, sched));
                 assert_eq!(got, seq,
                     "single-tile batch diverged at {threads} threads \
                      under {sched:?}");
@@ -1664,9 +1478,9 @@ mod tests {
             let ((wl, ll), (ws, ls)) = linear::coupled_step_naive(
                 &w0, &w1, &x, &y, linear::LR, linear::LAMBDA);
             for sched in [Schedule::Static, Schedule::Stealing] {
-                let ((wl2, ll2), (ws2, ls2)) = coupled_step_par(
-                    &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t, 4,
-                    sched);
+                let ((wl2, ll2), (ws2, ls2)) = coupled_step_exec(
+                    &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t,
+                    &pinned(4, sched));
                 for f in 0..d {
                     prop_assert!((wl[f] - wl2[f]).abs() < 1e-4,
                         "lr w[{f}] under {sched:?}");
@@ -1685,13 +1499,16 @@ mod tests {
         let t = TileConfig::westmere();
         for sched in SCHEDULES {
             let mut c: Vec<f32> = Vec::new();
-            matmul_tiled_par(&[], &[], &mut c, 0, 0, 0, &t, 4, sched);
+            matmul_exec(&[], &[], &mut c, 0, 0, 0, &t,
+                        &pinned(4, sched));
             let mut c = vec![5.0f32; 3];
-            matmul_tiled_par(&[], &[], &mut c, 1, 0, 3, &t, 4, sched);
+            matmul_exec(&[], &[], &mut c, 1, 0, 3, &t,
+                        &pinned(4, sched));
             assert_eq!(c, vec![0.0; 3], "k = 0 must still zero C");
             let mut out: Vec<f32> = Vec::new();
-            pairwise_sq_dists_tiled_par(&[], &[], 2, &mut out, &t, 4,
-                                        sched);
+            pairwise_sq_dists_exec(&[], &[], 2, &[], &[], &mut out, &t,
+                                   &pinned(4, sched)
+                                       .with_algo(DistanceAlgo::Exact));
             assert!(out.is_empty());
         }
     }
@@ -1714,12 +1531,13 @@ mod tests {
         assert!(default_threads() >= 1);
     }
 
-    /// The `*_exec` API and the deprecated tuple wrappers share one
-    /// core: a pinned policy must reproduce the wrapper bit for bit on
-    /// every kernel, at several thread counts and both schedules.
+    /// Every `*_exec` entry under a fully pinned policy must reproduce
+    /// the sequential kernel bit for bit: one randomized grid point per
+    /// case sweeps the cross-kernel lattice in a single suite, on top
+    /// of the per-kernel thread/schedule sweeps above.
     #[test]
-    fn exec_api_matches_tuple_wrappers_bit_for_bit() {
-        check("exec-vs-wrappers", 56, |g| {
+    fn exec_api_matches_sequential_kernels_bit_for_bit() {
+        check("exec-vs-sequential", 56, |g| {
             let m = g.usize_in(1, 40);
             let k = g.usize_in(1, 24);
             let n = g.usize_in(1, 40);
@@ -1729,31 +1547,26 @@ mod tests {
             let t = rand_tiles(g);
             let threads = [1usize, 2, 4, 7][g.usize_in(0, 3)];
             let sched = SCHEDULES[g.usize_in(0, 2)];
-            let pol = ExecPolicy::auto()
-                .with_threads(threads)
-                .with_schedule(sched);
+            let pol = pinned(threads, sched);
 
-            let mut c1 = vec![0.0f32; m * n];
-            let mut c2 = vec![0.0f32; m * n];
-            matmul_tiled_par(&a, &b, &mut c1, m, k, n, &t, threads,
-                             sched);
-            matmul_exec(&a, &b, &mut c2, m, k, n, &t, &pol);
-            prop_assert!(c1 == c2, "matmul_exec != matmul_tiled_par");
+            let mut want = vec![0.0f32; m * n];
+            let mut got = vec![0.0f32; m * n];
+            matmul_tiled(&a, &b, &mut want, m, k, n, &t);
+            matmul_exec(&a, &b, &mut got, m, k, n, &t, &pol);
+            prop_assert!(got == want, "matmul_exec != matmul_tiled");
 
-            let mut c1 = vec![0.25f32; m * n];
-            let mut c2 = vec![0.25f32; m * n];
-            matmul_bias_tiled_par(&a, &b, &bias, &mut c1, m, k, n, &t,
-                                  threads, sched);
-            matmul_bias_exec(&a, &b, &bias, &mut c2, m, k, n, &t, &pol);
-            prop_assert!(c1 == c2, "bias exec != par");
+            let mut want = vec![0.25f32; m * n];
+            let mut got = vec![0.25f32; m * n];
+            matmul_bias_tiled(&a, &b, &bias, &mut want, m, k, n, &t);
+            matmul_bias_exec(&a, &b, &bias, &mut got, m, k, n, &t, &pol);
+            prop_assert!(got == want, "bias exec != sequential");
 
             let at = g.f32_vec(k * m, 1.0);
-            let mut c1 = vec![0.5f32; m * n];
-            let mut c2 = vec![0.5f32; m * n];
-            matmul_tn_acc_tiled_par(&at, &b, &mut c1, k, m, n, &t,
-                                    threads, sched);
-            matmul_tn_acc_exec(&at, &b, &mut c2, k, m, n, &t, &pol);
-            prop_assert!(c1 == c2, "tn exec != par");
+            let mut want = vec![0.5f32; m * n];
+            let mut got = vec![0.5f32; m * n];
+            matmul_tn_acc_tiled(&at, &b, &mut want, k, m, n, &t);
+            matmul_tn_acc_exec(&at, &b, &mut got, k, m, n, &t, &pol);
+            prop_assert!(got == want, "tn exec != sequential");
 
             let d = g.usize_in(1, 12);
             let nt = g.usize_in(1, 30);
@@ -1762,26 +1575,31 @@ mod tests {
             let queries = g.f32_vec(nq * d, 1.0);
             let tn = row_sq_norms(&train, d);
             let qn = row_sq_norms(&queries, d);
-            for algo in [DistanceAlgo::Exact, DistanceAlgo::Gemm] {
-                let mut o1 = vec![0.0f32; nq * nt];
-                let mut o2 = vec![0.0f32; nq * nt];
-                pairwise_sq_dists_algo_par(algo, &train, &queries, d,
-                                           &tn, &qn, &mut o1, &t,
-                                           threads, sched);
-                pairwise_sq_dists_exec(&train, &queries, d, &tn, &qn,
-                                       &mut o2, &t,
-                                       &pol.with_algo(algo));
-                prop_assert!(o1 == o2, "dists exec != par ({algo:?})");
-            }
+            let mut want = vec![0.0f32; nq * nt];
+            let mut got = vec![0.0f32; nq * nt];
+            pairwise_sq_dists_tiled(&train, &queries, d, &mut want, &t);
+            pairwise_sq_dists_exec(&train, &queries, d, &[], &[],
+                                   &mut got, &t,
+                                   &pol.with_algo(DistanceAlgo::Exact));
+            prop_assert!(got == want, "exact dists exec != sequential");
+            let mut want = vec![0.0f32; nq * nt];
+            let mut got = vec![0.0f32; nq * nt];
+            pairwise_sq_dists_gemm(&train, &queries, d, &tn, &qn,
+                                   &mut want, &t);
+            pairwise_sq_dists_exec(&train, &queries, d, &tn, &qn,
+                                   &mut got, &t,
+                                   &pol.with_algo(DistanceAlgo::Gemm));
+            prop_assert!(got == want, "gemm dists exec != sequential");
             Ok(())
         });
     }
 
-    /// The gather engine under a policy must reuse the `NormCache`
-    /// exactly like the tuple wrapper it replaces.
+    /// The gather engine under a policy must equal the dense kernels
+    /// run on explicitly gathered buffers, with norms gathered from the
+    /// dataset-level `NormCache` on the Gemm path.
     #[test]
-    fn gather_exec_matches_the_tuple_engine_bit_for_bit() {
-        check("gather-exec-vs-engine", 24, |g| {
+    fn gather_exec_matches_the_dense_kernels_bit_for_bit() {
+        check("gather-exec-vs-dense", 24, |g| {
             let d = g.usize_in(1, 10);
             let rows = g.usize_in(4, 40);
             let features = g.f32_vec(rows * d, 1.0);
@@ -1793,20 +1611,24 @@ mod tests {
                 (0..g.usize_in(1, rows)).map(|_| g.usize_in(0, rows - 1))
                                         .collect();
             let t = rand_tiles(g);
+            let train = gather_rows(&features, d, &ti);
+            let queries = gather_rows(&features, d, &qi);
             for algo in [DistanceAlgo::Exact, DistanceAlgo::Gemm] {
+                let mut want = vec![0.0f32; qi.len() * ti.len()];
+                match algo {
+                    DistanceAlgo::Gemm => pairwise_sq_dists_gemm(
+                        &train, &queries, d, &cache.gather(&ti),
+                        &cache.gather(&qi), &mut want, &t),
+                    _ => pairwise_sq_dists_naive(&train, &queries, d,
+                                                 &mut want),
+                }
                 for threads in [1usize, 4] {
                     let sched = SCHEDULES[g.usize_in(0, 2)];
                     let got = pairwise_sq_dists_gather_exec(
                         &features, d, &ti, &qi, &cache, &t,
-                        &ExecPolicy::auto()
-                            .with_threads(threads)
-                            .with_schedule(sched)
-                            .with_algo(algo));
-                    let want = pairwise_sq_dists_gather_algo_par(
-                        &features, d, &ti, &qi, &cache, algo, &t,
-                        threads, sched);
+                        &pinned(threads, sched).with_algo(algo));
                     prop_assert!(got == want,
-                        "gather exec != par ({algo:?}, {threads})");
+                        "gather exec != dense ({algo:?}, {threads})");
                 }
             }
             Ok(())
@@ -1814,9 +1636,10 @@ mod tests {
     }
 
     /// Coupled step: `ExecPolicy::sequential()` IS the sequential
-    /// kernel, and any pinned policy matches the tuple wrapper bitwise.
+    /// kernel, and any pinned policy matches the tile-order reference
+    /// bitwise.
     #[test]
-    fn coupled_exec_matches_wrapper_and_sequential_policy() {
+    fn coupled_exec_matches_reference_and_sequential_policy() {
         check("coupled-exec", 24, |g| {
             let d = g.usize_in(1, 12);
             let b = g.usize_in(1, 60);
@@ -1834,16 +1657,15 @@ mod tests {
                 &ExecPolicy::sequential());
             prop_assert!(seq == via_policy,
                 "sequential policy must be the sequential kernel");
+            let want = coupled_tile_reference(
+                &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t);
             for threads in [2usize, 7] {
                 let sched = SCHEDULES[g.usize_in(0, 2)];
-                let a = coupled_step_par(&w0, &w1, &x, &y, linear::LR,
-                                         linear::LAMBDA, &t, threads,
-                                         sched);
                 let e = coupled_step_exec(
                     &w0, &w1, &x, &y, linear::LR, linear::LAMBDA, &t,
-                    &ExecPolicy::auto().with_threads(threads)
-                                       .with_schedule(sched));
-                prop_assert!(a == e, "coupled exec != par");
+                    &pinned(threads, sched));
+                prop_assert!(e == want,
+                    "coupled exec != tile-order reference");
             }
             Ok(())
         });

@@ -23,8 +23,11 @@
 //! and the formulation moves distances by ≤ 1e-4 (Exact is the
 //! bit-stable oracle).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use super::distance::{self, DistanceAlgo};
 use super::parallel::{self, Schedule};
+use super::tile::TileConfig;
 
 /// Execution policy: worker count, macro-tile schedule, and distance
 /// formulation. `threads == 0` means "session default / auto".
@@ -244,6 +247,39 @@ impl ServePolicy {
     }
 }
 
+/// Session-wide `--chunk-rows` override for the out-of-core train
+/// store; 0 = unset (fall through to the env/auto chain).
+static CHUNK_ROWS_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Pin (or with `None` clear) the session-wide chunk size, in train
+/// rows, for newly written `.lmtc` stores — the `--chunk-rows` CLI
+/// layer of the [`default_chunk_rows`] resolution chain.
+pub fn set_chunk_rows(rows: Option<usize>) {
+    CHUNK_ROWS_OVERRIDE.store(rows.unwrap_or(0), Ordering::Relaxed);
+}
+
+/// Chunk size (train rows per feature chunk) for the out-of-core
+/// store, resolved through the same override chain as every other
+/// execution knob: `--chunk-rows` → `LOCALITY_ML_CHUNK_ROWS` → an auto
+/// size of ~4 MiB of f32 features per chunk (two in flight under the
+/// double buffer ≈ 8 MiB working set), never smaller than one train
+/// macro-tile of the fused scans' blocking
+/// ([`TileConfig::pair_tiles`]) so a chunk always covers at least one
+/// full reuse window.
+pub fn default_chunk_rows(d: usize, tiles: &TileConfig) -> usize {
+    let pinned = CHUNK_ROWS_OVERRIDE.load(Ordering::Relaxed);
+    if pinned > 0 {
+        return pinned;
+    }
+    if let Some(v) = env_usize("LOCALITY_ML_CHUNK_ROWS") {
+        if v > 0 {
+            return v;
+        }
+    }
+    let (_, jt) = tiles.pair_tiles(d);
+    ((1 << 20) / d.max(1)).max(jt).max(1)
+}
+
 /// Parse an environment variable as `usize`, ignoring unset or
 /// unparsable values (mirroring the threads/schedule/dist-algo
 /// policies).
@@ -311,6 +347,24 @@ mod tests {
         // explicit 1 stays 1 at any size
         assert_eq!(ExecPolicy::sequential().threads_for(usize::MAX / 2),
                    1);
+    }
+
+    #[test]
+    fn chunk_rows_resolution_chain_and_auto_floor() {
+        let tiles = TileConfig::westmere();
+        // auto: ~4 MiB of f32 features, never below one train tile
+        let (_, jt) = tiles.pair_tiles(8);
+        let auto = default_chunk_rows(8, &tiles);
+        assert_eq!(auto, ((1usize << 20) / 8).max(jt));
+        // huge d drives the byte target below one tile; the tile floor
+        // (and the >= 1 floor) must hold
+        assert!(default_chunk_rows(1 << 24, &tiles) >= 1);
+        // a pinned override wins over the auto heuristic...
+        set_chunk_rows(Some(37));
+        assert_eq!(default_chunk_rows(8, &tiles), 37);
+        // ...and clearing it restores the auto chain
+        set_chunk_rows(None);
+        assert_eq!(default_chunk_rows(8, &tiles), auto);
     }
 
     #[test]

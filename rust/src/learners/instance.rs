@@ -11,7 +11,9 @@
 //! Hyperparameters (k = 5, Gaussian bandwidth h = 8) mirror
 //! `python/compile/shapes.py`.
 
-use crate::data::Dataset;
+use anyhow::Result;
+
+use crate::data::{Dataset, TrainStore};
 use crate::kernels::distance::{
     pairwise_sq_dists_gemm_packed, row_sq_norms, transpose_rows,
 };
@@ -136,7 +138,7 @@ pub fn knn_scan(train: &Dataset, test_rows: &[f32], d: usize, k: usize)
         // (`nearest.len() < k` is never true) fell through to
         // `nearest.last().unwrap()` and panicked on the empty list.
         // No neighbours can vote, so predict the training prior.
-        return vec![majority_class(&train.labels, train.n_classes);
+        return vec![majority_class(train.labels(), train.n_classes);
                     n_test];
     }
     let mut preds = Vec::with_capacity(n_test);
@@ -150,7 +152,7 @@ pub fn knn_scan(train: &Dataset, test_rows: &[f32], d: usize, k: usize)
         }
         s.votes.fill(0);
         for &(_, j) in &s.nearest {
-            s.votes[train.labels[j] as usize] += 1;
+            s.votes[train.labels()[j] as usize] += 1;
         }
         preds.push(argmax_votes(&s.votes));
     }
@@ -175,7 +177,7 @@ pub fn prw_scan(train: &Dataset, test_rows: &[f32], d: usize,
         for j in 0..train.n {
             dists[j] = sq_dist(qrow, train.row(j));
         }
-        preds.push(prw_vote_into(&dists, &train.labels, train.n_classes,
+        preds.push(prw_vote_into(&dists, train.labels(), train.n_classes,
                                  inv, &mut s));
     }
     preds
@@ -198,9 +200,9 @@ pub fn joint_scan(train: &Dataset, test_rows: &[f32], d: usize, k: usize,
         for j in 0..train.n {
             dists[j] = sq_dist(qrow, train.row(j));
         }
-        knn.push(knn_vote_into(&dists, &train.labels, train.n_classes, k,
+        knn.push(knn_vote_into(&dists, train.labels(), train.n_classes, k,
                                &mut s));
-        prw.push(prw_vote_into(&dists, &train.labels, train.n_classes,
+        prw.push(prw_vote_into(&dists, train.labels(), train.n_classes,
                                inv, &mut s));
     }
     (knn, prw)
@@ -266,7 +268,7 @@ fn scan_tiled_blocks(
         let qhi = (q0 + qt).min(n_test);
         let block = &test_rows[q0 * d..qhi * d];
         let out = &mut dists[..(qhi - q0) * train.n];
-        pairwise_sq_dists_tiled(&train.features, block, d, out, tiles);
+        pairwise_sq_dists_tiled(train.features(), block, d, out, tiles);
         for q in 0..qhi - q0 {
             consume(&out[q * train.n..(q + 1) * train.n]);
         }
@@ -281,7 +283,7 @@ pub fn knn_scan_tiled(train: &Dataset, test_rows: &[f32], d: usize,
     let mut preds = Vec::new();
     let mut s = VoteScratch::new(train.n_classes, k);
     scan_tiled_blocks(train, test_rows, d, tiles, |row| {
-        preds.push(knn_vote_into(row, &train.labels, train.n_classes, k,
+        preds.push(knn_vote_into(row, train.labels(), train.n_classes, k,
                                  &mut s));
     });
     preds
@@ -294,7 +296,7 @@ pub fn prw_scan_tiled(train: &Dataset, test_rows: &[f32], d: usize,
     let mut preds = Vec::new();
     let mut s = VoteScratch::new(train.n_classes, 0);
     scan_tiled_blocks(train, test_rows, d, tiles, |row| {
-        preds.push(prw_vote_into(row, &train.labels, train.n_classes,
+        preds.push(prw_vote_into(row, train.labels(), train.n_classes,
                                  inv, &mut s));
     });
     preds
@@ -312,9 +314,9 @@ pub fn joint_scan_tiled(train: &Dataset, test_rows: &[f32], d: usize,
     let mut prw = Vec::new();
     let mut s = VoteScratch::new(train.n_classes, k);
     scan_tiled_blocks(train, test_rows, d, tiles, |row| {
-        knn.push(knn_vote_into(row, &train.labels, train.n_classes, k,
+        knn.push(knn_vote_into(row, train.labels(), train.n_classes, k,
                                &mut s));
-        prw.push(prw_vote_into(row, &train.labels, train.n_classes, inv,
+        prw.push(prw_vote_into(row, train.labels(), train.n_classes, inv,
                                &mut s));
     });
     (knn, prw)
@@ -368,52 +370,6 @@ fn scan_par<T: Send>(
         crate::util::pool::Pool::run_parallel(jobs.len(), jobs)
     };
     blocks.into_iter().flatten().collect()
-}
-
-/// Parallel cache-blocked k-NN scan: query blocks fan out across
-/// `threads` workers; bit-identical to [`knn_scan_tiled`] (and
-/// therefore to [`knn_scan`]) at any thread count, under either
-/// schedule.
-#[deprecated(note = "use `knn_scan_exec` with an `ExecPolicy` \
-                     (pin `DistanceAlgo::Exact` for this path)")]
-pub fn knn_scan_par(train: &Dataset, test_rows: &[f32], d: usize,
-                    k: usize, tiles: &TileConfig, threads: usize,
-                    schedule: Schedule) -> Vec<i32> {
-    scan_par(train, test_rows, d, tiles, threads, schedule,
-             |rows| knn_scan_tiled(train, rows, d, k, tiles))
-}
-
-/// Parallel cache-blocked PRW scan (see [`knn_scan_par`]).
-#[deprecated(note = "use `prw_scan_exec` with an `ExecPolicy` \
-                     (pin `DistanceAlgo::Exact` for this path)")]
-pub fn prw_scan_par(train: &Dataset, test_rows: &[f32], d: usize,
-                    bandwidth: f32, tiles: &TileConfig, threads: usize,
-                    schedule: Schedule) -> Vec<i32> {
-    scan_par(train, test_rows, d, tiles, threads, schedule,
-             |rows| prw_scan_tiled(train, rows, d, bandwidth, tiles))
-}
-
-/// Parallel tile-level joint scan: ONE tiled distance pass per query
-/// block feeds BOTH learners on each worker (§5.2 fusion preserved
-/// inside every shard). Bit-identical to [`joint_scan_tiled`] at any
-/// thread count, under either schedule.
-#[deprecated(note = "use `joint_scan_exec` with an `ExecPolicy` \
-                     (pin `DistanceAlgo::Exact` for this path)")]
-pub fn joint_scan_par(train: &Dataset, test_rows: &[f32], d: usize,
-                      k: usize, bandwidth: f32, tiles: &TileConfig,
-                      threads: usize, schedule: Schedule)
-    -> (Vec<i32>, Vec<i32>) {
-    let blocks = scan_par(train, test_rows, d, tiles, threads, schedule,
-                          |rows| {
-        vec![joint_scan_tiled(train, rows, d, k, bandwidth, tiles)]
-    });
-    let mut knn = Vec::new();
-    let mut prw = Vec::new();
-    for (kp, pp) in blocks {
-        knn.extend(kp);
-        prw.extend(pp);
-    }
-    (knn, prw)
 }
 
 // ---------------------------------------------------------------------
@@ -531,14 +487,15 @@ impl PrwAcc {
 /// scans pack this ONCE on the calling thread and share it read-only
 /// across every query shard, so no worker re-transposes or re-packs
 /// the training matrix.
-fn pack_panels(train: &Dataset, d: usize, tiles: &TileConfig)
+fn pack_panels(train_feats: &[f32], d: usize, tiles: &TileConfig)
     -> Vec<PackedPanel> {
+    let n = train_feats.len() / d;
     let (_, jt) = tiles.pair_tiles(d);
-    (0..train.n)
+    (0..n)
         .step_by(jt)
         .map(|j0| {
-            let jhi = (j0 + jt).min(train.n);
-            let tt = transpose_rows(&train.features[j0 * d..jhi * d], d);
+            let jhi = (j0 + jt).min(n);
+            let tt = transpose_rows(&train_feats[j0 * d..jhi * d], d);
             PackedPanel::pack(&tt, d, jhi - j0, tiles.kc)
         })
         .collect()
@@ -556,22 +513,27 @@ fn pack_panels(train: &Dataset, d: usize, tiles: &TileConfig)
 /// norms are computed once for the whole scan, and the train-side
 /// norms come from the caller's dataset-level [`NormCache`] — never
 /// recomputed here.
+///
+/// The train side is a bare `(features, norms)` slice pair rather than
+/// a `Dataset`, so the out-of-core store scans can run this exact
+/// skeleton per feature chunk (with chunk-local norm segments sliced
+/// from the store's global cache) — one skeleton, both backends.
 #[allow(clippy::too_many_arguments)]
 fn scan_fused_blocks(
-    train: &Dataset,
+    train_feats: &[f32],
+    train_norms: &[f32],
     test_rows: &[f32],
     d: usize,
     tiles: &TileConfig,
     algo: DistanceAlgo,
-    norms: &NormCache,
     packed: Option<&[PackedPanel]>,
     mut consume_tile: impl FnMut(usize, usize, &[f32]),
 ) {
-    assert_eq!(d, train.d);
-    assert_eq!(norms.len(), train.n,
-        "norm cache does not match the training set");
+    assert_eq!(train_feats.len() % d, 0);
+    let n = train_feats.len() / d;
+    assert_eq!(train_norms.len(), n,
+        "norm segment does not match the train rows");
     let n_test = test_rows.len() / d;
-    let n = train.n;
     if n_test == 0 || n == 0 {
         return;
     }
@@ -583,7 +545,7 @@ fn scan_fused_blocks(
         (false, _) => &[],
         (true, Some(p)) => p,
         (true, None) => {
-            local_panels = pack_panels(train, d, tiles);
+            local_panels = pack_panels(train_feats, d, tiles);
             &local_panels
         }
     };
@@ -603,11 +565,11 @@ fn scan_fused_blocks(
             let out = &mut block[..qb * len];
             if algo == DistanceAlgo::Gemm {
                 pairwise_sq_dists_gemm_packed(
-                    &panels[ji], qrows, d, &norms.norms()[j0..jhi],
+                    &panels[ji], qrows, d, &train_norms[j0..jhi],
                     &qnorms[q0..qhi], out, tiles);
             } else {
                 pairwise_sq_dists_tiled(
-                    &train.features[j0 * d..jhi * d], qrows, d, out,
+                    &train_feats[j0 * d..jhi * d], qrows, d, out,
                     tiles);
             }
             for q in 0..qb {
@@ -637,16 +599,19 @@ fn knn_scan_fused_packed(train: &Dataset, test_rows: &[f32], d: usize,
                          algo: DistanceAlgo, norms: &NormCache,
                          packed: Option<&[PackedPanel]>) -> Vec<i32> {
     assert_eq!(d, train.d);
+    assert_eq!(norms.len(), train.n,
+        "norm cache does not match the training set");
     let n_test = test_rows.len() / d;
     if k == 0 {
         // the shared k = 0 guard: no neighbours vote → training prior
-        return vec![majority_class(&train.labels, train.n_classes);
+        return vec![majority_class(train.labels(), train.n_classes);
                     n_test];
     }
     let mut acc = KnnAcc::new(n_test, k);
-    scan_fused_blocks(train, test_rows, d, tiles, algo, norms, packed,
+    scan_fused_blocks(train.features(), norms.norms(), test_rows, d,
+                      tiles, algo, packed,
                       |q, j0, dists| acc.consume(q, j0, dists));
-    acc.finalize(&train.labels, train.n_classes)
+    acc.finalize(train.labels(), train.n_classes)
 }
 
 /// Fused PRW scan (see [`knn_scan_fused`] and [`PrwAcc`] for the
@@ -664,12 +629,14 @@ fn prw_scan_fused_packed(train: &Dataset, test_rows: &[f32], d: usize,
                          algo: DistanceAlgo, norms: &NormCache,
                          packed: Option<&[PackedPanel]>) -> Vec<i32> {
     assert_eq!(d, train.d);
+    assert_eq!(norms.len(), train.n,
+        "norm cache does not match the training set");
     let n_test = test_rows.len() / d;
     let inv = 1.0f64 / (2.0 * bandwidth as f64 * bandwidth as f64);
     let mut acc = PrwAcc::new(n_test, train.n_classes, inv);
-    scan_fused_blocks(train, test_rows, d, tiles, algo, norms, packed,
-                      |q, j0, dists| {
-        acc.consume(q, j0, dists, &train.labels);
+    scan_fused_blocks(train.features(), norms.norms(), test_rows, d,
+                      tiles, algo, packed, |q, j0, dists| {
+        acc.consume(q, j0, dists, train.labels());
     });
     acc.finalize()
 }
@@ -694,21 +661,23 @@ fn joint_scan_fused_packed(train: &Dataset, test_rows: &[f32], d: usize,
                            packed: Option<&[PackedPanel]>)
     -> (Vec<i32>, Vec<i32>) {
     assert_eq!(d, train.d);
+    assert_eq!(norms.len(), train.n,
+        "norm cache does not match the training set");
     let n_test = test_rows.len() / d;
     let inv = 1.0f64 / (2.0 * bandwidth as f64 * bandwidth as f64);
     let mut knn_acc = KnnAcc::new(n_test, k);
     let mut prw_acc = PrwAcc::new(n_test, train.n_classes, inv);
-    scan_fused_blocks(train, test_rows, d, tiles, algo, norms, packed,
-                      |q, j0, dists| {
+    scan_fused_blocks(train.features(), norms.norms(), test_rows, d,
+                      tiles, algo, packed, |q, j0, dists| {
         if k > 0 {
             knn_acc.consume(q, j0, dists);
         }
-        prw_acc.consume(q, j0, dists, &train.labels);
+        prw_acc.consume(q, j0, dists, train.labels());
     });
     let knn = if k == 0 {
-        vec![majority_class(&train.labels, train.n_classes); n_test]
+        vec![majority_class(train.labels(), train.n_classes); n_test]
     } else {
-        knn_acc.finalize(&train.labels, train.n_classes)
+        knn_acc.finalize(train.labels(), train.n_classes)
     };
     (knn, prw_acc.finalize())
 }
@@ -727,7 +696,7 @@ fn knn_fused_core(train: &Dataset, test_rows: &[f32], d: usize,
     let algo = algo.resolve((test_rows.len() / d.max(1)) * train.n * d);
     // pack the train panels ONCE here; the shards share them read-only
     let packed = (algo == DistanceAlgo::Gemm)
-        .then(|| pack_panels(train, d, tiles));
+        .then(|| pack_panels(train.features(), d, tiles));
     let packed_ref = packed.as_deref();
     scan_par(train, test_rows, d, tiles, threads, schedule, |rows| {
         knn_scan_fused_packed(train, rows, d, k, tiles, algo, norms,
@@ -743,7 +712,7 @@ fn prw_fused_core(train: &Dataset, test_rows: &[f32], d: usize,
                   schedule: Schedule) -> Vec<i32> {
     let algo = algo.resolve((test_rows.len() / d.max(1)) * train.n * d);
     let packed = (algo == DistanceAlgo::Gemm)
-        .then(|| pack_panels(train, d, tiles));
+        .then(|| pack_panels(train.features(), d, tiles));
     let packed_ref = packed.as_deref();
     scan_par(train, test_rows, d, tiles, threads, schedule, |rows| {
         prw_scan_fused_packed(train, rows, d, bandwidth, tiles, algo,
@@ -762,7 +731,7 @@ fn joint_fused_core(train: &Dataset, test_rows: &[f32], d: usize,
     -> (Vec<i32>, Vec<i32>) {
     let algo = algo.resolve((test_rows.len() / d.max(1)) * train.n * d);
     let packed = (algo == DistanceAlgo::Gemm)
-        .then(|| pack_panels(train, d, tiles));
+        .then(|| pack_panels(train.features(), d, tiles));
     let packed_ref = packed.as_deref();
     let blocks = scan_par(train, test_rows, d, tiles, threads, schedule,
                           |rows| {
@@ -824,7 +793,7 @@ pub fn joint_scan_exec(train: &Dataset, test_rows: &[f32], d: usize,
 /// serving hot path.
 pub fn pack_train_panels(train: &Dataset, d: usize, tiles: &TileConfig)
     -> Vec<PackedPanel> {
-    pack_panels(train, d, tiles)
+    pack_panels(train.features(), d, tiles)
 }
 
 /// The resident-serving joint-scan entry point: identical bits to
@@ -848,7 +817,7 @@ pub fn joint_scan_exec_prepacked(train: &Dataset, test_rows: &[f32],
     let p = policy.resolve();
     let algo = p.algo.resolve((test_rows.len() / d.max(1)) * train.n * d);
     let local = (algo == DistanceAlgo::Gemm && packed.is_none())
-        .then(|| pack_panels(train, d, tiles));
+        .then(|| pack_panels(train.features(), d, tiles));
     let packed_ref = packed.or(local.as_deref());
     let blocks = scan_par(train, test_rows, d, tiles, p.threads,
                           p.schedule, |rows| {
@@ -864,38 +833,220 @@ pub fn joint_scan_exec_prepacked(train: &Dataset, test_rows: &[f32],
     (knn, prw)
 }
 
-/// Tuple-signature wrapper kept for the PR-5 parity suites.
-#[deprecated(note = "use `knn_scan_exec` with an `ExecPolicy`")]
-#[allow(clippy::too_many_arguments)]
-pub fn knn_scan_fused_par(train: &Dataset, test_rows: &[f32], d: usize,
-                          k: usize, tiles: &TileConfig,
-                          algo: DistanceAlgo, norms: &NormCache,
-                          threads: usize, schedule: Schedule) -> Vec<i32> {
-    knn_fused_core(train, test_rows, d, k, tiles, algo, norms, threads,
-                   schedule)
+// ---------------------------------------------------------------------
+// Store-backed scans — the out-of-core TrainStore seam
+// ---------------------------------------------------------------------
+
+/// Query partition for the store scans: the same query-tile-aligned
+/// fan-out as [`scan_par`], expressed as explicit row ranges so the
+/// per-part accumulator state can persist across train chunks. Returns
+/// `(stealing, parts)`; a single part means "run inline".
+fn store_scan_parts(n_test: usize, d: usize, tiles: &TileConfig,
+                    threads: usize, schedule: Schedule)
+    -> (bool, Vec<std::ops::Range<usize>>) {
+    use crate::kernels::parallel::{schedule_parts, shard_unit};
+    let (qt, _) = tiles.pair_tiles(d);
+    let unit = shard_unit(qt, n_test, threads);
+    let units = n_test.div_ceil(unit);
+    if threads <= 1 || units <= 1 {
+        return (false, vec![0..n_test]);
+    }
+    let (stealing, parts) = schedule_parts(units, threads, schedule);
+    let rows: Vec<_> = parts
+        .iter()
+        .map(|p| p.start * unit..(p.end * unit).min(n_test))
+        .collect();
+    (stealing && rows.len() > 1, rows)
 }
 
-/// Tuple-signature wrapper kept for the PR-5 parity suites.
-#[deprecated(note = "use `prw_scan_exec` with an `ExecPolicy`")]
+/// The chunked-scan driver: streams the store's train chunks through
+/// [`TrainStore::scan_chunks`] (double-buffered I/O) and runs the fused
+/// tile skeleton over every (chunk × query-part) pair. Per-part
+/// accumulator states (`S`) persist ACROSS chunks — each chunk's jobs
+/// take the states by value, fold the chunk's distance tiles into
+/// them, and hand them back in part order — so the full-scan reduction
+/// is exactly the resident reduction split at chunk boundaries:
+/// per query, the `(global j, distance)` stream is consumed in the
+/// same globally ascending train order as the resident fused scans
+/// (chunks ascend; tiles within a chunk ascend), with per-pair
+/// distance bits independent of the chunk partition (Exact is
+/// per-pair; Gemm per-pair bits don't depend on panel blocking).
+/// `consume` receives `(state, part-local query, GLOBAL train row j0,
+/// tile distances)`. `algo` must already be concrete — resolve Auto on
+/// the WHOLE scan's work before calling, so every chunk runs the same
+/// formulation.
 #[allow(clippy::too_many_arguments)]
-pub fn prw_scan_fused_par(train: &Dataset, test_rows: &[f32], d: usize,
-                          bandwidth: f32, tiles: &TileConfig,
-                          algo: DistanceAlgo, norms: &NormCache,
-                          threads: usize, schedule: Schedule) -> Vec<i32> {
-    prw_fused_core(train, test_rows, d, bandwidth, tiles, algo, norms,
-                   threads, schedule)
+fn store_scan_chunked<S: Send>(
+    store: &TrainStore,
+    test_rows: &[f32],
+    d: usize,
+    tiles: &TileConfig,
+    algo: DistanceAlgo,
+    threads: usize,
+    stealing: bool,
+    mut states: Vec<S>,
+    parts: &[std::ops::Range<usize>],
+    consume: impl Fn(&mut S, usize, usize, &[f32]) + Sync,
+) -> Result<Vec<S>> {
+    use crate::util::pool::Pool;
+    debug_assert_eq!(states.len(), parts.len());
+    let all_norms = store.norms().norms();
+    let consume = &consume;
+    store.scan_chunks(|row0, feats| {
+        let cn = feats.len() / d;
+        let chunk_norms = &all_norms[row0..row0 + cn];
+        // pack this chunk's Gemm panels ONCE on the calling thread;
+        // every query part shares them read-only
+        let panels = (algo == DistanceAlgo::Gemm)
+            .then(|| pack_panels(feats, d, tiles));
+        let packed_ref = panels.as_deref();
+        let taken: Vec<S> = states.drain(..).collect();
+        let jobs: Vec<Box<dyn FnOnce() -> S + Send + '_>> = taken
+            .into_iter()
+            .zip(parts)
+            .map(|(mut s, r)| {
+                let rows = &test_rows[r.start * d..r.end * d];
+                Box::new(move || {
+                    scan_fused_blocks(feats, chunk_norms, rows, d,
+                                      tiles, algo, packed_ref,
+                                      |q, j0, dists| {
+                        consume(&mut s, q, row0 + j0, dists);
+                    });
+                    s
+                }) as Box<dyn FnOnce() -> S + Send + '_>
+            })
+            .collect();
+        states = if stealing {
+            Pool::run_stealing(threads, jobs)
+        } else {
+            Pool::run_parallel(jobs.len(), jobs)
+        };
+        Ok(())
+    })?;
+    Ok(states)
 }
 
-/// Tuple-signature wrapper kept for the PR-5 parity suites.
-#[deprecated(note = "use `joint_scan_exec` with an `ExecPolicy`")]
-#[allow(clippy::too_many_arguments)]
-pub fn joint_scan_fused_par(train: &Dataset, test_rows: &[f32],
-                            d: usize, k: usize, bandwidth: f32,
-                            tiles: &TileConfig, algo: DistanceAlgo,
-                            norms: &NormCache, threads: usize,
-                            schedule: Schedule) -> (Vec<i32>, Vec<i32>) {
-    joint_fused_core(train, test_rows, d, k, bandwidth, tiles, algo,
-                     norms, threads, schedule)
+/// THE store-backed k-NN scan entry point: [`knn_scan_exec`] lifted
+/// onto the [`TrainStore`] seam. A `Resident` store delegates to the
+/// in-memory fused scan verbatim (same bits, same code path); a
+/// `Chunked` store streams the train chunks once per scan, folding
+/// every chunk's distance tiles into persistent per-query top-k lists.
+/// Determinism contract (the sixth axis — chunking never changes
+/// bits): predictions are bit-identical between the two backends at
+/// any chunk size, thread count, schedule and formulation, because the
+/// per-pair distance bits and the per-query consumption order are both
+/// chunk-invariant (property-tested here and in the coordinator
+/// suites).
+pub fn knn_scan_store_exec(store: &TrainStore, test_rows: &[f32],
+                           k: usize, tiles: &TileConfig,
+                           policy: &ExecPolicy) -> Result<Vec<i32>> {
+    let d = store.d();
+    if let Some(ds) = store.as_resident() {
+        return Ok(knn_scan_exec(ds, test_rows, d, k, tiles,
+                                store.norms(), policy));
+    }
+    let n_test = test_rows.len() / d;
+    if k == 0 {
+        // the shared k = 0 guard: no neighbours vote → training prior
+        return Ok(vec![majority_class(store.labels(),
+                                      store.n_classes()); n_test]);
+    }
+    let p = policy.resolve();
+    let algo = p.algo.resolve(n_test * store.n() * d);
+    let (stealing, parts) =
+        store_scan_parts(n_test, d, tiles, p.threads, p.schedule);
+    let states: Vec<KnnAcc> =
+        parts.iter().map(|r| KnnAcc::new(r.len(), k)).collect();
+    let states = store_scan_chunked(store, test_rows, d, tiles, algo,
+                                    p.threads, stealing, states, &parts,
+                                    |acc, q, j0, dists| {
+        acc.consume(q, j0, dists);
+    })?;
+    Ok(states
+        .iter()
+        .flat_map(|acc| acc.finalize(store.labels(), store.n_classes()))
+        .collect())
+}
+
+/// THE store-backed PRW scan entry point (see [`knn_scan_store_exec`]).
+/// The chunked backend carries the [`PrwAcc`] running row-min contract
+/// across chunk boundaries, so — exactly like the fused vs
+/// materializing scans — the f64 scores reassociate in the last ulps
+/// and the contract is prediction-level equality with the resident
+/// backend, not score-bit equality.
+pub fn prw_scan_store_exec(store: &TrainStore, test_rows: &[f32],
+                           bandwidth: f32, tiles: &TileConfig,
+                           policy: &ExecPolicy) -> Result<Vec<i32>> {
+    let d = store.d();
+    if let Some(ds) = store.as_resident() {
+        return Ok(prw_scan_exec(ds, test_rows, d, bandwidth, tiles,
+                                store.norms(), policy));
+    }
+    let n_test = test_rows.len() / d;
+    let inv = 1.0f64 / (2.0 * bandwidth as f64 * bandwidth as f64);
+    let p = policy.resolve();
+    let algo = p.algo.resolve(n_test * store.n() * d);
+    let (stealing, parts) =
+        store_scan_parts(n_test, d, tiles, p.threads, p.schedule);
+    let states: Vec<PrwAcc> = parts
+        .iter()
+        .map(|r| PrwAcc::new(r.len(), store.n_classes(), inv))
+        .collect();
+    let labels = store.labels();
+    let states = store_scan_chunked(store, test_rows, d, tiles, algo,
+                                    p.threads, stealing, states, &parts,
+                                    |acc, q, j0, dists| {
+        acc.consume(q, j0, dists, labels);
+    })?;
+    Ok(states.iter().flat_map(|acc| acc.finalize()).collect())
+}
+
+/// THE store-backed joint scan entry point: ONE streamed distance pass
+/// per chunk feeds BOTH learners (§5.2 fusion preserved out-of-core —
+/// each train chunk is read from disk exactly once for the pair of
+/// learners). See [`knn_scan_store_exec`] for the backend and
+/// determinism contract.
+pub fn joint_scan_store_exec(store: &TrainStore, test_rows: &[f32],
+                             k: usize, bandwidth: f32,
+                             tiles: &TileConfig, policy: &ExecPolicy)
+    -> Result<(Vec<i32>, Vec<i32>)> {
+    let d = store.d();
+    if let Some(ds) = store.as_resident() {
+        return Ok(joint_scan_exec(ds, test_rows, d, k, bandwidth, tiles,
+                                  store.norms(), policy));
+    }
+    let n_test = test_rows.len() / d;
+    let inv = 1.0f64 / (2.0 * bandwidth as f64 * bandwidth as f64);
+    let p = policy.resolve();
+    let algo = p.algo.resolve(n_test * store.n() * d);
+    let (stealing, parts) =
+        store_scan_parts(n_test, d, tiles, p.threads, p.schedule);
+    let states: Vec<(KnnAcc, PrwAcc)> = parts
+        .iter()
+        .map(|r| {
+            (KnnAcc::new(r.len(), k),
+             PrwAcc::new(r.len(), store.n_classes(), inv))
+        })
+        .collect();
+    let labels = store.labels();
+    let states = store_scan_chunked(store, test_rows, d, tiles, algo,
+                                    p.threads, stealing, states, &parts,
+                                    |(ka, pa), q, j0, dists| {
+        if k > 0 {
+            ka.consume(q, j0, dists);
+        }
+        pa.consume(q, j0, dists, labels);
+    })?;
+    let knn = if k == 0 {
+        vec![majority_class(labels, store.n_classes()); n_test]
+    } else {
+        states
+            .iter()
+            .flat_map(|(ka, _)| ka.finalize(labels, store.n_classes()))
+            .collect()
+    };
+    let prw = states.iter().flat_map(|(_, pa)| pa.finalize()).collect();
+    Ok((knn, prw))
 }
 
 /// Classification accuracy helper.
@@ -910,11 +1061,6 @@ pub fn accuracy(pred: &[i32], truth: &[i32]) -> f64 {
 
 #[cfg(test)]
 mod tests {
-    // The scan parity contracts are asserted through the deprecated
-    // tuple wrappers on purpose: they delegate to the same cores as
-    // the `*_exec` API, so these suites pin the migration itself.
-    #![allow(deprecated)]
-
     use super::*;
     use crate::data::synth::chembl_like;
     use crate::prop_assert;
@@ -1020,26 +1166,34 @@ mod tests {
                 nc: 1,
                 l1_f32: g.usize_in(2, 16) * d,
             };
+            let norms = NormCache::compute(&train.features, d);
             for threads in [1usize, 2, 4, 7] {
                 for sched in [Schedule::Static, Schedule::Stealing,
                               Schedule::Auto] {
+                    // Exact pins the fused engine to the materializing
+                    // scans' distance bits, so the tiled scans are the
+                    // oracle at any thread count
+                    let pol = ExecPolicy::auto()
+                        .with_threads(threads)
+                        .with_schedule(sched)
+                        .with_algo(DistanceAlgo::Exact);
                     prop_assert!(
-                        knn_scan_par(&train, &test, d, K, &tiles,
-                                     threads, sched)
+                        knn_scan_exec(&train, &test, d, K, &tiles,
+                                      &norms, &pol)
                             == knn_scan_tiled(&train, &test, d, K,
                                               &tiles),
                         "parallel knn diverged at {threads} threads \
                          under {sched:?}");
                     prop_assert!(
-                        prw_scan_par(&train, &test, d, BANDWIDTH, &tiles,
-                                     threads, sched)
+                        prw_scan_exec(&train, &test, d, BANDWIDTH,
+                                      &tiles, &norms, &pol)
                             == prw_scan_tiled(&train, &test, d,
                                               BANDWIDTH, &tiles),
                         "parallel prw diverged at {threads} threads \
                          under {sched:?}");
                     let (kp, pp) =
-                        joint_scan_par(&train, &test, d, K, BANDWIDTH,
-                                       &tiles, threads, sched);
+                        joint_scan_exec(&train, &test, d, K, BANDWIDTH,
+                                        &tiles, &norms, &pol);
                     let (ks, ps) = joint_scan_tiled(&train, &test, d, K,
                                                     BANDWIDTH, &tiles);
                     prop_assert!(kp == ks && pp == ps,
@@ -1131,24 +1285,25 @@ mod tests {
                                               &norms);
                 for threads in [1usize, 2, 4, 7] {
                     for sched in [Schedule::Static, Schedule::Stealing] {
+                        let pol = ExecPolicy::auto()
+                            .with_threads(threads)
+                            .with_schedule(sched)
+                            .with_algo(algo);
                         prop_assert!(
-                            knn_scan_fused_par(&train, &test, d, K,
-                                               &tiles, algo, &norms,
-                                               threads, sched) == want_k,
+                            knn_scan_exec(&train, &test, d, K, &tiles,
+                                          &norms, &pol) == want_k,
                             "fused parallel knn diverged ({algo:?}, \
                              {threads} threads, {sched:?})");
                         prop_assert!(
-                            prw_scan_fused_par(&train, &test, d,
-                                               BANDWIDTH, &tiles, algo,
-                                               &norms, threads, sched)
+                            prw_scan_exec(&train, &test, d, BANDWIDTH,
+                                          &tiles, &norms, &pol)
                                 == want_p,
                             "fused parallel prw diverged ({algo:?}, \
                              {threads} threads, {sched:?})");
                         prop_assert!(
-                            joint_scan_fused_par(&train, &test, d, K,
-                                                 BANDWIDTH, &tiles,
-                                                 algo, &norms, threads,
-                                                 sched) == want_j,
+                            joint_scan_exec(&train, &test, d, K,
+                                            BANDWIDTH, &tiles, &norms,
+                                            &pol) == want_j,
                             "fused parallel joint diverged ({algo:?}, \
                              {threads} threads, {sched:?})");
                     }
@@ -1256,9 +1411,13 @@ mod tests {
         let tiles = TileConfig::westmere();
         assert_eq!(knn_scan_tiled(&train, &test, 1, 0, &tiles), want,
             "tiled scan must share the k = 0 guard");
+        let norms = NormCache::compute(&train.features, 1);
+        let pol = ExecPolicy::auto()
+            .with_threads(4)
+            .with_schedule(Schedule::Stealing)
+            .with_algo(DistanceAlgo::Exact);
         assert_eq!(
-            knn_scan_par(&train, &test, 1, 0, &tiles, 4,
-                         Schedule::Stealing),
+            knn_scan_exec(&train, &test, 1, 0, &tiles, &norms, &pol),
             want, "parallel scan must share the k = 0 guard");
         let (kj, pj) = joint_scan(&train, &test, 1, 0, BANDWIDTH);
         assert_eq!(kj, want);
@@ -1302,6 +1461,13 @@ mod tests {
                 nc: 1,
                 l1_f32: g.usize_in(2, 16) * d,
             };
+            // Exact is the only formulation defined for non-finite
+            // features, so the exec path pins it explicitly here
+            let norms = NormCache::compute(&train.features, d);
+            let pol = ExecPolicy::auto()
+                .with_threads(4)
+                .with_schedule(Schedule::Stealing)
+                .with_algo(DistanceAlgo::Exact);
             for k in [1usize, K] {
                 let naive = knn_scan(&train, &test, d, k);
                 prop_assert!(naive.iter().all(|&p| (0..3).contains(&p)),
@@ -1310,8 +1476,8 @@ mod tests {
                     knn_scan_tiled(&train, &test, d, k, &tiles) == naive,
                     "NaN distances desynced tiled and naive knn (k={k})");
                 prop_assert!(
-                    knn_scan_par(&train, &test, d, k, &tiles, 4,
-                                 Schedule::Stealing) == naive,
+                    knn_scan_exec(&train, &test, d, k, &tiles, &norms,
+                                  &pol) == naive,
                     "NaN distances desynced the parallel knn (k={k})");
             }
             prop_assert!(
@@ -1367,11 +1533,11 @@ mod tests {
     }
 
     #[test]
-    fn exec_scans_match_wrappers_and_sequential_oracles() {
-        // The `*_exec` entry points must (a) reproduce the tuple
-        // wrappers they replace bit for bit under a pinned policy and
-        // (b) short-circuit ExecPolicy::sequential() + Exact to the
-        // Alg 10/11 oracles' predictions.
+    fn exec_scans_match_sequential_oracles() {
+        // ExecPolicy::sequential() (1 thread + Exact) must
+        // short-circuit the `*_exec` entry points to the Alg 10/11
+        // oracles' predictions — the policy grid itself is pinned by
+        // `fused_parallel_scans_equal_sequential_fused_scans`.
         check("exec-scans", 8, |g| {
             let n = g.usize_in(1, 40);
             let t = g.usize_in(1, 20);
@@ -1398,40 +1564,145 @@ mod tests {
                               &norms, &seq)
                     == prw_scan(&train, &test, d, BANDWIDTH),
                 "sequential exec prw diverged from the Alg 11 oracle");
-            for algo in [DistanceAlgo::Exact, DistanceAlgo::Gemm] {
-                for threads in [1usize, 4] {
-                    for sched in [Schedule::Static, Schedule::Stealing] {
-                        let pol = ExecPolicy::auto()
-                            .with_threads(threads)
-                            .with_schedule(sched)
-                            .with_algo(algo);
-                        prop_assert!(
-                            knn_scan_exec(&train, &test, d, K, &tiles,
-                                          &norms, &pol)
-                                == knn_scan_fused_par(
-                                    &train, &test, d, K, &tiles, algo,
-                                    &norms, threads, sched),
-                            "knn exec != wrapper ({algo:?})");
-                        prop_assert!(
-                            prw_scan_exec(&train, &test, d, BANDWIDTH,
-                                          &tiles, &norms, &pol)
-                                == prw_scan_fused_par(
-                                    &train, &test, d, BANDWIDTH, &tiles,
-                                    algo, &norms, threads, sched),
-                            "prw exec != wrapper ({algo:?})");
-                        prop_assert!(
-                            joint_scan_exec(&train, &test, d, K,
-                                            BANDWIDTH, &tiles, &norms,
-                                            &pol)
-                                == joint_scan_fused_par(
-                                    &train, &test, d, K, BANDWIDTH,
-                                    &tiles, algo, &norms, threads,
-                                    sched),
-                            "joint exec != wrapper ({algo:?})");
+            let (kj, pj) = joint_scan_exec(&train, &test, d, K,
+                                           BANDWIDTH, &tiles, &norms,
+                                           &seq);
+            prop_assert!(
+                kj == knn_scan(&train, &test, d, K)
+                    && pj == prw_scan(&train, &test, d, BANDWIDTH),
+                "sequential exec joint diverged from the oracles");
+            Ok(())
+        });
+    }
+
+    /// Unique temp path for a chunked-store scan test.
+    fn tmp(name: &str, salt: u64) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "locality_ml_instance_{name}_{}_{salt}.lmtc",
+            std::process::id()))
+    }
+
+    #[test]
+    fn store_scans_resident_equals_chunked_to_the_bit() {
+        // The sixth determinism axis: chunking never changes bits.
+        // The chunked store scans must reproduce the resident
+        // predictions at edge-case chunk geometries (single-row
+        // chunks, chunk == whole set, ragged last chunk, chunk
+        // boundaries mid-macro-tile) × thread count × schedule ×
+        // formulation — k-NN bit-identically (ascending global train
+        // order is chunk-invariant), PRW at prediction level (the
+        // running row-min contract shared with the fused scans).
+        check("store-scans", 6, |g| {
+            let n = g.usize_in(1, 40);
+            let t = g.usize_in(1, 12);
+            let d = g.usize_in(1, 6);
+            let features = g.f32_vec(n * d, 2.0);
+            let labels: Vec<i32> =
+                (0..n).map(|_| g.usize_in(0, 2) as i32).collect();
+            let train = Dataset::new(features, labels, d, 3);
+            let test = g.f32_vec(t * d, 2.0);
+            let tiles = TileConfig {
+                mc: 1,
+                kc: 1,
+                nc: 1,
+                l1_f32: g.usize_in(2, 12) * d,
+            };
+            let resident = TrainStore::resident_ref(&train);
+            let path = tmp("scan", g.u64());
+            for chunk_rows in [1usize, g.usize_in(1, n), n, n + 7] {
+                crate::data::write_chunked(&train, &path, chunk_rows)
+                    .map_err(|e| e.to_string())?;
+                let chunked = TrainStore::open_chunked(&path)
+                    .map_err(|e| e.to_string())?;
+                for algo in [DistanceAlgo::Exact, DistanceAlgo::Gemm] {
+                    for threads in [1usize, 4] {
+                        for sched in [Schedule::Static,
+                                      Schedule::Stealing] {
+                            let pol = ExecPolicy::auto()
+                                .with_threads(threads)
+                                .with_schedule(sched)
+                                .with_algo(algo);
+                            let want_k = knn_scan_store_exec(
+                                &resident, &test, K, &tiles, &pol)
+                                .unwrap();
+                            prop_assert!(
+                                want_k == knn_scan_exec(
+                                    &train, &test, d, K, &tiles,
+                                    resident.norms(), &pol),
+                                "resident store knn != in-memory scan");
+                            prop_assert!(
+                                knn_scan_store_exec(&chunked, &test, K,
+                                                    &tiles, &pol)
+                                    .unwrap() == want_k,
+                                "chunked knn diverged (chunk_rows \
+                                 {chunk_rows}, {algo:?}, {threads} \
+                                 threads, {sched:?})");
+                            let want_p = prw_scan_store_exec(
+                                &resident, &test, BANDWIDTH, &tiles,
+                                &pol).unwrap();
+                            prop_assert!(
+                                prw_scan_store_exec(&chunked, &test,
+                                                    BANDWIDTH, &tiles,
+                                                    &pol).unwrap()
+                                    == want_p,
+                                "chunked prw diverged (chunk_rows \
+                                 {chunk_rows}, {algo:?}, {threads} \
+                                 threads, {sched:?})");
+                            let want_j = joint_scan_store_exec(
+                                &resident, &test, K, BANDWIDTH, &tiles,
+                                &pol).unwrap();
+                            prop_assert!(
+                                (want_j.0.clone(), want_j.1.clone())
+                                    == (want_k.clone(), want_p.clone()),
+                                "resident joint != single-learner \
+                                 store scans");
+                            prop_assert!(
+                                joint_scan_store_exec(&chunked, &test,
+                                                      K, BANDWIDTH,
+                                                      &tiles, &pol)
+                                    .unwrap() == want_j,
+                                "chunked joint diverged (chunk_rows \
+                                 {chunk_rows}, {algo:?}, {threads} \
+                                 threads, {sched:?})");
+                        }
                     }
                 }
             }
+            std::fs::remove_file(&path).ok();
             Ok(())
         });
+    }
+
+    #[test]
+    fn store_scan_k0_shares_the_majority_guard_across_backends() {
+        let train = Dataset::new(
+            vec![0.0, 1.0, 2.0, 10.0, 11.0],
+            vec![1, 1, 1, 0, 0],
+            1,
+            2,
+        );
+        let test = [0.5f32, 10.5];
+        let want = vec![1, 1];
+        let tiles = TileConfig::westmere();
+        let pol = ExecPolicy::sequential();
+        let path = tmp("k0", 0);
+        crate::data::write_chunked(&train, &path, 2).unwrap();
+        let chunked = TrainStore::open_chunked(&path).unwrap();
+        let resident = TrainStore::resident_ref(&train);
+        for store in [&resident, &chunked] {
+            assert_eq!(
+                knn_scan_store_exec(store, &test, 0, &tiles, &pol)
+                    .unwrap(),
+                want, "k = 0 store scan must predict the prior");
+            let (kj, pj) = joint_scan_store_exec(store, &test, 0,
+                                                 BANDWIDTH, &tiles,
+                                                 &pol).unwrap();
+            assert_eq!(kj, want);
+            assert_eq!(pj,
+                prw_scan_store_exec(store, &test, BANDWIDTH, &tiles,
+                                    &pol).unwrap(),
+                "k = 0 must not disturb the PRW half");
+        }
+        std::fs::remove_file(&path).ok();
     }
 }

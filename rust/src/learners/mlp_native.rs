@@ -69,25 +69,6 @@ impl NativeMlp {
         Self::with_policy(theta, batch, &ExecPolicy::default())
     }
 
-    /// Explicit thread count (1 = the exact sequential path) with the
-    /// session default schedule.
-    #[deprecated(note = "use `with_policy` with an `ExecPolicy`")]
-    pub fn with_threads(theta: Vec<f32>, batch: usize, threads: usize)
-        -> Self {
-        Self::with_policy(theta, batch,
-                          &ExecPolicy::default().with_threads(threads))
-    }
-
-    /// Explicit thread count and scheduling policy.
-    #[deprecated(note = "use `with_policy` with an `ExecPolicy`")]
-    pub fn with_exec(theta: Vec<f32>, batch: usize, threads: usize,
-                     schedule: crate::kernels::Schedule) -> Self {
-        Self::with_policy(theta, batch,
-                          &ExecPolicy::default()
-                              .with_threads(threads)
-                              .with_schedule(schedule))
-    }
-
     /// Explicit execution policy — the single configuration entry
     /// point. The policy is resolved once here (Auto axes bind to the
     /// session defaults); tile sizes come from the resolved worker

@@ -15,14 +15,10 @@ pub mod naive_bayes;
 
 pub use instance::{
     accuracy, joint_scan, joint_scan_exec, joint_scan_exec_prepacked,
-    joint_scan_fused, joint_scan_tiled, knn_scan, knn_scan_exec,
-    knn_scan_fused, knn_scan_tiled, pack_train_panels, prw_scan,
-    prw_scan_exec, prw_scan_fused, prw_scan_tiled,
-};
-#[allow(deprecated)]
-pub use instance::{
-    joint_scan_fused_par, joint_scan_par, knn_scan_fused_par,
-    knn_scan_par, prw_scan_fused_par, prw_scan_par,
+    joint_scan_fused, joint_scan_store_exec, joint_scan_tiled, knn_scan,
+    knn_scan_exec, knn_scan_fused, knn_scan_store_exec, knn_scan_tiled,
+    pack_train_panels, prw_scan, prw_scan_exec, prw_scan_fused,
+    prw_scan_store_exec, prw_scan_tiled,
 };
 pub use mlp::{EvalResult, MlpTrainer};
 pub use mlp_native::NativeMlp;

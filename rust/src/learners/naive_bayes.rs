@@ -5,7 +5,9 @@
 //! with only one epoch"), computing per-class counts, feature means and
 //! variances in one pass.
 
-use crate::data::Dataset;
+use anyhow::Result;
+
+use crate::data::{Dataset, TrainStore};
 
 /// Variance floor (mirrors python naive_bayes.VAR_FLOOR).
 pub const VAR_FLOOR: f32 = 1e-3;
@@ -43,34 +45,34 @@ impl NaiveBayes {
         Self::fit_rows(train, idx.iter().copied())
     }
 
+    /// One-epoch fit over a [`TrainStore`] — the out-of-core seam. The
+    /// sufficient statistics accumulate chunk by chunk in the same
+    /// row-ascending order the resident single pass walks, into the
+    /// same f64 accumulators, so the fitted model is **bit-identical**
+    /// between a `Resident` and a `Chunked` backend at any chunk size
+    /// (f64 sums are only ever extended at the tail, never
+    /// reassociated — property-tested in the coordinator suite).
+    pub fn fit_store(store: &TrainStore) -> Result<Self> {
+        let (d, c) = (store.d(), store.n_classes());
+        let labels = store.labels();
+        let mut acc = StatsAcc::new(d, c);
+        store.scan_chunks(|row0, feats| {
+            for (i, row) in feats.chunks_exact(d).enumerate() {
+                acc.add(labels[row0 + i] as usize, row);
+            }
+            Ok(())
+        })?;
+        Ok(acc.finalize())
+    }
+
     fn fit_rows(train: &Dataset,
                 rows: impl Iterator<Item = usize>) -> Self {
         let (d, c) = (train.d, train.n_classes);
-        let mut counts = vec![0.0f32; c];
-        let mut sums = vec![0.0f64; c * d];
-        let mut sqsums = vec![0.0f64; c * d];
+        let mut acc = StatsAcc::new(d, c);
         for i in rows {
-            let class = train.labels[i] as usize;
-            counts[class] += 1.0;
-            let row = train.row(i);
-            for (f, &v) in row.iter().enumerate() {
-                sums[class * d + f] += v as f64;
-                sqsums[class * d + f] += (v as f64) * (v as f64);
-            }
+            acc.add(train.labels()[i] as usize, train.row(i));
         }
-        let mut mean = vec![0.0f32; c * d];
-        let mut var = vec![VAR_FLOOR; c * d];
-        for class in 0..c {
-            let denom = f64::from(counts[class]).max(1.0);
-            for f in 0..d {
-                let m = sums[class * d + f] / denom;
-                mean[class * d + f] = m as f32;
-                var[class * d + f] =
-                    ((sqsums[class * d + f] / denom - m * m) as f32)
-                        .max(VAR_FLOOR);
-            }
-        }
-        Self { counts, mean, var, d, classes: c }
+        acc.finalize()
     }
 
     /// Log posterior (up to the shared P(x) constant) for one point.
@@ -112,6 +114,58 @@ impl NaiveBayes {
     }
 }
 
+/// The sufficient-statistics reduction shared by every fit path
+/// (resident rows, bootstrap index lists, streamed store chunks):
+/// per-class counts plus f64 sum / square-sum per (class, feature).
+/// One [`StatsAcc::add`] per training row — the call ORDER is the
+/// whole bit contract (f64 sums are extended at the tail, never
+/// reassociated), so chunked streaming in ascending row order is
+/// bit-identical to the resident single pass.
+struct StatsAcc {
+    counts: Vec<f32>,
+    sums: Vec<f64>,
+    sqsums: Vec<f64>,
+    d: usize,
+    c: usize,
+}
+
+impl StatsAcc {
+    fn new(d: usize, c: usize) -> Self {
+        Self {
+            counts: vec![0.0f32; c],
+            sums: vec![0.0f64; c * d],
+            sqsums: vec![0.0f64; c * d],
+            d,
+            c,
+        }
+    }
+
+    fn add(&mut self, class: usize, row: &[f32]) {
+        self.counts[class] += 1.0;
+        for (f, &v) in row.iter().enumerate() {
+            self.sums[class * self.d + f] += v as f64;
+            self.sqsums[class * self.d + f] += (v as f64) * (v as f64);
+        }
+    }
+
+    fn finalize(self) -> NaiveBayes {
+        let (d, c) = (self.d, self.c);
+        let mut mean = vec![0.0f32; c * d];
+        let mut var = vec![VAR_FLOOR; c * d];
+        for class in 0..c {
+            let denom = f64::from(self.counts[class]).max(1.0);
+            for f in 0..d {
+                let m = self.sums[class * d + f] / denom;
+                mean[class * d + f] = m as f32;
+                var[class * d + f] =
+                    ((self.sqsums[class * d + f] / denom - m * m) as f32)
+                        .max(VAR_FLOOR);
+            }
+        }
+        NaiveBayes { counts: self.counts, mean, var, d, classes: c }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,6 +200,30 @@ mod tests {
         // and the 0..n identity: fit IS fit_indexed over all rows
         let all: Vec<usize> = (0..ds.n).collect();
         assert_eq!(NaiveBayes::fit_indexed(&ds, &all), NaiveBayes::fit(&ds));
+    }
+
+    #[test]
+    fn store_fit_is_bit_identical_across_backends() {
+        // The chunked fit streams the same rows in the same order into
+        // the same f64 accumulators, so the model must match the
+        // resident fit to the bit at any chunk size — ragged last
+        // chunk and single-row chunks included.
+        let ds = gaussian_mixture(MixtureSpec {
+            n: 57, d: 5, classes: 3, separation: 1.0, noise: 1.0, seed: 3,
+        });
+        let want = NaiveBayes::fit(&ds);
+        let resident = TrainStore::resident_ref(&ds);
+        assert_eq!(NaiveBayes::fit_store(&resident).unwrap(), want,
+            "resident store fit diverged from the direct fit");
+        let path = std::env::temp_dir().join(format!(
+            "locality_ml_nb_fit_{}.lmtc", std::process::id()));
+        for chunk_rows in [1usize, 7, 57, 64] {
+            crate::data::write_chunked(&ds, &path, chunk_rows).unwrap();
+            let chunked = TrainStore::open_chunked(&path).unwrap();
+            assert_eq!(NaiveBayes::fit_store(&chunked).unwrap(), want,
+                "chunked fit diverged at chunk_rows {chunk_rows}");
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

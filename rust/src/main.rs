@@ -27,15 +27,22 @@
 //!                      [--socket path]                    E18
 //! locality-ml serve-bench [--train-n N] [--queries N]
 //!                      [--batches 1,8,64] [--out-json f]  E19
+//! locality-ml convert [--in d.lmld] [--out d.lmtc]
+//!                      [--train-n N]                      E20
+//! locality-ml ooc     [--train-n N] [--queries N]
+//!                      [--store d.lmtc]
+//!                      [--chunk-sizes 256,512,2000]       E21
 //! locality-ml info    [--artifacts dir]
 //! ```
 //!
 //! Every subcommand accepts `--threads N` (parallel macro-tile layer;
 //! 1 = the exact single-thread kernels), `--schedule
 //! static|stealing|auto` (macro-tile scheduling policy — identical
-//! output bits either way) and `--dist-algo exact|gemm|auto` (distance
+//! output bits either way), `--dist-algo exact|gemm|auto` (distance
 //! formulation: exact is the bit-stable oracle, gemm the cached-norm
-//! GEMM decomposition within 1e-4 of it).
+//! GEMM decomposition within 1e-4 of it) and `--chunk-rows N` (feature
+//! rows per chunk for newly written out-of-core `.lmtc` stores —
+//! chunking never changes output bits, only the resident working set).
 
 use std::path::PathBuf;
 
@@ -83,6 +90,16 @@ fn main() -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!(
                 "--dist-algo: `{s}` is not one of exact|gemm|auto"))?;
         locality_ml::kernels::distance::set_dist_algo(Some(algo));
+    }
+    // Global `--chunk-rows N` for newly written out-of-core `.lmtc`
+    // stores (default: LOCALITY_ML_CHUNK_ROWS, then a ~4 MiB auto
+    // size). Chunking never changes output bits — this only trades
+    // resident working set against streaming overhead.
+    if let Some(c) = args.get("chunk-rows") {
+        let n: usize = c.parse().map_err(
+            |_| anyhow::anyhow!("--chunk-rows: bad integer `{c}`"))?;
+        anyhow::ensure!(n >= 1, "--chunk-rows must be >= 1");
+        locality_ml::kernels::set_chunk_rows(Some(n));
     }
     match args.command.as_str() {
         "train" => {
@@ -220,6 +237,26 @@ fn main() -> Result<()> {
             commands::cmd_serve_bench(train_n, nq, seed, &batches,
                                       out.as_deref())?;
         }
+        "convert" => {
+            let input = args.get("in").map(PathBuf::from);
+            let out = PathBuf::from(args.str_or("out", "data/train.lmtc"));
+            let train_n = args.usize_or("train-n", 4000)?;
+            let seed = args.u64_or("seed", 7)?;
+            commands::cmd_convert(input.as_deref(), &out, train_n, seed)?;
+        }
+        "ooc" => {
+            let train_n = args.usize_or("train-n", 4000)?;
+            let nq = args.usize_or("queries", 256)?;
+            let seed = args.u64_or("seed", 7)?;
+            let store =
+                PathBuf::from(args.str_or("store", "data/train.lmtc"));
+            // an empty list defers to the session chain (the global
+            // --chunk-rows flag / LOCALITY_ML_CHUNK_ROWS / auto)
+            let sizes = args.usize_list_or("chunk-sizes", &[])?;
+            let out = args.get("out-json").map(PathBuf::from);
+            commands::cmd_ooc(train_n, nq, seed, &store, &sizes,
+                              out.as_deref())?;
+        }
         "info" => {
             let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
             commands::cmd_info(&dir)?;
@@ -286,6 +323,16 @@ SUBCOMMANDS
                parity vs single-query predict asserted pre-timing)
                  --train-n 4000 --queries 512 --batches 1,8,64
                  --out-json BENCH_serve.json
+  convert      Write a dataset in the chunked `.lmtc` out-of-core
+               layout (from --in d.lmld, or synthetic Chembl-like
+               rows); re-opened and validated before reporting
+                 --in data/train.lmld --out data/train.lmtc
+                 --train-n 4000
+  ooc          Out-of-core MCS demo: resident vs chunked `.lmtc`
+               backend at each chunk size, predictions asserted
+               bit-identical, working set and wall-clock reported
+                 --train-n 4000 --queries 256 --store data/train.lmtc
+                 --chunk-sizes 256,512,2000 --out-json BENCH_ooc.json
   info         List compiled artifacts  [--artifacts artifacts]
 
 Common options: --config experiment.toml --artifacts artifacts --seed N
@@ -298,6 +345,9 @@ Common options: --config experiment.toml --artifacts artifacts --seed N
                 is the bit-stable oracle, gemm the cached-norm GEMM
                 decomposition <= 1e-4 of it; default
                 LOCALITY_ML_DIST_ALGO or auto)
+                --chunk-rows N (feature rows per chunk for newly written
+                out-of-core `.lmtc` stores; chunking never changes bits;
+                default LOCALITY_ML_CHUNK_ROWS or a ~4 MiB auto size)
                 LOCALITY_ML_FORCE_SCALAR=1 pins the packed micro-kernel
                 to the scalar tier (SIMD tiers are bit-identical; this
                 exists for dispatch testing and perf triage)

@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""CI gate for the out-of-core train store (ISSUE 9):
+
+the chunked `.lmtc` backend exists so train sets larger than memory
+can run at all, but it is only honest locality engineering if the
+double-buffered scan (next chunk prefetched on its own thread while
+the current one is consumed) hides most of the streaming latency. The
+gate: EVERY measured chunk size's throughput must stay >= OOC_FLOOR x
+the resident baseline from the same bench run, and at least one
+chunked record must have actually streamed (>= 2 chunks) so the gate
+never passes on a degenerate single-chunk measurement.
+
+Prediction parity (chunked bit-identical to resident at every chunk
+size — determinism contract #6) is asserted in-process by the bench
+itself before anything is timed, so this script only gates the clock.
+The working-set numbers are reported for the log but not gated: they
+are computed from the geometry, not measured.
+
+Usage: check_bench_ooc.py [BENCH_ooc.json]
+"""
+import sys
+
+from bench_check import CheckFailure, load_doc, require_number
+
+# Chunked throughput floor relative to resident. 0.7x tolerates the
+# residual streaming overhead a shared CI box cannot hide (cold page
+# cache, one extra memcpy per chunk) while still failing the regression
+# that matters: a scan that serializes disk behind compute runs at a
+# small fraction of resident, not at ~1x.
+OOC_FLOOR = 0.7
+
+
+def check(path):
+    doc = load_doc(path)
+    results = doc.get("results", [])
+    resident = None
+    chunked = []
+    for i, record in enumerate(results):
+        context = f"results[{i}]"
+        if not isinstance(record, dict) or "backend" not in record:
+            raise CheckFailure(f"{context}: record lacks `backend`")
+        qps = require_number(record, "throughput_qps", context)
+        if qps <= 0:
+            raise CheckFailure(f"{context}: non-positive throughput")
+        mib = require_number(record, "working_set_mib", context)
+        if record["backend"] == "resident":
+            if resident is not None:
+                raise CheckFailure(
+                    f"{context}: duplicate resident record")
+            resident = (qps, mib)
+        elif record["backend"] == "chunked":
+            chunk_rows = require_number(record, "chunk_rows", context)
+            chunks = require_number(record, "chunks", context)
+            if chunks < 1 or chunks != int(chunks):
+                raise CheckFailure(
+                    f"{context}: `chunks` must be a positive integer, "
+                    f"got {chunks!r}")
+            chunked.append((int(chunk_rows), int(chunks), qps, mib))
+        else:
+            raise CheckFailure(
+                f"{context}: unknown backend {record['backend']!r}")
+    if resident is None:
+        raise CheckFailure(f"no `resident` record in {path}")
+    if not chunked:
+        raise CheckFailure(f"no `chunked` records in {path}")
+    if max(chunks for _, chunks, _, _ in chunked) < 2:
+        raise CheckFailure(
+            f"{path}: no chunked record streamed more than one chunk "
+            "— the gate would measure nothing")
+
+    res_qps, res_mib = resident
+    print(f"  resident: {res_qps:.0f} qps ({res_mib:.1f} MiB pinned)")
+    worst = None  # (ratio, chunk_rows)
+    for chunk_rows, chunks, qps, mib in chunked:
+        ratio = qps / res_qps
+        print(f"  chunked(chunk_rows={chunk_rows}, {chunks} chunks): "
+              f"{qps:.0f} qps ({mib:.1f} MiB streaming window) — "
+              f"{ratio:.2f}x resident")
+        if worst is None or ratio < worst[0]:
+            worst = (ratio, chunk_rows)
+    print(f"worst chunked vs resident: {worst[0]:.2f}x at chunk_rows="
+          f"{worst[1]} (gate: >= {OOC_FLOOR}x at every size)")
+    if worst[0] < OOC_FLOOR:
+        raise CheckFailure(
+            f"out-of-core gate missed ({worst[0]:.2f}x < {OOC_FLOOR}x "
+            f"at chunk_rows={worst[1]}) — the double buffer is no "
+            "longer hiding streaming latency")
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_ooc.json"
+    try:
+        check(path)
+    except CheckFailure as e:
+        print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

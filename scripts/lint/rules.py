@@ -1,4 +1,4 @@
-"""The six locality-ml lint rules.
+"""The seven locality-ml lint rules.
 
 Each rule mechanically enforces one of the hand-maintained contracts
 documented in `docs/ARCHITECTURE.md` ("Enforced invariants"):
@@ -8,6 +8,7 @@ documented in `docs/ARCHITECTURE.md` ("Enforced invariants"):
   deprecated-internal-caller no non-test caller of #[deprecated] shims
   nondeterministic-iteration no HashMap/HashSet in bit-parity layers
   panic-in-serve-path        serve path sheds or errors, never panics
+  raw-train-access           train data behind accessors / TrainStore
   missing-docs               every public item carries rustdoc
 
 Rules work on the tokenizer's code view, so occurrences inside strings
@@ -238,8 +239,41 @@ class PanicInServePath(Rule):
         return out
 
 
+class RawTrainAccess(Rule):
+    """Rule 6: train-set payloads are reached through the `TrainStore`
+    seam or the `Dataset::features()`/`labels()` accessors.  A direct
+    `.features`/`.labels` field read outside the `data/` layer bypasses
+    the seam and silently assumes the whole train set is resident —
+    exactly the assumption the out-of-core `.lmtc` backend removes.
+    Test code may keep the shorter field spelling (resident fixtures)."""
+
+    name = "raw-train-access"
+    description = ("no direct `.features`/`.labels` field access "
+                   "outside data/ — use the accessors or TrainStore")
+    # The data layer owns the representation: Dataset, the .lmtc
+    # chunked store, IO and the synthetic generators touch fields
+    # directly by construction.
+    EXEMPT = ("data/",)
+    FIELD_RE = re.compile(r"\.\s*(features|labels)\b(?!\s*\()")
+
+    def check(self, sf):
+        if _in_scope(sf.rel, self.EXEMPT):
+            return []
+        out = []
+        for m in self.FIELD_RE.finditer(sf.code):
+            ln = sf.lines.line(m.start())
+            if sf.is_test_line(ln):
+                continue
+            out.append(self.finding(
+                sf, ln,
+                f"direct `.{m.group(1)}` field access outside data/ — "
+                f"use `Dataset::{m.group(1)}()` or go through "
+                f"`TrainStore` so out-of-core backends keep working"))
+        return out
+
+
 class MissingDocs(Rule):
-    """Rule 6: every public item (fn/struct/enum/trait/type/const/
+    """Rule 7: every public item (fn/struct/enum/trait/type/const/
     static/mod, plus pub struct fields and pub-enum variants) carries a
     doc comment — the engine-resident version of the PR-7 rustdoc pass
     behind `#![warn(missing_docs)]`.  Trait impls and impls of private
@@ -430,5 +464,6 @@ def all_rules():
         DeprecatedInternalCaller(),
         NondeterministicIteration(),
         PanicInServePath(),
+        RawTrainAccess(),
         MissingDocs(),
     ]

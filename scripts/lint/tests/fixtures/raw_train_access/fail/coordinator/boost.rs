@@ -1,0 +1,9 @@
+//! Raw field reads outside the data layer: each one silently assumes
+//! the whole train set is resident in memory.
+
+/// Two violations: a borrow of the feature buffer and a label clone.
+pub fn fit(train: &Dataset) -> usize {
+    let rows = &train.features;
+    let y = train.labels.clone();
+    rows.len() + y.len()
+}

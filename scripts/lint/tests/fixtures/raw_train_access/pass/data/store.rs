@@ -1,0 +1,7 @@
+//! The data layer owns the representation: direct field access inside
+//! `data/` is the implementation, not a seam violation.
+
+/// Bytes the resident backend would pin.
+pub fn resident_bytes(ds: &Dataset) -> usize {
+    ds.features.len() * 4 + ds.labels.len() * 4
+}

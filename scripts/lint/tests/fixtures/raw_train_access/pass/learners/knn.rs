@@ -1,0 +1,21 @@
+//! Accessor-based consumer: every read goes through the store seam or
+//! the `Dataset` accessor twins, so the out-of-core backend slots in.
+
+/// Cheap shape probe through the accessor spellings.
+pub fn delivered(train: &Dataset) -> usize {
+    train.features().len() + train.labels().len()
+}
+
+/// Store-seam consumer: never sees the representation at all.
+pub fn streamed(store: &TrainStore) -> usize {
+    store.n() * store.d()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn raw_fields_stay_legal_in_tests() {
+        let ds = resident_fixture();
+        assert_eq!(ds.features.len(), ds.labels.len() * 4);
+    }
+}

@@ -32,6 +32,7 @@ class FixtureTest(unittest.TestCase):
         "deprecated-internal-caller": "deprecated_internal_caller",
         "nondeterministic-iteration": "nondeterministic_iteration",
         "panic-in-serve-path": "panic_in_serve_path",
+        "raw-train-access": "raw_train_access",
         "missing-docs": "missing_docs",
     }
 
@@ -60,6 +61,7 @@ class FixtureTest(unittest.TestCase):
             "deprecated-internal-caller": 1,
             "nondeterministic-iteration": 1,
             "panic-in-serve-path": 3,
+            "raw-train-access": 2,
             "missing-docs": 4,
         }
         for rule_name, d in self.CASES.items():
@@ -90,6 +92,16 @@ class FindingDetailTest(unittest.TestCase):
             os.path.join(FIXTURES, "env_read_outside_policy", "fail"))
         self.assertEqual(len(findings), 1)
         self.assertIn("LOCALITY_ML_THREADS", findings[0].message)
+
+    def test_raw_train_access_points_at_the_accessor(self):
+        findings = run_rule(
+            "raw-train-access",
+            os.path.join(FIXTURES, "raw_train_access", "fail"))
+        self.assertEqual(len(findings), 2)
+        messages = "\n".join(f.message for f in findings)
+        self.assertIn("Dataset::features()", messages)
+        self.assertIn("Dataset::labels()", messages)
+        self.assertIn("TrainStore", messages)
 
     def test_missing_docs_covers_fields_variants_methods(self):
         findings = run_rule(
