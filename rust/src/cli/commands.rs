@@ -1078,9 +1078,11 @@ enum Inbound {
 /// connection gets its own reader thread and reply stream). Both feed
 /// the same transport-agnostic [`ServeEngine`]: flush on `max_batch`
 /// or `max_wait_us` — whichever first — and shed load past
-/// `queue_cap` with an explicit `overloaded` reply. On end of input
-/// the queue is drained and a latency/occupancy summary goes to
-/// stderr.
+/// `queue_cap` with an explicit `overloaded` reply. A
+/// `{"cmd":"health"}` line gets an immediate snapshot (queue depth,
+/// shed/error counters, store status) without entering the queue. On
+/// end of input the queue is drained and a latency/occupancy summary
+/// goes to stderr.
 pub fn cmd_serve(train_n: usize, seed: u64,
                  policy: crate::kernels::ServePolicy,
                  socket: Option<&Path>) -> Result<()> {
@@ -1253,12 +1255,12 @@ fn serve_loop(engine: &mut crate::coordinator::ServeEngine,
     eprintln!(
         "# serve: admitted={} shed={} batches={} (size={} timeout={}) \
          queries={} mean_batch={:.2} largest={} predict_total_us={} \
-         p50_us={} p99_us={}",
+         p50_us={} p99_us={} errors={} store_faults={}",
         st.queue.admitted, st.queue.shed, st.queue.batches,
         st.queue.size_flushes, st.queue.timeout_flushes,
         st.dispatch.queries, st.dispatch.mean_batch(),
         st.dispatch.largest_batch, st.dispatch.predict_us_total,
-        st.p50_us, st.p99_us);
+        st.p50_us, st.p99_us, st.batch_errors, st.store_faults);
     Ok(())
 }
 
@@ -1423,17 +1425,19 @@ pub fn cmd_serve_bench(train_n: usize, n_queries: usize, seed: u64,
     Ok(table)
 }
 
-/// `convert` — write a dataset out in the chunked `.lmtc` layout the
-/// out-of-core [`TrainStore`] backend streams from. With `--in` the
-/// source is an existing `.lmld` resident dataset; without it a
-/// synthetic Chembl-like set of `--train-n` rows is generated. The
-/// chunk size resolves through the session chain (`--chunk-rows` →
+/// `convert` — write a dataset out in the checksummed chunked `.lmtc`
+/// v2 layout the out-of-core [`TrainStore`] backend streams from
+/// (header checksum + per-chunk CRC32C). With `--in` the source is an
+/// existing `.lmld` resident dataset; without it a synthetic
+/// Chembl-like set of `--train-n` rows is generated. The chunk size
+/// resolves through the session chain (`--chunk-rows` →
 /// `LOCALITY_ML_CHUNK_ROWS` → the ~4 MiB auto size).
 ///
 /// [`TrainStore`]: crate::data::TrainStore
 pub fn cmd_convert(input: Option<&Path>, out: &Path, train_n: usize,
                    seed: u64) -> Result<()> {
-    use crate::data::{read_dataset, write_chunked, TrainStore};
+    use crate::data::{read_dataset, write_chunked, ChunkedStore,
+                      TrainStore};
     use crate::kernels::{default_chunk_rows, TileConfig};
 
     let ds = match input {
@@ -1462,27 +1466,64 @@ pub fn cmd_convert(input: Option<&Path>, out: &Path, train_n: usize,
              (store.n() * store.d() * 4) as f64 / (1 << 20) as f64,
              (store.chunk_rows().min(store.n()) * store.d() * 4) as f64
                  / (1 << 20) as f64);
+    // deep verification: every written chunk re-read with its CRC
+    // checked, so a bad disk or a torn write is caught here, not by a
+    // long job later
+    let cs = ChunkedStore::open(out)?;
+    let (vchunks, vrows) = cs.verify_scan()?;
+    println!("verified: .lmtc v{} (per-chunk CRC32C), {vrows} row(s) \
+              in {vchunks} chunk(s)", cs.version());
+    Ok(())
+}
+
+/// `ooc --verify` — deep integrity scan of an existing `.lmtc` store:
+/// magic/version/header checksum, label range, norm finiteness and
+/// metadata checksum are checked at open, then every feature chunk is
+/// re-read through the double-buffered scan with its CRC32C verified
+/// (v2; v1 files stream without checksums and the report says so).
+/// The first fault aborts with the typed [`StoreError`] naming the
+/// byte offset and cause — never a panic.
+///
+/// [`StoreError`]: crate::data::StoreError
+pub fn cmd_verify_store(store_path: &Path) -> Result<()> {
+    use crate::data::ChunkedStore;
+    use crate::util::Stopwatch;
+
+    let clock = Stopwatch::start();
+    let store = ChunkedStore::open(store_path)?;
+    let (chunks, rows) = store.verify_scan()?;
+    println!(
+        "{}: OK — .lmtc v{} ({}), {rows} row(s) in {chunks} chunk(s) \
+         verified in {:.3}s",
+        store_path.display(), store.version(),
+        if store.checksummed() { "per-chunk CRC32C" }
+        else { "v1, no checksums" },
+        clock.elapsed_secs());
     Ok(())
 }
 
 /// `ooc` — the out-of-core demonstration: fit and serve the
 /// three-member MCS from the resident backend, then from a chunked
-/// `.lmtc` store at each requested chunk size, assert every chunked
-/// run's predictions equal the resident run's bit for bit (the sixth
-/// determinism contract: chunking never changes bits), and report the
-/// wall-clock and working-set trade each chunk size buys.
+/// `.lmtc` store at each requested chunk size — in both the
+/// checksummed v2 layout (per-chunk CRC32C verified inside the scan)
+/// and the legacy checksum-free v1 — assert every chunked run's
+/// predictions equal the resident run's bit for bit (the sixth
+/// determinism contract: chunking never changes bits, and neither
+/// does checksum verification), and report the wall-clock and
+/// working-set trade each chunk size and format buys.
 ///
 /// An empty `chunk_sizes` resolves one size through the session chain
 /// (`--chunk-rows` → `LOCALITY_ML_CHUNK_ROWS` → the ~4 MiB auto size);
 /// the bench harness pins several small explicit sizes so the chunked
 /// runs genuinely stream. Optionally writes `BENCH_ooc.json`; CI gates
-/// every chunked size's throughput ≥ 0.7x resident via
+/// every chunked size's v2 throughput ≥ 0.7x resident AND ≥ 0.9x the
+/// same size's v1 (the checksum-overhead gate) via
 /// `scripts/check_bench_ooc.py`.
 pub fn cmd_ooc(train_n: usize, n_queries: usize, seed: u64,
                store_path: &Path, chunk_sizes: &[usize],
                out_json: Option<&Path>) -> Result<Table> {
     use crate::coordinator::{McsPredictions, MultiClassifier};
-    use crate::data::{write_chunked, TrainStore};
+    use crate::data::{write_chunked, write_chunked_v1, TrainStore};
     use crate::kernels::{default_chunk_rows, TileConfig};
     use crate::util::Stopwatch;
 
@@ -1526,42 +1567,54 @@ pub fn cmd_ooc(train_n: usize, n_queries: usize, seed: u64,
         time(&|| resident.try_predict(test.features()))?;
     let resident_mib = (train.n * d * 4) as f64 / (1 << 20) as f64;
 
-    // one chunked run per size, features streamed from disk through
-    // the double buffer; parity BEFORE timing, every size
-    let mut runs: Vec<(usize, usize, f64, f64)> = Vec::new();
+    // one chunked run per (size, format), features streamed from disk
+    // through the double buffer; parity BEFORE timing, every run. v1
+    // is written first so the store file left behind is the
+    // checksummed v2; the v2-vs-v1 pair at each size feeds the
+    // checksum-overhead gate.
+    let mut runs: Vec<(usize, usize, &'static str, f64, f64)> =
+        Vec::new();
     for &chunk_rows in &chunk_sizes {
-        write_chunked(&train, store_path, chunk_rows)?;
-        let mcs = MultiClassifier::fit_store(
-            TrainStore::open_chunked(store_path)?)?;
-        anyhow::ensure!(mcs.is_chunked(), "store opened resident");
-        let got = mcs.try_predict(test.features())?;
-        anyhow::ensure!(got == want,
-            "chunked predictions diverged from resident at chunk_rows \
-             {chunk_rows} — the chunking determinism contract is \
-             broken");
-        let secs = time(&|| mcs.try_predict(test.features()))?;
-        // two chunks in flight under the double buffer
-        let mib = (2 * chunk_rows.min(train.n) * d * 4) as f64
-            / (1 << 20) as f64;
-        runs.push((chunk_rows, train.n.div_ceil(chunk_rows), secs, mib));
+        for &format in &["v1", "v2-crc"] {
+            if format == "v1" {
+                write_chunked_v1(&train, store_path, chunk_rows)?;
+            } else {
+                write_chunked(&train, store_path, chunk_rows)?;
+            }
+            let mcs = MultiClassifier::fit_store(
+                TrainStore::open_chunked(store_path)?)?;
+            anyhow::ensure!(mcs.is_chunked(), "store opened resident");
+            let got = mcs.try_predict(test.features())?;
+            anyhow::ensure!(got == want,
+                "chunked predictions diverged from resident at \
+                 chunk_rows {chunk_rows} ({format}) — the chunking \
+                 determinism contract is broken");
+            let secs = time(&|| mcs.try_predict(test.features()))?;
+            // two chunks in flight under the double buffer
+            let mib = (2 * chunk_rows.min(train.n) * d * 4) as f64
+                / (1 << 20) as f64;
+            runs.push((chunk_rows, train.n.div_ceil(chunk_rows),
+                       format, secs, mib));
+        }
     }
 
     let acc = accuracy(&want.vote, test.labels());
     let mut table = Table::new(
-        "Out-of-core MCS — resident vs chunked `.lmtc` backend \
-         (predictions bit-identical at every chunk size, asserted \
-         before timing)",
-        &["backend", "chunk rows", "chunks", "train features (MiB)",
-          "secs", "queries/s", "vote accuracy"]);
-    table.row(&["resident".into(), "-".into(), "-".into(),
+        "Out-of-core MCS — resident vs chunked `.lmtc` backend, \
+         checksummed v2 vs legacy v1 (predictions bit-identical at \
+         every chunk size and format, asserted before timing)",
+        &["backend", "chunk rows", "chunks", "format",
+          "train features (MiB)", "secs", "queries/s",
+          "vote accuracy"]);
+    table.row(&["resident".into(), "-".into(), "-".into(), "-".into(),
                 format!("{resident_mib:.1}"),
                 format!("{resident_secs:.6}"),
                 format!("{:.0}", n_queries as f64 / resident_secs),
                 format!("{acc:.4}")]);
-    for &(chunk_rows, chunks, secs, mib) in &runs {
+    for &(chunk_rows, chunks, format, secs, mib) in &runs {
         table.row(&["chunked".into(), chunk_rows.to_string(),
-                    chunks.to_string(), format!("{mib:.1}"),
-                    format!("{secs:.6}"),
+                    chunks.to_string(), format.into(),
+                    format!("{mib:.1}"), format!("{secs:.6}"),
                     format!("{:.0}", n_queries as f64 / secs),
                     format!("{acc:.4}")]);
     }
@@ -1580,13 +1633,14 @@ pub fn cmd_ooc(train_n: usize, n_queries: usize, seed: u64,
              {resident_secs:.6}, \"throughput_qps\": {:.1}, \
              \"working_set_mib\": {resident_mib:.2}}},\n",
             n_queries as f64 / resident_secs));
-        for (i, &(chunk_rows, chunks, secs, mib)) in
+        for (i, &(chunk_rows, chunks, format, secs, mib)) in
             runs.iter().enumerate() {
             let comma = if i + 1 < runs.len() { "," } else { "" };
             json.push_str(&format!(
                 "    {{\"backend\": \"chunked\", \"chunk_rows\": \
-                 {chunk_rows}, \"chunks\": {chunks}, \"secs\": \
-                 {secs:.6}, \"throughput_qps\": {:.1}, \
+                 {chunk_rows}, \"chunks\": {chunks}, \"format\": \
+                 \"{format}\", \"secs\": {secs:.6}, \
+                 \"throughput_qps\": {:.1}, \
                  \"working_set_mib\": {mib:.2}}}{comma}\n",
                 n_queries as f64 / secs));
         }

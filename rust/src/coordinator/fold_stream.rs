@@ -7,6 +7,14 @@
 //! therefore consumes every fold `f != l`.  The shared pass streams each
 //! fold once and fans batches out to all consumers; the separate pass
 //! replays the naive loop nest (each learner re-reads its k−1 folds).
+//!
+//! Failure domain: fold streams deliver *index* batches into the single
+//! resident copy of T — no disk I/O happens at this layer, so the store
+//! fault taxonomy (`data::StoreError`, determinism contract 7) cannot
+//! reach it. A caller that materialises T from a chunked `.lmtc` store
+//! (e.g. `TrainStore::to_dataset`) absorbs or surfaces store faults at
+//! that seam, *before* constructing a [`FoldStream`]; everything here
+//! is infallible by construction.
 
 use crate::data::{Dataset, Folds};
 use crate::kernels::parallel::{run_jobs, Schedule};

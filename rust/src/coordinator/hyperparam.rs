@@ -629,6 +629,60 @@ mod tests {
     }
 
     #[test]
+    fn store_sweep_recovers_transients_and_types_persistent_faults() {
+        // Determinism contract 7 at the sweep layer: transients the
+        // retry loop absorbs change no accuracy/eval bits — sequential
+        // or fanned out — and persistent corruption fails the sweep
+        // with a classifiable store error instead of a panic or a
+        // silently wrong argmax.
+        use crate::data::{
+            classify_store_error, ChunkedStore, FaultInjector,
+        };
+        use crate::kernels::RetryPolicy;
+        let (ds, folds) = small();
+        let ks = [1usize, 3, 5];
+        let hs = [0.5f32, 8.0];
+        let path = std::env::temp_dir().join(format!(
+            "locality_ml_sweep_fault_{}.lmtc", std::process::id()));
+        crate::data::write_chunked(&ds, &path, 17).unwrap();
+        let faulted = |spec: &str, attempts: u32| {
+            TrainStore::Chunked(ChunkedStore::open(&path)
+                .unwrap()
+                .with_faults(Some(FaultInjector::parse(spec).unwrap()),
+                             RetryPolicy::auto()
+                                 .with_attempts(attempts)
+                                 .with_backoff_us(0)))
+        };
+        let seq = ExecPolicy::sequential();
+        let want = sweep_store_exec(
+            &TrainStore::open_chunked(&path).unwrap(), &folds, &ks,
+            &hs, &seq).unwrap();
+
+        let recovered = faulted("seed=31,transient=60,tfail=1", 3);
+        assert_eq!(
+            sweep_store_exec(&recovered, &folds, &ks, &hs, &seq)
+                .unwrap(),
+            want, "recovered transient changed sweep bits");
+        let par = ExecPolicy::default()
+            .with_threads(4)
+            .with_schedule(Schedule::Stealing);
+        assert_eq!(
+            sweep_store_exec(&recovered, &folds, &ks, &hs, &par)
+                .unwrap(),
+            want,
+            "fanned-out sweep under recovered transients diverged");
+
+        for spec in ["flip@0", "transient@0,tfail=10"] {
+            let broken = faulted(spec, 2);
+            let err = sweep_store_exec(&broken, &folds, &ks, &hs, &seq)
+                .expect_err("persistent fault must fail the sweep");
+            assert!(classify_store_error(&err).is_some(),
+                "sweep error for {spec:?} not classifiable: {err}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn parallel_sweep_matches_across_random_geometries() {
         // The acceptance property across fold counts, shapes, candidate
         // sets, thread counts and schedules: merging per-split partials

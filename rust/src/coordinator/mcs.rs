@@ -430,6 +430,72 @@ mod tests {
     }
 
     #[test]
+    fn faults_in_the_store_surface_as_typed_errors_or_change_no_bits() {
+        // Determinism contract 7 at the ensemble layer: recovered
+        // transients leave every member and the vote bit-identical;
+        // persistent faults fail `fit_store`/`try_predict` with a
+        // classifiable store error — never a panic, never silently
+        // different predictions.
+        use crate::data::{
+            classify_store_error, ChunkedStore, FaultInjector,
+        };
+        use crate::kernels::RetryPolicy;
+        let (train, test) = chembl_like(200, 29).split(160);
+        let path = std::env::temp_dir().join(format!(
+            "locality_ml_mcs_fault_{}.lmtc", std::process::id()));
+        write_chunked(&train, &path, 23).unwrap();
+        let fast = |attempts: u32| {
+            RetryPolicy::auto().with_attempts(attempts)
+                .with_backoff_us(0)
+        };
+        let faulted = |spec: &str, attempts: u32| {
+            TrainStore::Chunked(ChunkedStore::open(&path)
+                .unwrap()
+                .with_faults(Some(FaultInjector::parse(spec).unwrap()),
+                             fast(attempts)))
+        };
+
+        let clean = MultiClassifier::fit_store(
+            TrainStore::open_chunked(&path).unwrap()).unwrap();
+        let want = clean.try_predict(&test.features).unwrap();
+
+        // Transients under a sufficient retry budget recover inside
+        // both the NB streaming fit and the shared distance pass.
+        let recovered = MultiClassifier::fit_store(
+            faulted("seed=29,transient=60,tfail=1", 3)).unwrap();
+        assert_eq!(recovered.nb, clean.nb,
+            "recovered transient changed the NB fit");
+        assert_eq!(recovered.try_predict(&test.features).unwrap(), want,
+            "recovered transient changed prediction bits");
+
+        // Persistent corruption fails the fit (NB streams the same
+        // chunks) with an error the serve layer can classify.
+        for spec in ["flip@0", "transient@0,tfail=10"] {
+            let err = MultiClassifier::fit_store(faulted(spec, 2))
+                .expect_err("persistent fault must fail fit_store");
+            assert!(classify_store_error(&err).is_some(),
+                "fit_store error for {spec:?} not classifiable: {err}");
+        }
+
+        // Corruption arriving AFTER a successful fit (the serving
+        // shape): try_predict fails typed, and once the bytes are
+        // restored the same system answers bit-identically again.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let at = bytes.len() - 3; // feature region is the file tail
+        bytes[at] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = clean.try_predict(&test.features)
+            .expect_err("on-disk corruption must fail the scan");
+        assert!(classify_store_error(&err).is_some(),
+            "post-fit corruption not classifiable: {err}");
+        bytes[at] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert_eq!(clean.try_predict(&test.features).unwrap(), want,
+            "recovery after restore must reproduce the baseline bits");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn vote_is_majority_of_members() {
         let (train, test) = chembl_like(320, 5).split(256);
         let p = MultiClassifier::fit(&train).predict(&test.features);

@@ -41,6 +41,28 @@
 //! wrong-dimension rows get an `error` reply and never enter the
 //! queue, so one bad client cannot poison a batch.
 //!
+//! Control queries share the connection: `{"cmd":"health"}` gets an
+//! immediate one-line snapshot (queue depth, admission and failure
+//! counters, store status) without entering the batch queue:
+//!
+//! ```text
+//! {"health":{"queued":0,"admitted":12,"shed":1,"errors":0,"store_faults":0,"store":"ok"}}
+//! ```
+//!
+//! # Failure domain
+//!
+//! A store fault mid-batch — a corrupt, truncated or unreadable chunk
+//! surfacing from the `.lmtc` scan as a typed
+//! [`StoreError`](crate::data::StoreError) — fails *that batch*, never
+//! the process: every query in the faulted batch gets a routed
+//! [`ServeReply::Error`] naming the store fault, the engine counts it
+//! (`store_faults`, reported by `{"cmd":"health"}` as
+//! `"store":"degraded"` until a batch succeeds again), and subsequent
+//! traffic keeps being served. Per determinism contract 7 (see
+//! `data::store`), a fault never changes the bits of a reply that
+//! succeeds: recovery is either a bit-identical `Predictions` line or
+//! an explicit `error` line, pinned by the degradation test below.
+//!
 //! # Determinism contract
 //!
 //! Batching is a latency/throughput decision, never a semantic one:
@@ -167,15 +189,35 @@ pub enum ServeReply {
         /// Human-readable reason.
         msg: String,
     },
+    /// Immediate `{"cmd":"health"}` snapshot — answered inline, never
+    /// queued, so it works even while serving is degraded.
+    Health {
+        /// Queries currently pending in the admission queue.
+        queued: usize,
+        /// Queries admitted since engine build.
+        admitted: u64,
+        /// Queries shed by backpressure since engine build.
+        shed: u64,
+        /// Batches whose dispatch failed (every query in them was
+        /// answered with an `error` reply).
+        errors: u64,
+        /// The subset of `errors` classified as store faults by
+        /// [`classify_store_error`](crate::data::classify_store_error).
+        store_faults: u64,
+        /// `false` while the most recent store fault has not yet been
+        /// followed by a successful batch.
+        store_ok: bool,
+    },
 }
 
 impl ServeReply {
-    /// The echoed request id.
+    /// The echoed request id (0 for control replies, which have none).
     pub fn id(&self) -> u64 {
         match self {
             ServeReply::Predictions { id, .. }
             | ServeReply::Overloaded { id }
             | ServeReply::Error { id, .. } => *id,
+            ServeReply::Health { .. } => 0,
         }
     }
 
@@ -196,6 +238,18 @@ impl ServeReply {
                 // but escape them anyway so the line stays valid JSON
                 let esc = msg.replace('\\', "\\\\").replace('"', "\\\"");
                 format!("{{\"id\":{id},\"error\":\"{esc}\"}}")
+            }
+            ServeReply::Health {
+                queued, admitted, shed, errors, store_faults, store_ok,
+            } => {
+                let store = if *store_ok { "ok" } else { "degraded" };
+                format!(
+                    "{{\"health\":{{\"queued\":{queued},\
+                     \"admitted\":{admitted},\"shed\":{shed},\
+                     \"errors\":{errors},\
+                     \"store_faults\":{store_faults},\
+                     \"store\":\"{store}\"}}}}"
+                )
             }
         }
     }
@@ -226,6 +280,11 @@ pub struct ServeStats {
     pub p99_us: u64,
     /// Latency samples currently retained (≤ the ring cap).
     pub samples: usize,
+    /// Batches whose dispatch failed (store fault or internal error);
+    /// every query in them was answered with [`ServeReply::Error`].
+    pub batch_errors: u64,
+    /// The subset of `batch_errors` classified as store faults.
+    pub store_faults: u64,
 }
 
 /// The resident serving engine: admission queue + batch dispatcher +
@@ -244,6 +303,9 @@ pub struct ServeEngine {
     latencies: Vec<u64>,
     lat_cursor: usize,
     staging: Vec<f32>,
+    batch_errors: u64,
+    store_faults: u64,
+    store_degraded: bool,
 }
 
 impl ServeEngine {
@@ -259,6 +321,9 @@ impl ServeEngine {
             latencies: Vec::new(),
             lat_cursor: 0,
             staging: Vec::new(),
+            batch_errors: 0,
+            store_faults: 0,
+            store_degraded: false,
         }
     }
 
@@ -317,14 +382,47 @@ impl ServeEngine {
     }
 
     /// Offer one raw protocol line (convenience for the transports):
-    /// parse failures become an immediate `Error` reply with id 0.
+    /// parse failures become an immediate `Error` reply with id 0,
+    /// and `{"cmd":"health"}` control lines get an immediate
+    /// [`ServeReply::Health`] snapshot without touching the queue
+    /// (unknown commands get an `Error` reply instead).
     pub fn offer_line(&mut self, client: usize, line: &str,
                       now_us: u64) -> Option<(usize, ServeReply)> {
+        let s = line.trim();
+        if let Some(inner) =
+            s.strip_prefix('{').and_then(|t| t.strip_suffix('}'))
+        {
+            if let Ok(cmd) = field(inner, "cmd") {
+                let reply = match cmd.trim() {
+                    "\"health\"" => self.health(),
+                    other => ServeReply::Error {
+                        id: 0,
+                        msg: format!("unknown cmd {other}"),
+                    },
+                };
+                return Some((client, reply));
+            }
+        }
         match ServeRequest::parse(line) {
             Ok(req) => self.offer(client, req, now_us),
             Err(msg) => {
                 Some((client, ServeReply::Error { id: 0, msg }))
             }
+        }
+    }
+
+    /// Immediate health snapshot — the `{"cmd":"health"}` reply.
+    /// Reads counters only, so it stays answerable while the store is
+    /// degraded or the queue is saturated.
+    pub fn health(&self) -> ServeReply {
+        let q = self.queue.stats();
+        ServeReply::Health {
+            queued: self.queue.len(),
+            admitted: q.admitted,
+            shed: q.shed,
+            errors: self.batch_errors,
+            store_faults: self.store_faults,
+            store_ok: !self.store_degraded,
         }
     }
 
@@ -363,10 +461,13 @@ impl ServeEngine {
     /// Dispatch one drained batch and account per-query latency
     /// (queue wait until `now_us` + the batch's compute time).
     ///
-    /// A dispatch failure (an internal-contract bug — admission
-    /// already filtered malformed queries) must not kill the resident
-    /// process: every query in the batch gets an `Error` reply and the
-    /// engine keeps serving.
+    /// A dispatch failure must not kill the resident process: every
+    /// query in the batch gets an `Error` reply and the engine keeps
+    /// serving. Failures that classify as store faults (a corrupt,
+    /// truncated or unreadable `.lmtc` chunk) additionally bump
+    /// `store_faults` and mark the store degraded until a batch
+    /// succeeds again — the graceful-degradation half of determinism
+    /// contract 7.
     fn run_batch(&mut self, now_us: u64) -> Vec<(usize, ServeReply)> {
         let batch = self.queue.drain_batch();
         if batch.is_empty() {
@@ -382,7 +483,15 @@ impl ServeEngine {
         let (preds, predict_us) = match dispatched {
             Ok(out) => out,
             Err(e) => {
-                let msg = format!("internal dispatch error: {e}");
+                self.batch_errors += 1;
+                let msg = match crate::data::classify_store_error(&e) {
+                    Some(_) => {
+                        self.store_faults += 1;
+                        self.store_degraded = true;
+                        format!("store fault: {e}")
+                    }
+                    None => format!("internal dispatch error: {e}"),
+                };
                 return batch
                     .into_iter()
                     .map(|(p, _)| (p.client, ServeReply::Error {
@@ -395,6 +504,7 @@ impl ServeEngine {
         if preds.vote.len() != batch.len() {
             // defensive length re-check so the reply builder below can
             // index without any panic path
+            self.batch_errors += 1;
             let msg = format!(
                 "internal dispatch error: {} predictions for a batch \
                  of {}", preds.vote.len(), batch.len());
@@ -406,6 +516,7 @@ impl ServeEngine {
                 }))
                 .collect();
         }
+        self.store_degraded = false;
         batch
             .into_iter()
             .enumerate()
@@ -440,6 +551,8 @@ impl ServeEngine {
             p50_us: percentile_us(&self.latencies, 50.0),
             p99_us: percentile_us(&self.latencies, 99.0),
             samples: self.latencies.len(),
+            batch_errors: self.batch_errors,
+            store_faults: self.store_faults,
         }
     }
 }
@@ -635,6 +748,149 @@ mod tests {
         let st = eng.stats();
         assert_eq!(st.dispatch.batches, 3);
         assert_eq!(st.dispatch.largest_batch, 3);
+    }
+
+    #[test]
+    fn health_control_queries_bypass_the_queue() {
+        let (mcs, test) = fitted(25);
+        let mut eng = ServeEngine::new(
+            mcs,
+            ServePolicy::auto()
+                .with_max_batch(4)
+                .with_max_wait_us(1_000)
+                .with_queue_cap(2),
+        );
+        // fresh engine: all counters zero, store ok
+        let (_, h) =
+            eng.offer_line(0, "{\"cmd\":\"health\"}", 0).unwrap();
+        assert_eq!(h, ServeReply::Health {
+            queued: 0, admitted: 0, shed: 0, errors: 0,
+            store_faults: 0, store_ok: true,
+        });
+        assert_eq!(h.to_jsonl(),
+            "{\"health\":{\"queued\":0,\"admitted\":0,\"shed\":0,\
+             \"errors\":0,\"store_faults\":0,\"store\":\"ok\"}}");
+        assert_eq!(h.id(), 0);
+        // queue two, shed one — the snapshot sees through the queue
+        // even while it is saturated, because it never enters it
+        eng.offer(0, req(1, test.row(0)), 0);
+        eng.offer(0, req(2, test.row(1)), 0);
+        let over = eng.offer(0, req(3, test.row(2)), 0).unwrap();
+        assert!(matches!(over.1, ServeReply::Overloaded { .. }));
+        let (_, h) = eng
+            .offer_line(0, "  {\"cmd\": \"health\"}  ", 0)
+            .unwrap();
+        match h {
+            ServeReply::Health { queued, admitted, shed, .. } => {
+                assert_eq!((queued, admitted, shed), (2, 2, 1));
+            }
+            other => panic!("expected health, got {other:?}"),
+        }
+        // unknown commands error instead of entering the queue
+        let (_, e) =
+            eng.offer_line(0, "{\"cmd\":\"restart\"}", 0).unwrap();
+        match e {
+            ServeReply::Error { id: 0, ref msg } => {
+                assert!(msg.contains("unknown cmd"), "{msg}");
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+        assert_eq!(eng.stats().queue.admitted, 2);
+    }
+
+    #[test]
+    fn store_fault_mid_batch_degrades_gracefully() {
+        // ISSUE 10 tentpole: a store fault during a batch fails THAT
+        // batch with routed per-query error replies — the resident
+        // process keeps serving, {"cmd":"health"} reports the
+        // degradation, and post-recovery replies are bit-identical to
+        // the pre-fault baseline (determinism contract 7).
+        let (train, test) = chembl_like(224, 37).split(160);
+        let pol = ExecPolicy::default().with_algo(DistanceAlgo::Exact);
+        let path = std::env::temp_dir().join(format!(
+            "locality_ml_serve_fault_{}.lmtc", std::process::id()));
+        crate::data::write_chunked(&train, &path, 23).unwrap();
+        let mcs = MultiClassifier::fit_store(
+            crate::data::TrainStore::open_chunked(&path).unwrap())
+            .unwrap()
+            .with_policy(&pol);
+        let mut eng = ServeEngine::new(
+            mcs,
+            ServePolicy::auto()
+                .with_max_batch(4)
+                .with_max_wait_us(1_000)
+                .with_queue_cap(64),
+        );
+        // healthy baseline batch
+        for i in 0..4u64 {
+            assert!(eng
+                .offer(0, req(i, test.row(i as usize)), 0)
+                .is_none());
+        }
+        let baseline: Vec<ServeReply> =
+            eng.poll(0).into_iter().map(|(_, r)| r).collect();
+        assert_eq!(baseline.len(), 4);
+        for r in &baseline {
+            assert!(matches!(r, ServeReply::Predictions { .. }),
+                "baseline batch got {r:?}");
+        }
+        // corrupt one feature byte on disk (features are the file's
+        // tail): the next scan's chunk-CRC check must catch it and
+        // fail the batch, not the process
+        let mut bytes = std::fs::read(&path).unwrap();
+        let at = bytes.len() - 3;
+        bytes[at] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        for i in 10..14u64 {
+            assert!(eng
+                .offer(0, req(i, test.row(i as usize)), 100)
+                .is_none());
+        }
+        let faulted = eng.poll(100);
+        assert_eq!(faulted.len(), 4,
+            "faulted batch must still answer every query");
+        for (_, r) in &faulted {
+            match r {
+                ServeReply::Error { msg, .. } => {
+                    assert!(msg.contains("store fault"), "{msg}");
+                    assert!(msg.contains("checksum"), "{msg}");
+                }
+                other => panic!("faulted batch produced {other:?}"),
+            }
+        }
+        match eng.health() {
+            ServeReply::Health {
+                errors, store_faults, store_ok, ..
+            } => {
+                assert_eq!((errors, store_faults), (1, 1));
+                assert!(!store_ok, "store not marked degraded");
+            }
+            other => panic!("expected health, got {other:?}"),
+        }
+        // heal the file: the engine recovers without a restart, and
+        // the replies are bit-identical to the pre-fault baseline
+        bytes[at] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        for i in 0..4u64 {
+            assert!(eng
+                .offer(0, req(i, test.row(i as usize)), 200)
+                .is_none());
+        }
+        let healed: Vec<ServeReply> =
+            eng.poll(200).into_iter().map(|(_, r)| r).collect();
+        assert_eq!(healed, baseline,
+            "post-recovery replies diverged from the baseline");
+        match eng.health() {
+            ServeReply::Health { store_faults, store_ok, .. } => {
+                assert_eq!(store_faults, 1);
+                assert!(store_ok,
+                    "successful batch must clear the degraded flag");
+            }
+            other => panic!("expected health, got {other:?}"),
+        }
+        let st = eng.stats();
+        assert_eq!((st.batch_errors, st.store_faults), (1, 1));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

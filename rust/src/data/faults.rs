@@ -1,0 +1,357 @@
+//! Deterministic, seeded **fault injection** for the chunked `.lmtc`
+//! reader — the test substrate behind determinism contract 7 (see
+//! `data/store.rs`): an injected fault never changes the bits of a
+//! successful result; failure is always an explicit typed error.
+//!
+//! A [`FaultSpec`] is parsed from the `--fault-spec` /
+//! `LOCALITY_ML_FAULT_SPEC` knob (resolved in `kernels::policy` like
+//! every other knob, off by default). The spec seeds a pure
+//! [`FaultInjector`] that the chunk-read path consults per
+//! `(chunk index, attempt)` — when no spec is set the store carries
+//! `None` and the hot loop pays one `Option` check, nothing else.
+//!
+//! # Spec grammar
+//!
+//! Comma-separated clauses, whitespace-insensitive:
+//!
+//! ```text
+//! seed=S          u64 seed for the per-chunk selection hash (default 0)
+//! transient=P     P% of chunks fail with a retryable transient error
+//! torn=P          P% of chunks come back torn (second half zeroed)
+//! flip=P          P% of chunks come back with one bit flipped
+//! short=P         P% of chunks hit a short read (simulated truncation)
+//! tfail=K         transient chunks fail the first K attempts (default 1)
+//! transient@I     explicit fault at chunk index I (also torn@I,
+//!                 flip@I, short@I); explicit entries win over percents
+//! ```
+//!
+//! e.g. `seed=42,transient=30,tfail=1` or `flip@2,short@5`.
+//!
+//! # Failure semantics
+//!
+//! * **Transient** faults fire *before* the disk read on attempts
+//!   `1..=tfail` and then stop — a bounded retry loop recovers and the
+//!   scan's output bits are identical to the fault-free run.
+//! * **Torn/flip/short** faults model *persistent* on-disk corruption:
+//!   they fire on every attempt, so retry cannot mask them and the
+//!   chunk surfaces as a typed `Corrupt`/`Truncated` store error.
+//!
+//! Selection is a pure hash of `(seed, chunk index, kind)` — no global
+//! state, no RNG stream, so the same spec hits the same chunks on every
+//! run, at any thread count or schedule, which is what lets the
+//! property suite sweep fault seeds × chunk geometry deterministically.
+
+/// Which fault to inject at a given chunk read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Retryable `Interrupted`-style error raised before the read.
+    Transient,
+    /// Torn write: the second half of the chunk's bytes are zeroed.
+    Torn,
+    /// Bit rot: exactly one (hash-chosen) bit of the chunk is flipped.
+    Flip,
+    /// Short read: the chunk ends early (surfaces as truncation).
+    Short,
+}
+
+impl FaultKind {
+    fn salt(self) -> u64 {
+        match self {
+            FaultKind::Transient => 1,
+            FaultKind::Torn => 2,
+            FaultKind::Flip => 3,
+            FaultKind::Short => 4,
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultKind> {
+        match s {
+            "transient" => Some(FaultKind::Transient),
+            "torn" => Some(FaultKind::Torn),
+            "flip" => Some(FaultKind::Flip),
+            "short" => Some(FaultKind::Short),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed `--fault-spec` value: seeded per-chunk fault percentages plus
+/// explicit per-index entries. See the module docs for the grammar.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Seed for the per-chunk selection hash.
+    pub seed: u64,
+    /// Percent of chunks hit by a transient (retryable) fault.
+    pub transient_pct: u8,
+    /// Percent of chunks hit by a torn write.
+    pub torn_pct: u8,
+    /// Percent of chunks hit by a single-bit flip.
+    pub flip_pct: u8,
+    /// Percent of chunks hit by a short read.
+    pub short_pct: u8,
+    /// Attempts a transient-faulted chunk fails before succeeding.
+    pub tfail: u32,
+    /// Explicit `(chunk index, kind)` entries; these win over percents.
+    pub at: Vec<(usize, FaultKind)>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: 0,
+            transient_pct: 0,
+            torn_pct: 0,
+            flip_pct: 0,
+            short_pct: 0,
+            tfail: 1,
+            at: Vec::new(),
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Parse the knob grammar (see module docs). Returns a message
+    /// naming the offending clause on malformed input — the caller
+    /// turns it into a clean CLI / open error, never a panic.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::default();
+        for raw in s.split(',') {
+            let clause = raw.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some((kind, idx)) = clause.split_once('@') {
+                let kind = FaultKind::parse(kind.trim()).ok_or_else(|| {
+                    format!("fault spec: unknown fault kind in {clause:?}")
+                })?;
+                let idx: usize = idx.trim().parse().map_err(|_| {
+                    format!("fault spec: bad chunk index in {clause:?}")
+                })?;
+                spec.at.push((idx, kind));
+                continue;
+            }
+            let (key, val) = clause.split_once('=').ok_or_else(|| {
+                format!("fault spec: expected key=value or kind@index, \
+                         got {clause:?}")
+            })?;
+            let (key, val) = (key.trim(), val.trim());
+            match key {
+                "seed" => {
+                    spec.seed = val.parse().map_err(|_| {
+                        format!("fault spec: bad seed in {clause:?}")
+                    })?;
+                }
+                "tfail" => {
+                    spec.tfail = val.parse().map_err(|_| {
+                        format!("fault spec: bad tfail in {clause:?}")
+                    })?;
+                }
+                "transient" | "torn" | "flip" | "short" => {
+                    let pct: u8 = val.parse().map_err(|_| {
+                        format!("fault spec: bad percent in {clause:?}")
+                    })?;
+                    if pct > 100 {
+                        return Err(format!(
+                            "fault spec: percent > 100 in {clause:?}"));
+                    }
+                    match key {
+                        "transient" => spec.transient_pct = pct,
+                        "torn" => spec.torn_pct = pct,
+                        "flip" => spec.flip_pct = pct,
+                        _ => spec.short_pct = pct,
+                    }
+                }
+                _ => {
+                    return Err(format!(
+                        "fault spec: unknown key {key:?} in {clause:?}"));
+                }
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// SplitMix64-style avalanche of `(seed, chunk index, salt)` — the pure
+/// selection hash behind every injection decision.
+fn hash64(seed: u64, idx: u64, salt: u64) -> u64 {
+    let mut z = seed
+        ^ idx.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ salt.wrapping_mul(0xD1B5_4A32_D192_ED03);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The injection seam the chunked reader consults: a pure function of
+/// `(chunk index, attempt)` seeded by a [`FaultSpec`]. Cloned into the
+/// prefetch thread, so it must stay plain data (`Clone + Send`).
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    spec: FaultSpec,
+}
+
+impl FaultInjector {
+    /// Wrap a parsed spec.
+    pub fn new(spec: FaultSpec) -> Self {
+        FaultInjector { spec }
+    }
+
+    /// Parse a spec string straight into an injector.
+    pub fn parse(s: &str) -> Result<FaultInjector, String> {
+        Ok(FaultInjector::new(FaultSpec::parse(s)?))
+    }
+
+    fn selected(&self, chunk_idx: usize, kind: FaultKind) -> bool {
+        let pct = match kind {
+            FaultKind::Transient => self.spec.transient_pct,
+            FaultKind::Torn => self.spec.torn_pct,
+            FaultKind::Flip => self.spec.flip_pct,
+            FaultKind::Short => self.spec.short_pct,
+        };
+        pct > 0
+            && hash64(self.spec.seed, chunk_idx as u64, kind.salt()) % 100
+                < pct as u64
+    }
+
+    /// The fault (if any) to inject for read `attempt` (1-based) of
+    /// `chunk_idx`. Transient faults stop firing after `tfail`
+    /// attempts (so bounded retry recovers); corruption kinds fire on
+    /// every attempt (retry cannot fix a bad disk block). Explicit
+    /// `kind@index` entries win over the seeded percents.
+    pub fn decide(&self, chunk_idx: usize, attempt: u32)
+        -> Option<FaultKind> {
+        if let Some(&(_, kind)) =
+            self.spec.at.iter().find(|&&(idx, _)| idx == chunk_idx)
+        {
+            if kind != FaultKind::Transient || attempt <= self.spec.tfail {
+                return Some(kind);
+            }
+            return None;
+        }
+        if self.selected(chunk_idx, FaultKind::Transient)
+            && attempt <= self.spec.tfail
+        {
+            return Some(FaultKind::Transient);
+        }
+        for kind in [FaultKind::Torn, FaultKind::Flip, FaultKind::Short] {
+            if self.selected(chunk_idx, kind) {
+                return Some(kind);
+            }
+        }
+        None
+    }
+
+    /// Apply a torn write to a chunk's raw bytes: zero the second half.
+    pub fn tear(&self, bytes: &mut [u8]) {
+        let mid = bytes.len() / 2;
+        for b in &mut bytes[mid..] {
+            *b = 0;
+        }
+    }
+
+    /// Apply bit rot to a chunk's raw bytes: flip one hash-chosen bit.
+    pub fn flip(&self, chunk_idx: usize, bytes: &mut [u8]) {
+        if bytes.is_empty() {
+            return;
+        }
+        let h = hash64(self.spec.seed, chunk_idx as u64, 5);
+        let byte = (h as usize) % bytes.len();
+        let bit = (h >> 32) % 8;
+        bytes[byte] ^= 1u8 << bit;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_documented_grammar() {
+        let spec =
+            FaultSpec::parse("seed=42, transient=30, tfail=2").unwrap();
+        assert_eq!(spec.seed, 42);
+        assert_eq!(spec.transient_pct, 30);
+        assert_eq!(spec.tfail, 2);
+        assert_eq!(spec.torn_pct, 0);
+        let spec = FaultSpec::parse("flip@2,short@5,torn=100").unwrap();
+        assert_eq!(spec.at,
+                   vec![(2, FaultKind::Flip), (5, FaultKind::Short)]);
+        assert_eq!(spec.torn_pct, 100);
+        // empty spec = no faults
+        let spec = FaultSpec::parse("").unwrap();
+        assert_eq!(spec, FaultSpec::default());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses() {
+        for bad in [
+            "bogus=1",
+            "transient",
+            "transient=101",
+            "transient=x",
+            "seed=-1",
+            "wibble@3",
+            "flip@x",
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn decide_is_deterministic_and_seed_sensitive() {
+        let a = FaultInjector::parse("seed=1,flip=50").unwrap();
+        let b = FaultInjector::parse("seed=2,flip=50").unwrap();
+        let hits_a: Vec<usize> =
+            (0..64).filter(|&i| a.decide(i, 1).is_some()).collect();
+        let hits_b: Vec<usize> =
+            (0..64).filter(|&i| b.decide(i, 1).is_some()).collect();
+        // same spec, same decisions — repeat and compare
+        let again: Vec<usize> =
+            (0..64).filter(|&i| a.decide(i, 1).is_some()).collect();
+        assert_eq!(hits_a, again, "decide must be pure");
+        assert!(hits_a != hits_b, "different seeds must differ");
+        // 50% of 64 chunks: both seeds should hit a sane fraction
+        assert!(hits_a.len() > 8 && hits_a.len() < 56);
+    }
+
+    #[test]
+    fn transient_faults_stop_after_tfail_attempts() {
+        let inj = FaultInjector::parse("transient@3,tfail=2").unwrap();
+        assert_eq!(inj.decide(3, 1), Some(FaultKind::Transient));
+        assert_eq!(inj.decide(3, 2), Some(FaultKind::Transient));
+        assert_eq!(inj.decide(3, 3), None, "attempt 3 must succeed");
+        assert_eq!(inj.decide(4, 1), None, "other chunks untouched");
+        // corruption kinds persist across attempts
+        let inj = FaultInjector::parse("flip@0").unwrap();
+        for attempt in 1..5 {
+            assert_eq!(inj.decide(0, attempt), Some(FaultKind::Flip));
+        }
+    }
+
+    #[test]
+    fn mutations_change_bytes_deterministically() {
+        let inj = FaultInjector::parse("seed=7,flip=100").unwrap();
+        let orig: Vec<u8> = (0..64u8).collect();
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        inj.flip(3, &mut a);
+        inj.flip(3, &mut b);
+        assert_eq!(a, b, "flip must be deterministic");
+        let diff: Vec<usize> = orig
+            .iter()
+            .zip(&a)
+            .enumerate()
+            .filter(|(_, (x, y))| x != y)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(diff.len(), 1, "exactly one byte changes");
+        assert_eq!((orig[diff[0]] ^ a[diff[0]]).count_ones(), 1,
+                   "exactly one bit changes");
+        let mut torn: Vec<u8> = (1..=8u8).collect();
+        inj.tear(&mut torn);
+        assert_eq!(torn, vec![1, 2, 3, 4, 0, 0, 0, 0]);
+        // empty buffers are a no-op, not a panic
+        inj.flip(0, &mut []);
+        inj.tear(&mut []);
+    }
+}

@@ -32,6 +32,82 @@ const VERSION: u32 = 1;
 /// enough that the chunk stays in L1.
 const CHUNK: usize = 2048;
 
+/// CRC32C (Castagnoli, reflected polynomial `0x82F63B78`) lookup
+/// table, built by a `const fn` at compile time — table-driven, no new
+/// dependencies, and the 1 KiB table stays L1-resident across a whole
+/// chunk scan. Used by the `.lmtc` v2 store (`data/store.rs`) for its
+/// header / metadata / per-chunk checksums.
+const CRC32C_TABLE: [u32; 256] = build_crc32c_table();
+
+const fn build_crc32c_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 {
+                (crc >> 1) ^ 0x82F6_3B78
+            } else {
+                crc >> 1
+            };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+/// Fold `bytes` into a running CRC32C. Chaining is exact:
+/// `crc32c_update(crc32c_update(0, a), b) == crc32c(ab)` — which is
+/// what lets the `.lmtc` writer checksum the labels + norms blocks in
+/// one running pass and the reader verify from the parsed values.
+pub(crate) fn crc32c_update(crc: u32, bytes: &[u8]) -> u32 {
+    let mut c = !crc;
+    for &b in bytes {
+        c = (c >> 8) ^ CRC32C_TABLE[((c ^ b as u32) & 0xFF) as usize];
+    }
+    !c
+}
+
+/// CRC32C of a byte slice.
+pub(crate) fn crc32c(bytes: &[u8]) -> u32 {
+    crc32c_update(0, bytes)
+}
+
+/// Fold an `f32` slice into a running CRC32C over its little-endian
+/// serialization — bit-reinterpreting through `to_le_bytes` is
+/// bijective, so checksumming parsed values equals checksumming the
+/// on-disk bytes they came from.
+pub(crate) fn crc32c_f32s_update(crc: u32, vals: &[f32]) -> u32 {
+    let mut c = crc;
+    let mut buf = [0u8; 4 * CHUNK];
+    for chunk in vals.chunks(CHUNK) {
+        let bytes = &mut buf[..4 * chunk.len()];
+        for (slot, v) in bytes.chunks_exact_mut(4).zip(chunk) {
+            slot.copy_from_slice(&v.to_le_bytes());
+        }
+        c = crc32c_update(c, bytes);
+    }
+    c
+}
+
+/// Fold an `i32` slice into a running CRC32C over its little-endian
+/// serialization.
+pub(crate) fn crc32c_i32s_update(crc: u32, vals: &[i32]) -> u32 {
+    let mut c = crc;
+    let mut buf = [0u8; 4 * CHUNK];
+    for chunk in vals.chunks(CHUNK) {
+        let bytes = &mut buf[..4 * chunk.len()];
+        for (slot, v) in bytes.chunks_exact_mut(4).zip(chunk) {
+            slot.copy_from_slice(&v.to_le_bytes());
+        }
+        c = crc32c_update(c, bytes);
+    }
+    c
+}
+
 /// Serialize an `f32` slice as explicit little-endian bytes.
 ///
 /// The old implementation viewed the slice as raw bytes
@@ -198,6 +274,52 @@ mod tests {
         assert_eq!(&bytes[features_at + 4..features_at + 8],
                    &[0x07, 0x00, 0x00, 0x00]);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn crc32c_matches_the_published_check_value() {
+        // The canonical CRC32C test vector (RFC 3720 appendix B /
+        // "123456789") pins polynomial, reflection and the pre/post
+        // inversion all at once.
+        assert_eq!(crc32c(b"123456789"), 0xE306_9283);
+        assert_eq!(crc32c(b""), 0);
+        // 32 zero bytes, another published vector
+        assert_eq!(crc32c(&[0u8; 32]), 0x8A91_36AA);
+    }
+
+    #[test]
+    fn crc32c_update_chains_exactly() {
+        let all: Vec<u8> = (0..=255u8).collect();
+        for split in [0usize, 1, 7, 128, 255, 256] {
+            let (a, b) = all.split_at(split);
+            assert_eq!(crc32c_update(crc32c_update(0, a), b),
+                       crc32c(&all), "chaining broke at split {split}");
+        }
+    }
+
+    #[test]
+    fn value_level_crcs_equal_byte_level_crcs() {
+        // f32/i32 LE serialization is bijective, so the value-level
+        // folds must equal the CRC over the bytes they serialize to —
+        // including across staging-chunk boundaries (len > CHUNK).
+        let f: Vec<f32> = (0..3000).map(|i| i as f32 * 0.5 - 7.0).collect();
+        let mut fbytes = Vec::with_capacity(4 * f.len());
+        for v in &f {
+            fbytes.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(crc32c_f32s_update(0, &f), crc32c(&fbytes));
+        let i: Vec<i32> = (0..3000).map(|v| v * 17 - 9000).collect();
+        let mut ibytes = Vec::with_capacity(4 * i.len());
+        for v in &i {
+            ibytes.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(crc32c_i32s_update(0, &i), crc32c(&ibytes));
+        // chaining across the two value types mirrors the writer's
+        // labels-then-norms running checksum
+        let mut joined = ibytes.clone();
+        joined.extend_from_slice(&fbytes);
+        assert_eq!(crc32c_f32s_update(crc32c_i32s_update(0, &i), &f),
+                   crc32c(&joined));
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! the sub-sampling machinery of paper §3.
 
 pub mod dataset;
+pub mod faults;
 pub mod folds;
 pub mod io;
 pub mod sampling;
@@ -12,7 +13,9 @@ pub mod store;
 pub mod synth;
 
 pub use dataset::Dataset;
+pub use faults::{FaultInjector, FaultKind, FaultSpec};
 pub use folds::Folds;
 pub use io::{read_dataset, write_dataset};
-pub use store::{write_chunked, ChunkedStore, TrainStore};
+pub use store::{classify_store_error, write_chunked, write_chunked_v1,
+                ChunkedStore, StoreError, StoreErrorKind, TrainStore};
 pub use synth::{chembl_like, gaussian_mixture, mnist_like, MixtureSpec};

@@ -14,93 +14,405 @@
 //!   per-row norms. A laptop-RAM process can train on and serve a
 //!   train set bigger than memory.
 //!
-//! # `.lmtc` layout (little endian)
+//! # `.lmtc` v2 layout (little endian)
 //!
 //! ```text
-//! magic      b"LMTC"     4 bytes
-//! version    u32         currently 1
-//! n          u64         number of points
-//! d          u64         features per point
+//! magic      b"LMTC"        4 bytes
+//! version    u32            currently 2 (v1 files remain readable)
+//! n          u64            number of points
+//! d          u64            features per point
 //! classes    u32
-//! chunk_rows u64         rows per feature chunk (>= 1)
-//! labels     n   x i32   resident at open
-//! norms      n   x f32   per-row squared norms, resident at open
-//! features   n*d x f32   row-major, streamed chunk_rows rows at a time
+//! chunk_rows u64            rows per feature chunk (>= 1)
+//! header_crc u32            v2: CRC32C of the 36 fixed bytes above
+//! labels     n x i32        resident at open
+//! norms      n x f32        per-row squared norms, resident at open
+//! meta_crc   u32            v2: CRC32C of the labels + norms bytes
+//! chunk_crcs nc x u32       v2: CRC32C per feature chunk,
+//!                           nc = ceil(n / chunk_rows)
+//! features   n*d x f32      row-major, streamed chunk_rows at a time
 //! ```
+//!
+//! v1 files (no `header_crc` / `meta_crc` / `chunk_crcs`) still open;
+//! checksum verification is skipped with a logged warning.
+//! [`write_chunked`] writes v2; [`write_chunked_v1`] keeps the old
+//! layout writable for back-compat tests and the checksummed-vs-v1
+//! throughput bench.
 //!
 //! Labels and norms sit **before** the feature payload so
 //! [`ChunkedStore::open`] materialises them in one buffered pass and
 //! never touches the feature region; feature bytes are only read by
-//! [`TrainStore::scan_chunks`] / [`TrainStore::gather`]. The norms are
-//! written by [`write_chunked`] from the same feature buffer with the
-//! same ascending accumulation as [`NormCache::compute`], so a loaded
-//! norm is bit-identical to a computed one.
+//! [`TrainStore::scan_chunks`] / [`TrainStore::gather`], and each v2
+//! chunk is CRC-verified *inside* the double-buffered scan — the
+//! checksum pass rides the prefetch thread's existing traffic instead
+//! of a separate validation sweep. The norms are written by
+//! [`write_chunked`] from the same feature buffer with the same
+//! ascending accumulation as [`NormCache::compute`], so a loaded norm
+//! is bit-identical to a computed one.
 //!
-//! # Determinism contract (the sixth axis)
+//! # Failure domain
 //!
-//! **Chunking never changes bits.** Every per-pair distance this crate
-//! computes — Exact's subtract–square–accumulate and Gemm's
-//! `‖q‖²+‖t‖²−2·q·t` over the packed micro-kernel — depends only on the
-//! two rows involved, never on which other rows share a tile, panel or
-//! chunk (the packed matmul is bit-identical across blockings and
-//! tiers). So computing a distance block per chunk and scattering it by
-//! global row index reproduces the resident engine bit for bit at any
-//! chunk size, thread count, schedule and SIMD tier — property-tested
-//! here and in every consumer.
+//! Disk faults surface as a typed [`StoreError`] carried through the
+//! crate's `anyhow` results (classify with [`classify_store_error`]):
+//!
+//! * [`StoreError::Corrupt`] — checksum mismatch, bad magic/header
+//!   field, out-of-range label, non-finite stored norm, or a file
+//!   *longer* than the header arithmetic. Never retried.
+//! * [`StoreError::Truncated`] — the file ends before the header
+//!   arithmetic says it should (at open or mid-scan). Never retried.
+//! * [`StoreError::Transient`] — an `Interrupted`-style error;
+//!   retried up to [`RetryPolicy::max_attempts`] with
+//!   [`RetryPolicy::backoff_us`] between attempts before surfacing.
+//! * [`StoreError::Io`] — any other I/O failure, including a dead or
+//!   poisoned prefetch thread (detected at `join`, never a hang).
+//!
+//! Every error names the byte offset it was detected at. The
+//! [`FaultInjector`] seam (`data/faults.rs`, resolved from
+//! `--fault-spec` / `LOCALITY_ML_FAULT_SPEC`, off by default) injects
+//! each of these fault classes deterministically for the property
+//! suite; [`ChunkedStore::with_faults`] attaches an explicit injector
+//! for tests that must not touch global knobs.
+//!
+//! # Determinism contracts (axes six and seven)
+//!
+//! **Chunking never changes bits** (contract 6). Every per-pair
+//! distance this crate computes — Exact's subtract–square–accumulate
+//! and Gemm's `‖q‖²+‖t‖²−2·q·t` over the packed micro-kernel — depends
+//! only on the two rows involved, never on which other rows share a
+//! tile, panel or chunk (the packed matmul is bit-identical across
+//! blockings and tiers). So computing a distance block per chunk and
+//! scattering it by global row index reproduces the resident engine
+//! bit for bit at any chunk size, thread count, schedule and SIMD tier
+//! — property-tested here and in every consumer.
+//!
+//! **A fault never changes the bits of a successful result**
+//! (contract 7). A transient fault exhausted by the bounded retry
+//! leaves the scan output bit-identical to the fault-free run;
+//! corruption and truncation surface as an explicit `Err` — never a
+//! panic, never a hang, never silently wrong bits. Property-tested
+//! across fault seeds × chunk geometry × threads × schedule here, in
+//! the fused scans and in the serving engine.
 
 use std::borrow::Cow;
+use std::fmt;
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read as _, Seek, SeekFrom, Write};
+use std::io::{BufReader, BufWriter, ErrorKind, Read as _, Seek,
+              SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::thread;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::dataset::Dataset;
-use super::io::{read_f32s, read_i32s, write_f32s, write_i32s};
+use super::faults::{FaultInjector, FaultKind};
+use super::io::{crc32c, crc32c_f32s_update, crc32c_i32s_update,
+                read_f32s, read_i32s, write_f32s, write_i32s};
 use crate::kernels::distance::row_sq_norms;
+use crate::kernels::policy::default_fault_spec;
 use crate::kernels::{
     gather_rows, pairwise_sq_dists_exec, pairwise_sq_dists_gather_exec,
-    ExecPolicy, NormCache, TileConfig,
+    ExecPolicy, NormCache, RetryPolicy, TileConfig,
 };
 
 const MAGIC: &[u8; 4] = b"LMTC";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// Fixed header bytes before the labels block.
-const HEADER_BYTES: u64 = 4 + 4 + 8 + 8 + 4 + 8;
+/// Fixed header bytes before the (version-dependent) checksum and
+/// label blocks: magic + version + n + d + classes + chunk_rows.
+const FIXED_HEADER_BYTES: u64 = 4 + 4 + 8 + 8 + 4 + 8;
 
-/// Write `ds` to `path` in `.lmtc` chunked format with `chunk_rows`
-/// feature rows per chunk. The per-row squared norms are computed here
-/// once (same accumulation order as [`NormCache::compute`], so the
-/// stored bits equal the resident cache's bits) and persisted so
-/// opening the store never streams the features just to rebuild them.
+/// Typed store failure taxonomy — every disk-boundary fault the
+/// chunked backend can surface. Each variant's `Display` carries a
+/// stable tag (`store corrupt @`, `store truncated @`,
+/// `store transient @`, `store io:`) plus the byte offset, so the
+/// classification survives `anyhow` context wrapping (the vendored
+/// `anyhow` is string-based and has no downcast);
+/// [`classify_store_error`] recovers the kind from any wrapped error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StoreError {
+    /// Bytes are present but wrong: checksum mismatch, bad header
+    /// field, out-of-range label, non-finite norm, oversized file.
+    Corrupt {
+        /// Byte offset the corruption was detected at.
+        offset: u64,
+        /// Human-readable description of what failed validation.
+        detail: String,
+    },
+    /// The file ends before the header arithmetic says it should.
+    Truncated {
+        /// Byte offset the data was expected (and missing) at.
+        offset: u64,
+        /// Human-readable description of the missing region.
+        detail: String,
+    },
+    /// A retryable `Interrupted`-style failure that survived the
+    /// bounded retry loop.
+    Transient {
+        /// Byte offset of the failing read.
+        offset: u64,
+        /// Read attempts made before giving up.
+        attempts: u32,
+        /// Human-readable description of the failure.
+        detail: String,
+    },
+    /// Any other I/O failure, including a dead prefetch thread.
+    Io {
+        /// Human-readable description of the failure.
+        detail: String,
+    },
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Corrupt { offset, detail } => {
+                write!(f, "store corrupt @{offset}: {detail}")
+            }
+            StoreError::Truncated { offset, detail } => {
+                write!(f, "store truncated @{offset}: {detail}")
+            }
+            StoreError::Transient { offset, attempts, detail } => {
+                write!(f, "store transient @{offset} after {attempts} \
+                           attempt(s): {detail}")
+            }
+            StoreError::Io { detail } => write!(f, "store io: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// The four [`StoreError`] classes, for callers that only branch on
+/// the kind (retry? degrade? reject?) and not the payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreErrorKind {
+    /// See [`StoreError::Corrupt`].
+    Corrupt,
+    /// See [`StoreError::Truncated`].
+    Truncated,
+    /// See [`StoreError::Transient`].
+    Transient,
+    /// See [`StoreError::Io`].
+    Io,
+}
+
+/// Recover the [`StoreErrorKind`] from an `anyhow` error that may wrap
+/// a [`StoreError`] under any number of context layers. Returns `None`
+/// for errors that did not originate at the store boundary — which is
+/// how the serving engine distinguishes a store fault (degrade, keep
+/// serving) from an internal dispatch bug.
+pub fn classify_store_error(e: &anyhow::Error) -> Option<StoreErrorKind> {
+    let s = e.to_string();
+    if s.contains("store corrupt @") {
+        Some(StoreErrorKind::Corrupt)
+    } else if s.contains("store truncated @") {
+        Some(StoreErrorKind::Truncated)
+    } else if s.contains("store transient @") {
+        Some(StoreErrorKind::Transient)
+    } else if s.contains("store io: ") {
+        Some(StoreErrorKind::Io)
+    } else {
+        None
+    }
+}
+
+/// Map a raw `io::Error` from a positioned read into the typed
+/// taxonomy: unexpected EOF is truncation, anything else is I/O.
+fn read_err(e: std::io::Error, offset: u64, what: &str) -> StoreError {
+    if e.kind() == ErrorKind::UnexpectedEof {
+        StoreError::Truncated {
+            offset,
+            detail: format!("{what} ends early"),
+        }
+    } else {
+        StoreError::Io { detail: format!("reading {what}: {e}") }
+    }
+}
+
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Write `ds` to `path` in `.lmtc` v2 chunked format with `chunk_rows`
+/// feature rows per chunk: header + metadata + per-chunk CRC32C
+/// checksums. The per-row squared norms are computed here once (same
+/// accumulation order as [`NormCache::compute`], so the stored bits
+/// equal the resident cache's bits) and persisted so opening the store
+/// never streams the features just to rebuild them.
 pub fn write_chunked(ds: &Dataset, path: &Path, chunk_rows: usize)
     -> Result<()> {
+    write_chunked_version(ds, path, chunk_rows, VERSION)
+}
+
+/// Write the legacy checksum-free `.lmtc` v1 layout. Kept for
+/// back-compat coverage (v1 files must stay readable) and for the
+/// checksummed-vs-v1 scan-throughput comparison in `bench_ooc`.
+pub fn write_chunked_v1(ds: &Dataset, path: &Path, chunk_rows: usize)
+    -> Result<()> {
+    write_chunked_version(ds, path, chunk_rows, 1)
+}
+
+fn write_chunked_version(ds: &Dataset, path: &Path, chunk_rows: usize,
+                         version: u32) -> Result<()> {
     if chunk_rows == 0 {
         bail!("chunk_rows must be >= 1");
     }
+    let norms = row_sq_norms(&ds.features, ds.d);
     let file = File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
     let mut w = BufWriter::new(file);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&(ds.n as u64).to_le_bytes())?;
-    w.write_all(&(ds.d as u64).to_le_bytes())?;
-    w.write_all(&(ds.n_classes as u32).to_le_bytes())?;
-    w.write_all(&(chunk_rows as u64).to_le_bytes())?;
+    let mut fixed = Vec::with_capacity(FIXED_HEADER_BYTES as usize);
+    fixed.extend_from_slice(MAGIC);
+    fixed.extend_from_slice(&version.to_le_bytes());
+    fixed.extend_from_slice(&(ds.n as u64).to_le_bytes());
+    fixed.extend_from_slice(&(ds.d as u64).to_le_bytes());
+    fixed.extend_from_slice(&(ds.n_classes as u32).to_le_bytes());
+    fixed.extend_from_slice(&(chunk_rows as u64).to_le_bytes());
+    w.write_all(&fixed)?;
+    if version >= 2 {
+        w.write_all(&crc32c(&fixed).to_le_bytes())?;
+    }
     write_i32s(&mut w, &ds.labels)?;
-    write_f32s(&mut w, &row_sq_norms(&ds.features, ds.d))?;
+    write_f32s(&mut w, &norms)?;
+    if version >= 2 {
+        let meta =
+            crc32c_f32s_update(crc32c_i32s_update(0, &ds.labels), &norms);
+        w.write_all(&meta.to_le_bytes())?;
+        let step = (chunk_rows * ds.d).max(1);
+        for chunk in ds.features.chunks(step) {
+            w.write_all(&crc32c_f32s_update(0, chunk).to_le_bytes())?;
+        }
+    }
     write_f32s(&mut w, &ds.features)?;
     w.flush()?;
     Ok(())
 }
 
+/// One positioned, checksum-verified, fault-injectable chunk read with
+/// bounded transient retry — the unit the double-buffered scan (and
+/// its prefetch thread) is built from. Free function so the prefetch
+/// closure can own everything it needs (`File`, offsets, a cloned
+/// injector) without borrowing the store across the spawn.
+fn read_chunk(
+    file: &mut File,
+    off: u64,
+    vals: usize,
+    chunk_idx: usize,
+    expect_crc: Option<u32>,
+    faults: Option<&FaultInjector>,
+    retry: &RetryPolicy,
+) -> Result<Vec<f32>, StoreError> {
+    let max_attempts = retry.max_attempts.max(1);
+    let mut attempt = 1u32;
+    loop {
+        match read_chunk_once(file, off, vals, chunk_idx, expect_crc,
+                              faults, attempt) {
+            Err(StoreError::Transient { .. })
+                if attempt < max_attempts =>
+            {
+                attempt += 1;
+                if retry.backoff_us > 0 {
+                    thread::sleep(Duration::from_micros(retry.backoff_us));
+                }
+            }
+            other => return other,
+        }
+    }
+}
+
+fn read_chunk_once(
+    file: &mut File,
+    off: u64,
+    vals: usize,
+    chunk_idx: usize,
+    expect_crc: Option<u32>,
+    faults: Option<&FaultInjector>,
+    attempt: u32,
+) -> Result<Vec<f32>, StoreError> {
+    // The injection seam: one Option check when fault injection is
+    // off — the knob costs nothing in production.
+    let injected = faults.and_then(|inj| inj.decide(chunk_idx, attempt));
+    if let Some(FaultKind::Transient) = injected {
+        return Err(StoreError::Transient {
+            offset: off,
+            attempts: attempt,
+            detail: format!("injected transient fault at chunk \
+                             {chunk_idx}"),
+        });
+    }
+    file.seek(SeekFrom::Start(off)).map_err(|e| StoreError::Io {
+        detail: format!("seeking chunk {chunk_idx}: {e}"),
+    })?;
+    let mut bytes = vec![0u8; 4 * vals];
+    file.read_exact(&mut bytes).map_err(|e| {
+        if e.kind() == ErrorKind::UnexpectedEof {
+            StoreError::Truncated {
+                offset: off,
+                detail: format!("feature chunk {chunk_idx} ends \
+                                 mid-chunk"),
+            }
+        } else if e.kind() == ErrorKind::Interrupted {
+            StoreError::Transient {
+                offset: off,
+                attempts: attempt,
+                detail: format!("reading chunk {chunk_idx}: {e}"),
+            }
+        } else {
+            StoreError::Io {
+                detail: format!("reading chunk {chunk_idx}: {e}"),
+            }
+        }
+    })?;
+    match injected {
+        Some(FaultKind::Short) => {
+            return Err(StoreError::Truncated {
+                offset: off,
+                detail: format!("injected short read at chunk \
+                                 {chunk_idx}"),
+            });
+        }
+        Some(FaultKind::Torn) => {
+            if let Some(inj) = faults {
+                inj.tear(&mut bytes);
+            }
+        }
+        Some(FaultKind::Flip) => {
+            if let Some(inj) = faults {
+                inj.flip(chunk_idx, &mut bytes);
+            }
+        }
+        _ => {}
+    }
+    if let Some(want) = expect_crc {
+        let got = crc32c(&bytes);
+        if got != want {
+            return Err(StoreError::Corrupt {
+                offset: off,
+                detail: format!("feature chunk {chunk_idx} checksum \
+                                 mismatch (stored {want:#010x}, \
+                                 computed {got:#010x})"),
+            });
+        }
+    }
+    let mut out = Vec::with_capacity(vals);
+    for slot in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([slot[0], slot[1], slot[2],
+                                     slot[3]]));
+    }
+    Ok(out)
+}
+
 /// The streamed `.lmtc` backend: labels and per-row norms resident,
 /// features read on demand in `chunk_rows`-row chunks through a
-/// double-buffered scan. Everything is validated at [`open`]
-/// (magic, version, file-size arithmetic, label range), so the scan
-/// path can trust the geometry.
+/// double-buffered scan. Everything is validated at [`open`] (magic,
+/// version, header/metadata checksums, file-size arithmetic, label
+/// range, norm finiteness), each v2 feature chunk is CRC-verified as
+/// it streams, and every failure is a typed [`StoreError`] naming the
+/// byte offset — never a panic (the scan now runs under serve).
 ///
 /// [`open`]: ChunkedStore::open
 #[derive(Debug)]
@@ -113,61 +425,203 @@ pub struct ChunkedStore {
     labels: Vec<i32>,
     norms: NormCache,
     data_off: u64,
+    version: u32,
+    chunk_crcs: Vec<u32>,
+    faults: Option<FaultInjector>,
+    retry: RetryPolicy,
 }
 
 impl ChunkedStore {
-    /// Open and validate a `.lmtc` file: magic, version, header/file
-    /// size arithmetic and label range are all checked here; the
-    /// labels and norms blocks are materialised (one buffered pass),
-    /// the feature region is left on disk.
+    /// Open and validate a `.lmtc` file (v1 or v2): magic, version,
+    /// header checksum (v2), header/file size arithmetic, label range,
+    /// norm finiteness and metadata checksum (v2) are all checked
+    /// here; the labels and norms blocks are materialised (one
+    /// buffered pass), the feature region is left on disk for the
+    /// checksummed streaming scan. The fault-injection knob
+    /// (`--fault-spec` / `LOCALITY_ML_FAULT_SPEC`) and retry knobs are
+    /// resolved here, once per store.
     pub fn open(path: &Path) -> Result<Self> {
-        let file = File::open(path)
-            .with_context(|| format!("opening {}", path.display()))?;
+        Self::open_impl(path)
+            .with_context(|| format!("{}", path.display()))
+    }
+
+    fn open_impl(path: &Path) -> Result<Self> {
+        let file = File::open(path).context("opening store file")?;
         let total = file.metadata()?.len();
         let mut r = BufReader::new(file);
-        let mut magic = [0u8; 4];
-        r.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("{}: not an LMTC file", path.display());
+        let mut fixed = [0u8; FIXED_HEADER_BYTES as usize];
+        r.read_exact(&mut fixed)
+            .map_err(|e| read_err(e, 0, "fixed header"))?;
+        if &fixed[0..4] != MAGIC {
+            return Err(StoreError::Corrupt {
+                offset: 0,
+                detail: "not an LMTC file (bad magic)".into(),
+            }
+            .into());
         }
-        let mut u32buf = [0u8; 4];
-        let mut u64buf = [0u8; 8];
-        r.read_exact(&mut u32buf)?;
-        let version = u32::from_le_bytes(u32buf);
-        if version != VERSION {
-            bail!("{}: unsupported version {version}", path.display());
+        let version = le_u32(&fixed[4..8]);
+        if version == 0 || version > VERSION {
+            return Err(StoreError::Corrupt {
+                offset: 4,
+                detail: format!("unsupported version {version}"),
+            }
+            .into());
         }
-        r.read_exact(&mut u64buf)?;
-        let n = u64::from_le_bytes(u64buf) as usize;
-        r.read_exact(&mut u64buf)?;
-        let d = u64::from_le_bytes(u64buf) as usize;
-        r.read_exact(&mut u32buf)?;
-        let n_classes = u32::from_le_bytes(u32buf) as usize;
-        r.read_exact(&mut u64buf)?;
-        let chunk_rows = u64::from_le_bytes(u64buf) as usize;
+        let n = le_u64(&fixed[8..16]) as usize;
+        let d = le_u64(&fixed[16..24]) as usize;
+        let n_classes = le_u32(&fixed[24..28]) as usize;
+        let chunk_rows = le_u64(&fixed[28..36]) as usize;
+        if version >= 2 {
+            let mut crcbuf = [0u8; 4];
+            r.read_exact(&mut crcbuf).map_err(|e| {
+                read_err(e, FIXED_HEADER_BYTES, "header checksum")
+            })?;
+            let want = le_u32(&crcbuf);
+            let got = crc32c(&fixed);
+            if got != want {
+                return Err(StoreError::Corrupt {
+                    offset: FIXED_HEADER_BYTES,
+                    detail: format!("header checksum mismatch (stored \
+                                     {want:#010x}, computed \
+                                     {got:#010x})"),
+                }
+                .into());
+            }
+        } else {
+            eprintln!("warning: {}: .lmtc v1 has no checksums; \
+                       integrity verification skipped",
+                      path.display());
+        }
         if d == 0 {
-            bail!("{}: feature dimension must be >= 1", path.display());
+            return Err(StoreError::Corrupt {
+                offset: 16,
+                detail: "feature dimension must be >= 1".into(),
+            }
+            .into());
         }
         if n_classes == 0 {
-            bail!("{}: class count must be >= 1", path.display());
+            return Err(StoreError::Corrupt {
+                offset: 24,
+                detail: "class count must be >= 1".into(),
+            }
+            .into());
         }
         if chunk_rows == 0 {
-            bail!("{}: chunk_rows must be >= 1", path.display());
+            return Err(StoreError::Corrupt {
+                offset: 28,
+                detail: "chunk_rows must be >= 1".into(),
+            }
+            .into());
         }
-        let data_off = HEADER_BYTES + 8 * n as u64;
-        let expect = data_off + 4 * (n as u64) * (d as u64);
-        if total != expect {
-            bail!("{}: file size {total} != expected {expect} \
-                   (n={n}, d={d})", path.display());
+        let n64 = n as u64;
+        let d64 = d as u64;
+        let nchunks =
+            if n == 0 { 0 } else { (n + chunk_rows - 1) / chunk_rows };
+        let labels_off =
+            FIXED_HEADER_BYTES + if version >= 2 { 4 } else { 0 };
+        let norms_off = labels_off + 4 * n64;
+        let arithmetic = n64
+            .checked_mul(d64)
+            .and_then(|v| v.checked_mul(4))
+            .and_then(|payload| {
+                let data_off = if version >= 2 {
+                    norms_off + 4 * n64 + 4 + 4 * nchunks as u64
+                } else {
+                    norms_off + 4 * n64
+                };
+                data_off.checked_add(payload).map(|e| (data_off, e))
+            });
+        let (data_off, expect) = match arithmetic {
+            Some(v) => v,
+            None => {
+                return Err(StoreError::Corrupt {
+                    offset: 8,
+                    detail: format!("header arithmetic overflows \
+                                     (n={n}, d={d})"),
+                }
+                .into());
+            }
+        };
+        if total < expect {
+            return Err(StoreError::Truncated {
+                offset: total,
+                detail: format!("file size {total} < expected {expect} \
+                                 (n={n}, d={d})"),
+            }
+            .into());
         }
-        let labels = read_i32s(&mut r, n)?;
-        if let Some(bad) =
-            labels.iter().find(|&&l| l < 0 || l as usize >= n_classes)
+        if total > expect {
+            return Err(StoreError::Corrupt {
+                offset: expect,
+                detail: format!("file longer than header arithmetic: \
+                                 size {total} > expected {expect} \
+                                 (n={n}, d={d})"),
+            }
+            .into());
+        }
+        let labels = read_i32s(&mut r, n).map_err(|e| StoreError::Io {
+            detail: format!("reading labels block: {e}"),
+        })?;
+        if let Some((i, &bad)) = labels
+            .iter()
+            .enumerate()
+            .find(|(_, &l)| l < 0 || l as usize >= n_classes)
         {
-            bail!("{}: label {bad} outside 0..{n_classes}",
-                  path.display());
+            return Err(StoreError::Corrupt {
+                offset: labels_off + 4 * i as u64,
+                detail: format!("label {bad} outside 0..{n_classes}"),
+            }
+            .into());
         }
-        let norms = NormCache::from_norms(read_f32s(&mut r, n)?);
+        let raw_norms =
+            read_f32s(&mut r, n).map_err(|e| StoreError::Io {
+                detail: format!("reading norms block: {e}"),
+            })?;
+        if let Some((i, &bad)) = raw_norms
+            .iter()
+            .enumerate()
+            .find(|(_, &v)| !v.is_finite() || v < 0.0)
+        {
+            return Err(StoreError::Corrupt {
+                offset: norms_off + 4 * i as u64,
+                detail: format!("stored norm {bad} is not a finite \
+                                 non-negative value"),
+            }
+            .into());
+        }
+        let mut chunk_crcs = Vec::new();
+        if version >= 2 {
+            let meta_off = norms_off + 4 * n64;
+            let mut crcbuf = [0u8; 4];
+            r.read_exact(&mut crcbuf)
+                .map_err(|e| read_err(e, meta_off, "metadata checksum"))?;
+            let want = le_u32(&crcbuf);
+            let got = crc32c_f32s_update(
+                crc32c_i32s_update(0, &labels), &raw_norms);
+            if got != want {
+                return Err(StoreError::Corrupt {
+                    offset: meta_off,
+                    detail: format!("labels/norms checksum mismatch \
+                                     (stored {want:#010x}, computed \
+                                     {got:#010x})"),
+                }
+                .into());
+            }
+            chunk_crcs.reserve(nchunks);
+            for _ in 0..nchunks {
+                r.read_exact(&mut crcbuf).map_err(|e| {
+                    read_err(e, meta_off + 4, "chunk checksum table")
+                })?;
+                chunk_crcs.push(le_u32(&crcbuf));
+            }
+        }
+        let norms = NormCache::from_norms(raw_norms);
+        let faults = match default_fault_spec() {
+            Some(spec) => Some(
+                FaultInjector::parse(&spec).map_err(|m| anyhow!("{m}"))?,
+            ),
+            None => None,
+        };
         Ok(Self {
             path: path.to_path_buf(),
             n,
@@ -177,14 +631,56 @@ impl ChunkedStore {
             labels,
             norms,
             data_off,
+            version,
+            chunk_crcs,
+            faults,
+            retry: RetryPolicy::auto().resolve(),
         })
+    }
+
+    /// Replace the knob-resolved fault injector and retry policy with
+    /// explicit values — the race-free seam the fault property suite
+    /// uses (no global knob state, safe under parallel `cargo test`).
+    pub fn with_faults(mut self, faults: Option<FaultInjector>,
+                       retry: RetryPolicy) -> Self {
+        self.faults = faults;
+        self.retry = retry.resolve();
+        self
+    }
+
+    /// On-disk format version (1 = legacy checksum-free, 2 =
+    /// checksummed).
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// True when the file carries CRC32C checksums (v2+) and every
+    /// scanned chunk is verified in-stream.
+    pub fn checksummed(&self) -> bool {
+        self.version >= 2
+    }
+
+    /// Number of feature chunks the scan will stream.
+    pub fn n_chunks(&self) -> usize {
+        if self.n == 0 {
+            0
+        } else {
+            (self.n + self.chunk_rows - 1) / self.chunk_rows
+        }
+    }
+
+    fn chunk_crc(&self, idx: usize) -> Option<u32> {
+        self.chunk_crcs.get(idx).copied()
     }
 
     /// Stream the feature matrix through `consume(row0, rows)` in
     /// ascending `chunk_rows`-row chunks (the last one ragged), with
     /// the next chunk prefetched on its own thread while the caller
     /// scans the current one — the double buffer that overlaps disk
-    /// latency with compute.
+    /// latency with compute. Each v2 chunk's CRC32C is verified on the
+    /// thread that read it; transient faults retry under the store's
+    /// [`RetryPolicy`]; corruption/truncation surface as typed errors
+    /// and a dead prefetch thread is an error, not a hang.
     pub fn scan_chunks(
         &self,
         mut consume: impl FnMut(usize, &[f32]) -> Result<()>,
@@ -195,11 +691,15 @@ impl ChunkedStore {
         let d = self.d;
         let mut file = File::open(&self.path)
             .with_context(|| format!("opening {}", self.path.display()))?;
-        file.seek(SeekFrom::Start(self.data_off))?;
         let mut cur_rows = self.chunk_rows.min(self.n);
-        let mut cur = read_f32s(&mut file, cur_rows * d)?;
+        let mut cur = read_chunk(&mut file, self.data_off, cur_rows * d,
+                                 0, self.chunk_crc(0),
+                                 self.faults.as_ref(), &self.retry)
+            .with_context(|| format!("scanning {}",
+                                     self.path.display()))?;
         let mut file_slot = Some(file);
         let mut row0 = 0usize;
+        let mut chunk_idx = 0usize;
         loop {
             let next_row0 = row0 + cur_rows;
             // Kick off the next chunk's read before consuming the
@@ -207,11 +707,18 @@ impl ChunkedStore {
             // prefetch thread, and comes back with the buffer.
             let prefetch = if next_row0 < self.n {
                 let rows = self.chunk_rows.min(self.n - next_row0);
+                let off = self.data_off
+                    + 4 * (next_row0 as u64) * (d as u64);
+                let next_idx = chunk_idx + 1;
+                let crc = self.chunk_crc(next_idx);
+                let faults = self.faults.clone();
+                let retry = self.retry;
                 let mut f = file_slot
                     .take()
                     .ok_or_else(|| anyhow!("prefetch file handle lost"))?;
                 Some(thread::spawn(move || {
-                    let buf = read_f32s(&mut f, rows * d);
+                    let buf = read_chunk(&mut f, off, rows * d, next_idx,
+                                         crc, faults.as_ref(), &retry);
                     (f, buf, rows)
                 }))
             } else {
@@ -219,25 +726,50 @@ impl ChunkedStore {
             };
             consume(row0, &cur)?;
             row0 = next_row0;
+            chunk_idx += 1;
             match prefetch {
                 Some(handle) => {
                     let (f, buf, rows) = handle.join().map_err(|_| {
-                        anyhow!("chunk prefetch thread panicked")
+                        anyhow::Error::from(StoreError::Io {
+                            detail: "chunk prefetch thread died before \
+                                     delivering its buffer"
+                                .into(),
+                        })
                     })?;
                     file_slot = Some(f);
-                    cur = buf?;
+                    cur = buf.with_context(|| {
+                        format!("scanning {}", self.path.display())
+                    })?;
                     cur_rows = rows;
                 }
                 None => return Ok(()),
             }
         }
     }
+
+    /// Deep integrity scan (the `ooc --verify` mode): stream every
+    /// feature chunk through the checksummed read path without
+    /// consuming the data. Returns `(chunks, rows)` streamed; any
+    /// corruption/truncation surfaces as the same typed error the
+    /// training scan would produce.
+    pub fn verify_scan(&self) -> Result<(usize, usize)> {
+        let mut chunks = 0usize;
+        let mut rows = 0usize;
+        let d = self.d;
+        self.scan_chunks(|_, feats| {
+            chunks += 1;
+            rows += feats.len() / d;
+            Ok(())
+        })?;
+        Ok((chunks, rows))
+    }
 }
 
 /// Tile-granular train-data store: the abstraction every train-data
 /// consumer (distance engine, fused scans, sweeps, multi-classifier,
 /// serving) is seamed onto. See the module docs for the backend
-/// contract and the "chunking never changes bits" determinism axis.
+/// contract, the failure domain, and the "chunking never changes
+/// bits" / "faults never change bits" determinism axes.
 #[derive(Debug)]
 pub enum TrainStore<'a> {
     /// RAM-resident backend: the plain row-major dataset plus its
@@ -349,7 +881,8 @@ impl<'a> TrainStore<'a> {
     /// backend, double-buffered `chunk_rows`-row chunks for the
     /// chunked one. Consumers must therefore handle arbitrary chunk
     /// geometry — which is exactly what the chunk-edge property tests
-    /// exercise.
+    /// exercise. Chunked-backend faults surface here as typed
+    /// [`StoreError`]s (see the module's failure-domain docs).
     pub fn scan_chunks(
         &self,
         mut consume: impl FnMut(usize, &[f32]) -> Result<()>,
@@ -520,6 +1053,7 @@ impl<'a> TrainStore<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::faults::FaultSpec;
     use crate::data::synth::chembl_like;
     use crate::kernels::distance::norm_cache_builds;
     use crate::kernels::parallel::Schedule;
@@ -532,6 +1066,20 @@ mod tests {
         p.push(format!("locality_ml_store_{name}_{}",
                        std::process::id()));
         p
+    }
+
+    /// A retry policy that never sleeps — keeps the fault suite fast.
+    fn fast_retry(attempts: u32) -> RetryPolicy {
+        RetryPolicy::auto().with_attempts(attempts).with_backoff_us(0)
+    }
+
+    fn faulted(path: &Path, spec: &str, attempts: u32)
+        -> TrainStore<'static> {
+        let cs = ChunkedStore::open(path)
+            .unwrap()
+            .with_faults(Some(FaultInjector::parse(spec).unwrap()),
+                         fast_retry(attempts));
+        TrainStore::Chunked(cs)
     }
 
     #[test]
@@ -547,7 +1095,41 @@ mod tests {
         assert!(store.as_resident().is_none());
         assert_eq!(store.labels(), &ds.labels[..]);
         assert_eq!(store.to_dataset().unwrap(), ds);
+        if let TrainStore::Chunked(cs) = &store {
+            assert_eq!(cs.version(), 2);
+            assert!(cs.checksummed());
+            assert_eq!(cs.n_chunks(), 8, "ceil(97 / 13)");
+            assert_eq!(cs.verify_scan().unwrap(), (8, 97));
+        }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_files_still_open_and_stream_identically() {
+        // Back-compat: the legacy checksum-free layout stays readable
+        // (verification skipped) and streams the same bits as v2.
+        let ds = chembl_like(41, 5);
+        let p1 = tmp("v1compat.lmtc");
+        let p2 = tmp("v2compat.lmtc");
+        write_chunked_v1(&ds, &p1, 9).unwrap();
+        write_chunked(&ds, &p2, 9).unwrap();
+        let s1 = TrainStore::open_chunked(&p1).unwrap();
+        let s2 = TrainStore::open_chunked(&p2).unwrap();
+        if let TrainStore::Chunked(cs) = &s1 {
+            assert_eq!(cs.version(), 1);
+            assert!(!cs.checksummed());
+            assert_eq!(cs.verify_scan().unwrap(), (5, 41));
+        }
+        assert_eq!(s1.labels(), s2.labels());
+        assert_eq!(s1.norms().norms(), s2.norms().norms());
+        assert_eq!(s1.to_dataset().unwrap(), s2.to_dataset().unwrap());
+        // v2 carries the checksum blocks: 4 (header crc) + 4 (meta
+        // crc) + 4 * ceil(41/9) chunk crcs more bytes than v1.
+        let len1 = std::fs::metadata(&p1).unwrap().len();
+        let len2 = std::fs::metadata(&p2).unwrap().len();
+        assert_eq!(len2 - len1, 4 + 4 + 4 * 5);
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
     }
 
     #[test]
@@ -586,28 +1168,233 @@ mod tests {
         // wrong magic
         let path = tmp("badmagic.lmtc");
         std::fs::write(&path, b"NOPE............").unwrap();
-        assert!(ChunkedStore::open(&path).is_err());
-        std::fs::remove_file(&path).ok();
-        // truncated payload: header size arithmetic must catch it
-        let ds = chembl_like(20, 3);
-        let path = tmp("truncated.lmtc");
-        write_chunked(&ds, &path, 5).unwrap();
-        let bytes = std::fs::read(&path).unwrap();
-        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
-        assert!(ChunkedStore::open(&path).is_err());
-        // out-of-range label: labels start right after the header
-        std::fs::write(&path, &bytes).unwrap();
-        let mut corrupt = bytes.clone();
-        corrupt[HEADER_BYTES as usize..HEADER_BYTES as usize + 4]
-            .copy_from_slice(&(-1i32).to_le_bytes());
-        std::fs::write(&path, &corrupt).unwrap();
-        assert!(ChunkedStore::open(&path).is_err());
+        let err = ChunkedStore::open(&path).unwrap_err();
+        assert_eq!(classify_store_error(&err),
+                   Some(StoreErrorKind::Corrupt), "{err}");
         std::fs::remove_file(&path).ok();
         // zero chunk_rows is rejected at write time already
+        let ds = chembl_like(20, 3);
         assert!(write_chunked(&ds, &tmp("zc.lmtc"), 0).is_err());
+        assert!(write_chunked_v1(&ds, &tmp("zc1.lmtc"), 0).is_err());
         // missing file is an error, not a panic
         assert!(ChunkedStore::open(Path::new("/nonexistent/x.lmtc"))
             .is_err());
+    }
+
+    #[test]
+    fn corrupt_file_matrix_fails_typed_never_panics() {
+        // The satellite matrix: every corruption class must fail
+        // open() or the first scan with a typed StoreError naming the
+        // byte offset — never a panic, never silence.
+        let ds = chembl_like(20, 3);
+        let path = tmp("matrix.lmtc");
+        write_chunked(&ds, &path, 5).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let labels_off = FIXED_HEADER_BYTES as usize + 4;
+
+        // 1. truncated mid-header
+        std::fs::write(&path, &bytes[..20]).unwrap();
+        let err = ChunkedStore::open(&path).unwrap_err();
+        assert_eq!(classify_store_error(&err),
+                   Some(StoreErrorKind::Truncated), "{err}");
+        assert!(err.to_string().contains("@0"), "{err}");
+
+        // 2. truncated mid-chunk (caught by open's size arithmetic)
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        let err = ChunkedStore::open(&path).unwrap_err();
+        assert_eq!(classify_store_error(&err),
+                   Some(StoreErrorKind::Truncated), "{err}");
+
+        // 3. truncated mid-chunk AFTER open: the streaming scan must
+        //    surface it as typed truncation (open can't see a race)
+        std::fs::write(&path, &bytes).unwrap();
+        let store = ChunkedStore::open(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        let err = store.scan_chunks(|_, _| Ok(())).unwrap_err();
+        assert_eq!(classify_store_error(&err),
+                   Some(StoreErrorKind::Truncated), "{err}");
+
+        // 4. file longer than the header arithmetic
+        let mut long = bytes.clone();
+        long.extend_from_slice(&[0u8; 8]);
+        std::fs::write(&path, &long).unwrap();
+        let err = ChunkedStore::open(&path).unwrap_err();
+        assert_eq!(classify_store_error(&err),
+                   Some(StoreErrorKind::Corrupt), "{err}");
+        assert!(err.to_string().contains("longer"), "{err}");
+
+        // 5. out-of-range label (offset named). Patching the label
+        //    also breaks the metadata checksum, which fires first —
+        //    still typed corruption; the v1 case below pins the
+        //    range check itself.
+        let mut corrupt = bytes.clone();
+        corrupt[labels_off..labels_off + 4]
+            .copy_from_slice(&(-1i32).to_le_bytes());
+        std::fs::write(&path, &corrupt).unwrap();
+        let err = ChunkedStore::open(&path).unwrap_err();
+        assert_eq!(classify_store_error(&err),
+                   Some(StoreErrorKind::Corrupt), "{err}");
+
+        // 6. header field corruption is caught by the header checksum
+        let mut badn = bytes.clone();
+        badn[8] ^= 0x01; // n low byte
+        std::fs::write(&path, &badn).unwrap();
+        let err = ChunkedStore::open(&path).unwrap_err();
+        assert_eq!(classify_store_error(&err),
+                   Some(StoreErrorKind::Corrupt), "{err}");
+        assert!(err.to_string().contains("header checksum"), "{err}");
+
+        // 7. feature-byte corruption is caught by the chunk CRC
+        //    during the scan, naming the chunk
+        let mut badfeat = bytes.clone();
+        let flip_at = bytes.len() - 2; // inside the last chunk
+        badfeat[flip_at] ^= 0x40;
+        std::fs::write(&path, &badfeat).unwrap();
+        let store = ChunkedStore::open(&path).unwrap();
+        let err = store.scan_chunks(|_, _| Ok(())).unwrap_err();
+        assert_eq!(classify_store_error(&err),
+                   Some(StoreErrorKind::Corrupt), "{err}");
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_corrupt_matrix_label_and_norm_checks() {
+        // v1 has no checksums, so the semantic validators are the only
+        // line of defence — out-of-range labels and non-finite stored
+        // norms must be typed corruption with a named offset.
+        let ds = chembl_like(16, 3);
+        let path = tmp("v1matrix.lmtc");
+        write_chunked_v1(&ds, &path, 4).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let labels_off = FIXED_HEADER_BYTES as usize;
+        let norms_off = labels_off + 4 * ds.n;
+
+        let mut badlabel = bytes.clone();
+        badlabel[labels_off + 8..labels_off + 12]
+            .copy_from_slice(&(99i32).to_le_bytes());
+        std::fs::write(&path, &badlabel).unwrap();
+        let err = ChunkedStore::open(&path).unwrap_err();
+        assert_eq!(classify_store_error(&err),
+                   Some(StoreErrorKind::Corrupt), "{err}");
+        assert!(err.to_string()
+                    .contains(&format!("@{}", labels_off + 8)),
+                "offset not named: {err}");
+
+        let mut badnorm = bytes.clone();
+        badnorm[norms_off + 4..norms_off + 8]
+            .copy_from_slice(&f32::NAN.to_le_bytes());
+        std::fs::write(&path, &badnorm).unwrap();
+        let err = ChunkedStore::open(&path).unwrap_err();
+        assert_eq!(classify_store_error(&err),
+                   Some(StoreErrorKind::Corrupt), "{err}");
+        assert!(err.to_string().contains("norm"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn transient_faults_recover_bit_identically() {
+        // Determinism contract 7, recovery half: a transient fault
+        // exhausted by the bounded retry leaves the streamed bits
+        // identical to the fault-free run.
+        let ds = chembl_like(37, 4);
+        let path = tmp("transient.lmtc");
+        write_chunked(&ds, &path, 6).unwrap();
+        let clean = TrainStore::open_chunked(&path)
+            .unwrap()
+            .to_dataset()
+            .unwrap();
+        // every chunk transient-faults twice, retry allows 3 attempts
+        let store = faulted(&path, "transient=100,tfail=2", 3);
+        assert_eq!(store.to_dataset().unwrap(), clean);
+        // gather and gather_dists ride the same retrying scan
+        let idx: Vec<usize> = (0..10).map(|i| i * 3 % ds.n).collect();
+        let resident = TrainStore::resident_ref(&ds);
+        assert_eq!(store.gather(&idx).unwrap(),
+                   resident.gather(&idx).unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn exhausted_transient_faults_surface_typed() {
+        let ds = chembl_like(24, 3);
+        let path = tmp("exhaust.lmtc");
+        write_chunked(&ds, &path, 8).unwrap();
+        // fails 10 attempts, retry only allows 2 → typed Transient
+        let store = faulted(&path, "transient@1,tfail=10", 2);
+        let err = store.scan_chunks(|_, _| Ok(())).unwrap_err();
+        assert_eq!(classify_store_error(&err),
+                   Some(StoreErrorKind::Transient), "{err}");
+        assert!(err.to_string().contains("after 2 attempt(s)"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn injected_corruption_is_caught_by_the_chunk_crcs() {
+        let ds = chembl_like(30, 5);
+        let path = tmp("inject.lmtc");
+        write_chunked(&ds, &path, 7).unwrap();
+        for (spec, want) in [
+            ("torn@2", StoreErrorKind::Corrupt),
+            ("flip@0", StoreErrorKind::Corrupt),
+            ("short@3", StoreErrorKind::Truncated),
+        ] {
+            let store = faulted(&path, spec, 3);
+            let err = store.scan_chunks(|_, _| Ok(())).unwrap_err();
+            assert_eq!(classify_store_error(&err), Some(want),
+                       "{spec}: {err}");
+        }
+        // retry must NOT mask persistent corruption: generous retry
+        // budget, same typed failure
+        let store = faulted(&path, "flip@1", 50);
+        let err = store.scan_chunks(|_, _| Ok(())).unwrap_err();
+        assert_eq!(classify_store_error(&err),
+                   Some(StoreErrorKind::Corrupt), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn prop_faults_never_change_bits_of_a_successful_result() {
+        // Contract 7 in full: across fault seeds × chunk geometry,
+        // every scan either streams bits identical to the fault-free
+        // run (transients recovered) or fails with a typed
+        // StoreError — never a panic, never wrong bits.
+        check("store-fault-contract", 16, |g| {
+            let d = g.usize_in(1, 6);
+            let n = g.usize_in(1, 50);
+            let ds = Dataset::new(
+                g.f32_vec(n * d, 2.0),
+                (0..n).map(|i| (i % 3) as i32).collect(),
+                d,
+                3,
+            );
+            let chunk_rows = [1, g.usize_in(1, n), n, n + 7]
+                [g.usize_in(0, 3)];
+            let seed = g.usize_in(0, 1000) as u64;
+            let path = tmp(&format!("prop{n}_{chunk_rows}_{seed}.lmtc"));
+            write_chunked(&ds, &path, chunk_rows).unwrap();
+            let spec = format!(
+                "seed={seed},transient={},torn={},flip={},short={},\
+                 tfail=1",
+                g.usize_in(0, 100), g.usize_in(0, 40),
+                g.usize_in(0, 40), g.usize_in(0, 40));
+            let store = faulted(&path, &spec, 3);
+            let mut streamed: Vec<f32> = Vec::new();
+            let res = store.scan_chunks(|_, feats| {
+                streamed.extend_from_slice(feats);
+                Ok(())
+            });
+            match res {
+                Ok(()) => prop_assert!(streamed == ds.features,
+                    "successful scan diverged ({spec}, chunk \
+                     {chunk_rows})"),
+                Err(e) => prop_assert!(
+                    classify_store_error(&e).is_some(),
+                    "untyped fault error ({spec}): {e}"),
+            }
+            std::fs::remove_file(&path).ok();
+            Ok(())
+        });
     }
 
     #[test]
@@ -657,6 +1444,8 @@ mod tests {
             Ok(())
         });
         assert!(res.is_err());
+        // a consumer error is the caller's, not the store's
+        assert_eq!(classify_store_error(&res.unwrap_err()), None);
         assert_eq!(calls, 2, "scan must stop at the first error");
         std::fs::remove_file(&path).ok();
     }
@@ -699,7 +1488,9 @@ mod tests {
         // The tentpole property at the distance-engine layer: Resident
         // == Chunked to the bit at any chunk size (ragged, single-row,
         // whole-set, mid-macro-tile boundaries via random tiles),
-        // thread count, schedule, and both formulations.
+        // thread count, schedule, and both formulations — and (since
+        // the fault PR) with recovered transient faults injected into
+        // the chunked side.
         check("store-dists-parity", 8, |g| {
             let d = g.usize_in(1, 8);
             let n = g.usize_in(2, 48);
@@ -726,7 +1517,9 @@ mod tests {
                 [g.usize_in(0, 3)];
             let path = tmp(&format!("dists{n}_{chunk_rows}.lmtc"));
             write_chunked(&ds, &path, chunk_rows).unwrap();
-            let chunked = TrainStore::open_chunked(&path).unwrap();
+            let seed = g.usize_in(0, 500) as u64;
+            let spec = format!("seed={seed},transient=40,tfail=1");
+            let chunked = faulted(&path, &spec, 3);
             for algo in [DistanceAlgo::Exact, DistanceAlgo::Gemm] {
                 let threads = [1usize, 4][g.usize_in(0, 1)];
                 let sched = [Schedule::Static, Schedule::Stealing]
@@ -743,7 +1536,8 @@ mod tests {
                     .unwrap();
                 prop_assert!(want == got,
                     "store distances diverged ({algo:?}, chunk \
-                     {chunk_rows}, {threads} threads, {sched:?})");
+                     {chunk_rows}, {threads} threads, {sched:?}, \
+                     {spec})");
             }
             std::fs::remove_file(&path).ok();
             Ok(())
@@ -764,6 +1558,41 @@ mod tests {
         }).unwrap();
         assert!(!called, "no chunks to scan on an empty store");
         assert_eq!(store.to_dataset().unwrap(), ds);
+        if let TrainStore::Chunked(cs) = &store {
+            assert_eq!(cs.n_chunks(), 0);
+            assert_eq!(cs.verify_scan().unwrap(), (0, 0));
+        }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn store_error_display_tags_are_stable() {
+        // classify_store_error works by Display-tag matching (the
+        // vendored anyhow has no downcast), so the tags are API.
+        let e = anyhow::Error::from(StoreError::Corrupt {
+            offset: 12,
+            detail: "x".into(),
+        })
+        .context("scanning /tmp/a.lmtc");
+        assert_eq!(classify_store_error(&e),
+                   Some(StoreErrorKind::Corrupt));
+        let e = anyhow::Error::from(StoreError::Truncated {
+            offset: 0,
+            detail: "x".into(),
+        });
+        assert_eq!(classify_store_error(&e),
+                   Some(StoreErrorKind::Truncated));
+        let e = anyhow::Error::from(StoreError::Transient {
+            offset: 8,
+            attempts: 3,
+            detail: "x".into(),
+        });
+        assert_eq!(classify_store_error(&e),
+                   Some(StoreErrorKind::Transient));
+        let e = anyhow::Error::from(StoreError::Io { detail: "x".into() });
+        assert_eq!(classify_store_error(&e), Some(StoreErrorKind::Io));
+        assert_eq!(classify_store_error(&anyhow!("plain error")), None);
+        // FaultSpec::parse is total over garbage too
+        assert!(FaultSpec::parse("transient=").is_err());
     }
 }

@@ -106,7 +106,9 @@ pub use matmul::{
 };
 pub use pack::{micro_kernel, MicroKernel, PackedPanel};
 pub use policy::{
-    default_chunk_rows, set_chunk_rows, ExecPolicy, ServePolicy,
+    default_chunk_rows, default_fault_spec, set_chunk_rows,
+    set_fault_spec, set_retry_attempts, set_retry_backoff_us,
+    ExecPolicy, RetryPolicy, ServePolicy,
 };
 pub use parallel::{
     coupled_step_exec, matmul_acc_exec, matmul_bias_exec,

@@ -23,7 +23,8 @@
 //! and the formulation moves distances by ≤ 1e-4 (Exact is the
 //! bit-stable oracle).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use super::distance::{self, DistanceAlgo};
 use super::parallel::{self, Schedule};
@@ -280,6 +281,155 @@ pub fn default_chunk_rows(d: usize, tiles: &TileConfig) -> usize {
     ((1 << 20) / d.max(1)).max(jt).max(1)
 }
 
+/// Default bound on chunk-read attempts for transient store faults:
+/// the first read plus two retries — enough to ride out an
+/// `EINTR`-class blip, bounded so a persistently failing disk surfaces
+/// as a typed error instead of an unbounded retry loop.
+pub const DEFAULT_RETRY_ATTEMPTS: u32 = 3;
+/// Default microseconds slept between transient-fault retries.
+pub const DEFAULT_RETRY_BACKOFF_US: u64 = 100;
+
+/// Bounded retry policy for transient faults on the chunked store's
+/// read path — the recovery half of the out-of-core failure domain
+/// (`data/store.rs`). Corrupt/truncated chunks are **never** retried
+/// (a checksum mismatch on re-read of a bad disk block is not
+/// transient); only `Transient`-class errors consult this policy.
+///
+/// Resolution mirrors [`ExecPolicy`] / [`ServePolicy`]: still-Auto
+/// fields defer to the session override (`--retry-attempts` /
+/// `--retry-backoff-us`), then the `LOCALITY_ML_RETRY_ATTEMPTS` /
+/// `LOCALITY_ML_RETRY_BACKOFF_US` environment, then the compiled
+/// defaults. [`RetryPolicy::resolve`] is the single consultation
+/// point, called once per store open.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Maximum read attempts per chunk (first try included);
+    /// `0` = resolve from the override chain. Resolved values are
+    /// clamped to at least 1.
+    pub max_attempts: u32,
+    /// Microseconds slept between attempts; `u64::MAX` = resolve from
+    /// the override chain. `0` is a legitimate pinned value (retry
+    /// immediately — what the fault property suite uses to stay fast).
+    pub backoff_us: u64,
+}
+
+impl Default for RetryPolicy {
+    /// Fully-Auto: both knobs defer to the override chain.
+    fn default() -> Self {
+        Self { max_attempts: 0, backoff_us: u64::MAX }
+    }
+}
+
+impl RetryPolicy {
+    /// The fully-Auto policy (same as `Default`).
+    pub fn auto() -> Self {
+        Self::default()
+    }
+
+    /// Builder: pin the attempt bound (0 restores auto).
+    pub fn with_attempts(mut self, max_attempts: u32) -> Self {
+        self.max_attempts = max_attempts;
+        self
+    }
+
+    /// Builder: pin the backoff (`u64::MAX` restores auto).
+    pub fn with_backoff_us(mut self, backoff_us: u64) -> Self {
+        self.backoff_us = backoff_us;
+        self
+    }
+
+    /// THE resolution point for the retry knobs: consult the
+    /// CLI→env→default chain once per still-Auto field. After this
+    /// `max_attempts >= 1` and `backoff_us` is finite.
+    pub fn resolve(&self) -> Self {
+        let max_attempts = if self.max_attempts == 0 {
+            let session = RETRY_ATTEMPTS_OVERRIDE.load(Ordering::Relaxed);
+            if session > 0 {
+                session
+            } else {
+                env_u32("LOCALITY_ML_RETRY_ATTEMPTS")
+                    .filter(|&v| v > 0)
+                    .unwrap_or(DEFAULT_RETRY_ATTEMPTS)
+            }
+        } else {
+            self.max_attempts
+        };
+        let backoff_us = if self.backoff_us == u64::MAX {
+            let session = RETRY_BACKOFF_OVERRIDE.load(Ordering::Relaxed);
+            if session != u64::MAX {
+                session
+            } else {
+                env_u64("LOCALITY_ML_RETRY_BACKOFF_US")
+                    .unwrap_or(DEFAULT_RETRY_BACKOFF_US)
+            }
+        } else {
+            self.backoff_us
+        };
+        Self { max_attempts: max_attempts.max(1), backoff_us }
+    }
+}
+
+/// Session-wide `--retry-attempts` override; 0 = unset.
+static RETRY_ATTEMPTS_OVERRIDE: AtomicU32 = AtomicU32::new(0);
+/// Session-wide `--retry-backoff-us` override; `u64::MAX` = unset
+/// (0 is a legitimate pinned backoff).
+static RETRY_BACKOFF_OVERRIDE: AtomicU64 = AtomicU64::new(u64::MAX);
+
+/// Pin (or with `None` clear) the session-wide transient-retry attempt
+/// bound — the `--retry-attempts` CLI layer of the [`RetryPolicy`]
+/// resolution chain.
+pub fn set_retry_attempts(attempts: Option<u32>) {
+    RETRY_ATTEMPTS_OVERRIDE.store(attempts.unwrap_or(0),
+                                  Ordering::Relaxed);
+}
+
+/// Pin (or with `None` clear) the session-wide transient-retry backoff
+/// in microseconds — the `--retry-backoff-us` CLI layer of the
+/// [`RetryPolicy`] resolution chain.
+pub fn set_retry_backoff_us(backoff_us: Option<u64>) {
+    RETRY_BACKOFF_OVERRIDE.store(backoff_us.unwrap_or(u64::MAX),
+                                 Ordering::Relaxed);
+}
+
+/// Session-wide `--fault-spec` override; `None` = unset (fall through
+/// to the env chain), `Some("")` = explicitly off.
+static FAULT_SPEC_OVERRIDE: Mutex<Option<String>> = Mutex::new(None);
+
+/// Pin (or with `None` clear) the session-wide fault-injection spec —
+/// the `--fault-spec` CLI layer of the [`default_fault_spec`] chain.
+/// Passing `Some(String::new())` pins injection explicitly *off*,
+/// shadowing any `LOCALITY_ML_FAULT_SPEC` in the environment.
+pub fn set_fault_spec(spec: Option<String>) {
+    let mut guard = FAULT_SPEC_OVERRIDE
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    *guard = spec;
+}
+
+/// The fault-injection spec for newly opened chunked stores, resolved
+/// through the usual chain: `--fault-spec` →
+/// `LOCALITY_ML_FAULT_SPEC` → `None` (injection off — the production
+/// default; the store then carries no injector and the scan's fault
+/// check is a single `Option` test). The spec grammar lives in
+/// `data/faults.rs`.
+pub fn default_fault_spec() -> Option<String> {
+    {
+        let guard = FAULT_SPEC_OVERRIDE
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        if let Some(spec) = guard.as_ref() {
+            if spec.is_empty() {
+                return None;
+            }
+            return Some(spec.clone());
+        }
+    }
+    match std::env::var("LOCALITY_ML_FAULT_SPEC") {
+        Ok(spec) if !spec.is_empty() => Some(spec),
+        _ => None,
+    }
+}
+
 /// Parse an environment variable as `usize`, ignoring unset or
 /// unparsable values (mirroring the threads/schedule/dist-algo
 /// policies).
@@ -290,6 +440,12 @@ fn env_usize(name: &str) -> Option<usize> {
 /// Parse an environment variable as `u64`, ignoring unset or
 /// unparsable values.
 fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+/// Parse an environment variable as `u32`, ignoring unset or
+/// unparsable values.
+fn env_u32(name: &str) -> Option<u32> {
     std::env::var(name).ok().and_then(|v| v.parse().ok())
 }
 
@@ -365,6 +521,74 @@ mod tests {
         // ...and clearing it restores the auto chain
         set_chunk_rows(None);
         assert_eq!(default_chunk_rows(8, &tiles), auto);
+        // LOCALITY_ML_CHUNK_ROWS=0 must never produce a zero chunk
+        // size (a zero-row chunk loop can't make progress): the env
+        // layer ignores it and falls through to auto. The CLI layer
+        // rejects 0 before it gets here (`--chunk-rows must be >= 1`,
+        // regression-tested in the integration suite); at the setter
+        // level Some(0) is the documented "clear" sentinel.
+        std::env::set_var("LOCALITY_ML_CHUNK_ROWS", "0");
+        assert_eq!(default_chunk_rows(8, &tiles), auto,
+            "env chunk-rows 0 must fall through to the auto size");
+        std::env::set_var("LOCALITY_ML_CHUNK_ROWS", "41");
+        assert_eq!(default_chunk_rows(8, &tiles), 41);
+        // the session override outranks the env
+        set_chunk_rows(Some(37));
+        assert_eq!(default_chunk_rows(8, &tiles), 37);
+        set_chunk_rows(Some(0)); // sentinel: same as clearing
+        assert_eq!(default_chunk_rows(8, &tiles), 41);
+        std::env::remove_var("LOCALITY_ML_CHUNK_ROWS");
+        assert_eq!(default_chunk_rows(8, &tiles), auto);
+    }
+
+    #[test]
+    fn retry_policy_resolution_chain() {
+        // compiled defaults
+        let r = RetryPolicy::auto().resolve();
+        assert_eq!(r.max_attempts, DEFAULT_RETRY_ATTEMPTS);
+        assert_eq!(r.backoff_us, DEFAULT_RETRY_BACKOFF_US);
+        // pinned fields pass through, zero-attempt clamps to 1
+        let p = RetryPolicy::auto().with_attempts(5).with_backoff_us(0);
+        assert_eq!(p.resolve(), p);
+        assert_eq!(p.resolve().backoff_us, 0,
+            "0 backoff is a legitimate pinned value");
+        // env layer (this test is the only reader/writer of these vars)
+        std::env::set_var("LOCALITY_ML_RETRY_ATTEMPTS", "7");
+        std::env::set_var("LOCALITY_ML_RETRY_BACKOFF_US", "9");
+        let r = RetryPolicy::auto().resolve();
+        assert_eq!((r.max_attempts, r.backoff_us), (7, 9));
+        // env 0 attempts would disable reading entirely; ignored
+        std::env::set_var("LOCALITY_ML_RETRY_ATTEMPTS", "0");
+        assert_eq!(RetryPolicy::auto().resolve().max_attempts,
+                   DEFAULT_RETRY_ATTEMPTS);
+        // session override (the --retry-* CLI layer) outranks the env
+        set_retry_attempts(Some(2));
+        set_retry_backoff_us(Some(4));
+        let r = RetryPolicy::auto().resolve();
+        assert_eq!((r.max_attempts, r.backoff_us), (2, 4));
+        set_retry_attempts(None);
+        set_retry_backoff_us(None);
+        std::env::remove_var("LOCALITY_ML_RETRY_ATTEMPTS");
+        std::env::remove_var("LOCALITY_ML_RETRY_BACKOFF_US");
+        let r = RetryPolicy::auto().resolve();
+        assert_eq!(r.max_attempts, DEFAULT_RETRY_ATTEMPTS);
+        assert_eq!(r.backoff_us, DEFAULT_RETRY_BACKOFF_US);
+    }
+
+    #[test]
+    fn fault_spec_session_override_resolution() {
+        // Production default: no spec, injection off. (The env layer
+        // is exercised by the CI fault-matrix job, which runs whole
+        // suites under LOCALITY_ML_FAULT_SPEC; reading the raw env
+        // here would race with it, so this test only pins the
+        // session-override layer above it.)
+        set_fault_spec(Some("seed=1,transient=30".into()));
+        assert_eq!(default_fault_spec().as_deref(),
+                   Some("seed=1,transient=30"));
+        // empty spec pins injection explicitly OFF (shadows any env)
+        set_fault_spec(Some(String::new()));
+        assert_eq!(default_fault_spec(), None);
+        set_fault_spec(None);
     }
 
     #[test]

@@ -1705,4 +1705,89 @@ mod tests {
         }
         std::fs::remove_file(&path).ok();
     }
+
+    /// Open `path` as a chunked store with an explicit (race-free)
+    /// fault injector and a no-sleep retry policy.
+    fn faulted(path: &std::path::Path, spec: &str, attempts: u32)
+        -> TrainStore<'static> {
+        use crate::data::{ChunkedStore, FaultInjector};
+        use crate::kernels::RetryPolicy;
+        let cs = ChunkedStore::open(path).unwrap().with_faults(
+            Some(FaultInjector::parse(spec).unwrap()),
+            RetryPolicy::auto().with_attempts(attempts)
+                .with_backoff_us(0));
+        TrainStore::Chunked(cs)
+    }
+
+    #[test]
+    fn store_scans_survive_recovered_faults_and_type_fatal_ones() {
+        // Determinism contract 7 at the learner layer: a transient
+        // fault the retry loop absorbs never changes a prediction
+        // bit, and a persistent fault surfaces as a typed Err from
+        // every store-scan entry point — never a panic, never a
+        // silently wrong answer.
+        check("store-scan-faults", 6, |g| {
+            let n = g.usize_in(2, 40);
+            let t = g.usize_in(1, 10);
+            let d = g.usize_in(1, 6);
+            let features = g.f32_vec(n * d, 2.0);
+            let labels: Vec<i32> =
+                (0..n).map(|_| g.usize_in(0, 2) as i32).collect();
+            let train = Dataset::new(features, labels, d, 3);
+            let test = g.f32_vec(t * d, 2.0);
+            let tiles = TileConfig::westmere();
+            let pol = ExecPolicy::sequential();
+            let path = tmp("fault", g.u64());
+            let chunk_rows = g.usize_in(1, n);
+            crate::data::write_chunked(&train, &path, chunk_rows)
+                .map_err(|e| e.to_string())?;
+            let clean = TrainStore::open_chunked(&path)
+                .map_err(|e| e.to_string())?;
+            let want_k = knn_scan_store_exec(&clean, &test, K, &tiles,
+                                             &pol).unwrap();
+            let want_j = joint_scan_store_exec(&clean, &test, K,
+                                               BANDWIDTH, &tiles, &pol)
+                .unwrap();
+
+            // Transient faults under the default-shaped retry budget
+            // (3 attempts > tfail 1): bit-identical recovery at every
+            // thread count under either schedule.
+            let seed = g.u64();
+            let spec = format!("seed={seed},transient=60,tfail=1");
+            let recovered = faulted(&path, &spec, 3);
+            for threads in [1usize, 4] {
+                for sched in [Schedule::Static, Schedule::Stealing] {
+                    let pol = ExecPolicy::sequential()
+                        .with_threads(threads)
+                        .with_schedule(sched);
+                    prop_assert!(
+                        knn_scan_store_exec(&recovered, &test, K,
+                                            &tiles, &pol).unwrap()
+                            == want_k,
+                        "recovered transient changed knn bits \
+                         ({threads} threads, {sched:?})");
+                    prop_assert!(
+                        joint_scan_store_exec(&recovered, &test, K,
+                                              BANDWIDTH, &tiles, &pol)
+                            .unwrap() == want_j,
+                        "recovered transient changed joint bits \
+                         ({threads} threads, {sched:?})");
+                }
+            }
+
+            // Persistent corruption and an exhausted retry budget:
+            // typed errors the serve layer can classify.
+            for spec in ["flip@0", "transient@0,tfail=10"] {
+                let broken = faulted(&path, spec, 2);
+                let err = prw_scan_store_exec(&broken, &test, BANDWIDTH,
+                                              &tiles, &pol)
+                    .expect_err("persistent fault must fail the scan");
+                prop_assert!(
+                    crate::data::classify_store_error(&err).is_some(),
+                    "store fault {spec:?} not classifiable: {err:#}");
+            }
+            std::fs::remove_file(&path).ok();
+            Ok(())
+        });
+    }
 }

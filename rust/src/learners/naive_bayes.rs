@@ -227,6 +227,45 @@ mod tests {
     }
 
     #[test]
+    fn store_fit_survives_recovered_faults_and_types_fatal_ones() {
+        // Determinism contract 7 for the streamed fit: a transient the
+        // store's retry loop absorbs leaves the fitted statistics
+        // bit-identical, and persistent corruption fails the fit with
+        // a classifiable store error — never a panic, never a model
+        // silently fitted on damaged bytes.
+        use crate::data::{
+            classify_store_error, ChunkedStore, FaultInjector,
+        };
+        use crate::kernels::RetryPolicy;
+        let ds = gaussian_mixture(MixtureSpec {
+            n: 57, d: 5, classes: 3, separation: 1.0, noise: 1.0,
+            seed: 3,
+        });
+        let want = NaiveBayes::fit(&ds);
+        let path = std::env::temp_dir().join(format!(
+            "locality_ml_nb_fault_{}.lmtc", std::process::id()));
+        crate::data::write_chunked(&ds, &path, 7).unwrap();
+        let faulted = |spec: &str, attempts: u32| {
+            TrainStore::Chunked(ChunkedStore::open(&path)
+                .unwrap()
+                .with_faults(Some(FaultInjector::parse(spec).unwrap()),
+                             RetryPolicy::auto()
+                                 .with_attempts(attempts)
+                                 .with_backoff_us(0)))
+        };
+        let recovered = faulted("seed=37,transient=60,tfail=1", 3);
+        assert_eq!(NaiveBayes::fit_store(&recovered).unwrap(), want,
+            "recovered transient changed the fitted statistics");
+        for spec in ["flip@0", "short@1", "transient@0,tfail=10"] {
+            let err = NaiveBayes::fit_store(&faulted(spec, 2))
+                .expect_err("persistent fault must fail the fit");
+            assert!(classify_store_error(&err).is_some(),
+                "fit error for {spec:?} not classifiable: {err}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn variance_floor_applies() {
         let train = Dataset::new(vec![5.0, 5.0], vec![0, 0], 1, 1);
         let nb = NaiveBayes::fit(&train);

@@ -43,6 +43,13 @@
 //! GEMM decomposition within 1e-4 of it) and `--chunk-rows N` (feature
 //! rows per chunk for newly written out-of-core `.lmtc` stores —
 //! chunking never changes output bits, only the resident working set).
+//!
+//! The fault-tolerance knobs ride the same chain: `--fault-spec SPEC`
+//! (deterministic fault injection into the chunked store reader — off
+//! unless set), `--retry-attempts N` and `--retry-backoff-us N`
+//! (bounded retry for transient store faults). An injected fault never
+//! changes the bits of a successful result (determinism contract 7);
+//! failures surface as typed errors, never panics.
 
 use std::path::PathBuf;
 
@@ -100,6 +107,31 @@ fn main() -> Result<()> {
             |_| anyhow::anyhow!("--chunk-rows: bad integer `{c}`"))?;
         anyhow::ensure!(n >= 1, "--chunk-rows must be >= 1");
         locality_ml::kernels::set_chunk_rows(Some(n));
+    }
+    // Global `--fault-spec SPEC` for deterministic fault injection into
+    // the chunked `.lmtc` reader (default: LOCALITY_ML_FAULT_SPEC, then
+    // off). Validated here so a typo fails the launch, not the first
+    // scan. Injection never changes the bits of a successful result
+    // (determinism contract 7) — it only turns reads into typed errors.
+    if let Some(s) = args.get("fault-spec") {
+        locality_ml::data::FaultSpec::parse(s).map_err(
+            |e| anyhow::anyhow!("--fault-spec: {e}"))?;
+        locality_ml::kernels::set_fault_spec(Some(s.to_string()));
+    }
+    // Global `--retry-attempts N` / `--retry-backoff-us N` for the
+    // transient-fault retry loop in the chunked reader (defaults:
+    // LOCALITY_ML_RETRY_ATTEMPTS / LOCALITY_ML_RETRY_BACKOFF_US, then
+    // 3 attempts / 100 us).
+    if let Some(a) = args.get("retry-attempts") {
+        let n: u32 = a.parse().map_err(
+            |_| anyhow::anyhow!("--retry-attempts: bad integer `{a}`"))?;
+        anyhow::ensure!(n >= 1, "--retry-attempts must be >= 1");
+        locality_ml::kernels::set_retry_attempts(Some(n));
+    }
+    if let Some(b) = args.get("retry-backoff-us") {
+        let us: u64 = b.parse().map_err(
+            |_| anyhow::anyhow!("--retry-backoff-us: bad integer `{b}`"))?;
+        locality_ml::kernels::set_retry_backoff_us(Some(us));
     }
     match args.command.as_str() {
         "train" => {
@@ -245,17 +277,25 @@ fn main() -> Result<()> {
             commands::cmd_convert(input.as_deref(), &out, train_n, seed)?;
         }
         "ooc" => {
-            let train_n = args.usize_or("train-n", 4000)?;
-            let nq = args.usize_or("queries", 256)?;
-            let seed = args.u64_or("seed", 7)?;
             let store =
                 PathBuf::from(args.str_or("store", "data/train.lmtc"));
-            // an empty list defers to the session chain (the global
-            // --chunk-rows flag / LOCALITY_ML_CHUNK_ROWS / auto)
-            let sizes = args.usize_list_or("chunk-sizes", &[])?;
-            let out = args.get("out-json").map(PathBuf::from);
-            commands::cmd_ooc(train_n, nq, seed, &store, &sizes,
-                              out.as_deref())?;
+            if args.flag("verify") {
+                // deep integrity scan of an existing store: header +
+                // metadata checks at open, then every chunk re-read
+                // and CRC-verified (v2; v1 streams without checksums)
+                commands::cmd_verify_store(&store)?;
+            } else {
+                let train_n = args.usize_or("train-n", 4000)?;
+                let nq = args.usize_or("queries", 256)?;
+                let seed = args.u64_or("seed", 7)?;
+                // an empty list defers to the session chain (the
+                // global --chunk-rows flag / LOCALITY_ML_CHUNK_ROWS /
+                // auto)
+                let sizes = args.usize_list_or("chunk-sizes", &[])?;
+                let out = args.get("out-json").map(PathBuf::from);
+                commands::cmd_ooc(train_n, nq, seed, &store, &sizes,
+                                  out.as_deref())?;
+            }
         }
         "info" => {
             let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
@@ -329,10 +369,14 @@ SUBCOMMANDS
                  --in data/train.lmld --out data/train.lmtc
                  --train-n 4000
   ooc          Out-of-core MCS demo: resident vs chunked `.lmtc`
-               backend at each chunk size, predictions asserted
-               bit-identical, working set and wall-clock reported
+               backend at each chunk size (checksummed v2 and legacy
+               v1 both timed), predictions asserted bit-identical,
+               working set and wall-clock reported; --verify instead
+               deep-scans an existing store (header + metadata checks,
+               every chunk re-read and CRC-verified)
                  --train-n 4000 --queries 256 --store data/train.lmtc
                  --chunk-sizes 256,512,2000 --out-json BENCH_ooc.json
+                 --verify
   info         List compiled artifacts  [--artifacts artifacts]
 
 Common options: --config experiment.toml --artifacts artifacts --seed N
@@ -348,6 +392,15 @@ Common options: --config experiment.toml --artifacts artifacts --seed N
                 --chunk-rows N (feature rows per chunk for newly written
                 out-of-core `.lmtc` stores; chunking never changes bits;
                 default LOCALITY_ML_CHUNK_ROWS or a ~4 MiB auto size)
+                --fault-spec SPEC (deterministic fault injection into
+                the chunked store reader, e.g.
+                `seed=1,transient=30` or `flip@2`; off unless set;
+                default LOCALITY_ML_FAULT_SPEC; injected faults never
+                change the bits of a successful result)
+                --retry-attempts N --retry-backoff-us N (bounded retry
+                for transient store faults; defaults
+                LOCALITY_ML_RETRY_ATTEMPTS=3 /
+                LOCALITY_ML_RETRY_BACKOFF_US=100)
                 LOCALITY_ML_FORCE_SCALAR=1 pins the packed micro-kernel
                 to the scalar tier (SIMD tiers are bit-identical; this
                 exists for dispatch testing and perf triage)

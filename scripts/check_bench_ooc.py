@@ -1,20 +1,26 @@
 #!/usr/bin/env python3
-"""CI gate for the out-of-core train store (ISSUE 9):
+"""CI gate for the out-of-core train store (ISSUE 9 + 10):
 
 the chunked `.lmtc` backend exists so train sets larger than memory
 can run at all, but it is only honest locality engineering if the
 double-buffered scan (next chunk prefetched on its own thread while
 the current one is consumed) hides most of the streaming latency. The
-gate: EVERY measured chunk size's throughput must stay >= OOC_FLOOR x
-the resident baseline from the same bench run, and at least one
-chunked record must have actually streamed (>= 2 chunks) so the gate
-never passes on a degenerate single-chunk measurement.
+gates:
+
+1. EVERY measured chunked record's throughput must stay >= OOC_FLOOR x
+   the resident baseline from the same bench run, and at least one
+   chunked record must have actually streamed (>= 2 chunks) so the
+   gate never passes on a degenerate single-chunk measurement.
+2. At every chunk size measured in both formats, the checksummed v2
+   scan (per-chunk CRC32C verified inline, ISSUE 10) must stay
+   >= CRC_FLOOR x the checksum-free v1 scan — integrity checking that
+   costs real throughput would push operators back to unchecked reads.
 
 Prediction parity (chunked bit-identical to resident at every chunk
-size — determinism contract #6) is asserted in-process by the bench
-itself before anything is timed, so this script only gates the clock.
-The working-set numbers are reported for the log but not gated: they
-are computed from the geometry, not measured.
+size and format — determinism contract #6) is asserted in-process by
+the bench itself before anything is timed, so this script only gates
+the clock. The working-set numbers are reported for the log but not
+gated: they are computed from the geometry, not measured.
 
 Usage: check_bench_ooc.py [BENCH_ooc.json]
 """
@@ -28,6 +34,14 @@ from bench_check import CheckFailure, load_doc, require_number
 # that matters: a scan that serializes disk behind compute runs at a
 # small fraction of resident, not at ~1x.
 OOC_FLOOR = 0.7
+
+# Checksummed (v2) scan floor relative to the checksum-free v1 layout
+# at the same chunk geometry. The CRC32C pass folds over bytes already
+# resident from the prefetch read, so verification should be nearly
+# free; 0.9x leaves room for CI noise while failing the regression that
+# matters: checksumming serialized behind (instead of overlapped with)
+# the scan.
+CRC_FLOOR = 0.9
 
 
 def check(path):
@@ -55,7 +69,14 @@ def check(path):
                 raise CheckFailure(
                     f"{context}: `chunks` must be a positive integer, "
                     f"got {chunks!r}")
-            chunked.append((int(chunk_rows), int(chunks), qps, mib))
+            # records from before the checksummed v2 layout carry no
+            # `format`; they measured the only (unchecksummed) scan
+            fmt = record.get("format", "v1")
+            if fmt not in ("v1", "v2-crc"):
+                raise CheckFailure(
+                    f"{context}: unknown format {fmt!r}")
+            chunked.append((int(chunk_rows), int(chunks), fmt, qps,
+                            mib))
         else:
             raise CheckFailure(
                 f"{context}: unknown backend {record['backend']!r}")
@@ -63,7 +84,7 @@ def check(path):
         raise CheckFailure(f"no `resident` record in {path}")
     if not chunked:
         raise CheckFailure(f"no `chunked` records in {path}")
-    if max(chunks for _, chunks, _, _ in chunked) < 2:
+    if max(chunks for _, chunks, _, _, _ in chunked) < 2:
         raise CheckFailure(
             f"{path}: no chunked record streamed more than one chunk "
             "— the gate would measure nothing")
@@ -71,11 +92,11 @@ def check(path):
     res_qps, res_mib = resident
     print(f"  resident: {res_qps:.0f} qps ({res_mib:.1f} MiB pinned)")
     worst = None  # (ratio, chunk_rows)
-    for chunk_rows, chunks, qps, mib in chunked:
+    for chunk_rows, chunks, fmt, qps, mib in chunked:
         ratio = qps / res_qps
-        print(f"  chunked(chunk_rows={chunk_rows}, {chunks} chunks): "
-              f"{qps:.0f} qps ({mib:.1f} MiB streaming window) — "
-              f"{ratio:.2f}x resident")
+        print(f"  chunked(chunk_rows={chunk_rows}, {chunks} chunks, "
+              f"{fmt}): {qps:.0f} qps ({mib:.1f} MiB streaming "
+              f"window) — {ratio:.2f}x resident")
         if worst is None or ratio < worst[0]:
             worst = (ratio, chunk_rows)
     print(f"worst chunked vs resident: {worst[0]:.2f}x at chunk_rows="
@@ -85,6 +106,42 @@ def check(path):
             f"out-of-core gate missed ({worst[0]:.2f}x < {OOC_FLOOR}x "
             f"at chunk_rows={worst[1]}) — the double buffer is no "
             "longer hiding streaming latency")
+
+    check_crc_overhead(chunked)
+
+
+def check_crc_overhead(chunked):
+    """Gate 2: at every chunk size measured in both formats, the
+    checksummed v2 scan must hold CRC_FLOOR x the v1 throughput. A
+    document with no v2 records predates the checksummed layout and
+    skips this gate; once any v2 record exists, every v2 size must
+    have a v1 partner so the ratio is actually measured."""
+    v1 = {rows: qps for rows, _, fmt, qps, _ in chunked if fmt == "v1"}
+    v2 = {rows: qps for rows, _, fmt, qps, _ in chunked
+          if fmt == "v2-crc"}
+    if not v2:
+        print("  (no v2-crc records — checksummed-vs-v1 gate skipped)")
+        return
+    unpaired = sorted(set(v2) - set(v1))
+    if unpaired:
+        raise CheckFailure(
+            "v2-crc records lack a v1 partner at chunk_rows="
+            f"{unpaired} — the checksum-overhead ratio cannot be "
+            "measured")
+    worst = None  # (ratio, chunk_rows)
+    for rows in sorted(v2):
+        ratio = v2[rows] / v1[rows]
+        print(f"  crc overhead(chunk_rows={rows}): v2 {v2[rows]:.0f} "
+              f"qps vs v1 {v1[rows]:.0f} qps — {ratio:.2f}x")
+        if worst is None or ratio < worst[0]:
+            worst = (ratio, rows)
+    print(f"worst checksummed vs v1: {worst[0]:.2f}x at chunk_rows="
+          f"{worst[1]} (gate: >= {CRC_FLOOR}x at every size)")
+    if worst[0] < CRC_FLOOR:
+        raise CheckFailure(
+            f"checksum-overhead gate missed ({worst[0]:.2f}x < "
+            f"{CRC_FLOOR}x at chunk_rows={worst[1]}) — CRC "
+            "verification is costing real scan throughput")
 
 
 def main() -> int:

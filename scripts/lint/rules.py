@@ -204,6 +204,8 @@ class NondeterministicIteration(Rule):
 
 class PanicInServePath(Rule):
     """Rule 5: the request-handling path (serve/batcher/scheduler/mcs)
+    and the store layer it streams from (data/{store,faults}.rs — a
+    corrupt or injected-fault chunk surfaces inside a serve batch)
     must shed or reply with an error, never die — no unwrap/expect/
     panic!/assert! in non-test code there.  `debug_assert!` is fine
     (compiled out of release builds); training-side helpers that share
@@ -212,12 +214,14 @@ class PanicInServePath(Rule):
     name = "panic-in-serve-path"
     description = ("no unwrap/expect/panic!/assert! in the serve "
                    "request path (coordinator/{serve,batcher,"
-                   "scheduler,mcs}.rs)")
+                   "scheduler,mcs}.rs and data/{store,faults}.rs)")
     FILES = (
         "coordinator/serve.rs",
         "coordinator/batcher.rs",
         "coordinator/scheduler.rs",
         "coordinator/mcs.rs",
+        "data/store.rs",
+        "data/faults.rs",
     )
     PANIC_RE = re.compile(
         r"\.unwrap\s*\(|\.expect\s*\(|\bpanic!|\bunreachable!"

@@ -1,0 +1,11 @@
+//! Fail fixture: the fault injector runs inside the chunk-read path;
+//! it must never be able to kill the process it is testing.
+
+/// Dies on an out-of-range clause instead of returning a parse error.
+pub fn parse_pct(clause: &str) -> u8 {
+    let pct: u8 = clause.parse().unwrap();
+    if pct > 100 {
+        panic!("percent out of range: {pct}");
+    }
+    pct
+}

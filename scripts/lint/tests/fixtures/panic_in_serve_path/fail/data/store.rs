@@ -1,0 +1,12 @@
+//! Fail fixture: the store layer feeds serve batches — a panicking
+//! chunk read kills the resident process mid-request.
+
+/// Dies on a short read instead of returning `StoreError::Truncated`.
+pub fn read_chunk(bytes: Option<Vec<u8>>) -> Vec<u8> {
+    bytes.expect("chunk read failed")
+}
+
+/// Dies on a checksum mismatch instead of `StoreError::Corrupt`.
+pub fn verify(stored: u32, computed: u32) {
+    assert_eq!(stored, computed, "chunk checksum mismatch");
+}

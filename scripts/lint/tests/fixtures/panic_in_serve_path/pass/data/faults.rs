@@ -1,0 +1,20 @@
+//! Pass fixture: the fault injector degrades to parse errors and
+//! no-op decisions, never a panic in the read path it instruments.
+
+/// Clause parse failures surface as `Err`, not a process death.
+pub fn parse_pct(clause: &str) -> Result<u8, String> {
+    let pct: u8 = clause
+        .parse()
+        .map_err(|_| format!("bad percent {clause:?}"))?;
+    if pct > 100 {
+        return Err(format!("percent out of range: {pct}"));
+    }
+    Ok(pct)
+}
+
+/// An out-of-range or empty-buffer flip is a no-op, not a crash.
+pub fn flip_bit(bytes: &mut [u8], at: usize) {
+    if let Some(b) = bytes.get_mut(at) {
+        *b ^= 1;
+    }
+}

@@ -1,0 +1,27 @@
+//! Pass fixture: the store layer surfaces typed errors, never panics.
+
+/// A short read becomes a typed error the scan consumer routes.
+pub fn read_chunk(bytes: Option<Vec<u8>>) -> Result<Vec<u8>, String> {
+    bytes.ok_or_else(|| "store truncated @0: chunk read".to_string())
+}
+
+/// A checksum mismatch becomes `Err`, and debug-only invariant checks
+/// are compiled out of release builds.
+pub fn verify(stored: u32, computed: u32) -> Result<(), String> {
+    debug_assert!(stored != 0 || computed == 0);
+    if stored != computed {
+        return Err(format!(
+            "store corrupt @0: checksum mismatch ({stored:#010x} vs \
+             {computed:#010x})"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        super::verify(7, 7).unwrap();
+        assert!(super::verify(7, 8).is_err());
+    }
+}

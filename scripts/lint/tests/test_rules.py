@@ -60,7 +60,7 @@ class FixtureTest(unittest.TestCase):
             "env-read-outside-policy": 1,
             "deprecated-internal-caller": 1,
             "nondeterministic-iteration": 1,
-            "panic-in-serve-path": 3,
+            "panic-in-serve-path": 6,
             "raw-train-access": 2,
             "missing-docs": 4,
         }

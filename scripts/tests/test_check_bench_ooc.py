@@ -1,0 +1,71 @@
+"""Fixture tests for the out-of-core bench gate (ISSUE 10 satellite).
+
+`scripts/check_bench_ooc.py` is the single enforcement point for two
+throughput floors — chunked >= 0.7x resident, and checksummed v2 >=
+0.9x the checksum-free v1 at the same chunk geometry. A gate script
+with a logic bug fails silently in CI (either always green or always
+red), so each floor is pinned here against hand-written JSON fixtures
+on both sides of the line.
+
+Run with: python3 -m unittest discover -s scripts/tests
+"""
+import os
+import sys
+import unittest
+
+SCRIPTS = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), os.pardir))
+if SCRIPTS not in sys.path:
+    sys.path.insert(0, SCRIPTS)
+
+from bench_check import CheckFailure  # noqa: E402
+import check_bench_ooc  # noqa: E402
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+def fixture(name):
+    return os.path.join(FIXTURES, name)
+
+
+class BenchOocGateTest(unittest.TestCase):
+    def test_healthy_v2_and_v1_pairs_pass(self):
+        # both floors held: no exception
+        check_bench_ooc.check(fixture("bench_ooc_pass.json"))
+
+    def test_legacy_document_without_formats_passes(self):
+        # records from before the v2 layout carry no `format`; the
+        # resident floor still applies, the CRC gate is skipped
+        check_bench_ooc.check(fixture("bench_ooc_pass_legacy.json"))
+
+    def test_checksum_overhead_past_the_floor_fails(self):
+        # v2 at 1896 qps vs v1 at 2327 qps = 0.81x < 0.9x
+        with self.assertRaises(CheckFailure) as ctx:
+            check_bench_ooc.check(fixture("bench_ooc_fail_crc.json"))
+        self.assertIn("checksum-overhead", str(ctx.exception))
+
+    def test_chunked_below_resident_floor_fails(self):
+        # 1280 qps vs 2560 resident = 0.5x < 0.7x; the resident floor
+        # fires before the CRC gate is even evaluated
+        with self.assertRaises(CheckFailure) as ctx:
+            check_bench_ooc.check(fixture("bench_ooc_fail_floor.json"))
+        self.assertIn("out-of-core gate", str(ctx.exception))
+
+    def test_v2_without_a_v1_partner_fails(self):
+        # once any v2-crc record exists, every v2 size needs a v1
+        # partner or the overhead ratio is unmeasurable
+        with self.assertRaises(CheckFailure) as ctx:
+            check_bench_ooc.check(
+                fixture("bench_ooc_fail_unpaired.json"))
+        self.assertIn("v1 partner", str(ctx.exception))
+
+    def test_floors_are_the_documented_values(self):
+        # the floors are part of the repo's stated acceptance criteria
+        # (README / ARCHITECTURE); a silent constant edit must show up
+        # as a test diff, not only a CI behavior change
+        self.assertEqual(check_bench_ooc.OOC_FLOOR, 0.7)
+        self.assertEqual(check_bench_ooc.CRC_FLOOR, 0.9)
+
+
+if __name__ == "__main__":
+    unittest.main()
